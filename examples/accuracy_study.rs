@@ -1,0 +1,31 @@
+//! Accuracy study: the paper's Sec. 6.2 experiments at user scale.
+//!
+//! ```bash
+//! cargo run --release --example accuracy_study [-- --full]
+//! ```
+//!
+//! Sweeps the FP32 offset exponent (Fig. 8) and the accumulation depth k
+//! (Fig. 9) and prints relative-error tables for HGEMM, FP32 SGEMM and
+//! SGEMM-cube under both accumulation orders and s_b ∈ {0, 6, 12}.
+
+use sgemm_cube::experiments::{fig8_accuracy, fig9_size_accuracy};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let (n, seeds) = if full { (128, 5) } else { (64, 2) };
+
+    println!("SGEMM-cube accuracy study (n = {n}, {seeds} seeds per point)\n");
+
+    let exps: Vec<i32> = (-14..=12).step_by(2).collect();
+    fig8_accuracy::run(fig8_accuracy::Sampling::Symmetric, n, &exps, seeds).emit(None);
+    fig8_accuracy::run(fig8_accuracy::Sampling::NonNegative, n, &exps, seeds).emit(None);
+
+    fig9_size_accuracy::run_mn_sweep(&[32, 64, 128], 512, seeds).emit(None);
+    fig9_size_accuracy::run_k_sweep(32, &[128, 512, 2048, 8192], seeds).emit(None);
+
+    println!("Reading guide (matches the paper):");
+    println!("  * hgemm sits at ~1e-4 everywhere — the 11-bit floor.");
+    println!("  * cube s_b=12 tracks (or beats) fp32 SGEMM for e ≥ -12.");
+    println!("  * without scaling (s_b=0) the cube collapses for e ≤ -10 (Rule 1).");
+    println!("  * termwise ≤ elementwise as k grows (stable small-sum aggregation).");
+}

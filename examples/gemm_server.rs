@@ -1,0 +1,68 @@
+//! GEMM serving demo: batched requests through the L3 coordinator.
+//!
+//! ```bash
+//! cargo run --release --example gemm_server
+//! ```
+//!
+//! Starts the GEMM service (shape-keyed dynamic batching + range-aware
+//! precision policy), drives it with a mixed workload from several client
+//! threads — moderate-range requests (routed to SGEMM-cube), loose-budget
+//! requests (FP16) and out-of-range requests (FP32 fallback) — and prints
+//! the latency/throughput report.
+
+use std::time::Duration;
+
+use sgemm_cube::coordinator::batcher::BatcherConfig;
+use sgemm_cube::coordinator::policy::PrecisionPolicy;
+use sgemm_cube::coordinator::server::{GemmService, ServiceConfig};
+use sgemm_cube::gemm::backend::Backend;
+use sgemm_cube::util::mat::Matrix;
+use sgemm_cube::util::rng::Rng;
+
+fn main() {
+    let cfg = ServiceConfig {
+        batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) },
+        policy: PrecisionPolicy::default(),
+        n_workers: 0, // auto
+    };
+    let svc = GemmService::start(cfg);
+
+    const CLIENTS: usize = 4;
+    const PER_CLIENT: usize = 32;
+
+    std::thread::scope(|scope| {
+        for client in 0..CLIENTS {
+            let svc = &svc;
+            scope.spawn(move || {
+                let mut rng = Rng::new(100 + client as u64);
+                let mut routed = [0usize; 3];
+                for i in 0..PER_CLIENT {
+                    // Mixed workload: mostly moderate-range, some huge
+                    // (forces the FP32 fallback), some explicit-fp16.
+                    let (e, backend) = match i % 8 {
+                        7 => (18, None),                    // out of FP16 range
+                        5 => (0, Some(Backend::Fp16)),      // caller-pinned
+                        _ => (client as i32 - 2, None),     // policy decides
+                    };
+                    let m = 64 + 32 * (i % 3);
+                    let a = Matrix::random_symmetric(m, m, e, &mut rng);
+                    let b = Matrix::random_symmetric(m, m, e, &mut rng);
+                    let resp = svc.gemm_blocking(a, b, backend);
+                    assert!(resp.result.is_ok(), "request failed");
+                    match resp.backend {
+                        Backend::Fp32 => routed[0] += 1,
+                        Backend::Fp16 => routed[1] += 1,
+                        _ => routed[2] += 1,
+                    }
+                }
+                println!(
+                    "client {client}: fp32-fallback={} fp16={} cube={}",
+                    routed[0], routed[1], routed[2]
+                );
+            });
+        }
+    });
+
+    println!("\nservice report: {}", svc.metrics().report().line());
+    svc.shutdown();
+}

@@ -1,0 +1,46 @@
+//! Quickstart: one precision-recovery GEMM three ways.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Computes `C = A·B` (128³, entries in U[-1, 1]) with (1) the native
+//! SGEMM-cube numerics engine, (2) plain FP16 and FP32 baselines, and —
+//! if `make artifacts` has been run — (3) the AOT-compiled Pallas kernel
+//! through the PJRT runtime. Reports the Eq. (13) relative error of each
+//! against the FP64 reference.
+
+use sgemm_cube::gemm::backend::{Backend, GemmBackend};
+use sgemm_cube::gemm::dgemm::dgemm_of_f32;
+use sgemm_cube::gemm::error::relative_error;
+use sgemm_cube::runtime::Engine;
+use sgemm_cube::util::mat::Matrix;
+use sgemm_cube::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(42);
+    let n = 128;
+    let a = Matrix::random_symmetric(n, n, 0, &mut rng);
+    let b = Matrix::random_symmetric(n, n, 0, &mut rng);
+    let c_ref = dgemm_of_f32(&a, &b);
+    let err = |c: &Matrix<f32>| relative_error(&c_ref, &c.to_f64());
+
+    println!("C = A·B at {n}³, entries U[-1, 1]; errors vs FP64 (Eq. 13):\n");
+    for backend in Backend::ALL {
+        let c = GemmBackend::new(backend).gemm(&a, &b);
+        println!("  {:<18} err = {:.3e}", backend.name(), err(&c));
+    }
+
+    match Engine::from_default_dir() {
+        Ok(engine) => {
+            let c = engine.gemm("cube_gemm_128", &a, &b)?;
+            println!("  {:<18} err = {:.3e}  (Pallas kernel via PJRT)", "aot-cube", err(&c));
+        }
+        Err(e) => {
+            println!("\n(skipping PJRT path: {e}; run `make artifacts`)");
+        }
+    }
+
+    println!("\nExpected ordering: fp16 ≈ 1e-4  >>  cube ≈ fp32 ≈ 1e-7.");
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! End-to-end validation driver (EXPERIMENTS.md §E2E).
+//!
+//! ```bash
+//! cargo run --release --example train_mlp [-- --steps 300]
+//! ```
+//!
+//! Trains two models with three GEMM backends — FP32, FP16 and
+//! SGEMM-cube (termwise) — from identical initializations, logging the
+//! loss curves:
+//!
+//! 1. a noiseless linear-teacher regression driven to machine precision,
+//!    where the backend's GEMM error becomes the loss floor (fp16 stalls
+//!    ~7 orders of magnitude above fp32; cube stays at fp32's floor);
+//! 2. a two-spiral MLP classifier (training accuracy parity check).
+//!
+//! This is the paper's deep-learning motivation made concrete: the cube
+//! backend must track FP32 while pure FP16 visibly degrades.
+
+use sgemm_cube::gemm::backend::{Backend, GemmBackend};
+use sgemm_cube::train::{spiral_dataset, teacher_dataset, Mlp};
+use sgemm_cube::util::mat::Matrix;
+use sgemm_cube::util::rng::Rng;
+
+fn parse_steps() -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == "--steps")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(300)
+}
+
+fn main() {
+    let steps = parse_steps();
+    let backends = [Backend::Fp32, Backend::Fp16, Backend::CubeTermwise];
+
+    // ---------------- Regression: random linear teacher ----------------
+    // A noiseless linear-teacher problem that gradient descent drives to
+    // machine precision. Here the precision floor of the GEMM backend is
+    // the floor of the loss itself: FP16's ~2^-11 forward error stops the
+    // descent orders of magnitude early, while SGEMM-cube — three FP16
+    // Cube passes with precision recovery — keeps descending alongside
+    // FP32. This is the paper's Fig. 8 gap (1e-4 vs 1e-7 GEMM error)
+    // expressed as an end-to-end loss curve.
+    println!("=== regression (noiseless linear teacher, full convergence), {steps} steps ===");
+    let mut data_rng = Rng::new(42);
+    let (x, y) = teacher_dataset(256, 64, 16, 0.0, &mut data_rng);
+
+    let mut curves: Vec<(Backend, Vec<(usize, f64)>)> = Vec::new();
+    for backend in backends {
+        let mut init_rng = Rng::new(7); // identical init across backends
+        let mut mlp = Mlp::new(&[64, 16], GemmBackend::new(backend), &mut init_rng);
+        if curves.is_empty() {
+            println!("model: {} parameters (linear), MSE\n", mlp.n_params());
+        }
+        let log = mlp.train(&x, &y, steps, 5.0, (steps / 15).max(1));
+        curves.push((backend, log.iter().map(|r| (r.step, r.loss)).collect()));
+    }
+
+    println!("{:>6} {:>14} {:>14} {:>14}", "step", "fp32", "fp16", "cube-termwise");
+    for i in 0..curves[0].1.len() {
+        let step = curves[0].1[i].0;
+        println!(
+            "{:>6} {:>14.4e} {:>14.4e} {:>14.4e}",
+            step, curves[0].1[i].1, curves[1].1[i].1, curves[2].1[i].1
+        );
+    }
+    let final_losses: Vec<f64> = curves.iter().map(|c| c.1.last().unwrap().1).collect();
+    let cube_vs_fp32 = final_losses[2] / final_losses[0];
+    let fp16_vs_fp32 = final_losses[1] / final_losses[0];
+    println!("\nfinal loss ratio vs fp32: cube {cube_vs_fp32:.2}x, fp16 {fp16_vs_fp32:.1}x");
+
+    // ---------------- Classification: two spirals -----------------------
+    println!("\n=== classification (two spirals), {steps} steps ===");
+    let mut srng = Rng::new(9);
+    let (sx, sy) = spiral_dataset(200, 8, &mut srng);
+    for backend in backends {
+        let mut init_rng = Rng::new(11);
+        let mut mlp = Mlp::new(&[8, 64, 64, 2], GemmBackend::new(backend), &mut init_rng);
+        mlp.train(&sx, &sy, steps * 4, 0.3, steps * 4);
+        let acc = accuracy(&mlp, &sx, &sy);
+        println!("  {:<16} train accuracy = {:.1}%", backend.name(), acc * 100.0);
+    }
+
+    println!("\nSuccess criterion: cube-termwise tracks fp32 (≈ equal losses/accuracy);");
+    println!("fp16's 11-bit mantissa shows as a visibly worse regression loss.");
+}
+
+fn accuracy(mlp: &Mlp, x: &Matrix<f32>, y: &Matrix<f32>) -> f64 {
+    let pred = mlp.predict(x);
+    let mut correct = 0;
+    for i in 0..x.rows() {
+        let p = if pred.get(i, 0) >= pred.get(i, 1) { 0 } else { 1 };
+        let t = if y.get(i, 0) == 1.0 { 0 } else { 1 };
+        if p == t {
+            correct += 1;
+        }
+    }
+    correct as f64 / x.rows() as f64
+}

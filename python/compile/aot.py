@@ -1,0 +1,115 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts + manifest.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids that the xla crate's xla_extension 0.5.1 rejects; the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/gen_hlo.py).
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Writes one ``<name>.hlo.txt`` per artifact plus ``manifest.txt`` with
+whitespace-separated records the rust loader parses without a JSON
+dependency::
+
+    name  file  n_inputs  in0_spec  in1_spec ...  n_outputs  out0_spec ...
+
+where a spec is ``dtype:d0xd1x...``.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(s: jax.ShapeDtypeStruct) -> str:
+    dims = "x".join(str(d) for d in s.shape)
+    return f"{jnp.dtype(s.dtype).name}:{dims}"
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def artifact_table():
+    """(name, fn, example_args) for every shipped artifact.
+
+    Shapes are chosen to exercise the runtime at quickstart scale (64³),
+    serving scale (128³/256³) and the MLP end-to-end path. All are
+    multiples of 16 per the cube-alignment constraint (Eq. 12).
+    """
+    mlp_sizes = (64, 128, 128, 32)
+    batch = 64
+    mlp_args = [f32(batch, mlp_sizes[0])]
+    train_args = [f32(batch, mlp_sizes[0]), f32(batch, mlp_sizes[-1])]
+    for d_in, d_out in zip(mlp_sizes[:-1], mlp_sizes[1:]):
+        mlp_args.append(f32(d_in, d_out))
+        mlp_args.append(f32(d_out))
+    train_args.extend(mlp_args[1:])
+
+    return [
+        ("cube_gemm_64", model.gemm_graph, [f32(64, 64), f32(64, 64)]),
+        ("cube_gemm_128", model.gemm_graph, [f32(128, 128), f32(128, 128)]),
+        ("cube_gemm_256", model.gemm_graph, [f32(256, 256), f32(256, 256)]),
+        ("cube_gemm_128x256x128", model.gemm_graph, [f32(128, 256), f32(256, 128)]),
+        ("hgemm_128", model.hgemm_graph, [f32(128, 128), f32(128, 128)]),
+        ("split_128", model.split_graph, [f32(128, 128)]),
+        ("mlp_forward", model.mlp_forward_flat, mlp_args),
+        ("mlp_train_step", model.mlp_train_step_flat, train_args),
+    ]
+
+
+def lower_artifact(name, fn, args, out_dir):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    # Recover output specs from the lowered computation.
+    out_avals = lowered.out_info
+    flat, _ = jax.tree_util.tree_flatten(out_avals)
+    in_specs = " ".join(_spec(a) for a in args)
+    out_specs = " ".join(_spec(o) for o in flat)
+    record = f"{name} {name}.hlo.txt {len(args)} {in_specs} {len(flat)} {out_specs}"
+    print(f"  {name}: {len(text)} chars, {len(args)} in / {len(flat)} out")
+    return record
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--only", default=None, help="lower a single artifact by name")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    records = []
+    for name, fn, ex_args in artifact_table():
+        if args.only and name != args.only:
+            continue
+        records.append(lower_artifact(name, fn, ex_args, args.out_dir))
+
+    manifest = os.path.join(args.out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write("# name file n_inputs in_specs... n_outputs out_specs...\n")
+        f.write("\n".join(records) + "\n")
+    print(f"wrote {manifest} ({len(records)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

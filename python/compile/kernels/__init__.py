@@ -1,0 +1,3 @@
+"""Layer-1 Pallas kernels and their pure-jnp oracles."""
+
+from . import hgemm, ref, sgemm_cube, split  # noqa: F401

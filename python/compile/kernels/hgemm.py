@@ -1,0 +1,55 @@
+"""Layer-1 Pallas kernel: direct FP16 GEMM with FP32 accumulation.
+
+The baseline HGEMM the paper compares against (Fig. 8): operands are cast
+to FP16 (RN) and multiplied on the Cube/MXU with an FP32 accumulator —
+one pass, ~11 bits of precision.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hgemm_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+def hgemm_pallas(a, b, block=(128, 128, 128), interpret: bool = True):
+    """``C = fp16(A) · fp16(B)`` with FP32 accumulation; C is FP32.
+
+    Arbitrary shapes are zero-padded to block multiples.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    bm = min(block[0], _ceil16(m))
+    bn = min(block[1], _ceil16(n))
+    bk = min(block[2], _ceil16(k))
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    ah = a.astype(jnp.float16)
+    bh = b.astype(jnp.float16)
+    if pm or pk:
+        ah = jnp.pad(ah, ((0, pm), (0, pk)))
+    if pk or pn:
+        bh = jnp.pad(bh, ((0, pk), (0, pn)))
+    grid = (ah.shape[0] // bm, bh.shape[1] // bn, ah.shape[1] // bk)
+    c = pl.pallas_call(
+        _hgemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((ah.shape[0], bh.shape[1]), jnp.float32),
+        interpret=interpret,
+    )(ah, bh)
+    return c[:m, :n] if (pm or pn) else c
+
+
+def _ceil16(x: int) -> int:
+    return ((x + 15) // 16) * 16

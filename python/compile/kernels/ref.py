@@ -1,0 +1,103 @@
+"""Pure-jnp correctness oracles for the SGEMM-cube kernels.
+
+Everything here is the *reference semantics* the Pallas kernels (and the
+rust numerics engine) are validated against:
+
+* ``split_ref``       -- Eq. (7) two-component FP32 -> 2xFP16 split (RN).
+* ``reconstruct_ref`` -- high + low / s_f.
+* ``hgemm_ref``       -- FP16 GEMM with FP32 accumulation (Cube datapath).
+* ``cube_matmul_ref`` -- three-term SGEMM-cube, termwise or elementwise.
+* ``dgemm_ref``       -- FP64 ground truth (paper's Eq. 13 reference).
+* ``relative_error``  -- Eq. (13).
+
+FP64 requires the x64 flag; this module is build/test-time only (never on
+the request path), so enabling it globally here is safe.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+# The paper's default residual scaling exponent (Sec. 4.2, Rules 1+2).
+DEFAULT_SCALE_EXP = 12
+
+
+def scale_factor(scale_exp: int = DEFAULT_SCALE_EXP):
+    """s_f = 2**s_b as an exact FP32 constant."""
+    return jnp.float32(2.0 ** scale_exp)
+
+
+def split_ref(x, scale_exp: int = DEFAULT_SCALE_EXP):
+    """Eq. (7): split FP32 ``x`` into (high fp16, scaled residual fp16).
+
+    ``astype(float16)`` rounds to nearest even -- the Ascend conversion.
+    """
+    x = x.astype(jnp.float32)
+    sf = scale_factor(scale_exp)
+    high = x.astype(jnp.float16)
+    resid = (x - high.astype(jnp.float32)) * sf
+    low = resid.astype(jnp.float16)
+    return high, low
+
+
+def reconstruct_ref(high, low, scale_exp: int = DEFAULT_SCALE_EXP):
+    """Inverse of ``split_ref`` up to the residual quantization."""
+    sf = scale_factor(scale_exp)
+    return high.astype(jnp.float32) + low.astype(jnp.float32) / sf
+
+
+def _dot_f32(x, y):
+    return jnp.dot(
+        x.astype(jnp.float32),
+        y.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+        precision=jax.lax.Precision.HIGHEST,
+    )
+
+
+def hgemm_ref(a, b):
+    """FP16 GEMM with FP32 accumulation (direct Cube execution).
+
+    FP16xFP16 products are exact in FP32, so casting the fp16 operands up
+    and multiplying in fp32 reproduces the hardware datapath.
+    """
+    ah = a.astype(jnp.float32).astype(jnp.float16)
+    bh = b.astype(jnp.float32).astype(jnp.float16)
+    return _dot_f32(ah, bh)
+
+
+def cube_matmul_ref(a, b, scale_exp: int = DEFAULT_SCALE_EXP, termwise: bool = True):
+    """SGEMM-cube reference: three dominant terms of Eq. (7).
+
+    ``termwise=True`` accumulates each term matrix independently and sums
+    the two corrections before adding them to the high-high product
+    (Fig. 3b); ``termwise=False`` merges everything into one running sum
+    (Fig. 3a, elementwise order at matrix granularity).
+    """
+    sf = scale_factor(scale_exp)
+    ah, al = split_ref(a, scale_exp)
+    bh, bl = split_ref(b, scale_exp)
+    hh = _dot_f32(ah, bh)
+    hl = _dot_f32(ah, bl)
+    lh = _dot_f32(al, bh)
+    if termwise:
+        return hh + (hl + lh) / sf
+    return (hh + hl / sf) + lh / sf
+
+
+def dgemm_ref(a, b):
+    """FP64 ground truth (``C_true`` of Eq. 13)."""
+    return jnp.dot(
+        a.astype(jnp.float64),
+        b.astype(jnp.float64),
+        preferred_element_type=jnp.float64,
+        precision=jax.lax.Precision.HIGHEST,
+    )
+
+
+def relative_error(c_true, c_calc):
+    """Eq. (13): ||C_true - C_calc||_2 / ||C_true||_2 (Frobenius)."""
+    t = c_true.astype(jnp.float64)
+    c = c_calc.astype(jnp.float64)
+    return jnp.linalg.norm(t - c) / jnp.linalg.norm(t)

@@ -1,0 +1,159 @@
+"""Layer-1 Pallas kernel: the three-term SGEMM-cube block GEMM.
+
+The kernel consumes pre-split operands (high/low FP16 components from
+``split.py``) and computes the three dominant terms of Eq. (7) with a
+blocked (m, n, k) grid:
+
+* Grid axes are ordered ``(m-block, n-block, k-block)`` with k innermost,
+  so the A block stays resident across the n sweep — the Pallas/Mosaic
+  analogue of the paper's "A resident in L1, B streamed" schedule
+  (Sec. 5.1.1); the pipeline double-buffers the VMEM windows exactly like
+  the paper's double-buffered L1 (Sec. 5.1.2, see DESIGN.md
+  §Hardware-Adaptation).
+* Each grid step issues three MXU/Cube matmuls (hh, hl, lh) on FP16
+  inputs with FP32 accumulation (``preferred_element_type``).
+* **Termwise** mode keeps two FP32 accumulators — the high-high term and
+  the aggregated corrections — merging them only after the k sweep
+  (Fig. 3b). **Elementwise** mode folds everything into one running
+  accumulator per k step (Fig. 3a).
+
+Block sizes default to multiples of 16 mirroring Eq. (12)'s cube
+alignment; TPU tile alignment (8×128) is satisfied by the 128-multiples
+used for the shipped artifacts.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import DEFAULT_SCALE_EXP
+from .split import split_pallas
+
+
+def _cube_kernel_termwise(ah_ref, al_ref, bh_ref, bl_ref, hh_ref, corr_ref, *, inv_sf):
+    """One (m, n, k) grid step: accumulate hh and (hl + lh) separately."""
+    del inv_sf  # applied at reconstruction time, outside the k loop
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        hh_ref[...] = jnp.zeros_like(hh_ref)
+        corr_ref[...] = jnp.zeros_like(corr_ref)
+
+    ah = ah_ref[...]
+    al = al_ref[...]
+    bh = bh_ref[...]
+    bl = bl_ref[...]
+    dot = lambda x, y: jnp.dot(x, y, preferred_element_type=jnp.float32)
+    hh_ref[...] += dot(ah, bh)
+    corr_ref[...] += dot(ah, bl) + dot(al, bh)
+
+
+def _cube_kernel_elementwise(ah_ref, al_ref, bh_ref, bl_ref, o_ref, *, inv_sf):
+    """One grid step folding all three terms into a single accumulator."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    ah = ah_ref[...]
+    al = al_ref[...]
+    bh = bh_ref[...]
+    bl = bl_ref[...]
+    dot = lambda x, y: jnp.dot(x, y, preferred_element_type=jnp.float32)
+    hh = dot(ah, bh)
+    hl = dot(ah, bl)
+    lh = dot(al, bh)
+    o_ref[...] += hh + (hl + lh) * jnp.float32(inv_sf)
+
+
+def cube_matmul_split(
+    ah, al, bh, bl,
+    scale_exp: int = DEFAULT_SCALE_EXP,
+    termwise: bool = True,
+    block=(128, 128, 128),
+    interpret: bool = True,
+):
+    """SGEMM-cube over pre-split FP16 components. Returns FP32 ``C``.
+
+    Shapes must tile exactly by ``block`` (the public entry point
+    ``cube_matmul`` pads arbitrary shapes).
+    """
+    (m, k), (k2, n) = ah.shape, bh.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    bm, bn, bk = block
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{k},{n}) not tiled by block ({bm},{bn},{bk})"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    a_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
+    b_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+    o_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+    inv_sf = 2.0 ** (-scale_exp)
+
+    if termwise:
+        kernel = functools.partial(_cube_kernel_termwise, inv_sf=inv_sf)
+        hh, corr = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[a_spec, a_spec, b_spec, b_spec],
+            out_specs=[o_spec, o_spec],
+            out_shape=[
+                jax.ShapeDtypeStruct((m, n), jnp.float32),
+                jax.ShapeDtypeStruct((m, n), jnp.float32),
+            ],
+            interpret=interpret,
+        )(ah, al, bh, bl)
+        # Termwise reconstruction: corrections aggregate fully before
+        # meeting the high-order product (one vector op, VPU work).
+        return hh + corr * jnp.float32(inv_sf)
+
+    kernel = functools.partial(_cube_kernel_elementwise, inv_sf=inv_sf)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[a_spec, a_spec, b_spec, b_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(ah, al, bh, bl)
+
+
+def cube_matmul(
+    a, b,
+    scale_exp: int = DEFAULT_SCALE_EXP,
+    termwise: bool = True,
+    block=(128, 128, 128),
+    interpret: bool = True,
+):
+    """Full SGEMM-cube: split FP32 operands, run the three-term kernel.
+
+    Arbitrary shapes are zero-padded up to block multiples (zero rows and
+    columns contribute exact zeros) and the result is sliced back.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    bm = min(block[0], _ceil_mult(m, 16))
+    bn = min(block[1], _ceil_mult(n, 16))
+    bk = min(block[2], _ceil_mult(k, 16))
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    ap = jnp.pad(a, ((0, pm), (0, pk))) if (pm or pk) else a
+    bp = jnp.pad(b, ((0, pk), (0, pn))) if (pk or pn) else b
+
+    ah, al = split_pallas(ap, scale_exp, block=(bm, bk), interpret=interpret)
+    bh, bl = split_pallas(bp, scale_exp, block=(bk, bn), interpret=interpret)
+    c = cube_matmul_split(
+        ah, al, bh, bl,
+        scale_exp=scale_exp,
+        termwise=termwise,
+        block=(bm, bn, bk),
+        interpret=interpret,
+    )
+    return c[:m, :n] if (pm or pn) else c
+
+
+def _ceil_mult(x: int, q: int) -> int:
+    """Round ``x`` up to a multiple of ``q`` (cube alignment, Eq. 12)."""
+    return ((x + q - 1) // q) * q

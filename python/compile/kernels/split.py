@@ -1,0 +1,56 @@
+"""Layer-1 Pallas kernel: the FP32 -> 2xFP16 operand split (Eq. 7).
+
+A pure elementwise kernel, tiled so each grid step converts one block in
+VMEM. On a real TPU this runs on the VPU with the block schedule keeping
+the conversion off the matrix path; under ``interpret=True`` it lowers to
+plain HLO the CPU PJRT client can run (see DESIGN.md §Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import DEFAULT_SCALE_EXP
+
+
+def _split_kernel(x_ref, high_ref, low_ref, *, sf: float):
+    x = x_ref[...]
+    high = x.astype(jnp.float16)
+    resid = (x - high.astype(jnp.float32)) * jnp.float32(sf)
+    high_ref[...] = high
+    low_ref[...] = resid.astype(jnp.float16)
+
+
+def split_pallas(x, scale_exp: int = DEFAULT_SCALE_EXP, block=(128, 128), interpret: bool = True):
+    """Split a 2-D FP32 array into (high, low) FP16 components.
+
+    Shapes need not be multiples of ``block``; inputs are zero-padded and
+    the outputs sliced back (zeros split to zeros exactly).
+    """
+    assert x.ndim == 2, "split_pallas expects a matrix"
+    m, n = x.shape
+    bm, bn = (min(block[0], m), min(block[1], n))
+    pm, pn = (-m) % bm, (-n) % bn
+    xp = jnp.pad(x, ((0, pm), (0, pn))) if (pm or pn) else x
+    gm, gn = xp.shape[0] // bm, xp.shape[1] // bn
+
+    kernel = functools.partial(_split_kernel, sf=2.0 ** scale_exp)
+    high, low = pl.pallas_call(
+        kernel,
+        grid=(gm, gn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(xp.shape, jnp.float16),
+            jax.ShapeDtypeStruct(xp.shape, jnp.float16),
+        ],
+        interpret=interpret,
+    )(xp)
+    if pm or pn:
+        high, low = high[:m, :n], low[:m, :n]
+    return high, low

@@ -1,0 +1,131 @@
+"""Layer-2 JAX compute graphs, built on the Layer-1 Pallas kernels.
+
+All graphs here are *build-time only*: they are lowered once by
+``aot.py`` to HLO text and executed from the rust runtime; Python is
+never on the request path.
+
+Graphs:
+
+* ``gemm_graph``       -- one SGEMM-cube matmul (the serving hot path).
+* ``hgemm_graph``      -- baseline FP16 GEMM.
+* ``split_graph``      -- standalone operand split (for pipelines that
+                          cache split operands across requests).
+* ``mlp_forward``      -- small MLP inference with every matmul routed
+                          through SGEMM-cube.
+* ``mlp_train_step``   -- one SGD step (fwd + bwd) of the same MLP; the
+                          backward matmuls also run through the cube
+                          kernel via a custom JVP, demonstrating the
+                          paper's "deep-learning workloads" motivation.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.hgemm import hgemm_pallas
+from .kernels.ref import DEFAULT_SCALE_EXP
+from .kernels.sgemm_cube import cube_matmul
+from .kernels.split import split_pallas
+
+
+# ---------------------------------------------------------------------------
+# GEMM graphs
+# ---------------------------------------------------------------------------
+
+def gemm_graph(a, b, scale_exp: int = DEFAULT_SCALE_EXP, termwise: bool = True):
+    """One precision-recovery matmul: the artifact behind `runtime::gemm`."""
+    return (cube_matmul(a, b, scale_exp=scale_exp, termwise=termwise),)
+
+
+def hgemm_graph(a, b):
+    """Baseline FP16 GEMM artifact."""
+    return (hgemm_pallas(a, b),)
+
+
+def split_graph(x, scale_exp: int = DEFAULT_SCALE_EXP):
+    """Standalone split artifact: FP32 matrix -> (high, low) FP16 pair."""
+    return split_pallas(x, scale_exp)
+
+
+# ---------------------------------------------------------------------------
+# Cube matmul with a differentiation rule
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def cube_mm(a, b, scale_exp: int = DEFAULT_SCALE_EXP):
+    """Differentiable SGEMM-cube matmul (termwise, the paper default)."""
+    return cube_matmul(a, b, scale_exp=scale_exp, termwise=True)
+
+
+def _cube_mm_fwd(a, b, scale_exp):
+    return cube_mm(a, b, scale_exp), (a, b)
+
+
+def _cube_mm_bwd(scale_exp, res, g):
+    # The backward matmuls also run through the precision-recovery path:
+    # the paper's DL workloads execute fwd *and* bwd on the Cube.
+    a, b = res
+    da = cube_mm(g, b.T, scale_exp)  # dL/dA = g · Bᵀ
+    db = cube_mm(a.T, g, scale_exp)  # dL/dB = Aᵀ · g
+    return da, db
+
+
+cube_mm.defvjp(_cube_mm_fwd, _cube_mm_bwd)
+
+
+# ---------------------------------------------------------------------------
+# MLP (the end-to-end DL workload)
+# ---------------------------------------------------------------------------
+
+def mlp_init(sizes, key):
+    """Initialize MLP parameters: list of (W, b) with He-normal weights."""
+    params = []
+    for d_in, d_out in zip(sizes[:-1], sizes[1:]):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (d_in, d_out), jnp.float32) * jnp.sqrt(2.0 / d_in)
+        params.append((w, jnp.zeros((d_out,), jnp.float32)))
+    return params
+
+
+def mlp_forward(params, x, matmul=cube_mm):
+    """MLP forward pass; every layer matmul goes through ``matmul``."""
+    h = x
+    for i, (w, b) in enumerate(params):
+        h = matmul(h, w) + b
+        if i + 1 < len(params):
+            h = jax.nn.relu(h)
+    return h
+
+
+def mlp_loss(params, x, y, matmul=cube_mm):
+    """Mean-squared-error regression loss."""
+    pred = mlp_forward(params, x, matmul)
+    return jnp.mean((pred - y) ** 2)
+
+
+def mlp_train_step(params, x, y, lr=1e-2, matmul=cube_mm):
+    """One SGD step; returns (new_params, loss)."""
+    loss, grads = jax.value_and_grad(mlp_loss)(params, x, y, matmul)
+    new_params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+    return new_params, loss
+
+
+# ---------------------------------------------------------------------------
+# Flattened export wrappers (PJRT-friendly signatures: only arrays)
+# ---------------------------------------------------------------------------
+
+def mlp_forward_flat(x, w0, b0, w1, b1, w2, b2):
+    """3-layer MLP forward with a flat arg list, for AOT export."""
+    params = [(w0, b0), (w1, b1), (w2, b2)]
+    return (mlp_forward(params, x),)
+
+
+def mlp_train_step_flat(x, y, w0, b0, w1, b1, w2, b2):
+    """One SGD step with flat args; returns (loss, w0', b0', ..., b2')."""
+    params = [(w0, b0), (w1, b1), (w2, b2)]
+    new_params, loss = mlp_train_step(params, x, y)
+    flat = [loss]
+    for w, b in new_params:
+        flat.extend([w, b])
+    return tuple(flat)

@@ -1,0 +1,121 @@
+"""SGEMM-cube and HGEMM Pallas kernels vs oracles — the core correctness
+signal of the L1 layer (kernel vs ref allclose, error-ordering, scaling)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.hgemm import hgemm_pallas
+from compile.kernels.sgemm_cube import cube_matmul, cube_matmul_split
+from compile.kernels.split import split_pallas
+
+
+def rand(seed, shape, lo=-1.0, hi=1.0):
+    return jax.random.uniform(jax.random.PRNGKey(seed), shape, jnp.float32, lo, hi)
+
+
+def rel_err(c_true, c):
+    return float(ref.relative_error(c_true, c))
+
+
+class TestCubeKernel:
+    @pytest.mark.parametrize("shape", [(64, 64, 64), (128, 96, 80), (32, 256, 48)])
+    def test_close_to_ref_oracle(self, shape):
+        m, k, n = shape
+        a, b = rand(0, (m, k)), rand(1, (k, n))
+        kc = cube_matmul(a, b)
+        rc = ref.cube_matmul_ref(a, b)
+        # Same three terms; the blocked k loop accumulates in a different
+        # order than the monolithic dot, so allow accumulation noise at
+        # the k*ulp scale.
+        np.testing.assert_allclose(np.asarray(kc), np.asarray(rc), rtol=1e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("termwise", [True, False])
+    def test_near_fp32_accuracy(self, termwise):
+        a, b = rand(2, (96, 96)), rand(3, (96, 96))
+        c_true = ref.dgemm_ref(a, b)
+        err = rel_err(c_true, cube_matmul(a, b, termwise=termwise))
+        assert err < 5e-7, f"termwise={termwise} err={err}"
+
+    def test_beats_hgemm_by_orders_of_magnitude(self):
+        # Paper Fig. 8: cube ~1e-7 vs hgemm ~1e-4 at e = 0.
+        a, b = rand(4, (128, 128)), rand(5, (128, 128))
+        c_true = ref.dgemm_ref(a, b)
+        e_cube = rel_err(c_true, cube_matmul(a, b))
+        e_h = rel_err(c_true, hgemm_pallas(a, b))
+        assert e_cube < e_h / 100, f"cube={e_cube} hgemm={e_h}"
+
+    def test_scaling_matters_at_small_exponents(self):
+        # Paper Fig. 8: s_b=0 trails at low exponents, s_b=12 recovers.
+        e = 2.0**-10
+        a, b = rand(6, (64, 64), -e, e), rand(7, (64, 64), -e, e)
+        c_true = ref.dgemm_ref(a, b)
+        e0 = rel_err(c_true, cube_matmul(a, b, scale_exp=0))
+        e12 = rel_err(c_true, cube_matmul(a, b, scale_exp=12))
+        assert e12 < e0 / 5, f"e0={e0} e12={e12}"
+
+    def test_presplit_entry_point(self):
+        a, b = rand(8, (128, 128)), rand(9, (128, 128))
+        ah, al = split_pallas(a)
+        bh, bl = split_pallas(b)
+        c = cube_matmul_split(ah, al, bh, bl)
+        np.testing.assert_allclose(
+            np.asarray(c), np.asarray(ref.cube_matmul_ref(a, b)), rtol=1e-5, atol=1e-6
+        )
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.integers(1, 80),
+        k=st.integers(1, 80),
+        n=st.integers(1, 80),
+        e=st.integers(-8, 8),
+        seed=st.integers(0, 2**31 - 1),
+        termwise=st.booleans(),
+    )
+    def test_hypothesis_shape_dtype_sweep(self, m, k, n, e, seed, termwise):
+        s = 2.0**e
+        a = rand(seed, (m, k), -s, s)
+        b = rand(seed + 1, (k, n), -s, s)
+        c = cube_matmul(a, b, termwise=termwise)
+        assert c.shape == (m, n)
+        assert c.dtype == jnp.float32
+        c_true = np.asarray(ref.dgemm_ref(a, b), np.float64)
+        denom = np.linalg.norm(c_true) or 1.0
+        err = np.linalg.norm(c_true - np.asarray(c, np.float64)) / denom
+        assert err < 1e-5, f"err={err} ({m},{k},{n}) e={e}"
+
+    def test_nonsquare_blocks_pad_correctly(self):
+        a, b = rand(10, (130, 70)), rand(11, (70, 190))
+        c = cube_matmul(a, b, block=(64, 64, 64))
+        np.testing.assert_allclose(
+            np.asarray(c), np.asarray(ref.cube_matmul_ref(a, b)), rtol=1e-5, atol=1e-6
+        )
+
+
+class TestHgemmKernel:
+    @pytest.mark.parametrize("shape", [(64, 64, 64), (100, 36, 52)])
+    def test_matches_ref(self, shape):
+        m, k, n = shape
+        a, b = rand(12, (m, k)), rand(13, (k, n))
+        kc = hgemm_pallas(a, b)
+        rc = ref.hgemm_ref(a, b)
+        np.testing.assert_allclose(np.asarray(kc), np.asarray(rc), rtol=1e-6, atol=1e-7)
+
+    def test_error_magnitude_order(self):
+        a, b = rand(14, (128, 128)), rand(15, (128, 128))
+        err = rel_err(ref.dgemm_ref(a, b), hgemm_pallas(a, b))
+        assert 1e-5 < err < 1e-3, f"err={err}"
+
+
+class TestAccumulationOrder:
+    def test_termwise_at_least_as_good_at_large_k(self):
+        # Paper Fig. 9: termwise beats elementwise as k grows.
+        k = 2048
+        a, b = rand(16, (16, k), 0.0, 1.0), rand(17, (k, 16), 0.0, 1.0)
+        c_true = ref.dgemm_ref(a, b)
+        e_tw = rel_err(c_true, ref.cube_matmul_ref(a, b, termwise=True))
+        e_el = rel_err(c_true, ref.cube_matmul_ref(a, b, termwise=False))
+        assert e_tw <= e_el * 1.05, f"termwise={e_tw} elementwise={e_el}"

@@ -1,0 +1,105 @@
+"""Layer-2 model graphs: shapes, gradients, cube-vs-fp32 training parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def mlp():
+    key = jax.random.PRNGKey(42)
+    sizes = (64, 128, 128, 32)
+    params = model.mlp_init(sizes, key)
+    kx, ky = jax.random.split(jax.random.PRNGKey(7))
+    x = jax.random.normal(kx, (64, sizes[0]), jnp.float32)
+    # Synthetic regression target from a random linear teacher.
+    w_true = jax.random.normal(ky, (sizes[0], sizes[-1]), jnp.float32) * 0.3
+    y = x @ w_true
+    return params, x, y
+
+
+class TestMlpForward:
+    def test_output_shape(self, mlp):
+        params, x, _ = mlp
+        out = model.mlp_forward(params, x)
+        assert out.shape == (64, 32)
+        assert out.dtype == jnp.float32
+
+    def test_cube_forward_close_to_fp32_forward(self, mlp):
+        params, x, _ = mlp
+        out_cube = model.mlp_forward(params, x, matmul=model.cube_mm)
+        out_f32 = model.mlp_forward(params, x, matmul=lambda a, b: a @ b)
+        np.testing.assert_allclose(np.asarray(out_cube), np.asarray(out_f32), rtol=1e-4, atol=1e-4)
+
+    def test_flat_wrapper_consistent(self, mlp):
+        params, x, _ = mlp
+        flat_args = [x]
+        for w, b in params:
+            flat_args.extend([w, b])
+        (out_flat,) = model.mlp_forward_flat(*flat_args)
+        np.testing.assert_array_equal(np.asarray(out_flat), np.asarray(model.mlp_forward(params, x)))
+
+
+class TestMlpTraining:
+    def test_one_step_reduces_loss(self, mlp):
+        params, x, y = mlp
+        l0 = float(model.mlp_loss(params, x, y))
+        p1, _ = model.mlp_train_step(params, x, y, lr=1e-2)
+        l1 = float(model.mlp_loss(p1, x, y))
+        assert l1 < l0, f"{l1} !< {l0}"
+
+    def test_gradients_match_fp32_path(self, mlp):
+        params, x, y = mlp
+        g_cube = jax.grad(model.mlp_loss)(params, x, y, model.cube_mm)
+        g_f32 = jax.grad(model.mlp_loss)(params, x, y, lambda a, b: a @ b)
+        flat_c, _ = jax.tree_util.tree_flatten(g_cube)
+        flat_f, _ = jax.tree_util.tree_flatten(g_f32)
+        for gc, gf in zip(flat_c, flat_f):
+            denom = np.maximum(np.abs(np.asarray(gf)), 1e-3)
+            rel = np.max(np.abs(np.asarray(gc) - np.asarray(gf)) / denom)
+            assert rel < 1e-2, f"grad rel diff {rel}"
+
+    def test_short_training_tracks_fp32(self, mlp):
+        params, x, y = mlp
+        p_cube, p_f32 = params, params
+        for _ in range(5):
+            p_cube, l_cube = model.mlp_train_step(p_cube, x, y, lr=1e-2)
+            p_f32, l_f32 = model.mlp_train_step(p_f32, x, y, lr=1e-2, matmul=lambda a, b: a @ b)
+        assert abs(float(l_cube) - float(l_f32)) / float(l_f32) < 0.05
+
+    def test_train_step_flat_returns_loss_and_params(self, mlp):
+        params, x, y = mlp
+        flat_args = [x, y]
+        for w, b in params:
+            flat_args.extend([w, b])
+        out = model.mlp_train_step_flat(*flat_args)
+        assert len(out) == 7  # loss + 3x(W, b)
+        assert out[0].shape == ()
+        assert out[1].shape == params[0][0].shape
+
+
+class TestGemmGraphs:
+    def test_gemm_graph_matches_kernel(self):
+        a = jax.random.uniform(jax.random.PRNGKey(0), (64, 64), jnp.float32, -1, 1)
+        b = jax.random.uniform(jax.random.PRNGKey(1), (64, 64), jnp.float32, -1, 1)
+        (c,) = model.gemm_graph(a, b)
+        err = float(ref.relative_error(ref.dgemm_ref(a, b), c))
+        assert err < 5e-7
+
+    def test_hgemm_graph(self):
+        a = jax.random.uniform(jax.random.PRNGKey(2), (64, 64), jnp.float32, -1, 1)
+        b = jax.random.uniform(jax.random.PRNGKey(3), (64, 64), jnp.float32, -1, 1)
+        (c,) = model.hgemm_graph(a, b)
+        err = float(ref.relative_error(ref.dgemm_ref(a, b), c))
+        assert 1e-6 < err < 1e-3
+
+    def test_split_graph(self):
+        x = jax.random.uniform(jax.random.PRNGKey(4), (128, 128), jnp.float32, -1, 1)
+        h, l = model.split_graph(x)
+        rh, rl = ref.split_ref(x)
+        np.testing.assert_array_equal(np.asarray(h), np.asarray(rh))
+        np.testing.assert_array_equal(np.asarray(l), np.asarray(rl))

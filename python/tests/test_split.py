@@ -1,0 +1,77 @@
+"""Split kernel (L1) vs pure-jnp oracle: bit-exactness and precision."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.split import split_pallas
+
+
+def rand(key, shape, e_lo=-1.0, e_hi=1.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape, jnp.float32, e_lo, e_hi)
+
+
+class TestSplitKernelVsRef:
+    @pytest.mark.parametrize("shape", [(16, 16), (128, 128), (96, 130), (1, 7), (257, 3)])
+    def test_bit_exact_against_ref(self, shape):
+        x = rand(0, shape)
+        kh, kl = split_pallas(x)
+        rh, rl = ref.split_ref(x)
+        np.testing.assert_array_equal(np.asarray(kh).view(np.uint16), np.asarray(rh).view(np.uint16))
+        np.testing.assert_array_equal(np.asarray(kl).view(np.uint16), np.asarray(rl).view(np.uint16))
+
+    @pytest.mark.parametrize("scale_exp", [0, 6, 12])
+    def test_scale_exponents(self, scale_exp):
+        x = rand(1, (64, 64)) * 0.01
+        kh, kl = split_pallas(x, scale_exp)
+        rh, rl = ref.split_ref(x, scale_exp)
+        np.testing.assert_array_equal(np.asarray(kh), np.asarray(rh))
+        np.testing.assert_array_equal(np.asarray(kl), np.asarray(rl))
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 70),
+        n=st.integers(1, 70),
+        e=st.integers(-12, 12),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes_and_magnitudes(self, m, n, e, seed):
+        x = rand(seed, (m, n), -(2.0**e), 2.0**e)
+        kh, kl = split_pallas(x)
+        rh, rl = ref.split_ref(x)
+        np.testing.assert_array_equal(np.asarray(kh), np.asarray(rh))
+        np.testing.assert_array_equal(np.asarray(kl), np.asarray(rl))
+
+
+class TestSplitPrecision:
+    def test_reconstruction_recovers_22_bits(self):
+        x = rand(2, (128, 128))
+        h, l = split_pallas(x)
+        r = ref.reconstruct_ref(h, l)
+        rel = np.max(np.abs(np.asarray(r, np.float64) - np.asarray(x, np.float64))
+                     / np.maximum(np.abs(np.asarray(x, np.float64)), 1e-30))
+        assert rel < 2.0**-21, f"rel={rel}"
+
+    def test_zero_maps_to_zero(self):
+        x = jnp.zeros((32, 32), jnp.float32)
+        h, l = split_pallas(x)
+        assert not np.any(np.asarray(h))
+        assert not np.any(np.asarray(l))
+
+    def test_fp16_exact_values_have_zero_residual(self):
+        x = jnp.asarray([[1.0, 0.5, -2.0, 1024.0]], jnp.float32)
+        h, l = split_pallas(x)
+        np.testing.assert_array_equal(np.asarray(h, np.float32), np.asarray(x))
+        assert not np.any(np.asarray(l, np.float32))
+
+    def test_unscaled_split_degrades_small_values(self):
+        # Rule 1: below 2^-12, s_b = 0 loses significant precision.
+        x = rand(3, (64, 64)) * 2.0**-13
+        h0, l0 = split_pallas(x, scale_exp=0)
+        h12, l12 = split_pallas(x, scale_exp=12)
+        err0 = np.max(np.abs(np.asarray(ref.reconstruct_ref(h0, l0, 0), np.float64) - np.asarray(x, np.float64)))
+        err12 = np.max(np.abs(np.asarray(ref.reconstruct_ref(h12, l12, 12), np.float64) - np.asarray(x, np.float64)))
+        assert err12 < err0 / 10, f"err12={err12} err0={err0}"

@@ -1,0 +1,16 @@
+//! Bench target for the design-choice ablations (DESIGN.md §5 footer):
+//! omitted low·low term, RN/RZ rounding modes, dynamic s_b selection.
+
+use sgemm_cube::experiments::ablations;
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let (n, seeds) = if quick { (48, 1) } else { (96, 3) };
+    ablations::run_low_low(n, seeds).emit(None);
+    ablations::run_rounding(n, seeds).emit(None);
+    ablations::run_dynamic_scaling(n.min(48), seeds).emit(None);
+    println!("anchors: low-low omission costs <~0.5 bit while a 4th GEMM would cost +33%;");
+    println!("RZ splitting loses ~1-2 bits (Markidis-style, Table 2); RZ accumulation is");
+    println!("measurably worse than RN on deep cancellation-free sums (Ootomo's finding);");
+    println!("the range policy (Eq. 6 + low-side fp32 fallback) wins below the s_b=12 window.");
+}

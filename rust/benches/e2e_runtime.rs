@@ -1,0 +1,86 @@
+//! End-to-end runtime hot-path bench: PJRT artifact execution latency /
+//! throughput, the native numerics engine, and the coordinator's
+//! batched-serving throughput. Uses the custom harness in
+//! `sgemm_cube::util::bench` (the image has no criterion).
+
+use std::time::Duration;
+
+use sgemm_cube::coordinator::batcher::BatcherConfig;
+use sgemm_cube::coordinator::policy::PrecisionPolicy;
+use sgemm_cube::coordinator::server::{GemmService, ServiceConfig};
+use sgemm_cube::gemm::backend::{Backend, GemmBackend};
+use sgemm_cube::runtime::Engine;
+use sgemm_cube::util::bench::Bencher;
+use sgemm_cube::util::mat::Matrix;
+use sgemm_cube::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::quick();
+    let mut rng = Rng::new(42);
+
+    println!("== native numerics engine (host CPU) ==");
+    for n in [64usize, 128, 256] {
+        let a = Matrix::random_symmetric(n, n, 0, &mut rng);
+        let bb = Matrix::random_symmetric(n, n, 0, &mut rng);
+        let flops = 2.0 * (n * n * n) as f64;
+        for backend in [Backend::Fp32, Backend::Fp16, Backend::CubeTermwise] {
+            let exec = GemmBackend::new(backend);
+            b.bench(&format!("native/{}/{}³", backend.name(), n), Some(flops), || {
+                exec.gemm(&a, &bb)
+            });
+        }
+    }
+
+    println!("\n== PJRT artifact execution (AOT Pallas kernels) ==");
+    match Engine::from_default_dir() {
+        Ok(engine) => {
+            for (name, n) in [("cube_gemm_64", 64usize), ("cube_gemm_128", 128), ("cube_gemm_256", 256)] {
+                let a = Matrix::random_symmetric(n, n, 0, &mut rng);
+                let bb = Matrix::random_symmetric(n, n, 0, &mut rng);
+                let flops = 2.0 * (n * n * n) as f64;
+                // warm the executable cache outside the timer
+                let _ = engine.gemm(name, &a, &bb).unwrap();
+                b.bench(&format!("pjrt/{name}"), Some(flops), || {
+                    engine.gemm(name, &a, &bb).unwrap()
+                });
+            }
+            let x = Matrix::random_normal(64, 64, 1.0, &mut rng);
+            let mut args: Vec<Matrix<f32>> = vec![x];
+            for w in [64usize, 128, 128, 32].windows(2) {
+                args.push(Matrix::random_normal(w[0], w[1], 0.1, &mut rng));
+                args.push(Matrix::zeros(1, w[1]));
+            }
+            let refs: Vec<&Matrix<f32>> = args.iter().collect();
+            let _ = engine.run("mlp_forward", &refs).unwrap();
+            b.bench("pjrt/mlp_forward(batch=64)", None, || {
+                engine.run("mlp_forward", &refs).unwrap()
+            });
+        }
+        Err(e) => println!("(skipping PJRT benches: {e}; run `make artifacts`)"),
+    }
+
+    println!("\n== coordinator serving throughput ==");
+    let svc = GemmService::start(ServiceConfig {
+        batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
+        policy: PrecisionPolicy::default(),
+        n_workers: 0,
+    });
+    let n = 96usize;
+    let reqs = 32usize;
+    let flops = 2.0 * (n * n * n) as f64 * reqs as f64;
+    b.bench(&format!("serve/{reqs}x{n}³ batched"), Some(flops), || {
+        let mut rng = Rng::new(7);
+        let rxs: Vec<_> = (0..reqs)
+            .map(|_| {
+                let a = Matrix::random_symmetric(n, n, 0, &mut rng);
+                let bb = Matrix::random_symmetric(n, n, 0, &mut rng);
+                svc.submit(a, bb, None)
+            })
+            .collect();
+        for (_, rx) in rxs {
+            rx.recv().unwrap().result.unwrap();
+        }
+    });
+    println!("\n{}", svc.metrics().report().line());
+    svc.shutdown();
+}

@@ -1,0 +1,45 @@
+//! Extension bench (paper future work, Sec. 8: "extending the approach
+//! to other low-precision matrix engines"): the two-component **BF16**
+//! cube vs the FP16 scheme across the exponent range — accuracy inside
+//! the FP16 window, and survival far outside it.
+
+use sgemm_cube::experiments::report::{sci, Table};
+use sgemm_cube::gemm::bfcube::{bf16_cube_gemm, bgemm};
+use sgemm_cube::gemm::cube::{cube_gemm, Accumulation};
+use sgemm_cube::gemm::dgemm::dgemm_of_f32;
+use sgemm_cube::gemm::error::relative_error;
+use sgemm_cube::softfloat::split::SplitConfig;
+use sgemm_cube::util::mat::Matrix;
+use sgemm_cube::util::rng::Rng;
+
+fn main() {
+    let n = 64;
+    let seeds = 3u64;
+    let mut t = Table::new(
+        "Extension: BF16 two-component cube vs FP16 scheme vs single-pass BF16",
+        &["e", "fp16-cube sb=12", "bf16-cube", "bf16 single"],
+    );
+    for e in [-55i32, -20, -12, 0, 12, 18, 40, 60] {
+        let (mut e16, mut ebf, mut eb1) = (0.0, 0.0, 0.0);
+        for s in 0..seeds {
+            let mut rng = Rng::new(6000 + s);
+            let a = Matrix::from_fn(n, n, |_, _| rng.f32_with_exponent(e));
+            let b = Matrix::from_fn(n, n, |_, _| rng.f32_with_exponent(e));
+            let c_ref = dgemm_of_f32(&a, &b);
+            e16 += relative_error(
+                &c_ref,
+                &cube_gemm(&a, &b, SplitConfig::default(), Accumulation::Termwise).to_f64(),
+            ) / seeds as f64;
+            ebf += relative_error(&c_ref, &bf16_cube_gemm(&a, &b).to_f64()) / seeds as f64;
+            eb1 += relative_error(&c_ref, &bgemm(&a, &b).to_f64()) / seeds as f64;
+        }
+        let fmt16 = if e16.is_finite() { sci(e16) } else { "overflow".into() };
+        t.row(vec![e.to_string(), fmt16, sci(ebf), sci(eb1)]);
+    }
+    t.emit(None);
+    println!("reading guide: inside the FP16 window ([-12, 15]) the paper's scheme is");
+    println!("~6 bits better (22 vs 16 recovered bits); outside it the FP16 high part");
+    println!("overflows/underflows while the BF16 pair holds ~1e-5 across the full");
+    println!("f32 normal range — the same trade as Ootomo's TF32 full-range fallback.");
+    println!("Cost on a dual-format engine is identical: three dominant GEMM terms.");
+}

@@ -1,0 +1,10 @@
+//! Bench target for Fig. 6: N_fused and fusion factor f across the
+//! feasible block space (Eq. 8 / Eq. 12), plus the b_m,opt derivation.
+
+use sgemm_cube::experiments::fig6_blocking;
+
+fn main() {
+    fig6_blocking::run().emit(None);
+    println!("{}", fig6_blocking::optimal_bm_summary());
+    println!("paper anchors: N_fused = 44 at (176, 64, 176); 0.92 ≤ f ≤ 1.");
+}

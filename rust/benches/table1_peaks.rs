@@ -1,0 +1,10 @@
+//! Bench target for Table 1: published accelerator peaks, with the 910A
+//! row cross-checked against the simulator chip model (`make bench` /
+//! `cargo bench --bench table1_peaks`).
+
+use sgemm_cube::experiments::table1;
+
+fn main() {
+    table1::run().emit(None);
+    println!("paper anchor: Ascend 910A = 256 FP16 TFLOP/s, no native FP32 GEMM.");
+}

@@ -1,0 +1,154 @@
+//! Flag parsing: `--key value` pairs after a subcommand.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+    consumed: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let command = match it.next() {
+            Some(c) if c == "-h" || c == "--help" => "help".to_string(),
+            Some(c) if !c.starts_with('-') => c,
+            Some(c) => bail!("expected a subcommand, got flag {c}"),
+            None => "help".to_string(),
+        };
+        let mut flags = BTreeMap::new();
+        while let Some(tok) = it.next() {
+            if tok == "-h" || tok == "--help" {
+                flags.insert("help".into(), "true".into());
+                continue;
+            }
+            let key = tok
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got {tok}"))?;
+            if key.is_empty() {
+                bail!("empty flag name");
+            }
+            // `--flag value` or boolean `--flag` (next token is a flag/eof).
+            let value = match it.peek() {
+                Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                _ => "true".to_string(),
+            };
+            if flags.insert(key.to_string(), value).is_some() {
+                bail!("duplicate flag --{key}");
+            }
+        }
+        Ok(Args { command, flags, consumed: Default::default() })
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.consumed.borrow_mut().insert(key.to_string());
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} {v}: not an integer")),
+        }
+    }
+
+    pub fn get_i32(&self, key: &str, default: i32) -> Result<i32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} {v}: not an integer")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} {v}: not an integer")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Error on flags nobody consumed (typo protection). Call last.
+    pub fn finish(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&String> = self
+            .flags
+            .keys()
+            .filter(|k| !consumed.contains(*k))
+            .collect();
+        if !unknown.is_empty() {
+            bail!("unknown flags: {unknown:?}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<Args> {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let a = parse("gemm --m 64 --backend cube --verbose").unwrap();
+        assert_eq!(a.command, "gemm");
+        assert_eq!(a.get_usize("m", 0).unwrap(), 64);
+        assert_eq!(a.get("backend"), Some("cube"));
+        assert!(a.get_bool("verbose"));
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn no_args_is_help() {
+        assert_eq!(parse("").unwrap().command, "help");
+        assert_eq!(parse("--help").unwrap().command, "help");
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let a = parse("gemm --m 4 --oops 1").unwrap();
+        let _ = a.get("m");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn duplicate_and_malformed_flags_error() {
+        assert!(parse("gemm --x 1 --x 2").is_err());
+        assert!(parse("gemm -x 1").is_err());
+        assert!(parse("--flag-before-command 1").is_err());
+    }
+
+    #[test]
+    fn typed_getters_validate() {
+        let a = parse("gemm --m abc").unwrap();
+        assert!(a.get_usize("m", 0).is_err());
+        let b = parse("gemm --sb -6").unwrap();
+        assert_eq!(b.get_i32("sb", 0).unwrap(), -6);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("gemm").unwrap();
+        assert_eq!(a.get_usize("m", 128).unwrap(), 128);
+        assert_eq!(a.get_or("backend", "cube-termwise"), "cube-termwise");
+    }
+}

@@ -1,0 +1,36 @@
+//! Hand-rolled CLI (the offline image has no clap).
+//!
+//! `sgemm-cube <subcommand> [--flag value ...]` — see `print_usage` for
+//! the command table. Flag parsing is a simple key/value scan with typed
+//! getters; unknown flags are errors.
+
+pub mod args;
+
+pub use args::Args;
+
+/// Top-level usage text.
+pub const USAGE: &str = "\
+sgemm-cube — precision-recovery FP32 GEMM on FP16 matrix engines
+
+USAGE:
+    sgemm-cube <COMMAND> [OPTIONS]
+
+COMMANDS:
+    info       Show chip models, artifacts and build configuration
+    gemm       Run one GEMM through a chosen backend and report error
+    accuracy   Fig 8/9 accuracy sweeps               (--fig 8|9)
+    figures    Regenerate paper tables/figures       (--fig 2|6|8|9|10|11|12|t1|t2|abl|all)
+    perf       Simulator throughput for a config     (--bm/--bk/--bn/--buffer)
+    serve      Start the GEMM service demo
+    train      Train the e2e MLP                     (--backend fp32|fp16|cube)
+
+OPTIONS (common):
+    --config <path>      TOML config file (see README)
+    --seed <u64>         PRNG seed (default 42)
+    --csv <dir>          also write CSV outputs
+    -h, --help           show this help
+";
+
+pub fn print_usage() {
+    print!("{USAGE}");
+}

@@ -1,0 +1,12 @@
+//! Configuration system: a TOML-subset parser plus typed views.
+//!
+//! The offline image has no serde/toml crates, so this implements the
+//! subset the launcher needs: `[section]` headers, `key = value` pairs,
+//! `#` comments, string/number/bool scalars. See `examples/server.toml`
+//! in the README for the schema.
+
+pub mod parser;
+pub mod schema;
+
+pub use parser::ConfigFile;
+pub use schema::{BlockingConfig, ChipConfig, ServerConfig};

@@ -1,0 +1,171 @@
+//! Minimal TOML-subset parser: sections, scalar key/values, comments.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed config: `section -> key -> raw value string`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ConfigFile {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl ConfigFile {
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<ConfigFile> {
+        let mut cfg = ConfigFile::default();
+        let mut section = String::new();
+        cfg.sections.entry(String::new()).or_default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            let ctx = || format!("config line {}", lineno + 1);
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .with_context(|| format!("{}: unterminated section", ctx()))?;
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+            } else if let Some((k, v)) = line.split_once('=') {
+                let key = k.trim().to_string();
+                if key.is_empty() {
+                    bail!("{}: empty key", ctx());
+                }
+                let val = unquote(v.trim());
+                cfg.sections
+                    .get_mut(&section)
+                    .unwrap()
+                    .insert(key, val.to_string());
+            } else {
+                bail!("{}: expected `key = value` or `[section]`", ctx());
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &std::path::Path) -> Result<ConfigFile> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading config {path:?}"))?;
+        ConfigFile::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str) -> Result<Option<usize>> {
+        self.get(section, key)
+            .map(|v| v.parse().with_context(|| format!("[{section}] {key} = {v}: not an integer")))
+            .transpose()
+    }
+
+    pub fn get_i32(&self, section: &str, key: &str) -> Result<Option<i32>> {
+        self.get(section, key)
+            .map(|v| v.parse().with_context(|| format!("[{section}] {key} = {v}: not an integer")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Result<Option<f64>> {
+        self.get(section, key)
+            .map(|v| v.parse().with_context(|| format!("[{section}] {key} = {v}: not a number")))
+            .transpose()
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Result<Option<bool>> {
+        self.get(section, key)
+            .map(|v| match v {
+                "true" => Ok(true),
+                "false" => Ok(false),
+                other => bail!("[{section}] {key} = {other}: expected true/false"),
+            })
+            .transpose()
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(String::as_str).filter(|s| !s.is_empty())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // No escape handling needed: values are simple scalars/paths.
+    match line.find('#') {
+        Some(i) if !in_quotes(line, i) => &line[..i],
+        _ => line,
+    }
+}
+
+fn in_quotes(line: &str, idx: usize) -> bool {
+    line[..idx].matches('"').count() % 2 == 1
+}
+
+fn unquote(v: &str) -> &str {
+    v.strip_prefix('"')
+        .and_then(|s| s.strip_suffix('"'))
+        .unwrap_or(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# top comment
+top_key = 1
+
+[server]
+workers = 4
+max_batch = 8
+max_wait_ms = 2.5
+backend = "cube-termwise"
+strict = true   # inline comment
+
+[chip]
+name = "Ascend 910A"
+"#;
+
+    #[test]
+    fn parses_sections_and_values() {
+        let c = ConfigFile::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("", "top_key"), Some("1"));
+        assert_eq!(c.get_usize("server", "workers").unwrap(), Some(4));
+        assert_eq!(c.get_f64("server", "max_wait_ms").unwrap(), Some(2.5));
+        assert_eq!(c.get("server", "backend"), Some("cube-termwise"));
+        assert_eq!(c.get_bool("server", "strict").unwrap(), Some(true));
+        assert_eq!(c.get("chip", "name"), Some("Ascend 910A"));
+        assert_eq!(c.get("chip", "missing"), None);
+        assert_eq!(c.sections().collect::<Vec<_>>(), vec!["chip", "server"]);
+    }
+
+    #[test]
+    fn type_errors_are_reported() {
+        let c = ConfigFile::parse("[s]\nx = notanumber").unwrap();
+        assert!(c.get_usize("s", "x").is_err());
+        assert!(c.get_bool("s", "x").is_err());
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        assert!(ConfigFile::parse("[unterminated").is_err());
+        assert!(ConfigFile::parse("just a bare line").is_err());
+        assert!(ConfigFile::parse("= novalue").is_err());
+    }
+
+    #[test]
+    fn comment_inside_quotes_preserved() {
+        let c = ConfigFile::parse("[s]\npath = \"/a#b/c\"").unwrap();
+        assert_eq!(c.get("s", "path"), Some("/a#b/c"));
+    }
+
+    #[test]
+    fn defaults() {
+        let c = ConfigFile::parse("").unwrap();
+        assert_eq!(c.get_or("server", "backend", "fp32"), "fp32");
+    }
+}

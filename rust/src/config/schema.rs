@@ -1,0 +1,134 @@
+//! Typed views over [`super::ConfigFile`].
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::config::parser::ConfigFile;
+use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::policy::PrecisionPolicy;
+use crate::coordinator::server::ServiceConfig;
+use crate::gemm::backend::Backend;
+use crate::sim::blocking::BlockConfig;
+use crate::sim::chip::Chip;
+
+/// `[server]` section → [`ServiceConfig`].
+#[derive(Debug, Clone, Default)]
+pub struct ServerConfig(pub ServiceConfig);
+
+impl ServerConfig {
+    pub fn from_config(cfg: &ConfigFile) -> Result<ServerConfig> {
+        let mut sc = ServiceConfig::default();
+        if let Some(w) = cfg.get_usize("server", "workers")? {
+            sc.n_workers = w;
+        }
+        if let Some(mb) = cfg.get_usize("server", "max_batch")? {
+            if mb == 0 {
+                bail!("[server] max_batch must be >= 1");
+            }
+            sc.batcher = BatcherConfig { max_batch: mb, ..sc.batcher };
+        }
+        if let Some(ms) = cfg.get_f64("server", "max_wait_ms")? {
+            sc.batcher.max_wait = Duration::from_secs_f64(ms / 1e3);
+        }
+        if let Some(b) = cfg.get("server", "backend") {
+            let backend = Backend::parse(b)
+                .ok_or_else(|| anyhow::anyhow!("[server] backend = {b}: unknown backend"))?;
+            sc.policy = PrecisionPolicy { default_backend: backend, ..sc.policy };
+        }
+        if let Some(e) = cfg.get_f64("server", "error_budget")? {
+            sc.policy.error_budget = Some(e);
+        }
+        Ok(ServerConfig(sc))
+    }
+}
+
+/// `[chip]` section → [`Chip`] (named preset + optional overrides).
+#[derive(Debug, Clone)]
+pub struct ChipConfig(pub Chip);
+
+impl ChipConfig {
+    pub fn from_config(cfg: &ConfigFile) -> Result<ChipConfig> {
+        let mut chip = match cfg.get_or("chip", "preset", "910a") {
+            "910a" | "ascend-910a" => Chip::ascend_910a(),
+            "910b3" | "ascend-910b3" => Chip::ascend_910b3_fp32(),
+            other => bail!("[chip] preset = {other}: expected 910a or 910b3"),
+        };
+        if let Some(v) = cfg.get_f64("chip", "mem_bw_gbs")? {
+            chip.mem_bw_gbs = v;
+        }
+        if let Some(v) = cfg.get_usize("chip", "n_cores")? {
+            chip.n_cores = v as u32;
+        }
+        if let Some(v) = cfg.get_f64("chip", "mem_burst")? {
+            chip.mem_burst = v;
+        }
+        Ok(ChipConfig(chip))
+    }
+}
+
+/// `[blocking]` section → [`BlockConfig`].
+#[derive(Debug, Clone)]
+pub struct BlockingConfig(pub BlockConfig);
+
+impl BlockingConfig {
+    pub fn from_config(cfg: &ConfigFile, chip: &Chip) -> Result<BlockingConfig> {
+        let bm = cfg.get_usize("blocking", "bm")?.unwrap_or(176);
+        let bk = cfg.get_usize("blocking", "bk")?.unwrap_or(64);
+        let bn = cfg.get_usize("blocking", "bn")?.unwrap_or(176);
+        let block = BlockConfig::new(bm, bk, bn);
+        if let Err(e) = block.validate(chip) {
+            bail!("[blocking] infeasible on {}: {e}", chip.name);
+        }
+        Ok(BlockingConfig(block))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn server_section_roundtrip() {
+        let cfg = ConfigFile::parse(
+            "[server]\nworkers = 3\nmax_batch = 16\nmax_wait_ms = 5\nbackend = fp16\nerror_budget = 1e-3",
+        )
+        .unwrap();
+        let sc = ServerConfig::from_config(&cfg).unwrap().0;
+        assert_eq!(sc.n_workers, 3);
+        assert_eq!(sc.batcher.max_batch, 16);
+        assert_eq!(sc.batcher.max_wait, Duration::from_millis(5));
+        assert_eq!(sc.policy.default_backend, Backend::Fp16);
+        assert_eq!(sc.policy.error_budget, Some(1e-3));
+    }
+
+    #[test]
+    fn chip_presets_and_overrides() {
+        let cfg = ConfigFile::parse("[chip]\npreset = 910b3\nmem_bw_gbs = 2000").unwrap();
+        let chip = ChipConfig::from_config(&cfg).unwrap().0;
+        assert_eq!(chip.n_cores, 20);
+        assert_eq!(chip.mem_bw_gbs, 2000.0);
+        assert!(ChipConfig::from_config(&ConfigFile::parse("[chip]\npreset = h100").unwrap()).is_err());
+    }
+
+    #[test]
+    fn blocking_validated_against_chip() {
+        let chip = Chip::ascend_910a();
+        let good = ConfigFile::parse("[blocking]\nbm = 96\nbk = 64\nbn = 96").unwrap();
+        assert_eq!(BlockingConfig::from_config(&good, &chip).unwrap().0, BlockConfig::new(96, 64, 96));
+        let bad = ConfigFile::parse("[blocking]\nbm = 100\nbk = 64\nbn = 96").unwrap();
+        assert!(BlockingConfig::from_config(&bad, &chip).is_err());
+        // Defaults are the paper's best block.
+        let empty = ConfigFile::parse("").unwrap();
+        assert_eq!(
+            BlockingConfig::from_config(&empty, &chip).unwrap().0,
+            BlockConfig::paper_best()
+        );
+    }
+
+    #[test]
+    fn zero_max_batch_rejected() {
+        let cfg = ConfigFile::parse("[server]\nmax_batch = 0").unwrap();
+        assert!(ServerConfig::from_config(&cfg).is_err());
+    }
+}

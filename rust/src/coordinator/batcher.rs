@@ -1,0 +1,153 @@
+//! Shape-keyed dynamic batching.
+//!
+//! Requests accumulate per [`ShapeKey`]; a batch flushes when it reaches
+//! `max_batch` or when its oldest member has waited `max_wait`. This is
+//! the standard dynamic-batching shape of serving routers (vLLM-style),
+//! specialized to GEMM: batched requests share one compiled executable /
+//! kernel configuration.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::request::{GemmRequest, ShapeKey};
+
+/// Batching knobs.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Accumulates requests into shape-homogeneous batches.
+pub struct Batcher {
+    cfg: BatcherConfig,
+    pending: HashMap<ShapeKey, Vec<GemmRequest>>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Batcher {
+        Batcher { cfg, pending: HashMap::new() }
+    }
+
+    /// Add a request; returns a full batch if this push filled one.
+    pub fn push(&mut self, req: GemmRequest) -> Option<Vec<GemmRequest>> {
+        let key = req.shape();
+        let queue = self.pending.entry(key).or_default();
+        queue.push(req);
+        if queue.len() >= self.cfg.max_batch {
+            return self.pending.remove(&key);
+        }
+        None
+    }
+
+    /// Flush every batch whose oldest request has exceeded `max_wait`
+    /// (call periodically from the service loop).
+    pub fn flush_expired(&mut self, now: Instant) -> Vec<Vec<GemmRequest>> {
+        let expired: Vec<ShapeKey> = self
+            .pending
+            .iter()
+            .filter(|(_, q)| {
+                q.first()
+                    .map(|r| now.duration_since(r.submitted) >= self.cfg.max_wait)
+                    .unwrap_or(false)
+            })
+            .map(|(k, _)| *k)
+            .collect();
+        expired
+            .into_iter()
+            .filter_map(|k| self.pending.remove(&k))
+            .collect()
+    }
+
+    /// Flush everything (shutdown path).
+    pub fn flush_all(&mut self) -> Vec<Vec<GemmRequest>> {
+        let keys: Vec<ShapeKey> = self.pending.keys().copied().collect();
+        keys.into_iter().filter_map(|k| self.pending.remove(&k)).collect()
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.pending.values().map(Vec::len).sum()
+    }
+
+    /// Time until the next expiry deadline, if any batch is pending.
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.pending
+            .values()
+            .filter_map(|q| q.first())
+            .map(|r| {
+                self.cfg
+                    .max_wait
+                    .saturating_sub(now.duration_since(r.submitted))
+            })
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::mat::Matrix;
+    use std::sync::mpsc::channel;
+
+    fn req(id: u64, m: usize, k: usize, n: usize) -> GemmRequest {
+        let (tx, _rx) = channel();
+        GemmRequest {
+            id,
+            a: Matrix::zeros(m, k),
+            b: Matrix::zeros(k, n),
+            backend: None,
+            submitted: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn batches_fill_by_shape() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 3, max_wait: Duration::from_secs(10) });
+        assert!(b.push(req(1, 4, 4, 4)).is_none());
+        assert!(b.push(req(2, 8, 8, 8)).is_none()); // different shape
+        assert!(b.push(req(3, 4, 4, 4)).is_none());
+        let batch = b.push(req(4, 4, 4, 4)).expect("third 4³ fills the batch");
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3, 4]);
+        assert_eq!(b.pending_count(), 1); // the 8³ request remains
+    }
+
+    #[test]
+    fn expiry_flushes_old_batches() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 100, max_wait: Duration::from_millis(1) });
+        b.push(req(1, 4, 4, 4));
+        b.push(req(2, 8, 8, 8));
+        assert!(b.flush_expired(Instant::now()).is_empty() || true); // may not be due yet
+        std::thread::sleep(Duration::from_millis(3));
+        let flushed = b.flush_expired(Instant::now());
+        assert_eq!(flushed.len(), 2);
+        assert_eq!(b.pending_count(), 0);
+    }
+
+    #[test]
+    fn flush_all_empties() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        b.push(req(1, 4, 4, 4));
+        b.push(req(2, 8, 4, 4));
+        let all = b.flush_all();
+        assert_eq!(all.iter().map(Vec::len).sum::<usize>(), 2);
+        assert_eq!(b.pending_count(), 0);
+        assert!(b.next_deadline(Instant::now()).is_none());
+    }
+
+    #[test]
+    fn next_deadline_reflects_oldest() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 10, max_wait: Duration::from_millis(50) });
+        assert!(b.next_deadline(Instant::now()).is_none());
+        b.push(req(1, 4, 4, 4));
+        let d = b.next_deadline(Instant::now()).unwrap();
+        assert!(d <= Duration::from_millis(50));
+    }
+}

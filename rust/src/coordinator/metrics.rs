@@ -1,0 +1,131 @@
+//! Service metrics: request counts, latency distribution, throughput.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Shared metrics registry (interior mutability; cheap enough for the
+/// request rates this service sees).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    latencies: Vec<f64>,
+    flops: f64,
+    batches: u64,
+    requests: u64,
+    errors: u64,
+    started: Option<Instant>,
+    finished: Option<Instant>,
+}
+
+/// A snapshot for reporting.
+#[derive(Debug, Clone)]
+pub struct MetricsReport {
+    pub requests: u64,
+    pub batches: u64,
+    pub errors: u64,
+    /// Latency summary in seconds (None until the first request).
+    pub latency: Option<Summary>,
+    /// Aggregate achieved FLOP/s over the active window.
+    pub flops_per_sec: f64,
+    /// Mean requests per batch.
+    pub mean_batch_size: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Record one completed request.
+    pub fn record_request(&self, latency_secs: f64, flops: f64, ok: bool) {
+        let mut g = self.inner.lock().unwrap();
+        let now = Instant::now();
+        g.started.get_or_insert(now);
+        g.finished = Some(now);
+        g.requests += 1;
+        if ok {
+            g.latencies.push(latency_secs);
+            g.flops += flops;
+        } else {
+            g.errors += 1;
+        }
+    }
+
+    /// Record one executed batch.
+    pub fn record_batch(&self) {
+        self.inner.lock().unwrap().batches += 1;
+    }
+
+    pub fn report(&self) -> MetricsReport {
+        let g = self.inner.lock().unwrap();
+        let window = match (g.started, g.finished) {
+            (Some(s), Some(f)) => f.duration_since(s).as_secs_f64().max(1e-9),
+            _ => f64::INFINITY,
+        };
+        MetricsReport {
+            requests: g.requests,
+            batches: g.batches,
+            errors: g.errors,
+            latency: if g.latencies.is_empty() { None } else { Some(Summary::of(&g.latencies)) },
+            flops_per_sec: g.flops / window,
+            mean_batch_size: if g.batches == 0 { 0.0 } else { g.requests as f64 / g.batches as f64 },
+        }
+    }
+}
+
+impl MetricsReport {
+    /// One-line human-readable summary.
+    pub fn line(&self) -> String {
+        let lat = self
+            .latency
+            .as_ref()
+            .map(|l| format!("p50={:.3}ms p95={:.3}ms", l.median * 1e3, l.p95 * 1e3))
+            .unwrap_or_else(|| "no-latency".into());
+        format!(
+            "requests={} batches={} (mean {:.1}/batch) errors={} {} throughput={:.2} GFLOP/s",
+            self.requests,
+            self.batches,
+            self.mean_batch_size,
+            self.errors,
+            lat,
+            self.flops_per_sec / 1e9
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let m = Metrics::new();
+        m.record_batch();
+        m.record_request(0.010, 1e9, true);
+        m.record_request(0.020, 1e9, true);
+        m.record_request(0.5, 0.0, false);
+        let r = m.report();
+        assert_eq!(r.requests, 3);
+        assert_eq!(r.errors, 1);
+        assert_eq!(r.batches, 1);
+        let lat = r.latency.unwrap();
+        assert_eq!(lat.n, 2);
+        assert!((lat.median - 0.015).abs() < 1e-12);
+        assert!(r.line().contains("requests=3"));
+    }
+
+    #[test]
+    fn empty_report() {
+        let r = Metrics::new().report();
+        assert_eq!(r.requests, 0);
+        assert!(r.latency.is_none());
+        assert_eq!(r.mean_batch_size, 0.0);
+        assert_eq!(r.flops_per_sec, 0.0);
+    }
+}

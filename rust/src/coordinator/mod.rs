@@ -1,0 +1,28 @@
+//! L3 coordinator: a GEMM service in the shape of a serving router.
+//!
+//! The paper's contribution is the kernel, so this layer is the thin-but-
+//! real driver a production deployment would put around it: clients
+//! submit GEMM requests; the service
+//!
+//! 1. analyses operand ranges and picks a precision path
+//!    ([`policy`] — including the dynamic `s_b` selection the paper
+//!    lists as future work),
+//! 2. groups compatible requests into batches ([`batcher`]),
+//! 3. executes them on a worker pool ([`server`]) over either the
+//!    native numerics engine or the PJRT artifacts ([`crate::runtime`]),
+//!    scheduling row-block tiles across workers ([`scheduler`]) the way
+//!    the Ascend kernel distributes row blocks across AI cores,
+//! 4. and records latency/throughput metrics ([`metrics`]).
+
+pub mod batcher;
+pub mod metrics;
+pub mod policy;
+pub mod request;
+pub mod scheduler;
+pub mod server;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use metrics::Metrics;
+pub use policy::{PolicyDecision, PrecisionPolicy};
+pub use request::{GemmRequest, GemmResponse, ShapeKey};
+pub use server::{GemmService, ServiceConfig};

@@ -1,0 +1,230 @@
+//! Precision policy: pick the execution path and residual scaling from
+//! the operands' dynamic range.
+//!
+//! This implements the input-dependent scaling the paper lists as future
+//! work ("incorporating dynamic scaling for input-dependent
+//! distributions"), grounded in Eq. (6):
+//!
+//! ```text
+//! -24 + 22 - e_min  <=  s_b  <=  15 + 12 - e_max
+//! ```
+//!
+//! * operands whose magnitudes exceed the FP16 range (`e_max > 15`)
+//!   cannot use the cube path at all → FP32 fallback (Sec. 3.1);
+//! * otherwise `s_b` is chosen inside the Eq. (6) window, preferring the
+//!   paper's default 12, shrinking only when large inputs force it;
+//! * a caller-provided error budget may select plain FP16 when ~11 bits
+//!   suffice (1-pass instead of 3-pass → 3× cheaper, Table 2 note).
+
+use crate::gemm::backend::Backend;
+use crate::util::mat::Matrix;
+
+/// What the policy decided for a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PolicyDecision {
+    pub backend: Backend,
+    /// Residual scaling exponent for cube paths (ignored otherwise).
+    pub scale_exp: i32,
+    /// Unbiased exponent range observed in the operands, if any finite
+    /// non-zero entry exists.
+    pub e_min: Option<i32>,
+    pub e_max: Option<i32>,
+}
+
+/// Range-aware precision selection.
+#[derive(Debug, Clone)]
+pub struct PrecisionPolicy {
+    /// Relative-error budget the caller can tolerate; `None` = best
+    /// effort (always precision-recovery).
+    pub error_budget: Option<f64>,
+    /// Default backend for in-range inputs.
+    pub default_backend: Backend,
+}
+
+impl Default for PrecisionPolicy {
+    fn default() -> Self {
+        PrecisionPolicy { error_budget: None, default_backend: Backend::CubeTermwise }
+    }
+}
+
+/// Unbiased exponent of a finite non-zero f32.
+fn exponent_of(v: f32) -> Option<i32> {
+    if v == 0.0 || !v.is_finite() {
+        return None;
+    }
+    Some(((v.to_bits() >> 23) & 0xff) as i32 - 127)
+}
+
+/// Observed exponent range over both operands.
+pub fn exponent_range(a: &Matrix<f32>, b: &Matrix<f32>) -> (Option<i32>, Option<i32>) {
+    let mut e_min = None;
+    let mut e_max = None;
+    for v in a.as_slice().iter().chain(b.as_slice().iter()) {
+        if let Some(e) = exponent_of(*v) {
+            e_min = Some(e_min.map_or(e, |m: i32| m.min(e)));
+            e_max = Some(e_max.map_or(e, |m: i32| m.max(e)));
+        }
+    }
+    (e_min, e_max)
+}
+
+impl PrecisionPolicy {
+    /// Decide the path for `(a, b)`.
+    pub fn decide(&self, a: &Matrix<f32>, b: &Matrix<f32>) -> PolicyDecision {
+        let (e_min, e_max) = exponent_range(a, b);
+        let (lo, hi) = match (e_min, e_max) {
+            (Some(lo), Some(hi)) => (lo, hi),
+            _ => {
+                // All zeros: any path is exact; use the cheapest.
+                return PolicyDecision {
+                    backend: Backend::Fp16,
+                    scale_exp: 12,
+                    e_min,
+                    e_max,
+                };
+            }
+        };
+
+        // Out of the FP16 high-component range → FP32 fallback (Sec 3.1:
+        // "inputs larger than the FP16 maximum may overflow ..."). The
+        // low side falls back when *all* magnitudes sit below 2^-12:
+        // there the high component is (or nearly is) subnormal and the
+        // contiguous high+low mantissa tops out well under 22 bits —
+        // growing s_b cannot recover it (both parts would need scaling,
+        // which the paper leaves out of scope). Measured in
+        // `experiments::ablations::run_dynamic_scaling`.
+        if hi > 15 || hi < -12 || lo < -24 {
+            return PolicyDecision { backend: Backend::Fp32, scale_exp: 0, e_min, e_max };
+        }
+
+        // An explicit error budget of >= ~2^-11 is satisfiable by one
+        // FP16 pass — three times cheaper than the cube path.
+        if let Some(budget) = self.error_budget {
+            if budget >= 2f64.powi(-11) {
+                return PolicyDecision { backend: Backend::Fp16, scale_exp: 0, e_min, e_max };
+            }
+        }
+
+        // Eq. (6) upper bound: s_b <= 15 + 12 - e_max. Prefer the paper's
+        // default 12 and shrink it only when large inputs force it
+        // (growing beyond 12 for small inputs buys nothing — the high
+        // component's subnormal quantization is the binding constraint
+        // there, see the fallback above).
+        let sb_hi = 27 - hi;
+        let scale_exp = 12.min(sb_hi).max(0);
+        PolicyDecision { backend: self.default_backend, scale_exp, e_min, e_max }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn mat_with_exponents(es: &[i32]) -> Matrix<f32> {
+        let mut rng = Rng::new(1);
+        Matrix::from_fn(1, es.len(), |_, j| rng.f32_with_exponent(es[j]))
+    }
+
+    #[test]
+    fn moderate_range_uses_cube_with_sb12() {
+        let a = mat_with_exponents(&[-3, 0, 5]);
+        let b = mat_with_exponents(&[-1, 2, 3]);
+        let d = PrecisionPolicy::default().decide(&a, &b);
+        assert_eq!(d.backend, Backend::CubeTermwise);
+        assert_eq!(d.scale_exp, 12);
+        assert_eq!(d.e_min, Some(-3));
+        assert_eq!(d.e_max, Some(5));
+    }
+
+    #[test]
+    fn oversized_inputs_fall_back_to_fp32() {
+        let a = mat_with_exponents(&[0, 17]); // 2^17 > fp16 max
+        let b = mat_with_exponents(&[0]);
+        let d = PrecisionPolicy::default().decide(&a, &b);
+        assert_eq!(d.backend, Backend::Fp32);
+    }
+
+    #[test]
+    fn subnormal_range_falls_back_to_fp32() {
+        let a = mat_with_exponents(&[-30]);
+        let b = mat_with_exponents(&[0]);
+        let d = PrecisionPolicy::default().decide(&a, &b);
+        assert_eq!(d.backend, Backend::Fp32);
+    }
+
+    #[test]
+    fn large_inputs_shrink_scale_exp() {
+        // e_max = 15 → s_b ≤ 27 - 15 = 12 still; e_max = 14..15 fine,
+        // but a *range-bound* window with e_max=15 keeps 12; verify the
+        // shrink kicks in via a synthetic bound: e_max = 20 is fp32
+        // already, so test sb_hi via e_max=15 staying 12.
+        let a = mat_with_exponents(&[15]);
+        let b = mat_with_exponents(&[0]);
+        let d = PrecisionPolicy::default().decide(&a, &b);
+        assert_eq!(d.backend, Backend::CubeTermwise);
+        assert_eq!(d.scale_exp, 12);
+    }
+
+    #[test]
+    fn tiny_inputs_fall_back_to_fp32() {
+        // All entries near 2^-20: the high component is fp16-subnormal,
+        // so no residual scaling can reach near-fp32 accuracy — the
+        // policy routes to FP32 instead (measured justification in
+        // experiments::ablations::run_dynamic_scaling).
+        let a = mat_with_exponents(&[-20, -19]);
+        let b = mat_with_exponents(&[-20]);
+        let d = PrecisionPolicy::default().decide(&a, &b);
+        assert_eq!(d.backend, Backend::Fp32);
+        // Mixed range with large entries present stays on the cube path.
+        let a2 = mat_with_exponents(&[-20, 0]);
+        let d2 = PrecisionPolicy::default().decide(&a2, &b);
+        assert_eq!(d2.backend, Backend::CubeTermwise);
+    }
+
+    #[test]
+    fn zero_matrices_take_cheapest_path() {
+        let a: Matrix<f32> = Matrix::zeros(4, 4);
+        let b: Matrix<f32> = Matrix::zeros(4, 4);
+        let d = PrecisionPolicy::default().decide(&a, &b);
+        assert_eq!(d.backend, Backend::Fp16);
+    }
+
+    #[test]
+    fn loose_error_budget_selects_fp16() {
+        let a = mat_with_exponents(&[0, 1]);
+        let b = mat_with_exponents(&[0]);
+        let p = PrecisionPolicy { error_budget: Some(1e-3), ..Default::default() };
+        assert_eq!(p.decide(&a, &b).backend, Backend::Fp16);
+        let tight = PrecisionPolicy { error_budget: Some(1e-7), ..Default::default() };
+        assert_eq!(tight.decide(&a, &b).backend, Backend::CubeTermwise);
+    }
+
+    #[test]
+    fn fallback_preserves_accuracy_at_tiny_exponents() {
+        // End-to-end: the policy's routing beats forcing the cube path
+        // for inputs below the paper's supported window.
+        use crate::gemm::backend::GemmBackend;
+        use crate::gemm::cube::{cube_gemm, Accumulation};
+        use crate::gemm::dgemm::dgemm_of_f32;
+        use crate::gemm::error::relative_error;
+        use crate::softfloat::split::SplitConfig;
+        let mut rng = Rng::new(9);
+        let a = Matrix::from_fn(32, 32, |_, _| rng.f32_with_exponent(-20));
+        let b = Matrix::from_fn(32, 32, |_, _| rng.f32_with_exponent(-20));
+        let d = PrecisionPolicy::default().decide(&a, &b);
+        let c_ref = dgemm_of_f32(&a, &b);
+        let err_policy = relative_error(
+            &c_ref,
+            &GemmBackend::new(d.backend).with_scale(d.scale_exp).gemm(&a, &b).to_f64(),
+        );
+        let err_forced_cube = relative_error(
+            &c_ref,
+            &cube_gemm(&a, &b, SplitConfig::with_scale(12), Accumulation::Termwise).to_f64(),
+        );
+        assert!(
+            err_policy < err_forced_cube / 10.0,
+            "policy {err_policy} vs forced cube {err_forced_cube}"
+        );
+    }
+}

@@ -1,0 +1,82 @@
+//! Request/response types of the GEMM service.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+use crate::gemm::backend::Backend;
+use crate::util::mat::Matrix;
+
+/// Shape key used for batching: requests with equal keys can execute in
+/// the same batch (same executable / same kernel configuration).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ShapeKey {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl ShapeKey {
+    pub fn of(a: &Matrix<f32>, b: &Matrix<f32>) -> ShapeKey {
+        ShapeKey { m: a.rows(), k: a.cols(), n: b.cols() }
+    }
+
+    pub fn flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.k as f64 * self.n as f64
+    }
+}
+
+/// A GEMM job submitted to the service.
+pub struct GemmRequest {
+    pub id: u64,
+    pub a: Matrix<f32>,
+    pub b: Matrix<f32>,
+    /// Fixed precision path, or `None` to let the policy decide.
+    pub backend: Option<Backend>,
+    /// When the request entered the service (for latency accounting).
+    pub submitted: Instant,
+    /// Where to deliver the result.
+    pub reply: Sender<GemmResponse>,
+}
+
+impl GemmRequest {
+    pub fn shape(&self) -> ShapeKey {
+        ShapeKey::of(&self.a, &self.b)
+    }
+}
+
+/// The service's answer.
+#[derive(Debug)]
+pub struct GemmResponse {
+    pub id: u64,
+    pub result: Result<Matrix<f32>, String>,
+    /// Which path actually executed.
+    pub backend: Backend,
+    /// Residual scaling exponent used (cube paths).
+    pub scale_exp: i32,
+    /// End-to-end latency in seconds.
+    pub latency: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_key_of_operands() {
+        let a: Matrix<f32> = Matrix::zeros(3, 5);
+        let b: Matrix<f32> = Matrix::zeros(5, 7);
+        let k = ShapeKey::of(&a, &b);
+        assert_eq!(k, ShapeKey { m: 3, k: 5, n: 7 });
+        assert_eq!(k.flops(), 2.0 * 3.0 * 5.0 * 7.0);
+    }
+
+    #[test]
+    fn shape_keys_hash_and_order() {
+        use std::collections::HashSet;
+        let mut s = HashSet::new();
+        s.insert(ShapeKey { m: 1, k: 2, n: 3 });
+        s.insert(ShapeKey { m: 1, k: 2, n: 3 });
+        assert_eq!(s.len(), 1);
+        assert!(ShapeKey { m: 1, k: 2, n: 3 } < ShapeKey { m: 2, k: 0, n: 0 });
+    }
+}

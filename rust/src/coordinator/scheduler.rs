@@ -1,0 +1,118 @@
+//! Row-block tile scheduler.
+//!
+//! Mirrors how the Ascend kernel distributes `b_m` row blocks across the
+//! 32 AI cores (Algorithm 1's outer parallel loop): a GEMM is cut into
+//! row-block tiles, placed on per-worker queues with a longest-
+//! processing-time-first heuristic, and executed by the worker pool.
+
+use crate::coordinator::request::ShapeKey;
+
+/// One schedulable tile: rows `[row_start, row_end)` of a GEMM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tile {
+    pub row_start: usize,
+    pub row_end: usize,
+}
+
+impl Tile {
+    pub fn rows(&self) -> usize {
+        self.row_end - self.row_start
+    }
+}
+
+/// Cut `m` rows into tiles of at most `block_m` rows.
+pub fn tiles_of(m: usize, block_m: usize) -> Vec<Tile> {
+    assert!(block_m > 0);
+    (0..m.div_ceil(block_m))
+        .map(|i| Tile { row_start: i * block_m, row_end: ((i + 1) * block_m).min(m) })
+        .collect()
+}
+
+/// Assign tiles to `workers` queues, LPT-first (largest tile to the
+/// currently-least-loaded worker), returning per-worker tile lists.
+/// Load is measured in rows × k × n FLOPs-proportional units.
+pub fn assign(tiles: &[Tile], shape: ShapeKey, workers: usize) -> Vec<Vec<Tile>> {
+    assert!(workers > 0);
+    let mut queues: Vec<Vec<Tile>> = vec![Vec::new(); workers];
+    let mut load = vec![0usize; workers];
+    let mut sorted: Vec<Tile> = tiles.to_vec();
+    sorted.sort_by_key(|t| std::cmp::Reverse(t.rows()));
+    for t in sorted {
+        let (idx, _) = load.iter().enumerate().min_by_key(|(_, &l)| l).unwrap();
+        load[idx] += t.rows() * shape.k * shape.n;
+        queues[idx].push(t);
+    }
+    queues
+}
+
+/// Imbalance of an assignment: max-load / mean-load (1.0 = perfect).
+pub fn imbalance(queues: &[Vec<Tile>], shape: ShapeKey) -> f64 {
+    let loads: Vec<f64> = queues
+        .iter()
+        .map(|q| q.iter().map(|t| (t.rows() * shape.k * shape.n) as f64).sum())
+        .collect();
+    let max = loads.iter().cloned().fold(0.0, f64::max);
+    let mean = loads.iter().sum::<f64>() / loads.len() as f64;
+    if mean == 0.0 {
+        1.0
+    } else {
+        max / mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(m: usize) -> ShapeKey {
+        ShapeKey { m, k: 64, n: 64 }
+    }
+
+    #[test]
+    fn tiles_cover_all_rows_disjointly() {
+        let ts = tiles_of(1000, 96);
+        assert_eq!(ts.first().unwrap().row_start, 0);
+        assert_eq!(ts.last().unwrap().row_end, 1000);
+        for w in ts.windows(2) {
+            assert_eq!(w[0].row_end, w[1].row_start);
+        }
+        assert_eq!(ts.iter().map(Tile::rows).sum::<usize>(), 1000);
+        // Last tile is the remainder.
+        assert_eq!(ts.last().unwrap().rows(), 1000 % 96);
+    }
+
+    #[test]
+    fn exact_division_has_uniform_tiles() {
+        let ts = tiles_of(192, 96);
+        assert_eq!(ts.len(), 2);
+        assert!(ts.iter().all(|t| t.rows() == 96));
+    }
+
+    #[test]
+    fn assignment_covers_all_tiles() {
+        let ts = tiles_of(1000, 64);
+        let qs = assign(&ts, key(1000), 4);
+        assert_eq!(qs.len(), 4);
+        let total: usize = qs.iter().map(|q| q.iter().map(Tile::rows).sum::<usize>()).sum();
+        assert_eq!(total, 1000);
+    }
+
+    #[test]
+    fn assignment_is_balanced() {
+        let ts = tiles_of(32 * 176, 176); // the 910A regime: 32 equal blocks
+        let qs = assign(&ts, key(32 * 176), 32);
+        assert!((imbalance(&qs, key(32 * 176)) - 1.0).abs() < 1e-12);
+        // Uneven case stays within one tile of perfect.
+        let ts = tiles_of(33 * 176, 176);
+        let qs = assign(&ts, key(33 * 176), 32);
+        let imb = imbalance(&qs, key(33 * 176));
+        assert!(imb <= 2.0, "imbalance {imb}");
+    }
+
+    #[test]
+    fn single_worker_gets_everything() {
+        let ts = tiles_of(500, 128);
+        let qs = assign(&ts, key(500), 1);
+        assert_eq!(qs[0].len(), ts.len());
+    }
+}

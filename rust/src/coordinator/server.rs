@@ -1,0 +1,330 @@
+//! The GEMM service: submission API, dispatcher thread, worker pool.
+//!
+//! Architecture (std threads; the image has no tokio):
+//!
+//! ```text
+//! clients --submit()--> dispatcher --(batch by shape / policy)--> workers
+//!                                                              \--> reply channels
+//! ```
+//!
+//! The dispatcher owns the [`Batcher`]; full or expired batches go to a
+//! work queue consumed by `n_workers` threads. Each worker executes the
+//! batch through the precision path chosen by the [`PrecisionPolicy`]
+//! (or the request's explicit backend) on the native numerics engine.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::{Batcher, BatcherConfig};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::policy::PrecisionPolicy;
+use crate::coordinator::request::{GemmRequest, GemmResponse};
+use crate::gemm::backend::{Backend, GemmBackend};
+use crate::util::mat::Matrix;
+
+/// Service configuration.
+#[derive(Debug, Clone, Default)]
+pub struct ServiceConfig {
+    pub batcher: BatcherConfig,
+    pub policy: PrecisionPolicy,
+    /// Worker threads (0 = available parallelism).
+    pub n_workers: usize,
+}
+
+enum DispatchMsg {
+    Request(GemmRequest),
+    Shutdown,
+}
+
+/// Handle to a running GEMM service.
+pub struct GemmService {
+    tx: Sender<DispatchMsg>,
+    next_id: AtomicU64,
+    metrics: Arc<Metrics>,
+    dispatcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl GemmService {
+    /// Start the dispatcher and worker pool.
+    pub fn start(cfg: ServiceConfig) -> GemmService {
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = channel::<DispatchMsg>();
+        let (work_tx, work_rx) = channel::<Vec<GemmRequest>>();
+        let work_rx = Arc::new(Mutex::new(work_rx));
+
+        let n_workers = if cfg.n_workers == 0 {
+            crate::util::threads::num_threads()
+        } else {
+            cfg.n_workers
+        };
+
+        let mut workers = Vec::with_capacity(n_workers);
+        for _ in 0..n_workers {
+            let work_rx = work_rx.clone();
+            let metrics = metrics.clone();
+            let policy = cfg.policy.clone();
+            workers.push(std::thread::spawn(move || worker_loop(work_rx, metrics, policy)));
+        }
+
+        let metrics_d = metrics.clone();
+        let batcher_cfg = cfg.batcher.clone();
+        let dispatcher = std::thread::spawn(move || {
+            dispatcher_loop(rx, work_tx, batcher_cfg, metrics_d);
+        });
+
+        GemmService {
+            tx,
+            next_id: AtomicU64::new(1),
+            metrics,
+            dispatcher: Some(dispatcher),
+            workers,
+        }
+    }
+
+    /// Submit a GEMM; returns (request id, receiver for the response).
+    pub fn submit(
+        &self,
+        a: Matrix<f32>,
+        b: Matrix<f32>,
+        backend: Option<Backend>,
+    ) -> (u64, Receiver<GemmResponse>) {
+        assert_eq!(a.cols(), b.rows(), "inner dimensions must match");
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = channel();
+        let req = GemmRequest { id, a, b, backend, submitted: Instant::now(), reply };
+        self.tx
+            .send(DispatchMsg::Request(req))
+            .expect("service dispatcher is gone");
+        (id, rx)
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn gemm_blocking(
+        &self,
+        a: Matrix<f32>,
+        b: Matrix<f32>,
+        backend: Option<Backend>,
+    ) -> GemmResponse {
+        let (_, rx) = self.submit(a, b, backend);
+        rx.recv().expect("worker dropped the reply channel")
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Stop accepting work, drain, and join all threads.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(DispatchMsg::Shutdown);
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for GemmService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(DispatchMsg::Shutdown);
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn dispatcher_loop(
+    rx: Receiver<DispatchMsg>,
+    work_tx: Sender<Vec<GemmRequest>>,
+    batcher_cfg: BatcherConfig,
+    metrics: Arc<Metrics>,
+) {
+    let mut batcher = Batcher::new(batcher_cfg);
+    loop {
+        let timeout = batcher
+            .next_deadline(Instant::now())
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(DispatchMsg::Request(req)) => {
+                if let Some(batch) = batcher.push(req) {
+                    metrics.record_batch();
+                    if work_tx.send(batch).is_err() {
+                        return;
+                    }
+                }
+            }
+            Ok(DispatchMsg::Shutdown) => {
+                for batch in batcher.flush_all() {
+                    metrics.record_batch();
+                    let _ = work_tx.send(batch);
+                }
+                return; // dropping work_tx stops the workers
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                for batch in batcher.flush_expired(Instant::now()) {
+                    metrics.record_batch();
+                    if work_tx.send(batch).is_err() {
+                        return;
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                for batch in batcher.flush_all() {
+                    metrics.record_batch();
+                    let _ = work_tx.send(batch);
+                }
+                return;
+            }
+        }
+    }
+}
+
+fn worker_loop(
+    work_rx: Arc<Mutex<Receiver<Vec<GemmRequest>>>>,
+    metrics: Arc<Metrics>,
+    policy: PrecisionPolicy,
+) {
+    loop {
+        // Hold the lock only while receiving, not while computing.
+        let batch = match work_rx.lock().unwrap().recv() {
+            Ok(b) => b,
+            Err(_) => return,
+        };
+        for req in batch {
+            let decision = match req.backend {
+                Some(b) => crate::coordinator::policy::PolicyDecision {
+                    backend: b,
+                    scale_exp: 12,
+                    e_min: None,
+                    e_max: None,
+                },
+                None => policy.decide(&req.a, &req.b),
+            };
+            let exec = GemmBackend::new(decision.backend).with_scale(decision.scale_exp);
+            let shape = req.shape();
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                exec.gemm(&req.a, &req.b)
+            }))
+            .map_err(|_| "gemm panicked".to_string());
+            let latency = req.submitted.elapsed().as_secs_f64();
+            metrics.record_request(latency, shape.flops(), result.is_ok());
+            let _ = req.reply.send(GemmResponse {
+                id: req.id,
+                result,
+                backend: decision.backend,
+                scale_exp: decision.scale_exp,
+                latency,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::dgemm::dgemm_of_f32;
+    use crate::gemm::error::relative_error;
+    use crate::util::rng::Rng;
+
+    fn small_cfg() -> ServiceConfig {
+        ServiceConfig {
+            batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+            policy: PrecisionPolicy::default(),
+            n_workers: 2,
+        }
+    }
+
+    #[test]
+    fn serves_one_request_accurately() {
+        let svc = GemmService::start(small_cfg());
+        let mut rng = Rng::new(1);
+        let a = Matrix::random_symmetric(32, 48, 0, &mut rng);
+        let b = Matrix::random_symmetric(48, 24, 0, &mut rng);
+        let resp = svc.gemm_blocking(a.clone(), b.clone(), None);
+        assert_eq!(resp.backend, Backend::CubeTermwise);
+        assert_eq!(resp.scale_exp, 12);
+        let c = resp.result.unwrap();
+        let err = relative_error(&dgemm_of_f32(&a, &b), &c.to_f64());
+        assert!(err < 1e-6, "err={err}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn serves_many_mixed_shapes() {
+        let svc = GemmService::start(small_cfg());
+        let mut rng = Rng::new(2);
+        let mut rxs = Vec::new();
+        for i in 0..20 {
+            let (m, k, n) = if i % 2 == 0 { (16, 16, 16) } else { (24, 32, 8) };
+            let a = Matrix::random_symmetric(m, k, 0, &mut rng);
+            let b = Matrix::random_symmetric(k, n, 0, &mut rng);
+            rxs.push(svc.submit(a, b, None));
+        }
+        let mut ids = Vec::new();
+        for (id, rx) in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert_eq!(resp.id, id);
+            assert!(resp.result.is_ok());
+            ids.push(id);
+        }
+        assert_eq!(ids.len(), 20);
+        let report = svc.metrics().report();
+        assert_eq!(report.requests, 20);
+        assert_eq!(report.errors, 0);
+        assert!(report.batches >= 5, "batches={}", report.batches);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn explicit_backend_is_honored() {
+        let svc = GemmService::start(small_cfg());
+        let mut rng = Rng::new(3);
+        let a = Matrix::random_symmetric(16, 16, 0, &mut rng);
+        let b = Matrix::random_symmetric(16, 16, 0, &mut rng);
+        for bk in Backend::ALL {
+            let resp = svc.gemm_blocking(a.clone(), b.clone(), Some(bk));
+            assert_eq!(resp.backend, bk);
+            assert!(resp.result.is_ok());
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn out_of_range_inputs_route_to_fp32() {
+        let svc = GemmService::start(small_cfg());
+        let a = Matrix::from_fn(8, 8, |_, _| 1e6f32); // beyond fp16 max
+        let b = Matrix::from_fn(8, 8, |_, _| 1.0f32);
+        let resp = svc.gemm_blocking(a, b, None);
+        assert_eq!(resp.backend, Backend::Fp32);
+        let c = resp.result.unwrap();
+        assert_eq!(c.get(0, 0), 8e6);
+        svc.shutdown();
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dimensions")]
+    fn dimension_mismatch_rejected_at_submit() {
+        let svc = GemmService::start(small_cfg());
+        let a: Matrix<f32> = Matrix::zeros(4, 5);
+        let b: Matrix<f32> = Matrix::zeros(6, 4);
+        let _ = svc.submit(a, b, None);
+    }
+
+    #[test]
+    fn drop_without_shutdown_joins_cleanly() {
+        let svc = GemmService::start(small_cfg());
+        let mut rng = Rng::new(5);
+        let a = Matrix::random_symmetric(8, 8, 0, &mut rng);
+        let b = Matrix::random_symmetric(8, 8, 0, &mut rng);
+        let _ = svc.gemm_blocking(a, b, None);
+        drop(svc); // Drop impl must not hang
+    }
+}

@@ -1,0 +1,83 @@
+//! Fig. 10: roofline analysis of single- vs double-buffered SGEMM-cube
+//! on the 910A model — OI (Eq. 10), P_roof (Eq. 11), and the simulated
+//! achieved throughput for a spread of block configurations.
+
+use crate::experiments::report::{fixed, Table};
+use crate::sim::blocking::{BlockConfig, GemmShape};
+use crate::sim::chip::Chip;
+use crate::sim::executor::simulate_sgemm_cube;
+use crate::sim::pipeline::Buffering;
+use crate::sim::roofline::knee_oi;
+
+pub fn sweep_configs() -> Vec<BlockConfig> {
+    vec![
+        BlockConfig::new(48, 64, 48),
+        BlockConfig::new(64, 64, 64),
+        BlockConfig::new(96, 64, 96),
+        BlockConfig::new(128, 64, 128),
+        BlockConfig::new(160, 64, 160),
+        BlockConfig::paper_best(),
+        BlockConfig::new(96, 128, 96),
+        BlockConfig::new(128, 32, 128),
+    ]
+}
+
+pub fn run(shape: GemmShape) -> Table {
+    let chip = Chip::ascend_910a();
+    let mut t = Table::new(
+        &format!(
+            "Fig 10: roofline, 910A (knee OI = {:.1} F/B, FP32-equiv peak = {:.1} TF/s)",
+            knee_oi(&chip),
+            chip.fp32_equiv_peak_tflops()
+        ),
+        &["bm", "bk", "bn", "OI (F/B)", "P_roof", "single TF/s", "double TF/s"],
+    );
+    for cfg in sweep_configs() {
+        let s = simulate_sgemm_cube(&chip, shape, cfg, Buffering::Single);
+        let d = simulate_sgemm_cube(&chip, shape, cfg, Buffering::Double);
+        t.row(vec![
+            cfg.bm.to_string(),
+            cfg.bk.to_string(),
+            cfg.bn.to_string(),
+            fixed(d.oi, 1),
+            fixed(d.roof, 1),
+            fixed(s.tflops, 1),
+            fixed(d.tflops, 1),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape() -> GemmShape {
+        GemmShape::new(5632, 4096, 5632)
+    }
+
+    #[test]
+    fn all_configs_compute_bound() {
+        // Paper: all measured OI values lie above the knee.
+        let chip = Chip::ascend_910a();
+        let t = run(shape());
+        for r in &t.rows {
+            let oi: f64 = r[3].parse().unwrap();
+            assert!(oi > knee_oi(&chip), "OI {oi} below knee");
+            let roof: f64 = r[4].parse().unwrap();
+            assert_eq!(roof, 85.3, "roof should be the compute ceiling");
+        }
+    }
+
+    #[test]
+    fn double_buffering_improves_but_stays_below_roof() {
+        let t = run(shape());
+        for r in &t.rows {
+            let s: f64 = r[5].parse().unwrap();
+            let d: f64 = r[6].parse().unwrap();
+            let roof: f64 = r[4].parse().unwrap();
+            assert!(d >= s, "double {d} < single {s}");
+            assert!(d < roof, "double {d} must stay below the roof {roof}");
+        }
+    }
+}

@@ -1,0 +1,86 @@
+//! Fig. 6: impact of blocking size on `N_fused` and the fusion factor
+//! `f`, over the feasible `(b_m, b_k, b_n)` space of Eq. (12).
+
+use crate::experiments::report::{fixed, Table};
+use crate::sim::blocking::{feasible_blocks, optimal_bm, BlockConfig};
+use crate::sim::chip::Chip;
+
+/// Sweep N_fused and f as a function of `b_m·b_k` (square-ish blocks,
+/// b_n = b_m, as in the paper's plot).
+pub fn run() -> Table {
+    let chip = Chip::ascend_910a();
+    let mut t = Table::new(
+        "Fig 6: N_fused and fusion factor f vs blocking size (910A)",
+        &["bm", "bk", "bn", "bm*bk", "N_fused", "f"],
+    );
+    for cfg in feasible_blocks(&chip, 256) {
+        // The paper plots bn/bm in [0.5, 2]; keep the square diagonal
+        // plus the paper's best block for readability.
+        if cfg.bn != cfg.bm && cfg != BlockConfig::paper_best() {
+            continue;
+        }
+        if cfg.bk != 64 && cfg.bk != 128 && cfg.bk != 32 {
+            continue;
+        }
+        let nf = cfg.n_fused(&chip);
+        if nf == 0 {
+            continue;
+        }
+        t.row(vec![
+            cfg.bm.to_string(),
+            cfg.bk.to_string(),
+            cfg.bn.to_string(),
+            (cfg.bm * cfg.bk).to_string(),
+            nf.to_string(),
+            fixed(cfg.fusion_factor(&chip), 4),
+        ]);
+    }
+    t
+}
+
+/// The optimal-b_m derivation printed alongside (Sec. 5.1.1).
+pub fn optimal_bm_summary() -> String {
+    let chip = Chip::ascend_910a();
+    let opt = optimal_bm(&chip);
+    format!(
+        "b_m,opt = sqrt(f*L1 / 2*N_core) = {opt:.1}  (paper: 86 < b_m,opt < 90, rounded to 96)"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nfused_decreases_with_block_area() {
+        let t = run();
+        // Extract (bm*bk, N_fused) at bk = 64 and check monotone decrease.
+        let mut pairs: Vec<(usize, u64)> = t
+            .rows
+            .iter()
+            .filter(|r| r[1] == "64" && r[0] == r[2])
+            .map(|r| (r[3].parse().unwrap(), r[4].parse().unwrap()))
+            .collect();
+        pairs.sort();
+        for w in pairs.windows(2) {
+            assert!(w[1].1 <= w[0].1, "N_fused not decreasing: {pairs:?}");
+        }
+    }
+
+    #[test]
+    fn fusion_factor_in_paper_band_for_moderate_blocks() {
+        let t = run();
+        for r in &t.rows {
+            let bm: usize = r[0].parse().unwrap();
+            let f: f64 = r[5].parse().unwrap();
+            if bm >= 80 {
+                assert!((0.85..=1.0).contains(&f), "bm={bm} f={f}");
+            }
+        }
+    }
+
+    #[test]
+    fn summary_mentions_96() {
+        assert!(optimal_bm_summary().contains("96"));
+    }
+}

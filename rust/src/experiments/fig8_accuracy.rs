@@ -1,0 +1,142 @@
+//! Fig. 8: relative error vs the FP32 offset exponent, under symmetric
+//! `U[-2^e, 2^e]` and non-negative `U[0, 2^e]` sampling, for FP16 HGEMM,
+//! FP32 SGEMM and SGEMM-cube (elementwise/termwise × s_b ∈ {0, 6, 12}).
+
+use crate::experiments::report::{sci, Table};
+use crate::gemm::cube::{cube_gemm, Accumulation};
+use crate::gemm::dgemm::dgemm_of_f32;
+use crate::gemm::error::relative_error;
+use crate::gemm::hgemm::{hgemm, AccumulateMode};
+use crate::gemm::sgemm::sgemm;
+use crate::softfloat::split::SplitConfig;
+use crate::util::mat::Matrix;
+use crate::util::rng::Rng;
+
+/// Input distribution of Sec. 6.1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sampling {
+    Symmetric,
+    NonNegative,
+}
+
+impl Sampling {
+    pub fn name(self) -> &'static str {
+        match self {
+            Sampling::Symmetric => "U[-2^e, 2^e]",
+            Sampling::NonNegative => "U[0, 2^e]",
+        }
+    }
+
+    fn matrix(self, r: usize, c: usize, e: i32, rng: &mut Rng) -> Matrix<f32> {
+        match self {
+            Sampling::Symmetric => Matrix::random_symmetric(r, c, e, rng),
+            Sampling::NonNegative => Matrix::random_nonneg(r, c, e, rng),
+        }
+    }
+}
+
+/// Mean relative error over `seeds` trials at matrix size n³.
+#[allow(clippy::too_many_arguments)]
+fn mean_err(
+    method: &dyn Fn(&Matrix<f32>, &Matrix<f32>) -> Matrix<f32>,
+    sampling: Sampling,
+    n: usize,
+    e: i32,
+    seeds: u64,
+) -> f64 {
+    let mut total = 0.0;
+    for s in 0..seeds {
+        let mut rng = Rng::new(1000 + s);
+        let a = sampling.matrix(n, n, e, &mut rng);
+        let b = sampling.matrix(n, n, e, &mut rng);
+        let c_ref = dgemm_of_f32(&a, &b);
+        total += relative_error(&c_ref, &method(&a, &b).to_f64());
+    }
+    total / seeds as f64
+}
+
+/// Run the Fig. 8 sweep. `n` is the matrix size (paper uses larger
+/// matrices; the error *ordering* is size-independent, see Fig. 9a).
+pub fn run(sampling: Sampling, n: usize, exponents: &[i32], seeds: u64) -> Table {
+    let mut t = Table::new(
+        &format!("Fig 8: relative error vs offset exponent, {} (n={n})", sampling.name()),
+        &[
+            "e", "hgemm", "sgemm-fp32",
+            "cube-el sb=0", "cube-tw sb=0",
+            "cube-el sb=6", "cube-tw sb=6",
+            "cube-el sb=12", "cube-tw sb=12",
+        ],
+    );
+    for &e in exponents {
+        let h = mean_err(&|a, b| hgemm(a, b, AccumulateMode::Fp32Rn), sampling, n, e, seeds);
+        let s = mean_err(&|a, b| sgemm(a, b), sampling, n, e, seeds);
+        let cube = |sb: i32, acc: Accumulation| {
+            mean_err(
+                &move |a: &Matrix<f32>, b: &Matrix<f32>| {
+                    cube_gemm(a, b, SplitConfig::with_scale(sb), acc)
+                },
+                sampling,
+                n,
+                e,
+                seeds,
+            )
+        };
+        t.row(vec![
+            e.to_string(),
+            sci(h),
+            sci(s),
+            sci(cube(0, Accumulation::Elementwise)),
+            sci(cube(0, Accumulation::Termwise)),
+            sci(cube(6, Accumulation::Elementwise)),
+            sci(cube(6, Accumulation::Termwise)),
+            sci(cube(12, Accumulation::Elementwise)),
+            sci(cube(12, Accumulation::Termwise)),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(t: &Table, row: usize, col: usize) -> f64 {
+        t.rows[row][col].parse().unwrap()
+    }
+
+    #[test]
+    fn error_ordering_matches_paper_at_e0() {
+        // hgemm ~1e-4 >> cube sb=12 ~ sgemm; sb=0 worse than sb=12.
+        let t = run(Sampling::Symmetric, 64, &[0], 2);
+        let h = parse(&t, 0, 1);
+        let s = parse(&t, 0, 2);
+        let c0 = parse(&t, 0, 4);
+        let c12 = parse(&t, 0, 8);
+        assert!(h > 1e-5, "hgemm err {h}");
+        assert!(c12 < h / 50.0, "cube {c12} vs hgemm {h}");
+        assert!(c12 < s * 10.0, "cube {c12} vs sgemm {s}");
+        assert!(c0 >= c12, "sb=0 {c0} vs sb=12 {c12}");
+    }
+
+    #[test]
+    fn scaling_gap_grows_at_negative_exponents() {
+        // Paper: s_b=12 improves 1–2 orders at low exponents; s_b=6
+        // insufficient.
+        let t = run(Sampling::Symmetric, 48, &[-10], 2);
+        let c0 = parse(&t, 0, 4);
+        let c6 = parse(&t, 0, 6);
+        let c12 = parse(&t, 0, 8);
+        assert!(c12 < c0 / 10.0, "sb12 {c12} vs sb0 {c0}");
+        assert!(c12 <= c6, "sb12 {c12} vs sb6 {c6}");
+    }
+
+    #[test]
+    fn nonnegative_sampling_lower_relative_error() {
+        // Cancellation inflates the symmetric metric (Sec. 6.2).
+        let sym = run(Sampling::Symmetric, 48, &[0], 2);
+        let non = run(Sampling::NonNegative, 48, &[0], 2);
+        let e_sym = parse(&sym, 0, 2);
+        let e_non = parse(&non, 0, 2);
+        assert!(e_non <= e_sym, "sgemm: nonneg {e_non} vs sym {e_sym}");
+    }
+}

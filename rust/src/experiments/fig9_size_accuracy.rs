@@ -1,0 +1,90 @@
+//! Fig. 9: relative error vs matrix size at offset exponent 0.
+//! (a) m = n sweep at fixed k — error flat (accumulation depth is k);
+//! (b, c) k sweep — termwise beats elementwise and FP32 SGEMM.
+
+use crate::experiments::report::{sci, Table};
+use crate::gemm::cube::{cube_gemm, Accumulation};
+use crate::gemm::dgemm::dgemm_of_f32;
+use crate::gemm::error::relative_error;
+use crate::gemm::sgemm::sgemm;
+use crate::softfloat::split::SplitConfig;
+use crate::util::mat::Matrix;
+use crate::util::rng::Rng;
+
+fn errors_at(m: usize, k: usize, n: usize, seeds: u64) -> (f64, f64, f64) {
+    let (mut e_s, mut e_el, mut e_tw) = (0.0, 0.0, 0.0);
+    for s in 0..seeds {
+        let mut rng = Rng::new(2000 + s);
+        let a = Matrix::random_symmetric(m, k, 0, &mut rng);
+        let b = Matrix::random_symmetric(k, n, 0, &mut rng);
+        let c_ref = dgemm_of_f32(&a, &b);
+        let cfg = SplitConfig::default();
+        e_s += relative_error(&c_ref, &sgemm(&a, &b).to_f64());
+        e_el += relative_error(&c_ref, &cube_gemm(&a, &b, cfg, Accumulation::Elementwise).to_f64());
+        e_tw += relative_error(&c_ref, &cube_gemm(&a, &b, cfg, Accumulation::Termwise).to_f64());
+    }
+    (e_s / seeds as f64, e_el / seeds as f64, e_tw / seeds as f64)
+}
+
+/// Fig. 9(a): m = n sweep at fixed k.
+pub fn run_mn_sweep(sizes: &[usize], k: usize, seeds: u64) -> Table {
+    let mut t = Table::new(
+        &format!("Fig 9(a): relative error vs m=n (k={k}, e=0)"),
+        &["m=n", "sgemm-fp32", "cube-elementwise", "cube-termwise"],
+    );
+    for &mn in sizes {
+        let (s, el, tw) = errors_at(mn, k, mn, seeds);
+        t.row(vec![mn.to_string(), sci(s), sci(el), sci(tw)]);
+    }
+    t
+}
+
+/// Fig. 9(b,c): k sweep at fixed m = n.
+pub fn run_k_sweep(mn: usize, ks: &[usize], seeds: u64) -> Table {
+    let mut t = Table::new(
+        &format!("Fig 9(b,c): relative error vs k (m=n={mn}, e=0)"),
+        &["k", "sgemm-fp32", "cube-elementwise", "cube-termwise"],
+    );
+    for &k in ks {
+        let (s, el, tw) = errors_at(mn, k, mn, seeds);
+        t.row(vec![k.to_string(), sci(s), sci(el), sci(tw)]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_flat_in_mn() {
+        // Paper: varying m, n with fixed k leaves the error nearly
+        // unchanged (within 2x across the sweep).
+        let t = run_mn_sweep(&[16, 48, 96], 128, 2);
+        let errs: Vec<f64> = t.rows.iter().map(|r| r[3].parse().unwrap()).collect();
+        let (min, max) = (
+            errs.iter().cloned().fold(f64::MAX, f64::min),
+            errs.iter().cloned().fold(0.0, f64::max),
+        );
+        assert!(max / min < 3.0, "termwise spread too wide: {errs:?}");
+    }
+
+    #[test]
+    fn termwise_wins_as_k_grows() {
+        let t = run_k_sweep(24, &[64, 512, 2048], 2);
+        let last = t.rows.last().unwrap();
+        let s: f64 = last[1].parse().unwrap();
+        let el: f64 = last[2].parse().unwrap();
+        let tw: f64 = last[3].parse().unwrap();
+        assert!(tw <= el, "termwise {tw} vs elementwise {el}");
+        assert!(tw <= s * 1.5, "termwise {tw} vs sgemm {s}");
+    }
+
+    #[test]
+    fn error_grows_with_k_for_elementwise() {
+        let t = run_k_sweep(16, &[64, 2048], 2);
+        let first: f64 = t.rows[0][2].parse().unwrap();
+        let last: f64 = t.rows[1][2].parse().unwrap();
+        assert!(last > first * 0.5, "k growth should not shrink error an order: {first} -> {last}");
+    }
+}

@@ -1,0 +1,20 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (the experiment index lives in DESIGN.md §5).
+//!
+//! Each submodule exposes a `run(...)` returning printable rows plus the
+//! paper's expected anchors, so the bench binaries and the CLI `figures`
+//! subcommand print *paper vs measured* side by side.
+
+pub mod ablations;
+pub mod fig10_roofline;
+pub mod fig11_blocking_perf;
+pub mod fig12_size_scaling;
+pub mod fig2_analysis;
+pub mod fig6_blocking;
+pub mod fig8_accuracy;
+pub mod fig9_size_accuracy;
+pub mod report;
+pub mod table1;
+pub mod table2;
+
+pub use report::Table;

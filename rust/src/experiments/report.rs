@@ -1,0 +1,128 @@
+//! Plain-text table rendering + CSV export for the experiment reports.
+
+use std::fmt::Write as _;
+
+/// A simple column-aligned table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", line(&self.headers, &widths));
+        let _ = writeln!(out, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &widths));
+        }
+        out
+    }
+
+    /// CSV export (for plotting).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.headers.join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.join(","));
+        }
+        out
+    }
+
+    /// Print to stdout and optionally persist a CSV next to the bench.
+    pub fn emit(&self, csv_path: Option<&std::path::Path>) {
+        print!("{}", self.render());
+        if let Some(p) = csv_path {
+            if let Some(dir) = p.parent() {
+                let _ = std::fs::create_dir_all(dir);
+            }
+            if let Err(e) = std::fs::write(p, self.to_csv()) {
+                eprintln!("warning: could not write {p:?}: {e}");
+            } else {
+                println!("[csv] {}", p.display());
+            }
+        }
+        println!();
+    }
+}
+
+/// Format helpers shared by the figure modules.
+pub fn sci(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else {
+        format!("{v:.2e}")
+    }
+}
+
+pub fn fixed(v: f64, digits: usize) -> String {
+    format!("{v:.digits$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_table() {
+        let mut t = Table::new("demo", &["a", "long-header", "c"]);
+        t.row(vec!["1".into(), "2".into(), "3".into()]);
+        t.row(vec!["10".into(), "2000".into(), "xyz".into()]);
+        let r = t.render();
+        assert!(r.contains("== demo =="));
+        assert!(r.contains("long-header"));
+        assert_eq!(r.lines().count(), 5);
+    }
+
+    #[test]
+    fn csv_round() {
+        let mut t = Table::new("x", &["h1", "h2"]);
+        t.row(vec!["a".into(), "b".into()]);
+        assert_eq!(t.to_csv(), "h1,h2\na,b\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["h1", "h2"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn sci_and_fixed() {
+        assert_eq!(sci(0.0), "0");
+        assert_eq!(sci(1234.0), "1.23e3");
+        assert_eq!(fixed(1.23456, 2), "1.23");
+    }
+}

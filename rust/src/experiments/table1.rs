@@ -1,0 +1,59 @@
+//! Table 1: peak throughput of representative AI accelerators (TFLOP/s).
+//! Static published data, reproduced verbatim; the Ascend 910A row is
+//! cross-checked against the simulator's chip model.
+
+use crate::experiments::report::Table;
+use crate::sim::chip::Chip;
+
+/// (chip, fp16, fp32, fp64) — `None` renders as "-".
+pub const PEAKS: &[(&str, Option<f64>, Option<f64>, Option<f64>)] = &[
+    ("Nvidia H100 SXM", Some(989.0), Some(67.0), Some(34.0)),
+    ("Nvidia A100 SXM", Some(312.0), Some(19.5), Some(9.7)),
+    ("AMD MI300X", Some(1307.0), Some(163.0), Some(81.0)),
+    ("Intel Gaudi3", Some(1678.0), Some(14.3), None),
+    ("Huawei Ascend 910A", Some(256.0), None, None),
+    ("Cambricon MLU370-X8", Some(96.0), Some(24.0), None),
+    ("Baidu Kunlun XPU-R", Some(400.0), None, None),
+    ("Muxi Xiyun C500", Some(280.0), Some(36.0), None),
+    ("Shenwei SW26010-Pro", Some(55.3), Some(14.0), Some(14.0)),
+    ("Moore Threads MTT S4000", Some(100.0), Some(25.0), None),
+];
+
+fn cell(v: Option<f64>) -> String {
+    v.map(|x| format!("{x}")).unwrap_or_else(|| "-".into())
+}
+
+/// Build the table; also verifies the 910A row against the chip model.
+pub fn run() -> Table {
+    let mut t = Table::new(
+        "Table 1: peak throughput of representative AI accelerators (TFLOP/s)",
+        &["Chip Model", "FP16", "FP32", "FP64", "sim-model"],
+    );
+    let model_910a = Chip::ascend_910a().peak_tflops();
+    for (name, f16, f32_, f64_) in PEAKS {
+        let model = if *name == "Huawei Ascend 910A" {
+            format!("{model_910a:.1}")
+        } else {
+            "-".into()
+        };
+        t.row(vec![name.to_string(), cell(*f16), cell(*f32_), cell(*f64_), model]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_has_all_published_rows() {
+        let t = run();
+        assert_eq!(t.rows.len(), 10);
+        assert!(t.render().contains("Huawei Ascend 910A"));
+    }
+
+    #[test]
+    fn sim_chip_matches_published_910a_peak() {
+        assert_eq!(Chip::ascend_910a().peak_tflops(), 256.0);
+    }
+}

@@ -1,0 +1,99 @@
+//! Table 2: comparison of FP32-approximation methods. The prior-work
+//! rows are published claims (static); the SGEMM-cube row is *measured*
+//! on this reproduction: accuracy from the numerics engine, throughput
+//! from the calibrated 910A model.
+
+use crate::experiments::fig11_blocking_perf::headline;
+use crate::experiments::report::Table;
+use crate::gemm::cube::{cube_gemm, Accumulation};
+use crate::gemm::dgemm::dgemm_of_f32;
+use crate::gemm::error::relative_error;
+use crate::sim::blocking::GemmShape;
+use crate::softfloat::split::SplitConfig;
+use crate::util::mat::Matrix;
+use crate::util::rng::Rng;
+
+pub const PRIOR_WORK: &[(&str, &str, &str, &str)] = &[
+    ("Markidis et al.", "NVIDIA V100", "Truncation-based (RZ)", "2 bits"),
+    ("Feng et al.", "NVIDIA T4/RTX6000", "No hidden bit, RZ", "2 bits"),
+    ("Ootomo et al.", "NVIDIA A100", "Amplified decomposition, RN", "1 bit"),
+    ("Ma et al.", "NVIDIA V100/T4/A100", "Optimized decomposition, RN", "1 bit"),
+    ("Li et al. (QuanTensor)", "NVIDIA T4/2080Ti", "Multi-pass low-precision", "N/A"),
+    ("Lin et al. (MixPert)", "NVIDIA A100", "INT8 fixed-point, RN", "3 bits"),
+];
+
+/// Measured precision loss of this implementation in bits:
+/// `log2(err_cube / err_fp32-ulp-floor)` style estimate via direct
+/// comparison of achieved bits vs FP32's 24.
+pub fn measured_precision_bits(n: usize) -> f64 {
+    let mut rng = Rng::new(77);
+    let a = Matrix::random_symmetric(n, n, 0, &mut rng);
+    let b = Matrix::random_symmetric(n, n, 0, &mut rng);
+    let c_ref = dgemm_of_f32(&a, &b);
+    let err = relative_error(
+        &c_ref,
+        &cube_gemm(&a, &b, SplitConfig::default(), Accumulation::Termwise).to_f64(),
+    );
+    -err.log2()
+}
+
+pub fn run() -> Table {
+    let mut t = Table::new(
+        "Table 2: FP32 approximation methods (prior rows = published claims)",
+        &["Work", "Hardware", "Method", "Precision loss", "Performance"],
+    );
+    for (work, hw, method, loss) in PRIOR_WORK {
+        let perf = match *work {
+            "Markidis et al." => "trade-off study",
+            "Feng et al." => "3.13x over cuBLAS FP32",
+            "Ootomo et al." => "51 TFLOPS",
+            "Ma et al." => "64.15 TFLOPS (61.7% peak)",
+            "Li et al. (QuanTensor)" => "tunable",
+            _ => "1.72x over cuBLAS FP32",
+        };
+        t.row(vec![
+            work.to_string(),
+            hw.to_string(),
+            method.to_string(),
+            loss.to_string(),
+            perf.to_string(),
+        ]);
+    }
+    // Our measured row.
+    let shape = GemmShape::new(5632, 4096, 5632);
+    let (_, double, frac) = headline(shape);
+    let bits = measured_precision_bits(96);
+    let loss = (24.0 - bits).max(0.0);
+    t.row(vec![
+        "SGEMM-cube (this repro)".into(),
+        "Ascend 910A (simulated)".into(),
+        "Ootomo-style FP16 split, RN, s_b=12".into(),
+        format!("{loss:.1} bits ({bits:.1} achieved)"),
+        format!("{double:.1} TFLOPS, {:.0}% of 3-GEMM peak", frac * 100.0),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_contains_our_measured_row() {
+        let t = run();
+        assert_eq!(t.rows.len(), 7);
+        let ours = t.rows.last().unwrap();
+        assert!(ours[0].contains("this repro"));
+        // Paper claims "approx. 1–2 bits, range-dependent" loss.
+        let loss: f64 = ours[3].split(' ').next().unwrap().parse().unwrap();
+        assert!(loss <= 3.0, "precision loss {loss} bits");
+        // And 65.3 TFLOPS @ 77%.
+        assert!(ours[4].contains("TFLOPS"));
+    }
+
+    #[test]
+    fn measured_bits_above_21() {
+        let bits = measured_precision_bits(64);
+        assert!(bits > 21.0, "achieved {bits} bits");
+    }
+}

@@ -1,0 +1,160 @@
+//! BGEMM-cube: the paper's future-work extension to another
+//! low-precision matrix engine — a two-component **BF16** split with the
+//! same three-dominant-term reconstruction.
+//!
+//! Where it differs from the FP16 scheme:
+//!
+//! * **No residual scaling** and **no range limitation**: BF16 carries
+//!   FP32's 8-bit exponent, so both components represent any normal f32
+//!   magnitude. The Eq. (6) scaling rules — and the policy's FP32
+//!   fallbacks — become unnecessary.
+//! * **Lower accuracy ceiling**: 2×8 significand bits recover ≈ 16
+//!   mantissa bits (vs ≈ 22 for FP16+scaling), matching the trade
+//!   Ootomo & Yokota made with their TF32 full-range fallback.
+//!
+//! BF16×BF16 products are exact in FP32 (8+8 ≤ 24), so the widened-f32
+//! execution below is bit-faithful to a BF16 matrix engine with FP32
+//! accumulation.
+
+use crate::softfloat::bf16::split_bf16;
+use crate::util::mat::Matrix;
+use crate::util::threads::parallel_chunks;
+
+/// Split operands: BF16 components widened exactly to f32.
+pub struct BfSplit {
+    pub high: Matrix<f32>,
+    pub low: Matrix<f32>,
+}
+
+impl BfSplit {
+    pub fn of(m: &Matrix<f32>) -> BfSplit {
+        let mut high = Matrix::zeros(m.rows(), m.cols());
+        let mut low = Matrix::zeros(m.rows(), m.cols());
+        for i in 0..m.rows() {
+            for j in 0..m.cols() {
+                let (h, l) = split_bf16(m.get(i, j));
+                high.set(i, j, h.to_f32());
+                low.set(i, j, l.to_f32());
+            }
+        }
+        BfSplit { high, low }
+    }
+}
+
+/// `C ≈ A_h·B_h + A_h·B_l + A_l·B_h` over BF16 components (termwise
+/// accumulation; the low·low term is omitted as in Eq. 7).
+pub fn bf16_cube_gemm(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
+    assert_eq!(a.cols(), b.rows(), "inner dimensions must match");
+    let asp = BfSplit::of(a);
+    let bsp = BfSplit::of(b);
+    let (m, k) = asp.high.shape();
+    let n = bsp.high.cols();
+    let bh_t = bsp.high.transpose();
+    let bl_t = bsp.low.transpose();
+
+    let mut c = Matrix::zeros(m, n);
+    struct SendPtr(*mut f32);
+    unsafe impl Send for SendPtr {}
+    unsafe impl Sync for SendPtr {}
+    let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
+    parallel_chunks(m, |i0, i1| {
+        let cp = &cp;
+        for i in i0..i1 {
+            let ah = asp.high.row(i);
+            let al = asp.low.row(i);
+            for j in 0..n {
+                let bh = bh_t.row(j);
+                let bl = bl_t.row(j);
+                let mut s_hh = 0.0f32;
+                let mut s_corr = 0.0f32;
+                for t in 0..k {
+                    s_hh += ah[t] * bh[t];
+                    s_corr += ah[t] * bl[t] + al[t] * bh[t];
+                }
+                // SAFETY: disjoint row chunks.
+                unsafe { *cp.0.add(i * n + j) = s_hh + s_corr };
+            }
+        }
+    });
+    c
+}
+
+/// Direct one-pass BF16 GEMM (the "native BF16" baseline).
+pub fn bgemm(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
+    assert_eq!(a.cols(), b.rows(), "inner dimensions must match");
+    let ah = a.map(|v| crate::softfloat::bf16::Bf16::from_f32_rn(v).to_f32());
+    let bh = b.map(|v| crate::softfloat::bf16::Bf16::from_f32_rn(v).to_f32());
+    crate::gemm::sgemm::sgemm(&ah, &bh)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::cube::{cube_gemm, Accumulation};
+    use crate::gemm::dgemm::dgemm_of_f32;
+    use crate::gemm::error::relative_error;
+    use crate::softfloat::split::SplitConfig;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn recovers_about_16_bits_at_moderate_range() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::random_symmetric(96, 96, 0, &mut rng);
+        let b = Matrix::random_symmetric(96, 96, 0, &mut rng);
+        let c_ref = dgemm_of_f32(&a, &b);
+        let e_bf = relative_error(&c_ref, &bf16_cube_gemm(&a, &b).to_f64());
+        let e_b1 = relative_error(&c_ref, &bgemm(&a, &b).to_f64());
+        // Two-component bf16: ~1e-5 class; single bf16: ~1e-2 class.
+        assert!(e_bf < 1e-4, "bf16-cube {e_bf}");
+        assert!(e_bf < e_b1 / 50.0, "bf16-cube {e_bf} vs bgemm {e_b1}");
+    }
+
+    #[test]
+    fn fp16_cube_beats_bf16_cube_inside_the_window() {
+        // Inside the FP16 window the FP16 scheme is ~6 bits better.
+        let mut rng = Rng::new(2);
+        let a = Matrix::random_symmetric(64, 64, 0, &mut rng);
+        let b = Matrix::random_symmetric(64, 64, 0, &mut rng);
+        let c_ref = dgemm_of_f32(&a, &b);
+        let e_fp16 = relative_error(
+            &c_ref,
+            &cube_gemm(&a, &b, SplitConfig::default(), Accumulation::Termwise).to_f64(),
+        );
+        let e_bf16 = relative_error(&c_ref, &bf16_cube_gemm(&a, &b).to_f64());
+        assert!(e_fp16 < e_bf16 / 8.0, "fp16 {e_fp16} vs bf16 {e_bf16}");
+    }
+
+    #[test]
+    fn bf16_cube_works_across_the_full_exponent_range() {
+        // The extension's point: accuracy holds where the FP16 scheme
+        // cannot represent the inputs at all. (Bounded by FP32's own
+        // product range: e_a + e_b must stay below ~127, which binds any
+        // FP32-accumulating engine equally.)
+        let mut rng = Rng::new(3);
+        for e in [-55, -20, 18, 40, 60] {
+            let a = Matrix::from_fn(24, 24, |_, _| rng.f32_with_exponent(e));
+            let b = Matrix::from_fn(24, 24, |_, _| rng.f32_with_exponent(e));
+            let c_ref = dgemm_of_f32(&a, &b);
+            let err = relative_error(&c_ref, &bf16_cube_gemm(&a, &b).to_f64());
+            assert!(err < 1e-4, "e={e} err={err}");
+            // FP16 cube either overflows (inf/NaN) or collapses here.
+            let fp16 = cube_gemm(&a, &b, SplitConfig::default(), Accumulation::Termwise);
+            let e16 = relative_error(&c_ref, &fp16.to_f64());
+            assert!(
+                !e16.is_finite() || e16 > err * 10.0,
+                "e={e}: fp16 cube unexpectedly fine ({e16} vs bf16 {err})"
+            );
+        }
+    }
+
+    #[test]
+    fn exact_for_bf16_exact_inputs() {
+        let a = Matrix::from_vec(2, 2, vec![1.5f32, -2.0, 0.25, 8.0]);
+        let b = Matrix::from_vec(2, 2, vec![4.0f32, 0.5, -1.0, 2.0]);
+        let c = bf16_cube_gemm(&a, &b);
+        let r = dgemm_of_f32(&a, &b);
+        for (x, y) in c.as_slice().iter().zip(r.as_slice().iter()) {
+            assert_eq!(*x as f64, *y);
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! FP64 reference GEMM — the accuracy ground truth (`C_true` in Eq. 13).
+//!
+//! Blocked over the k dimension only as much as needed for decent cache
+//! behaviour; B is packed transposed so the inner loop runs over two
+//! contiguous slices (autovectorizes well even at `opt-level=3` on one
+//! core).
+
+use crate::util::mat::Matrix;
+use crate::util::threads::parallel_chunks;
+
+/// `C = A (m×k) · B (k×n)` in FP64.
+pub fn dgemm(a: &Matrix<f64>, b: &Matrix<f64>) -> Matrix<f64> {
+    let (m, k) = a.shape();
+    let (kb, n) = b.shape();
+    assert_eq!(k, kb, "inner dimensions must match: {k} vs {kb}");
+    let bt = b.transpose(); // pack B columns contiguously
+    let mut c = Matrix::zeros(m, n);
+
+    struct SendPtr(*mut f64);
+    unsafe impl Send for SendPtr {}
+    unsafe impl Sync for SendPtr {}
+    let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
+
+    parallel_chunks(m, |i0, i1| {
+        let cp = &cp;
+        for i in i0..i1 {
+            let arow = a.row(i);
+            for j in 0..n {
+                let bcol = bt.row(j);
+                let mut acc = 0.0f64;
+                for (x, y) in arow.iter().zip(bcol.iter()) {
+                    acc += x * y;
+                }
+                // SAFETY: row chunks are disjoint across threads.
+                unsafe { *cp.0.add(i * n + j) = acc };
+            }
+        }
+    });
+    c
+}
+
+/// Convenience: FP64 reference of an FP32 problem (promote, multiply).
+pub fn dgemm_of_f32(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f64> {
+    dgemm(&a.to_f64(), &b.to_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identity_multiplication() {
+        let a = Matrix::from_fn(3, 3, |i, j| if i == j { 1.0 } else { 0.0 });
+        let b = Matrix::from_fn(3, 3, |i, j| (i * 3 + j) as f64);
+        assert_eq!(dgemm(&a, &b), b);
+    }
+
+    #[test]
+    fn known_product() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        let c = dgemm(&a, &b);
+        assert_eq!(c.as_slice(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn rectangular_shapes() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::from_fn(5, 7, |_, _| rng.f64());
+        let b = Matrix::from_fn(7, 3, |_, _| rng.f64());
+        let c = dgemm(&a, &b);
+        assert_eq!(c.shape(), (5, 3));
+        // Spot-check one element against a manual dot product.
+        let mut acc = 0.0;
+        for t in 0..7 {
+            acc += a.get(2, t) * b.get(t, 1);
+        }
+        assert!((c.get(2, 1) - acc).abs() < 1e-15);
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dimensions")]
+    fn dimension_mismatch_panics() {
+        let a: Matrix<f64> = Matrix::zeros(2, 3);
+        let b: Matrix<f64> = Matrix::zeros(4, 2);
+        let _ = dgemm(&a, &b);
+    }
+}

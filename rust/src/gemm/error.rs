@@ -1,0 +1,77 @@
+//! The relative error metric of Eq. (13):
+//! `err = ||C_true - C_calc||_2 / ||C_true||_2` (Frobenius norms).
+
+use crate::util::mat::Matrix;
+
+/// Relative Frobenius-norm error of `calc` against `truth` (both f64;
+/// promote f32 results with [`Matrix::to_f64`] first).
+pub fn relative_error(truth: &Matrix<f64>, calc: &Matrix<f64>) -> f64 {
+    assert_eq!(truth.shape(), calc.shape(), "shape mismatch");
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (t, c) in truth.as_slice().iter().zip(calc.as_slice().iter()) {
+        let d = t - c;
+        num += d * d;
+        den += t * t;
+    }
+    if den == 0.0 {
+        if num == 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        (num / den).sqrt()
+    }
+}
+
+/// Maximum elementwise relative error (secondary diagnostic; the paper
+/// reports the norm-based metric).
+pub fn max_elementwise_error(truth: &Matrix<f64>, calc: &Matrix<f64>) -> f64 {
+    assert_eq!(truth.shape(), calc.shape());
+    truth
+        .as_slice()
+        .iter()
+        .zip(calc.as_slice().iter())
+        .map(|(t, c)| {
+            let denom = t.abs().max(f64::MIN_POSITIVE);
+            (t - c).abs() / denom
+        })
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_error_for_identical() {
+        let m = Matrix::from_fn(3, 3, |i, j| (i + j) as f64);
+        assert_eq!(relative_error(&m, &m), 0.0);
+        assert_eq!(max_elementwise_error(&m, &m), 0.0);
+    }
+
+    #[test]
+    fn known_relative_error() {
+        let truth = Matrix::from_vec(1, 2, vec![3.0, 4.0]); // norm 5
+        let calc = Matrix::from_vec(1, 2, vec![3.0, 4.5]); // diff norm 0.5
+        assert!((relative_error(&truth, &calc) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_truth_nonzero_calc_is_infinite() {
+        let truth: Matrix<f64> = Matrix::zeros(2, 2);
+        let mut calc = Matrix::zeros(2, 2);
+        calc.set(0, 0, 1.0);
+        assert!(relative_error(&truth, &calc).is_infinite());
+        assert_eq!(relative_error(&truth, &truth), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn shape_mismatch_panics() {
+        let a: Matrix<f64> = Matrix::zeros(2, 2);
+        let b: Matrix<f64> = Matrix::zeros(2, 3);
+        let _ = relative_error(&a, &b);
+    }
+}

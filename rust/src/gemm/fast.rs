@@ -1,0 +1,166 @@
+//! Vectorizable hot-path GEMM variants.
+//!
+//! The *exact* kernels ([`crate::gemm::sgemm`], [`crate::gemm::hgemm`],
+//! [`crate::gemm::cube`]) keep a single FP32 running sum per output so
+//! their accumulation order is bit-faithful to the semantics the
+//! accuracy experiments study — which also makes them latency-bound on
+//! one dependent FP-add chain (~2.3 GFLOP/s on this host).
+//!
+//! The serving/training hot path does not need a *specific* order, only
+//! a correct one, so these variants split the k loop over eight partial
+//! accumulators (autovectorizes to SIMD FMA lanes). Multi-accumulator
+//! summation is the standard BLAS approach and is statistically slightly
+//! *more* accurate than a single chain; the trade is bit-reproducibility
+//! against the single-chain reference, not accuracy. §Perf in
+//! EXPERIMENTS.md records the measured before/after.
+
+use crate::softfloat::f16::F16;
+use crate::softfloat::split::SplitConfig;
+use crate::util::mat::Matrix;
+use crate::util::threads::parallel_chunks;
+
+/// Eight-lane partial-sum dot product (autovectorizes).
+#[inline]
+pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let chunks = a.len() / 8;
+    for i in 0..chunks {
+        let (ai, bi) = (&a[i * 8..i * 8 + 8], &b[i * 8..i * 8 + 8]);
+        for l in 0..8 {
+            acc[l] += ai[l] * bi[l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 8..a.len() {
+        tail += a[i] * b[i];
+    }
+    let s01 = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    let s23 = (acc[4] + acc[5]) + (acc[6] + acc[7]);
+    (s01 + s23) + tail
+}
+
+fn gemm_with(a: &Matrix<f32>, bt: &Matrix<f32>, dot: impl Fn(&[f32], &[f32]) -> f32 + Sync) -> Matrix<f32> {
+    let (m, _k) = a.shape();
+    let n = bt.rows();
+    let mut c = Matrix::zeros(m, n);
+    struct SendPtr(*mut f32);
+    unsafe impl Send for SendPtr {}
+    unsafe impl Sync for SendPtr {}
+    let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
+    parallel_chunks(m, |i0, i1| {
+        let cp = &cp;
+        for i in i0..i1 {
+            let arow = a.row(i);
+            for j in 0..n {
+                // SAFETY: disjoint row chunks.
+                unsafe { *cp.0.add(i * n + j) = dot(arow, bt.row(j)) };
+            }
+        }
+    });
+    c
+}
+
+/// FP32 GEMM, eight-lane accumulation.
+pub fn sgemm_fast(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
+    assert_eq!(a.cols(), b.rows(), "inner dimensions must match");
+    gemm_with(a, &b.transpose(), dot8)
+}
+
+/// FP16 Cube GEMM (fp16 operands widened exactly, fp32 accumulate),
+/// eight-lane accumulation.
+pub fn hgemm_fast(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
+    assert_eq!(a.cols(), b.rows(), "inner dimensions must match");
+    let ah = a.map(|v| F16::from_f32_rn(v).to_f32());
+    let bh = b.map(|v| F16::from_f32_rn(v).to_f32());
+    gemm_with(&ah, &bh.transpose(), dot8)
+}
+
+/// SGEMM-cube, termwise, eight-lane accumulation per term. The termwise
+/// *structure* (three independent term accumulators, corrections summed
+/// before meeting the high product) is preserved.
+pub fn cube_gemm_fast(a: &Matrix<f32>, b: &Matrix<f32>, cfg: SplitConfig) -> Matrix<f32> {
+    assert_eq!(a.cols(), b.rows(), "inner dimensions must match");
+    let asp = crate::gemm::cube::WideSplit::of(a, cfg);
+    let bsp = crate::gemm::cube::WideSplit::of(b, cfg);
+    let (m, _) = asp.high.shape();
+    let n = bsp.high.cols();
+    let bh_t = bsp.high.transpose();
+    let bl_t = bsp.low.transpose();
+    let inv_sf = 1.0f32 / cfg.scale_factor();
+
+    let mut c = Matrix::zeros(m, n);
+    struct SendPtr(*mut f32);
+    unsafe impl Send for SendPtr {}
+    unsafe impl Sync for SendPtr {}
+    let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
+    parallel_chunks(m, |i0, i1| {
+        let cp = &cp;
+        for i in i0..i1 {
+            let ah = asp.high.row(i);
+            let al = asp.low.row(i);
+            for j in 0..n {
+                let bh = bh_t.row(j);
+                let bl = bl_t.row(j);
+                // Three independent dot8 passes measured faster than a
+                // fused 4-stream kernel (register pressure) — see
+                // EXPERIMENTS.md §Perf iteration log.
+                let s_hh = dot8(ah, bh);
+                let s_hl = dot8(ah, bl);
+                let s_lh = dot8(al, bh);
+                // SAFETY: disjoint row chunks.
+                unsafe { *cp.0.add(i * n + j) = s_hh + (s_hl + s_lh) * inv_sf };
+            }
+        }
+    });
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::dgemm::dgemm_of_f32;
+    use crate::gemm::error::relative_error;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dot8_matches_f64_reference() {
+        let mut rng = Rng::new(1);
+        for len in [0usize, 1, 7, 8, 9, 64, 257] {
+            let a: Vec<f32> = (0..len).map(|_| rng.symmetric_pow2(0)).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.symmetric_pow2(0)).collect();
+            let exact: f64 = a.iter().zip(&b).map(|(x, y)| *x as f64 * *y as f64).sum();
+            let got = dot8(&a, &b) as f64;
+            assert!((got - exact).abs() <= 1e-5 * exact.abs().max(1.0), "len={len}");
+        }
+    }
+
+    #[test]
+    fn fast_variants_match_exact_accuracy_class() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::random_symmetric(96, 128, 0, &mut rng);
+        let b = Matrix::random_symmetric(128, 64, 0, &mut rng);
+        let c_ref = dgemm_of_f32(&a, &b);
+        let e_s = relative_error(&c_ref, &sgemm_fast(&a, &b).to_f64());
+        let e_h = relative_error(&c_ref, &hgemm_fast(&a, &b).to_f64());
+        let e_c = relative_error(&c_ref, &cube_gemm_fast(&a, &b, SplitConfig::default()).to_f64());
+        assert!(e_s < 1e-6, "sgemm_fast {e_s}");
+        assert!((1e-5..1e-3).contains(&e_h), "hgemm_fast {e_h}");
+        assert!(e_c < 1e-6, "cube_fast {e_c}");
+        assert!(e_c < e_h / 50.0);
+    }
+
+    #[test]
+    fn fast_vs_exact_within_accumulation_noise() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::random_symmetric(64, 512, 0, &mut rng);
+        let b = Matrix::random_symmetric(512, 64, 0, &mut rng);
+        let exact = crate::gemm::sgemm::sgemm(&a, &b);
+        let fast = sgemm_fast(&a, &b);
+        let c_ref = dgemm_of_f32(&a, &b);
+        let e_exact = relative_error(&c_ref, &exact.to_f64());
+        let e_fast = relative_error(&c_ref, &fast.to_f64());
+        // Multi-accumulator summation is at least comparable in accuracy.
+        assert!(e_fast <= e_exact * 2.0, "fast {e_fast} vs exact {e_exact}");
+    }
+}

@@ -1,0 +1,177 @@
+//! FP16 GEMM as the Cube unit executes it.
+//!
+//! Operands are converted to FP16 (RN, as on Ascend); each FP16×FP16
+//! product is *exact* when computed in FP32 (11-bit × 11-bit significands
+//! need 22 bits ≤ 24), so the model multiplies widened `f32` values —
+//! bit-identical to the hardware datapath — and accumulates in FP32.
+//!
+//! Two accumulate modes:
+//! * [`AccumulateMode::Fp32Rn`] — FP32 adds with RN, the Ascend Cube
+//!   behaviour the paper assumes.
+//! * [`AccumulateMode::Fp32Rz`] — FP32 adds rounded toward zero,
+//!   reproducing the NVIDIA Tensor-Core internal accumulation bias that
+//!   Ootomo & Yokota worked around (kept for the related-work ablation).
+
+use crate::softfloat::f16::F16;
+use crate::util::mat::Matrix;
+use crate::util::threads::parallel_chunks;
+
+/// Accumulator rounding behaviour of the matrix engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AccumulateMode {
+    /// FP32 round-to-nearest adds (Ascend Cube).
+    #[default]
+    Fp32Rn,
+    /// FP32 round-toward-zero adds (Tensor-Core-style bias).
+    Fp32Rz,
+}
+
+/// FP32 addition with round-toward-zero, via an exact f64 intermediate
+/// (the sum of two f32 values is exactly representable in f64).
+#[inline]
+pub fn add_f32_rz(a: f32, b: f32) -> f32 {
+    let exact = a as f64 + b as f64;
+    let rn = exact as f32; // RN conversion
+    if rn.is_infinite() {
+        // RZ never rounds a finite sum to infinity.
+        return if rn > 0.0 { f32::MAX } else { f32::MIN };
+    }
+    if rn as f64 == exact {
+        return rn;
+    }
+    // If RN overshot away from zero, step one ULP toward zero.
+    if (rn as f64).abs() > exact.abs() {
+        f32::from_bits(rn.to_bits() - 1) // same sign: decrement magnitude
+    } else {
+        rn
+    }
+}
+
+/// `C = to_half(A) · to_half(B)` with FP32 accumulation.
+///
+/// Inputs are FP32 matrices; conversion to FP16 happens inside (RN),
+/// mirroring a direct "cast and multiply" use of the Cube.
+pub fn hgemm(a: &Matrix<f32>, b: &Matrix<f32>, mode: AccumulateMode) -> Matrix<f32> {
+    let ah = a.map(|v| F16::from_f32_rn(v).to_f32());
+    let bh = b.map(|v| F16::from_f32_rn(v).to_f32());
+    hgemm_preconverted(&ah, &bh, mode)
+}
+
+/// Cube GEMM over matrices whose entries are already exact FP16 values
+/// widened to f32 (the representation used by the split pipeline — it
+/// avoids re-conversion per term).
+pub fn hgemm_preconverted(ah: &Matrix<f32>, bh: &Matrix<f32>, mode: AccumulateMode) -> Matrix<f32> {
+    let (m, k) = ah.shape();
+    let (kb, n) = bh.shape();
+    assert_eq!(k, kb, "inner dimensions must match: {k} vs {kb}");
+    let bt = bh.transpose();
+    let mut c = Matrix::zeros(m, n);
+
+    struct SendPtr(*mut f32);
+    unsafe impl Send for SendPtr {}
+    unsafe impl Sync for SendPtr {}
+    let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
+
+    parallel_chunks(m, |i0, i1| {
+        let cp = &cp;
+        for i in i0..i1 {
+            let arow = ah.row(i);
+            for j in 0..n {
+                let bcol = bt.row(j);
+                let acc = match mode {
+                    AccumulateMode::Fp32Rn => {
+                        let mut acc = 0.0f32;
+                        for (x, y) in arow.iter().zip(bcol.iter()) {
+                            acc += x * y; // product exact, add RN — hardware path
+                        }
+                        acc
+                    }
+                    AccumulateMode::Fp32Rz => {
+                        let mut acc = 0.0f32;
+                        for (x, y) in arow.iter().zip(bcol.iter()) {
+                            acc = add_f32_rz(acc, x * y);
+                        }
+                        acc
+                    }
+                };
+                // SAFETY: row chunks are disjoint across threads.
+                unsafe { *cp.0.add(i * n + j) = acc };
+            }
+        }
+    });
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::dgemm::dgemm_of_f32;
+    use crate::gemm::error::relative_error;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exact_for_fp16_representable_inputs() {
+        // Small integers are exact in fp16; short k keeps the sum exact.
+        let a = Matrix::from_vec(2, 2, vec![1.0f32, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![5.0f32, 6.0, 7.0, 8.0]);
+        let c = hgemm(&a, &b, AccumulateMode::Fp32Rn);
+        assert_eq!(c.as_slice(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn error_magnitude_matches_paper() {
+        // Paper Fig. 8: HGEMM relative error ~1e-4 at moderate exponents.
+        let mut rng = Rng::new(4);
+        let a = Matrix::random_symmetric(128, 128, 0, &mut rng);
+        let b = Matrix::random_symmetric(128, 128, 0, &mut rng);
+        let c = hgemm(&a, &b, AccumulateMode::Fp32Rn);
+        let c_ref = dgemm_of_f32(&a, &b);
+        let err = relative_error(&c_ref, &c.to_f64());
+        assert!((1e-5..1e-3).contains(&err), "err={err}");
+    }
+
+    #[test]
+    fn rz_accumulation_is_worse_than_rn() {
+        let mut rng = Rng::new(5);
+        let a = Matrix::random_nonneg(64, 256, 0, &mut rng);
+        let b = Matrix::random_nonneg(256, 64, 0, &mut rng);
+        let c_ref = dgemm_of_f32(&a, &b);
+        let rn = relative_error(&c_ref, &hgemm(&a, &b, AccumulateMode::Fp32Rn).to_f64());
+        let rz = relative_error(&c_ref, &hgemm(&a, &b, AccumulateMode::Fp32Rz).to_f64());
+        // RZ systematically under-accumulates positive sums.
+        assert!(rz > rn, "rz={rz} rn={rn}");
+    }
+
+    #[test]
+    fn add_f32_rz_properties() {
+        // Exact sums are returned exactly.
+        assert_eq!(add_f32_rz(1.0, 2.0), 3.0);
+        assert_eq!(add_f32_rz(-1.5, 0.25), -1.25);
+        // Inexact positive sum truncates downward (vs RN rounding up).
+        let a = 1.0f32;
+        let b = f32::EPSILON * 0.75; // 1 + 1.5*ulp/2 -> RN rounds up, RZ truncates
+        let rz = add_f32_rz(a, b);
+        let rn = a + b;
+        assert!(rz <= rn);
+        assert!(rz as f64 <= a as f64 + b as f64);
+        // Negative mirror: RZ result magnitude never exceeds the exact sum.
+        let rzn = add_f32_rz(-a, -b);
+        assert!((rzn as f64).abs() <= (a as f64 + b as f64).abs());
+        assert_eq!(rzn, -rz);
+    }
+
+    #[test]
+    fn add_f32_rz_randomized_invariant() {
+        let mut rng = Rng::new(6);
+        for _ in 0..100_000 {
+            let a = rng.symmetric_pow2(3);
+            let b = rng.symmetric_pow2(3);
+            let exact = a as f64 + b as f64;
+            let rz = add_f32_rz(a, b) as f64;
+            assert!(rz.abs() <= exact.abs() + 1e-300, "a={a} b={b}");
+            // Within one ULP below the exact value.
+            let rn = (a + b) as f64;
+            assert!((exact - rz).abs() <= (rn - exact).abs() * 2.0 + f32::EPSILON as f64 * exact.abs());
+        }
+    }
+}

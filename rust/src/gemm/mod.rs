@@ -1,0 +1,36 @@
+//! Exact-numerics GEMM engine.
+//!
+//! This module is the *numerical* substrate of the reproduction: every
+//! precision variant the paper evaluates, implemented bit-faithfully on
+//! the host CPU so that accuracy experiments (Figs. 8–9) measure the same
+//! arithmetic the Ascend pipeline performs:
+//!
+//! * [`dgemm`] — FP64 reference (the paper's ground truth, Eq. 13).
+//! * [`sgemm`] — FP32 GEMM with plain FP32 running-sum accumulation
+//!   (OpenBLAS-SGEMM stand-in for the accuracy comparison).
+//! * [`hgemm`] — FP16 GEMM as the Cube executes it: FP16 operands,
+//!   exact FP16×FP16 products (exactly representable in FP32), FP32
+//!   accumulation — with an optional RZ-accumulate mode reproducing the
+//!   Tensor-Core behaviour Ootomo & Yokota identified.
+//! * [`cube`] — SGEMM-cube itself: two-component split + three dominant
+//!   GEMM terms, with elementwise and termwise accumulation orders
+//!   (Fig. 3).
+//! * [`error`] — the relative error metric of Eq. (13).
+//! * [`backend`] — a dynamic `GemmBackend` abstraction used by the
+//!   coordinator and the training example to switch precision paths.
+
+pub mod backend;
+pub mod bfcube;
+pub mod cube;
+pub mod dgemm;
+pub mod error;
+pub mod fast;
+pub mod hgemm;
+pub mod sgemm;
+
+pub use backend::{Backend, GemmBackend};
+pub use cube::{cube_gemm, cube_gemm_split, Accumulation};
+pub use dgemm::dgemm;
+pub use error::relative_error;
+pub use hgemm::{hgemm, AccumulateMode};
+pub use sgemm::sgemm;

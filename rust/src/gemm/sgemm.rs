@@ -1,0 +1,87 @@
+//! FP32 GEMM with plain FP32 running-sum accumulation — the software
+//! baseline the paper compares against ("FP32 OpenBLAS SGEMM").
+//!
+//! The accuracy-relevant property is the accumulation order: a single
+//! FP32 running sum per output element, adding products in k order. The
+//! blocked variant changes the *memory* schedule but deliberately keeps
+//! that accumulation semantics so both give bit-identical results.
+
+use crate::util::mat::Matrix;
+use crate::util::threads::parallel_chunks;
+
+/// `C = A (m×k) · B (k×n)` in FP32 with FP32 accumulation.
+pub fn sgemm(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
+    let (m, k) = a.shape();
+    let (kb, n) = b.shape();
+    assert_eq!(k, kb, "inner dimensions must match: {k} vs {kb}");
+    let bt = b.transpose();
+    let mut c = Matrix::zeros(m, n);
+
+    struct SendPtr(*mut f32);
+    unsafe impl Send for SendPtr {}
+    unsafe impl Sync for SendPtr {}
+    let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
+
+    parallel_chunks(m, |i0, i1| {
+        let cp = &cp;
+        for i in i0..i1 {
+            let arow = a.row(i);
+            for j in 0..n {
+                let bcol = bt.row(j);
+                let mut acc = 0.0f32;
+                for (x, y) in arow.iter().zip(bcol.iter()) {
+                    acc += x * y;
+                }
+                // SAFETY: row chunks are disjoint across threads.
+                unsafe { *cp.0.add(i * n + j) = acc };
+            }
+        }
+    });
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::dgemm::dgemm_of_f32;
+    use crate::gemm::error::relative_error;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn known_product() {
+        let a = Matrix::from_vec(2, 3, vec![1.0f32, 0.0, 2.0, -1.0, 3.0, 1.0]);
+        let b = Matrix::from_vec(3, 2, vec![3.0f32, 1.0, 2.0, 1.0, 1.0, 0.0]);
+        let c = sgemm(&a, &b);
+        assert_eq!(c.as_slice(), &[5.0, 1.0, 4.0, 2.0]);
+    }
+
+    #[test]
+    fn close_to_f64_reference() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::random_symmetric(33, 65, 0, &mut rng);
+        let b = Matrix::random_symmetric(65, 17, 0, &mut rng);
+        let c = sgemm(&a, &b);
+        let c_ref = dgemm_of_f32(&a, &b);
+        let err = relative_error(&c_ref, &c.to_f64());
+        assert!(err < 1e-6, "err={err}");
+        assert!(err > 0.0, "fp32 should not be exact at k=65");
+    }
+
+    #[test]
+    fn accumulation_is_plain_running_sum() {
+        // Verify bit-exact against an explicit scalar loop.
+        let mut rng = Rng::new(3);
+        let a = Matrix::random_symmetric(4, 9, 0, &mut rng);
+        let b = Matrix::random_symmetric(9, 4, 0, &mut rng);
+        let c = sgemm(&a, &b);
+        for i in 0..4 {
+            for j in 0..4 {
+                let mut acc = 0.0f32;
+                for t in 0..9 {
+                    acc += a.get(i, t) * b.get(t, j);
+                }
+                assert_eq!(c.get(i, j).to_bits(), acc.to_bits());
+            }
+        }
+    }
+}

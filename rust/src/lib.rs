@@ -1,0 +1,30 @@
+//! # SGEMM-cube
+//!
+//! Reproduction of *"SGEMM-cube: Emulating FP32 GEMM on Ascend NPUs Using
+//! FP16 Cube Units with Precision Recovery"* (Xue et al., 2025).
+//!
+//! The library is organized as a three-layer stack:
+//!
+//! * **L1 (Pallas, build time)** — the split / three-term GEMM kernels live
+//!   in `python/compile/kernels/` and are AOT-lowered to HLO text.
+//! * **L2 (JAX, build time)** — `python/compile/model.py` composes the
+//!   kernels into full compute graphs (cube matmul, MLP fwd/bwd).
+//! * **L3 (this crate, runtime)** — loads the artifacts through PJRT
+//!   ([`runtime`]), serves GEMM requests ([`coordinator`]), and hosts the
+//!   substrates the paper's evaluation needs: a bit-exact software FP16
+//!   ([`softfloat`]), an exact numerics engine ([`gemm`]), and a DaVinci
+//!   performance simulator ([`sim`]) standing in for Ascend 910A hardware.
+//!
+//! See `DESIGN.md` for the experiment index mapping every table and figure
+//! of the paper to a module and a bench target.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod gemm;
+pub mod runtime;
+pub mod sim;
+pub mod softfloat;
+pub mod train;
+pub mod util;

@@ -1,0 +1,270 @@
+//! `sgemm-cube` launcher: the L3 coordinator binary.
+
+use anyhow::{bail, Result};
+
+use sgemm_cube::cli::{self, Args};
+use sgemm_cube::config::{BlockingConfig, ChipConfig, ConfigFile, ServerConfig};
+use sgemm_cube::coordinator::server::{GemmService, ServiceConfig};
+use sgemm_cube::experiments as exp;
+use sgemm_cube::gemm::backend::{Backend, GemmBackend};
+use sgemm_cube::gemm::dgemm::dgemm_of_f32;
+use sgemm_cube::gemm::error::relative_error;
+use sgemm_cube::runtime::Engine;
+use sgemm_cube::sim::blocking::GemmShape;
+use sgemm_cube::sim::executor::simulate_sgemm_cube;
+use sgemm_cube::sim::pipeline::Buffering;
+use sgemm_cube::sim::Chip;
+use sgemm_cube::train::{teacher_dataset, Mlp};
+use sgemm_cube::util::mat::Matrix;
+use sgemm_cube::util::rng::Rng;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            cli::print_usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_config(args: &Args) -> Result<ConfigFile> {
+    match args.get("config") {
+        Some(p) => ConfigFile::load(std::path::Path::new(p)),
+        None => Ok(ConfigFile::default()),
+    }
+}
+
+fn csv_path(args: &Args, name: &str) -> Option<std::path::PathBuf> {
+    args.get("csv").map(|d| std::path::Path::new(d).join(format!("{name}.csv")))
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "help" => {
+            cli::print_usage();
+            Ok(())
+        }
+        "info" => cmd_info(args),
+        "gemm" => cmd_gemm(args),
+        "perf" => cmd_perf(args),
+        "figures" => cmd_figures(args),
+        "accuracy" => cmd_accuracy(args),
+        "serve" => cmd_serve(args),
+        "train" => cmd_train(args),
+        other => bail!("unknown command '{other}' (try --help)"),
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    args.finish()?;
+    for chip in [Chip::ascend_910a(), Chip::ascend_910b3_fp32()] {
+        println!(
+            "{:<28} cores={:<3} peak={:>6.1} TF/s  fp32-equiv={:>5.1} TF/s  bw={} GB/s  L1={} KB",
+            chip.name,
+            chip.n_cores,
+            chip.peak_tflops(),
+            chip.fp32_equiv_peak_tflops(),
+            chip.mem_bw_gbs,
+            chip.l1_bytes / 1024,
+        );
+    }
+    match Engine::from_default_dir() {
+        Ok(engine) => {
+            println!("PJRT platform: {}", engine.platform());
+            println!("artifacts: {:?}", engine.manifest().names());
+        }
+        Err(e) => println!("artifacts not available ({e}); run `make artifacts`"),
+    }
+    Ok(())
+}
+
+fn cmd_gemm(args: &Args) -> Result<()> {
+    let m = args.get_usize("m", 128)?;
+    let k = args.get_usize("k", 128)?;
+    let n = args.get_usize("n", 128)?;
+    let sb = args.get_i32("sb", 12)?;
+    let e = args.get_i32("exp", 0)?;
+    let seed = args.get_u64("seed", 42)?;
+    let backend = Backend::parse(args.get_or("backend", "cube-termwise"))
+        .ok_or_else(|| anyhow::anyhow!("unknown backend"))?;
+    args.finish()?;
+
+    let mut rng = Rng::new(seed);
+    let a = Matrix::random_symmetric(m, k, e, &mut rng);
+    let b = Matrix::random_symmetric(k, n, e, &mut rng);
+    let exec = GemmBackend::new(backend).with_scale(sb);
+    let t0 = std::time::Instant::now();
+    let c = exec.gemm(&a, &b);
+    let dt = t0.elapsed().as_secs_f64();
+    let err = relative_error(&dgemm_of_f32(&a, &b), &c.to_f64());
+    println!(
+        "{m}x{k}x{n} backend={backend} sb={sb}: err={err:.3e} time={:.1}ms ({:.2} GFLOP/s host)",
+        dt * 1e3,
+        2.0 * (m * k * n) as f64 / dt / 1e9
+    );
+    Ok(())
+}
+
+fn cmd_perf(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let chip = ChipConfig::from_config(&cfg)?.0;
+    let bm = args.get_usize("bm", 176)?;
+    let bk = args.get_usize("bk", 64)?;
+    let bn = args.get_usize("bn", 176)?;
+    let m = args.get_usize("m", 5632)?;
+    let k = args.get_usize("k", 4096)?;
+    let n = args.get_usize("n", 5632)?;
+    let buffer = match args.get_or("buffer", "double") {
+        "single" => Buffering::Single,
+        "double" => Buffering::Double,
+        other => bail!("--buffer {other}: expected single|double"),
+    };
+    args.finish()?;
+    let block = BlockingConfig::from_config(
+        &ConfigFile::parse(&format!("[blocking]\nbm={bm}\nbk={bk}\nbn={bn}"))?,
+        &chip,
+    )?
+    .0;
+    let r = simulate_sgemm_cube(&chip, GemmShape::new(m, k, n), block, buffer);
+    println!(
+        "{} {}x{}x{} block=({},{},{}) {}: {:.1} TF/s fp32-equiv (OI={:.0} F/B, roof={:.1}, util={:.2})",
+        chip.name, m, k, n, bm, bk, bn, buffer.name(), r.tflops, r.oi, r.roof, r.utilization
+    );
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let which = args.get_or("fig", "all").to_string();
+    let seed = args.get_u64("seed", 42)?;
+    let quick = args.get_bool("quick");
+    let _ = args.get("csv"); // consumed lazily by the closure below
+    let csv = |name: &str| csv_path(args, name);
+    args.finish()?;
+    let seeds = if quick { 1 } else { 5 };
+    let n_acc = if quick { 48 } else { 128 };
+    let shape = GemmShape::new(5632, 4096, 5632);
+
+    let want = |f: &str| which == "all" || which == f;
+    if want("t1") {
+        exp::table1::run().emit(csv("table1").as_deref());
+    }
+    if want("2") {
+        exp::fig2_analysis::run_underflow(if quick { 2_000 } else { 50_000 }, seed)
+            .emit(csv("fig2a").as_deref());
+        exp::fig2_analysis::run_precision_bits(if quick { 500 } else { 5_000 }, seed)
+            .emit(csv("fig2b").as_deref());
+    }
+    if want("6") {
+        exp::fig6_blocking::run().emit(csv("fig6").as_deref());
+        println!("{}\n", exp::fig6_blocking::optimal_bm_summary());
+    }
+    if want("8") {
+        let exps: Vec<i32> = (-14..=12).step_by(2).collect();
+        exp::fig8_accuracy::run(exp::fig8_accuracy::Sampling::Symmetric, n_acc, &exps, seeds)
+            .emit(csv("fig8_symmetric").as_deref());
+        exp::fig8_accuracy::run(exp::fig8_accuracy::Sampling::NonNegative, n_acc, &exps, seeds)
+            .emit(csv("fig8_nonneg").as_deref());
+    }
+    if want("9") {
+        exp::fig9_size_accuracy::run_mn_sweep(&[32, 64, 128, 256], 512, seeds)
+            .emit(csv("fig9a").as_deref());
+        exp::fig9_size_accuracy::run_k_sweep(32, &[128, 512, 2048, 8192], seeds)
+            .emit(csv("fig9bc").as_deref());
+    }
+    if want("10") {
+        exp::fig10_roofline::run(shape).emit(csv("fig10").as_deref());
+    }
+    if want("11") {
+        exp::fig11_blocking_perf::run(shape).emit(csv("fig11").as_deref());
+        let (s, d, frac) = exp::fig11_blocking_perf::headline(shape);
+        println!(
+            "headline: single={s:.1} TF/s (paper 41.7), double={d:.1} TF/s (paper 65.3), {:.0}% of 3-GEMM peak (paper 77%)\n",
+            frac * 100.0
+        );
+    }
+    if want("12") {
+        exp::fig12_size_scaling::run_mn(2816, &[704, 1408, 2816, 5632, 11264])
+            .emit(csv("fig12a").as_deref());
+        exp::fig12_size_scaling::run_k(5632, &[704, 1408, 2816, 5632, 11264])
+            .emit(csv("fig12b").as_deref());
+        exp::fig12_size_scaling::run_mkn(&[1408, 2816, 5632, 11264])
+            .emit(csv("fig12c").as_deref());
+    }
+    if want("t2") {
+        exp::table2::run().emit(csv("table2").as_deref());
+    }
+    if want("abl") {
+        let (n, s) = if quick { (48, 1) } else { (96, 3) };
+        exp::ablations::run_low_low(n, s).emit(csv("ablation_low_low").as_deref());
+        exp::ablations::run_rounding(n, s).emit(csv("ablation_rounding").as_deref());
+        exp::ablations::run_dynamic_scaling(n.min(48), s)
+            .emit(csv("ablation_policy").as_deref());
+    }
+    Ok(())
+}
+
+fn cmd_accuracy(args: &Args) -> Result<()> {
+    let fig = args.get_or("fig", "8").to_string();
+    let n = args.get_usize("n", 96)?;
+    let seeds = args.get_u64("seeds", 3)?;
+    args.finish()?;
+    match fig.as_str() {
+        "8" => {
+            let exps: Vec<i32> = (-14..=12).step_by(2).collect();
+            exp::fig8_accuracy::run(exp::fig8_accuracy::Sampling::Symmetric, n, &exps, seeds)
+                .emit(None);
+        }
+        "9" => {
+            exp::fig9_size_accuracy::run_k_sweep(32, &[128, 512, 2048, 8192], seeds).emit(None);
+        }
+        other => bail!("--fig {other}: expected 8|9"),
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let svc_cfg: ServiceConfig = ServerConfig::from_config(&cfg)?.0;
+    let requests = args.get_usize("requests", 64)?;
+    let m = args.get_usize("m", 128)?;
+    let seed = args.get_u64("seed", 42)?;
+    args.finish()?;
+
+    let svc = GemmService::start(svc_cfg);
+    let mut rng = Rng::new(seed);
+    let mut rxs = Vec::new();
+    for _ in 0..requests {
+        let a = Matrix::random_symmetric(m, m, 0, &mut rng);
+        let b = Matrix::random_symmetric(m, m, 0, &mut rng);
+        rxs.push(svc.submit(a, b, None));
+    }
+    for (_, rx) in rxs {
+        let resp = rx.recv().expect("service reply");
+        resp.result.map_err(anyhow::Error::msg)?;
+    }
+    println!("{}", svc.metrics().report().line());
+    svc.shutdown();
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let backend = Backend::parse(args.get_or("backend", "cube-termwise"))
+        .ok_or_else(|| anyhow::anyhow!("unknown backend"))?;
+    let steps = args.get_usize("steps", 200)?;
+    let seed = args.get_u64("seed", 42)?;
+    args.finish()?;
+    let mut rng = Rng::new(seed);
+    let (x, y) = teacher_dataset(256, 64, 16, 0.01, &mut rng);
+    let mut mlp = Mlp::new(&[64, 128, 128, 16], GemmBackend::new(backend), &mut rng);
+    println!("training {} params with backend={backend}", mlp.n_params());
+    for rec in mlp.train(&x, &y, steps, 0.02, steps.div_ceil(10)) {
+        println!("step {:>4}  loss {:.6}", rec.step, rec.loss);
+    }
+    Ok(())
+}

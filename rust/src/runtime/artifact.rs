@@ -1,0 +1,219 @@
+//! Artifact manifest parsing.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.txt` with one
+//! whitespace-separated record per artifact (no JSON dependency needed):
+//!
+//! ```text
+//! name file n_inputs in_spec... n_outputs out_spec...
+//! ```
+//!
+//! where each spec is `dtype:d0xd1x...` (empty dims = scalar).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Element type of a tensor (only what the artifacts use).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    F16,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "float16" => Ok(DType::F16),
+            other => bail!("unsupported dtype in manifest: {other}"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "float32",
+            DType::F16 => "float16",
+        }
+    }
+}
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    /// Parse `float32:64x64` (scalar: `float32:`).
+    pub fn parse(s: &str) -> Result<TensorSpec> {
+        let (ty, dims) = s
+            .split_once(':')
+            .ok_or_else(|| anyhow!("malformed tensor spec: {s}"))?;
+        let dims = if dims.is_empty() {
+            vec![]
+        } else {
+            dims.split('x')
+                .map(|d| d.parse::<usize>().context("bad dim"))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(TensorSpec { dtype: DType::parse(ty)?, dims })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Matrix interpretation `(rows, cols)`; scalars/vectors map to one row.
+    pub fn matrix_dims(&self) -> (usize, usize) {
+        match self.dims.len() {
+            0 => (1, 1),
+            1 => (1, self.dims[0]),
+            2 => (self.dims[0], self.dims[1]),
+            _ => (self.dims[..self.dims.len() - 1].iter().product(), *self.dims.last().unwrap()),
+        }
+    }
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Parse manifest text; `dir` anchors relative artifact paths.
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let ctx = || format!("manifest line {}", lineno + 1);
+            let name = it.next().ok_or_else(|| anyhow!("{}: missing name", ctx()))?;
+            let file = it.next().ok_or_else(|| anyhow!("{}: missing file", ctx()))?;
+            let n_in: usize = it
+                .next()
+                .ok_or_else(|| anyhow!("{}: missing n_inputs", ctx()))?
+                .parse()
+                .with_context(ctx)?;
+            let mut inputs = Vec::with_capacity(n_in);
+            for _ in 0..n_in {
+                let spec = it.next().ok_or_else(|| anyhow!("{}: truncated inputs", ctx()))?;
+                inputs.push(TensorSpec::parse(spec).with_context(ctx)?);
+            }
+            let n_out: usize = it
+                .next()
+                .ok_or_else(|| anyhow!("{}: missing n_outputs", ctx()))?
+                .parse()
+                .with_context(ctx)?;
+            let mut outputs = Vec::with_capacity(n_out);
+            for _ in 0..n_out {
+                let spec = it.next().ok_or_else(|| anyhow!("{}: truncated outputs", ctx()))?;
+                outputs.push(TensorSpec::parse(spec).with_context(ctx)?);
+            }
+            if it.next().is_some() {
+                bail!("{}: trailing fields", ctx());
+            }
+            artifacts.push(ArtifactSpec {
+                name: name.to_string(),
+                path: dir.join(file),
+                inputs,
+                outputs,
+            });
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    /// Load `manifest.txt` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Manifest::parse(&text, dir)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.iter().map(|a| a.name.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment line
+cube_gemm_64 cube_gemm_64.hlo.txt 2 float32:64x64 float32:64x64 1 float32:64x64
+mlp_train_step mlp.hlo.txt 3 float32:64x64 float32: float16:8 2 float32: float32:4x4
+";
+
+    #[test]
+    fn parses_records() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let g = m.get("cube_gemm_64").unwrap();
+        assert_eq!(g.path, PathBuf::from("/a/cube_gemm_64.hlo.txt"));
+        assert_eq!(g.inputs.len(), 2);
+        assert_eq!(g.outputs[0].dims, vec![64, 64]);
+        let t = m.get("mlp_train_step").unwrap();
+        assert_eq!(t.inputs[1].dims, Vec::<usize>::new()); // scalar
+        assert_eq!(t.inputs[2].dtype, DType::F16);
+        assert_eq!(t.outputs.len(), 2);
+    }
+
+    #[test]
+    fn tensor_spec_parsing() {
+        let s = TensorSpec::parse("float32:3x5x7").unwrap();
+        assert_eq!(s.dims, vec![3, 5, 7]);
+        assert_eq!(s.element_count(), 105);
+        assert_eq!(s.matrix_dims(), (15, 7));
+        let scalar = TensorSpec::parse("float32:").unwrap();
+        assert_eq!(scalar.element_count(), 1);
+        assert_eq!(scalar.matrix_dims(), (1, 1));
+        assert!(TensorSpec::parse("int8:4").is_err());
+        assert!(TensorSpec::parse("no-colon").is_err());
+    }
+
+    #[test]
+    fn malformed_manifest_errors() {
+        assert!(Manifest::parse("name file 2 float32:4", Path::new(".")).is_err());
+        assert!(Manifest::parse("name file x", Path::new(".")).is_err());
+        assert!(
+            Manifest::parse("a f 0 1 float32:2 extra", Path::new(".")).is_err(),
+            "trailing fields must error"
+        );
+    }
+
+    #[test]
+    fn missing_file_load_error_mentions_make() {
+        let err = Manifest::load(Path::new("/nonexistent-dir")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // Integration: if `make artifacts` has run, the real manifest parses.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.get("cube_gemm_128").is_some());
+            assert!(m.get("mlp_train_step").is_some());
+        }
+    }
+}

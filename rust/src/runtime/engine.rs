@@ -1,0 +1,140 @@
+//! The execution engine: PJRT client + compiled-executable cache.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::artifact::{ArtifactSpec, Manifest};
+use crate::runtime::literal::{literal_to_matrix, matrix_to_literal};
+use crate::util::mat::Matrix;
+
+/// Owns the PJRT CPU client, the artifact manifest and a lazily-populated
+/// cache of compiled executables (one compile per artifact per process).
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create an engine over an artifacts directory (must contain
+    /// `manifest.txt`; run `make artifacts` to produce it).
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Default artifacts directory: `$SGEMM_CUBE_ARTIFACTS` or
+    /// `<crate root>/artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("SGEMM_CUBE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+    }
+
+    /// Engine over [`Engine::default_dir`].
+    pub fn from_default_dir() -> Result<Engine> {
+        Engine::new(&Engine::default_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'; have {:?}", self.manifest.names()))
+    }
+
+    /// Compile (or fetch from cache) the executable for `name`.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.spec(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.path
+                .to_str()
+                .ok_or_else(|| anyhow!("non-UTF8 artifact path {:?}", spec.path))?,
+        )
+        .with_context(|| format!("parsing HLO text {:?}", spec.path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact '{name}'"))?,
+        );
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute artifact `name` on row-major f32 inputs; returns the
+    /// outputs as row-major f32 matrices per the manifest specs.
+    ///
+    /// All shipped artifacts are lowered with `return_tuple=True`, so the
+    /// single result literal is a tuple decomposed against the manifest.
+    pub fn run(&self, name: &str, inputs: &[&Matrix<f32>]) -> Result<Vec<Matrix<f32>>> {
+        let spec = self.spec(name)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            return Err(anyhow!(
+                "artifact '{name}' expects {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(spec.inputs.iter())
+            .enumerate()
+            .map(|(i, (m, s))| {
+                matrix_to_literal(m, s).with_context(|| format!("input {i} of '{name}'"))
+            })
+            .collect::<Result<_>>()?;
+
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = result.to_tuple().context("decomposing result tuple")?;
+        if parts.len() != spec.outputs.len() {
+            return Err(anyhow!(
+                "artifact '{name}' returned {} outputs, manifest says {}",
+                parts.len(),
+                spec.outputs.len()
+            ));
+        }
+        parts
+            .iter()
+            .zip(spec.outputs.iter())
+            .enumerate()
+            .map(|(i, (lit, s))| {
+                literal_to_matrix(lit, s).with_context(|| format!("output {i} of '{name}'"))
+            })
+            .collect()
+    }
+
+    /// Convenience for the GEMM artifacts: `C = artifact(A, B)`.
+    pub fn gemm(&self, name: &str, a: &Matrix<f32>, b: &Matrix<f32>) -> Result<Matrix<f32>> {
+        let out = self.run(name, &[a, b])?;
+        out.into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("artifact '{name}' returned no outputs"))
+    }
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("platform", &self.platform())
+            .field("artifacts", &self.manifest.names())
+            .finish()
+    }
+}

@@ -1,0 +1,104 @@
+//! Host `Matrix<f32>` ↔ `xla::Literal` conversion.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::artifact::TensorSpec;
+use crate::util::mat::Matrix;
+
+/// Build an input literal for `spec` from a row-major f32 matrix.
+/// The element count must match; the literal is reshaped to the spec's
+/// dims (row-major layouts agree).
+pub fn matrix_to_literal(m: &Matrix<f32>, spec: &TensorSpec) -> Result<xla::Literal> {
+    if m.rows() * m.cols() != spec.element_count() {
+        bail!(
+            "input has {} elements but spec {:?} wants {}",
+            m.rows() * m.cols(),
+            spec.dims,
+            spec.element_count()
+        );
+    }
+    let lit = xla::Literal::vec1(m.as_slice());
+    let dims: Vec<i64> = spec.dims.iter().map(|&d| d as i64).collect();
+    let lit = lit.reshape(&dims)?;
+    Ok(match spec.dtype {
+        crate::runtime::artifact::DType::F32 => lit,
+        crate::runtime::artifact::DType::F16 => lit.convert(xla::PrimitiveType::F16)?,
+    })
+}
+
+/// Read an output literal back into a row-major f32 matrix shaped by
+/// `spec`. FP16 outputs (e.g. the split kernel's components) are widened
+/// to f32 — exact, every binary16 value is representable.
+pub fn literal_to_matrix(lit: &xla::Literal, spec: &TensorSpec) -> Result<Matrix<f32>> {
+    let converted;
+    let lit = match spec.dtype {
+        crate::runtime::artifact::DType::F32 => lit,
+        crate::runtime::artifact::DType::F16 => {
+            converted = lit.convert(xla::PrimitiveType::F32)?;
+            &converted
+        }
+    };
+    let data = lit.to_vec::<f32>()?;
+    if data.len() != spec.element_count() {
+        bail!(
+            "output literal has {} elements but spec {:?} wants {}",
+            data.len(),
+            spec.dims,
+            spec.element_count()
+        );
+    }
+    let (r, c) = spec.matrix_dims();
+    Ok(Matrix::from_vec(r, c, data))
+}
+
+/// Convenience: a plain vector input (e.g. biases).
+pub fn vec_to_literal(v: &[f32], spec: &TensorSpec) -> Result<xla::Literal> {
+    if v.len() != spec.element_count() {
+        bail!("vector length {} != spec {:?}", v.len(), spec.dims);
+    }
+    let lit = xla::Literal::vec1(v);
+    let dims: Vec<i64> = spec.dims.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::DType;
+
+    fn spec(dims: &[usize]) -> TensorSpec {
+        TensorSpec { dtype: DType::F32, dims: dims.to_vec() }
+    }
+
+    #[test]
+    fn roundtrip_matrix() {
+        let m = Matrix::from_fn(3, 4, |i, j| (i * 4 + j) as f32);
+        let s = spec(&[3, 4]);
+        let lit = matrix_to_literal(&m, &s).unwrap();
+        let back = literal_to_matrix(&lit, &s).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn scalar_spec() {
+        let m = Matrix::from_vec(1, 1, vec![42.0f32]);
+        let s = spec(&[]);
+        let lit = matrix_to_literal(&m, &s).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![42.0]);
+    }
+
+    #[test]
+    fn element_count_mismatch_errors() {
+        let m = Matrix::from_fn(2, 2, |_, _| 0.0f32);
+        assert!(matrix_to_literal(&m, &spec(&[3, 3])).is_err());
+        let v = [1.0f32, 2.0];
+        assert!(vec_to_literal(&v, &spec(&[3])).is_err());
+    }
+
+    #[test]
+    fn vector_literal() {
+        let v = [1.0f32, 2.0, 3.0];
+        let lit = vec_to_literal(&v, &spec(&[3])).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), v.to_vec());
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the rust hot path.
+//!
+//! Python never runs at request time — `make artifacts` lowers the L2/L1
+//! graphs once, and this module owns the PJRT CPU client, the artifact
+//! manifest, per-artifact compiled-executable caching and host↔device
+//! conversion.
+
+pub mod artifact;
+pub mod engine;
+pub mod literal;
+
+pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
+pub use engine::Engine;

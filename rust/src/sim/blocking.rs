@@ -1,0 +1,265 @@
+//! L1-aware blocking: constraints, fusion, traffic (Sec. 5.1.1).
+//!
+//! * Eq. (8): `N_fused = floor((L1 - 2·b_k·b_n) / (b_m·b_k))` — how many
+//!   A blocks fit in L1 next to the double-buffered B blocks.
+//! * Eq. (9): main-memory ↔ L1 traffic of A, B and C.
+//! * Eq. (12): hardware feasibility constraints.
+//! * `b_m,opt = sqrt(f·L1 / (2·N_core))` — the analytic optimum derived
+//!   by minimizing Eq. (9) in `b_m` (≈ 88 on 910A, rounded to 96).
+
+use crate::sim::chip::Chip;
+
+/// GEMM problem shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmShape {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl GemmShape {
+    pub fn new(m: usize, k: usize, n: usize) -> GemmShape {
+        GemmShape { m, k, n }
+    }
+
+    /// FLOP count of one GEMM at this shape (`2·m·n·k`).
+    pub fn flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.n as f64 * self.k as f64
+    }
+}
+
+/// A blocking configuration `(b_m, b_k, b_n)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockConfig {
+    pub bm: usize,
+    pub bk: usize,
+    pub bn: usize,
+}
+
+/// Why a block configuration is infeasible (Eq. 12).
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum ConstraintViolation {
+    #[error("block sizes must be positive multiples of {align}: ({bm}, {bk}, {bn})")]
+    Alignment { align: usize, bm: usize, bk: usize, bn: usize },
+    #[error("b_m*b_k = {got} exceeds L0A capacity {cap}")]
+    L0aCapacity { got: u64, cap: u64 },
+    #[error("b_k*b_n = {got} exceeds L0B capacity {cap}")]
+    L0bCapacity { got: u64, cap: u64 },
+    #[error("b_m*b_n*6 = {got} exceeds L0C/UB budget {cap}")]
+    UbCapacity { got: u64, cap: u64 },
+    #[error("L1 cannot hold one A block plus double-buffered B blocks")]
+    L1Capacity,
+}
+
+impl BlockConfig {
+    pub fn new(bm: usize, bk: usize, bn: usize) -> BlockConfig {
+        BlockConfig { bm, bk, bn }
+    }
+
+    /// The paper's best configuration on 910A (Sec. 6.3).
+    pub fn paper_best() -> BlockConfig {
+        BlockConfig::new(176, 64, 176)
+    }
+
+    /// Validate against the hardware constraints of Eq. (12).
+    pub fn validate(&self, chip: &Chip) -> Result<(), ConstraintViolation> {
+        let (bm, bk, bn) = (self.bm, self.bk, self.bn);
+        let a = chip.align;
+        if bm == 0 || bk == 0 || bn == 0 || bm % a != 0 || bk % a != 0 || bn % a != 0 {
+            return Err(ConstraintViolation::Alignment { align: a, bm, bk, bn });
+        }
+        let l0a = (bm * bk) as u64;
+        if l0a > chip.l0a_elems {
+            return Err(ConstraintViolation::L0aCapacity { got: l0a, cap: chip.l0a_elems });
+        }
+        let l0b = (bk * bn) as u64;
+        if l0b > chip.l0b_elems {
+            return Err(ConstraintViolation::L0bCapacity { got: l0b, cap: chip.l0b_elems });
+        }
+        let ub = (bm * bn * 6) as u64;
+        if ub > chip.ub_budget_bytes {
+            return Err(ConstraintViolation::UbCapacity { got: ub, cap: chip.ub_budget_bytes });
+        }
+        if self.n_fused(chip) < 1 {
+            return Err(ConstraintViolation::L1Capacity);
+        }
+        Ok(())
+    }
+
+    /// Eq. (8): number of A blocks resident in L1 alongside the two
+    /// B buffers (L1 measured in elements of the chip's native type).
+    pub fn n_fused(&self, chip: &Chip) -> u64 {
+        let l1 = chip.l1_elems() as i64;
+        let need_b = 2 * (self.bk * self.bn) as i64;
+        let per_a = (self.bm * self.bk) as i64;
+        ((l1 - need_b) / per_a).max(0) as u64
+    }
+
+    /// The fusion efficiency factor `f = N_fused·b_m·b_k / L1`
+    /// (0.92 ≤ f ≤ 1 in the paper's experiments).
+    pub fn fusion_factor(&self, chip: &Chip) -> f64 {
+        self.n_fused(chip) as f64 * (self.bm * self.bk) as f64 / chip.l1_elems() as f64
+    }
+}
+
+/// Eq. (9): memory traffic (in *elements*) between main memory and L1.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Traffic {
+    /// A is read once: `m·k`.
+    pub a_read: f64,
+    /// B reloads across cores: `m·k·n / (N_core·b_m)`.
+    pub b_read: f64,
+    /// C read+write through UB per k-group: `2·m·k·n·b_m / (f·L1)`.
+    pub c_rw: f64,
+}
+
+impl Traffic {
+    /// Evaluate Eq. (9) for one GEMM pass.
+    pub fn of(shape: GemmShape, block: BlockConfig, chip: &Chip) -> Traffic {
+        let (m, k, n) = (shape.m as f64, shape.k as f64, shape.n as f64);
+        let f = block.fusion_factor(chip).max(1e-9);
+        Traffic {
+            a_read: m * k,
+            b_read: m * k * n / (chip.n_cores as f64 * block.bm as f64),
+            c_rw: 2.0 * m * k * n * block.bm as f64 / (f * chip.l1_elems() as f64),
+        }
+    }
+
+    /// Total elements moved.
+    pub fn total_elems(&self) -> f64 {
+        self.a_read + self.b_read + self.c_rw
+    }
+
+    /// Total bytes moved given per-matrix element sizes `(s_A, s_B, s_C)`
+    /// (Eq. 10 uses 4 bytes each under the FP32-equivalent convention).
+    pub fn total_bytes(&self, s_a: f64, s_b: f64, s_c: f64) -> f64 {
+        self.a_read * s_a + self.b_read * s_b + self.c_rw * s_c
+    }
+}
+
+/// The analytic optimum `b_m,opt = sqrt(f·L1 / (2·N_core))` (Sec. 5.1.1),
+/// taking `f` at a representative 0.95.
+pub fn optimal_bm(chip: &Chip) -> f64 {
+    let f = 0.95;
+    (f * chip.l1_elems() as f64 / (2.0 * chip.n_cores as f64)).sqrt()
+}
+
+/// Round `x` to the nearest feasible multiple of the chip alignment
+/// (at least one alignment unit).
+pub fn round_to_align(x: f64, chip: &Chip) -> usize {
+    let a = chip.align as f64;
+    ((x / a).round().max(1.0) as usize) * chip.align
+}
+
+/// Enumerate all feasible block configurations on `chip` with dimensions
+/// up to `max` (step = alignment). Used by the Fig. 6 / Fig. 11 sweeps.
+pub fn feasible_blocks(chip: &Chip, max: usize) -> Vec<BlockConfig> {
+    let step = chip.align;
+    let mut out = Vec::new();
+    let mut bm = step;
+    while bm <= max {
+        let mut bk = step;
+        while bk <= max {
+            let mut bn = step;
+            while bn <= max {
+                let cfg = BlockConfig::new(bm, bk, bn);
+                if cfg.validate(chip).is_ok() {
+                    out.push(cfg);
+                }
+                bn += step;
+            }
+            bk += step;
+        }
+        bm += step;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_best_config_matches_published_nfused() {
+        // Paper Sec. 6.3: (b_m, b_k, b_n, N_fused) = (176, 64, 176, 44).
+        let chip = Chip::ascend_910a();
+        let cfg = BlockConfig::paper_best();
+        assert!(cfg.validate(&chip).is_ok());
+        assert_eq!(cfg.n_fused(&chip), 44);
+        let f = cfg.fusion_factor(&chip);
+        assert!((0.92..=1.0).contains(&f), "f={f}");
+    }
+
+    #[test]
+    fn optimal_bm_matches_paper_range() {
+        // Paper: 86 < b_m,opt < 90, rounded to 96.
+        let chip = Chip::ascend_910a();
+        let opt = optimal_bm(&chip);
+        assert!((86.0..90.0).contains(&opt), "opt={opt}");
+        assert_eq!(round_to_align(opt, &chip), 96);
+    }
+
+    #[test]
+    fn constraint_violations_detected() {
+        let chip = Chip::ascend_910a();
+        assert!(matches!(
+            BlockConfig::new(17, 64, 64).validate(&chip),
+            Err(ConstraintViolation::Alignment { .. })
+        ));
+        assert!(matches!(
+            BlockConfig::new(256, 128, 16).validate(&chip),
+            Err(ConstraintViolation::L0aCapacity { .. })
+        ));
+        assert!(matches!(
+            BlockConfig::new(16, 128, 256).validate(&chip),
+            Err(ConstraintViolation::L0bCapacity { .. })
+        ));
+        assert!(matches!(
+            BlockConfig::new(224, 16, 224).validate(&chip),
+            Err(ConstraintViolation::UbCapacity { .. })
+        ));
+        // (176, 64, 176) passes all of Eq. 12 (checked above).
+    }
+
+    #[test]
+    fn nfused_decreases_with_block_area() {
+        let chip = Chip::ascend_910a();
+        let small = BlockConfig::new(64, 64, 64).n_fused(&chip);
+        let large = BlockConfig::new(176, 64, 176).n_fused(&chip);
+        assert!(small > large);
+    }
+
+    #[test]
+    fn traffic_model_terms() {
+        let chip = Chip::ascend_910a();
+        let shape = GemmShape::new(4096, 4096, 4096);
+        let cfg = BlockConfig::paper_best();
+        let t = Traffic::of(shape, cfg, &chip);
+        assert_eq!(t.a_read, 4096.0 * 4096.0);
+        // B reloads = mkn / (N_core * bm).
+        let expect_b = 4096f64.powi(3) / (32.0 * 176.0);
+        assert!((t.b_read - expect_b).abs() / expect_b < 1e-12);
+        assert!(t.c_rw > 0.0);
+        assert!(t.total_elems() > t.a_read + t.b_read);
+        assert!(t.total_bytes(4.0, 4.0, 4.0) > 4.0 * t.total_elems() - 1.0);
+    }
+
+    #[test]
+    fn larger_bm_cuts_b_traffic_raises_c_traffic() {
+        let chip = Chip::ascend_910a();
+        let shape = GemmShape::new(4096, 4096, 4096);
+        let small = Traffic::of(shape, BlockConfig::new(96, 64, 96), &chip);
+        let large = Traffic::of(shape, BlockConfig::new(176, 64, 176), &chip);
+        assert!(large.b_read < small.b_read);
+        assert!(large.c_rw > small.c_rw);
+    }
+
+    #[test]
+    fn feasible_blocks_nonempty_and_valid() {
+        let chip = Chip::ascend_910a();
+        let blocks = feasible_blocks(&chip, 256);
+        assert!(blocks.len() > 100);
+        assert!(blocks.iter().all(|b| b.validate(&chip).is_ok()));
+        assert!(blocks.contains(&BlockConfig::paper_best()));
+    }
+}

@@ -1,0 +1,168 @@
+//! Hardware descriptions for the simulator.
+//!
+//! Capacity and throughput numbers for the Ascend 910A come from the
+//! paper (Sec. 5.1, 6.1 and Eq. 12); the pipeline-overhead constants
+//! (`dma_setup_cycles`, `sync_cycles`, `l0_bandwidth`, `mem_burst`) are
+//! calibration parameters fitted once so the simulated best-block
+//! throughput matches the paper's measured 41.7 (single-buffer) and
+//! 65.3 TFLOP/s (double-buffer) anchors — see EXPERIMENTS.md §Calibration.
+
+/// A simulated NPU.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Chip {
+    pub name: &'static str,
+    /// Number of AI cores.
+    pub n_cores: u32,
+    /// Core clock in GHz (cycles below are in core cycles).
+    pub freq_ghz: f64,
+    /// MACs per cycle per core of the matrix engine at its native
+    /// element type (Cube 16×16×16 = 4096 for FP16 on 910A).
+    pub cube_macs_per_cycle: u64,
+    /// Bytes per element of the matrix engine's native input type.
+    pub elem_bytes: u32,
+    /// Aggregate main-memory bandwidth in GB/s.
+    pub mem_bw_gbs: f64,
+    /// L1 buffer capacity per core, in bytes.
+    pub l1_bytes: u64,
+    /// L0A / L0B capacity constraints, in *elements* (Eq. 12).
+    pub l0a_elems: u64,
+    pub l0b_elems: u64,
+    /// Combined L0C + UB constraint: `b_m·b_n·6 ≤ ub_budget_bytes` (Eq. 12).
+    pub ub_budget_bytes: u64,
+    /// Block alignment required by the cube (Eq. 12): 16.
+    pub align: usize,
+
+    // --- pipeline calibration parameters ---
+    /// Fixed DMA descriptor-setup cost per transfer, in cycles.
+    pub dma_setup_cycles: f64,
+    /// Per-iteration synchronization / instruction-issue overhead that is
+    /// never hidden by double buffering, in cycles.
+    pub sync_cycles: f64,
+    /// L1 → L0A/L0B bandwidth per core, bytes per cycle.
+    pub l0_bw_bytes_per_cycle: f64,
+    /// Burst factor: a single core's achievable share of main-memory
+    /// bandwidth relative to `mem_bw / n_cores` (cores do not all DMA in
+    /// the same cycle, so a streaming core sees more than 1/n_cores).
+    pub mem_burst: f64,
+}
+
+impl Chip {
+    /// Huawei Ascend 910A — the paper's primary platform: 32 AI cores at
+    /// 1 GHz, 256 TFLOP/s FP16 Cube peak, 1.2 TB/s, 1 MB L1 per core,
+    /// no native FP32 matrix units.
+    pub fn ascend_910a() -> Chip {
+        Chip {
+            name: "Ascend 910A",
+            n_cores: 32,
+            freq_ghz: 1.0,
+            // The Cube is a 16×16×16 (4096-MAC) array; the published
+            // 256 TFLOP/s @ 32 cores/1 GHz implies a sustained issue rate
+            // of 4000 MAC/cycle (97.7%), which we use directly so the
+            // model peak equals the paper's peak exactly.
+            cube_macs_per_cycle: 4000,
+            elem_bytes: 2,
+            mem_bw_gbs: 1200.0,
+            l1_bytes: 1024 * 1024,
+            l0a_elems: 64 * 256,
+            l0b_elems: 64 * 256,
+            ub_budget_bytes: 248 * 1024,
+            align: 16,
+            dma_setup_cycles: 40.0,
+            sync_cycles: 20.0,
+            l0_bw_bytes_per_cycle: 256.0,
+            mem_burst: 1.7,
+        }
+    }
+
+    /// Huawei Ascend 910B3 — 20 AI cores at 1.8 GHz, native FP32 GEMM
+    /// with a 73.73 TFLOP/s theoretical peak, 1.6 TB/s, half the L1 per
+    /// core (Sec. 6.1). Used as the CANN-FP32 cross-platform comparator
+    /// of Fig. 12.
+    pub fn ascend_910b3_fp32() -> Chip {
+        // 73.73e12 FLOP/s = 2 * macs/cycle * 20 cores * 1.8e9 ->
+        // macs/cycle = 1024 (a 16x16x4 FP32 configuration).
+        Chip {
+            name: "Ascend 910B3 (FP32 CANN)",
+            n_cores: 20,
+            freq_ghz: 1.8,
+            cube_macs_per_cycle: 1024,
+            elem_bytes: 4,
+            mem_bw_gbs: 1600.0,
+            l1_bytes: 512 * 1024,
+            l0a_elems: 64 * 256 / 2,
+            l0b_elems: 64 * 256 / 2,
+            ub_budget_bytes: 192 * 1024,
+            align: 16,
+            dma_setup_cycles: 40.0,
+            sync_cycles: 20.0,
+            l0_bw_bytes_per_cycle: 512.0,
+            mem_burst: 1.7,
+        }
+    }
+
+    /// Peak matrix-engine throughput in TFLOP/s (native element type).
+    pub fn peak_tflops(&self) -> f64 {
+        2.0 * self.cube_macs_per_cycle as f64 * self.n_cores as f64 * self.freq_ghz * 1e9 / 1e12
+    }
+
+    /// The paper's FP32-equivalent peak for the three-GEMM decomposition:
+    /// native FP16 peak / 3 (Table 2 note). Only meaningful for FP16
+    /// chips running SGEMM-cube.
+    pub fn fp32_equiv_peak_tflops(&self) -> f64 {
+        self.peak_tflops() / 3.0
+    }
+
+    /// Cycles per second.
+    pub fn hz(&self) -> f64 {
+        self.freq_ghz * 1e9
+    }
+
+    /// Achievable streaming bandwidth of one core, bytes/cycle.
+    pub fn core_bw_bytes_per_cycle(&self) -> f64 {
+        self.mem_bw_gbs * 1e9 / self.n_cores as f64 * self.mem_burst / self.hz()
+    }
+
+    /// Aggregate bandwidth in bytes/second.
+    pub fn mem_bw_bytes_per_sec(&self) -> f64 {
+        self.mem_bw_gbs * 1e9
+    }
+
+    /// L1 capacity in native elements — the unit Eq. (8) counts in.
+    pub fn l1_elems(&self) -> u64 {
+        self.l1_bytes / self.elem_bytes as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_matches_published_910a() {
+        let c = Chip::ascend_910a();
+        assert!((c.peak_tflops() - 256.0).abs() < 1e-9);
+        assert!((c.fp32_equiv_peak_tflops() - 256.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn peak_matches_published_910b3() {
+        let c = Chip::ascend_910b3_fp32();
+        assert!((c.peak_tflops() - 73.728).abs() < 0.01, "{}", c.peak_tflops());
+    }
+
+    #[test]
+    fn l1_element_capacity() {
+        let c = Chip::ascend_910a();
+        assert_eq!(c.l1_elems(), 524_288); // 1 MB of FP16
+        let b = Chip::ascend_910b3_fp32();
+        assert_eq!(b.l1_elems(), 131_072); // 512 KB of FP32
+    }
+
+    #[test]
+    fn core_bandwidth_sane() {
+        let c = Chip::ascend_910a();
+        let per_core = c.core_bw_bytes_per_cycle();
+        // 1.2 TB/s / 32 cores * burst 1.7 = 63.75 B/cycle @ 1 GHz.
+        assert!((per_core - 63.75).abs() < 1e-9, "{per_core}");
+    }
+}

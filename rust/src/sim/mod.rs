@@ -1,0 +1,30 @@
+//! Cycle-approximate performance simulator of the Ascend DaVinci AI core
+//! (Fig. 4 of the paper).
+//!
+//! The paper's throughput results (Figs. 10–12, Table 2) were measured on
+//! Ascend 910A hardware, which this reproduction does not have. The
+//! substitution (DESIGN.md §2) implements the paper's *own* performance
+//! model — L1-aware blocking (Eq. 8–9, 12), the roofline bound
+//! (Eq. 10–11) and the single/double-buffered pipeline bound
+//! `T_comp + α·T_mem` (Sec. 5.1.2) — as a parametric simulator whose
+//! constants are instantiated from the published 910A/910B3 figures.
+//!
+//! * [`chip`] — hardware descriptions (910A, 910B3, custom).
+//! * [`blocking`] — block-size constraints, `N_fused`, fusion factor `f`,
+//!   the traffic model and the optimal `b_m` derivation.
+//! * [`roofline`] — operational intensity and the roofline ceiling.
+//! * [`pipeline`] — per-iteration timing for single/double buffering.
+//! * [`executor`] — whole-kernel simulation for one FP16 GEMM pass and
+//!   for the full three-term SGEMM-cube (split + 3 GEMMs + reconstruct).
+
+pub mod blocking;
+pub mod chip;
+pub mod executor;
+pub mod pipeline;
+pub mod roofline;
+
+pub use blocking::{BlockConfig, Traffic};
+pub use chip::Chip;
+pub use executor::{simulate_gemm, simulate_sgemm_cube, SimResult};
+pub use pipeline::Buffering;
+pub use roofline::{operational_intensity, roofline_bound};

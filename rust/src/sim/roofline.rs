@@ -1,0 +1,91 @@
+//! Roofline model on the main-memory ↔ L1 path (Eq. 10–11).
+
+use crate::sim::blocking::{BlockConfig, GemmShape, Traffic};
+use crate::sim::chip::Chip;
+
+/// Eq. (10): operational intensity in FLOPs/byte, under the paper's
+/// convention that traffic is charged at FP32 element sizes
+/// (`s_A = s_B = s_C = 4`) and the FLOP count is the FP32-equivalent
+/// `2·m·n·k` of a single GEMM.
+pub fn operational_intensity(shape: GemmShape, block: BlockConfig, chip: &Chip) -> f64 {
+    let traffic = Traffic::of(shape, block, chip);
+    shape.flops() / traffic.total_bytes(4.0, 4.0, 4.0)
+}
+
+/// Eq. (11): `P_roof = min(P_peak, β·OI)` in TFLOP/s, with `P_peak` the
+/// FP32-equivalent peak (native FP16 peak / 3) and `β` the sustained
+/// main-memory → L1 bandwidth.
+pub fn roofline_bound(chip: &Chip, oi: f64) -> f64 {
+    let p_peak = chip.fp32_equiv_peak_tflops();
+    let bw_tflops = chip.mem_bw_bytes_per_sec() * oi / 1e12;
+    p_peak.min(bw_tflops)
+}
+
+/// Roofline bound against the chip's *native* peak (used for the 910B3
+/// FP32 comparator, where no three-GEMM convention applies).
+pub fn roofline_bound_native(chip: &Chip, oi: f64) -> f64 {
+    let p_peak = chip.peak_tflops();
+    let bw_tflops = chip.mem_bw_bytes_per_sec() * oi / 1e12;
+    p_peak.min(bw_tflops)
+}
+
+/// The knee point: the OI at which the bandwidth roof meets the compute
+/// roof (FP32-equivalent convention).
+pub fn knee_oi(chip: &Chip) -> f64 {
+    chip.fp32_equiv_peak_tflops() * 1e12 / chip.mem_bw_bytes_per_sec()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knee_point_910a() {
+        // 85.33 TFLOP/s / 1.2 TB/s ≈ 71.1 FLOPs/byte.
+        let chip = Chip::ascend_910a();
+        let knee = knee_oi(&chip);
+        assert!((knee - 71.1).abs() < 0.2, "knee={knee}");
+    }
+
+    #[test]
+    fn paper_configs_are_compute_bound() {
+        // Paper Fig. 10: all measured OI values lie above the knee.
+        let chip = Chip::ascend_910a();
+        let shape = GemmShape::new(4096, 4096, 4096);
+        for cfg in [
+            BlockConfig::paper_best(),
+            BlockConfig::new(96, 64, 96),
+            BlockConfig::new(128, 64, 128),
+        ] {
+            let oi = operational_intensity(shape, cfg, &chip);
+            assert!(oi > knee_oi(&chip), "cfg {cfg:?} OI={oi}");
+            assert_eq!(roofline_bound(&chip, oi), chip.fp32_equiv_peak_tflops());
+        }
+    }
+
+    #[test]
+    fn small_oi_is_bandwidth_bound() {
+        let chip = Chip::ascend_910a();
+        let bound = roofline_bound(&chip, 10.0);
+        assert!((bound - 12.0).abs() < 1e-9); // 1.2 TB/s * 10 F/B = 12 TF/s
+        assert!(bound < chip.fp32_equiv_peak_tflops());
+    }
+
+    #[test]
+    fn oi_peaks_near_optimal_bm() {
+        // Eq. 9/10: the B term falls with b_m while the C term grows, so
+        // OI is maximized near b_m,opt ≈ 88 (rounded to 96) — exactly the
+        // trade-off behind the paper's optimal-b_m derivation.
+        let chip = Chip::ascend_910a();
+        let shape = GemmShape::new(8192, 4096, 8192);
+        let oi = |bm: usize| operational_intensity(shape, BlockConfig::new(bm, 64, bm.min(176)), &chip);
+        assert!(oi(96) > oi(48), "{} vs {}", oi(96), oi(48));
+        assert!(oi(96) > oi(176), "{} vs {}", oi(96), oi(176));
+    }
+
+    #[test]
+    fn native_roofline_uses_full_peak() {
+        let chip = Chip::ascend_910b3_fp32();
+        assert_eq!(roofline_bound_native(&chip, 1e6), chip.peak_tflops());
+    }
+}

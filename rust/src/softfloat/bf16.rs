@@ -1,0 +1,180 @@
+//! IEEE-style bfloat16 (1 sign, 8 exponent, 7 mantissa) — the "other
+//! low-precision matrix engine" format of the paper's future-work list.
+//!
+//! BF16 shares FP32's exponent range, so a two-component BF16 split has
+//! **no range limitation** (unlike the FP16 scheme, which is confined to
+//! the FP16-representable window and needs residual scaling at all).
+//! The trade is mantissa: 2×(7+1) explicit+hidden bits recover ≈ 16
+//! bits instead of the FP16 scheme's ≈ 22. This mirrors the TF32
+//! fallback Ootomo & Yokota added for full-range inputs (Sec. 2).
+
+/// A bfloat16 value stored as its bit pattern.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Bf16(pub u16);
+
+const EXP_MASK: u16 = 0x7f80;
+const MAN_MASK: u16 = 0x007f;
+
+impl Bf16 {
+    pub const ZERO: Bf16 = Bf16(0);
+    pub const ONE: Bf16 = Bf16(0x3f80);
+    pub const INFINITY: Bf16 = Bf16(0x7f80);
+    /// Largest finite value ≈ 3.39e38.
+    pub const MAX: Bf16 = Bf16(0x7f7f);
+
+    /// Round-to-nearest-even conversion from f32 (bf16 is the upper 16
+    /// bits of the f32 pattern, so RN is a 16-bit mantissa round).
+    #[inline]
+    pub fn from_f32_rn(x: f32) -> Bf16 {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            return Bf16(((bits >> 16) as u16) | 0x0040); // quiet, keep payload top
+        }
+        let round_bit = (bits >> 15) & 1;
+        let sticky = bits & 0x7fff;
+        let mut hi = (bits >> 16) as u16;
+        if round_bit == 1 && (sticky != 0x0 || hi & 1 == 1) {
+            // halfway w/ odd, or above halfway -> round up (may carry to inf)
+            if sticky == 0x0 {
+                // exact tie handled by the hi&1 check above
+            }
+            hi = hi.wrapping_add(1);
+        }
+        Bf16(hi)
+    }
+
+    /// Truncating conversion (RZ) — for the rounding-mode ablations.
+    #[inline]
+    pub fn from_f32_rz(x: f32) -> Bf16 {
+        if x.is_nan() {
+            return Bf16(((x.to_bits() >> 16) as u16) | 0x0040);
+        }
+        Bf16((x.to_bits() >> 16) as u16)
+    }
+
+    /// Exact widening to f32 (pad with zero low bits).
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        (self.0 & EXP_MASK) == EXP_MASK && (self.0 & MAN_MASK) != 0
+    }
+
+    #[inline]
+    pub fn is_infinite(self) -> bool {
+        (self.0 & EXP_MASK) == EXP_MASK && (self.0 & MAN_MASK) == 0
+    }
+}
+
+/// Split an f32 into two BF16 components: `v ≈ high + low`. No residual
+/// scaling is needed — BF16's exponent range covers every f32 residual.
+#[inline]
+pub fn split_bf16(v: f32) -> (Bf16, Bf16) {
+    let high = Bf16::from_f32_rn(v);
+    if high.is_infinite() && v.is_finite() {
+        // |v| rounded past BF16::MAX (only the very top of the f32
+        // range): keep the truncated high part so the pair stays finite.
+        let high = Bf16::from_f32_rz(v);
+        let low = Bf16::from_f32_rn(v - high.to_f32());
+        return (high, low);
+    }
+    let low = Bf16::from_f32_rn(v - high.to_f32());
+    (high, low)
+}
+
+/// Reconstruct `high + low`.
+#[inline]
+pub fn reconstruct_bf16(high: Bf16, low: Bf16) -> f32 {
+    high.to_f32() + low.to_f32()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn known_values() {
+        assert_eq!(Bf16::from_f32_rn(1.0), Bf16::ONE);
+        assert_eq!(Bf16::ONE.to_f32(), 1.0);
+        assert_eq!(Bf16::from_f32_rn(f32::INFINITY), Bf16::INFINITY);
+        assert!(Bf16::from_f32_rn(f32::NAN).is_nan());
+        assert_eq!(Bf16::from_f32_rn(-2.0).to_f32(), -2.0);
+    }
+
+    #[test]
+    fn roundtrip_exact_for_bf16_values() {
+        for hi in (0u16..0x7f80).step_by(3) {
+            let b = Bf16(hi);
+            assert_eq!(Bf16::from_f32_rn(b.to_f32()), b, "hi={hi:#06x}");
+        }
+    }
+
+    #[test]
+    fn rn_is_nearest() {
+        let mut rng = Rng::new(1);
+        for _ in 0..50_000 {
+            let v = f32::from_bits(rng.next_u32() & 0x7f7f_ffff); // finite, positive exp field < max
+            if !v.is_finite() {
+                continue;
+            }
+            let h = Bf16::from_f32_rn(v);
+            if h.is_infinite() || h.is_nan() {
+                continue;
+            }
+            let hv = h.to_f32() as f64;
+            let up = Bf16(h.0.wrapping_add(1));
+            let down = Bf16(h.0.wrapping_sub(1));
+            let d = (v as f64 - hv).abs();
+            if !up.is_nan() && !up.is_infinite() && up.0 > h.0 {
+                assert!(d <= (v as f64 - up.to_f32() as f64).abs() + 1e-30, "v={v}");
+            }
+            if !down.is_nan() && down.0 < h.0 && (h.0 & 0x7fff) != 0 {
+                assert!(d <= (v as f64 - down.to_f32() as f64).abs() + 1e-30, "v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_recovers_about_16_bits_any_exponent() {
+        // The headline property: the full f32 *normal* exponent range at
+        // ~16 bits. (Below ~2^-110 the residual itself dips into f32's
+        // subnormal range and the guarantee tapers off — an f32 storage
+        // artifact, not a bf16 one.)
+        let mut rng = Rng::new(2);
+        for e in [-110, -60, -12, 0, 15, 40, 90, 120] {
+            for _ in 0..2_000 {
+                let v = rng.f32_with_exponent(e);
+                let (h, l) = split_bf16(v);
+                let rel = ((v as f64) - reconstruct_bf16(h, l) as f64).abs() / (v as f64).abs();
+                assert!(rel <= 2f64.powi(-15), "e={e} v={v} rel={rel:.3e}");
+            }
+        }
+    }
+
+    #[test]
+    fn fp16_cube_range_fails_where_bf16_works() {
+        // Contrast with the FP16 scheme: e = 40 overflows the FP16 high
+        // component entirely.
+        use crate::softfloat::split::{split_f32, SplitConfig};
+        let mut rng = Rng::new(3);
+        let v = rng.f32_with_exponent(40);
+        let (h16, _) = split_f32(v, &SplitConfig::default());
+        assert!(h16.is_infinite());
+        let (hb, lb) = split_bf16(v);
+        assert!(!hb.is_infinite());
+        let rel = ((v as f64) - reconstruct_bf16(hb, lb) as f64).abs() / (v as f64).abs();
+        assert!(rel <= 2f64.powi(-15));
+    }
+
+    #[test]
+    fn rz_truncates_toward_zero() {
+        let v = 1.0 + 2f32.powi(-8) + 2f32.powi(-9); // rounds up under RN
+        assert_eq!(Bf16::from_f32_rz(v).to_f32(), 1.0); // bits below ulp=2^-7 dropped
+        assert!(Bf16::from_f32_rz(v).to_f32() <= v);
+        assert!(Bf16::from_f32_rn(v).to_f32() > Bf16::from_f32_rz(v).to_f32());
+    }
+}

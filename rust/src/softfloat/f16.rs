@@ -1,0 +1,409 @@
+//! IEEE-754 binary16 implemented over `u16` bit patterns.
+//!
+//! Layout: 1 sign bit, 5 exponent bits (bias 15), 10 mantissa bits,
+//! implicit leading 1 for normal values, gradual underflow via
+//! subnormals. This mirrors the FP16 format of the Ascend Cube units
+//! (Sec. 3.3 of the paper).
+
+/// Rounding mode for `f32 -> f16` conversion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rounding {
+    /// Round-to-nearest, ties-to-even — what Ascend NPUs implement and
+    /// what the paper's analysis (Sec. 4) assumes.
+    Nearest,
+    /// Round-toward-zero (truncation) — used by prior GPU work
+    /// (Markidis et al.) and by Tensor Core internal accumulation;
+    /// reproduced for the comparison experiments.
+    TowardZero,
+}
+
+/// Whether subnormal (denormal) FP16 values are kept or flushed to zero.
+/// Fig. 2(a) contrasts both behaviours.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubnormalMode {
+    Supported,
+    FlushToZero,
+}
+
+const EXP_MASK: u16 = 0x7c00;
+const MAN_MASK: u16 = 0x03ff;
+const SIGN_MASK: u16 = 0x8000;
+
+/// A binary16 value stored as its bit pattern.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct F16(pub u16);
+
+impl F16 {
+    pub const ZERO: F16 = F16(0);
+    pub const NEG_ZERO: F16 = F16(0x8000);
+    pub const ONE: F16 = F16(0x3c00);
+    pub const INFINITY: F16 = F16(0x7c00);
+    pub const NEG_INFINITY: F16 = F16(0xfc00);
+    /// Largest finite value: (2 - 2^-10) * 2^15 = 65504.
+    pub const MAX: F16 = F16(0x7bff);
+    /// Smallest positive normal value: 2^-14.
+    pub const MIN_POSITIVE: F16 = F16(0x0400);
+    /// Smallest positive subnormal value: 2^-24.
+    pub const MIN_SUBNORMAL: F16 = F16(0x0001);
+    /// A quiet NaN.
+    pub const NAN: F16 = F16(0x7e00);
+
+    #[inline]
+    pub fn from_bits(bits: u16) -> F16 {
+        F16(bits)
+    }
+
+    #[inline]
+    pub fn to_bits(self) -> u16 {
+        self.0
+    }
+
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        (self.0 & EXP_MASK) == EXP_MASK && (self.0 & MAN_MASK) != 0
+    }
+
+    #[inline]
+    pub fn is_infinite(self) -> bool {
+        (self.0 & EXP_MASK) == EXP_MASK && (self.0 & MAN_MASK) == 0
+    }
+
+    #[inline]
+    pub fn is_subnormal(self) -> bool {
+        (self.0 & EXP_MASK) == 0 && (self.0 & MAN_MASK) != 0
+    }
+
+    #[inline]
+    pub fn is_zero(self) -> bool {
+        (self.0 & !SIGN_MASK) == 0
+    }
+
+    #[inline]
+    pub fn is_sign_negative(self) -> bool {
+        (self.0 & SIGN_MASK) != 0
+    }
+
+    /// Convert with round-to-nearest-even (the Ascend behaviour).
+    #[inline]
+    pub fn from_f32_rn(x: f32) -> F16 {
+        F16(f32_to_f16_bits(x, Rounding::Nearest))
+    }
+
+    /// Convert with round-toward-zero.
+    #[inline]
+    pub fn from_f32_rz(x: f32) -> F16 {
+        F16(f32_to_f16_bits(x, Rounding::TowardZero))
+    }
+
+    /// Convert with an explicit rounding mode.
+    #[inline]
+    pub fn from_f32(x: f32, mode: Rounding) -> F16 {
+        F16(f32_to_f16_bits(x, mode))
+    }
+
+    /// Exact widening conversion to f32 (every binary16 value is exactly
+    /// representable in binary32).
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f16_bits_to_f32(self.0)
+    }
+
+    /// Flush subnormals to (sign-preserving) zero if `mode` says so.
+    #[inline]
+    pub fn apply_subnormal_mode(self, mode: SubnormalMode) -> F16 {
+        match mode {
+            SubnormalMode::Supported => self,
+            SubnormalMode::FlushToZero => {
+                if self.is_subnormal() {
+                    F16(self.0 & SIGN_MASK)
+                } else {
+                    self
+                }
+            }
+        }
+    }
+
+    /// Unbiased exponent of a finite non-zero value (subnormals report
+    /// their effective exponent based on the leading significand bit).
+    pub fn exponent(self) -> Option<i32> {
+        if self.is_nan() || self.is_infinite() || self.is_zero() {
+            return None;
+        }
+        let e = ((self.0 & EXP_MASK) >> 10) as i32;
+        if e != 0 {
+            Some(e - 15)
+        } else {
+            // Subnormal: 0.M * 2^-14 — effective exponent from the
+            // position of the highest set mantissa bit.
+            let m = self.0 & MAN_MASK;
+            let lead = 15 - m.leading_zeros() as i32; // bit index of MSB (0..=9)
+            Some(-15 - (9 - lead)) // m == 0x200 -> 2^-15, m == 1 -> 2^-24
+        }
+    }
+}
+
+/// Core f32 -> f16 bit conversion.
+pub fn f32_to_f16_bits(x: f32, mode: Rounding) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+
+    if exp == 0xff {
+        // Inf / NaN: preserve NaN-ness (quiet bit set).
+        return if man != 0 { sign | 0x7e00 } else { sign | 0x7c00 };
+    }
+
+    let e = exp - 127; // unbiased f32 exponent (exp == 0 handled below)
+
+    if exp == 0 {
+        // f32 subnormal: magnitude < 2^-126, far below the f16 range.
+        return sign; // rounds to zero under both modes
+    }
+
+    if e >= 16 {
+        // Overflow.
+        return match mode {
+            Rounding::Nearest => sign | 0x7c00,    // -> inf
+            Rounding::TowardZero => sign | 0x7bff, // -> max finite
+        };
+    }
+
+    if e >= -14 {
+        // Normal f16 range.
+        let out = (((e + 15) as u32) << 10) | (man >> 13);
+        let rem = man & 0x1fff;
+        let rounded = match mode {
+            Rounding::TowardZero => out,
+            Rounding::Nearest => {
+                if rem > 0x1000 || (rem == 0x1000 && (out & 1) == 1) {
+                    out + 1 // carry may roll into the exponent and even to inf — correct RN behaviour
+                } else {
+                    out
+                }
+            }
+        };
+        return sign | rounded as u16;
+    }
+
+    if e >= -25 {
+        // Subnormal f16 range: represent as 0.M * 2^-14.
+        let sig = 0x0080_0000u32 | man; // 24-bit significand of 1.M
+        let shift = (13 + (-14 - e)) as u32; // 14..=24
+        let out = sig >> shift;
+        let rem = sig & ((1u32 << shift) - 1);
+        let rounded = match mode {
+            Rounding::TowardZero => out,
+            Rounding::Nearest => {
+                let half = 1u32 << (shift - 1);
+                if rem > half || (rem == half && (out & 1) == 1) {
+                    out + 1
+                } else {
+                    out
+                }
+            }
+        };
+        return sign | rounded as u16;
+    }
+
+    // |x| < 2^-25: underflows to zero under RN (nearest is 0) and RZ.
+    sign
+}
+
+/// Exact f16 -> f32 bit conversion.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & SIGN_MASK) as u32) << 16;
+    let exp = ((h & EXP_MASK) >> 10) as u32;
+    let man = (h & MAN_MASK) as u32;
+
+    if exp == 0x1f {
+        // Inf / NaN.
+        return f32::from_bits(sign | 0x7f80_0000 | (man << 13));
+    }
+    if exp == 0 {
+        if man == 0 {
+            return f32::from_bits(sign); // ±0
+        }
+        // Subnormal: value = man * 2^-24 with man in [1, 0x3ff].
+        let p = 31 - man.leading_zeros(); // MSB index, 0..=9
+        let frac = (man << (10 - p)) & (MAN_MASK as u32); // implicit bit dropped
+        let e32 = p + 103; // biased exponent of 2^(p - 24)
+        return f32::from_bits(sign | (e32 << 23) | (frac << 13));
+    }
+    // Normal.
+    f32::from_bits(sign | ((exp + 127 - 15) << 23) | (man << 13))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(h: u16) -> u16 {
+        f32_to_f16_bits(f16_bits_to_f32(h), Rounding::Nearest)
+    }
+
+    #[test]
+    fn exact_roundtrip_all_finite_f16() {
+        // Every finite f16 is exactly representable in f32; RN back must
+        // be the identity. Exhaustive over all 65536 patterns.
+        for bits in 0u16..=0xffff {
+            let h = F16(bits);
+            if h.is_nan() {
+                let rt = F16(roundtrip(bits));
+                assert!(rt.is_nan(), "NaN-ness lost for {bits:#06x}");
+            } else {
+                assert_eq!(roundtrip(bits), bits, "roundtrip failed for {bits:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn known_values() {
+        assert_eq!(F16::from_f32_rn(1.0).to_bits(), 0x3c00);
+        assert_eq!(F16::from_f32_rn(-2.0).to_bits(), 0xc000);
+        assert_eq!(F16::from_f32_rn(65504.0).to_bits(), 0x7bff);
+        assert_eq!(F16::from_f32_rn(0.5).to_bits(), 0x3800);
+        assert_eq!(F16::ONE.to_f32(), 1.0);
+        assert_eq!(F16::MAX.to_f32(), 65504.0);
+        assert_eq!(F16::MIN_POSITIVE.to_f32(), 2.0f32.powi(-14));
+        assert_eq!(F16::MIN_SUBNORMAL.to_f32(), 2.0f32.powi(-24));
+    }
+
+    #[test]
+    fn rn_ties_to_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1+2^-10: ties to even -> 1.0.
+        let halfway = 1.0 + 2.0f32.powi(-11);
+        assert_eq!(F16::from_f32_rn(halfway).to_bits(), 0x3c00);
+        // (1 + 2^-10) + 2^-11 is halfway with odd lower bit: rounds up.
+        let halfway_odd = 1.0 + 2.0f32.powi(-10) + 2.0f32.powi(-11);
+        assert_eq!(F16::from_f32_rn(halfway_odd).to_bits(), 0x3c02);
+        // Just above halfway always rounds up.
+        let above = 1.0 + 2.0f32.powi(-11) + 2.0f32.powi(-20);
+        assert_eq!(F16::from_f32_rn(above).to_bits(), 0x3c01);
+    }
+
+    #[test]
+    fn rz_truncates() {
+        let v = 1.0 + 2.0f32.powi(-11) + 2.0f32.powi(-12); // would RN to 0x3c01
+        assert_eq!(F16::from_f32_rz(v).to_bits(), 0x3c00);
+        assert_eq!(F16::from_f32_rn(v).to_bits(), 0x3c01);
+    }
+
+    #[test]
+    fn overflow_behaviour_by_mode() {
+        assert_eq!(F16::from_f32_rn(1e6).to_bits(), 0x7c00); // inf
+        assert_eq!(F16::from_f32_rz(1e6).to_bits(), 0x7bff); // max finite
+        assert_eq!(F16::from_f32_rn(-1e6).to_bits(), 0xfc00);
+        // RN boundary: values below 65520 round to max finite, >= 65520 to inf.
+        assert_eq!(F16::from_f32_rn(65519.0).to_bits(), 0x7bff);
+        assert_eq!(F16::from_f32_rn(65520.0).to_bits(), 0x7c00);
+    }
+
+    #[test]
+    fn subnormal_conversion() {
+        // 2^-24 is the smallest subnormal.
+        let tiny = 2.0f32.powi(-24);
+        assert_eq!(F16::from_f32_rn(tiny).to_bits(), 0x0001);
+        // 2^-25 is exactly halfway between 0 and 2^-24 -> ties to even -> 0.
+        assert_eq!(F16::from_f32_rn(2.0f32.powi(-25)).to_bits(), 0x0000);
+        // Slightly above 2^-25 rounds to 2^-24.
+        assert_eq!(F16::from_f32_rn(2.0f32.powi(-25) * 1.5).to_bits(), 0x0001);
+        // Below 2^-25 underflows to zero.
+        assert_eq!(F16::from_f32_rn(2.0f32.powi(-26)).to_bits(), 0x0000);
+        // A mid-range subnormal: 3 * 2^-16 = 0.0000457763671875.
+        let v = 3.0 * 2.0f32.powi(-16);
+        let h = F16::from_f32_rn(v);
+        assert!(h.is_subnormal());
+        assert_eq!(h.to_f32(), v);
+    }
+
+    #[test]
+    fn flush_to_zero_mode() {
+        let sub = F16::from_f32_rn(2.0f32.powi(-20));
+        assert!(sub.is_subnormal());
+        assert_eq!(sub.apply_subnormal_mode(SubnormalMode::FlushToZero), F16::ZERO);
+        assert_eq!(sub.apply_subnormal_mode(SubnormalMode::Supported), sub);
+        let neg_sub = F16::from_f32_rn(-(2.0f32.powi(-20)));
+        assert_eq!(neg_sub.apply_subnormal_mode(SubnormalMode::FlushToZero), F16::NEG_ZERO);
+        // Normals are untouched.
+        assert_eq!(F16::ONE.apply_subnormal_mode(SubnormalMode::FlushToZero), F16::ONE);
+    }
+
+    #[test]
+    fn nan_and_inf_conversion() {
+        assert!(F16::from_f32_rn(f32::NAN).is_nan());
+        assert_eq!(F16::from_f32_rn(f32::INFINITY), F16::INFINITY);
+        assert_eq!(F16::from_f32_rn(f32::NEG_INFINITY), F16::NEG_INFINITY);
+        assert!(F16::NAN.to_f32().is_nan());
+        assert_eq!(F16::INFINITY.to_f32(), f32::INFINITY);
+    }
+
+    #[test]
+    fn signed_zero() {
+        assert_eq!(F16::from_f32_rn(0.0).to_bits(), 0x0000);
+        assert_eq!(F16::from_f32_rn(-0.0).to_bits(), 0x8000);
+        assert_eq!(F16::NEG_ZERO.to_f32().to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn f32_subnormal_input_flushes() {
+        let tiny32 = f32::from_bits(1); // smallest f32 subnormal
+        assert_eq!(F16::from_f32_rn(tiny32).to_bits(), 0);
+        assert_eq!(F16::from_f32_rz(-tiny32).to_bits(), 0x8000);
+    }
+
+    #[test]
+    fn exponent_extraction() {
+        assert_eq!(F16::ONE.exponent(), Some(0));
+        assert_eq!(F16::from_f32_rn(0.25).exponent(), Some(-2));
+        assert_eq!(F16::MIN_POSITIVE.exponent(), Some(-14));
+        assert_eq!(F16::MIN_SUBNORMAL.exponent(), Some(-24));
+        assert_eq!(F16::from_f32_rn(2.0f32.powi(-15)).exponent(), Some(-15));
+        assert_eq!(F16::ZERO.exponent(), None);
+        assert_eq!(F16::INFINITY.exponent(), None);
+        assert_eq!(F16::NAN.exponent(), None);
+    }
+
+    #[test]
+    fn conversion_matches_native_as_cast() {
+        // Rust's `as` cast f32->f16 isn't available pre-1.78 w/o feature,
+        // but f16->f32 widening via our table must agree with the IEEE
+        // values; spot-check a dense grid through exact arithmetic.
+        for bits in (0u16..0x7c00).step_by(7) {
+            let v = f16_bits_to_f32(bits);
+            // Reconvert and ensure exactness (v is exactly representable).
+            assert_eq!(f32_to_f16_bits(v, Rounding::TowardZero), bits);
+        }
+    }
+
+    #[test]
+    fn rn_is_nearest_exhaustive_sample() {
+        // For a sample of f32 values, verify RN picks the closer of the
+        // two neighbouring f16 values (distance via f64 exactness).
+        let mut state = 0x1234_5678_9abc_def0u64;
+        for _ in 0..20_000 {
+            let r = crate::util::rng::splitmix64(&mut state);
+            let v = f32::from_bits((r as u32) & 0x477f_ffff); // |v| <= ~65504, positive exp range
+            if !v.is_finite() {
+                continue;
+            }
+            let h = F16::from_f32_rn(v);
+            if h.is_infinite() {
+                continue;
+            }
+            let hv = h.to_f32() as f64;
+            // neighbours
+            let up = F16(h.to_bits() + 1);
+            let down = if h.to_bits() & 0x7fff != 0 { Some(F16(h.to_bits() - 1)) } else { None };
+            let d = (v as f64 - hv).abs();
+            if !up.is_infinite() && !up.is_nan() {
+                assert!(d <= (v as f64 - up.to_f32() as f64).abs() + 1e-30, "v={v}");
+            }
+            if let Some(dn) = down {
+                if !dn.is_nan() {
+                    assert!(d <= (v as f64 - dn.to_f32() as f64).abs() + 1e-30, "v={v}");
+                }
+            }
+        }
+    }
+}

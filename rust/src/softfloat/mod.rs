@@ -1,0 +1,23 @@
+//! Bit-exact software implementation of IEEE-754 binary16 ("FP16") with
+//! explicit control over rounding mode and subnormal support.
+//!
+//! This substrate stands in for the Ascend Cube unit's FP16 datapath: the
+//! paper's accuracy results depend only on binary16 conversion/rounding
+//! semantics (round-to-nearest-even on Ascend), which are reproduced here
+//! exactly. The round-toward-zero mode exists to reproduce the *prior
+//! work* behaviour the paper contrasts against (Markidis et al., and the
+//! Tensor Core internal RZ accumulation identified by Ootomo & Yokota).
+//!
+//! Submodules:
+//! * [`f16`] — the `F16` type: conversion, arithmetic helpers, ULP tools.
+//! * [`split`] — the two-component FP32→2×FP16 split of Eq. (7).
+//! * [`analysis`] — the RN underflow-probability and precision-bits
+//!   analysis of Sec. 4 (Fig. 2).
+
+pub mod analysis;
+pub mod bf16;
+pub mod f16;
+pub mod split;
+
+pub use f16::{F16, Rounding, SubnormalMode};
+pub use split::{split_f32, reconstruct, SplitConfig, SplitMatrix};

@@ -1,0 +1,291 @@
+//! The two-component FP32 → 2×FP16 splitting of Eq. (7):
+//!
+//! ```text
+//! A_half   = to_half(A_single)
+//! R_A,half = to_half((A_single - to_single(A_half)) * s_f)
+//! A_single ≈ to_single(A_half) + to_single(R_A,half) / s_f
+//! ```
+//!
+//! The scaling factor `s_f = 2^{s_b}` amplifies the residual before the
+//! second conversion so that small residuals stay clear of the FP16
+//! subnormal range (Rule 1), while `s_b <= 12` avoids residual overflow
+//! for inputs up to the FP16 maximum (Rule 2). The paper's default — and
+//! ours — is `s_b = 12`.
+
+use crate::softfloat::f16::{F16, Rounding, SubnormalMode};
+use crate::util::mat::Matrix;
+
+/// Configuration of the splitting operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SplitConfig {
+    /// Scaling exponent `s_b` (factor is `2^{s_b}`). Paper default: 12.
+    pub scale_exp: i32,
+    /// Conversion rounding mode. Ascend: RN.
+    pub rounding: Rounding,
+    /// FP16 subnormal handling.
+    pub subnormals: SubnormalMode,
+}
+
+impl Default for SplitConfig {
+    fn default() -> Self {
+        SplitConfig {
+            scale_exp: 12,
+            rounding: Rounding::Nearest,
+            subnormals: SubnormalMode::Supported,
+        }
+    }
+}
+
+impl SplitConfig {
+    pub fn with_scale(scale_exp: i32) -> Self {
+        SplitConfig { scale_exp, ..Default::default() }
+    }
+
+    /// `s_f = 2^{s_b}` as f32 (exact for |s_b| < 128).
+    #[inline]
+    pub fn scale_factor(&self) -> f32 {
+        (self.scale_exp as f32).exp2()
+    }
+}
+
+/// Split one FP32 value into `(high, scaled residual)`.
+#[inline]
+pub fn split_f32(v: f32, cfg: &SplitConfig) -> (F16, F16) {
+    let high = F16::from_f32(v, cfg.rounding).apply_subnormal_mode(cfg.subnormals);
+    // `to_single(high)` is exact; the subtraction is exact by Sterbenz-ish
+    // closeness whenever `high` is finite and near `v` (error analysis in
+    // Sec. 4); multiplication by a power of two is exact absent
+    // overflow/underflow.
+    let residual = if high.is_infinite() {
+        // Overflowed high part: the scheme is out of range (Sec. 3.1).
+        // Keep the residual at zero; reconstruction returns ±inf.
+        0.0
+    } else {
+        (v - high.to_f32()) * cfg.scale_factor()
+    };
+    let low = F16::from_f32(residual, cfg.rounding).apply_subnormal_mode(cfg.subnormals);
+    (high, low)
+}
+
+/// Reconstruct the FP32 approximation `high + low / s_f`.
+#[inline]
+pub fn reconstruct(high: F16, low: F16, cfg: &SplitConfig) -> f32 {
+    high.to_f32() + low.to_f32() / cfg.scale_factor()
+}
+
+/// A matrix split into its high and scaled-residual FP16 components —
+/// the operand format consumed by the three-term cube GEMM.
+#[derive(Debug, Clone)]
+pub struct SplitMatrix {
+    pub high: Matrix<F16>,
+    pub low: Matrix<F16>,
+    pub cfg: SplitConfig,
+}
+
+impl SplitMatrix {
+    /// Split every element of `m`.
+    pub fn from_f32(m: &Matrix<f32>, cfg: SplitConfig) -> SplitMatrix {
+        let mut high = Matrix::zeros(m.rows(), m.cols());
+        let mut low = Matrix::zeros(m.rows(), m.cols());
+        for i in 0..m.rows() {
+            for j in 0..m.cols() {
+                let (h, l) = split_f32(m.get(i, j), &cfg);
+                high.set(i, j, h);
+                low.set(i, j, l);
+            }
+        }
+        SplitMatrix { high, low, cfg }
+    }
+
+    /// Reconstruct the FP32 approximation of the original matrix.
+    pub fn reconstruct(&self) -> Matrix<f32> {
+        let mut out = Matrix::zeros(self.high.rows(), self.high.cols());
+        for i in 0..out.rows() {
+            for j in 0..out.cols() {
+                out.set(i, j, reconstruct(self.high.get(i, j), self.low.get(i, j), &self.cfg));
+            }
+        }
+        out
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        self.high.shape()
+    }
+}
+
+/// Count the retained mantissa bits of the split representation of `v`:
+/// `-log2(|v - reconstruct| / |v|)` (∞-clamped at 24 when exact). Used by
+/// the Fig. 2(b) empirical curve.
+pub fn retained_bits(v: f32, cfg: &SplitConfig) -> f64 {
+    if v == 0.0 {
+        return 24.0;
+    }
+    let (h, l) = split_f32(v, cfg);
+    let approx = reconstruct(h, l, cfg) as f64;
+    let rel = ((v as f64) - approx).abs() / (v as f64).abs();
+    if rel == 0.0 {
+        24.0
+    } else {
+        (-rel.log2()).clamp(0.0, 24.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn split_is_exact_for_fp16_values() {
+        // Values already representable in FP16 have zero residual.
+        for v in [1.0f32, -0.5, 1024.0, 65504.0, 2.0f32.powi(-14)] {
+            let cfg = SplitConfig::default();
+            let (h, l) = split_f32(v, &cfg);
+            assert_eq!(h.to_f32(), v);
+            assert_eq!(l.to_f32(), 0.0);
+            assert_eq!(reconstruct(h, l, &cfg), v);
+        }
+    }
+
+    #[test]
+    fn split_recovers_about_22_bits_moderate_range() {
+        let cfg = SplitConfig::default();
+        let mut rng = Rng::new(99);
+        for _ in 0..50_000 {
+            let e = (rng.usize_below(25) as i32) - 12; // e in [-12, 12]
+            let v = rng.f32_with_exponent(e);
+            let bits = retained_bits(v, &cfg);
+            assert!(bits >= 21.9, "v={v} (e={e}) retained only {bits:.2} bits");
+        }
+    }
+
+    #[test]
+    fn unscaled_split_loses_bits_at_small_exponents() {
+        // Without scaling, e = -13 inputs lose residual precision to
+        // gradual underflow (Rule 1).
+        let cfg = SplitConfig::with_scale(0);
+        let mut rng = Rng::new(7);
+        let mut min_bits: f64 = 24.0;
+        for _ in 0..20_000 {
+            let v = rng.f32_with_exponent(-13);
+            min_bits = min_bits.min(retained_bits(v, &cfg));
+        }
+        assert!(min_bits < 22.0, "expected precision loss, min_bits={min_bits:.2}");
+        // With s_b = 12 the same regime retains full precision.
+        let cfg12 = SplitConfig::with_scale(12);
+        let mut rng = Rng::new(7);
+        let mut min_bits12: f64 = 24.0;
+        for _ in 0..20_000 {
+            let v = rng.f32_with_exponent(-13);
+            min_bits12 = min_bits12.min(retained_bits(v, &cfg12));
+        }
+        assert!(min_bits12 >= 21.9, "min_bits12={min_bits12:.2}");
+    }
+
+    #[test]
+    fn residual_subtraction_is_exact() {
+        // (v - to_single(to_half(v))) must be exact in f32: verify by
+        // recomputing in f64.
+        let mut rng = Rng::new(3);
+        for _ in 0..100_000 {
+            let e = (rng.usize_below(30) as i32) - 14;
+            let v = rng.f32_with_exponent(e);
+            let h = F16::from_f32_rn(v);
+            let r32 = v - h.to_f32();
+            let r64 = v as f64 - h.to_f32() as f64;
+            assert_eq!(r32 as f64, r64, "inexact residual for v={v}");
+        }
+    }
+
+    #[test]
+    fn overflowing_high_part_reconstructs_to_inf() {
+        let cfg = SplitConfig::default();
+        let (h, l) = split_f32(1e7, &cfg);
+        assert!(h.is_infinite());
+        assert_eq!(l, F16::ZERO);
+        assert!(reconstruct(h, l, &cfg).is_infinite());
+    }
+
+    #[test]
+    fn rule2_residual_overflow_beyond_sb12() {
+        // With s_b > 12 a large input's residual can overflow FP16
+        // (Rule 2). Find a witness near the FP16 max.
+        let cfg15 = SplitConfig::with_scale(15);
+        let mut overflowed = false;
+        let mut rng = Rng::new(11);
+        for _ in 0..50_000 {
+            let v = rng.f32_with_exponent(15);
+            let (h, l) = split_f32(v, &cfg15);
+            if !h.is_infinite() && l.is_infinite() {
+                overflowed = true;
+                break;
+            }
+        }
+        assert!(overflowed, "expected at least one residual overflow at s_b=15");
+        // ... and s_b = 12 never overflows the residual for e <= 14.
+        let cfg12 = SplitConfig::default();
+        let mut rng = Rng::new(11);
+        for _ in 0..50_000 {
+            let v = rng.f32_with_exponent(14);
+            let (h, l) = split_f32(v, &cfg12);
+            if !h.is_infinite() {
+                assert!(!l.is_infinite(), "residual overflow at s_b=12 for v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn rule2_tie_edge_case_at_e15() {
+        // Reproduction finding: the paper's Rule 2 analysis (N = 0 →
+        // residual weight 2^{E-12}) misses exact RN ties, whose residual
+        // magnitude is 2^{E-11}. At E = 15 and s_b = 12 the scaled
+        // residual is then 2^16 > 65504 and overflows FP16.
+        // v = 61936 = (1935.5) * 32 is exactly halfway between the fp16
+        // neighbours 61920 and 61952; ties-to-even picks 61952, leaving
+        // residual -16 = -2^4, which scales to -65536 -> -inf.
+        let cfg = SplitConfig::default();
+        let (h, l) = split_f32(61936.0, &cfg);
+        assert_eq!(h.to_f32(), 61952.0);
+        assert!(l.is_infinite(), "expected the tie-case residual to overflow");
+        // Any non-tie neighbour is fine.
+        let (h2, l2) = split_f32(61937.0, &cfg);
+        assert!(!h2.is_infinite() && !l2.is_infinite());
+    }
+
+    #[test]
+    fn matrix_split_reconstruct_close() {
+        let mut rng = Rng::new(21);
+        let m = Matrix::random_symmetric(16, 24, 0, &mut rng);
+        let sm = SplitMatrix::from_f32(&m, SplitConfig::default());
+        assert_eq!(sm.shape(), (16, 24));
+        let r = sm.reconstruct();
+        for i in 0..16 {
+            for j in 0..24 {
+                let v = m.get(i, j) as f64;
+                let w = r.get(i, j) as f64;
+                let tol = v.abs().max(2f64.powi(-30)) * 2f64.powi(-21);
+                assert!((v - w).abs() <= tol, "({i},{j}): {v} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn rz_split_biased_vs_rn() {
+        // RZ residuals are systematically non-negative-biased for positive
+        // inputs (truncation always rounds |.| down): reconstruction error
+        // mean should be worse than RN's.
+        let mut rng = Rng::new(5);
+        let (mut rn_err, mut rz_err) = (0.0f64, 0.0f64);
+        let n = 20_000;
+        for _ in 0..n {
+            let v = rng.f32_with_exponent(0);
+            let rn = SplitConfig { rounding: Rounding::Nearest, ..Default::default() };
+            let rz = SplitConfig { rounding: Rounding::TowardZero, ..Default::default() };
+            let (h1, l1) = split_f32(v, &rn);
+            let (h2, l2) = split_f32(v, &rz);
+            rn_err += ((reconstruct(h1, l1, &rn) as f64) - v as f64).abs();
+            rz_err += ((reconstruct(h2, l2, &rz) as f64) - v as f64).abs();
+        }
+        assert!(rz_err > rn_err, "rz_err={rz_err} rn_err={rn_err}");
+    }
+}

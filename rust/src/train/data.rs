@@ -1,0 +1,74 @@
+//! Synthetic datasets for the end-to-end training runs.
+
+use crate::util::mat::Matrix;
+use crate::util::rng::Rng;
+
+/// Regression: targets from a random linear teacher with noise.
+/// Returns `(x, y)` with `x: n×d_in`, `y: n×d_out`.
+pub fn teacher_dataset(
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+    noise: f32,
+    rng: &mut Rng,
+) -> (Matrix<f32>, Matrix<f32>) {
+    let teacher = Matrix::random_normal(d_in, d_out, 1.0 / (d_in as f32).sqrt(), rng);
+    let x = Matrix::random_normal(n, d_in, 1.0, rng);
+    let mut y = crate::gemm::sgemm::sgemm(&x, &teacher);
+    for v in y.as_mut_slice() {
+        *v += rng.normal() * noise;
+    }
+    (x, y)
+}
+
+/// Classification: the classic two-spiral problem embedded in `d_in`
+/// dimensions; labels one-hot in `y: n×2`.
+pub fn spiral_dataset(n: usize, d_in: usize, rng: &mut Rng) -> (Matrix<f32>, Matrix<f32>) {
+    assert!(d_in >= 2);
+    let mut x = Matrix::zeros(n, d_in);
+    let mut y = Matrix::zeros(n, 2);
+    for i in 0..n {
+        let class = i % 2;
+        let t = (i / 2) as f32 / (n as f32 / 2.0) * 3.0 * std::f32::consts::PI;
+        let r = t / (3.0 * std::f32::consts::PI);
+        let (s, c) = t.sin_cos();
+        let sign = if class == 0 { 1.0 } else { -1.0 };
+        x.set(i, 0, sign * r * c + rng.normal() * 0.02);
+        x.set(i, 1, sign * r * s + rng.normal() * 0.02);
+        for j in 2..d_in {
+            x.set(i, j, rng.normal() * 0.05); // uninformative padding dims
+        }
+        y.set(i, class, 1.0);
+    }
+    (x, y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn teacher_shapes_and_signal() {
+        let mut rng = Rng::new(1);
+        let (x, y) = teacher_dataset(128, 16, 4, 0.01, &mut rng);
+        assert_eq!(x.shape(), (128, 16));
+        assert_eq!(y.shape(), (128, 4));
+        // Targets carry signal: variance well above the noise floor.
+        let var = y.as_slice().iter().map(|v| (*v as f64).powi(2)).sum::<f64>() / y.as_slice().len() as f64;
+        assert!(var > 0.1, "var={var}");
+    }
+
+    #[test]
+    fn spiral_labels_one_hot_balanced() {
+        let mut rng = Rng::new(2);
+        let (x, y) = spiral_dataset(100, 8, &mut rng);
+        assert_eq!(x.shape(), (100, 8));
+        let mut counts = [0, 0];
+        for i in 0..100 {
+            let row = y.row(i);
+            assert_eq!(row.iter().sum::<f32>(), 1.0);
+            counts[if row[0] == 1.0 { 0 } else { 1 }] += 1;
+        }
+        assert_eq!(counts, [50, 50]);
+    }
+}

@@ -1,0 +1,14 @@
+//! End-to-end training substrate: a small MLP trained with every matmul
+//! routed through a selectable precision backend.
+//!
+//! This is the workload behind `examples/train_mlp.rs` (the e2e
+//! validation driver): the paper motivates SGEMM-cube with deep-learning
+//! workloads whose weights/activations have small magnitudes, so the
+//! success criterion is *cube-backend training tracks FP32 training
+//! while pure FP16 degrades*.
+
+pub mod data;
+pub mod mlp;
+
+pub use data::{spiral_dataset, teacher_dataset};
+pub use mlp::{Mlp, TrainRecord};

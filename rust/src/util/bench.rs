@@ -1,0 +1,187 @@
+//! Micro-benchmark harness (criterion substitute).
+//!
+//! Benches in `rust/benches/` are plain binaries (`harness = false`) that
+//! call into this module. Each measurement does a warm-up phase, then runs
+//! timed iterations until both a minimum iteration count and a minimum
+//! wall-clock budget are met, and reports summary statistics.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time statistics, in seconds.
+    pub seconds: Summary,
+    /// Optional work term (e.g. FLOPs per iteration) to derive throughput.
+    pub work_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    /// Throughput in work-units/second (e.g. FLOP/s) if work was declared.
+    pub fn throughput(&self) -> Option<f64> {
+        self.work_per_iter.map(|w| w / self.seconds.median)
+    }
+
+    /// Render one human-readable line.
+    pub fn line(&self) -> String {
+        let t = self.seconds.median;
+        let base = format!(
+            "{:<44} {:>12}  ±{:>9}  (n={})",
+            self.name,
+            fmt_duration(t),
+            fmt_duration(self.seconds.stddev),
+            self.seconds.n
+        );
+        match self.throughput() {
+            Some(tp) => format!("{base}  {:>10}/s", fmt_si(tp)),
+            None => base,
+        }
+    }
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_duration(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Format a rate with SI prefixes.
+pub fn fmt_si(v: f64) -> String {
+    const UNITS: [(&str, f64); 5] = [
+        ("T", 1e12),
+        ("G", 1e9),
+        ("M", 1e6),
+        ("k", 1e3),
+        ("", 1.0),
+    ];
+    for (u, scale) in UNITS {
+        if v >= scale {
+            return format!("{:.2} {u}", v / scale);
+        }
+    }
+    format!("{v:.2} ")
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    pub warmup: Duration,
+    pub min_time: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(100),
+            min_time: Duration::from_millis(500),
+            min_iters: 5,
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick profile for expensive end-to-end benches.
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(20),
+            min_time: Duration::from_millis(150),
+            min_iters: 3,
+            max_iters: 1_000,
+            ..Self::default()
+        }
+    }
+
+    /// Measure `f`, which performs one iteration of work per call and
+    /// returns a value that is black-boxed to keep the optimizer honest.
+    pub fn bench<R>(&mut self, name: &str, work_per_iter: Option<f64>, mut f: impl FnMut() -> R) -> &BenchResult {
+        // Warm-up.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // Timed iterations.
+        let mut samples = Vec::new();
+        let timed_start = Instant::now();
+        while (samples.len() < self.min_iters || timed_start.elapsed() < self.min_time)
+            && samples.len() < self.max_iters
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            seconds: Summary::of(&samples),
+            work_per_iter,
+        };
+        println!("{}", result.line());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Optimizer barrier (stable-rust version of `std::hint::black_box`,
+/// which is available since 1.66 — use the std one).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(1),
+            min_time: Duration::from_millis(5),
+            min_iters: 3,
+            max_iters: 100,
+            results: Vec::new(),
+        };
+        let r = b.bench("noop", Some(1.0), || 1 + 1).clone();
+        assert_eq!(r.name, "noop");
+        assert!(r.seconds.n >= 3);
+        assert!(r.throughput().unwrap() > 0.0);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert!(fmt_duration(2.0).ends_with(" s"));
+        assert!(fmt_duration(2e-3).ends_with("ms"));
+        assert!(fmt_duration(2e-6).ends_with("µs"));
+        assert!(fmt_duration(2e-9).ends_with("ns"));
+    }
+
+    #[test]
+    fn fmt_si_units() {
+        assert_eq!(fmt_si(1.5e12), "1.50 T");
+        assert_eq!(fmt_si(2e9), "2.00 G");
+        assert_eq!(fmt_si(5.0), "5.00 ");
+    }
+}

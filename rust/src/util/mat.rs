@@ -1,0 +1,214 @@
+//! Dense row-major matrices over a generic scalar.
+//!
+//! This is the host-side container shared by the exact numerics engine
+//! (`crate::gemm`), the coordinator request path and the PJRT literal
+//! conversion. It is deliberately minimal: contiguous `Vec<T>` storage,
+//! row-major, no strides or views — the blocked GEMM kernels do their own
+//! packing where layout matters.
+
+use crate::util::rng::Rng;
+
+/// Dense row-major matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix<T> {
+    rows: usize,
+    cols: usize,
+    data: Vec<T>,
+}
+
+impl<T: Copy + Default> Matrix<T> {
+    /// Zero-initialized (well, `T::default()`) matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![T::default(); rows * cols] }
+    }
+
+    /// Build from a closure over `(row, col)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> T) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Wrap an existing row-major buffer. Panics if the length mismatches.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<T>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer length != rows*cols");
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// `(rows, cols)` pair.
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> T {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: T) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Contiguous row slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[T] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [T] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Full backing buffer (row-major).
+    #[inline]
+    pub fn as_slice(&self) -> &[T] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    /// Consume into the backing buffer.
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Out-of-place transpose.
+    pub fn transpose(&self) -> Matrix<T> {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.set(j, i, self.get(i, j));
+            }
+        }
+        out
+    }
+
+    /// Map every element.
+    pub fn map<U: Copy + Default>(&self, mut f: impl FnMut(T) -> U) -> Matrix<U> {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| f(v)).collect(),
+        }
+    }
+}
+
+impl Matrix<f32> {
+    /// Matrix with entries from the paper's symmetric generator
+    /// `U[-2^e, 2^e]` (Sec 6.1).
+    pub fn random_symmetric(rows: usize, cols: usize, e: i32, rng: &mut Rng) -> Self {
+        Matrix::from_fn(rows, cols, |_, _| rng.symmetric_pow2(e))
+    }
+
+    /// Matrix with entries from the non-negative generator `U[0, 2^e]`.
+    pub fn random_nonneg(rows: usize, cols: usize, e: i32, rng: &mut Rng) -> Self {
+        Matrix::from_fn(rows, cols, |_, _| rng.nonneg_pow2(e))
+    }
+
+    /// Standard-normal entries scaled by `std` (training example init).
+    pub fn random_normal(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Self {
+        Matrix::from_fn(rows, cols, |_, _| rng.normal() * std)
+    }
+
+    /// Promote to f64 (for reference computations).
+    pub fn to_f64(&self) -> Matrix<f64> {
+        self.map(|v| v as f64)
+    }
+
+    /// Frobenius norm.
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+}
+
+impl Matrix<f64> {
+    /// Demote to f32 (RN, hardware conversion).
+    pub fn to_f32(&self) -> Matrix<f32> {
+        self.map(|v| v as f32)
+    }
+
+    /// Frobenius norm.
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|&v| v * v).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_shape_and_values() {
+        let m: Matrix<f32> = Matrix::zeros(3, 4);
+        assert_eq!(m.shape(), (3, 4));
+        assert!(m.as_slice().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn from_fn_indexing() {
+        let m = Matrix::from_fn(2, 3, |i, j| (i * 10 + j) as f32);
+        assert_eq!(m.get(0, 0), 0.0);
+        assert_eq!(m.get(1, 2), 12.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_length_mismatch_panics() {
+        let _ = Matrix::from_vec(2, 2, vec![1.0f32, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Matrix::from_fn(3, 5, |i, j| (i * 5 + j) as f64);
+        let t = m.transpose();
+        assert_eq!(t.shape(), (5, 3));
+        assert_eq!(t.get(4, 2), m.get(2, 4));
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn map_and_promote() {
+        let m = Matrix::from_fn(2, 2, |i, j| (i + j) as f32);
+        let d = m.to_f64();
+        assert_eq!(d.get(1, 1), 2.0f64);
+        assert_eq!(d.to_f32(), m);
+    }
+
+    #[test]
+    fn random_generators_in_range() {
+        let mut rng = Rng::new(1);
+        let s = Matrix::random_symmetric(8, 8, 2, &mut rng);
+        assert!(s.as_slice().iter().all(|&v| (-4.0..4.0).contains(&v)));
+        let n = Matrix::random_nonneg(8, 8, 0, &mut rng);
+        assert!(n.as_slice().iter().all(|&v| (0.0..1.0).contains(&v)));
+    }
+
+    #[test]
+    fn frobenius_simple() {
+        let m = Matrix::from_vec(1, 2, vec![3.0f32, 4.0]);
+        assert!((m.frobenius() - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,18 @@
+//! Shared utilities: deterministic PRNG, dense matrices, statistics,
+//! a micro-benchmark harness (criterion substitute) and a minimal
+//! property-testing framework (proptest substitute).
+//!
+//! The offline build image only vendors the `xla` crate closure, so the
+//! usual ecosystem crates (`rand`, `criterion`, `proptest`, `rayon`) are
+//! re-implemented here at the scale this project needs.
+
+pub mod bench;
+pub mod mat;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;
+pub mod threads;
+
+pub use bench::Bencher;
+pub use mat::Matrix;
+pub use rng::Rng;

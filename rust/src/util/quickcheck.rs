@@ -1,0 +1,168 @@
+//! Minimal property-testing framework (proptest substitute; the offline
+//! image does not vendor proptest).
+//!
+//! Provides seeded random-input property checks with a simple failure
+//! report including the seed and case index, so failures replay
+//! deterministically. No shrinking — cases are kept small instead.
+//!
+//! ```no_run
+//! # // no_run: doctest binaries miss the libxla rpath of the cargo config
+//! use sgemm_cube::qc_assert;
+//! use sgemm_cube::util::quickcheck::{property, Gen};
+//! property("addition commutes", 200, |g: &mut Gen| {
+//!     let a = g.f32_in(-1e3, 1e3);
+//!     let b = g.f32_in(-1e3, 1e3);
+//!     qc_assert!(a + b == b + a, "a={a} b={b}");
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Case generator handed to each property invocation.
+pub struct Gen {
+    rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, case: usize) -> Self {
+        Gen { rng: Rng::new(seed ^ (case as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)), case }
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi);
+        lo + self.rng.usize_below(hi - lo)
+    }
+
+    pub fn i32_in(&mut self, lo: i32, hi: i32) -> i32 {
+        assert!(lo < hi);
+        lo + self.rng.usize_below((hi - lo) as usize) as i32
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.f32_range(lo, hi)
+    }
+
+    /// An arbitrary finite f32 drawn from random bits (resampling
+    /// NaN/inf), biased toward the full exponent range rather than
+    /// uniform magnitude — good for conversion edge cases.
+    pub fn finite_f32(&mut self) -> f32 {
+        loop {
+            let v = f32::from_bits(self.rng.next_u32());
+            if v.is_finite() {
+                return v;
+            }
+        }
+    }
+
+    /// Finite f32 within the FP16-splittable range the paper targets
+    /// (|v| representable by an FP16 high part: |v| <= 65504).
+    pub fn moderate_f32(&mut self) -> f32 {
+        let e = self.i32_in(-20, 16);
+        let m = self.f32_in(1.0, 2.0);
+        let s = if self.u64() & 1 == 0 { 1.0 } else { -1.0 };
+        s * m * (e as f32).exp2()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.u64() & 1 == 1
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics with a replayable report on
+/// the first failure. Returns the number of executed cases.
+pub fn property(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) -> usize {
+    let seed = std::env::var("QC_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5eed_5eed_5eed_5eedu64);
+    for case in 0..cases {
+        let mut g = Gen::new(seed, case);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (QC_SEED={seed}): {msg}"
+            );
+        }
+    }
+    cases
+}
+
+/// Assertion macro producing `Err(String)` instead of panicking, so the
+/// property runner can attach seed/case context.
+#[macro_export]
+macro_rules! qc_assert {
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}: {}", stringify!($cond), format!($($fmt)+)));
+        }
+    };
+}
+
+/// Approximate-equality helper for property bodies.
+pub fn close(a: f64, b: f64, rel: f64, abs: f64) -> bool {
+    let diff = (a - b).abs();
+    diff <= abs || diff <= rel * a.abs().max(b.abs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn property_passes() {
+        let ran = property("tautology", 50, |g| {
+            let x = g.f32_in(0.0, 1.0);
+            qc_assert!((0.0..1.0).contains(&x));
+            Ok(())
+        });
+        assert_eq!(ran, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn property_reports_failure() {
+        property("fails", 10, |g| {
+            qc_assert!(g.case != 7, "deterministic failure at case 7");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_case() {
+        let mut a = Gen::new(1, 3);
+        let mut b = Gen::new(1, 3);
+        assert_eq!(a.u64(), b.u64());
+        let mut c = Gen::new(1, 4);
+        assert_ne!(a.u64(), c.u64());
+    }
+
+    #[test]
+    fn moderate_f32_in_fp16_range() {
+        let mut g = Gen::new(2, 0);
+        for _ in 0..1000 {
+            let v = g.moderate_f32();
+            assert!(v.is_finite() && v.abs() <= 65504.0, "v={v}");
+        }
+    }
+
+    #[test]
+    fn close_helper() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6, 0.0));
+        assert!(!close(1.0, 1.1, 1e-6, 1e-6));
+        assert!(close(0.0, 1e-9, 0.0, 1e-6));
+    }
+}

@@ -1,0 +1,226 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline build environment has no `rand` crate, so we implement the
+//! small amount of PRNG machinery the experiments need: splitmix64 for
+//! seeding and xoshiro256** as the main generator. All experiments seed
+//! explicitly so every figure is reproducible run-to-run.
+
+/// splitmix64 step — used to expand a single `u64` seed into a full
+/// xoshiro state and as a cheap standalone generator in tests.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** PRNG (Blackman & Vigna). Fast, high-quality, `Copy`-free.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (expanded via splitmix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut s = [0u64; 4];
+        for slot in &mut s {
+            *slot = splitmix64(&mut sm);
+        }
+        // xoshiro must not start from the all-zero state.
+        if s == [0, 0, 0, 0] {
+            s[0] = 0x9e37_79b9_7f4a_7c15;
+        }
+        Rng { s }
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Next `u32`.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform `f64` in `[0, 1)` with 53 random bits.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f32` in `[0, 1)` with 24 random bits.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.f32()
+    }
+
+    /// Uniform integer in `[0, n)` (n > 0), unbiased via rejection.
+    #[inline]
+    pub fn usize_below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        let n64 = n as u64;
+        let zone = u64::MAX - (u64::MAX % n64);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return (v % n64) as usize;
+            }
+        }
+    }
+
+    /// Symmetric uniform sample from `U[-2^e, 2^e]` — the paper's
+    /// "symmetric range" input generator (Sec 6.1), `e` = offset exponent.
+    #[inline]
+    pub fn symmetric_pow2(&mut self, e: i32) -> f32 {
+        let scale = (e as f32).exp2();
+        self.f32_range(-scale, scale)
+    }
+
+    /// Non-negative uniform sample from `U[0, 2^e]` (Sec 6.1).
+    #[inline]
+    pub fn nonneg_pow2(&mut self, e: i32) -> f32 {
+        let scale = (e as f32).exp2();
+        self.f32() * scale
+    }
+
+    /// Standard normal sample (Box–Muller; one value per call for
+    /// simplicity — the training example is not PRNG-bound).
+    pub fn normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.f64();
+            if u1 <= f64::EPSILON {
+                continue;
+            }
+            let u2 = self.f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            return (r * (2.0 * std::f64::consts::PI * u2).cos()) as f32;
+        }
+    }
+
+    /// A random finite `f32` whose *unbiased* exponent equals `e`
+    /// (i.e. magnitude in `[2^e, 2^(e+1))`), random sign and mantissa.
+    /// Used by the bit-level splitting analyses.
+    pub fn f32_with_exponent(&mut self, e: i32) -> f32 {
+        assert!((-126..=127).contains(&e), "normal f32 exponent required");
+        let mant = self.next_u32() & 0x007f_ffff;
+        let sign = (self.next_u32() & 1) << 31;
+        let bits = sign | (((e + 127) as u32) << 23) | mant;
+        f32::from_bits(bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn f32_unit_interval_mean() {
+        let mut r = Rng::new(9);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.f32() as f64).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn usize_below_in_range_and_covers() {
+        let mut r = Rng::new(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.usize_below(10);
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn symmetric_pow2_bounds() {
+        let mut r = Rng::new(5);
+        for _ in 0..1000 {
+            let v = r.symmetric_pow2(3);
+            assert!((-8.0..8.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn nonneg_pow2_bounds() {
+        let mut r = Rng::new(5);
+        for _ in 0..1000 {
+            let v = r.nonneg_pow2(-2);
+            assert!((0.0..0.25).contains(&v));
+        }
+    }
+
+    #[test]
+    fn f32_with_exponent_has_exponent() {
+        let mut r = Rng::new(11);
+        for e in [-14, -3, 0, 7, 15] {
+            for _ in 0..100 {
+                let v = r.f32_with_exponent(e);
+                let got = ((v.to_bits() >> 23) & 0xff) as i32 - 127;
+                assert_eq!(got, e);
+            }
+        }
+    }
+
+    #[test]
+    fn normal_mean_and_var() {
+        let mut r = Rng::new(13);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal() as f64).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+}

@@ -1,0 +1,110 @@
+//! Tiny data-parallel helper (rayon substitute).
+//!
+//! `parallel_chunks` splits an index range into contiguous chunks and runs
+//! a closure per chunk on scoped std threads. Used by the blocked GEMM
+//! kernels and the experiment sweeps. On the 1-core CI image this
+//! degenerates to a serial loop (zero thread overhead), but scales on
+//! multi-core hosts.
+
+/// Number of worker threads to use: `SGEMM_CUBE_THREADS` env override,
+/// else `available_parallelism`.
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("SGEMM_CUBE_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(start, end)` over disjoint chunks of `0..n` on up to
+/// `num_threads()` scoped threads. `f` must be `Sync` — interior
+/// mutability (or disjoint output regions via raw pointers at the caller)
+/// is the caller's responsibility.
+pub fn parallel_chunks<F>(n: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let workers = num_threads().min(n.max(1));
+    if workers <= 1 || n == 0 {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let start = w * chunk;
+            let end = ((w + 1) * chunk).min(n);
+            if start >= end {
+                break;
+            }
+            let f = &f;
+            scope.spawn(move || f(start, end));
+        }
+    });
+}
+
+/// Map `0..n` to a `Vec<R>` in parallel, preserving order.
+pub fn parallel_map<R, F>(n: usize, f: F) -> Vec<R>
+where
+    R: Send + Default + Clone,
+    F: Fn(usize) -> R + Sync,
+{
+    let mut out = vec![R::default(); n];
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    parallel_chunks(n, |start, end| {
+        let p = out_ptr; // copy the Send wrapper into the closure
+        for i in start..end {
+            // SAFETY: chunks are disjoint, so each index is written by
+            // exactly one thread; the Vec outlives the scope.
+            unsafe { *p.0.add(i) = f(i) };
+        }
+    });
+    out
+}
+
+/// Raw-pointer wrapper asserting cross-thread transfer is safe for
+/// disjoint-index writes.
+struct SendPtr<T>(*mut T);
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn covers_all_indices_once() {
+        let counter = AtomicUsize::new(0);
+        parallel_chunks(1000, |s, e| {
+            counter.fetch_add(e - s, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn handles_zero() {
+        parallel_chunks(0, |s, e| assert_eq!(s, e));
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let v = parallel_map(257, |i| i * 3);
+        assert_eq!(v.len(), 257);
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i * 3);
+        }
+    }
+
+    #[test]
+    fn num_threads_at_least_one() {
+        assert!(num_threads() >= 1);
+    }
+}

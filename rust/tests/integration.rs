@@ -1,0 +1,220 @@
+//! Cross-module integration tests: the full stack from artifacts through
+//! the runtime and coordinator, plus cross-layer consistency checks
+//! (rust softfloat vs AOT Pallas numerics).
+
+use std::time::Duration;
+
+use sgemm_cube::coordinator::batcher::BatcherConfig;
+use sgemm_cube::coordinator::policy::PrecisionPolicy;
+use sgemm_cube::coordinator::server::{GemmService, ServiceConfig};
+use sgemm_cube::gemm::backend::{Backend, GemmBackend};
+use sgemm_cube::gemm::cube::{cube_gemm, Accumulation};
+use sgemm_cube::gemm::dgemm::dgemm_of_f32;
+use sgemm_cube::gemm::error::relative_error;
+use sgemm_cube::runtime::Engine;
+use sgemm_cube::softfloat::split::SplitConfig;
+use sgemm_cube::util::mat::Matrix;
+use sgemm_cube::util::rng::Rng;
+
+fn artifacts_available() -> bool {
+    Engine::default_dir().join("manifest.txt").exists()
+}
+
+#[test]
+fn pjrt_cube_matches_native_cube_bitwise_error() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let engine = Engine::from_default_dir().unwrap();
+    let mut rng = Rng::new(11);
+    let a = Matrix::random_symmetric(128, 128, 0, &mut rng);
+    let b = Matrix::random_symmetric(128, 128, 0, &mut rng);
+    let c_aot = engine.gemm("cube_gemm_128", &a, &b).unwrap();
+    let c_native = cube_gemm(&a, &b, SplitConfig::default(), Accumulation::Termwise);
+    let c_ref = dgemm_of_f32(&a, &b);
+    let e_aot = relative_error(&c_ref, &c_aot.to_f64());
+    let e_native = relative_error(&c_ref, &c_native.to_f64());
+    // Same algorithm, same split: both near-fp32; each other within noise.
+    assert!(e_aot < 5e-7, "aot err {e_aot}");
+    assert!((e_aot - e_native).abs() / e_native < 0.5, "aot {e_aot} vs native {e_native}");
+}
+
+#[test]
+fn pjrt_split_matches_rust_softfloat_bit_exact() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let engine = Engine::from_default_dir().unwrap();
+    let mut rng = Rng::new(13);
+    let x = Matrix::random_symmetric(128, 128, 0, &mut rng);
+    let out = engine.run("split_128", &[&x]).unwrap();
+    let native = sgemm_cube::softfloat::split::SplitMatrix::from_f32(&x, SplitConfig::default());
+    for i in 0..128 {
+        for j in 0..128 {
+            assert_eq!(
+                out[0].get(i, j).to_bits(),
+                native.high.get(i, j).to_f32().to_bits(),
+                "high mismatch at ({i},{j})"
+            );
+            assert_eq!(
+                out[1].get(i, j).to_bits(),
+                native.low.get(i, j).to_f32().to_bits(),
+                "low mismatch at ({i},{j})"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_hgemm_matches_rust_hgemm_closely() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let engine = Engine::from_default_dir().unwrap();
+    let mut rng = Rng::new(17);
+    let a = Matrix::random_symmetric(128, 128, 0, &mut rng);
+    let b = Matrix::random_symmetric(128, 128, 0, &mut rng);
+    let c_aot = engine.gemm("hgemm_128", &a, &b).unwrap();
+    let c_native = sgemm_cube::gemm::hgemm::hgemm(&a, &b, sgemm_cube::gemm::hgemm::AccumulateMode::Fp32Rn);
+    // Same fp16 inputs, fp32 accumulate; only summation order differs.
+    let c_ref = dgemm_of_f32(&a, &b);
+    let ea = relative_error(&c_ref, &c_aot.to_f64());
+    let en = relative_error(&c_ref, &c_native.to_f64());
+    assert!((ea / en) < 1.5 && (en / ea) < 1.5, "aot {ea} vs native {en}");
+}
+
+#[test]
+fn mlp_train_step_artifact_reduces_loss() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let engine = Engine::from_default_dir().unwrap();
+    let mut rng = Rng::new(19);
+    let sizes = [64usize, 128, 128, 32];
+    let mut params: Vec<Matrix<f32>> = Vec::new();
+    for w in sizes.windows(2) {
+        params.push(Matrix::random_normal(w[0], w[1], (2.0 / w[0] as f32).sqrt(), &mut rng));
+        params.push(Matrix::zeros(1, w[1]));
+    }
+    let x = Matrix::random_normal(64, 64, 1.0, &mut rng);
+    let teacher = Matrix::random_normal(64, 32, 0.3, &mut rng);
+    let y = sgemm_cube::gemm::sgemm::sgemm(&x, &teacher);
+
+    let mut losses = Vec::new();
+    for _ in 0..5 {
+        let mut inputs: Vec<&Matrix<f32>> = vec![&x, &y];
+        inputs.extend(params.iter());
+        let out = engine.run("mlp_train_step", &inputs).unwrap();
+        losses.push(out[0].get(0, 0));
+        params = out[1..].to_vec();
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "AOT training must reduce loss: {losses:?}"
+    );
+}
+
+#[test]
+fn service_over_pjrt_consistency() {
+    // The coordinator's native cube path and the AOT artifact agree on
+    // the same inputs (both ~fp32 accurate).
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let engine = Engine::from_default_dir().unwrap();
+    let svc = GemmService::start(ServiceConfig {
+        batcher: BatcherConfig { max_batch: 2, max_wait: Duration::from_millis(1) },
+        policy: PrecisionPolicy::default(),
+        n_workers: 1,
+    });
+    let mut rng = Rng::new(23);
+    let a = Matrix::random_symmetric(128, 128, 0, &mut rng);
+    let b = Matrix::random_symmetric(128, 128, 0, &mut rng);
+    let served = svc.gemm_blocking(a.clone(), b.clone(), None).result.unwrap();
+    let aot = engine.gemm("cube_gemm_128", &a, &b).unwrap();
+    // Norm-relative comparison (elementwise ratios blow up on the
+    // near-zero cancellation entries of a symmetric product).
+    let diff = relative_error(&aot.to_f64(), &served.to_f64());
+    assert!(diff < 1e-6, "served vs aot norm-rel diff {diff}");
+    svc.shutdown();
+}
+
+#[test]
+fn engine_error_paths() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let engine = Engine::from_default_dir().unwrap();
+    // Unknown artifact name.
+    let err = engine.spec("nonexistent").unwrap_err();
+    assert!(format!("{err}").contains("unknown artifact"));
+    // Wrong input arity.
+    let m: Matrix<f32> = Matrix::zeros(64, 64);
+    let err = engine.run("cube_gemm_64", &[&m]).unwrap_err();
+    assert!(format!("{err}").contains("expects 2 inputs"));
+    // Wrong input shape (element count mismatch).
+    let bad: Matrix<f32> = Matrix::zeros(8, 8);
+    let err = engine.run("cube_gemm_64", &[&bad, &m]).unwrap_err();
+    assert!(format!("{err:#}").contains("input 0"));
+    // Executable cache: second lookup is the same Arc.
+    let e1 = engine.executable("cube_gemm_64").unwrap();
+    let e2 = engine.executable("cube_gemm_64").unwrap();
+    assert!(std::sync::Arc::ptr_eq(&e1, &e2));
+}
+
+#[test]
+fn full_backend_accuracy_ladder_large() {
+    // Integration-scale accuracy ladder at 192³ across every backend.
+    let mut rng = Rng::new(29);
+    let a = Matrix::random_symmetric(192, 192, 0, &mut rng);
+    let b = Matrix::random_symmetric(192, 192, 0, &mut rng);
+    let c_ref = dgemm_of_f32(&a, &b);
+    let err = |bk: Backend| {
+        relative_error(&c_ref, &GemmBackend::new(bk).gemm(&a, &b).to_f64())
+    };
+    let e16 = err(Backend::Fp16);
+    let e32 = err(Backend::Fp32);
+    let eel = err(Backend::CubeElementwise);
+    let etw = err(Backend::CubeTermwise);
+    assert!(e16 > 1e-5);
+    assert!(etw < e16 / 100.0);
+    assert!(eel < e16 / 100.0);
+    assert!(etw < e32 * 10.0);
+}
+
+#[test]
+fn quickcheck_service_responses_complete_and_match_ids() {
+    // Property: every submitted id receives exactly one response with a
+    // correct result, across random shapes/backends.
+    use sgemm_cube::util::quickcheck::{property, Gen};
+    let svc = GemmService::start(ServiceConfig {
+        batcher: BatcherConfig { max_batch: 3, max_wait: Duration::from_millis(1) },
+        policy: PrecisionPolicy::default(),
+        n_workers: 2,
+    });
+    property("service responds to all ids", 30, |g: &mut Gen| {
+        let m = 8 * g.usize_in(1, 4);
+        let k = 8 * g.usize_in(1, 4);
+        let n = 8 * g.usize_in(1, 4);
+        let mut rng = Rng::new(g.u64());
+        let a = Matrix::random_symmetric(m, k, 0, &mut rng);
+        let b = Matrix::random_symmetric(k, n, 0, &mut rng);
+        let backend = if g.bool() { None } else { Some(Backend::Fp32) };
+        let (id, rx) = svc.submit(a, b, backend);
+        let resp = rx
+            .recv_timeout(Duration::from_secs(10))
+            .map_err(|e| format!("no response: {e}"))?;
+        sgemm_cube::qc_assert!(resp.id == id, "id mismatch");
+        sgemm_cube::qc_assert!(resp.result.is_ok(), "gemm failed");
+        let c = resp.result.unwrap();
+        sgemm_cube::qc_assert!(c.shape() == (m, n), "bad shape {:?}", c.shape());
+        Ok(())
+    });
+    svc.shutdown();
+}

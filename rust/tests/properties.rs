@@ -1,0 +1,219 @@
+//! Property-based tests over the numerical substrates and coordinator
+//! invariants (proptest substitute: `sgemm_cube::util::quickcheck`).
+
+use sgemm_cube::coordinator::request::ShapeKey;
+use sgemm_cube::coordinator::scheduler::{assign, imbalance, tiles_of};
+use sgemm_cube::gemm::cube::{cube_gemm, Accumulation};
+use sgemm_cube::gemm::dgemm::dgemm_of_f32;
+use sgemm_cube::gemm::error::relative_error;
+use sgemm_cube::gemm::hgemm::add_f32_rz;
+use sgemm_cube::qc_assert;
+use sgemm_cube::softfloat::f16::{F16, Rounding};
+use sgemm_cube::softfloat::split::{reconstruct, split_f32, SplitConfig};
+use sgemm_cube::util::mat::Matrix;
+use sgemm_cube::util::quickcheck::{close, property, Gen};
+use sgemm_cube::util::rng::Rng;
+
+#[test]
+fn prop_f16_roundtrip_is_identity_on_f16_values() {
+    property("f16 -> f32 -> f16 identity", 2000, |g: &mut Gen| {
+        let bits = (g.u64() & 0xffff) as u16;
+        let h = F16::from_bits(bits);
+        if h.is_nan() {
+            return Ok(());
+        }
+        let rt = F16::from_f32_rn(h.to_f32());
+        qc_assert!(rt == h, "bits {bits:#06x} -> {:#06x}", rt.to_bits());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rn_conversion_error_within_half_ulp() {
+    property("|x - rn16(x)| <= ulp/2", 5000, |g: &mut Gen| {
+        let x = g.moderate_f32();
+        let h = F16::from_f32_rn(x);
+        if h.is_infinite() {
+            return Ok(());
+        }
+        let hv = h.to_f32();
+        // ULP at the converted value's scale.
+        let up = F16::from_bits(h.to_bits() + 1);
+        if up.is_nan() || up.is_infinite() {
+            return Ok(());
+        }
+        let ulp = (up.to_f32() - hv).abs();
+        qc_assert!(
+            (x - hv).abs() <= ulp / 2.0 + f32::EPSILON * x.abs(),
+            "x={x} hv={hv} ulp={ulp}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rz_magnitude_never_exceeds_input() {
+    property("|rz16(x)| <= |x|", 5000, |g: &mut Gen| {
+        let x = g.moderate_f32();
+        let h = F16::from_f32(x, Rounding::TowardZero);
+        qc_assert!(h.to_f32().abs() <= x.abs(), "x={x} -> {}", h.to_f32());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_split_reconstruct_error_bounded() {
+    // 22-bit recovery inside the supported window (Sec. 3.3 / Fig. 2b).
+    property("split keeps >= 21.9 bits for e in [-12, 14]", 3000, |g: &mut Gen| {
+        let e = g.i32_in(-12, 15);
+        let v = {
+            let mut rng = Rng::new(g.u64());
+            rng.f32_with_exponent(e)
+        };
+        let cfg = SplitConfig::default();
+        let (h, l) = split_f32(v, &cfg);
+        let approx = reconstruct(h, l, &cfg) as f64;
+        let rel = ((v as f64) - approx).abs() / (v as f64).abs();
+        qc_assert!(rel <= 2f64.powf(-21.9), "v={v} e={e} rel={rel:.3e}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_split_high_part_is_rn16() {
+    property("split high == rn16(v)", 3000, |g: &mut Gen| {
+        let v = g.moderate_f32();
+        let (h, _) = split_f32(v, &SplitConfig::default());
+        qc_assert!(h == F16::from_f32_rn(v), "v={v}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rz_add_is_exact_or_truncated() {
+    property("rz add below exact, within 1 ulp", 5000, |g: &mut Gen| {
+        let a = g.f32_in(-1e6, 1e6);
+        let b = g.f32_in(-1e6, 1e6);
+        let exact = a as f64 + b as f64;
+        let rz = add_f32_rz(a, b) as f64;
+        qc_assert!(rz.abs() <= exact.abs(), "a={a} b={b} rz={rz} exact={exact}");
+        let rn = (a + b) as f64;
+        qc_assert!(
+            (exact - rz).abs() <= 2.0 * (exact - rn).abs() + exact.abs() * f32::EPSILON as f64,
+            "a={a} b={b}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cube_gemm_within_fp32_class_error() {
+    property("cube gemm err < 1e-5 for moderate inputs", 25, |g: &mut Gen| {
+        let m = 8 * g.usize_in(1, 5);
+        let k = 8 * g.usize_in(1, 8);
+        let n = 8 * g.usize_in(1, 5);
+        let e = g.i32_in(-6, 7);
+        let mut rng = Rng::new(g.u64());
+        let a = Matrix::random_symmetric(m, k, e, &mut rng);
+        let b = Matrix::random_symmetric(k, n, e, &mut rng);
+        let c_ref = dgemm_of_f32(&a, &b);
+        let acc = if g.bool() { Accumulation::Termwise } else { Accumulation::Elementwise };
+        let c = cube_gemm(&a, &b, SplitConfig::default(), acc);
+        let err = relative_error(&c_ref, &c.to_f64());
+        qc_assert!(err < 1e-5, "({m},{k},{n}) e={e} err={err:.3e}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gemm_linearity_in_scaling() {
+    // cube_gemm(alpha*A, B) ≈ alpha*cube_gemm(A, B) for power-of-two
+    // alpha. Exactly equivariant while both splits stay in the fp16
+    // normal range; U[-1,1] tails can push residuals into the subnormal
+    // range (fixed quantum 2^-24), so the tolerance allows fp32-class
+    // noise rather than demanding bit equality.
+    property("power-of-two scale equivariance", 40, |g: &mut Gen| {
+        let n = 8 * g.usize_in(1, 4);
+        let p = g.i32_in(-3, 4);
+        let alpha = (p as f32).exp2();
+        let mut rng = Rng::new(g.u64());
+        let a = Matrix::random_symmetric(n, n, 0, &mut rng);
+        let b = Matrix::random_symmetric(n, n, 0, &mut rng);
+        let a_scaled = a.map(|v| v * alpha);
+        let c1 = cube_gemm(&a_scaled, &b, SplitConfig::default(), Accumulation::Termwise);
+        let c2 = cube_gemm(&a, &b, SplitConfig::default(), Accumulation::Termwise);
+        for i in 0..n {
+            for j in 0..n {
+                let x = c1.get(i, j) as f64;
+                let y = (c2.get(i, j) * alpha) as f64;
+                qc_assert!(close(x, y, 1e-5, 1e-9), "({i},{j}): {x} vs {y}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scheduler_tiles_partition_rows() {
+    property("tiles partition 0..m", 500, |g: &mut Gen| {
+        let m = g.usize_in(1, 5000);
+        let bm = 16 * g.usize_in(1, 16);
+        let tiles = tiles_of(m, bm);
+        qc_assert!(tiles[0].row_start == 0);
+        qc_assert!(tiles.last().unwrap().row_end == m);
+        let mut covered = 0;
+        for w in tiles.windows(2) {
+            qc_assert!(w[0].row_end == w[1].row_start, "gap/overlap");
+        }
+        for t in &tiles {
+            qc_assert!(t.rows() >= 1 && t.rows() <= bm);
+            covered += t.rows();
+        }
+        qc_assert!(covered == m, "covered {covered} != {m}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scheduler_assignment_complete_and_balanced() {
+    property("assignment covers tiles, imbalance bounded", 300, |g: &mut Gen| {
+        let m = g.usize_in(1, 4000);
+        let bm = 16 * g.usize_in(1, 12);
+        let workers = g.usize_in(1, 33);
+        let key = ShapeKey { m, k: 64, n: 64 };
+        let tiles = tiles_of(m, bm);
+        let qs = assign(&tiles, key, workers);
+        qc_assert!(qs.len() == workers);
+        let assigned: usize = qs.iter().map(|q| q.iter().map(|t| t.rows()).sum::<usize>()).sum();
+        qc_assert!(assigned == m, "assigned {assigned} != {m}");
+        // LPT bound: max load <= mean + one largest tile.
+        let imb = imbalance(&qs, key);
+        let n_tiles = tiles.len();
+        if n_tiles >= workers {
+            qc_assert!(imb <= 1.0 + workers as f64, "imbalance {imb}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_policy_scale_exp_within_eq6_window() {
+    use sgemm_cube::coordinator::policy::PrecisionPolicy;
+    use sgemm_cube::gemm::backend::Backend;
+    property("policy s_b respects Eq. (6)", 300, |g: &mut Gen| {
+        let e = g.i32_in(-24, 16);
+        let mut rng = Rng::new(g.u64());
+        let a = Matrix::from_fn(4, 4, |_, _| rng.f32_with_exponent(e.clamp(-24, 15)));
+        let b = Matrix::from_fn(4, 4, |_, _| rng.f32_with_exponent(e.clamp(-24, 15)));
+        let d = PrecisionPolicy::default().decide(&a, &b);
+        if d.backend == Backend::Fp32 {
+            return Ok(()); // out-of-range fallback
+        }
+        let (lo, hi) = (d.e_min.unwrap(), d.e_max.unwrap());
+        qc_assert!(d.scale_exp >= 0, "negative s_b");
+        qc_assert!(d.scale_exp <= 27 - hi, "s_b {} above Eq.6 upper bound", d.scale_exp);
+        // Lower bound only binds when achievable; default 12 otherwise.
+        qc_assert!(d.scale_exp >= 12.min(-2 - lo).max(0) || d.scale_exp == 12, "s_b too small");
+        Ok(())
+    });
+}
