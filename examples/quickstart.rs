@@ -13,7 +13,6 @@
 use sgemm_cube::gemm::backend::{Backend, GemmBackend};
 use sgemm_cube::gemm::dgemm::dgemm_of_f32;
 use sgemm_cube::gemm::error::relative_error;
-use sgemm_cube::runtime::Engine;
 use sgemm_cube::util::mat::Matrix;
 use sgemm_cube::util::rng::Rng;
 
@@ -31,16 +30,31 @@ fn main() -> anyhow::Result<()> {
         println!("  {:<18} err = {:.3e}", backend.name(), err(&c));
     }
 
+    pjrt_demo(&a, &b, &c_ref);
+
+    println!("\nExpected ordering: fp16 ≈ 1e-4  >>  cube ≈ fp32 ≈ 1e-7.");
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_demo(a: &Matrix<f32>, b: &Matrix<f32>, c_ref: &Matrix<f64>) {
+    use sgemm_cube::runtime::Engine;
     match Engine::from_default_dir() {
-        Ok(engine) => {
-            let c = engine.gemm("cube_gemm_128", &a, &b)?;
-            println!("  {:<18} err = {:.3e}  (Pallas kernel via PJRT)", "aot-cube", err(&c));
-        }
+        Ok(engine) => match engine.gemm("cube_gemm_128", a, b) {
+            Ok(c) => println!(
+                "  {:<18} err = {:.3e}  (Pallas kernel via PJRT)",
+                "aot-cube",
+                relative_error(c_ref, &c.to_f64())
+            ),
+            Err(e) => println!("\n(PJRT execution failed: {e})"),
+        },
         Err(e) => {
             println!("\n(skipping PJRT path: {e}; run `make artifacts`)");
         }
     }
+}
 
-    println!("\nExpected ordering: fp16 ≈ 1e-4  >>  cube ≈ fp32 ≈ 1e-7.");
-    Ok(())
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_demo(_a: &Matrix<f32>, _b: &Matrix<f32>, _c_ref: &Matrix<f64>) {
+    println!("\n(PJRT path disabled at build time; rebuild with --features pjrt)");
 }

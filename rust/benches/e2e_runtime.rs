@@ -9,7 +9,6 @@ use sgemm_cube::coordinator::batcher::BatcherConfig;
 use sgemm_cube::coordinator::policy::PrecisionPolicy;
 use sgemm_cube::coordinator::server::{GemmService, ServiceConfig};
 use sgemm_cube::gemm::backend::{Backend, GemmBackend};
-use sgemm_cube::runtime::Engine;
 use sgemm_cube::util::bench::Bencher;
 use sgemm_cube::util::mat::Matrix;
 use sgemm_cube::util::rng::Rng;
@@ -32,32 +31,7 @@ fn main() {
     }
 
     println!("\n== PJRT artifact execution (AOT Pallas kernels) ==");
-    match Engine::from_default_dir() {
-        Ok(engine) => {
-            for (name, n) in [("cube_gemm_64", 64usize), ("cube_gemm_128", 128), ("cube_gemm_256", 256)] {
-                let a = Matrix::random_symmetric(n, n, 0, &mut rng);
-                let bb = Matrix::random_symmetric(n, n, 0, &mut rng);
-                let flops = 2.0 * (n * n * n) as f64;
-                // warm the executable cache outside the timer
-                let _ = engine.gemm(name, &a, &bb).unwrap();
-                b.bench(&format!("pjrt/{name}"), Some(flops), || {
-                    engine.gemm(name, &a, &bb).unwrap()
-                });
-            }
-            let x = Matrix::random_normal(64, 64, 1.0, &mut rng);
-            let mut args: Vec<Matrix<f32>> = vec![x];
-            for w in [64usize, 128, 128, 32].windows(2) {
-                args.push(Matrix::random_normal(w[0], w[1], 0.1, &mut rng));
-                args.push(Matrix::zeros(1, w[1]));
-            }
-            let refs: Vec<&Matrix<f32>> = args.iter().collect();
-            let _ = engine.run("mlp_forward", &refs).unwrap();
-            b.bench("pjrt/mlp_forward(batch=64)", None, || {
-                engine.run("mlp_forward", &refs).unwrap()
-            });
-        }
-        Err(e) => println!("(skipping PJRT benches: {e}; run `make artifacts`)"),
-    }
+    pjrt_benches(&mut b, &mut rng);
 
     println!("\n== coordinator serving throughput ==");
     let svc = GemmService::start(ServiceConfig {
@@ -83,4 +57,40 @@ fn main() {
     });
     println!("\n{}", svc.metrics().report().line());
     svc.shutdown();
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_benches(b: &mut Bencher, rng: &mut Rng) {
+    use sgemm_cube::runtime::Engine;
+    match Engine::from_default_dir() {
+        Ok(engine) => {
+            for (name, n) in [("cube_gemm_64", 64usize), ("cube_gemm_128", 128), ("cube_gemm_256", 256)] {
+                let a = Matrix::random_symmetric(n, n, 0, rng);
+                let bb = Matrix::random_symmetric(n, n, 0, rng);
+                let flops = 2.0 * (n * n * n) as f64;
+                // warm the executable cache outside the timer
+                let _ = engine.gemm(name, &a, &bb).unwrap();
+                b.bench(&format!("pjrt/{name}"), Some(flops), || {
+                    engine.gemm(name, &a, &bb).unwrap()
+                });
+            }
+            let x = Matrix::random_normal(64, 64, 1.0, rng);
+            let mut args: Vec<Matrix<f32>> = vec![x];
+            for w in [64usize, 128, 128, 32].windows(2) {
+                args.push(Matrix::random_normal(w[0], w[1], 0.1, rng));
+                args.push(Matrix::zeros(1, w[1]));
+            }
+            let refs: Vec<&Matrix<f32>> = args.iter().collect();
+            let _ = engine.run("mlp_forward", &refs).unwrap();
+            b.bench("pjrt/mlp_forward(batch=64)", None, || {
+                engine.run("mlp_forward", &refs).unwrap()
+            });
+        }
+        Err(e) => println!("(skipping PJRT benches: {e}; run `make artifacts`)"),
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_benches(_b: &mut Bencher, _rng: &mut Rng) {
+    println!("(PJRT benches disabled at build time; rerun with --features pjrt)");
 }

@@ -1,8 +1,22 @@
 //! Bench target for Fig. 11: throughput vs blocking, single vs double
-//! buffer, on the calibrated 910A model.
+//! buffer, on the calibrated 910A model — plus the *executed* host
+//! counterpart: the cache-blocked packed engine vs the pre-blocking
+//! three-pass kernel, with the measurements written to
+//! `BENCH_gemm.json` at the repository root (overwritten with the
+//! latest run; commit it per PR to track the trajectory — see
+//! EXPERIMENTS.md §Perf-iteration-log).
+//!
+//! `QUICK=1 cargo bench --bench fig11_blocking_perf` shrinks the host
+//! GEMMs from 1024³ to 256³ for a fast smoke pass.
 
 use sgemm_cube::experiments::fig11_blocking_perf;
+use sgemm_cube::gemm::blocked::{cube_gemm_blocked, hgemm_blocked, host_block, sgemm_blocked};
+use sgemm_cube::gemm::fast::cube_gemm_three_pass;
 use sgemm_cube::sim::blocking::GemmShape;
+use sgemm_cube::softfloat::split::SplitConfig;
+use sgemm_cube::util::bench::Bencher;
+use sgemm_cube::util::mat::Matrix;
+use sgemm_cube::util::rng::Rng;
 
 fn main() {
     let shape = GemmShape::new(5632, 4096, 5632);
@@ -13,4 +27,37 @@ fn main() {
     println!("  double-buffer peak : 65.3 → {d:.1} TFLOP/s  (+{:.0}%, paper +57%)", (d / s - 1.0) * 100.0);
     println!("  fraction of 85.3   : 77% → {:.0}%", frac * 100.0);
     println!("  best block         : (176, 64, 176), N_fused = 44");
+
+    // ---- executed host engine: blocked packed kernels vs the baseline ----
+    let n = if std::env::var("QUICK").is_ok() { 256 } else { 1024 };
+    let block = host_block();
+    println!(
+        "\nhost-executed blocked engine at {n}³ — block = ({}, {}, {}) from sim::blocking on Chip::host_cpu():",
+        block.bm, block.bk, block.bn
+    );
+    let mut bench = Bencher::quick();
+    let mut rng = Rng::new(42);
+    let a = Matrix::random_symmetric(n, n, 0, &mut rng);
+    let b = Matrix::random_symmetric(n, n, 0, &mut rng);
+    let flops = 2.0 * (n as f64).powi(3);
+    let cfg = SplitConfig::default();
+    bench.bench(&format!("host/cube_gemm_three_pass/{n}^3"), Some(flops), || {
+        cube_gemm_three_pass(&a, &b, cfg)
+    });
+    bench.bench(&format!("host/cube_gemm_blocked/{n}^3"), Some(flops), || {
+        cube_gemm_blocked(&a, &b, cfg)
+    });
+    bench.bench(&format!("host/sgemm_blocked/{n}^3"), Some(flops), || sgemm_blocked(&a, &b));
+    bench.bench(&format!("host/hgemm_blocked/{n}^3"), Some(flops), || hgemm_blocked(&a, &b));
+
+    let results = bench.results();
+    let speedup = results[0].seconds.median / results[1].seconds.median;
+    println!("\ncube blocked-fused vs three-pass speedup: {speedup:.2}x (target ≥ 3x at 1024³)");
+
+    // Repo root, independent of the bench's working directory.
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_gemm.json");
+    match bench.write_json(&path) {
+        Ok(()) => println!("[json] {}", path.display()),
+        Err(e) => eprintln!("warning: could not write {path:?}: {e}"),
+    }
 }

@@ -75,10 +75,12 @@ pub struct GemmBackend {
     pub backend: Backend,
     pub split: SplitConfig,
     pub accumulate: AccumulateMode,
-    /// Hot-path mode (default): eight-lane partial-sum accumulation
-    /// (`crate::gemm::fast`), ~5–8× faster on SIMD hosts. Set `false`
-    /// for the bit-faithful single-chain accumulation order the accuracy
-    /// experiments study.
+    /// Hot-path mode (default): the cache-blocked packed engine
+    /// (`crate::gemm::fast` → `crate::gemm::blocked`) — panel packing,
+    /// register micro-kernels and the fused three-term cube pass, with
+    /// block sizes from `crate::sim::blocking` on the host cache model.
+    /// Set `false` for the bit-faithful single-chain accumulation order
+    /// the accuracy experiments study.
     pub fast: bool,
 }
 
@@ -112,7 +114,8 @@ impl GemmBackend {
                 Backend::Fp16 => fast::hgemm_fast(a, b),
                 // The elementwise/termwise distinction is an accuracy-
                 // experiment concern; the hot path serves the paper's
-                // default (termwise) structure.
+                // default (termwise) structure through the blocked
+                // fused three-term kernel.
                 Backend::CubeElementwise | Backend::CubeTermwise => {
                     fast::cube_gemm_fast(a, b, self.split)
                 }

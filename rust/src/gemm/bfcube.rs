@@ -53,10 +53,7 @@ pub fn bf16_cube_gemm(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
     let bl_t = bsp.low.transpose();
 
     let mut c = Matrix::zeros(m, n);
-    struct SendPtr(*mut f32);
-    unsafe impl Send for SendPtr {}
-    unsafe impl Sync for SendPtr {}
-    let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
+    let cp = crate::util::threads::SendPtr(c.as_mut_slice().as_mut_ptr());
     parallel_chunks(m, |i0, i1| {
         let cp = &cp;
         for i in i0..i1 {

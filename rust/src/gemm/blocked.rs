@@ -1,0 +1,439 @@
+//! Cache-blocked, packed GEMM engine — the executed counterpart of the
+//! paper's Sec. 5.1 blocking analysis.
+//!
+//! The reference kernels ([`crate::gemm::sgemm`], [`crate::gemm::hgemm`],
+//! [`crate::gemm::cube`]) are accuracy-faithful but stream the full B
+//! panel from memory once per output row. This module is the serving
+//! tier: a three-level `b_n → b_k → b_m` loop nest over packed panels
+//! ([`crate::gemm::pack`]) with an `MR × NR` register micro-kernel, and —
+//! for SGEMM-cube — a **fused three-term micro-kernel** that accumulates
+//! the high·high product and both correction terms in a single pass over
+//! dual-component interleaved panels, instead of the reference's three
+//! separate traversals.
+//!
+//! Block sizes are not hand-tuned: [`host_block`] runs the repo's own
+//! Eq. (12) feasibility machinery ([`crate::sim::blocking`]) against the
+//! [`Chip::host_cpu`] cache descriptor and picks the feasible
+//! configuration minimizing the Eq. (9) traffic model mapped onto this
+//! loop nest ([`Traffic::host_blocked`]). Eq. 8/9 therefore drive real
+//! execution, not just the simulator figures.
+//!
+//! Accumulation semantics: within one k block each output cell is a
+//! single FP32 chain in k order. For the *single-component* kernels
+//! ([`sgemm_blocked`], [`hgemm_blocked`]) that makes results
+//! bit-identical to the exact kernels whenever `k ≤ b_k`; across k
+//! blocks, per-block partials combine once per block. The fused cube
+//! kernel is the same accuracy *class* but not bit-identical to the
+//! termwise reference even for small k: it merges the two correction
+//! terms into one chain (`a_h·b_l + a_l·b_h` per step) where the
+//! reference keeps `s_hl`/`s_lh` separate — the corrections still
+//! aggregate among themselves before meeting the high product, which is
+//! the property Sec. 4.4 actually needs.
+//!
+//! Parallelism: one `parallel_chunks` round of scoped threads per
+//! `(b_n, b_k)` block, so every thread reads the same freshly packed B
+//! panel. The spawn/join cost is a few µs per round — ≲1% of the block's
+//! micro-kernel work at serving sizes — and buys a pool-free design; a
+//! persistent worker pool is the upgrade path if profiles ever show the
+//! barrier. The model's `b_m` is an *upper* bound on the row-block
+//! grain: when `m` is too small to give every worker a `b_m` block, the
+//! executed row block shrinks (to an `MR` multiple) so the engine keeps
+//! all cores busy — `b_m` governs packing/cache reuse, not the thread
+//! count (see [`exec_bm`]).
+//!
+//! The measured before/after for this engine is recorded in
+//! EXPERIMENTS.md §Perf-iteration-log.
+
+use std::sync::OnceLock;
+
+use crate::gemm::cube::WideSplit;
+use crate::gemm::pack::{self, MR, NR};
+use crate::sim::blocking::{feasible_blocks, BlockConfig, GemmShape, Traffic};
+use crate::sim::chip::Chip;
+use crate::softfloat::f16::F16;
+use crate::softfloat::split::SplitConfig;
+use crate::util::mat::Matrix;
+use crate::util::threads::{parallel_chunks, SendPtr};
+
+/// The block configuration every blocked kernel uses on this host.
+///
+/// Computed once: the Eq. (12)-feasible configuration on
+/// [`Chip::host_cpu`] minimizing [`Traffic::host_blocked`] at the
+/// serving-scale reference shape 1024³ (the traffic ranking is nearly
+/// shape-free — every term scales with the problem volume — so one
+/// selection serves all sizes).
+pub fn host_block() -> BlockConfig {
+    static BLOCK: OnceLock<BlockConfig> = OnceLock::new();
+    *BLOCK.get_or_init(|| select_block(&Chip::host_cpu()))
+}
+
+/// Enumerate the feasible blocks on `chip` (Eq. 12) and pick the one
+/// minimizing the executed-nest traffic model (Eq. 9 mapped onto the
+/// host loop nest). Ties break toward larger `b_m` (fewer, larger packed
+/// row blocks amortize per-block overhead).
+pub fn select_block(chip: &Chip) -> BlockConfig {
+    let shape = GemmShape::new(1024, 1024, 1024);
+    feasible_blocks(chip, 256)
+        .into_iter()
+        .min_by(|x, y| {
+            let tx = Traffic::host_blocked(shape, *x).total_elems();
+            let ty = Traffic::host_blocked(shape, *y).total_elems();
+            tx.total_cmp(&ty).then_with(|| y.bm.cmp(&x.bm))
+        })
+        .expect("host chip admits at least one feasible block")
+}
+
+/// FP32 blocked GEMM with single-chain-per-cell accumulation inside each
+/// k block (bit-identical to [`crate::gemm::sgemm::sgemm`] for
+/// `k ≤ b_k`).
+pub fn sgemm_blocked(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
+    assert_eq!(a.cols(), b.rows(), "inner dimensions must match: {} vs {}", a.cols(), b.rows());
+    gemm_blocked_core(a, b)
+}
+
+/// FP16 Cube GEMM (operands converted to FP16 RN and widened exactly,
+/// FP32 accumulation), through the blocked engine.
+pub fn hgemm_blocked(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
+    assert_eq!(a.cols(), b.rows(), "inner dimensions must match: {} vs {}", a.cols(), b.rows());
+    let ah = a.map(|v| F16::from_f32_rn(v).to_f32());
+    let bh = b.map(|v| F16::from_f32_rn(v).to_f32());
+    gemm_blocked_core(&ah, &bh)
+}
+
+/// SGEMM-cube through the blocked engine: split, then the fused
+/// three-term micro-kernel over dual-component packed panels.
+pub fn cube_gemm_blocked(a: &Matrix<f32>, b: &Matrix<f32>, cfg: SplitConfig) -> Matrix<f32> {
+    assert_eq!(a.cols(), b.rows(), "inner dimensions must match: {} vs {}", a.cols(), b.rows());
+    let asp = WideSplit::of(a, cfg);
+    let bsp = WideSplit::of(b, cfg);
+    cube_gemm_blocked_split(&asp, &bsp)
+}
+
+/// SGEMM-cube over pre-split operands — for callers that already hold
+/// `WideSplit` components and want to skip the per-call split (the
+/// serving path does not cache splits yet; it enters via
+/// [`cube_gemm_blocked`]).
+pub fn cube_gemm_blocked_split(a: &WideSplit, b: &WideSplit) -> Matrix<f32> {
+    assert_eq!(a.cfg, b.cfg, "operands must be split with the same configuration");
+    let (_, k) = a.high.shape();
+    let kb = b.high.rows();
+    assert_eq!(k, kb, "inner dimensions must match: {k} vs {kb}");
+    let inv_sf = 1.0f32 / a.cfg.scale_factor();
+    cube_blocked_core(&a.high, &a.low, &b.high, &b.low, inv_sf)
+}
+
+/// The executed row-block size: the model's `b_m` capped so that `m`
+/// yields at least one row block per worker (keeping all cores busy on
+/// serving-size problems), rounded to the `MR` panel geometry.
+pub fn exec_bm(m: usize, model_bm: usize) -> usize {
+    let workers = crate::util::threads::num_threads().max(1);
+    // Rounded *down* to an MR multiple so small m still splits into at
+    // least one block per worker whenever m >= MR·workers.
+    let per_worker = (m.div_ceil(workers) / MR * MR).max(MR);
+    model_bm.min(per_worker)
+}
+
+/// Single-component blocked driver: `b_n → b_k → row blocks`, packed B
+/// panel shared per (j, k) block, per-thread packed A row blocks.
+fn gemm_blocked_core(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
+    let (m, k) = a.shape();
+    let n = b.cols();
+    let mut c = Matrix::zeros(m, n);
+    if m == 0 || n == 0 || k == 0 {
+        return c;
+    }
+    let block = host_block();
+    let (bm, bk, bn) = (exec_bm(m, block.bm), block.bk, block.bn);
+    let row_blocks = m.div_ceil(bm);
+    let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
+    let mut bp = Vec::new();
+    for j0 in (0..n).step_by(bn) {
+        let nc = bn.min(n - j0);
+        for p0 in (0..k).step_by(bk) {
+            let kc = bk.min(k - p0);
+            pack::pack_b(b, p0, kc, j0, nc, &mut bp);
+            let bp = &bp;
+            let cp = &cp;
+            parallel_chunks(row_blocks, |rb0, rb1| {
+                let mut ap = Vec::new();
+                for rb in rb0..rb1 {
+                    let i0 = rb * bm;
+                    let mc = bm.min(m - i0);
+                    pack::pack_a(a, i0, mc, p0, kc, &mut ap);
+                    for (rp, apanel) in ap.chunks_exact(kc * MR).enumerate() {
+                        let ci = i0 + rp * MR;
+                        let mr_eff = MR.min(m - ci);
+                        for (cpnl, bpanel) in bp.chunks_exact(kc * NR).enumerate() {
+                            let cj = j0 + cpnl * NR;
+                            let nr_eff = NR.min(n - cj);
+                            let acc = kernel_f32(apanel, bpanel);
+                            add_tile(cp, n, ci, cj, mr_eff, nr_eff, &acc);
+                        }
+                    }
+                }
+            });
+        }
+    }
+    c
+}
+
+/// Dual-component blocked driver with the fused three-term micro-kernel.
+fn cube_blocked_core(
+    ah: &Matrix<f32>,
+    al: &Matrix<f32>,
+    bh: &Matrix<f32>,
+    bl: &Matrix<f32>,
+    inv_sf: f32,
+) -> Matrix<f32> {
+    let (m, k) = ah.shape();
+    let n = bh.cols();
+    let mut c = Matrix::zeros(m, n);
+    if m == 0 || n == 0 || k == 0 {
+        return c;
+    }
+    let block = host_block();
+    let (bm, bk, bn) = (exec_bm(m, block.bm), block.bk, block.bn);
+    let row_blocks = m.div_ceil(bm);
+    let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
+    let mut bp = Vec::new();
+    for j0 in (0..n).step_by(bn) {
+        let nc = bn.min(n - j0);
+        for p0 in (0..k).step_by(bk) {
+            let kc = bk.min(k - p0);
+            pack::pack_b_dual(bh, bl, p0, kc, j0, nc, &mut bp);
+            let bp = &bp;
+            let cp = &cp;
+            parallel_chunks(row_blocks, |rb0, rb1| {
+                let mut ap = Vec::new();
+                for rb in rb0..rb1 {
+                    let i0 = rb * bm;
+                    let mc = bm.min(m - i0);
+                    pack::pack_a_dual(ah, al, i0, mc, p0, kc, &mut ap);
+                    for (rp, apanel) in ap.chunks_exact(kc * 2 * MR).enumerate() {
+                        let ci = i0 + rp * MR;
+                        let mr_eff = MR.min(m - ci);
+                        for (cpnl, bpanel) in bp.chunks_exact(kc * 2 * NR).enumerate() {
+                            let cj = j0 + cpnl * NR;
+                            let nr_eff = NR.min(n - cj);
+                            let (hh, corr) = kernel_cube(apanel, bpanel);
+                            add_tile_cube(cp, n, ci, cj, mr_eff, nr_eff, &hh, &corr, inv_sf);
+                        }
+                    }
+                }
+            });
+        }
+    }
+    c
+}
+
+/// `MR × NR` register micro-kernel: one FP32 chain per cell over the
+/// panel's k steps, `NR`-lane rows autovectorizing to SIMD FMAs.
+#[inline]
+fn kernel_f32(apanel: &[f32], bpanel: &[f32]) -> [[f32; NR]; MR] {
+    let mut acc = [[0.0f32; NR]; MR];
+    for (av, bv) in apanel.chunks_exact(MR).zip(bpanel.chunks_exact(NR)) {
+        for (i, acc_row) in acc.iter_mut().enumerate() {
+            let a = av[i];
+            for (dst, &bj) in acc_row.iter_mut().zip(bv) {
+                *dst += a * bj;
+            }
+        }
+    }
+    acc
+}
+
+/// Fused three-term cube micro-kernel over dual-component panels: per k
+/// step it reads `(a_h, a_l)` and `(b_h, b_l)` once and feeds two
+/// accumulator planes — the high·high product and the combined
+/// corrections `a_h·b_l + a_l·b_h`. The corrections therefore aggregate
+/// among themselves and meet the high product only at the tile combine
+/// (the paper's termwise order, Sec. 4.4), while the three terms share a
+/// single traversal instead of the reference's three passes.
+#[inline]
+fn kernel_cube(apanel: &[f32], bpanel: &[f32]) -> ([[f32; NR]; MR], [[f32; NR]; MR]) {
+    let mut hh = [[0.0f32; NR]; MR];
+    let mut corr = [[0.0f32; NR]; MR];
+    for (av, bv) in apanel.chunks_exact(2 * MR).zip(bpanel.chunks_exact(2 * NR)) {
+        let (ahs, als) = av.split_at(MR);
+        let (bhs, bls) = bv.split_at(NR);
+        for i in 0..MR {
+            let vh = ahs[i];
+            let vl = als[i];
+            let hh_row = &mut hh[i];
+            let corr_row = &mut corr[i];
+            for j in 0..NR {
+                hh_row[j] += vh * bhs[j];
+                corr_row[j] += vh * bls[j] + vl * bhs[j];
+            }
+        }
+    }
+    (hh, corr)
+}
+
+/// `C[ci.., cj..] += acc` for the valid `mr_eff × nr_eff` sub-tile.
+fn add_tile(
+    cp: &SendPtr<f32>,
+    n: usize,
+    ci: usize,
+    cj: usize,
+    mr_eff: usize,
+    nr_eff: usize,
+    acc: &[[f32; NR]; MR],
+) {
+    for (i, acc_row) in acc.iter().enumerate().take(mr_eff) {
+        let base = (ci + i) * n + cj;
+        for (j, &v) in acc_row.iter().enumerate().take(nr_eff) {
+            // SAFETY: row-block chunks are disjoint across threads and the
+            // output buffer outlives the parallel scope.
+            unsafe { *cp.0.add(base + j) += v };
+        }
+    }
+}
+
+/// Cube tile combine: corrections (already aggregated together) are
+/// scaled and meet the high product once per k block.
+#[allow(clippy::too_many_arguments)]
+fn add_tile_cube(
+    cp: &SendPtr<f32>,
+    n: usize,
+    ci: usize,
+    cj: usize,
+    mr_eff: usize,
+    nr_eff: usize,
+    hh: &[[f32; NR]; MR],
+    corr: &[[f32; NR]; MR],
+    inv_sf: f32,
+) {
+    for i in 0..mr_eff {
+        let base = (ci + i) * n + cj;
+        for j in 0..nr_eff {
+            // SAFETY: row-block chunks are disjoint across threads and the
+            // output buffer outlives the parallel scope.
+            unsafe { *cp.0.add(base + j) += hh[i][j] + corr[i][j] * inv_sf };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::cube::{cube_gemm, Accumulation};
+    use crate::gemm::dgemm::dgemm_of_f32;
+    use crate::gemm::error::relative_error;
+    use crate::gemm::hgemm::{hgemm, AccumulateMode};
+    use crate::gemm::sgemm::sgemm;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn selected_block_is_feasible_and_model_driven() {
+        let chip = Chip::host_cpu();
+        let block = host_block();
+        assert!(block.validate(&chip).is_ok(), "{block:?}");
+        assert!(block.n_fused(&chip) >= 1);
+        // Multiples of the alignment, hence of the micro-kernel geometry.
+        assert_eq!(block.bm % MR, 0);
+        assert_eq!(block.bn % NR, 0);
+        // It is the argmin of the host traffic model over the feasible set.
+        let shape = GemmShape::new(1024, 1024, 1024);
+        let best = Traffic::host_blocked(shape, block).total_elems();
+        for cand in feasible_blocks(&chip, 256) {
+            assert!(
+                Traffic::host_blocked(shape, cand).total_elems() >= best - 1e-6,
+                "{cand:?} beats selected {block:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn exec_bm_caps_model_block_and_keeps_workers_busy() {
+        let workers = crate::util::threads::num_threads().max(1);
+        for m in [1usize, 7, 96, 128, 1024, 5000] {
+            let e = exec_bm(m, 128);
+            assert!(e >= MR && e <= 128 && e % MR == 0, "m={m} e={e}");
+            if m >= workers * 128 {
+                // Large m keeps the model block and every worker busy.
+                assert_eq!(e, 128, "m={m}");
+                assert!(m.div_ceil(e) >= workers, "m={m} e={e}");
+            }
+        }
+        // Tiny m degrades to the MR panel grain, never below.
+        assert_eq!(exec_bm(1, 128), MR);
+    }
+
+    #[test]
+    fn sgemm_blocked_bit_identical_to_exact_within_one_k_block() {
+        // For k <= b_k every cell is one FP32 chain in k order — exactly
+        // the reference accumulation.
+        let bk = host_block().bk;
+        let mut rng = Rng::new(50);
+        for (m, k, n) in [(5, 1, 3), (33, 65, 17), (64, bk.min(96), 40)] {
+            if k > bk {
+                continue; // bit-identity only claimed within one k block
+            }
+            let a = Matrix::random_symmetric(m, k, 0, &mut rng);
+            let b = Matrix::random_symmetric(k, n, 0, &mut rng);
+            let exact = sgemm(&a, &b);
+            let blocked = sgemm_blocked(&a, &b);
+            for (x, y) in exact.as_slice().iter().zip(blocked.as_slice()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_kernels_match_reference_accuracy_class() {
+        let mut rng = Rng::new(51);
+        let a = Matrix::random_symmetric(96, 300, 0, &mut rng);
+        let b = Matrix::random_symmetric(300, 72, 0, &mut rng);
+        let c_ref = dgemm_of_f32(&a, &b);
+        let e = |c: &Matrix<f32>| relative_error(&c_ref, &c.to_f64());
+        let e_s = e(&sgemm_blocked(&a, &b));
+        let e_h = e(&hgemm_blocked(&a, &b));
+        let e_c = e(&cube_gemm_blocked(&a, &b, SplitConfig::default()));
+        assert!(e_s < 1e-6, "sgemm_blocked {e_s}");
+        assert!((1e-5..1e-3).contains(&e_h), "hgemm_blocked {e_h}");
+        assert!(e_c < 1e-6, "cube_gemm_blocked {e_c}");
+        assert!(e_c < e_h / 50.0, "cube {e_c} vs hgemm {e_h}");
+        // Within multi-accumulator noise of the exact kernels.
+        let x_s = e(&sgemm(&a, &b));
+        let x_c = e(&cube_gemm(&a, &b, SplitConfig::default(), Accumulation::Termwise));
+        let x_h = e(&hgemm(&a, &b, AccumulateMode::Fp32Rn));
+        assert!(e_s <= x_s.max(1e-8) * 2.0, "sgemm {e_s} vs exact {x_s}");
+        assert!(e_c <= x_c.max(1e-8) * 2.0, "cube {e_c} vs exact {x_c}");
+        assert!(e_h <= x_h * 2.0, "hgemm {e_h} vs exact {x_h}");
+    }
+
+    #[test]
+    fn cube_blocked_exact_for_fp16_exact_inputs() {
+        let a = Matrix::from_vec(2, 2, vec![1.5f32, -2.0, 0.25, 8.0]);
+        let b = Matrix::from_vec(2, 2, vec![4.0f32, 0.5, -1.0, 2.0]);
+        let c = cube_gemm_blocked(&a, &b, SplitConfig::default());
+        let r = dgemm_of_f32(&a, &b);
+        for (x, y) in c.as_slice().iter().zip(r.as_slice().iter()) {
+            assert_eq!(*x as f64, *y);
+        }
+    }
+
+    #[test]
+    fn split_config_mismatch_panics() {
+        let a = Matrix::zeros(4, 4);
+        let asp = WideSplit::of(&a, SplitConfig::with_scale(12));
+        let bsp = WideSplit::of(&a, SplitConfig::with_scale(6));
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            cube_gemm_blocked_split(&asp, &bsp)
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        let a: Matrix<f32> = Matrix::zeros(0, 5);
+        let b: Matrix<f32> = Matrix::zeros(5, 4);
+        assert_eq!(sgemm_blocked(&a, &b).shape(), (0, 4));
+        let a: Matrix<f32> = Matrix::zeros(3, 0);
+        let b: Matrix<f32> = Matrix::zeros(0, 2);
+        let c = sgemm_blocked(&a, &b);
+        assert_eq!(c.shape(), (3, 2));
+        assert!(c.as_slice().iter().all(|&v| v == 0.0));
+    }
+}

@@ -71,10 +71,7 @@ pub fn cube_gemm_split(a: &WideSplit, b: &WideSplit, acc: Accumulation) -> Matri
     let bl_t = b.low.transpose();
 
     let mut c = Matrix::zeros(m, n);
-    struct SendPtr(*mut f32);
-    unsafe impl Send for SendPtr {}
-    unsafe impl Sync for SendPtr {}
-    let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
+    let cp = crate::util::threads::SendPtr(c.as_mut_slice().as_mut_ptr());
 
     parallel_chunks(m, |i0, i1| {
         let cp = &cp;
@@ -149,25 +146,33 @@ pub fn cube_gemm_four_term(a: &Matrix<f32>, b: &Matrix<f32>, cfg: SplitConfig) -
     let bh_t = bsp.high.transpose();
     let bl_t = bsp.low.transpose();
     let mut c = Matrix::zeros(m, n);
-    for i in 0..m {
-        let ah = asp.high.row(i);
-        let al = asp.low.row(i);
-        for j in 0..n {
-            let bh = bh_t.row(j);
-            let bl = bl_t.row(j);
-            let mut s_hh = 0.0f32;
-            let mut s_hl = 0.0f32;
-            let mut s_lh = 0.0f32;
-            let mut s_ll = 0.0f32;
-            for t in 0..k {
-                s_hh += ah[t] * bh[t];
-                s_hl += ah[t] * bl[t];
-                s_lh += al[t] * bh[t];
-                s_ll += al[t] * bl[t];
+    let cp = crate::util::threads::SendPtr(c.as_mut_slice().as_mut_ptr());
+    // Shares the row-parallel driver with the other kernels; per-row
+    // arithmetic (four independent term chains) is unchanged, so results
+    // are bit-identical to the previous serial loop.
+    parallel_chunks(m, |i0, i1| {
+        let cp = &cp;
+        for i in i0..i1 {
+            let ah = asp.high.row(i);
+            let al = asp.low.row(i);
+            for j in 0..n {
+                let bh = bh_t.row(j);
+                let bl = bl_t.row(j);
+                let mut s_hh = 0.0f32;
+                let mut s_hl = 0.0f32;
+                let mut s_lh = 0.0f32;
+                let mut s_ll = 0.0f32;
+                for t in 0..k {
+                    s_hh += ah[t] * bh[t];
+                    s_hl += ah[t] * bl[t];
+                    s_lh += al[t] * bh[t];
+                    s_ll += al[t] * bl[t];
+                }
+                // SAFETY: row chunks are disjoint across threads.
+                unsafe { *cp.0.add(i * n + j) = s_hh + (s_hl + s_lh) * inv_sf + s_ll * inv_sf2 };
             }
-            c.set(i, j, s_hh + (s_hl + s_lh) * inv_sf + s_ll * inv_sf2);
         }
-    }
+    });
     c
 }
 

@@ -16,10 +16,7 @@ pub fn dgemm(a: &Matrix<f64>, b: &Matrix<f64>) -> Matrix<f64> {
     let bt = b.transpose(); // pack B columns contiguously
     let mut c = Matrix::zeros(m, n);
 
-    struct SendPtr(*mut f64);
-    unsafe impl Send for SendPtr {}
-    unsafe impl Sync for SendPtr {}
-    let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
+    let cp = crate::util::threads::SendPtr(c.as_mut_slice().as_mut_ptr());
 
     parallel_chunks(m, |i0, i1| {
         let cp = &cp;

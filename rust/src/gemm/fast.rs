@@ -1,25 +1,33 @@
-//! Vectorizable hot-path GEMM variants.
+//! Hot-path GEMM entry points.
 //!
 //! The *exact* kernels ([`crate::gemm::sgemm`], [`crate::gemm::hgemm`],
 //! [`crate::gemm::cube`]) keep a single FP32 running sum per output so
 //! their accumulation order is bit-faithful to the semantics the
 //! accuracy experiments study — which also makes them latency-bound on
-//! one dependent FP-add chain (~2.3 GFLOP/s on this host).
+//! one dependent FP-add chain.
 //!
 //! The serving/training hot path does not need a *specific* order, only
-//! a correct one, so these variants split the k loop over eight partial
-//! accumulators (autovectorizes to SIMD FMA lanes). Multi-accumulator
-//! summation is the standard BLAS approach and is statistically slightly
-//! *more* accurate than a single chain; the trade is bit-reproducibility
-//! against the single-chain reference, not accuracy. §Perf in
-//! EXPERIMENTS.md records the measured before/after.
+//! a correct one. These entry points are now thin wrappers over the
+//! cache-blocked packed engine ([`crate::gemm::blocked`]): panel packing,
+//! an `MR × NR` register micro-kernel, and — for SGEMM-cube — a fused
+//! micro-kernel computing all three dominant terms in one traversal of
+//! dual-component interleaved panels, with block sizes chosen by the
+//! repo's own Eq. 8/9/12 machinery against the host cache descriptor.
+//!
+//! [`dot8`] (the original eight-lane dot product) and
+//! [`cube_gemm_three_pass`] (the pre-blocking row×column kernel that
+//! walks the three correction terms in three separate passes) are kept
+//! as the measured baselines — EXPERIMENTS.md §Perf-iteration-log and
+//! `cargo bench --bench fig11_blocking_perf` compare the blocked engine
+//! against them and record the trajectory in `BENCH_gemm.json`.
 
-use crate::softfloat::f16::F16;
+use crate::gemm::blocked;
 use crate::softfloat::split::SplitConfig;
 use crate::util::mat::Matrix;
 use crate::util::threads::parallel_chunks;
 
-/// Eight-lane partial-sum dot product (autovectorizes).
+/// Eight-lane partial-sum dot product (autovectorizes). Baseline for the
+/// blocked micro-kernel; still used by callers wanting a flat dot.
 #[inline]
 pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
@@ -40,46 +48,29 @@ pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
     (s01 + s23) + tail
 }
 
-fn gemm_with(a: &Matrix<f32>, bt: &Matrix<f32>, dot: impl Fn(&[f32], &[f32]) -> f32 + Sync) -> Matrix<f32> {
-    let (m, _k) = a.shape();
-    let n = bt.rows();
-    let mut c = Matrix::zeros(m, n);
-    struct SendPtr(*mut f32);
-    unsafe impl Send for SendPtr {}
-    unsafe impl Sync for SendPtr {}
-    let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
-    parallel_chunks(m, |i0, i1| {
-        let cp = &cp;
-        for i in i0..i1 {
-            let arow = a.row(i);
-            for j in 0..n {
-                // SAFETY: disjoint row chunks.
-                unsafe { *cp.0.add(i * n + j) = dot(arow, bt.row(j)) };
-            }
-        }
-    });
-    c
-}
-
-/// FP32 GEMM, eight-lane accumulation.
+/// FP32 GEMM through the blocked packed engine.
 pub fn sgemm_fast(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
-    assert_eq!(a.cols(), b.rows(), "inner dimensions must match");
-    gemm_with(a, &b.transpose(), dot8)
+    blocked::sgemm_blocked(a, b)
 }
 
-/// FP16 Cube GEMM (fp16 operands widened exactly, fp32 accumulate),
-/// eight-lane accumulation.
+/// FP16 Cube GEMM (fp16 operands widened exactly, fp32 accumulate)
+/// through the blocked packed engine.
 pub fn hgemm_fast(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
-    assert_eq!(a.cols(), b.rows(), "inner dimensions must match");
-    let ah = a.map(|v| F16::from_f32_rn(v).to_f32());
-    let bh = b.map(|v| F16::from_f32_rn(v).to_f32());
-    gemm_with(&ah, &bh.transpose(), dot8)
+    blocked::hgemm_blocked(a, b)
 }
 
-/// SGEMM-cube, termwise, eight-lane accumulation per term. The termwise
-/// *structure* (three independent term accumulators, corrections summed
-/// before meeting the high product) is preserved.
+/// SGEMM-cube through the blocked engine's fused three-term micro-kernel.
+/// The termwise *structure* (corrections aggregated before meeting the
+/// high product) is preserved; see [`crate::gemm::blocked`].
 pub fn cube_gemm_fast(a: &Matrix<f32>, b: &Matrix<f32>, cfg: SplitConfig) -> Matrix<f32> {
+    blocked::cube_gemm_blocked(a, b, cfg)
+}
+
+/// The pre-blocking SGEMM-cube hot path: row × transposed-column `dot8`
+/// over the full width of B, one pass per term (`s_hh`, `s_hl`, `s_lh`).
+/// Kept as the perf baseline the blocked fused kernel is measured
+/// against (EXPERIMENTS.md §Perf-iteration-log).
+pub fn cube_gemm_three_pass(a: &Matrix<f32>, b: &Matrix<f32>, cfg: SplitConfig) -> Matrix<f32> {
     assert_eq!(a.cols(), b.rows(), "inner dimensions must match");
     let asp = crate::gemm::cube::WideSplit::of(a, cfg);
     let bsp = crate::gemm::cube::WideSplit::of(b, cfg);
@@ -90,10 +81,7 @@ pub fn cube_gemm_fast(a: &Matrix<f32>, b: &Matrix<f32>, cfg: SplitConfig) -> Mat
     let inv_sf = 1.0f32 / cfg.scale_factor();
 
     let mut c = Matrix::zeros(m, n);
-    struct SendPtr(*mut f32);
-    unsafe impl Send for SendPtr {}
-    unsafe impl Sync for SendPtr {}
-    let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
+    let cp = crate::util::threads::SendPtr(c.as_mut_slice().as_mut_ptr());
     parallel_chunks(m, |i0, i1| {
         let cp = &cp;
         for i in i0..i1 {
@@ -102,9 +90,6 @@ pub fn cube_gemm_fast(a: &Matrix<f32>, b: &Matrix<f32>, cfg: SplitConfig) -> Mat
             for j in 0..n {
                 let bh = bh_t.row(j);
                 let bl = bl_t.row(j);
-                // Three independent dot8 passes measured faster than a
-                // fused 4-stream kernel (register pressure) — see
-                // EXPERIMENTS.md §Perf iteration log.
                 let s_hh = dot8(ah, bh);
                 let s_hl = dot8(ah, bl);
                 let s_lh = dot8(al, bh);
@@ -160,7 +145,20 @@ mod tests {
         let c_ref = dgemm_of_f32(&a, &b);
         let e_exact = relative_error(&c_ref, &exact.to_f64());
         let e_fast = relative_error(&c_ref, &fast.to_f64());
-        // Multi-accumulator summation is at least comparable in accuracy.
+        // Blocked accumulation is at least comparable in accuracy.
         assert!(e_fast <= e_exact * 2.0, "fast {e_fast} vs exact {e_exact}");
+    }
+
+    #[test]
+    fn three_pass_baseline_matches_blocked_class() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::random_symmetric(48, 200, 0, &mut rng);
+        let b = Matrix::random_symmetric(200, 56, 0, &mut rng);
+        let c_ref = dgemm_of_f32(&a, &b);
+        let cfg = SplitConfig::default();
+        let e_three = relative_error(&c_ref, &cube_gemm_three_pass(&a, &b, cfg).to_f64());
+        let e_blocked = relative_error(&c_ref, &cube_gemm_fast(&a, &b, cfg).to_f64());
+        assert!(e_three < 1e-6, "three-pass {e_three}");
+        assert!(e_blocked < 1e-6, "blocked {e_blocked}");
     }
 }

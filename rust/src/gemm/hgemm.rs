@@ -67,10 +67,7 @@ pub fn hgemm_preconverted(ah: &Matrix<f32>, bh: &Matrix<f32>, mode: AccumulateMo
     let bt = bh.transpose();
     let mut c = Matrix::zeros(m, n);
 
-    struct SendPtr(*mut f32);
-    unsafe impl Send for SendPtr {}
-    unsafe impl Sync for SendPtr {}
-    let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
+    let cp = crate::util::threads::SendPtr(c.as_mut_slice().as_mut_ptr());
 
     parallel_chunks(m, |i0, i1| {
         let cp = &cp;

@@ -18,17 +18,33 @@
 //! * [`error`] — the relative error metric of Eq. (13).
 //! * [`backend`] — a dynamic `GemmBackend` abstraction used by the
 //!   coordinator and the training example to switch precision paths.
+//!
+//! The engine is two-tier: the exact, order-faithful kernels above serve
+//! the accuracy experiments, while the serving/training hot path runs
+//! through the cache-blocked packed engine —
+//!
+//! * [`pack`] — `MR`/`NR`-interleaved panel packing, including the
+//!   dual-component format that carries the split high/low FP16
+//!   components in one stream.
+//! * [`blocked`] — the `b_n → b_k → b_m` loop nest, the register
+//!   micro-kernel and the fused three-term cube micro-kernel; block
+//!   sizes come from [`crate::sim::blocking`] on the host cache model.
+//! * [`fast`] — the hot-path entry points (wrappers over [`blocked`],
+//!   plus the retained pre-blocking baselines).
 
 pub mod backend;
 pub mod bfcube;
+pub mod blocked;
 pub mod cube;
 pub mod dgemm;
 pub mod error;
 pub mod fast;
 pub mod hgemm;
+pub mod pack;
 pub mod sgemm;
 
 pub use backend::{Backend, GemmBackend};
+pub use blocked::{cube_gemm_blocked, hgemm_blocked, sgemm_blocked};
 pub use cube::{cube_gemm, cube_gemm_split, Accumulation};
 pub use dgemm::dgemm;
 pub use error::relative_error;

@@ -1,0 +1,219 @@
+//! Panel packing for the blocked GEMM engine ([`crate::gemm::blocked`]).
+//!
+//! The micro-kernel reads operands from contiguous, interleaved panels
+//! instead of strided matrix rows/columns:
+//!
+//! * **A row panels** (`MR`-interleaved): an `mc × kc` block of A becomes
+//!   `⌈mc/MR⌉` panels; panel `r` stores, for each k step `p`, the `MR`
+//!   column-`p` values of rows `r·MR .. r·MR+MR`. The micro-kernel's k
+//!   loop then walks one contiguous stream.
+//! * **B column panels** (`NR`-interleaved): a `kc × nc` block of B
+//!   becomes `⌈nc/NR⌉` panels; panel `c` stores, per k step, the `NR`
+//!   row-`p` values of columns `c·NR .. c·NR+NR`.
+//! * **Dual-component panels** for the cube kernel: the split high/low
+//!   FP16 components (widened to f32, see
+//!   [`crate::gemm::cube::WideSplit`]) are interleaved per k step —
+//!   `MR` highs then `MR` lows (resp. `NR`/`NR`) — so the fused
+//!   three-term micro-kernel reads both components of both operands in
+//!   one forward stream.
+//!
+//! Edge blocks are zero-padded up to the `MR`/`NR` boundary: the
+//! micro-kernel stays branch-free (padded lanes accumulate exact zeros)
+//! and the store path simply drops the padded rows/columns. Padding only
+//! ever adds rows/columns, never k steps, so every *valid* output cell
+//! accumulates exactly the true products in k order.
+
+use crate::util::mat::Matrix;
+
+/// Rows of the register micro-tile; A panels are `MR`-interleaved.
+pub const MR: usize = 4;
+/// Columns of the register micro-tile; B panels are `NR`-interleaved.
+/// Matches the 8-lane accumulator width that autovectorizes like `dot8`.
+pub const NR: usize = 8;
+
+/// Number of `MR`-row panels covering `mc` rows.
+#[inline]
+pub fn a_panels(mc: usize) -> usize {
+    mc.div_ceil(MR)
+}
+
+/// Number of `NR`-column panels covering `nc` columns.
+#[inline]
+pub fn b_panels(nc: usize) -> usize {
+    nc.div_ceil(NR)
+}
+
+/// Pack the `mc × kc` block of `a` with origin `(i0, p0)` into
+/// `MR`-interleaved row panels. `out` is cleared first.
+pub fn pack_a(a: &Matrix<f32>, i0: usize, mc: usize, p0: usize, kc: usize, out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(a_panels(mc) * kc * MR);
+    for r in 0..a_panels(mc) {
+        for p in 0..kc {
+            for i in 0..MR {
+                let row = r * MR + i;
+                out.push(if row < mc { a.get(i0 + row, p0 + p) } else { 0.0 });
+            }
+        }
+    }
+}
+
+/// Pack the `kc × nc` block of `b` with origin `(p0, j0)` into
+/// `NR`-interleaved column panels. `out` is cleared first.
+pub fn pack_b(b: &Matrix<f32>, p0: usize, kc: usize, j0: usize, nc: usize, out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(b_panels(nc) * kc * NR);
+    for c in 0..b_panels(nc) {
+        for p in 0..kc {
+            let row = b.row(p0 + p);
+            for j in 0..NR {
+                let col = c * NR + j;
+                out.push(if col < nc { row[j0 + col] } else { 0.0 });
+            }
+        }
+    }
+}
+
+/// Dual-component A packing: per k step, `MR` high values then `MR` low
+/// values (stride `2·MR` per step). `high` and `low` must share a shape.
+pub fn pack_a_dual(
+    high: &Matrix<f32>,
+    low: &Matrix<f32>,
+    i0: usize,
+    mc: usize,
+    p0: usize,
+    kc: usize,
+    out: &mut Vec<f32>,
+) {
+    debug_assert_eq!(high.shape(), low.shape());
+    out.clear();
+    out.reserve(a_panels(mc) * kc * 2 * MR);
+    for r in 0..a_panels(mc) {
+        for p in 0..kc {
+            for i in 0..MR {
+                let row = r * MR + i;
+                out.push(if row < mc { high.get(i0 + row, p0 + p) } else { 0.0 });
+            }
+            for i in 0..MR {
+                let row = r * MR + i;
+                out.push(if row < mc { low.get(i0 + row, p0 + p) } else { 0.0 });
+            }
+        }
+    }
+}
+
+/// Dual-component B packing: per k step, `NR` high values then `NR` low
+/// values (stride `2·NR` per step).
+pub fn pack_b_dual(
+    high: &Matrix<f32>,
+    low: &Matrix<f32>,
+    p0: usize,
+    kc: usize,
+    j0: usize,
+    nc: usize,
+    out: &mut Vec<f32>,
+) {
+    debug_assert_eq!(high.shape(), low.shape());
+    out.clear();
+    out.reserve(b_panels(nc) * kc * 2 * NR);
+    for c in 0..b_panels(nc) {
+        for p in 0..kc {
+            let hrow = high.row(p0 + p);
+            let lrow = low.row(p0 + p);
+            for j in 0..NR {
+                let col = c * NR + j;
+                out.push(if col < nc { hrow[j0 + col] } else { 0.0 });
+            }
+            for j in 0..NR {
+                let col = c * NR + j;
+                out.push(if col < nc { lrow[j0 + col] } else { 0.0 });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn mat(rows: usize, cols: usize, seed: u64) -> Matrix<f32> {
+        let mut rng = Rng::new(seed);
+        Matrix::random_symmetric(rows, cols, 0, &mut rng)
+    }
+
+    #[test]
+    fn pack_a_layout_and_padding() {
+        let a = mat(7, 5, 1);
+        let mut out = Vec::new();
+        pack_a(&a, 1, 6, 2, 3, &mut out); // 6 rows from row 1, 3 cols from col 2
+        assert_eq!(out.len(), a_panels(6) * 3 * MR); // 2 panels
+        // Panel 0, k step p, lane i -> a[1 + i][2 + p].
+        for p in 0..3 {
+            for i in 0..MR {
+                assert_eq!(out[p * MR + i], a.get(1 + i, 2 + p), "panel 0 p={p} i={i}");
+            }
+        }
+        // Panel 1 covers rows 5..7 of the block (matrix rows 5, 6), lanes
+        // 2-3 are padding.
+        let base = 3 * MR;
+        for p in 0..3 {
+            assert_eq!(out[base + p * MR], a.get(5, 2 + p));
+            assert_eq!(out[base + p * MR + 1], a.get(6, 2 + p));
+            assert_eq!(out[base + p * MR + 2], 0.0);
+            assert_eq!(out[base + p * MR + 3], 0.0);
+        }
+    }
+
+    #[test]
+    fn pack_b_layout_and_padding() {
+        let b = mat(4, 19, 2);
+        let mut out = Vec::new();
+        pack_b(&b, 1, 3, 2, 13, &mut out); // 3 k steps from row 1, 13 cols from col 2
+        assert_eq!(out.len(), b_panels(13) * 3 * NR); // 2 panels
+        for p in 0..3 {
+            for j in 0..NR {
+                assert_eq!(out[p * NR + j], b.get(1 + p, 2 + j), "panel 0 p={p} j={j}");
+            }
+        }
+        let base = 3 * NR;
+        for p in 0..3 {
+            for j in 0..NR {
+                let col = NR + j;
+                let want = if col < 13 { b.get(1 + p, 2 + col) } else { 0.0 };
+                assert_eq!(out[base + p * NR + j], want, "panel 1 p={p} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn dual_packing_interleaves_components() {
+        let high = mat(5, 4, 3);
+        let low = mat(5, 4, 4);
+        let mut ap = Vec::new();
+        pack_a_dual(&high, &low, 0, 5, 0, 4, &mut ap);
+        assert_eq!(ap.len(), a_panels(5) * 4 * 2 * MR);
+        // Panel 0, k step p: MR highs then MR lows.
+        for p in 0..4 {
+            let s = p * 2 * MR;
+            for i in 0..MR {
+                assert_eq!(ap[s + i], high.get(i, p));
+                assert_eq!(ap[s + MR + i], low.get(i, p));
+            }
+        }
+        let mut bp = Vec::new();
+        pack_b_dual(&high, &low, 0, 5, 0, 4, &mut bp);
+        assert_eq!(bp.len(), b_panels(4) * 5 * 2 * NR);
+        for p in 0..5 {
+            let s = p * 2 * NR;
+            for j in 0..4 {
+                assert_eq!(bp[s + j], high.get(p, j));
+                assert_eq!(bp[s + NR + j], low.get(p, j));
+            }
+            for j in 4..NR {
+                assert_eq!(bp[s + j], 0.0);
+                assert_eq!(bp[s + NR + j], 0.0);
+            }
+        }
+    }
+}

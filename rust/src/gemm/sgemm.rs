@@ -17,10 +17,7 @@ pub fn sgemm(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
     let bt = b.transpose();
     let mut c = Matrix::zeros(m, n);
 
-    struct SendPtr(*mut f32);
-    unsafe impl Send for SendPtr {}
-    unsafe impl Sync for SendPtr {}
-    let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
+    let cp = crate::util::threads::SendPtr(c.as_mut_slice().as_mut_ptr());
 
     parallel_chunks(m, |i0, i1| {
         let cp = &cp;

@@ -23,6 +23,7 @@ pub mod config;
 pub mod coordinator;
 pub mod experiments;
 pub mod gemm;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod softfloat;

@@ -9,7 +9,6 @@ use sgemm_cube::experiments as exp;
 use sgemm_cube::gemm::backend::{Backend, GemmBackend};
 use sgemm_cube::gemm::dgemm::dgemm_of_f32;
 use sgemm_cube::gemm::error::relative_error;
-use sgemm_cube::runtime::Engine;
 use sgemm_cube::sim::blocking::GemmShape;
 use sgemm_cube::sim::executor::simulate_sgemm_cube;
 use sgemm_cube::sim::pipeline::Buffering;
@@ -74,6 +73,21 @@ fn cmd_info(args: &Args) -> Result<()> {
             chip.l1_bytes / 1024,
         );
     }
+    print_pjrt_info();
+    let block = sgemm_cube::gemm::blocked::host_block();
+    println!(
+        "host blocked engine: block = ({}, {}, {}) from sim::blocking on {}",
+        block.bm,
+        block.bk,
+        block.bn,
+        Chip::host_cpu().name
+    );
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn print_pjrt_info() {
+    use sgemm_cube::runtime::Engine;
     match Engine::from_default_dir() {
         Ok(engine) => {
             println!("PJRT platform: {}", engine.platform());
@@ -81,7 +95,11 @@ fn cmd_info(args: &Args) -> Result<()> {
         }
         Err(e) => println!("artifacts not available ({e}); run `make artifacts`"),
     }
-    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn print_pjrt_info() {
+    println!("PJRT runtime: disabled at build time (rebuild with --features pjrt)");
 }
 
 fn cmd_gemm(args: &Args) -> Result<()> {

@@ -37,19 +37,38 @@ pub struct BlockConfig {
 }
 
 /// Why a block configuration is infeasible (Eq. 12).
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ConstraintViolation {
-    #[error("block sizes must be positive multiples of {align}: ({bm}, {bk}, {bn})")]
     Alignment { align: usize, bm: usize, bk: usize, bn: usize },
-    #[error("b_m*b_k = {got} exceeds L0A capacity {cap}")]
     L0aCapacity { got: u64, cap: u64 },
-    #[error("b_k*b_n = {got} exceeds L0B capacity {cap}")]
     L0bCapacity { got: u64, cap: u64 },
-    #[error("b_m*b_n*6 = {got} exceeds L0C/UB budget {cap}")]
     UbCapacity { got: u64, cap: u64 },
-    #[error("L1 cannot hold one A block plus double-buffered B blocks")]
     L1Capacity,
 }
+
+impl std::fmt::Display for ConstraintViolation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConstraintViolation::Alignment { align, bm, bk, bn } => {
+                write!(f, "block sizes must be positive multiples of {align}: ({bm}, {bk}, {bn})")
+            }
+            ConstraintViolation::L0aCapacity { got, cap } => {
+                write!(f, "b_m*b_k = {got} exceeds L0A capacity {cap}")
+            }
+            ConstraintViolation::L0bCapacity { got, cap } => {
+                write!(f, "b_k*b_n = {got} exceeds L0B capacity {cap}")
+            }
+            ConstraintViolation::UbCapacity { got, cap } => {
+                write!(f, "b_m*b_n*6 = {got} exceeds L0C/UB budget {cap}")
+            }
+            ConstraintViolation::L1Capacity => {
+                write!(f, "L1 cannot hold one A block plus double-buffered B blocks")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConstraintViolation {}
 
 impl BlockConfig {
     pub fn new(bm: usize, bk: usize, bn: usize) -> BlockConfig {
@@ -134,6 +153,29 @@ impl Traffic {
     /// (Eq. 10 uses 4 bytes each under the FP32-equivalent convention).
     pub fn total_bytes(&self, s_a: f64, s_b: f64, s_c: f64) -> f64 {
         self.a_read * s_a + self.b_read * s_b + self.c_rw * s_c
+    }
+
+    /// Eq. (9) mapped onto the host blocked loop nest executed by
+    /// `crate::gemm::blocked` (`b_n` → `b_k` → `b_m`, packed panels).
+    ///
+    /// The roles of the paper's operands are mirrored on the CPU: the
+    /// packed B panel is the cache-resident operand (the paper's fused A
+    /// group in L1), the packed A row panels stream through it, and the C
+    /// tile accumulates in place once per k block. Per-operand traffic
+    /// between main memory and the panel cache, in elements:
+    ///
+    /// * A is re-read once per `b_n` column block: `m·k·⌈n/b_n⌉`;
+    /// * B is packed exactly once: `k·n`;
+    /// * C is read + written once per `b_k` block: `2·m·n·⌈k/b_k⌉`.
+    pub fn host_blocked(shape: GemmShape, block: BlockConfig) -> Traffic {
+        let (m, k, n) = (shape.m as f64, shape.k as f64, shape.n as f64);
+        let n_blocks = shape.n.div_ceil(block.bn) as f64;
+        let k_blocks = shape.k.div_ceil(block.bk) as f64;
+        Traffic {
+            a_read: m * k * n_blocks,
+            b_read: k * n,
+            c_rw: 2.0 * m * n * k_blocks,
+        }
     }
 }
 
@@ -252,6 +294,28 @@ mod tests {
         let large = Traffic::of(shape, BlockConfig::new(176, 64, 176), &chip);
         assert!(large.b_read < small.b_read);
         assert!(large.c_rw > small.c_rw);
+    }
+
+    #[test]
+    fn host_blocked_traffic_counts_passes() {
+        let shape = GemmShape::new(1024, 1024, 1024);
+        let t = Traffic::host_blocked(shape, BlockConfig::new(64, 256, 64));
+        assert_eq!(t.a_read, 1024.0 * 1024.0 * 16.0); // 16 column blocks
+        assert_eq!(t.b_read, 1024.0 * 1024.0); // packed once
+        assert_eq!(t.c_rw, 2.0 * 1024.0 * 1024.0 * 4.0); // 4 k blocks
+        // Bigger b_k cuts C revisits; bigger b_n cuts A re-reads.
+        let wide = Traffic::host_blocked(shape, BlockConfig::new(64, 512, 128));
+        assert!(wide.c_rw < t.c_rw);
+        assert!(wide.a_read < t.a_read);
+    }
+
+    #[test]
+    fn constraint_violation_messages_render() {
+        let chip = Chip::ascend_910a();
+        let err = BlockConfig::new(17, 64, 64).validate(&chip).unwrap_err();
+        assert!(format!("{err}").contains("multiples of 16"));
+        let err = BlockConfig::new(256, 128, 16).validate(&chip).unwrap_err();
+        assert!(format!("{err}").contains("L0A"));
     }
 
     #[test]

@@ -100,6 +100,49 @@ impl Chip {
         }
     }
 
+    /// The machine this process runs on, described in the same cache
+    /// vocabulary as the NPUs so the Eq. (8)/(9)/(12) blocking machinery
+    /// can drive the *executed* blocked GEMM engine
+    /// (`crate::gemm::blocked`), not just the simulator figures.
+    ///
+    /// Mapping (conservative generic x86-64/aarch64 numbers; per-core
+    /// L1d ≈ 32 KB, per-core L2 ≈ 512 KB):
+    ///
+    /// * `l1_bytes` — the per-core L2 slice holding the packed panels
+    ///   (the paper's L1 buffer role);
+    /// * `l0a_elems` / `l0b_elems` — caps on `b_m·b_k` / `b_k·b_n` so a
+    ///   packed A block and the resident B panel each stay ≤ 64 KB
+    ///   single-component (≤ 128 KB for the dual high/low cube format)
+    ///   and their micro-panels stream through L1d;
+    /// * `ub_budget_bytes` — caps `b_m·b_n·6`, bounding the C tile a
+    ///   thread revisits per k block (the L0C/UB role);
+    /// * `align` — 16, which also keeps blocks divisible by the
+    ///   micro-kernel geometry (`MR = 4`, `NR = 8`).
+    ///
+    /// The throughput/bandwidth fields are rough host figures; they feed
+    /// roofline diagnostics only — block *selection* uses capacities and
+    /// the traffic model alone.
+    pub fn host_cpu() -> Chip {
+        Chip {
+            name: "host-cpu",
+            n_cores: crate::util::threads::num_threads() as u32,
+            freq_ghz: 3.0,
+            // Two 8-lane FMA ports.
+            cube_macs_per_cycle: 16,
+            elem_bytes: 4,
+            mem_bw_gbs: 30.0,
+            l1_bytes: 512 * 1024,
+            l0a_elems: 16 * 1024,
+            l0b_elems: 16 * 1024,
+            ub_budget_bytes: 128 * 1024,
+            align: 16,
+            dma_setup_cycles: 0.0,
+            sync_cycles: 0.0,
+            l0_bw_bytes_per_cycle: 64.0,
+            mem_burst: 1.0,
+        }
+    }
+
     /// Peak matrix-engine throughput in TFLOP/s (native element type).
     pub fn peak_tflops(&self) -> f64 {
         2.0 * self.cube_macs_per_cycle as f64 * self.n_cores as f64 * self.freq_ghz * 1e9 / 1e12
@@ -156,6 +199,17 @@ mod tests {
         assert_eq!(c.l1_elems(), 524_288); // 1 MB of FP16
         let b = Chip::ascend_910b3_fp32();
         assert_eq!(b.l1_elems(), 131_072); // 512 KB of FP32
+    }
+
+    #[test]
+    fn host_cpu_admits_feasible_blocks() {
+        let c = Chip::host_cpu();
+        assert!(c.n_cores >= 1);
+        assert_eq!(c.l1_elems(), 131_072); // 512 KB of f32
+        let blocks = crate::sim::blocking::feasible_blocks(&c, 256);
+        assert!(!blocks.is_empty());
+        // Alignment divides the micro-kernel geometry.
+        assert_eq!(c.align % 8, 0);
     }
 
     #[test]

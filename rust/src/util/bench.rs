@@ -25,6 +25,28 @@ impl BenchResult {
         self.work_per_iter.map(|w| w / self.seconds.median)
     }
 
+    /// One machine-readable JSON record: name, per-iteration seconds
+    /// (median/mean/stddev), sample count, and GFLOP/s when a work term
+    /// was declared (`null` otherwise). [`Bencher::write_json`] emits
+    /// these for a whole run (e.g. `BENCH_gemm.json`); committing that
+    /// file tracks the perf trajectory across PRs (EXPERIMENTS.md
+    /// §Perf-iteration-log).
+    pub fn to_json(&self) -> String {
+        let gflops = match self.throughput() {
+            Some(tp) => format!("{:.3}", tp / 1e9),
+            None => "null".to_string(),
+        };
+        format!(
+            "{{\"name\":\"{}\",\"median_s\":{:e},\"mean_s\":{:e},\"stddev_s\":{:e},\"n\":{},\"gflops\":{}}}",
+            json_escape(&self.name),
+            self.seconds.median,
+            self.seconds.mean,
+            self.seconds.stddev,
+            self.seconds.n,
+            gflops
+        )
+    }
+
     /// Render one human-readable line.
     pub fn line(&self) -> String {
         let t = self.seconds.median;
@@ -40,6 +62,22 @@ impl BenchResult {
             None => base,
         }
     }
+}
+
+/// Escape a string for embedding in a JSON literal.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 /// Format seconds with an adaptive unit.
@@ -141,6 +179,15 @@ impl Bencher {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// Write every result recorded by this `Bencher` as a JSON array.
+    /// **Replaces** the file: the output reflects the latest run only —
+    /// the cross-PR trajectory comes from committing the file per PR
+    /// (EXPERIMENTS.md §Perf-iteration-log).
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        let body: Vec<String> = self.results.iter().map(BenchResult::to_json).collect();
+        std::fs::write(path, format!("[\n  {}\n]\n", body.join(",\n  ")))
+    }
 }
 
 /// Optimizer barrier (stable-rust version of `std::hint::black_box`,
@@ -168,6 +215,31 @@ mod tests {
         assert!(r.seconds.n >= 3);
         assert!(r.throughput().unwrap() > 0.0);
         assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn to_json_and_writer() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(1),
+            min_time: Duration::from_millis(2),
+            min_iters: 2,
+            max_iters: 50,
+            results: Vec::new(),
+        };
+        b.bench("with \"quotes\"", Some(1e9), || 0u8);
+        b.bench("no-work", None, || 0u8);
+        let j = b.results()[0].to_json();
+        assert!(j.contains("\\\"quotes\\\""), "{j}");
+        assert!(j.contains("\"median_s\":"), "{j}");
+        assert!(j.contains("\"gflops\":"), "{j}");
+        assert!(b.results()[1].to_json().contains("\"gflops\":null"));
+        let path = std::env::temp_dir().join("sgemm_cube_bench_test.json");
+        b.write_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("[\n"));
+        assert!(text.trim_end().ends_with(']'));
+        assert_eq!(text.matches("\"name\"").count(), 2);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -64,8 +64,10 @@ where
 }
 
 /// Raw-pointer wrapper asserting cross-thread transfer is safe for
-/// disjoint-index writes.
-struct SendPtr<T>(*mut T);
+/// disjoint-index writes. Shared by the blocked GEMM engine and the
+/// kernel drivers — keep the safety argument (callers write disjoint
+/// index ranges per thread and the buffer outlives the scope) here.
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 impl<T> Clone for SendPtr<T> {
     fn clone(&self) -> Self {
         *self

@@ -8,18 +8,23 @@ use sgemm_cube::coordinator::batcher::BatcherConfig;
 use sgemm_cube::coordinator::policy::PrecisionPolicy;
 use sgemm_cube::coordinator::server::{GemmService, ServiceConfig};
 use sgemm_cube::gemm::backend::{Backend, GemmBackend};
+#[cfg(feature = "pjrt")]
 use sgemm_cube::gemm::cube::{cube_gemm, Accumulation};
 use sgemm_cube::gemm::dgemm::dgemm_of_f32;
 use sgemm_cube::gemm::error::relative_error;
+#[cfg(feature = "pjrt")]
 use sgemm_cube::runtime::Engine;
+#[cfg(feature = "pjrt")]
 use sgemm_cube::softfloat::split::SplitConfig;
 use sgemm_cube::util::mat::Matrix;
 use sgemm_cube::util::rng::Rng;
 
+#[cfg(feature = "pjrt")]
 fn artifacts_available() -> bool {
     Engine::default_dir().join("manifest.txt").exists()
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_cube_matches_native_cube_bitwise_error() {
     if !artifacts_available() {
@@ -40,6 +45,7 @@ fn pjrt_cube_matches_native_cube_bitwise_error() {
     assert!((e_aot - e_native).abs() / e_native < 0.5, "aot {e_aot} vs native {e_native}");
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_split_matches_rust_softfloat_bit_exact() {
     if !artifacts_available() {
@@ -67,6 +73,7 @@ fn pjrt_split_matches_rust_softfloat_bit_exact() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_hgemm_matches_rust_hgemm_closely() {
     if !artifacts_available() {
@@ -86,6 +93,7 @@ fn pjrt_hgemm_matches_rust_hgemm_closely() {
     assert!((ea / en) < 1.5 && (en / ea) < 1.5, "aot {ea} vs native {en}");
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn mlp_train_step_artifact_reduces_loss() {
     if !artifacts_available() {
@@ -118,6 +126,7 @@ fn mlp_train_step_artifact_reduces_loss() {
     );
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn service_over_pjrt_consistency() {
     // The coordinator's native cube path and the AOT artifact agree on
@@ -144,6 +153,7 @@ fn service_over_pjrt_consistency() {
     svc.shutdown();
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn engine_error_paths() {
     if !artifacts_available() {

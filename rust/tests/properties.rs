@@ -3,10 +3,12 @@
 
 use sgemm_cube::coordinator::request::ShapeKey;
 use sgemm_cube::coordinator::scheduler::{assign, imbalance, tiles_of};
+use sgemm_cube::gemm::blocked::{cube_gemm_blocked, hgemm_blocked, host_block, sgemm_blocked};
 use sgemm_cube::gemm::cube::{cube_gemm, Accumulation};
 use sgemm_cube::gemm::dgemm::dgemm_of_f32;
 use sgemm_cube::gemm::error::relative_error;
-use sgemm_cube::gemm::hgemm::add_f32_rz;
+use sgemm_cube::gemm::hgemm::{add_f32_rz, hgemm, AccumulateMode};
+use sgemm_cube::gemm::sgemm::sgemm;
 use sgemm_cube::qc_assert;
 use sgemm_cube::softfloat::f16::{F16, Rounding};
 use sgemm_cube::softfloat::split::{reconstruct, split_f32, SplitConfig};
@@ -151,6 +153,103 @@ fn prop_gemm_linearity_in_scaling() {
         }
         Ok(())
     });
+}
+
+/// Forward-error bound for comparing two same-algorithm GEMM variants
+/// that differ only in accumulation order: per entry, the difference is
+/// bounded by a small multiple of `k · eps32 · Σ|a_it·b_tj|`.
+fn reorder_tolerance(abs_products: &Matrix<f64>, k: usize, i: usize, j: usize) -> f64 {
+    let s = abs_products.get(i, j);
+    8.0 * (k as f64 + 8.0) * f32::EPSILON as f64 * s + 1e-30
+}
+
+#[test]
+fn prop_blocked_kernels_match_exact_on_awkward_shapes() {
+    // ISSUE requirement: the blocked kernels agree with the exact kernels
+    // within multi-accumulator noise across awkward shapes — k smaller
+    // than b_k, k larger than b_k, and every non-multiple-of-MR/NR edge.
+    const DIMS: [usize; 6] = [1, 7, 16, 17, 96, 257];
+    let cfg = SplitConfig::default();
+    let bk = host_block().bk;
+    let mut rng = Rng::new(777);
+    for &m in &DIMS {
+        for &k in &DIMS {
+            for &n in &DIMS {
+                let a = Matrix::random_symmetric(m, k, 0, &mut rng);
+                let b = Matrix::random_symmetric(k, n, 0, &mut rng);
+                // Σ|a·b| per entry bounds every partial sum of products.
+                let abs_p = dgemm_of_f32(&a.map(f32::abs), &b.map(f32::abs));
+                let ctx = format!("({m},{k},{n})");
+
+                // FP32: bit-identical within one k block, reorder-bounded
+                // beyond it.
+                let exact = sgemm(&a, &b);
+                let blocked = sgemm_blocked(&a, &b);
+                check_close(&exact, &blocked, &abs_p, k, 1.0, &format!("sgemm {ctx}"));
+                if k <= bk {
+                    for (x, y) in exact.as_slice().iter().zip(blocked.as_slice()) {
+                        assert!(x.to_bits() == y.to_bits(), "sgemm bits {ctx}");
+                    }
+                }
+
+                // FP16 operands, FP32 accumulation.
+                let exact = hgemm(&a, &b, AccumulateMode::Fp32Rn);
+                let blocked = hgemm_blocked(&a, &b);
+                check_close(&exact, &blocked, &abs_p, k, 1.1, &format!("hgemm {ctx}"));
+
+                // Cube: termwise exact vs the fused blocked kernel. The
+                // correction terms carry an extra |a|·|b|-scale bound via
+                // the split residuals, covered by the scale factor.
+                let exact = cube_gemm(&a, &b, cfg, Accumulation::Termwise);
+                let blocked = cube_gemm_blocked(&a, &b, cfg);
+                check_close(&exact, &blocked, &abs_p, k, 4.0, &format!("cube {ctx}"));
+            }
+        }
+    }
+}
+
+/// Assert two f32 results agree within the reorder tolerance scaled by
+/// `factor`.
+fn check_close(
+    exact: &Matrix<f32>,
+    blocked: &Matrix<f32>,
+    abs_products: &Matrix<f64>,
+    k: usize,
+    factor: f64,
+    what: &str,
+) {
+    assert_eq!(exact.shape(), blocked.shape(), "{what}: shape");
+    let (m, n) = exact.shape();
+    for i in 0..m {
+        for j in 0..n {
+            let x = exact.get(i, j) as f64;
+            let y = blocked.get(i, j) as f64;
+            let tol = factor * reorder_tolerance(abs_products, k, i, j);
+            assert!(
+                (x - y).abs() <= tol,
+                "{what} at ({i},{j}): exact {x} vs blocked {y} (tol {tol:.3e})"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_blocked_cube_preserves_termwise_ordering_at_large_k() {
+    // ISSUE requirement: the fused cube micro-kernel must keep the
+    // termwise-vs-elementwise accuracy ordering at large k (Fig. 9 b/c
+    // regime): corrections aggregate among themselves per k block before
+    // meeting the high product, so swamping never happens per step.
+    let mut rng = Rng::new(778);
+    let k = 4096;
+    let a = Matrix::random_nonneg(16, k, 0, &mut rng);
+    let b = Matrix::random_nonneg(k, 16, 0, &mut rng);
+    let c_ref = dgemm_of_f32(&a, &b);
+    let cfg = SplitConfig::default();
+    let e_el = relative_error(&c_ref, &cube_gemm(&a, &b, cfg, Accumulation::Elementwise).to_f64());
+    let e_tw = relative_error(&c_ref, &cube_gemm(&a, &b, cfg, Accumulation::Termwise).to_f64());
+    let e_blocked = relative_error(&c_ref, &cube_gemm_blocked(&a, &b, cfg).to_f64());
+    assert!(e_blocked <= e_el, "blocked {e_blocked} vs elementwise {e_el}");
+    assert!(e_blocked <= e_tw * 2.0, "blocked {e_blocked} vs termwise {e_tw}");
 }
 
 #[test]

@@ -1,0 +1,316 @@
+//! Minimal, dependency-free reimplementation of the `anyhow` error API.
+//!
+//! The offline build image has no crates.io registry, so this vendored
+//! crate provides exactly the surface the workspace uses — `Error`,
+//! `Result`, the `anyhow!`/`bail!` macros and the `Context` extension
+//! trait — with the same semantics as the real crate for those paths:
+//!
+//! * `Display` shows the outermost message; `{:#}` joins the whole
+//!   context chain with `": "`.
+//! * `Debug` shows the message plus a `Caused by:` list, like anyhow's
+//!   report format.
+//! * `?` converts any `std::error::Error + Send + Sync + 'static` via a
+//!   blanket `From` (which is why `Error` itself deliberately does *not*
+//!   implement `std::error::Error` — the same trade the real crate makes).
+//!
+//! Errors are captured as message chains (outermost context first); no
+//! backtraces and no downcasting, which nothing in this workspace needs.
+
+use std::convert::Infallible;
+use std::error::Error as StdError;
+use std::fmt::{self, Debug, Display};
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-carrying error: a chain of messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M>(message: M) -> Error
+    where
+        M: Display + Send + Sync + 'static,
+    {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    fn from_std<E: StdError>(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C>(mut self, context: C) -> Error
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The message chain, outermost context first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().expect("error chain is never empty")
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::from_std(e)
+    }
+}
+
+/// Construct an [`Error`] from format arguments (or a displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Ensure a condition holds, or return an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+mod ext {
+    use super::*;
+
+    // Mirrors anyhow's internal extension trait: implemented for every
+    // std error *and* for `Error` itself, so `Context` works on both
+    // `Result<T, E: std::error::Error>` and `Result<T, anyhow::Error>`.
+    // The two impls do not overlap because `Error` does not implement
+    // `std::error::Error`.
+    pub trait StdErrorExt {
+        fn into_error(self) -> Error;
+    }
+
+    impl<E> StdErrorExt for E
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        fn into_error(self) -> Error {
+            Error::from_std(self)
+        }
+    }
+
+    impl StdErrorExt for Error {
+        fn into_error(self) -> Error {
+            self
+        }
+    }
+}
+
+/// Extension trait attaching context to `Result` and `Option`.
+pub trait Context<T, E> {
+    /// Wrap the error value with additional context.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static;
+
+    /// Wrap the error value with context computed lazily on failure.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: ext::StdErrorExt,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(ext::StdErrorExt::into_error(e).context(context)),
+        }
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(ext::StdErrorExt::into_error(e).context(f())),
+        }
+    }
+}
+
+impl<T> Context<T, Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(context.to_string())),
+        }
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(f().to_string())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug)]
+    struct Leaf;
+    impl Display for Leaf {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            f.write_str("leaf failed")
+        }
+    }
+    impl StdError for Leaf {}
+
+    #[derive(Debug)]
+    struct Mid(Leaf);
+    impl Display for Mid {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            f.write_str("mid failed")
+        }
+    }
+    impl StdError for Mid {
+        fn source(&self) -> Option<&(dyn StdError + 'static)> {
+            Some(&self.0)
+        }
+    }
+
+    #[test]
+    fn display_shows_outermost_and_alternate_joins_chain() {
+        let e: Error = Err::<(), _>(Leaf).context("reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: leaf failed");
+    }
+
+    #[test]
+    fn source_chain_is_captured() {
+        let e: Error = Err::<(), _>(Mid(Leaf)).context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: mid failed: leaf failed");
+        assert_eq!(e.root_cause(), "leaf failed");
+    }
+
+    #[test]
+    fn debug_reports_causes() {
+        let e: Error = Err::<(), _>(Mid(Leaf)).with_context(|| "outer").unwrap_err();
+        let d = format!("{e:?}");
+        assert!(d.contains("outer"));
+        assert!(d.contains("Caused by"));
+        assert!(d.contains("leaf failed"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(flag: bool) -> Result<()> {
+            if flag {
+                bail!("flag was {flag}");
+            }
+            Ok(())
+        }
+        assert_eq!(format!("{}", f(true).unwrap_err()), "flag was true");
+        let e = anyhow!("code {}", 7);
+        assert_eq!(format!("{e}"), "code 7");
+        let m = Error::msg("plain".to_string());
+        assert_eq!(format!("{m}"), "plain");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u8> = None;
+        let e = none.context("nothing there").unwrap_err();
+        assert_eq!(format!("{e}"), "nothing there");
+        assert_eq!(Some(3u8).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn context_on_anyhow_result_layers() {
+        let e: Error = Err::<(), _>(anyhow!("inner"))
+            .context("middle")
+            .context("outer")
+            .unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: middle: inner");
+        assert_eq!(e.root_cause(), "inner");
+        assert_eq!(e.chain().count(), 3);
+    }
+}

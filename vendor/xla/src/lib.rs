@@ -1,0 +1,188 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real runtime links libxla through a vendored crate closure that is
+//! only present on hosts with a PJRT toolchain. This stub carries the
+//! exact API surface `sgemm_cube::runtime` compiles against, so the
+//! `pjrt` feature can be *built* anywhere:
+//!
+//! * [`Literal`] is functional for host-side f32 data (construction,
+//!   reshape, dtype tagging, readback) — enough for the literal
+//!   conversion layer and its tests.
+//! * Everything that would touch an actual PJRT client
+//!   ([`PjRtClient::cpu`], compilation, execution, HLO parsing) returns
+//!   a descriptive error.
+//!
+//! To run artifacts for real, point the workspace `xla` path dependency
+//! at the vendored PJRT crate instead of this stub.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Stub error: always "PJRT unavailable" for execution paths.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT is unavailable in this build (the `xla` dependency is the offline \
+         stub; vendor the real PJRT crate to execute artifacts)"
+    ))
+}
+
+/// Element types the artifacts use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F16,
+    F32,
+}
+
+/// Conversion between host scalars and literal storage (f32-backed).
+pub trait NativeType: Copy {
+    fn from_f32(v: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(v: f32) -> f32 {
+        v
+    }
+}
+
+/// Host-side tensor value. The stub stores data as f32 regardless of the
+/// tagged dtype; conversion is a tag change (exact for the f16-widened
+/// round trips the runtime performs).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+    ty: PrimitiveType,
+}
+
+impl Literal {
+    /// Rank-1 literal over an f32 slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64], ty: PrimitiveType::F32 }
+    }
+
+    /// Reshape; the element count must be preserved.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: cannot view {} elements as {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec(), ty: self.ty })
+    }
+
+    /// Convert the element type (tag-only in the stub).
+    pub fn convert(&self, ty: PrimitiveType) -> Result<Literal> {
+        Ok(Literal { data: self.data.clone(), dims: self.dims.clone(), ty })
+    }
+
+    /// Read the data back as host scalars.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    /// Decompose a tuple literal — only execution produces tuples, so the
+    /// stub has none.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> PrimitiveType {
+        self.ty
+    }
+}
+
+/// PJRT client handle (never constructible in the stub).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Parsed HLO module.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(unavailable(&format!("HloModuleProto::from_text_file({path:?})")))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let lit = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let m = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(m.dims(), &[2, 2]);
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.reshape(&[3, 3]).is_err());
+        let h = m.convert(PrimitiveType::F16).unwrap();
+        assert_eq!(h.ty(), PrimitiveType::F16);
+    }
+
+    #[test]
+    fn execution_paths_report_stub() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(format!("{err}").contains("PJRT is unavailable"));
+        let err = HloModuleProto::from_text_file("x.hlo.txt").err().unwrap();
+        assert!(format!("{err}").contains("x.hlo.txt"));
+    }
+}
