@@ -4,11 +4,13 @@
 //! cargo run --release --example gemm_server
 //! ```
 //!
-//! Starts the GEMM service (shape-keyed dynamic batching + range-aware
-//! precision policy), drives it with a mixed workload from several client
-//! threads — moderate-range requests (routed to SGEMM-cube), loose-budget
-//! requests (FP16) and out-of-range requests (FP32 fallback) — and prints
-//! the latency/throughput report.
+//! Starts the GEMM service (shape- and weight-keyed dynamic batching +
+//! range-aware precision policy), drives it with a mixed workload from
+//! several client threads — moderate-range requests (routed to
+//! SGEMM-cube), loose-budget requests (FP16) and out-of-range requests
+//! (FP32 fallback) — then runs a serving phase against registered
+//! weights (batched per weight, executed from prepacked panels) and
+//! prints the latency/throughput report plus the prepack-cache counters.
 
 use std::time::Duration;
 
@@ -24,6 +26,7 @@ fn main() {
         batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) },
         policy: PrecisionPolicy::default(),
         n_workers: 0, // auto
+        ..Default::default()
     };
     let svc = GemmService::start(cfg);
 
@@ -62,6 +65,38 @@ fn main() {
             });
         }
     });
+
+    // Serving phase: two registered weights, several clients issuing
+    // small-m activation batches against them. The batcher groups by
+    // weight; the first request per weight packs, the rest hit cache.
+    let mut rng = Rng::new(7);
+    let kn = 192;
+    let weights: Vec<_> = (0..2)
+        .map(|_| svc.register_weights(Matrix::random_symmetric(kn, kn, 0, &mut rng)))
+        .collect();
+    std::thread::scope(|scope| {
+        for client in 0..CLIENTS {
+            let svc = &svc;
+            let weights = &weights;
+            scope.spawn(move || {
+                let mut rng = Rng::new(200 + client as u64);
+                for i in 0..PER_CLIENT {
+                    let a = Matrix::random_symmetric(8, kn, 0, &mut rng);
+                    let resp = svc.gemm_blocking_prepacked(a, weights[i % weights.len()], None);
+                    assert!(resp.result.is_ok(), "prepacked request failed");
+                }
+            });
+        }
+    });
+    let s = svc.prepack_stats();
+    println!(
+        "\nprepack cache: hits={} misses={} entries={} bytes={}  (hit rate {:.0}%)",
+        s.hits,
+        s.misses,
+        s.entries,
+        s.bytes,
+        s.hit_rate() * 100.0
+    );
 
     println!("\nservice report: {}", svc.metrics().report().line());
     svc.shutdown();

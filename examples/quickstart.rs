@@ -8,11 +8,16 @@
 //! SGEMM-cube numerics engine, (2) plain FP16 and FP32 baselines, and —
 //! if `make artifacts` has been run — (3) the AOT-compiled Pallas kernel
 //! through the PJRT runtime. Reports the Eq. (13) relative error of each
-//! against the FP64 reference.
+//! against the FP64 reference. Then demonstrates the serving flow:
+//! register a weight matrix once, serve repeated small-batch requests
+//! against its prepacked panels, and show the cache doing the work.
 
+use sgemm_cube::coordinator::server::{GemmService, ServiceConfig};
 use sgemm_cube::gemm::backend::{Backend, GemmBackend};
+use sgemm_cube::gemm::blocked::cube_gemm_blocked;
 use sgemm_cube::gemm::dgemm::dgemm_of_f32;
 use sgemm_cube::gemm::error::relative_error;
+use sgemm_cube::softfloat::split::SplitConfig;
 use sgemm_cube::util::mat::Matrix;
 use sgemm_cube::util::rng::Rng;
 
@@ -33,7 +38,47 @@ fn main() -> anyhow::Result<()> {
     pjrt_demo(&a, &b, &c_ref);
 
     println!("\nExpected ordering: fp16 ≈ 1e-4  >>  cube ≈ fp32 ≈ 1e-7.");
+
+    serving_demo(&mut rng);
     Ok(())
+}
+
+/// Register-weights-then-serve: the weight's FP32→2×FP16 split and panel
+/// packing happen once, on the first request; every later request only
+/// prepares its (tiny) activation operand. Results are bit-identical to
+/// the one-shot blocked path.
+fn serving_demo(rng: &mut Rng) {
+    let (m, kn) = (8, 256);
+    println!("\n== serving: register weights once, then {m}×{kn} activations ==");
+    let w = Matrix::random_symmetric(kn, kn, 0, rng);
+    let svc = GemmService::start(ServiceConfig::default());
+    let weights = svc.register_weights(w.clone());
+    for step in 0..4 {
+        let a = Matrix::random_symmetric(m, kn, 0, rng);
+        let resp = svc.gemm_blocking_prepacked(a.clone(), weights, None);
+        let c = resp.result.expect("serving failed");
+        let one_shot = cube_gemm_blocked(&a, &w, SplitConfig::with_scale(resp.scale_exp));
+        let bit_identical = c
+            .as_slice()
+            .iter()
+            .zip(one_shot.as_slice())
+            .all(|(x, y)| x.to_bits() == y.to_bits());
+        println!(
+            "  step {step}: backend={} s_b={} bit-identical-to-blocked={bit_identical}",
+            resp.backend, resp.scale_exp
+        );
+        assert!(bit_identical);
+    }
+    let s = svc.prepack_stats();
+    println!(
+        "  prepack cache: {} hit(s), {} miss(es), {} entr{} ({} KiB) — pack cost paid once",
+        s.hits,
+        s.misses,
+        s.entries,
+        if s.entries == 1 { "y" } else { "ies" },
+        s.bytes / 1024
+    );
+    svc.shutdown();
 }
 
 #[cfg(feature = "pjrt")]

@@ -38,6 +38,7 @@ fn main() {
         batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
         policy: PrecisionPolicy::default(),
         n_workers: 0,
+        ..Default::default()
     });
     let n = 96usize;
     let reqs = 32usize;

@@ -1,17 +1,24 @@
 //! Bench target for Fig. 11: throughput vs blocking, single vs double
 //! buffer, on the calibrated 910A model — plus the *executed* host
 //! counterpart: the cache-blocked packed engine vs the pre-blocking
-//! three-pass kernel, with the measurements written to
-//! `BENCH_gemm.json` at the repository root (overwritten with the
-//! latest run; commit it per PR to track the trajectory — see
-//! EXPERIMENTS.md §Perf-iteration-log).
+//! three-pass kernel, and the serving-amortization column (prepacked
+//! weight panels vs per-request split + pack at a serving-realistic
+//! shape), with the measurements written to `BENCH_gemm.json` at the
+//! repository root (overwritten with the latest run; commit it per PR —
+//! the CI bench-smoke job also uploads it as a workflow artifact — see
+//! EXPERIMENTS.md §Perf-iteration-log and §Serving-amortization).
 //!
 //! `QUICK=1 cargo bench --bench fig11_blocking_perf` shrinks the host
-//! GEMMs from 1024³ to 256³ for a fast smoke pass.
+//! GEMMs from 1024³ to 256³ for a fast smoke pass; the serving column
+//! keeps its 8×1024×1024 shape in both modes (it is cheap — `m = 8` —
+//! and the CI gate pins that exact shape).
 
 use sgemm_cube::experiments::fig11_blocking_perf;
-use sgemm_cube::gemm::blocked::{cube_gemm_blocked, hgemm_blocked, host_block, sgemm_blocked};
+use sgemm_cube::gemm::blocked::{
+    cube_gemm_blocked, cube_gemm_prepacked, hgemm_blocked, host_block, sgemm_blocked,
+};
 use sgemm_cube::gemm::fast::cube_gemm_three_pass;
+use sgemm_cube::gemm::prepacked::{PrepackPath, PrepackedMatrix};
 use sgemm_cube::sim::blocking::GemmShape;
 use sgemm_cube::softfloat::split::SplitConfig;
 use sgemm_cube::util::bench::Bencher;
@@ -53,6 +60,32 @@ fn main() {
     let results = bench.results();
     let speedup = results[0].seconds.median / results[1].seconds.median;
     println!("\ncube blocked-fused vs three-pass speedup: {speedup:.2}x (target ≥ 3x at 1024³)");
+
+    // ---- serving amortization: prepacked weight vs per-request packing ----
+    // Serving-realistic shape: small activation batch against a fixed
+    // K×N weight. Per request the repack path pays the weight's
+    // FP32→2×FP16 split (k·n softfloat conversion pairs) plus the dual
+    // panel pack — all O(k·n) work independent of m — while the
+    // prepacked path only splits the 8-row activation.
+    let (sm, skn) = (8usize, 1024usize);
+    println!("\nserving amortization at {sm}×{skn}×{skn} (fixed weight, small activations):");
+    let a_act = Matrix::random_symmetric(sm, skn, 0, &mut rng);
+    let w = Matrix::random_symmetric(skn, skn, 0, &mut rng);
+    let sflops = 2.0 * sm as f64 * skn as f64 * skn as f64;
+    bench.bench(&format!("serving/cube_repack/{sm}x{skn}x{skn}"), Some(sflops), || {
+        cube_gemm_blocked(&a_act, &w, cfg)
+    });
+    let packed = PrepackedMatrix::prepack(&w, PrepackPath::Cube(cfg));
+    bench.bench(&format!("serving/cube_prepacked/{sm}x{skn}x{skn}"), Some(sflops), || {
+        cube_gemm_prepacked(&a_act, &packed)
+    });
+    let results = bench.results();
+    let prepack_speedup =
+        results[results.len() - 2].seconds.median / results[results.len() - 1].seconds.median;
+    println!(
+        "prepacked vs per-request packing: {prepack_speedup:.2}x (CI bench-smoke gate ≥ 1.2x)"
+    );
+    bench.record_scalar(&format!("serving/prepacked_speedup/{sm}x{skn}x{skn}"), prepack_speedup);
 
     // Repo root, independent of the bench's working directory.
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_gemm.json");

@@ -39,6 +39,9 @@ impl ServerConfig {
         if let Some(e) = cfg.get_f64("server", "error_budget")? {
             sc.policy.error_budget = Some(e);
         }
+        if let Some(mb) = cfg.get_usize("server", "prepack_cache_mb")? {
+            sc.prepack_capacity = mb << 20;
+        }
         Ok(ServerConfig(sc))
     }
 }
@@ -91,7 +94,7 @@ mod tests {
     #[test]
     fn server_section_roundtrip() {
         let cfg = ConfigFile::parse(
-            "[server]\nworkers = 3\nmax_batch = 16\nmax_wait_ms = 5\nbackend = fp16\nerror_budget = 1e-3",
+            "[server]\nworkers = 3\nmax_batch = 16\nmax_wait_ms = 5\nbackend = fp16\nerror_budget = 1e-3\nprepack_cache_mb = 64",
         )
         .unwrap();
         let sc = ServerConfig::from_config(&cfg).unwrap().0;
@@ -100,6 +103,11 @@ mod tests {
         assert_eq!(sc.batcher.max_wait, Duration::from_millis(5));
         assert_eq!(sc.policy.default_backend, Backend::Fp16);
         assert_eq!(sc.policy.error_budget, Some(1e-3));
+        assert_eq!(sc.prepack_capacity, 64 << 20);
+        // Defaults: workers track the host, capacity is nonzero.
+        let sc = ServerConfig::from_config(&ConfigFile::parse("").unwrap()).unwrap().0;
+        assert!(sc.n_workers >= 1);
+        assert!(sc.prepack_capacity > 0);
     }
 
     #[test]

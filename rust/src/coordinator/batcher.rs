@@ -1,15 +1,18 @@
-//! Shape-keyed dynamic batching.
+//! Shape- and weight-keyed dynamic batching.
 //!
-//! Requests accumulate per [`ShapeKey`]; a batch flushes when it reaches
-//! `max_batch` or when its oldest member has waited `max_wait`. This is
-//! the standard dynamic-batching shape of serving routers (vLLM-style),
-//! specialized to GEMM: batched requests share one compiled executable /
-//! kernel configuration.
+//! Requests accumulate per [`BatchKey`] — the shape plus the registered
+//! weight identity, if any; a batch flushes when it reaches `max_batch`
+//! or when its oldest member has waited `max_wait`. This is the standard
+//! dynamic-batching shape of serving routers (vLLM-style), specialized
+//! to GEMM: batched requests share one compiled executable / kernel
+//! configuration, and requests against the same registered weight share
+//! one prepacked operand ([`crate::gemm::prepacked`]), so grouping them
+//! maximizes cache-panel reuse within a worker.
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::request::{GemmRequest, ShapeKey};
+use crate::coordinator::request::{BatchKey, GemmRequest};
 
 /// Batching knobs.
 #[derive(Debug, Clone)]
@@ -24,10 +27,10 @@ impl Default for BatcherConfig {
     }
 }
 
-/// Accumulates requests into shape-homogeneous batches.
+/// Accumulates requests into shape- and weight-homogeneous batches.
 pub struct Batcher {
     cfg: BatcherConfig,
-    pending: HashMap<ShapeKey, Vec<GemmRequest>>,
+    pending: HashMap<BatchKey, Vec<GemmRequest>>,
 }
 
 impl Batcher {
@@ -37,7 +40,7 @@ impl Batcher {
 
     /// Add a request; returns a full batch if this push filled one.
     pub fn push(&mut self, req: GemmRequest) -> Option<Vec<GemmRequest>> {
-        let key = req.shape();
+        let key = req.batch_key();
         let queue = self.pending.entry(key).or_default();
         queue.push(req);
         if queue.len() >= self.cfg.max_batch {
@@ -49,7 +52,7 @@ impl Batcher {
     /// Flush every batch whose oldest request has exceeded `max_wait`
     /// (call periodically from the service loop).
     pub fn flush_expired(&mut self, now: Instant) -> Vec<Vec<GemmRequest>> {
-        let expired: Vec<ShapeKey> = self
+        let expired: Vec<BatchKey> = self
             .pending
             .iter()
             .filter(|(_, q)| {
@@ -67,7 +70,7 @@ impl Batcher {
 
     /// Flush everything (shutdown path).
     pub fn flush_all(&mut self) -> Vec<Vec<GemmRequest>> {
-        let keys: Vec<ShapeKey> = self.pending.keys().copied().collect();
+        let keys: Vec<BatchKey> = self.pending.keys().copied().collect();
         keys.into_iter().filter_map(|k| self.pending.remove(&k)).collect()
     }
 
@@ -92,15 +95,34 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::{BOperand, WeightEntry, WeightId};
     use crate::util::mat::Matrix;
     use std::sync::mpsc::channel;
+    use std::sync::Arc;
 
     fn req(id: u64, m: usize, k: usize, n: usize) -> GemmRequest {
         let (tx, _rx) = channel();
         GemmRequest {
             id,
             a: Matrix::zeros(m, k),
-            b: Matrix::zeros(k, n),
+            b: BOperand::Inline(Matrix::zeros(k, n)),
+            backend: None,
+            submitted: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    fn weight_req(id: u64, weight: u64, m: usize, k: usize, n: usize) -> GemmRequest {
+        let (tx, _rx) = channel();
+        GemmRequest {
+            id,
+            a: Matrix::zeros(m, k),
+            b: BOperand::Weight(Arc::new(WeightEntry {
+                id: WeightId(weight),
+                matrix: Matrix::zeros(k, n),
+                e_min: None,
+                e_max: None,
+            })),
             backend: None,
             submitted: Instant::now(),
             reply: tx,
@@ -117,6 +139,21 @@ mod tests {
         assert_eq!(batch.len(), 3);
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3, 4]);
         assert_eq!(b.pending_count(), 1); // the 8³ request remains
+    }
+
+    #[test]
+    fn weight_requests_group_by_weight_not_just_shape() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 2, max_wait: Duration::from_secs(10) });
+        // Same 4×4×4 shape throughout: inline, weight 1, weight 2.
+        assert!(b.push(req(1, 4, 4, 4)).is_none());
+        assert!(b.push(weight_req(2, 1, 4, 4, 4)).is_none());
+        assert!(b.push(weight_req(3, 2, 4, 4, 4)).is_none());
+        assert_eq!(b.pending_count(), 3, "three distinct batch keys");
+        // A second request on weight 1 fills that batch alone.
+        let batch = b.push(weight_req(4, 1, 4, 4, 4)).expect("weight-1 batch full");
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 4]);
+        assert!(batch.iter().all(|r| r.b.weight_id() == Some(WeightId(1))));
+        assert_eq!(b.pending_count(), 2);
     }
 
     #[test]

@@ -7,11 +7,16 @@
 //! 1. analyses operand ranges and picks a precision path
 //!    ([`policy`] — including the dynamic `s_b` selection the paper
 //!    lists as future work),
-//! 2. groups compatible requests into batches ([`batcher`]),
+//! 2. groups compatible requests into batches ([`batcher`]) — keyed by
+//!    shape *and* registered-weight identity, so requests sharing a
+//!    prepacked B execute together,
 //! 3. executes them on a worker pool ([`server`]) over either the
 //!    native numerics engine or the PJRT artifacts ([`crate::runtime`]),
 //!    scheduling row-block tiles across workers ([`scheduler`]) the way
-//!    the Ascend kernel distributes row blocks across AI cores,
+//!    the Ascend kernel distributes row blocks across AI cores — with
+//!    cache-stable weights served from prepacked panels
+//!    ([`crate::gemm::prepacked`], [`crate::gemm::cache`]) so the
+//!    split + pack cost is paid once per weight, not once per request,
 //! 4. and records latency/throughput metrics ([`metrics`]).
 
 pub mod batcher;
@@ -24,5 +29,5 @@ pub mod server;
 pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::Metrics;
 pub use policy::{PolicyDecision, PrecisionPolicy};
-pub use request::{GemmRequest, GemmResponse, ShapeKey};
+pub use request::{BOperand, GemmRequest, GemmResponse, ShapeKey, WeightEntry, WeightId};
 pub use server::{GemmService, ServiceConfig};

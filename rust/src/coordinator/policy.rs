@@ -17,6 +17,8 @@
 //!   suffice (1-pass instead of 3-pass → 3× cheaper, Table 2 note).
 
 use crate::gemm::backend::Backend;
+use crate::gemm::prepacked::PrepackPath;
+use crate::softfloat::split::SplitConfig;
 use crate::util::mat::Matrix;
 
 /// What the policy decided for a request.
@@ -29,6 +31,26 @@ pub struct PolicyDecision {
     /// non-zero entry exists.
     pub e_min: Option<i32>,
     pub e_max: Option<i32>,
+}
+
+impl PolicyDecision {
+    /// The prepacked-operand format this decision executes against
+    /// ([`crate::gemm::prepacked`]), or `None` for a path that must run
+    /// from the raw matrix (every current backend is prepackable; a
+    /// future path that is not — e.g. an out-of-process PJRT artifact —
+    /// returns `None` from its match arm here). Mirrors the hot-path
+    /// dispatch of [`crate::gemm::backend::GemmBackend::gemm`]: both
+    /// cube accumulation orders run the fused blocked kernel, so they
+    /// share one packed format.
+    pub fn prepack_path(&self) -> Option<PrepackPath> {
+        Some(match self.backend {
+            Backend::Fp32 => PrepackPath::Fp32,
+            Backend::Fp16 => PrepackPath::Fp16,
+            Backend::CubeElementwise | Backend::CubeTermwise => {
+                PrepackPath::Cube(SplitConfig::with_scale(self.scale_exp))
+            }
+        })
+    }
 }
 
 /// Range-aware precision selection.
@@ -55,11 +77,13 @@ fn exponent_of(v: f32) -> Option<i32> {
     Some(((v.to_bits() >> 23) & 0xff) as i32 - 127)
 }
 
-/// Observed exponent range over both operands.
-pub fn exponent_range(a: &Matrix<f32>, b: &Matrix<f32>) -> (Option<i32>, Option<i32>) {
+/// Observed exponent range of a single matrix. For cache-stable operands
+/// (registered weights) this is computed once at registration, so the
+/// per-request policy scan only touches the activation operand.
+pub fn matrix_exponent_range(m: &Matrix<f32>) -> (Option<i32>, Option<i32>) {
     let mut e_min = None;
     let mut e_max = None;
-    for v in a.as_slice().iter().chain(b.as_slice().iter()) {
+    for v in m.as_slice() {
         if let Some(e) = exponent_of(*v) {
             e_min = Some(e_min.map_or(e, |m: i32| m.min(e)));
             e_max = Some(e_max.map_or(e, |m: i32| m.max(e)));
@@ -68,10 +92,45 @@ pub fn exponent_range(a: &Matrix<f32>, b: &Matrix<f32>) -> (Option<i32>, Option<
     (e_min, e_max)
 }
 
+/// Union of two exponent ranges.
+fn merge_ranges(
+    x: (Option<i32>, Option<i32>),
+    y: (Option<i32>, Option<i32>),
+) -> (Option<i32>, Option<i32>) {
+    let lo = match (x.0, y.0) {
+        (Some(a), Some(b)) => Some(a.min(b)),
+        (a, b) => a.or(b),
+    };
+    let hi = match (x.1, y.1) {
+        (Some(a), Some(b)) => Some(a.max(b)),
+        (a, b) => a.or(b),
+    };
+    (lo, hi)
+}
+
+/// Observed exponent range over both operands.
+pub fn exponent_range(a: &Matrix<f32>, b: &Matrix<f32>) -> (Option<i32>, Option<i32>) {
+    merge_ranges(matrix_exponent_range(a), matrix_exponent_range(b))
+}
+
 impl PrecisionPolicy {
     /// Decide the path for `(a, b)`.
     pub fn decide(&self, a: &Matrix<f32>, b: &Matrix<f32>) -> PolicyDecision {
-        let (e_min, e_max) = exponent_range(a, b);
+        self.decide_ranges(matrix_exponent_range(a), matrix_exponent_range(b))
+    }
+
+    /// Decide from precomputed per-operand exponent ranges — the serving
+    /// path for registered weights, whose range is recorded once at
+    /// registration ([`crate::coordinator::request::WeightEntry`])
+    /// instead of rescanned per request. `decide(a, b)` is exactly
+    /// `decide_ranges(range(a), range(b))`, so routing is identical
+    /// whether or not B is cached.
+    pub fn decide_ranges(
+        &self,
+        a_range: (Option<i32>, Option<i32>),
+        b_range: (Option<i32>, Option<i32>),
+    ) -> PolicyDecision {
+        let (e_min, e_max) = merge_ranges(a_range, b_range);
         let (lo, hi) = match (e_min, e_max) {
             (Some(lo), Some(hi)) => (lo, hi),
             _ => {
@@ -180,6 +239,24 @@ mod tests {
         let a2 = mat_with_exponents(&[-20, 0]);
         let d2 = PrecisionPolicy::default().decide(&a2, &b);
         assert_eq!(d2.backend, Backend::CubeTermwise);
+    }
+
+    #[test]
+    fn decide_ranges_matches_decide_and_maps_prepack_path() {
+        let a = mat_with_exponents(&[-3, 0, 5]);
+        let b = mat_with_exponents(&[-1, 2, 3]);
+        let p = PrecisionPolicy::default();
+        let joint = p.decide(&a, &b);
+        let split = p.decide_ranges(matrix_exponent_range(&a), matrix_exponent_range(&b));
+        assert_eq!(joint, split);
+        assert_eq!(
+            joint.prepack_path(),
+            Some(PrepackPath::Cube(SplitConfig::with_scale(joint.scale_exp)))
+        );
+        // FP32 fallback still advertises a prepackable path.
+        let big = mat_with_exponents(&[17]);
+        let d = p.decide(&big, &b);
+        assert_eq!(d.prepack_path(), Some(PrepackPath::Fp32));
     }
 
     #[test]

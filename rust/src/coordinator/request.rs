@@ -1,6 +1,7 @@
 //! Request/response types of the GEMM service.
 
 use std::sync::mpsc::Sender;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::gemm::backend::Backend;
@@ -25,11 +26,69 @@ impl ShapeKey {
     }
 }
 
+/// Identity of a weight matrix registered with the service
+/// ([`crate::coordinator::server::GemmService::register_weights`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct WeightId(pub u64);
+
+/// A registered, cache-stable B operand. The exponent range is computed
+/// once at registration so the per-request policy scan only touches A —
+/// and the packed/split representation is cached per precision path
+/// ([`crate::gemm::cache`]), which is the point of registering at all.
+#[derive(Debug)]
+pub struct WeightEntry {
+    pub id: WeightId,
+    pub matrix: Matrix<f32>,
+    /// Unbiased exponent range of the weight's finite non-zero entries
+    /// (see [`crate::coordinator::policy::matrix_exponent_range`]).
+    pub e_min: Option<i32>,
+    pub e_max: Option<i32>,
+}
+
+/// The B operand of a request: a one-shot inline matrix, or a registered
+/// weight shared (via `Arc`) with the service registry and every other
+/// request against it.
+pub enum BOperand {
+    Inline(Matrix<f32>),
+    Weight(Arc<WeightEntry>),
+}
+
+impl BOperand {
+    /// The operand values, wherever they live.
+    pub fn matrix(&self) -> &Matrix<f32> {
+        match self {
+            BOperand::Inline(m) => m,
+            BOperand::Weight(w) => &w.matrix,
+        }
+    }
+
+    /// The registered weight entry, if this operand is cache-stable.
+    pub fn weight(&self) -> Option<&Arc<WeightEntry>> {
+        match self {
+            BOperand::Inline(_) => None,
+            BOperand::Weight(w) => Some(w),
+        }
+    }
+
+    pub fn weight_id(&self) -> Option<WeightId> {
+        self.weight().map(|w| w.id)
+    }
+}
+
+/// Batching key: the shape plus the weight identity, so requests sharing
+/// a prepacked B land in the same batch (one cache lookup, maximal panel
+/// reuse) and never mix with inline requests that merely share a shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BatchKey {
+    pub shape: ShapeKey,
+    pub weight: Option<WeightId>,
+}
+
 /// A GEMM job submitted to the service.
 pub struct GemmRequest {
     pub id: u64,
     pub a: Matrix<f32>,
-    pub b: Matrix<f32>,
+    pub b: BOperand,
     /// Fixed precision path, or `None` to let the policy decide.
     pub backend: Option<Backend>,
     /// When the request entered the service (for latency accounting).
@@ -40,7 +99,11 @@ pub struct GemmRequest {
 
 impl GemmRequest {
     pub fn shape(&self) -> ShapeKey {
-        ShapeKey::of(&self.a, &self.b)
+        ShapeKey::of(&self.a, self.b.matrix())
+    }
+
+    pub fn batch_key(&self) -> BatchKey {
+        BatchKey { shape: self.shape(), weight: self.b.weight_id() }
     }
 }
 
@@ -78,5 +141,38 @@ mod tests {
         s.insert(ShapeKey { m: 1, k: 2, n: 3 });
         assert_eq!(s.len(), 1);
         assert!(ShapeKey { m: 1, k: 2, n: 3 } < ShapeKey { m: 2, k: 0, n: 0 });
+    }
+
+    #[test]
+    fn b_operand_views_and_batch_keys() {
+        let inline = BOperand::Inline(Matrix::zeros(5, 7));
+        assert_eq!(inline.matrix().shape(), (5, 7));
+        assert_eq!(inline.weight_id(), None);
+
+        let entry = Arc::new(WeightEntry {
+            id: WeightId(9),
+            matrix: Matrix::zeros(5, 7),
+            e_min: None,
+            e_max: None,
+        });
+        let weight = BOperand::Weight(entry.clone());
+        assert_eq!(weight.matrix().shape(), (5, 7));
+        assert_eq!(weight.weight_id(), Some(WeightId(9)));
+        assert_eq!(weight.weight().unwrap().id, entry.id);
+
+        // Same shape, different stability → different batch keys.
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let mk = |b: BOperand| GemmRequest {
+            id: 1,
+            a: Matrix::zeros(3, 5),
+            b,
+            backend: None,
+            submitted: Instant::now(),
+            reply: tx.clone(),
+        };
+        let k_inline = mk(BOperand::Inline(Matrix::zeros(5, 7))).batch_key();
+        let k_weight = mk(BOperand::Weight(entry)).batch_key();
+        assert_eq!(k_inline.shape, k_weight.shape);
+        assert_ne!(k_inline, k_weight);
     }
 }

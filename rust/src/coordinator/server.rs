@@ -1,17 +1,25 @@
-//! The GEMM service: submission API, dispatcher thread, worker pool.
+//! The GEMM service: submission API, weight registry, dispatcher
+//! thread, worker pool, prepacked-operand cache.
 //!
 //! Architecture (std threads; the image has no tokio):
 //!
 //! ```text
-//! clients --submit()--> dispatcher --(batch by shape / policy)--> workers
-//!                                                              \--> reply channels
+//! clients --register_weights()--> weight registry (Arc<WeightEntry>)
+//! clients --submit()-----------> dispatcher --(batch by shape+weight)--> workers
+//!                                                                     \--> reply channels
+//!                                        workers <--> prepack cache (LRU, Arc<PrepackedMatrix>)
 //! ```
 //!
 //! The dispatcher owns the [`Batcher`]; full or expired batches go to a
 //! work queue consumed by `n_workers` threads. Each worker executes the
 //! batch through the precision path chosen by the [`PrecisionPolicy`]
 //! (or the request's explicit backend) on the native numerics engine.
+//! Requests against a registered weight are served from the prepacked
+//! cache: the weight's FP32→2×FP16 split and panel packing are done at
+//! most once per `(weight, path, s_b)` and every subsequent request pays
+//! only for preparing its A operand ([`crate::gemm::prepacked`]).
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
@@ -20,18 +28,46 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::policy::PrecisionPolicy;
-use crate::coordinator::request::{GemmRequest, GemmResponse};
+use crate::coordinator::policy::{matrix_exponent_range, PolicyDecision, PrecisionPolicy};
+use crate::coordinator::request::{BOperand, GemmRequest, GemmResponse, WeightEntry, WeightId};
 use crate::gemm::backend::{Backend, GemmBackend};
+use crate::gemm::blocked;
+use crate::gemm::cache::{CacheStats, PrepackCache, PrepackKey};
+use crate::gemm::prepacked::PrepackedMatrix;
 use crate::util::mat::Matrix;
 
+/// Default prepack-cache capacity: enough for a few dozen transformer-
+/// block-sized FP16/cube weights without threatening a serving host's
+/// memory budget.
+pub const DEFAULT_PREPACK_CAPACITY: usize = 256 << 20;
+
+/// Default worker count: one per available core
+/// (`std::thread::available_parallelism`), honoring the operator's
+/// `SGEMM_CUBE_THREADS` override, clamped to at least one.
+pub fn default_workers() -> usize {
+    crate::util::threads::num_threads().max(1)
+}
+
 /// Service configuration.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct ServiceConfig {
     pub batcher: BatcherConfig,
     pub policy: PrecisionPolicy,
-    /// Worker threads (0 = available parallelism).
+    /// Worker threads (0 = available parallelism, same as the default).
     pub n_workers: usize,
+    /// Prepacked-operand cache capacity in bytes.
+    pub prepack_capacity: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            batcher: BatcherConfig::default(),
+            policy: PrecisionPolicy::default(),
+            n_workers: default_workers(),
+            prepack_capacity: DEFAULT_PREPACK_CAPACITY,
+        }
+    }
 }
 
 enum DispatchMsg {
@@ -44,6 +80,9 @@ pub struct GemmService {
     tx: Sender<DispatchMsg>,
     next_id: AtomicU64,
     metrics: Arc<Metrics>,
+    weights: Mutex<HashMap<WeightId, Arc<WeightEntry>>>,
+    next_weight: AtomicU64,
+    prepack: Arc<PrepackCache>,
     dispatcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
 }
@@ -52,22 +91,20 @@ impl GemmService {
     /// Start the dispatcher and worker pool.
     pub fn start(cfg: ServiceConfig) -> GemmService {
         let metrics = Arc::new(Metrics::new());
+        let prepack = Arc::new(PrepackCache::new(cfg.prepack_capacity));
         let (tx, rx) = channel::<DispatchMsg>();
         let (work_tx, work_rx) = channel::<Vec<GemmRequest>>();
         let work_rx = Arc::new(Mutex::new(work_rx));
 
-        let n_workers = if cfg.n_workers == 0 {
-            crate::util::threads::num_threads()
-        } else {
-            cfg.n_workers
-        };
+        let n_workers = if cfg.n_workers == 0 { default_workers() } else { cfg.n_workers };
 
         let mut workers = Vec::with_capacity(n_workers);
         for _ in 0..n_workers {
             let work_rx = work_rx.clone();
             let metrics = metrics.clone();
             let policy = cfg.policy.clone();
-            workers.push(std::thread::spawn(move || worker_loop(work_rx, metrics, policy)));
+            let cache = prepack.clone();
+            workers.push(std::thread::spawn(move || worker_loop(work_rx, metrics, policy, cache)));
         }
 
         let metrics_d = metrics.clone();
@@ -80,9 +117,57 @@ impl GemmService {
             tx,
             next_id: AtomicU64::new(1),
             metrics,
+            weights: Mutex::new(HashMap::new()),
+            next_weight: AtomicU64::new(1),
+            prepack,
             dispatcher: Some(dispatcher),
             workers,
         }
+    }
+
+    /// Register a cache-stable B operand (a weight matrix). Its exponent
+    /// range is computed now, once; its packed/split representation is
+    /// built lazily on first use per precision path and then served from
+    /// the prepack cache. Returns the handle to pass to
+    /// [`GemmService::submit_prepacked`].
+    pub fn register_weights(&self, b: Matrix<f32>) -> WeightId {
+        let id = WeightId(self.next_weight.fetch_add(1, Ordering::Relaxed));
+        let (e_min, e_max) = matrix_exponent_range(&b);
+        let entry = Arc::new(WeightEntry { id, matrix: b, e_min, e_max });
+        self.weights.lock().unwrap().insert(id, entry);
+        id
+    }
+
+    /// The registered weight entry behind `id`, if any.
+    pub fn weight(&self, id: WeightId) -> Option<Arc<WeightEntry>> {
+        self.weights.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Drop a registered weight and purge its prepacked panels from the
+    /// cache (weight ids are never reused, so stale entries could only
+    /// waste capacity).
+    pub fn unregister_weights(&self, id: WeightId) -> bool {
+        let removed = self.weights.lock().unwrap().remove(&id).is_some();
+        if removed {
+            self.prepack.purge_weight(id.0);
+        }
+        removed
+    }
+
+    fn submit_operand(
+        &self,
+        a: Matrix<f32>,
+        b: BOperand,
+        backend: Option<Backend>,
+    ) -> (u64, Receiver<GemmResponse>) {
+        assert_eq!(a.cols(), b.matrix().rows(), "inner dimensions must match");
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = channel();
+        let req = GemmRequest { id, a, b, backend, submitted: Instant::now(), reply };
+        self.tx
+            .send(DispatchMsg::Request(req))
+            .expect("service dispatcher is gone");
+        (id, rx)
     }
 
     /// Submit a GEMM; returns (request id, receiver for the response).
@@ -92,14 +177,21 @@ impl GemmService {
         b: Matrix<f32>,
         backend: Option<Backend>,
     ) -> (u64, Receiver<GemmResponse>) {
-        assert_eq!(a.cols(), b.rows(), "inner dimensions must match");
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (reply, rx) = channel();
-        let req = GemmRequest { id, a, b, backend, submitted: Instant::now(), reply };
-        self.tx
-            .send(DispatchMsg::Request(req))
-            .expect("service dispatcher is gone");
-        (id, rx)
+        self.submit_operand(a, BOperand::Inline(b), backend)
+    }
+
+    /// Submit a GEMM against a registered weight: batched with other
+    /// requests on the same weight and served from its prepacked panels.
+    ///
+    /// Panics if `id` was never registered (or was unregistered).
+    pub fn submit_prepacked(
+        &self,
+        a: Matrix<f32>,
+        id: WeightId,
+        backend: Option<Backend>,
+    ) -> (u64, Receiver<GemmResponse>) {
+        let entry = self.weight(id).expect("unknown weight id; call register_weights first");
+        self.submit_operand(a, BOperand::Weight(entry), backend)
     }
 
     /// Blocking convenience: submit and wait.
@@ -113,8 +205,25 @@ impl GemmService {
         rx.recv().expect("worker dropped the reply channel")
     }
 
+    /// Blocking convenience for the register-weights-then-serve flow.
+    pub fn gemm_blocking_prepacked(
+        &self,
+        a: Matrix<f32>,
+        id: WeightId,
+        backend: Option<Backend>,
+    ) -> GemmResponse {
+        let (_, rx) = self.submit_prepacked(a, id, backend);
+        rx.recv().expect("worker dropped the reply channel")
+    }
+
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
+    }
+
+    /// Counters of the prepacked-operand cache (hits appear from the
+    /// second request against a weight on a given precision path).
+    pub fn prepack_stats(&self) -> CacheStats {
+        self.prepack.stats()
     }
 
     /// Stop accepting work, drain, and join all threads.
@@ -191,6 +300,7 @@ fn worker_loop(
     work_rx: Arc<Mutex<Receiver<Vec<GemmRequest>>>>,
     metrics: Arc<Metrics>,
     policy: PrecisionPolicy,
+    cache: Arc<PrepackCache>,
 ) {
     loop {
         // Hold the lock only while receiving, not while computing.
@@ -200,18 +310,19 @@ fn worker_loop(
         };
         for req in batch {
             let decision = match req.backend {
-                Some(b) => crate::coordinator::policy::PolicyDecision {
-                    backend: b,
-                    scale_exp: 12,
-                    e_min: None,
-                    e_max: None,
+                Some(b) => PolicyDecision { backend: b, scale_exp: 12, e_min: None, e_max: None },
+                // Registered weights carry their exponent range from
+                // registration time; only A is scanned per request.
+                None => match req.b.weight() {
+                    Some(w) => {
+                        policy.decide_ranges(matrix_exponent_range(&req.a), (w.e_min, w.e_max))
+                    }
+                    None => policy.decide(&req.a, req.b.matrix()),
                 },
-                None => policy.decide(&req.a, &req.b),
             };
-            let exec = GemmBackend::new(decision.backend).with_scale(decision.scale_exp);
             let shape = req.shape();
             let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                exec.gemm(&req.a, &req.b)
+                execute_request(&req, &decision, &cache)
             }))
             .map_err(|_| "gemm panicked".to_string());
             let latency = req.submitted.elapsed().as_secs_f64();
@@ -227,6 +338,42 @@ fn worker_loop(
     }
 }
 
+/// Execute one request on the decided path. Registered weights go
+/// through the prepack cache and the prepacked blocked entry points —
+/// bit-identical to the inline path for the same decision, since both
+/// run the same sweeps over equal panel bytes
+/// ([`crate::gemm::blocked::gemm_prepacked`]).
+fn execute_request(
+    req: &GemmRequest,
+    decision: &PolicyDecision,
+    cache: &PrepackCache,
+) -> Matrix<f32> {
+    if let (Some(w), Some(path)) = (req.b.weight(), decision.prepack_path()) {
+        // Normalize the key the way the panels are shared: both cube
+        // orders execute the same fused kernel, and non-cube paths
+        // ignore the scaling exponent entirely.
+        let (backend, scale_exp) = match decision.backend {
+            Backend::Fp32 => (Backend::Fp32, 0),
+            Backend::Fp16 => (Backend::Fp16, 0),
+            Backend::CubeElementwise | Backend::CubeTermwise => {
+                (Backend::CubeTermwise, decision.scale_exp)
+            }
+        };
+        let key = PrepackKey {
+            weight: w.id.0,
+            k: w.matrix.rows(),
+            n: w.matrix.cols(),
+            backend,
+            scale_exp,
+        };
+        let packed = cache.get_or_insert_with(key, || PrepackedMatrix::prepack(&w.matrix, path));
+        return blocked::gemm_prepacked(&req.a, &packed);
+    }
+    GemmBackend::new(decision.backend)
+        .with_scale(decision.scale_exp)
+        .gemm(&req.a, req.b.matrix())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -239,7 +386,48 @@ mod tests {
             batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
             policy: PrecisionPolicy::default(),
             n_workers: 2,
+            ..Default::default()
         }
+    }
+
+    #[test]
+    fn default_workers_track_available_parallelism() {
+        let d = ServiceConfig::default();
+        assert!(d.n_workers >= 1, "clamped to at least one worker");
+        // One per core (or the operator's SGEMM_CUBE_THREADS override —
+        // num_threads() resolves both).
+        assert_eq!(d.n_workers, crate::util::threads::num_threads().max(1));
+        assert!(d.prepack_capacity > 0);
+    }
+
+    #[test]
+    fn prepacked_weight_requests_hit_cache() {
+        let svc = GemmService::start(small_cfg());
+        let mut rng = Rng::new(7);
+        let w = Matrix::random_symmetric(24, 16, 0, &mut rng);
+        let id = svc.register_weights(w.clone());
+        assert!(svc.weight(id).is_some());
+        for _ in 0..3 {
+            let a = Matrix::random_symmetric(8, 24, 0, &mut rng);
+            let resp = svc.gemm_blocking_prepacked(a, id, None);
+            assert!(resp.result.is_ok());
+            assert_eq!(resp.backend, Backend::CubeTermwise);
+        }
+        let stats = svc.prepack_stats();
+        assert_eq!(stats.misses, 1, "one pack per (weight, path)");
+        assert_eq!(stats.hits, 2, "subsequent requests served from cache");
+        assert!(svc.unregister_weights(id));
+        assert!(svc.weight(id).is_none());
+        assert_eq!(svc.prepack_stats().entries, 0, "panels purged with the weight");
+        svc.shutdown();
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown weight id")]
+    fn unknown_weight_id_rejected_at_submit() {
+        let svc = GemmService::start(small_cfg());
+        let a: Matrix<f32> = Matrix::zeros(2, 2);
+        let _ = svc.submit_prepacked(a, WeightId(999), None);
     }
 
     #[test]

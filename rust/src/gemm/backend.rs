@@ -10,8 +10,9 @@ use crate::gemm::sgemm::sgemm;
 use crate::softfloat::split::SplitConfig;
 use crate::util::mat::Matrix;
 
-/// The precision paths the system can serve.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// The precision paths the system can serve. (`Hash`: the prepacked
+/// serving cache keys on the path, see [`crate::gemm::cache`].)
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Backend {
     /// Plain FP32 GEMM (software baseline).
     Fp32,

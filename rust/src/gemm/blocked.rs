@@ -41,6 +41,16 @@
 //! all cores busy — `b_m` governs packing/cache reuse, not the thread
 //! count (see [`exec_bm`]).
 //!
+//! Serving path: the split + pack cost of a *stable* B operand (a
+//! weight matrix) is `O(k·n)` work independent of `m`, so at serving
+//! shapes (small `m`, repeated requests) it dominates the request. The
+//! prepacked entry points ([`gemm_prepacked`], [`cube_gemm_prepacked`])
+//! run the same sweeps over panels cached in a [`PrepackedMatrix`],
+//! paying that cost once per weight — outputs are bit-identical to the
+//! pack-on-the-fly path because the sweeps are shared
+//! ([`sweep_rows_f32`]/[`sweep_rows_cube`]) and the panel bytes are
+//! equal. See EXPERIMENTS.md §Serving-amortization.
+//!
 //! The measured before/after for this engine is recorded in
 //! EXPERIMENTS.md §Perf-iteration-log.
 
@@ -48,6 +58,7 @@ use std::sync::OnceLock;
 
 use crate::gemm::cube::WideSplit;
 use crate::gemm::pack::{self, MR, NR};
+use crate::gemm::prepacked::{PrepackPath, PrepackedMatrix};
 use crate::sim::blocking::{feasible_blocks, BlockConfig, GemmShape, Traffic};
 use crate::sim::chip::Chip;
 use crate::softfloat::f16::F16;
@@ -110,9 +121,9 @@ pub fn cube_gemm_blocked(a: &Matrix<f32>, b: &Matrix<f32>, cfg: SplitConfig) -> 
 }
 
 /// SGEMM-cube over pre-split operands — for callers that already hold
-/// `WideSplit` components and want to skip the per-call split (the
-/// serving path does not cache splits yet; it enters via
-/// [`cube_gemm_blocked`]).
+/// `WideSplit` components and want to skip the per-call split. (The
+/// serving path goes further and skips the per-call *packing* of B too:
+/// see [`cube_gemm_prepacked`].)
 pub fn cube_gemm_blocked_split(a: &WideSplit, b: &WideSplit) -> Matrix<f32> {
     assert_eq!(a.cfg, b.cfg, "operands must be split with the same configuration");
     let (_, k) = a.high.shape();
@@ -120,6 +131,96 @@ pub fn cube_gemm_blocked_split(a: &WideSplit, b: &WideSplit) -> Matrix<f32> {
     assert_eq!(k, kb, "inner dimensions must match: {k} vs {kb}");
     let inv_sf = 1.0f32 / a.cfg.scale_factor();
     cube_blocked_core(&a.high, &a.low, &b.high, &b.low, inv_sf)
+}
+
+/// GEMM against a prepacked B operand, dispatching on the path the
+/// panels were prepared for ([`PrepackPath`]). The split/convert + pack
+/// cost of B is already paid ([`PrepackedMatrix::prepack`]); per request
+/// only A is prepared. Output is **bit-identical** to the corresponding
+/// pack-on-the-fly entry point ([`sgemm_blocked`], [`hgemm_blocked`],
+/// [`cube_gemm_blocked`] with the same [`SplitConfig`]) because both
+/// run the same sweeps over the same panel bytes.
+pub fn gemm_prepacked(a: &Matrix<f32>, b: &PrepackedMatrix) -> Matrix<f32> {
+    match b.path() {
+        PrepackPath::Fp32 => sgemm_prepacked(a, b),
+        PrepackPath::Fp16 => hgemm_prepacked(a, b),
+        PrepackPath::Cube(_) => cube_gemm_prepacked(a, b),
+    }
+}
+
+/// FP32 blocked GEMM over prepacked B panels.
+pub fn sgemm_prepacked(a: &Matrix<f32>, b: &PrepackedMatrix) -> Matrix<f32> {
+    assert_eq!(b.path(), PrepackPath::Fp32, "operand was prepacked for {:?}", b.path());
+    assert_eq!(a.cols(), b.k(), "inner dimensions must match: {} vs {}", a.cols(), b.k());
+    prepacked_core_single(a, b)
+}
+
+/// FP16 Cube GEMM over prepacked B panels (B was FP16-rounded at pack
+/// time; A is converted per call, exactly as [`hgemm_blocked`] does).
+pub fn hgemm_prepacked(a: &Matrix<f32>, b: &PrepackedMatrix) -> Matrix<f32> {
+    assert_eq!(b.path(), PrepackPath::Fp16, "operand was prepacked for {:?}", b.path());
+    assert_eq!(a.cols(), b.k(), "inner dimensions must match: {} vs {}", a.cols(), b.k());
+    let ah = a.map(|v| F16::from_f32_rn(v).to_f32());
+    prepacked_core_single(&ah, b)
+}
+
+/// SGEMM-cube over prepacked dual-component B panels: A is split per
+/// call with the configuration recorded in the packed operand, then the
+/// fused three-term sweep runs against the cached panels.
+pub fn cube_gemm_prepacked(a: &Matrix<f32>, b: &PrepackedMatrix) -> Matrix<f32> {
+    let cfg = match b.path() {
+        PrepackPath::Cube(cfg) => cfg,
+        p => panic!("operand was prepacked for {p:?}, not the cube path"),
+    };
+    assert_eq!(a.cols(), b.k(), "inner dimensions must match: {} vs {}", a.cols(), b.k());
+    let asp = WideSplit::of(a, cfg);
+    let inv_sf = 1.0f32 / cfg.scale_factor();
+    prepacked_core_cube(&asp.high, &asp.low, b, inv_sf)
+}
+
+/// Single-component nest over prepacked panels: the `b_n → b_k` loops of
+/// [`gemm_blocked_core`] with `pack_b` replaced by a panel lookup.
+fn prepacked_core_single(a: &Matrix<f32>, b: &PrepackedMatrix) -> Matrix<f32> {
+    let (m, k) = a.shape();
+    let n = b.n();
+    let mut c = Matrix::zeros(m, n);
+    if m == 0 || n == 0 || k == 0 {
+        return c;
+    }
+    let bm = exec_bm(m, host_block().bm);
+    let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
+    for (jb, j0) in (0..n).step_by(b.bn()).enumerate() {
+        for (pb, p0) in (0..k).step_by(b.bk()).enumerate() {
+            let kc = b.bk().min(k - p0);
+            sweep_rows_f32(a, b.panel(jb, pb), &cp, n, bm, j0, p0, kc);
+        }
+    }
+    c
+}
+
+/// Dual-component nest over prepacked panels (cube counterpart of
+/// [`prepacked_core_single`]).
+fn prepacked_core_cube(
+    ah: &Matrix<f32>,
+    al: &Matrix<f32>,
+    b: &PrepackedMatrix,
+    inv_sf: f32,
+) -> Matrix<f32> {
+    let (m, k) = ah.shape();
+    let n = b.n();
+    let mut c = Matrix::zeros(m, n);
+    if m == 0 || n == 0 || k == 0 {
+        return c;
+    }
+    let bm = exec_bm(m, host_block().bm);
+    let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
+    for (jb, j0) in (0..n).step_by(b.bn()).enumerate() {
+        for (pb, p0) in (0..k).step_by(b.bk()).enumerate() {
+            let kc = b.bk().min(k - p0);
+            sweep_rows_cube(ah, al, b.panel(jb, pb), &cp, n, bm, j0, p0, kc, inv_sf);
+        }
+    }
+    c
 }
 
 /// The executed row-block size: the model's `b_m` capped so that `m`
@@ -144,7 +245,6 @@ fn gemm_blocked_core(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
     }
     let block = host_block();
     let (bm, bk, bn) = (exec_bm(m, block.bm), block.bk, block.bn);
-    let row_blocks = m.div_ceil(bm);
     let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
     let mut bp = Vec::new();
     for j0 in (0..n).step_by(bn) {
@@ -152,29 +252,48 @@ fn gemm_blocked_core(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
         for p0 in (0..k).step_by(bk) {
             let kc = bk.min(k - p0);
             pack::pack_b(b, p0, kc, j0, nc, &mut bp);
-            let bp = &bp;
-            let cp = &cp;
-            parallel_chunks(row_blocks, |rb0, rb1| {
-                let mut ap = Vec::new();
-                for rb in rb0..rb1 {
-                    let i0 = rb * bm;
-                    let mc = bm.min(m - i0);
-                    pack::pack_a(a, i0, mc, p0, kc, &mut ap);
-                    for (rp, apanel) in ap.chunks_exact(kc * MR).enumerate() {
-                        let ci = i0 + rp * MR;
-                        let mr_eff = MR.min(m - ci);
-                        for (cpnl, bpanel) in bp.chunks_exact(kc * NR).enumerate() {
-                            let cj = j0 + cpnl * NR;
-                            let nr_eff = NR.min(n - cj);
-                            let acc = kernel_f32(apanel, bpanel);
-                            add_tile(cp, n, ci, cj, mr_eff, nr_eff, &acc);
-                        }
-                    }
-                }
-            });
+            sweep_rows_f32(a, &bp, &cp, n, bm, j0, p0, kc);
         }
     }
     c
+}
+
+/// One `(j, k)` block of the single-component nest: every row block of A
+/// packed per thread and run against the packed B panel `bp` (whether
+/// freshly packed or served from a [`PrepackedMatrix`] — both paths
+/// execute this exact sweep, which is what makes the prepacked results
+/// bit-identical).
+#[allow(clippy::too_many_arguments)]
+fn sweep_rows_f32(
+    a: &Matrix<f32>,
+    bp: &[f32],
+    cp: &SendPtr<f32>,
+    n: usize,
+    bm: usize,
+    j0: usize,
+    p0: usize,
+    kc: usize,
+) {
+    let m = a.rows();
+    let row_blocks = m.div_ceil(bm);
+    parallel_chunks(row_blocks, |rb0, rb1| {
+        let mut ap = Vec::new();
+        for rb in rb0..rb1 {
+            let i0 = rb * bm;
+            let mc = bm.min(m - i0);
+            pack::pack_a(a, i0, mc, p0, kc, &mut ap);
+            for (rp, apanel) in ap.chunks_exact(kc * MR).enumerate() {
+                let ci = i0 + rp * MR;
+                let mr_eff = MR.min(m - ci);
+                for (cpnl, bpanel) in bp.chunks_exact(kc * NR).enumerate() {
+                    let cj = j0 + cpnl * NR;
+                    let nr_eff = NR.min(n - cj);
+                    let acc = kernel_f32(apanel, bpanel);
+                    add_tile(cp, n, ci, cj, mr_eff, nr_eff, &acc);
+                }
+            }
+        }
+    });
 }
 
 /// Dual-component blocked driver with the fused three-term micro-kernel.
@@ -193,7 +312,6 @@ fn cube_blocked_core(
     }
     let block = host_block();
     let (bm, bk, bn) = (exec_bm(m, block.bm), block.bk, block.bn);
-    let row_blocks = m.div_ceil(bm);
     let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
     let mut bp = Vec::new();
     for j0 in (0..n).step_by(bn) {
@@ -201,29 +319,49 @@ fn cube_blocked_core(
         for p0 in (0..k).step_by(bk) {
             let kc = bk.min(k - p0);
             pack::pack_b_dual(bh, bl, p0, kc, j0, nc, &mut bp);
-            let bp = &bp;
-            let cp = &cp;
-            parallel_chunks(row_blocks, |rb0, rb1| {
-                let mut ap = Vec::new();
-                for rb in rb0..rb1 {
-                    let i0 = rb * bm;
-                    let mc = bm.min(m - i0);
-                    pack::pack_a_dual(ah, al, i0, mc, p0, kc, &mut ap);
-                    for (rp, apanel) in ap.chunks_exact(kc * 2 * MR).enumerate() {
-                        let ci = i0 + rp * MR;
-                        let mr_eff = MR.min(m - ci);
-                        for (cpnl, bpanel) in bp.chunks_exact(kc * 2 * NR).enumerate() {
-                            let cj = j0 + cpnl * NR;
-                            let nr_eff = NR.min(n - cj);
-                            let (hh, corr) = kernel_cube(apanel, bpanel);
-                            add_tile_cube(cp, n, ci, cj, mr_eff, nr_eff, &hh, &corr, inv_sf);
-                        }
-                    }
-                }
-            });
+            sweep_rows_cube(ah, al, &bp, &cp, n, bm, j0, p0, kc, inv_sf);
         }
     }
     c
+}
+
+/// Dual-component counterpart of [`sweep_rows_f32`]: one `(j, k)` block
+/// of the fused cube nest against the dual-format packed B panel `bp`
+/// (freshly packed or prepacked — the shared sweep keeps both paths
+/// bit-identical).
+#[allow(clippy::too_many_arguments)]
+fn sweep_rows_cube(
+    ah: &Matrix<f32>,
+    al: &Matrix<f32>,
+    bp: &[f32],
+    cp: &SendPtr<f32>,
+    n: usize,
+    bm: usize,
+    j0: usize,
+    p0: usize,
+    kc: usize,
+    inv_sf: f32,
+) {
+    let m = ah.rows();
+    let row_blocks = m.div_ceil(bm);
+    parallel_chunks(row_blocks, |rb0, rb1| {
+        let mut ap = Vec::new();
+        for rb in rb0..rb1 {
+            let i0 = rb * bm;
+            let mc = bm.min(m - i0);
+            pack::pack_a_dual(ah, al, i0, mc, p0, kc, &mut ap);
+            for (rp, apanel) in ap.chunks_exact(kc * 2 * MR).enumerate() {
+                let ci = i0 + rp * MR;
+                let mr_eff = MR.min(m - ci);
+                for (cpnl, bpanel) in bp.chunks_exact(kc * 2 * NR).enumerate() {
+                    let cj = j0 + cpnl * NR;
+                    let nr_eff = NR.min(n - cj);
+                    let (hh, corr) = kernel_cube(apanel, bpanel);
+                    add_tile_cube(cp, n, ci, cj, mr_eff, nr_eff, &hh, &corr, inv_sf);
+                }
+            }
+        }
+    });
 }
 
 /// `MR × NR` register micro-kernel: one FP32 chain per cell over the
@@ -412,6 +550,48 @@ mod tests {
         for (x, y) in c.as_slice().iter().zip(r.as_slice().iter()) {
             assert_eq!(*x as f64, *y);
         }
+    }
+
+    #[test]
+    fn prepacked_paths_bit_identical_to_blocked() {
+        let mut rng = Rng::new(52);
+        // Serving-like shapes (small m, wide weight) plus awkward edges.
+        for (m, k, n) in [(1, 17, 9), (8, 96, 40), (33, 65, 24)] {
+            let a = Matrix::random_symmetric(m, k, 0, &mut rng);
+            let b = Matrix::random_symmetric(k, n, 0, &mut rng);
+
+            let pp = PrepackedMatrix::prepack(&b, PrepackPath::Fp32);
+            let (x, y) = (sgemm_blocked(&a, &b), gemm_prepacked(&a, &pp));
+            for (u, v) in x.as_slice().iter().zip(y.as_slice()) {
+                assert_eq!(u.to_bits(), v.to_bits(), "fp32 {m}x{k}x{n}");
+            }
+
+            let pp = PrepackedMatrix::prepack(&b, PrepackPath::Fp16);
+            let (x, y) = (hgemm_blocked(&a, &b), gemm_prepacked(&a, &pp));
+            for (u, v) in x.as_slice().iter().zip(y.as_slice()) {
+                assert_eq!(u.to_bits(), v.to_bits(), "fp16 {m}x{k}x{n}");
+            }
+
+            for s_b in [12, 8] {
+                let cfg = SplitConfig::with_scale(s_b);
+                let pp = PrepackedMatrix::prepack(&b, PrepackPath::Cube(cfg));
+                let (x, y) = (cube_gemm_blocked(&a, &b, cfg), cube_gemm_prepacked(&a, &pp));
+                for (u, v) in x.as_slice().iter().zip(y.as_slice()) {
+                    assert_eq!(u.to_bits(), v.to_bits(), "cube s_b={s_b} {m}x{k}x{n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prepacked_path_mismatch_panics() {
+        let b = Matrix::zeros(4, 4);
+        let pp = PrepackedMatrix::prepack(&b, PrepackPath::Fp32);
+        let a = Matrix::zeros(2, 4);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            cube_gemm_prepacked(&a, &pp)
+        }));
+        assert!(r.is_err());
     }
 
     #[test]

@@ -1,0 +1,306 @@
+//! LRU cache of prepacked weight operands ([`crate::gemm::prepacked`]).
+//!
+//! The serving tier treats the packed/split representation of a stable B
+//! operand as a cached artifact: keyed by the weight's identity and
+//! shape **plus** the precision path and scaling parameters, because a
+//! weight prepacked for one `(path, s_b)` pair is not valid for another
+//! (the split itself depends on `s_b`, and the panel format differs
+//! between the single- and dual-component paths).
+//!
+//! Capacity is bounded in bytes (weights dominate; entry counts would be
+//! a poor proxy). Eviction is least-recently-used via a monotonic use
+//! stamp — an `O(entries)` scan per eviction, which is irrelevant at the
+//! dozens-of-weights scale this cache holds. A single entry larger than
+//! the whole capacity is admitted anyway (evicting everything else):
+//! refusing it would livelock the serving path that needs it.
+//!
+//! Packing runs *outside* the lock: a miss releases the mutex, packs,
+//! then re-checks on insert, so a large weight being prepacked never
+//! stalls workers hitting other entries. Two workers racing on the same
+//! cold key may both pack; the second insert discards its copy and
+//! adopts the first — wasted work once per race, no inconsistency.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::gemm::backend::Backend;
+use crate::gemm::prepacked::PrepackedMatrix;
+
+/// Cache key for a prepacked operand. `weight` is the registered weight
+/// identity (two distinct weights of equal shape must not collide);
+/// `backend`/`scale_exp` pin the precision path and scaling the panels
+/// were prepared for (callers normalize: both cube orders share packed
+/// panels, and `scale_exp` is 0 on non-cube paths).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PrepackKey {
+    pub weight: u64,
+    pub k: usize,
+    pub n: usize,
+    pub backend: Backend,
+    pub scale_exp: i32,
+}
+
+/// Point-in-time cache counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub entries: usize,
+    pub bytes: usize,
+    pub capacity_bytes: usize,
+}
+
+impl CacheStats {
+    /// Fraction of lookups served from cache (0 when none happened).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Slot {
+    value: Arc<PrepackedMatrix>,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    map: HashMap<PrepackKey, Slot>,
+    clock: u64,
+    bytes: usize,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// Byte-bounded LRU of prepacked operands, shared across the service's
+/// worker threads.
+pub struct PrepackCache {
+    capacity_bytes: usize,
+    inner: Mutex<Inner>,
+}
+
+impl PrepackCache {
+    pub fn new(capacity_bytes: usize) -> PrepackCache {
+        PrepackCache { capacity_bytes, inner: Mutex::new(Inner::default()) }
+    }
+
+    /// Fetch `key`, packing (outside the lock) on a miss.
+    pub fn get_or_insert_with(
+        &self,
+        key: PrepackKey,
+        pack: impl FnOnce() -> PrepackedMatrix,
+    ) -> Arc<PrepackedMatrix> {
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.clock += 1;
+            let stamp = g.clock;
+            if let Some(slot) = g.map.get_mut(&key) {
+                slot.last_used = stamp;
+                let value = slot.value.clone();
+                g.hits += 1;
+                return value;
+            }
+            g.misses += 1;
+        }
+        let packed = Arc::new(pack());
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        let stamp = g.clock;
+        if let Some(slot) = g.map.get_mut(&key) {
+            // A racing worker packed the same key first; adopt its copy.
+            slot.last_used = stamp;
+            return slot.value.clone();
+        }
+        g.bytes += packed.bytes();
+        g.map.insert(key, Slot { value: packed.clone(), last_used: stamp });
+        while g.bytes > self.capacity_bytes && g.map.len() > 1 {
+            // The fresh entry holds the newest stamp, so the scan never
+            // selects it while anything older remains.
+            let lru = g
+                .map
+                .iter()
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(k, _)| *k)
+                .expect("len > 1");
+            let evicted = g.map.remove(&lru).expect("key just observed");
+            g.bytes -= evicted.value.bytes();
+            g.evictions += 1;
+        }
+        packed
+    }
+
+    /// Lookup without packing (hit/miss counted).
+    pub fn get(&self, key: &PrepackKey) -> Option<Arc<PrepackedMatrix>> {
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        let stamp = g.clock;
+        match g.map.get_mut(key) {
+            Some(slot) => {
+                slot.last_used = stamp;
+                let value = slot.value.clone();
+                g.hits += 1;
+                Some(value)
+            }
+            None => {
+                g.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Remove every entry belonging to `weight` (all paths/scales) —
+    /// the unregistration path: weight ids are never reused, so dead
+    /// entries would otherwise sit charged against capacity until
+    /// eviction pressure finds them. Returns the number removed. (A
+    /// request already in flight against the weight may re-insert one
+    /// entry afterwards; it ages out like any other.)
+    pub fn purge_weight(&self, weight: u64) -> usize {
+        let mut g = self.inner.lock().unwrap();
+        let before = g.map.len();
+        let mut freed = 0usize;
+        g.map.retain(|k, slot| {
+            if k.weight == weight {
+                freed += slot.value.bytes();
+                false
+            } else {
+                true
+            }
+        });
+        g.bytes -= freed;
+        before - g.map.len()
+    }
+
+    /// Drop every entry (counters are kept).
+    pub fn clear(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.map.clear();
+        g.bytes = 0;
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let g = self.inner.lock().unwrap();
+        CacheStats {
+            hits: g.hits,
+            misses: g.misses,
+            evictions: g.evictions,
+            entries: g.map.len(),
+            bytes: g.bytes,
+            capacity_bytes: self.capacity_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::prepacked::PrepackPath;
+    use crate::util::mat::Matrix;
+    use crate::util::rng::Rng;
+
+    fn key(weight: u64, n: usize) -> PrepackKey {
+        PrepackKey { weight, k: n, n, backend: Backend::Fp32, scale_exp: 0 }
+    }
+
+    fn packed(n: usize, seed: u64) -> PrepackedMatrix {
+        let mut rng = Rng::new(seed);
+        let b = Matrix::random_symmetric(n, n, 0, &mut rng);
+        PrepackedMatrix::prepack(&b, PrepackPath::Fp32)
+    }
+
+    #[test]
+    fn hit_after_first_insert() {
+        let cache = PrepackCache::new(64 << 20);
+        let mut packs = 0;
+        for _ in 0..3 {
+            let p = cache.get_or_insert_with(key(1, 16), || {
+                packs += 1;
+                packed(16, 1)
+            });
+            assert_eq!(p.n(), 16);
+        }
+        assert_eq!(packs, 1);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (2, 1, 1));
+        assert!(s.hit_rate() > 0.6);
+        assert!(s.bytes > 0);
+    }
+
+    #[test]
+    fn distinct_keys_do_not_collide() {
+        let cache = PrepackCache::new(64 << 20);
+        cache.get_or_insert_with(key(1, 16), || packed(16, 1));
+        cache.get_or_insert_with(key(2, 16), || packed(16, 2));
+        let mut k3 = key(1, 16);
+        k3.scale_exp = 8;
+        cache.get_or_insert_with(k3, || packed(16, 3));
+        assert_eq!(cache.stats().entries, 3);
+        assert_eq!(cache.stats().misses, 3);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used_first() {
+        // Each 16×16 FP32 entry packs to a bit over 1 KiB; cap the cache
+        // so only two fit.
+        let one = packed(16, 1).bytes();
+        let cache = PrepackCache::new(2 * one + one / 2);
+        cache.get_or_insert_with(key(1, 16), || packed(16, 1));
+        cache.get_or_insert_with(key(2, 16), || packed(16, 2));
+        assert_eq!(cache.stats().evictions, 0);
+        // Touch 1 so 2 becomes the LRU victim.
+        assert!(cache.get(&key(1, 16)).is_some());
+        cache.get_or_insert_with(key(3, 16), || packed(16, 3));
+        let s = cache.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.entries, 2);
+        assert!(cache.get(&key(2, 16)).is_none(), "LRU entry 2 evicted");
+        assert!(cache.get(&key(1, 16)).is_some(), "recently used entry 1 kept");
+        assert!(cache.get(&key(3, 16)).is_some(), "fresh entry 3 kept");
+        assert!(s.bytes <= 2 * one + one / 2);
+    }
+
+    #[test]
+    fn oversized_entry_is_admitted_alone() {
+        let cache = PrepackCache::new(1); // nothing "fits"
+        cache.get_or_insert_with(key(1, 16), || packed(16, 1));
+        cache.get_or_insert_with(key(2, 16), || packed(16, 2));
+        let s = cache.stats();
+        // The newest oversized entry survives; the older one is evicted.
+        assert_eq!(s.entries, 1);
+        assert_eq!(s.evictions, 1);
+        assert!(cache.get(&key(2, 16)).is_some());
+    }
+
+    #[test]
+    fn purge_weight_removes_all_its_paths_and_frees_bytes() {
+        let cache = PrepackCache::new(64 << 20);
+        cache.get_or_insert_with(key(1, 16), || packed(16, 1));
+        let mut cube_key = key(1, 16);
+        cube_key.backend = Backend::CubeTermwise;
+        cube_key.scale_exp = 12;
+        cache.get_or_insert_with(cube_key, || packed(16, 1));
+        cache.get_or_insert_with(key(2, 16), || packed(16, 2));
+        assert_eq!(cache.purge_weight(1), 2);
+        let s = cache.stats();
+        assert_eq!(s.entries, 1);
+        assert!(cache.get(&key(2, 16)).is_some(), "other weights untouched");
+        assert!(cache.get(&key(1, 16)).is_none());
+        assert_eq!(cache.purge_weight(1), 0, "idempotent");
+    }
+
+    #[test]
+    fn clear_empties_but_keeps_counters() {
+        let cache = PrepackCache::new(64 << 20);
+        cache.get_or_insert_with(key(1, 16), || packed(16, 1));
+        cache.clear();
+        let s = cache.stats();
+        assert_eq!(s.entries, 0);
+        assert_eq!(s.bytes, 0);
+        assert_eq!(s.misses, 1);
+    }
+}

@@ -31,22 +31,33 @@
 //!   sizes come from [`crate::sim::blocking`] on the host cache model.
 //! * [`fast`] — the hot-path entry points (wrappers over [`blocked`],
 //!   plus the retained pre-blocking baselines).
+//! * [`prepacked`] — stable B operands with the split + pack work done
+//!   once ([`prepacked::PrepackedMatrix`]), consumed bit-identically by
+//!   [`blocked::gemm_prepacked`].
+//! * [`cache`] — the byte-bounded LRU the coordinator serves prepacked
+//!   weights from.
 
 pub mod backend;
 pub mod bfcube;
 pub mod blocked;
+pub mod cache;
 pub mod cube;
 pub mod dgemm;
 pub mod error;
 pub mod fast;
 pub mod hgemm;
 pub mod pack;
+pub mod prepacked;
 pub mod sgemm;
 
 pub use backend::{Backend, GemmBackend};
-pub use blocked::{cube_gemm_blocked, hgemm_blocked, sgemm_blocked};
+pub use blocked::{
+    cube_gemm_blocked, cube_gemm_prepacked, gemm_prepacked, hgemm_blocked, sgemm_blocked,
+};
+pub use cache::{CacheStats, PrepackCache, PrepackKey};
 pub use cube::{cube_gemm, cube_gemm_split, Accumulation};
 pub use dgemm::dgemm;
 pub use error::relative_error;
 pub use hgemm::{hgemm, AccumulateMode};
+pub use prepacked::{PrepackPath, PrepackedMatrix};
 pub use sgemm::sgemm;

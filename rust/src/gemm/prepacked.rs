@@ -1,0 +1,235 @@
+//! Prepacked B operands: the split + panel-pack work of the blocked
+//! engine ([`crate::gemm::blocked`]) paid once per weight matrix.
+//!
+//! The serving workload the coordinator targets is dominated by
+//! repeated GEMMs against a *stable* B operand (a weight matrix) with a
+//! small, changing A (a batch of activations, often `m ≤ 32`). On that
+//! shape the per-request cost of the blocked path is not the micro-kernel
+//! — it is preparing B: the FP32→2×FP16 split runs one software-f16
+//! conversion pair per element of B (`softfloat::split`), and
+//! `pack::pack_b_dual` rewrites the whole `k × n` panel set, all `O(k·n)`
+//! work that is independent of `m` and identical across requests.
+//!
+//! [`PrepackedMatrix`] snapshots exactly the bytes the blocked loop nest
+//! consumes — one packed panel buffer per `(column block, k block)` of
+//! the `b_n → b_k` nest, in the same block geometry
+//! ([`crate::gemm::blocked::host_block`]) and the same panel layout
+//! ([`crate::gemm::pack`]) — so
+//! [`crate::gemm::blocked::gemm_prepacked`] replays the identical
+//! traversal over cached panels and its output is **bit-identical** to
+//! the pack-on-the-fly path for the same scaling parameters.
+//!
+//! Three formats, one per precision path the policy can choose
+//! ([`PrepackPath`]): plain FP32 panels, FP16-rounded panels (widened to
+//! f32, the Cube operand convention), and dual high/low split panels for
+//! SGEMM-cube. The split configuration is part of the format — a weight
+//! prepacked at `s_b = 12` cannot serve a request decided at `s_b = 8`,
+//! which is why the serving cache ([`crate::gemm::cache`]) keys on the
+//! scaling parameters as well as the shape and path.
+
+use crate::gemm::blocked::host_block;
+use crate::gemm::cube::WideSplit;
+use crate::gemm::pack;
+use crate::sim::blocking::BlockConfig;
+use crate::softfloat::f16::F16;
+use crate::softfloat::split::SplitConfig;
+use crate::util::mat::Matrix;
+
+/// Which precision path a [`PrepackedMatrix`] was prepared for. Mirrors
+/// the hot-path dispatch of [`crate::gemm::backend::GemmBackend::gemm`]:
+/// both cube accumulation orders execute through the same fused blocked
+/// kernel, so they share the [`PrepackPath::Cube`] format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrepackPath {
+    /// Plain FP32 panels (`pack_b`).
+    Fp32,
+    /// FP16-rounded values widened to f32 (`pack_b` over the converted
+    /// matrix) — what [`crate::gemm::blocked::hgemm_blocked`] feeds the
+    /// single-component kernel.
+    Fp16,
+    /// Dual high/low split panels (`pack_b_dual`) for the fused
+    /// three-term cube kernel, split with this configuration.
+    Cube(SplitConfig),
+}
+
+/// A B operand with the blocked engine's split + pack work already done:
+/// the packed panel buffers for every `(column block, k block)` of the
+/// `b_n → b_k` loop nest.
+#[derive(Debug, Clone)]
+pub struct PrepackedMatrix {
+    k: usize,
+    n: usize,
+    bk: usize,
+    bn: usize,
+    path: PrepackPath,
+    /// Panel buffer for column block `jb`, k block `pb` at index
+    /// `jb * k_blocks + pb`; contents are exactly what `pack_b` /
+    /// `pack_b_dual` produce for that block.
+    panels: Vec<Vec<f32>>,
+    k_blocks: usize,
+}
+
+impl PrepackedMatrix {
+    /// Prepack `b` for `path` with the engine's model-selected host
+    /// block ([`host_block`]) — the geometry [`gemm_prepacked`] replays.
+    ///
+    /// [`gemm_prepacked`]: crate::gemm::blocked::gemm_prepacked
+    pub fn prepack(b: &Matrix<f32>, path: PrepackPath) -> PrepackedMatrix {
+        PrepackedMatrix::prepack_with_block(b, path, host_block())
+    }
+
+    /// Prepack with an explicit block geometry (tests and tools; the
+    /// serving path always uses [`host_block`] so cached panels match
+    /// the executing nest).
+    pub fn prepack_with_block(
+        b: &Matrix<f32>,
+        path: PrepackPath,
+        block: BlockConfig,
+    ) -> PrepackedMatrix {
+        let (k, n) = b.shape();
+        let (bk, bn) = (block.bk, block.bn);
+        let k_blocks = k.div_ceil(bk);
+        let n_blocks = n.div_ceil(bn);
+        let mut panels = Vec::with_capacity(k_blocks * n_blocks);
+        // Converted/split form of B, shared across every block.
+        let converted;
+        let split;
+        #[derive(Clone, Copy)]
+        enum Src<'a> {
+            Single(&'a Matrix<f32>),
+            Dual(&'a WideSplit),
+        }
+        let src = match path {
+            PrepackPath::Fp32 => Src::Single(b),
+            PrepackPath::Fp16 => {
+                converted = b.map(|v| F16::from_f32_rn(v).to_f32());
+                Src::Single(&converted)
+            }
+            PrepackPath::Cube(cfg) => {
+                split = WideSplit::of(b, cfg);
+                Src::Dual(&split)
+            }
+        };
+        for j0 in (0..n).step_by(bn) {
+            let nc = bn.min(n - j0);
+            for p0 in (0..k).step_by(bk) {
+                let kc = bk.min(k - p0);
+                let mut out = Vec::new();
+                match src {
+                    Src::Single(m) => pack::pack_b(m, p0, kc, j0, nc, &mut out),
+                    Src::Dual(sp) => {
+                        pack::pack_b_dual(&sp.high, &sp.low, p0, kc, j0, nc, &mut out)
+                    }
+                }
+                panels.push(out);
+            }
+        }
+        PrepackedMatrix { k, n, bk, bn, path, panels, k_blocks }
+    }
+
+    /// Inner (k) dimension of the original matrix.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Output (n) dimension of the original matrix.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// k-block size the panels were packed with.
+    pub fn bk(&self) -> usize {
+        self.bk
+    }
+
+    /// Column-block size the panels were packed with.
+    pub fn bn(&self) -> usize {
+        self.bn
+    }
+
+    /// The precision path this operand was prepared for.
+    pub fn path(&self) -> PrepackPath {
+        self.path
+    }
+
+    /// Packed panel buffer for column block `jb`, k block `pb`.
+    #[inline]
+    pub fn panel(&self, jb: usize, pb: usize) -> &[f32] {
+        &self.panels[jb * self.k_blocks + pb]
+    }
+
+    /// Resident size in bytes (panel buffers + bookkeeping) — what the
+    /// serving cache charges against its capacity.
+    pub fn bytes(&self) -> usize {
+        std::mem::size_of::<PrepackedMatrix>()
+            + self
+                .panels
+                .iter()
+                .map(|p| p.capacity() * std::mem::size_of::<f32>())
+                .sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn panels_match_on_the_fly_packing() {
+        let mut rng = Rng::new(7);
+        let b = Matrix::random_symmetric(70, 37, 0, &mut rng);
+        let block = BlockConfig::new(16, 32, 16);
+        let pp = PrepackedMatrix::prepack_with_block(&b, PrepackPath::Fp32, block);
+        assert_eq!(pp.k(), 70);
+        assert_eq!(pp.n(), 37);
+        let mut out = Vec::new();
+        for (jb, j0) in (0..37).step_by(block.bn).enumerate() {
+            let nc = block.bn.min(37 - j0);
+            for (pb, p0) in (0..70).step_by(block.bk).enumerate() {
+                let kc = block.bk.min(70 - p0);
+                pack::pack_b(&b, p0, kc, j0, nc, &mut out);
+                assert_eq!(pp.panel(jb, pb), &out[..], "block ({jb}, {pb})");
+            }
+        }
+    }
+
+    #[test]
+    fn cube_panels_match_dual_packing_of_split() {
+        let mut rng = Rng::new(8);
+        let b = Matrix::random_symmetric(40, 24, 0, &mut rng);
+        let cfg = SplitConfig::default();
+        let block = BlockConfig::new(16, 32, 16);
+        let pp = PrepackedMatrix::prepack_with_block(&b, PrepackPath::Cube(cfg), block);
+        assert_eq!(pp.path(), PrepackPath::Cube(cfg));
+        let sp = WideSplit::of(&b, cfg);
+        let mut out = Vec::new();
+        pack::pack_b_dual(&sp.high, &sp.low, 0, 32, 0, 16, &mut out);
+        assert_eq!(pp.panel(0, 0), &out[..]);
+        pack::pack_b_dual(&sp.high, &sp.low, 32, 8, 16, 8, &mut out);
+        assert_eq!(pp.panel(1, 1), &out[..]);
+    }
+
+    #[test]
+    fn bytes_accounts_for_panel_storage() {
+        let mut rng = Rng::new(9);
+        let b = Matrix::random_symmetric(32, 32, 0, &mut rng);
+        let single = PrepackedMatrix::prepack(&b, PrepackPath::Fp32);
+        let dual = PrepackedMatrix::prepack(&b, PrepackPath::Cube(SplitConfig::default()));
+        assert!(single.bytes() >= 32 * 32 * 4);
+        // Dual panels carry both components.
+        assert!(dual.bytes() > single.bytes());
+    }
+
+    #[test]
+    fn degenerate_shapes_produce_no_panels() {
+        let b: Matrix<f32> = Matrix::zeros(0, 5);
+        let pp = PrepackedMatrix::prepack(&b, PrepackPath::Fp32);
+        assert_eq!(pp.k(), 0);
+        assert_eq!(pp.n(), 5);
+        let b: Matrix<f32> = Matrix::zeros(5, 0);
+        let pp = PrepackedMatrix::prepack(&b, PrepackPath::Fp16);
+        assert_eq!(pp.n(), 0);
+        assert!(pp.bytes() < 1024);
+    }
+}

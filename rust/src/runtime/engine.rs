@@ -1,8 +1,17 @@
-//! The execution engine: PJRT client + compiled-executable cache.
+//! The execution engine: PJRT client, compiled-executable cache, and
+//! registered-weight literal cache.
+//!
+//! The weight cache is the runtime-layer face of the serving stack's
+//! register-weights-then-serve flow (see
+//! [`crate::coordinator::server::GemmService::register_weights`] for the
+//! native-engine counterpart): a stable operand is registered once, its
+//! host→literal conversion is performed at most once per
+//! `(weight, artifact input spec)`, and subsequent executions reuse the
+//! cached literal instead of re-converting `k·n` elements per request.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
@@ -15,7 +24,11 @@ use crate::util::mat::Matrix;
 pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    /// Registered stable operands, by caller-chosen name.
+    weights: Mutex<HashMap<String, Arc<Matrix<f32>>>>,
+    /// Converted literals per `(weight name, artifact name)`.
+    weight_literals: Mutex<HashMap<(String, String), Arc<xla::Literal>>>,
 }
 
 impl Engine {
@@ -24,7 +37,13 @@ impl Engine {
     pub fn new(artifacts_dir: &Path) -> Result<Engine> {
         let manifest = Manifest::load(artifacts_dir)?;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine { client, manifest, cache: Mutex::new(HashMap::new()) })
+        Ok(Engine {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            weights: Mutex::new(HashMap::new()),
+            weight_literals: Mutex::new(HashMap::new()),
+        })
     }
 
     /// Default artifacts directory: `$SGEMM_CUBE_ARTIFACTS` or
@@ -55,7 +74,7 @@ impl Engine {
     }
 
     /// Compile (or fetch from cache) the executable for `name`.
-    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+    pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
         if let Some(exe) = self.cache.lock().unwrap().get(name) {
             return Ok(exe.clone());
         }
@@ -67,13 +86,70 @@ impl Engine {
         )
         .with_context(|| format!("parsing HLO text {:?}", spec.path))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = std::sync::Arc::new(
+        let exe = Arc::new(
             self.client
                 .compile(&comp)
                 .with_context(|| format!("compiling artifact '{name}'"))?,
         );
         self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
         Ok(exe)
+    }
+
+    /// Register a stable operand (a weight matrix) under `name`. The
+    /// host→literal conversion for a given artifact happens on first use
+    /// and is cached; re-registering a name invalidates its cached
+    /// literals.
+    pub fn register_weight(&self, name: impl Into<String>, m: Matrix<f32>) {
+        let name = name.into();
+        // Swap first, purge second: weight_literal() holds the weights
+        // lock across its currency check + literal insert, so a literal
+        // converted from the previous registration can only land before
+        // the swap below — and the purge then removes it. (Purging first
+        // would leave a window for a stale literal to be cached after.)
+        self.weights.lock().unwrap().insert(name.clone(), Arc::new(m));
+        self.weight_literals.lock().unwrap().retain(|(w, _), _| *w != name);
+    }
+
+    /// The raw matrix registered under `name`, if any.
+    pub fn weight(&self, name: &str) -> Option<Arc<Matrix<f32>>> {
+        self.weights.lock().unwrap().get(name).cloned()
+    }
+
+    /// The cached input literal for weight `name` as input `input_idx`
+    /// of artifact `artifact`, converting on first use.
+    fn weight_literal(
+        &self,
+        artifact: &str,
+        spec: &ArtifactSpec,
+        input_idx: usize,
+        name: &str,
+    ) -> Result<Arc<xla::Literal>> {
+        let key = (name.to_string(), artifact.to_string());
+        if let Some(lit) = self.weight_literals.lock().unwrap().get(&key) {
+            return Ok(lit.clone());
+        }
+        let w = self
+            .weight(name)
+            .ok_or_else(|| anyhow!("unknown weight '{name}'; call register_weight first"))?;
+        let lit = Arc::new(
+            matrix_to_literal(&w, &spec.inputs[input_idx])
+                .with_context(|| format!("converting weight '{name}' for '{artifact}'"))?,
+        );
+        // Cache only if the registration we converted is still current —
+        // a concurrent register_weight() may have replaced the matrix
+        // while we converted. The weights lock is held across the check
+        // AND the insert so a concurrent swap cannot slip between them;
+        // register_weight() purges this name's literals *after* its swap,
+        // so whichever side loses the lock race, no stale literal
+        // survives. (Lock order weights → weight_literals is nested only
+        // here; register_weight takes them sequentially — no deadlock.)
+        {
+            let weights = self.weights.lock().unwrap();
+            if weights.get(name).is_some_and(|cur| Arc::ptr_eq(cur, &w)) {
+                self.weight_literals.lock().unwrap().insert(key, lit.clone());
+            }
+        }
+        Ok(lit)
     }
 
     /// Execute artifact `name` on row-major f32 inputs; returns the
@@ -98,9 +174,21 @@ impl Engine {
                 matrix_to_literal(m, s).with_context(|| format!("input {i} of '{name}'"))
             })
             .collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        self.execute_decoded(name, &spec, &refs)
+    }
 
+    /// Execute prepared input literals and decode the tuple result
+    /// against the manifest (shared by [`Engine::run`] and the
+    /// cached-weight path).
+    fn execute_decoded(
+        &self,
+        name: &str,
+        spec: &ArtifactSpec,
+        literals: &[&xla::Literal],
+    ) -> Result<Vec<Matrix<f32>>> {
         let exe = self.executable(name)?;
-        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+        let result = exe.execute::<&xla::Literal>(literals)?[0][0]
             .to_literal_sync()
             .context("fetching result literal")?;
         let parts = result.to_tuple().context("decomposing result tuple")?;
@@ -124,6 +212,31 @@ impl Engine {
     /// Convenience for the GEMM artifacts: `C = artifact(A, B)`.
     pub fn gemm(&self, name: &str, a: &Matrix<f32>, b: &Matrix<f32>) -> Result<Matrix<f32>> {
         let out = self.run(name, &[a, b])?;
+        out.into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("artifact '{name}' returned no outputs"))
+    }
+
+    /// `C = artifact(A, W)` with `W` a registered weight
+    /// ([`Engine::register_weight`]): only A is converted per call, the
+    /// weight literal comes from the cache.
+    pub fn gemm_with_weight(
+        &self,
+        name: &str,
+        a: &Matrix<f32>,
+        weight: &str,
+    ) -> Result<Matrix<f32>> {
+        let spec = self.spec(name)?.clone();
+        if spec.inputs.len() != 2 {
+            return Err(anyhow!(
+                "artifact '{name}' expects {} inputs; gemm_with_weight needs (A, W)",
+                spec.inputs.len()
+            ));
+        }
+        let lit_a =
+            matrix_to_literal(a, &spec.inputs[0]).with_context(|| format!("input A of '{name}'"))?;
+        let lit_w = self.weight_literal(name, &spec, 1, weight)?;
+        let out = self.execute_decoded(name, &spec, &[&lit_a, lit_w.as_ref()])?;
         out.into_iter()
             .next()
             .ok_or_else(|| anyhow!("artifact '{name}' returned no outputs"))

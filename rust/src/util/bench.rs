@@ -176,6 +176,22 @@ impl Bencher {
         self.results.last().unwrap()
     }
 
+    /// Record a derived scalar (e.g. a speedup ratio) as a result row:
+    /// the value rides in `median_s` (single-sample summary, no work
+    /// term), so derived metrics land in the same JSON file as the raw
+    /// timings — the CI bench-smoke gate reads the serving prepack
+    /// speedup this way.
+    pub fn record_scalar(&mut self, name: &str, value: f64) -> &BenchResult {
+        let result = BenchResult {
+            name: name.to_string(),
+            seconds: Summary::of(&[value]),
+            work_per_iter: None,
+        };
+        println!("{:<44} {value:>12.3}  (scalar)", result.name);
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
@@ -240,6 +256,17 @@ mod tests {
         assert!(text.trim_end().ends_with(']'));
         assert_eq!(text.matches("\"name\"").count(), 2);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn record_scalar_lands_in_json() {
+        let mut b = Bencher::quick();
+        b.record_scalar("serving/speedup", 3.5);
+        let j = b.results()[0].to_json();
+        assert!(j.contains("\"name\":\"serving/speedup\""), "{j}");
+        assert!(j.contains("\"median_s\":3.5"), "{j}");
+        assert!(j.contains("\"gflops\":null"), "{j}");
+        assert_eq!(b.results()[0].seconds.n, 1);
     }
 
     #[test]

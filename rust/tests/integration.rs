@@ -140,6 +140,7 @@ fn service_over_pjrt_consistency() {
         batcher: BatcherConfig { max_batch: 2, max_wait: Duration::from_millis(1) },
         policy: PrecisionPolicy::default(),
         n_workers: 1,
+        ..Default::default()
     });
     let mut rng = Rng::new(23);
     let a = Matrix::random_symmetric(128, 128, 0, &mut rng);
@@ -207,6 +208,7 @@ fn quickcheck_service_responses_complete_and_match_ids() {
         batcher: BatcherConfig { max_batch: 3, max_wait: Duration::from_millis(1) },
         policy: PrecisionPolicy::default(),
         n_workers: 2,
+        ..Default::default()
     });
     property("service responds to all ids", 30, |g: &mut Gen| {
         let m = 8 * g.usize_in(1, 4);
@@ -226,5 +228,59 @@ fn quickcheck_service_responses_complete_and_match_ids() {
         sgemm_cube::qc_assert!(c.shape() == (m, n), "bad shape {:?}", c.shape());
         Ok(())
     });
+    svc.shutdown();
+}
+
+#[test]
+fn prepacked_serving_bit_matches_blocked_path_and_hits_cache() {
+    // End-to-end register-weights-then-serve: repeated same-shape
+    // requests against one registered weight must (a) bit-match the
+    // unbatched blocked engine for the same scaling parameters, and
+    // (b) be served from the prepack cache after the first request.
+    use sgemm_cube::gemm::blocked::cube_gemm_blocked;
+    use sgemm_cube::softfloat::split::SplitConfig;
+    // One worker: batches drain sequentially, so the pack-exactly-once
+    // assertion below is deterministic (two workers racing on a cold key
+    // may legitimately both pack — see gemm::cache).
+    let svc = GemmService::start(ServiceConfig {
+        batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+        policy: PrecisionPolicy::default(),
+        n_workers: 1,
+        ..Default::default()
+    });
+    let mut rng = Rng::new(31);
+    let (m, kn) = (8usize, 96usize);
+    let w = Matrix::random_symmetric(kn, kn, 0, &mut rng);
+    let weights = svc.register_weights(w.clone());
+
+    // Pipelined round: several in-flight requests sharing the weight
+    // exercise the weight-keyed batcher, not just sequential hits.
+    let activations: Vec<Matrix<f32>> =
+        (0..6).map(|_| Matrix::random_symmetric(m, kn, 0, &mut rng)).collect();
+    let rxs: Vec<_> = activations
+        .iter()
+        .map(|a| svc.submit_prepacked(a.clone(), weights, None))
+        .collect();
+    for ((id, rx), a) in rxs.into_iter().zip(&activations) {
+        let resp = rx.recv_timeout(Duration::from_secs(10)).expect("response");
+        assert_eq!(resp.id, id);
+        assert_eq!(resp.backend, Backend::CubeTermwise);
+        let c = resp.result.expect("request failed");
+        let reference = cube_gemm_blocked(a, &w, SplitConfig::with_scale(resp.scale_exp));
+        for (x, y) in c.as_slice().iter().zip(reference.as_slice()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "served result differs from blocked path");
+        }
+    }
+
+    let stats = svc.prepack_stats();
+    assert_eq!(stats.misses, 1, "the weight is packed exactly once: {stats:?}");
+    assert!(stats.hits >= 5, "later requests served from cache: {stats:?}");
+    assert_eq!(stats.entries, 1);
+    assert!(stats.bytes > 0);
+
+    // The report still accounts every request.
+    let report = svc.metrics().report();
+    assert_eq!(report.requests, 6);
+    assert_eq!(report.errors, 0);
     svc.shutdown();
 }
