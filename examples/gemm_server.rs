@@ -50,7 +50,7 @@ fn main() {
                     let m = 64 + 32 * (i % 3);
                     let a = Matrix::random_symmetric(m, m, e, &mut rng);
                     let b = Matrix::random_symmetric(m, m, e, &mut rng);
-                    let resp = svc.gemm_blocking(a, b, backend);
+                    let resp = svc.gemm_blocking(a, b, backend).expect("submit failed");
                     assert!(resp.result.is_ok(), "request failed");
                     match resp.backend {
                         Backend::Fp32 => routed[0] += 1,
@@ -82,7 +82,9 @@ fn main() {
                 let mut rng = Rng::new(200 + client as u64);
                 for i in 0..PER_CLIENT {
                     let a = Matrix::random_symmetric(8, kn, 0, &mut rng);
-                    let resp = svc.gemm_blocking_prepacked(a, weights[i % weights.len()], None);
+                    let resp = svc
+                        .gemm_blocking_prepacked(a, weights[i % weights.len()], None)
+                        .expect("submit failed");
                     assert!(resp.result.is_ok(), "prepacked request failed");
                 }
             });

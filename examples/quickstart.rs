@@ -55,7 +55,7 @@ fn serving_demo(rng: &mut Rng) {
     let weights = svc.register_weights(w.clone());
     for step in 0..4 {
         let a = Matrix::random_symmetric(m, kn, 0, rng);
-        let resp = svc.gemm_blocking_prepacked(a.clone(), weights, None);
+        let resp = svc.gemm_blocking_prepacked(a.clone(), weights, None).expect("submit failed");
         let c = resp.result.expect("serving failed");
         let one_shot = cube_gemm_blocked(&a, &w, SplitConfig::with_scale(resp.scale_exp));
         let bit_identical = c

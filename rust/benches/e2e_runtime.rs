@@ -49,7 +49,7 @@ fn main() {
             .map(|_| {
                 let a = Matrix::random_symmetric(n, n, 0, &mut rng);
                 let bb = Matrix::random_symmetric(n, n, 0, &mut rng);
-                svc.submit(a, bb, None)
+                svc.submit(a, bb, None).expect("submit")
             })
             .collect();
         for (_, rx) in rxs {

@@ -1,12 +1,16 @@
 //! Bench target for Fig. 11: throughput vs blocking, single vs double
 //! buffer, on the calibrated 910A model — plus the *executed* host
 //! counterpart: the cache-blocked packed engine vs the pre-blocking
-//! three-pass kernel, and the serving-amortization column (prepacked
+//! three-pass kernel, the serving-amortization column (prepacked
 //! weight panels vs per-request split + pack at a serving-realistic
-//! shape), with the measurements written to `BENCH_gemm.json` at the
-//! repository root (overwritten with the latest run; commit it per PR —
-//! the CI bench-smoke job also uploads it as a workflow artifact — see
-//! EXPERIMENTS.md §Perf-iteration-log and §Serving-amortization).
+//! shape), and the overlapped-pipeline column (prefetched B panels vs
+//! the serial `b_k` loop, `blocked/overlap_speedup`) with the measured
+//! stage breakdown and the recalibrated non-overlapped fraction α fed
+//! into `sim::pipeline` (`blocked/alpha_measured`). Measurements are
+//! written to `BENCH_gemm.json` at the repository root (overwritten
+//! with the latest run; commit it per PR — the CI bench-smoke job also
+//! uploads it as a workflow artifact — see EXPERIMENTS.md
+//! §Perf-iteration-log, §Serving-amortization and §Overlap).
 //!
 //! `QUICK=1 cargo bench --bench fig11_blocking_perf` shrinks the host
 //! GEMMs from 1024³ to 256³ for a fast smoke pass; the serving column
@@ -15,13 +19,16 @@
 
 use sgemm_cube::experiments::fig11_blocking_perf;
 use sgemm_cube::gemm::blocked::{
-    cube_gemm_blocked, cube_gemm_prepacked, hgemm_blocked, host_block, sgemm_blocked,
+    cube_gemm_blocked, cube_gemm_blocked_overlapped, cube_gemm_blocked_staged,
+    cube_gemm_prepacked, hgemm_blocked, host_block, sgemm_blocked,
 };
 use sgemm_cube::gemm::fast::cube_gemm_three_pass;
 use sgemm_cube::gemm::prepacked::{PrepackPath, PrepackedMatrix};
-use sgemm_cube::sim::blocking::GemmShape;
+use sgemm_cube::sim::blocking::{BlockConfig, GemmShape};
+use sgemm_cube::sim::chip::Chip;
+use sgemm_cube::sim::pipeline::{Buffering, IterTiming, ALPHA_NONOVERLAP};
 use sgemm_cube::softfloat::split::SplitConfig;
-use sgemm_cube::util::bench::Bencher;
+use sgemm_cube::util::bench::{black_box, Bencher};
 use sgemm_cube::util::mat::Matrix;
 use sgemm_cube::util::rng::Rng;
 
@@ -51,9 +58,13 @@ fn main() {
     bench.bench(&format!("host/cube_gemm_three_pass/{n}^3"), Some(flops), || {
         cube_gemm_three_pass(&a, &b, cfg)
     });
-    bench.bench(&format!("host/cube_gemm_blocked/{n}^3"), Some(flops), || {
-        cube_gemm_blocked(&a, &b, cfg)
-    });
+    // Captured here for the overlapped-pipeline comparison below.
+    let serial_median = bench
+        .bench(&format!("host/cube_gemm_blocked/{n}^3"), Some(flops), || {
+            cube_gemm_blocked(&a, &b, cfg)
+        })
+        .seconds
+        .median;
     bench.bench(&format!("host/sgemm_blocked/{n}^3"), Some(flops), || sgemm_blocked(&a, &b));
     bench.bench(&format!("host/hgemm_blocked/{n}^3"), Some(flops), || hgemm_blocked(&a, &b));
 
@@ -86,6 +97,58 @@ fn main() {
         "prepacked vs per-request packing: {prepack_speedup:.2}x (CI bench-smoke gate ≥ 1.2x)"
     );
     bench.record_scalar(&format!("serving/prepacked_speedup/{sm}x{skn}x{skn}"), prepack_speedup);
+
+    // ---- overlapped b_k pipeline: prefetched B panels vs serial pack ----
+    // The serial driver packs each B panel on the critical path; the
+    // overlapped driver hides that span behind the row sweeps
+    // (gemm::overlap). Bit-identical output, different schedule — on a
+    // 1-core host the pipeline degenerates to the serial loop, so the
+    // CI sanity floor for the speedup is 1.0x (modulo runner noise).
+    println!("\noverlapped (double-buffered) b_k pipeline at {n}³:");
+    let overlap_median = bench
+        .bench(&format!("host/cube_gemm_overlapped/{n}^3"), Some(flops), || {
+            cube_gemm_blocked_overlapped(&a, &b, cfg)
+        })
+        .seconds
+        .median;
+    let overlap_speedup = serial_median / overlap_median;
+    println!("overlapped vs serial blocked: {overlap_speedup:.2}x");
+    bench.record_scalar(&format!("blocked/overlap_speedup/{n}^3"), overlap_speedup);
+
+    // ---- measured stage breakdown → recalibrated sim::pipeline α ----
+    // The instrumented single-threaded pass times each stage. Deriving
+    // T_mem: pack-B runs single-threaded in the *parallel* serial driver
+    // too (it sits between the parallel sweeps), so the staged pass's
+    // pack_b wall time transfers directly. T_comp is everything else on
+    // the serial driver's critical path (parallel sweeps + per-call
+    // split), i.e. serial_median − T_mem — deliberately *not* the staged
+    // pass's compute share, which would be inflated by the missing
+    // parallelism. The overlapped median then pins the non-overlapped
+    // fraction α of the paper's T_comp + α·T_mem model.
+    let (c_staged, stages) = cube_gemm_blocked_staged(&a, &b, cfg);
+    black_box(c_staged);
+    println!("\nserial stage breakdown (instrumented single-threaded pass):");
+    println!("  {}", stages.line());
+    bench.record_stages(&format!("blocked/stage/{n}^3"), &stages);
+    let t_mem = stages.transfer().min(serial_median);
+    let t_comp = (serial_median - t_mem).max(0.0);
+    // Pre-clamp α recorded for diagnosis (noise can push it outside
+    // [0, 1]); the clamped value is the one the calibration applies.
+    let alpha_raw = IterTiming::alpha_from_measured_raw(t_comp, t_mem, overlap_median);
+    bench.record_scalar("blocked/alpha_raw", alpha_raw);
+    let alpha = IterTiming::alpha_from_measured(t_comp, t_mem, overlap_median);
+    bench.record_scalar("blocked/alpha_measured", alpha);
+    let chip = Chip::ascend_910a();
+    let best = BlockConfig::paper_best();
+    let hard = IterTiming::of(&chip, best, best.n_fused(&chip));
+    let meas = IterTiming::from_measured(&chip, best, best.n_fused(&chip), alpha);
+    let u_hard = hard.utilization(Buffering::Double, best, &chip);
+    let u_meas = meas.utilization(Buffering::Double, best, &chip);
+    println!(
+        "sim::pipeline calibration: α = {alpha:.3} measured (hard-coded {ALPHA_NONOVERLAP}); \
+         double-buffer cube utilization {u_hard:.3} → {u_meas:.3}"
+    );
+    bench.record_scalar("sim/double_util_alpha_measured", u_meas);
 
     // Repo root, independent of the bench's working directory.
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_gemm.json");

@@ -40,7 +40,11 @@ impl ServerConfig {
             sc.policy.error_budget = Some(e);
         }
         if let Some(mb) = cfg.get_usize("server", "prepack_cache_mb")? {
+            // 0 = cache disabled (miss-through), see gemm::cache.
             sc.prepack_capacity = mb << 20;
+        }
+        if let Some(ov) = cfg.get_bool("server", "overlap")? {
+            sc.overlap = ov;
         }
         Ok(ServerConfig(sc))
     }
@@ -94,7 +98,7 @@ mod tests {
     #[test]
     fn server_section_roundtrip() {
         let cfg = ConfigFile::parse(
-            "[server]\nworkers = 3\nmax_batch = 16\nmax_wait_ms = 5\nbackend = fp16\nerror_budget = 1e-3\nprepack_cache_mb = 64",
+            "[server]\nworkers = 3\nmax_batch = 16\nmax_wait_ms = 5\nbackend = fp16\nerror_budget = 1e-3\nprepack_cache_mb = 64\noverlap = true",
         )
         .unwrap();
         let sc = ServerConfig::from_config(&cfg).unwrap().0;
@@ -104,10 +108,21 @@ mod tests {
         assert_eq!(sc.policy.default_backend, Backend::Fp16);
         assert_eq!(sc.policy.error_budget, Some(1e-3));
         assert_eq!(sc.prepack_capacity, 64 << 20);
+        assert!(sc.overlap);
         // Defaults: workers track the host, capacity is nonzero.
         let sc = ServerConfig::from_config(&ConfigFile::parse("").unwrap()).unwrap().0;
         assert!(sc.n_workers >= 1);
         assert!(sc.prepack_capacity > 0);
+        // overlap = false explicitly wins over the env default.
+        let cfg = ConfigFile::parse("[server]\noverlap = false").unwrap();
+        assert!(!ServerConfig::from_config(&cfg).unwrap().0.overlap);
+    }
+
+    #[test]
+    fn zero_prepack_cache_mb_disables_the_cache() {
+        let cfg = ConfigFile::parse("[server]\nprepack_cache_mb = 0").unwrap();
+        let sc = ServerConfig::from_config(&cfg).unwrap().0;
+        assert_eq!(sc.prepack_capacity, 0, "0 MB = cache disabled (miss-through)");
     }
 
     #[test]

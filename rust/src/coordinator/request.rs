@@ -5,6 +5,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::gemm::backend::Backend;
+use crate::gemm::error::GemmError;
 use crate::util::mat::Matrix;
 
 /// Shape key used for batching: requests with equal keys can execute in
@@ -111,7 +112,9 @@ impl GemmRequest {
 #[derive(Debug)]
 pub struct GemmResponse {
     pub id: u64,
-    pub result: Result<Matrix<f32>, String>,
+    /// The product, or the typed failure ([`GemmError`]) — a worker
+    /// never panics on a bad request; it reports here.
+    pub result: Result<Matrix<f32>, GemmError>,
     /// Which path actually executed.
     pub backend: Backend,
     /// Residual scaling exponent used (cube paths).

@@ -33,6 +33,7 @@ use crate::coordinator::request::{BOperand, GemmRequest, GemmResponse, WeightEnt
 use crate::gemm::backend::{Backend, GemmBackend};
 use crate::gemm::blocked;
 use crate::gemm::cache::{CacheStats, PrepackCache, PrepackKey};
+use crate::gemm::error::GemmError;
 use crate::gemm::prepacked::PrepackedMatrix;
 use crate::util::mat::Matrix;
 
@@ -55,8 +56,14 @@ pub struct ServiceConfig {
     pub policy: PrecisionPolicy,
     /// Worker threads (0 = available parallelism, same as the default).
     pub n_workers: usize,
-    /// Prepacked-operand cache capacity in bytes.
+    /// Prepacked-operand cache capacity in bytes. `0` disables the
+    /// cache entirely (miss-through — every request repacks).
     pub prepack_capacity: usize,
+    /// Route inline (non-prepacked) requests through the overlapped
+    /// (double-buffered) b_k pipeline ([`crate::gemm::overlap`]).
+    /// Bit-identical results; defaults to the `SGEMM_CUBE_OVERLAP` env
+    /// toggle, and the config file's `[server] overlap` key overrides.
+    pub overlap: bool,
 }
 
 impl Default for ServiceConfig {
@@ -66,6 +73,7 @@ impl Default for ServiceConfig {
             policy: PrecisionPolicy::default(),
             n_workers: default_workers(),
             prepack_capacity: DEFAULT_PREPACK_CAPACITY,
+            overlap: crate::gemm::overlap::overlap_enabled(),
         }
     }
 }
@@ -104,7 +112,10 @@ impl GemmService {
             let metrics = metrics.clone();
             let policy = cfg.policy.clone();
             let cache = prepack.clone();
-            workers.push(std::thread::spawn(move || worker_loop(work_rx, metrics, policy, cache)));
+            let overlap = cfg.overlap;
+            workers.push(std::thread::spawn(move || {
+                worker_loop(work_rx, metrics, policy, cache, overlap)
+            }));
         }
 
         let metrics_d = metrics.clone();
@@ -159,50 +170,58 @@ impl GemmService {
         a: Matrix<f32>,
         b: BOperand,
         backend: Option<Backend>,
-    ) -> (u64, Receiver<GemmResponse>) {
-        assert_eq!(a.cols(), b.matrix().rows(), "inner dimensions must match");
+    ) -> Result<(u64, Receiver<GemmResponse>), GemmError> {
+        // Validate here, in the caller's thread, so a malformed request
+        // is a typed error instead of a panic inside a worker. The
+        // kernels keep their asserts as last-resort invariants.
+        check_shapes(&a, b.matrix())?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = channel();
         let req = GemmRequest { id, a, b, backend, submitted: Instant::now(), reply };
         self.tx
             .send(DispatchMsg::Request(req))
             .expect("service dispatcher is gone");
-        (id, rx)
+        Ok((id, rx))
     }
 
-    /// Submit a GEMM; returns (request id, receiver for the response).
+    /// Submit a GEMM; returns (request id, receiver for the response),
+    /// or [`GemmError::ShapeMismatch`] for incompatible operands.
     pub fn submit(
         &self,
         a: Matrix<f32>,
         b: Matrix<f32>,
         backend: Option<Backend>,
-    ) -> (u64, Receiver<GemmResponse>) {
+    ) -> Result<(u64, Receiver<GemmResponse>), GemmError> {
         self.submit_operand(a, BOperand::Inline(b), backend)
     }
 
     /// Submit a GEMM against a registered weight: batched with other
     /// requests on the same weight and served from its prepacked panels.
     ///
-    /// Panics if `id` was never registered (or was unregistered).
+    /// Returns [`GemmError::UnknownWeight`] if `id` was never registered
+    /// (or was unregistered), [`GemmError::ShapeMismatch`] for
+    /// incompatible operands.
     pub fn submit_prepacked(
         &self,
         a: Matrix<f32>,
         id: WeightId,
         backend: Option<Backend>,
-    ) -> (u64, Receiver<GemmResponse>) {
-        let entry = self.weight(id).expect("unknown weight id; call register_weights first");
+    ) -> Result<(u64, Receiver<GemmResponse>), GemmError> {
+        let entry = self.weight(id).ok_or(GemmError::UnknownWeight(id.0))?;
         self.submit_operand(a, BOperand::Weight(entry), backend)
     }
 
-    /// Blocking convenience: submit and wait.
+    /// Blocking convenience: submit and wait. Submit-time failures
+    /// (shape mismatch) surface as the outer error; execution failures
+    /// stay in [`GemmResponse::result`].
     pub fn gemm_blocking(
         &self,
         a: Matrix<f32>,
         b: Matrix<f32>,
         backend: Option<Backend>,
-    ) -> GemmResponse {
-        let (_, rx) = self.submit(a, b, backend);
-        rx.recv().expect("worker dropped the reply channel")
+    ) -> Result<GemmResponse, GemmError> {
+        let (_, rx) = self.submit(a, b, backend)?;
+        Ok(rx.recv().expect("worker dropped the reply channel"))
     }
 
     /// Blocking convenience for the register-weights-then-serve flow.
@@ -211,9 +230,9 @@ impl GemmService {
         a: Matrix<f32>,
         id: WeightId,
         backend: Option<Backend>,
-    ) -> GemmResponse {
-        let (_, rx) = self.submit_prepacked(a, id, backend);
-        rx.recv().expect("worker dropped the reply channel")
+    ) -> Result<GemmResponse, GemmError> {
+        let (_, rx) = self.submit_prepacked(a, id, backend)?;
+        Ok(rx.recv().expect("worker dropped the reply channel"))
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -301,6 +320,7 @@ fn worker_loop(
     metrics: Arc<Metrics>,
     policy: PrecisionPolicy,
     cache: Arc<PrepackCache>,
+    overlap: bool,
 ) {
     loop {
         // Hold the lock only while receiving, not while computing.
@@ -321,10 +341,17 @@ fn worker_loop(
                 },
             };
             let shape = req.shape();
-            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                execute_request(&req, &decision, &cache)
-            }))
-            .map_err(|_| "gemm panicked".to_string());
+            // Revalidate before executing: submission already checked,
+            // but a worker must never be one bad request away from a
+            // panic — the kernels' asserts stay as last-resort
+            // invariants behind this check and the catch_unwind.
+            let result = match check_shapes(&req.a, req.b.matrix()) {
+                Err(e) => Err(e),
+                Ok(()) => std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    execute_request(&req, &decision, &cache, overlap)
+                }))
+                .map_err(|p| GemmError::Panicked(panic_message(p))),
+            };
             let latency = req.submitted.elapsed().as_secs_f64();
             metrics.record_request(latency, shape.flops(), result.is_ok());
             let _ = req.reply.send(GemmResponse {
@@ -338,6 +365,27 @@ fn worker_loop(
     }
 }
 
+/// Shape compatibility of a request's operands, as a typed error.
+fn check_shapes(a: &Matrix<f32>, b: &Matrix<f32>) -> Result<(), GemmError> {
+    let (m, k_a) = a.shape();
+    let (k_b, n) = b.shape();
+    if k_a != k_b {
+        return Err(GemmError::ShapeMismatch { m, k_a, k_b, n });
+    }
+    Ok(())
+}
+
+/// Best-effort text of a caught panic payload.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Execute one request on the decided path. Registered weights go
 /// through the prepack cache and the prepacked blocked entry points —
 /// bit-identical to the inline path for the same decision, since both
@@ -347,6 +395,7 @@ fn execute_request(
     req: &GemmRequest,
     decision: &PolicyDecision,
     cache: &PrepackCache,
+    overlap: bool,
 ) -> Matrix<f32> {
     if let (Some(w), Some(path)) = (req.b.weight(), decision.prepack_path()) {
         // Normalize the key the way the panels are shared: both cube
@@ -371,6 +420,7 @@ fn execute_request(
     }
     GemmBackend::new(decision.backend)
         .with_scale(decision.scale_exp)
+        .with_overlap(overlap)
         .gemm(&req.a, req.b.matrix())
 }
 
@@ -409,7 +459,7 @@ mod tests {
         assert!(svc.weight(id).is_some());
         for _ in 0..3 {
             let a = Matrix::random_symmetric(8, 24, 0, &mut rng);
-            let resp = svc.gemm_blocking_prepacked(a, id, None);
+            let resp = svc.gemm_blocking_prepacked(a, id, None).expect("submit");
             assert!(resp.result.is_ok());
             assert_eq!(resp.backend, Backend::CubeTermwise);
         }
@@ -423,11 +473,15 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "unknown weight id")]
     fn unknown_weight_id_rejected_at_submit() {
         let svc = GemmService::start(small_cfg());
         let a: Matrix<f32> = Matrix::zeros(2, 2);
-        let _ = svc.submit_prepacked(a, WeightId(999), None);
+        match svc.submit_prepacked(a, WeightId(999), None) {
+            Err(GemmError::UnknownWeight(999)) => {}
+            Err(e) => panic!("wrong error: {e}"),
+            Ok((id, _)) => panic!("accepted unknown weight as request {id}"),
+        }
+        svc.shutdown();
     }
 
     #[test]
@@ -436,7 +490,7 @@ mod tests {
         let mut rng = Rng::new(1);
         let a = Matrix::random_symmetric(32, 48, 0, &mut rng);
         let b = Matrix::random_symmetric(48, 24, 0, &mut rng);
-        let resp = svc.gemm_blocking(a.clone(), b.clone(), None);
+        let resp = svc.gemm_blocking(a.clone(), b.clone(), None).expect("submit");
         assert_eq!(resp.backend, Backend::CubeTermwise);
         assert_eq!(resp.scale_exp, 12);
         let c = resp.result.unwrap();
@@ -454,7 +508,7 @@ mod tests {
             let (m, k, n) = if i % 2 == 0 { (16, 16, 16) } else { (24, 32, 8) };
             let a = Matrix::random_symmetric(m, k, 0, &mut rng);
             let b = Matrix::random_symmetric(k, n, 0, &mut rng);
-            rxs.push(svc.submit(a, b, None));
+            rxs.push(svc.submit(a, b, None).expect("submit"));
         }
         let mut ids = Vec::new();
         for (id, rx) in rxs {
@@ -478,7 +532,7 @@ mod tests {
         let a = Matrix::random_symmetric(16, 16, 0, &mut rng);
         let b = Matrix::random_symmetric(16, 16, 0, &mut rng);
         for bk in Backend::ALL {
-            let resp = svc.gemm_blocking(a.clone(), b.clone(), Some(bk));
+            let resp = svc.gemm_blocking(a.clone(), b.clone(), Some(bk)).expect("submit");
             assert_eq!(resp.backend, bk);
             assert!(resp.result.is_ok());
         }
@@ -490,7 +544,7 @@ mod tests {
         let svc = GemmService::start(small_cfg());
         let a = Matrix::from_fn(8, 8, |_, _| 1e6f32); // beyond fp16 max
         let b = Matrix::from_fn(8, 8, |_, _| 1.0f32);
-        let resp = svc.gemm_blocking(a, b, None);
+        let resp = svc.gemm_blocking(a, b, None).expect("submit");
         assert_eq!(resp.backend, Backend::Fp32);
         let c = resp.result.unwrap();
         assert_eq!(c.get(0, 0), 8e6);
@@ -498,12 +552,57 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "inner dimensions")]
-    fn dimension_mismatch_rejected_at_submit() {
+    fn dimension_mismatch_is_a_typed_error_not_a_panic() {
         let svc = GemmService::start(small_cfg());
         let a: Matrix<f32> = Matrix::zeros(4, 5);
         let b: Matrix<f32> = Matrix::zeros(6, 4);
-        let _ = svc.submit(a, b, None);
+        match svc.submit(a, b, None) {
+            Err(GemmError::ShapeMismatch { m: 4, k_a: 5, k_b: 6, n: 4 }) => {}
+            other => panic!("expected ShapeMismatch, got {:?}", other.map(|(id, _)| id)),
+        }
+        // The service is still healthy afterwards: workers never saw the
+        // bad request, and a well-formed one completes.
+        let mut rng = Rng::new(6);
+        let a = Matrix::random_symmetric(4, 6, 0, &mut rng);
+        let b = Matrix::random_symmetric(6, 4, 0, &mut rng);
+        let resp = svc.gemm_blocking(a, b, None).expect("submit");
+        assert!(resp.result.is_ok());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn degenerate_zero_dim_requests_are_served() {
+        // m, k or n of zero must produce an empty/zero result through
+        // the full dispatcher → batcher → worker path, not a panic.
+        let svc = GemmService::start(small_cfg());
+        for (m, k, n) in [(0usize, 8usize, 4usize), (3, 0, 4), (3, 8, 0), (0, 0, 0)] {
+            let a: Matrix<f32> = Matrix::zeros(m, k);
+            let b: Matrix<f32> = Matrix::zeros(k, n);
+            let resp = svc.gemm_blocking(a, b, None).expect("submit");
+            let c = resp.result.expect("degenerate request must succeed");
+            assert_eq!(c.shape(), (m, n), "{m}x{k}x{n}");
+            assert!(c.as_slice().iter().all(|&v| v == 0.0));
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn overlap_enabled_service_bit_matches_serial_service() {
+        let serial = GemmService::start(ServiceConfig { overlap: false, ..small_cfg() });
+        let overlapped = GemmService::start(ServiceConfig { overlap: true, ..small_cfg() });
+        let mut rng = Rng::new(8);
+        let a = Matrix::random_symmetric(24, 40, 0, &mut rng);
+        let b = Matrix::random_symmetric(40, 16, 0, &mut rng);
+        for bk in [None, Some(Backend::Fp32), Some(Backend::CubeTermwise)] {
+            let x = serial.gemm_blocking(a.clone(), b.clone(), bk).expect("submit");
+            let y = overlapped.gemm_blocking(a.clone(), b.clone(), bk).expect("submit");
+            let (cx, cy) = (x.result.unwrap(), y.result.unwrap());
+            for (u, v) in cx.as_slice().iter().zip(cy.as_slice()) {
+                assert_eq!(u.to_bits(), v.to_bits(), "backend {bk:?}");
+            }
+        }
+        serial.shutdown();
+        overlapped.shutdown();
     }
 
     #[test]
@@ -512,7 +611,7 @@ mod tests {
         let mut rng = Rng::new(5);
         let a = Matrix::random_symmetric(8, 8, 0, &mut rng);
         let b = Matrix::random_symmetric(8, 8, 0, &mut rng);
-        let _ = svc.gemm_blocking(a, b, None);
+        let _ = svc.gemm_blocking(a, b, None).expect("submit");
         drop(svc); // Drop impl must not hang
     }
 }

@@ -83,6 +83,11 @@ pub struct GemmBackend {
     /// Set `false` for the bit-faithful single-chain accumulation order
     /// the accuracy experiments study.
     pub fast: bool,
+    /// Run the hot path through the overlapped (double-buffered) b_k
+    /// pipeline (`crate::gemm::overlap`): the next B panel is packed by
+    /// a prefetch worker while the current one is consumed. Results are
+    /// bit-identical; defaults to the `SGEMM_CUBE_OVERLAP` env toggle.
+    pub overlap: bool,
 }
 
 impl GemmBackend {
@@ -92,11 +97,18 @@ impl GemmBackend {
             split: SplitConfig::default(),
             accumulate: AccumulateMode::Fp32Rn,
             fast: true,
+            overlap: crate::gemm::overlap::overlap_enabled(),
         }
     }
 
     pub fn with_scale(mut self, s_b: i32) -> GemmBackend {
         self.split.scale_exp = s_b;
+        self
+    }
+
+    /// Select the overlapped (prefetching) schedule for the hot path.
+    pub fn with_overlap(mut self, overlap: bool) -> GemmBackend {
+        self.overlap = overlap;
         self
     }
 
@@ -108,17 +120,23 @@ impl GemmBackend {
 
     /// `C = A · B` through the selected precision path.
     pub fn gemm(&self, a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
-        use crate::gemm::fast;
+        use crate::gemm::blocked;
         if self.fast && self.accumulate == AccumulateMode::Fp32Rn {
-            return match self.backend {
-                Backend::Fp32 => fast::sgemm_fast(a, b),
-                Backend::Fp16 => fast::hgemm_fast(a, b),
-                // The elementwise/termwise distinction is an accuracy-
-                // experiment concern; the hot path serves the paper's
-                // default (termwise) structure through the blocked
-                // fused three-term kernel.
-                Backend::CubeElementwise | Backend::CubeTermwise => {
-                    fast::cube_gemm_fast(a, b, self.split)
+            // The elementwise/termwise distinction is an accuracy-
+            // experiment concern; the hot path serves the paper's
+            // default (termwise) structure through the blocked fused
+            // three-term kernel — serial or overlapped schedule, same
+            // bits either way.
+            return match (self.backend, self.overlap) {
+                (Backend::Fp32, false) => blocked::sgemm_blocked(a, b),
+                (Backend::Fp32, true) => blocked::sgemm_blocked_overlapped(a, b),
+                (Backend::Fp16, false) => blocked::hgemm_blocked(a, b),
+                (Backend::Fp16, true) => blocked::hgemm_blocked_overlapped(a, b),
+                (Backend::CubeElementwise | Backend::CubeTermwise, false) => {
+                    blocked::cube_gemm_blocked(a, b, self.split)
+                }
+                (Backend::CubeElementwise | Backend::CubeTermwise, true) => {
+                    blocked::cube_gemm_blocked_overlapped(a, b, self.split)
                 }
             };
         }
@@ -177,5 +195,19 @@ mod tests {
     fn with_scale_applies() {
         let g = GemmBackend::new(Backend::CubeTermwise).with_scale(6);
         assert_eq!(g.split.scale_exp, 6);
+    }
+
+    #[test]
+    fn overlap_schedule_is_bit_identical_per_backend() {
+        let mut rng = Rng::new(21);
+        let a = Matrix::random_symmetric(17, 50, 0, &mut rng);
+        let b = Matrix::random_symmetric(50, 23, 0, &mut rng);
+        for bk in Backend::ALL {
+            let serial = GemmBackend::new(bk).with_overlap(false).gemm(&a, &b);
+            let over = GemmBackend::new(bk).with_overlap(true).gemm(&a, &b);
+            for (x, y) in serial.as_slice().iter().zip(over.as_slice()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{bk}");
+            }
+        }
     }
 }

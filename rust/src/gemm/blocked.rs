@@ -57,12 +57,14 @@
 use std::sync::OnceLock;
 
 use crate::gemm::cube::WideSplit;
+use crate::gemm::overlap;
 use crate::gemm::pack::{self, MR, NR};
 use crate::gemm::prepacked::{PrepackPath, PrepackedMatrix};
 use crate::sim::blocking::{feasible_blocks, BlockConfig, GemmShape, Traffic};
 use crate::sim::chip::Chip;
 use crate::softfloat::f16::F16;
 use crate::softfloat::split::SplitConfig;
+use crate::util::bench::StageBreakdown;
 use crate::util::mat::Matrix;
 use crate::util::threads::{parallel_chunks, SendPtr};
 
@@ -131,6 +133,74 @@ pub fn cube_gemm_blocked_split(a: &WideSplit, b: &WideSplit) -> Matrix<f32> {
     assert_eq!(k, kb, "inner dimensions must match: {k} vs {kb}");
     let inv_sf = 1.0f32 / a.cfg.scale_factor();
     cube_blocked_core(&a.high, &a.low, &b.high, &b.low, inv_sf)
+}
+
+/// FP32 blocked GEMM through the overlapped (double-buffered) pipeline:
+/// a prefetch worker packs the next `(k, j)` B panel while the
+/// micro-kernel consumes the current one ([`crate::gemm::overlap`]).
+/// **Bit-identical** to [`sgemm_blocked`] — same pack routines, same
+/// block order, same shared sweeps.
+pub fn sgemm_blocked_overlapped(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
+    assert_eq!(a.cols(), b.rows(), "inner dimensions must match: {} vs {}", a.cols(), b.rows());
+    overlap::gemm_overlapped_core(a, b)
+}
+
+/// FP16 Cube GEMM through the overlapped pipeline; bit-identical to
+/// [`hgemm_blocked`].
+pub fn hgemm_blocked_overlapped(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
+    assert_eq!(a.cols(), b.rows(), "inner dimensions must match: {} vs {}", a.cols(), b.rows());
+    let ah = a.map(|v| F16::from_f32_rn(v).to_f32());
+    let bh = b.map(|v| F16::from_f32_rn(v).to_f32());
+    overlap::gemm_overlapped_core(&ah, &bh)
+}
+
+/// SGEMM-cube through the overlapped pipeline: the dual high/low split
+/// panels are prefetched while the fused three-term micro-kernel
+/// consumes the current block. Bit-identical to [`cube_gemm_blocked`].
+pub fn cube_gemm_blocked_overlapped(
+    a: &Matrix<f32>,
+    b: &Matrix<f32>,
+    cfg: SplitConfig,
+) -> Matrix<f32> {
+    assert_eq!(a.cols(), b.rows(), "inner dimensions must match: {} vs {}", a.cols(), b.rows());
+    let asp = WideSplit::of(a, cfg);
+    let bsp = WideSplit::of(b, cfg);
+    cube_gemm_blocked_split_overlapped(&asp, &bsp)
+}
+
+/// Overlapped counterpart of [`cube_gemm_blocked_split`].
+pub fn cube_gemm_blocked_split_overlapped(a: &WideSplit, b: &WideSplit) -> Matrix<f32> {
+    assert_eq!(a.cfg, b.cfg, "operands must be split with the same configuration");
+    let (_, k) = a.high.shape();
+    let kb = b.high.rows();
+    assert_eq!(k, kb, "inner dimensions must match: {k} vs {kb}");
+    let inv_sf = 1.0f32 / a.cfg.scale_factor();
+    overlap::cube_overlapped_core(&a.high, &a.low, &b.high, &b.low, inv_sf)
+}
+
+/// Instrumented serial FP32 blocked GEMM: the exact serial nest run
+/// single-threaded with per-stage wall times (pack-A, pack-B,
+/// micro-kernel, C update). Calibration/diagnostics path — see
+/// [`crate::gemm::overlap`] and EXPERIMENTS.md §Overlap.
+pub fn sgemm_blocked_staged(a: &Matrix<f32>, b: &Matrix<f32>) -> (Matrix<f32>, StageBreakdown) {
+    assert_eq!(a.cols(), b.rows(), "inner dimensions must match: {} vs {}", a.cols(), b.rows());
+    overlap::gemm_staged_core(a, b)
+}
+
+/// Instrumented serial SGEMM-cube (dual-component counterpart of
+/// [`sgemm_blocked_staged`]). The split itself is not part of the
+/// breakdown — at serving sizes it is the prepack path's one-off cost;
+/// the four stages cover the per-request nest.
+pub fn cube_gemm_blocked_staged(
+    a: &Matrix<f32>,
+    b: &Matrix<f32>,
+    cfg: SplitConfig,
+) -> (Matrix<f32>, StageBreakdown) {
+    assert_eq!(a.cols(), b.rows(), "inner dimensions must match: {} vs {}", a.cols(), b.rows());
+    let asp = WideSplit::of(a, cfg);
+    let bsp = WideSplit::of(b, cfg);
+    let inv_sf = 1.0f32 / cfg.scale_factor();
+    overlap::cube_staged_core(&asp.high, &asp.low, &bsp.high, &bsp.low, inv_sf)
 }
 
 /// GEMM against a prepacked B operand, dispatching on the path the
@@ -264,7 +334,7 @@ fn gemm_blocked_core(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
 /// execute this exact sweep, which is what makes the prepacked results
 /// bit-identical).
 #[allow(clippy::too_many_arguments)]
-fn sweep_rows_f32(
+pub(crate) fn sweep_rows_f32(
     a: &Matrix<f32>,
     bp: &[f32],
     cp: &SendPtr<f32>,
@@ -330,7 +400,7 @@ fn cube_blocked_core(
 /// (freshly packed or prepacked — the shared sweep keeps both paths
 /// bit-identical).
 #[allow(clippy::too_many_arguments)]
-fn sweep_rows_cube(
+pub(crate) fn sweep_rows_cube(
     ah: &Matrix<f32>,
     al: &Matrix<f32>,
     bp: &[f32],
@@ -367,7 +437,7 @@ fn sweep_rows_cube(
 /// `MR × NR` register micro-kernel: one FP32 chain per cell over the
 /// panel's k steps, `NR`-lane rows autovectorizing to SIMD FMAs.
 #[inline]
-fn kernel_f32(apanel: &[f32], bpanel: &[f32]) -> [[f32; NR]; MR] {
+pub(crate) fn kernel_f32(apanel: &[f32], bpanel: &[f32]) -> [[f32; NR]; MR] {
     let mut acc = [[0.0f32; NR]; MR];
     for (av, bv) in apanel.chunks_exact(MR).zip(bpanel.chunks_exact(NR)) {
         for (i, acc_row) in acc.iter_mut().enumerate() {
@@ -388,7 +458,7 @@ fn kernel_f32(apanel: &[f32], bpanel: &[f32]) -> [[f32; NR]; MR] {
 /// (the paper's termwise order, Sec. 4.4), while the three terms share a
 /// single traversal instead of the reference's three passes.
 #[inline]
-fn kernel_cube(apanel: &[f32], bpanel: &[f32]) -> ([[f32; NR]; MR], [[f32; NR]; MR]) {
+pub(crate) fn kernel_cube(apanel: &[f32], bpanel: &[f32]) -> ([[f32; NR]; MR], [[f32; NR]; MR]) {
     let mut hh = [[0.0f32; NR]; MR];
     let mut corr = [[0.0f32; NR]; MR];
     for (av, bv) in apanel.chunks_exact(2 * MR).zip(bpanel.chunks_exact(2 * NR)) {
@@ -409,7 +479,8 @@ fn kernel_cube(apanel: &[f32], bpanel: &[f32]) -> ([[f32; NR]; MR], [[f32; NR]; 
 }
 
 /// `C[ci.., cj..] += acc` for the valid `mr_eff × nr_eff` sub-tile.
-fn add_tile(
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn add_tile(
     cp: &SendPtr<f32>,
     n: usize,
     ci: usize,
@@ -431,7 +502,7 @@ fn add_tile(
 /// Cube tile combine: corrections (already aggregated together) are
 /// scaled and meet the high product once per k block.
 #[allow(clippy::too_many_arguments)]
-fn add_tile_cube(
+pub(crate) fn add_tile_cube(
     cp: &SendPtr<f32>,
     n: usize,
     ci: usize,
@@ -613,6 +684,67 @@ mod tests {
         let a: Matrix<f32> = Matrix::zeros(3, 0);
         let b: Matrix<f32> = Matrix::zeros(0, 2);
         let c = sgemm_blocked(&a, &b);
+        assert_eq!(c.shape(), (3, 2));
+        assert!(c.as_slice().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn overlapped_bit_identical_to_serial() {
+        // The full random-shape sweep lives in tests/properties.rs; this
+        // pins the invariant at module level on awkward edges, including
+        // multiple k blocks (several prefetched panels per column).
+        let bk = host_block().bk;
+        let mut rng = Rng::new(53);
+        for (m, k, n) in [(1, 1, 1), (5, 2 * bk + 3, 9), (33, 65, 24)] {
+            let a = Matrix::random_symmetric(m, k, 0, &mut rng);
+            let b = Matrix::random_symmetric(k, n, 0, &mut rng);
+            let pairs = [
+                (sgemm_blocked(&a, &b), sgemm_blocked_overlapped(&a, &b)),
+                (hgemm_blocked(&a, &b), hgemm_blocked_overlapped(&a, &b)),
+            ];
+            for (serial, over) in &pairs {
+                for (x, y) in serial.as_slice().iter().zip(over.as_slice()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{m}x{k}x{n}");
+                }
+            }
+            let cfg = SplitConfig::default();
+            let serial = cube_gemm_blocked(&a, &b, cfg);
+            let over = cube_gemm_blocked_overlapped(&a, &b, cfg);
+            for (x, y) in serial.as_slice().iter().zip(over.as_slice()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "cube {m}x{k}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn staged_drivers_bit_identical_with_full_breakdown() {
+        let mut rng = Rng::new(54);
+        let a = Matrix::random_symmetric(20, 70, 0, &mut rng);
+        let b = Matrix::random_symmetric(70, 30, 0, &mut rng);
+        let (c, st) = sgemm_blocked_staged(&a, &b);
+        let serial = sgemm_blocked(&a, &b);
+        for (x, y) in c.as_slice().iter().zip(serial.as_slice()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert!(st.total() > 0.0);
+        let cfg = SplitConfig::default();
+        let (c, st) = cube_gemm_blocked_staged(&a, &b, cfg);
+        let serial = cube_gemm_blocked(&a, &b, cfg);
+        for (x, y) in c.as_slice().iter().zip(serial.as_slice()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert!(st.transfer() > 0.0, "pack-B span must be accounted: {st:?}");
+        assert!(st.compute() > 0.0);
+    }
+
+    #[test]
+    fn overlapped_degenerate_shapes() {
+        let a: Matrix<f32> = Matrix::zeros(0, 5);
+        let b: Matrix<f32> = Matrix::zeros(5, 4);
+        assert_eq!(sgemm_blocked_overlapped(&a, &b).shape(), (0, 4));
+        let a: Matrix<f32> = Matrix::zeros(3, 0);
+        let b: Matrix<f32> = Matrix::zeros(0, 2);
+        let c = cube_gemm_blocked_overlapped(&a, &b, SplitConfig::default());
         assert_eq!(c.shape(), (3, 2));
         assert!(c.as_slice().iter().all(|&v| v == 0.0));
     }

@@ -86,6 +86,11 @@ pub struct PrepackCache {
 }
 
 impl PrepackCache {
+    /// A cache bounded to `capacity_bytes`. A capacity of `0` means
+    /// **disabled**: lookups miss, packs run, and nothing is ever
+    /// retained — no unbounded growth and no evict loop (the operator's
+    /// `prepack_cache_mb = 0` knob). A nonzero capacity smaller than a
+    /// single entry keeps the admit-anyway semantics documented above.
     pub fn new(capacity_bytes: usize) -> PrepackCache {
         PrepackCache { capacity_bytes, inner: Mutex::new(Inner::default()) }
     }
@@ -109,6 +114,12 @@ impl PrepackCache {
             g.misses += 1;
         }
         let packed = Arc::new(pack());
+        if self.capacity_bytes == 0 {
+            // Disabled cache: serve the packed operand without retaining
+            // it — the map stays empty, so there is nothing to evict and
+            // nothing grows.
+            return packed;
+        }
         let mut g = self.inner.lock().unwrap();
         g.clock += 1;
         let stamp = g.clock;
@@ -274,6 +285,50 @@ mod tests {
         assert_eq!(s.entries, 1);
         assert_eq!(s.evictions, 1);
         assert!(cache.get(&key(2, 16)).is_some());
+    }
+
+    #[test]
+    fn single_entry_larger_than_budget_never_accumulates() {
+        // Every entry exceeds the (nonzero) budget: each insert admits
+        // the newcomer and evicts the previous one — bounded residency,
+        // no evict-loop, byte accounting stays consistent.
+        let one = packed(16, 1).bytes();
+        let cache = PrepackCache::new(one / 2);
+        for w in 1..=4u64 {
+            let p = cache.get_or_insert_with(key(w, 16), || packed(16, w));
+            assert_eq!(p.n(), 16);
+            let s = cache.stats();
+            assert_eq!(s.entries, 1, "oversized entries must not accumulate");
+            assert_eq!(s.evictions, w - 1);
+            assert!(s.bytes >= one, "the resident entry stays charged");
+        }
+        // The survivor is the most recent insert.
+        assert!(cache.get(&key(4, 16)).is_some());
+        assert!(cache.get(&key(1, 16)).is_none());
+    }
+
+    #[test]
+    fn zero_capacity_disables_the_cache() {
+        // prepack_cache_mb = 0 ⇒ miss-through: packs happen per call,
+        // nothing is retained, no growth, no evictions, `get` never hits.
+        let cache = PrepackCache::new(0);
+        let mut packs = 0;
+        for _ in 0..3 {
+            let p = cache.get_or_insert_with(key(1, 16), || {
+                packs += 1;
+                packed(16, 1)
+            });
+            assert_eq!(p.n(), 16);
+        }
+        assert_eq!(packs, 3, "every lookup repacks");
+        assert!(cache.get(&key(1, 16)).is_none());
+        let s = cache.stats();
+        assert_eq!(s.entries, 0);
+        assert_eq!(s.bytes, 0);
+        assert_eq!(s.evictions, 0);
+        assert_eq!(s.hits, 0);
+        assert_eq!(s.misses, 4, "3 insert lookups + 1 get");
+        assert_eq!(s.capacity_bytes, 0);
     }
 
     #[test]

@@ -1,7 +1,43 @@
 //! The relative error metric of Eq. (13):
-//! `err = ||C_true - C_calc||_2 / ||C_true||_2` (Frobenius norms).
+//! `err = ||C_true - C_calc||_2 / ||C_true||_2` (Frobenius norms) —
+//! plus [`GemmError`], the typed failure the serving path returns.
 
 use crate::util::mat::Matrix;
+
+/// Typed failure of a GEMM request through the serving path
+/// ([`crate::coordinator::server::GemmService`]).
+///
+/// The executing kernels keep their shape `assert_eq!`s as last-resort
+/// invariants; the coordinator validates first — at submit time and
+/// again in the worker — and returns one of these to the caller instead
+/// of panicking a worker thread (or the submitting thread).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GemmError {
+    /// Inner dimensions disagree: `A` is `m × k_a` but `B` is `k_b × n`.
+    ShapeMismatch { m: usize, k_a: usize, k_b: usize, n: usize },
+    /// The request named a weight id that was never registered (or was
+    /// already unregistered).
+    UnknownWeight(u64),
+    /// The kernel panicked while executing; carries the panic message.
+    Panicked(String),
+}
+
+impl std::fmt::Display for GemmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GemmError::ShapeMismatch { m, k_a, k_b, n } => write!(
+                f,
+                "inner dimensions must match: A is {m}x{k_a} but B is {k_b}x{n}"
+            ),
+            GemmError::UnknownWeight(id) => {
+                write!(f, "unknown weight id {id}; call register_weights first")
+            }
+            GemmError::Panicked(msg) => write!(f, "gemm panicked: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for GemmError {}
 
 /// Relative Frobenius-norm error of `calc` against `truth` (both f64;
 /// promote f32 results with [`Matrix::to_f64`] first).
@@ -73,5 +109,17 @@ mod tests {
         let a: Matrix<f64> = Matrix::zeros(2, 2);
         let b: Matrix<f64> = Matrix::zeros(2, 3);
         let _ = relative_error(&a, &b);
+    }
+
+    #[test]
+    fn gemm_error_displays_and_converts() {
+        let e = GemmError::ShapeMismatch { m: 4, k_a: 5, k_b: 6, n: 4 };
+        assert_eq!(format!("{e}"), "inner dimensions must match: A is 4x5 but B is 6x4");
+        assert!(format!("{}", GemmError::UnknownWeight(9)).contains("weight id 9"));
+        assert!(format!("{}", GemmError::Panicked("boom".into())).contains("boom"));
+        // std::error::Error + the anyhow blanket From both apply.
+        let any: anyhow::Error = e.clone().into();
+        assert!(format!("{any}").contains("inner dimensions"));
+        assert_eq!(e, e.clone());
     }
 }

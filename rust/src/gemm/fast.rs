@@ -21,7 +21,7 @@
 //! `cargo bench --bench fig11_blocking_perf` compare the blocked engine
 //! against them and record the trajectory in `BENCH_gemm.json`.
 
-use crate::gemm::blocked;
+use crate::gemm::backend::{Backend, GemmBackend};
 use crate::softfloat::split::SplitConfig;
 use crate::util::mat::Matrix;
 use crate::util::threads::parallel_chunks;
@@ -48,22 +48,25 @@ pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
     (s01 + s23) + tail
 }
 
-/// FP32 GEMM through the blocked packed engine.
+/// FP32 GEMM through the blocked packed engine. Thin sugar over
+/// [`GemmBackend`], which owns the serial-vs-overlapped schedule
+/// dispatch (defaulting to the `SGEMM_CUBE_OVERLAP` toggle — results
+/// are bit-identical either way, see [`crate::gemm::overlap`]).
 pub fn sgemm_fast(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
-    blocked::sgemm_blocked(a, b)
+    GemmBackend::new(Backend::Fp32).gemm(a, b)
 }
 
 /// FP16 Cube GEMM (fp16 operands widened exactly, fp32 accumulate)
 /// through the blocked packed engine.
 pub fn hgemm_fast(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
-    blocked::hgemm_blocked(a, b)
+    GemmBackend::new(Backend::Fp16).gemm(a, b)
 }
 
 /// SGEMM-cube through the blocked engine's fused three-term micro-kernel.
 /// The termwise *structure* (corrections aggregated before meeting the
 /// high product) is preserved; see [`crate::gemm::blocked`].
 pub fn cube_gemm_fast(a: &Matrix<f32>, b: &Matrix<f32>, cfg: SplitConfig) -> Matrix<f32> {
-    blocked::cube_gemm_blocked(a, b, cfg)
+    GemmBackend { split: cfg, ..GemmBackend::new(Backend::CubeTermwise) }.gemm(a, b)
 }
 
 /// The pre-blocking SGEMM-cube hot path: row × transposed-column `dot8`

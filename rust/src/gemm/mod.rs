@@ -31,6 +31,12 @@
 //!   sizes come from [`crate::sim::blocking`] on the host cache model.
 //! * [`fast`] — the hot-path entry points (wrappers over [`blocked`],
 //!   plus the retained pre-blocking baselines).
+//! * [`overlap`] — the double-buffered (prefetching) variant of the
+//!   `b_n → b_k` panel loop: a prefetch worker packs the next B panel
+//!   through a two-slot ring while the micro-kernel consumes the
+//!   current one; bit-identical `*_overlapped` entry points plus the
+//!   instrumented `*_staged` drivers that calibrate
+//!   [`crate::sim::pipeline`] from measured stage times.
 //! * [`prepacked`] — stable B operands with the split + pack work done
 //!   once ([`prepacked::PrepackedMatrix`]), consumed bit-identically by
 //!   [`blocked::gemm_prepacked`].
@@ -46,18 +52,21 @@ pub mod dgemm;
 pub mod error;
 pub mod fast;
 pub mod hgemm;
+pub mod overlap;
 pub mod pack;
 pub mod prepacked;
 pub mod sgemm;
 
 pub use backend::{Backend, GemmBackend};
 pub use blocked::{
-    cube_gemm_blocked, cube_gemm_prepacked, gemm_prepacked, hgemm_blocked, sgemm_blocked,
+    cube_gemm_blocked, cube_gemm_blocked_overlapped, cube_gemm_prepacked, gemm_prepacked,
+    hgemm_blocked, hgemm_blocked_overlapped, sgemm_blocked, sgemm_blocked_overlapped,
 };
 pub use cache::{CacheStats, PrepackCache, PrepackKey};
 pub use cube::{cube_gemm, cube_gemm_split, Accumulation};
 pub use dgemm::dgemm;
-pub use error::relative_error;
+pub use error::{relative_error, GemmError};
 pub use hgemm::{hgemm, AccumulateMode};
+pub use overlap::overlap_enabled;
 pub use prepacked::{PrepackPath, PrepackedMatrix};
 pub use sgemm::sgemm;

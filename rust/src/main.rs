@@ -260,11 +260,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     for _ in 0..requests {
         let a = Matrix::random_symmetric(m, m, 0, &mut rng);
         let b = Matrix::random_symmetric(m, m, 0, &mut rng);
-        rxs.push(svc.submit(a, b, None));
+        rxs.push(svc.submit(a, b, None)?);
     }
     for (_, rx) in rxs {
         let resp = rx.recv().expect("service reply");
-        resp.result.map_err(anyhow::Error::msg)?;
+        resp.result?;
     }
     println!("{}", svc.metrics().report().line());
     svc.shutdown();

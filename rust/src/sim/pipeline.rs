@@ -16,8 +16,12 @@
 //!
 //! Single buffer: `T_iter = T_comp + T_b + T_l0 + sync` (the paper's
 //! `T_comp + T_mem`). Double buffer: `T_iter = max(T_comp, T_b, T_l0) +
-//! α·setup + sync` (the paper's `T_comp + α·T_mem` with the
-//! non-overlapped fraction α as calibration).
+//! residual + sync` (the paper's `T_comp + α·T_mem`), where the
+//! non-overlapped residual is `ALPHA_NONOVERLAP·setup` under the
+//! default paper-anchored calibration ([`IterTiming::of`]) or
+//! `α·T_b` under a calibration measured from the executed engine's
+//! stage timings ([`IterTiming::from_measured`], fed by
+//! `crate::gemm::overlap` — see EXPERIMENTS.md §Overlap).
 
 use crate::sim::blocking::BlockConfig;
 use crate::sim::chip::Chip;
@@ -41,7 +45,9 @@ impl Buffering {
 /// Fixed cube fill/drain bubble per block GEMM, in cycles.
 pub const CUBE_STARTUP_CYCLES: f64 = 16.0;
 /// Fraction of the DMA setup cost that double buffering cannot hide
-/// (the paper's non-overlapped α in `T_comp + α·T_mem`).
+/// (the paper's non-overlapped α in `T_comp + α·T_mem`). This is the
+/// *default* calibration guess; [`IterTiming::from_measured`] replaces
+/// it with a value derived from the executed engine's stage timings.
 pub const ALPHA_NONOVERLAP: f64 = 0.25;
 
 /// Per-iteration timing decomposition, in cycles.
@@ -54,6 +60,22 @@ pub struct IterTiming {
     pub sync: f64,
     /// DMA setup cost (cycles) — the α residual source in double mode.
     pub dma_setup: f64,
+    /// Non-overlapped fraction α — informational/reporting only: the
+    /// term actually charged in double-buffered mode is
+    /// [`IterTiming::nonoverlap_residual`], so mutate α through
+    /// [`IterTiming::from_measured`] (which derives the residual), not
+    /// by assigning this field.
+    pub alpha: f64,
+    /// Cycles of memory span left on the critical path in
+    /// double-buffered mode: `ALPHA_NONOVERLAP · dma_setup` from
+    /// [`IterTiming::of`] (the paper-calibrated residual — only the DMA
+    /// descriptor setup escapes a functioning double buffer), or
+    /// `α · t_b_stream` from [`IterTiming::from_measured`] — there α is
+    /// the *measured* unhidden fraction of the whole B span, so a
+    /// failed overlap (α → 1) correctly degrades the model to
+    /// single-buffer performance instead of perturbing only the tiny
+    /// setup constant.
+    pub nonoverlap_residual: f64,
 }
 
 impl IterTiming {
@@ -85,7 +107,66 @@ impl IterTiming {
             c_amortized,
             sync: chip.sync_cycles,
             dma_setup: chip.dma_setup_cycles,
+            alpha: ALPHA_NONOVERLAP,
+            nonoverlap_residual: ALPHA_NONOVERLAP * chip.dma_setup_cycles,
         }
+    }
+
+    /// Like [`IterTiming::of`], but with the non-overlapped fraction α
+    /// taken from *measured* engine stage timings instead of the
+    /// hard-coded [`ALPHA_NONOVERLAP`] — the calibration path the
+    /// ROADMAP's "double-buffered overlap driven by real engine timings"
+    /// item asks for. `measured_alpha` usually comes from
+    /// [`IterTiming::alpha_from_measured`] over the staged-driver
+    /// breakdown (`crate::gemm::overlap`, EXPERIMENTS.md §Overlap);
+    /// it is clamped to `[0, 1]`.
+    pub fn from_measured(
+        chip: &Chip,
+        block: BlockConfig,
+        n_fused: u64,
+        measured_alpha: f64,
+    ) -> IterTiming {
+        let mut t = IterTiming::of(chip, block, n_fused);
+        t.alpha = measured_alpha.clamp(0.0, 1.0);
+        // The measured α is the unhidden fraction of the *whole* B
+        // span (the engine inversion divides by T_mem), so it charges
+        // against t_b_stream — not the dma_setup constant the
+        // hard-coded calibration perturbs. α = 1 therefore collapses
+        // double-buffered performance to single-buffered, which is
+        // exactly what a measured total overlap failure means.
+        t.nonoverlap_residual = t.alpha * t.t_b_stream;
+        t
+    }
+
+    /// Derive the non-overlapped fraction α from measured wall times of
+    /// the executed engine, by inverting the paper's double-buffer model
+    /// `T_double = max(T_comp, T_mem) + α·T_mem`:
+    ///
+    /// ```text
+    /// α = (T_overlapped − max(T_comp, T_mem)) / T_mem, clamped to [0, 1]
+    /// ```
+    ///
+    /// `t_comp` is the compute-path span (pack-A + micro-kernel + C
+    /// update), `t_mem` the hidden span (B-panel preparation), and
+    /// `t_overlapped` the measured wall time of the overlapped pipeline
+    /// — all over the same GEMM, any common unit. Returns 0 when
+    /// `t_mem` is not positive (nothing to hide, nothing left over).
+    pub fn alpha_from_measured(t_comp: f64, t_mem: f64, t_overlapped: f64) -> f64 {
+        Self::alpha_from_measured_raw(t_comp, t_mem, t_overlapped).clamp(0.0, 1.0)
+    }
+
+    /// The pre-clamp model inversion behind [`alpha_from_measured`] —
+    /// measurement noise can push it outside `[0, 1]` (it divides the
+    /// serial-vs-overlapped difference by the usually-small `t_mem`),
+    /// which makes it the right quantity to *record* for diagnosing a
+    /// calibration, while the clamped variant is the one to *apply*.
+    ///
+    /// [`alpha_from_measured`]: IterTiming::alpha_from_measured
+    pub fn alpha_from_measured_raw(t_comp: f64, t_mem: f64, t_overlapped: f64) -> f64 {
+        if t_mem <= 0.0 {
+            return 0.0;
+        }
+        (t_overlapped - t_comp.max(t_mem)) / t_mem
     }
 
     /// Total cycles of one iteration under the given buffering strategy.
@@ -100,10 +181,12 @@ impl IterTiming {
                 (self.t_comp + self.t_b_stream).max(self.t_l0) + self.c_amortized + self.sync
             }
             Buffering::Double => {
-                // max(T_comp, T_mem) plus the non-overlapped slice of the
-                // DMA setup (the paper's α·T_mem residual).
+                // max(T_comp, T_mem) plus the non-overlapped residual
+                // (the paper's α·T_mem term): ALPHA_NONOVERLAP·dma_setup
+                // by default, α·t_b_stream under a measured calibration
+                // ([`IterTiming::from_measured`]).
                 let overlapped = self.t_comp.max(self.t_b_stream).max(self.t_l0);
-                overlapped + ALPHA_NONOVERLAP * self.dma_setup + self.c_amortized + self.sync
+                overlapped + self.nonoverlap_residual + self.c_amortized + self.sync
             }
         }
     }
@@ -151,6 +234,62 @@ mod tests {
         let cfg = BlockConfig::new(16, 16, 16);
         let t = IterTiming::of(&chip, cfg, cfg.n_fused(&chip));
         assert!(t.utilization(Buffering::Double, cfg, &chip) < 0.05);
+    }
+
+    #[test]
+    fn alpha_from_measured_inverts_the_double_buffer_model() {
+        // Fully hidden: overlapped time equals the dominant span.
+        assert_eq!(IterTiming::alpha_from_measured(8.0, 2.0, 8.0), 0.0);
+        // Fully serial: overlapped time is comp + mem → α = 1.
+        assert_eq!(IterTiming::alpha_from_measured(8.0, 2.0, 10.0), 1.0);
+        // Halfway.
+        let a = IterTiming::alpha_from_measured(8.0, 2.0, 9.0);
+        assert!((a - 0.5).abs() < 1e-12, "{a}");
+        // Memory-bound iteration: the max switches operands.
+        let a = IterTiming::alpha_from_measured(2.0, 8.0, 10.0);
+        assert!((a - 0.25).abs() < 1e-12, "{a}");
+        // Clamped: a faster-than-model overlap or no mem span → 0.
+        assert_eq!(IterTiming::alpha_from_measured(8.0, 2.0, 7.0), 0.0);
+        assert_eq!(IterTiming::alpha_from_measured(8.0, 0.0, 99.0), 0.0);
+        // Worse-than-serial noise clamps at 1.
+        assert_eq!(IterTiming::alpha_from_measured(8.0, 2.0, 99.0), 1.0);
+        // The raw variant exposes the same inversion unclamped (the
+        // diagnostic the bench records as blocked/alpha_raw).
+        assert_eq!(IterTiming::alpha_from_measured_raw(8.0, 2.0, 99.0), 45.5);
+        assert_eq!(IterTiming::alpha_from_measured_raw(8.0, 2.0, 7.0), -0.5);
+        assert_eq!(IterTiming::alpha_from_measured_raw(8.0, 0.0, 99.0), 0.0);
+    }
+
+    #[test]
+    fn from_measured_replaces_the_hardcoded_alpha() {
+        let chip = Chip::ascend_910a();
+        let cfg = BlockConfig::paper_best();
+        let n_fused = cfg.n_fused(&chip);
+        let default = IterTiming::of(&chip, cfg, n_fused);
+        assert_eq!(default.alpha, ALPHA_NONOVERLAP);
+        assert_eq!(default.nonoverlap_residual, ALPHA_NONOVERLAP * chip.dma_setup_cycles);
+        let lo = IterTiming::from_measured(&chip, cfg, n_fused, 0.0);
+        let hi = IterTiming::from_measured(&chip, cfg, n_fused, 1.0);
+        assert_eq!(lo.alpha, 0.0);
+        assert_eq!(lo.nonoverlap_residual, 0.0);
+        assert_eq!(hi.alpha, 1.0);
+        // A measured α charges against the whole B stream, not just the
+        // DMA setup constant.
+        assert_eq!(hi.nonoverlap_residual, hi.t_b_stream);
+        // Only the Double mode responds to α, monotonically.
+        let d = |t: &IterTiming| t.cycles(Buffering::Double);
+        assert!(d(&lo) < d(&default) && d(&default) < d(&hi));
+        assert_eq!(lo.cycles(Buffering::Single), hi.cycles(Buffering::Single));
+        // Out-of-range measurements are clamped, not trusted.
+        assert_eq!(IterTiming::from_measured(&chip, cfg, n_fused, -3.0).alpha, 0.0);
+        assert_eq!(IterTiming::from_measured(&chip, cfg, n_fused, 7.0).alpha, 1.0);
+        // A measured total overlap failure (α = 1) collapses Double to
+        // Single performance for this compute-bound config — never
+        // slower, and visibly worse than the default calibration. That
+        // sensitivity is the point of the measured path.
+        assert!((d(&hi) - hi.cycles(Buffering::Single)).abs() < 1e-9);
+        let u = |t: &IterTiming| t.utilization(Buffering::Double, cfg, &chip);
+        assert!(u(&hi) < u(&default) * 0.8, "{} vs {}", u(&hi), u(&default));
     }
 
     #[test]

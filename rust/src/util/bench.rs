@@ -64,6 +64,62 @@ impl BenchResult {
     }
 }
 
+/// Per-stage wall-time breakdown of one blocked-GEMM execution, in
+/// seconds — the measurement the overlapped-pipeline work feeds back
+/// into the simulator ([`crate::sim::pipeline::IterTiming::from_measured`]).
+///
+/// Stages follow the executed nest (`crate::gemm::overlap` staged
+/// drivers): `pack_b` is the B-panel preparation the prefetch pipeline
+/// hides (the paper's `T_mem` analogue); `pack_a`, `kernel` and
+/// `c_update` stay on the compute path (the `T_comp` analogue).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StageBreakdown {
+    /// A row-block packing (`pack_a` / `pack_a_dual`).
+    pub pack_a: f64,
+    /// B panel packing (`pack_b` / `pack_b_dual`) — the overlappable span.
+    pub pack_b: f64,
+    /// Register micro-kernel time.
+    pub kernel: f64,
+    /// C tile accumulate/store time.
+    pub c_update: f64,
+}
+
+impl StageBreakdown {
+    /// Sum of every stage.
+    pub fn total(&self) -> f64 {
+        self.pack_a + self.pack_b + self.kernel + self.c_update
+    }
+
+    /// The span that stays on the critical path under overlap
+    /// (everything but the B-panel preparation) — the engine's `T_comp`.
+    pub fn compute(&self) -> f64 {
+        self.pack_a + self.kernel + self.c_update
+    }
+
+    /// The span the double-buffered pipeline hides (B-panel
+    /// preparation) — the engine's `T_mem`.
+    pub fn transfer(&self) -> f64 {
+        self.pack_b
+    }
+
+    /// Human-readable one-liner with per-stage shares.
+    pub fn line(&self) -> String {
+        let t = self.total();
+        let pct = |s: f64| if t > 0.0 { 100.0 * s / t } else { 0.0 };
+        format!(
+            "pack_a {} ({:.1}%)  pack_b {} ({:.1}%)  kernel {} ({:.1}%)  c_update {} ({:.1}%)",
+            fmt_duration(self.pack_a),
+            pct(self.pack_a),
+            fmt_duration(self.pack_b),
+            pct(self.pack_b),
+            fmt_duration(self.kernel),
+            pct(self.kernel),
+            fmt_duration(self.c_update),
+            pct(self.c_update),
+        )
+    }
+}
+
 /// Escape a string for embedding in a JSON literal.
 fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
@@ -192,6 +248,17 @@ impl Bencher {
         self.results.last().unwrap()
     }
 
+    /// Record a measured [`StageBreakdown`] as four scalar rows
+    /// (`<prefix>/pack_a_s` … `<prefix>/c_update_s`), so the per-stage
+    /// wall times land in `BENCH_gemm.json` next to the timings they
+    /// decompose.
+    pub fn record_stages(&mut self, prefix: &str, stages: &StageBreakdown) {
+        self.record_scalar(&format!("{prefix}/pack_a_s"), stages.pack_a);
+        self.record_scalar(&format!("{prefix}/pack_b_s"), stages.pack_b);
+        self.record_scalar(&format!("{prefix}/kernel_s"), stages.kernel);
+        self.record_scalar(&format!("{prefix}/c_update_s"), stages.c_update);
+    }
+
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
@@ -267,6 +334,30 @@ mod tests {
         assert!(j.contains("\"median_s\":3.5"), "{j}");
         assert!(j.contains("\"gflops\":null"), "{j}");
         assert_eq!(b.results()[0].seconds.n, 1);
+    }
+
+    #[test]
+    fn stage_breakdown_accounting_and_records() {
+        let s = StageBreakdown { pack_a: 0.1, pack_b: 0.2, kernel: 0.6, c_update: 0.1 };
+        assert!((s.total() - 1.0).abs() < 1e-12);
+        assert!((s.compute() - 0.8).abs() < 1e-12);
+        assert!((s.transfer() - 0.2).abs() < 1e-12);
+        assert!(s.line().contains("pack_b"));
+        // Zero breakdown: shares render as 0, no division blowups.
+        assert!(StageBreakdown::default().line().contains("0.0%"));
+        let mut b = Bencher::quick();
+        b.record_stages("blocked/stage/256^3", &s);
+        let names: Vec<&str> = b.results().iter().map(|r| r.name.as_str()).collect();
+        assert_eq!(
+            names,
+            [
+                "blocked/stage/256^3/pack_a_s",
+                "blocked/stage/256^3/pack_b_s",
+                "blocked/stage/256^3/kernel_s",
+                "blocked/stage/256^3/c_update_s"
+            ]
+        );
+        assert_eq!(b.results()[1].seconds.median, 0.2);
     }
 
     #[test]

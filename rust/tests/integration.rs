@@ -145,7 +145,7 @@ fn service_over_pjrt_consistency() {
     let mut rng = Rng::new(23);
     let a = Matrix::random_symmetric(128, 128, 0, &mut rng);
     let b = Matrix::random_symmetric(128, 128, 0, &mut rng);
-    let served = svc.gemm_blocking(a.clone(), b.clone(), None).result.unwrap();
+    let served = svc.gemm_blocking(a.clone(), b.clone(), None).expect("submit").result.unwrap();
     let aot = engine.gemm("cube_gemm_128", &a, &b).unwrap();
     // Norm-relative comparison (elementwise ratios blow up on the
     // near-zero cancellation entries of a symmetric product).
@@ -218,7 +218,7 @@ fn quickcheck_service_responses_complete_and_match_ids() {
         let a = Matrix::random_symmetric(m, k, 0, &mut rng);
         let b = Matrix::random_symmetric(k, n, 0, &mut rng);
         let backend = if g.bool() { None } else { Some(Backend::Fp32) };
-        let (id, rx) = svc.submit(a, b, backend);
+        let (id, rx) = svc.submit(a, b, backend).map_err(|e| format!("submit: {e}"))?;
         let resp = rx
             .recv_timeout(Duration::from_secs(10))
             .map_err(|e| format!("no response: {e}"))?;
@@ -259,7 +259,7 @@ fn prepacked_serving_bit_matches_blocked_path_and_hits_cache() {
         (0..6).map(|_| Matrix::random_symmetric(m, kn, 0, &mut rng)).collect();
     let rxs: Vec<_> = activations
         .iter()
-        .map(|a| svc.submit_prepacked(a.clone(), weights, None))
+        .map(|a| svc.submit_prepacked(a.clone(), weights, None).expect("submit"))
         .collect();
     for ((id, rx), a) in rxs.into_iter().zip(&activations) {
         let resp = rx.recv_timeout(Duration::from_secs(10)).expect("response");

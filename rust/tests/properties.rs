@@ -3,7 +3,10 @@
 
 use sgemm_cube::coordinator::request::ShapeKey;
 use sgemm_cube::coordinator::scheduler::{assign, imbalance, tiles_of};
-use sgemm_cube::gemm::blocked::{cube_gemm_blocked, hgemm_blocked, host_block, sgemm_blocked};
+use sgemm_cube::gemm::blocked::{
+    cube_gemm_blocked, cube_gemm_blocked_overlapped, gemm_prepacked, hgemm_blocked,
+    hgemm_blocked_overlapped, host_block, sgemm_blocked, sgemm_blocked_overlapped,
+};
 use sgemm_cube::gemm::cube::{cube_gemm, Accumulation};
 use sgemm_cube::gemm::dgemm::dgemm_of_f32;
 use sgemm_cube::gemm::error::relative_error;
@@ -250,6 +253,98 @@ fn prop_blocked_cube_preserves_termwise_ordering_at_large_k() {
     let e_blocked = relative_error(&c_ref, &cube_gemm_blocked(&a, &b, cfg).to_f64());
     assert!(e_blocked <= e_el, "blocked {e_blocked} vs elementwise {e_el}");
     assert!(e_blocked <= e_tw * 2.0, "blocked {e_blocked} vs termwise {e_tw}");
+}
+
+#[test]
+fn prop_overlapped_bit_identical_to_serial_blocked() {
+    // ISSUE requirement: the overlapped (prefetching) b_k pipeline must
+    // be byte-for-byte equal to the serial blocked engine across the
+    // fp32/fp16/cube paths and random shapes — same pack routines, same
+    // block order, same sweeps, different schedule.
+    let bk = host_block().bk;
+    property("overlapped == serial, bitwise", 10, |g: &mut Gen| {
+        let m = g.usize_in(1, 48);
+        // Bias k across the b_k boundary so several panels are prefetched.
+        let k = if g.bool() { g.usize_in(1, bk) } else { g.usize_in(bk + 1, 3 * bk + 5) };
+        let n = g.usize_in(1, 80);
+        let mut rng = Rng::new(g.u64());
+        let a = Matrix::random_symmetric(m, k, 0, &mut rng);
+        let b = Matrix::random_symmetric(k, n, 0, &mut rng);
+        let bitwise = |x: &Matrix<f32>, y: &Matrix<f32>, what: &str| -> Result<(), String> {
+            for (u, v) in x.as_slice().iter().zip(y.as_slice()) {
+                if u.to_bits() != v.to_bits() {
+                    return Err(format!("{what} ({m},{k},{n}): {u} vs {v}"));
+                }
+            }
+            Ok(())
+        };
+        bitwise(&sgemm_blocked(&a, &b), &sgemm_blocked_overlapped(&a, &b), "fp32")?;
+        bitwise(&hgemm_blocked(&a, &b), &hgemm_blocked_overlapped(&a, &b), "fp16")?;
+        for s_b in [12, 8] {
+            let cfg = SplitConfig::with_scale(s_b);
+            bitwise(
+                &cube_gemm_blocked(&a, &b, cfg),
+                &cube_gemm_blocked_overlapped(&a, &b, cfg),
+                &format!("cube s_b={s_b}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_degenerate_zero_dims_never_panic() {
+    // ISSUE requirement: m, n or k of zero returns an empty/zero result
+    // through every engine entry point — serial, overlapped, prepacked —
+    // and the packing routines accept zero extents.
+    use sgemm_cube::gemm::pack;
+    use sgemm_cube::gemm::prepacked::{PrepackPath, PrepackedMatrix};
+    let cfg = SplitConfig::default();
+    for (m, k, n) in [
+        (0usize, 5usize, 4usize),
+        (3, 0, 2),
+        (3, 5, 0),
+        (0, 0, 0),
+        (1, 0, 0),
+        (0, 1, 0),
+        (0, 0, 1),
+    ] {
+        let a: Matrix<f32> = Matrix::zeros(m, k);
+        let b: Matrix<f32> = Matrix::zeros(k, n);
+        let ctx = format!("({m},{k},{n})");
+        let results = [
+            sgemm_blocked(&a, &b),
+            hgemm_blocked(&a, &b),
+            cube_gemm_blocked(&a, &b, cfg),
+            sgemm_blocked_overlapped(&a, &b),
+            hgemm_blocked_overlapped(&a, &b),
+            cube_gemm_blocked_overlapped(&a, &b, cfg),
+        ];
+        for c in &results {
+            assert_eq!(c.shape(), (m, n), "{ctx}");
+            assert!(c.as_slice().iter().all(|&v| v == 0.0), "{ctx}");
+        }
+        for path in [PrepackPath::Fp32, PrepackPath::Fp16, PrepackPath::Cube(cfg)] {
+            let pp = PrepackedMatrix::prepack(&b, path);
+            assert_eq!((pp.k(), pp.n()), (k, n), "{ctx} {path:?}");
+            let c = gemm_prepacked(&a, &pp);
+            assert_eq!(c.shape(), (m, n), "{ctx} {path:?}");
+            assert!(c.as_slice().iter().all(|&v| v == 0.0), "{ctx} {path:?}");
+        }
+        // Packing with zero extents yields empty panel sets, not reads
+        // out of bounds.
+        let mut out = vec![1.0f32];
+        pack::pack_a(&a, 0, 0, 0, 0, &mut out);
+        assert!(out.is_empty(), "{ctx}");
+        out.push(1.0);
+        pack::pack_b(&b, 0, 0, 0, 0, &mut out);
+        assert!(out.is_empty(), "{ctx}");
+        // Zero k steps over a nonzero row extent is also legal: panels
+        // exist but carry no k steps, so the buffer stays empty.
+        let mut out = Vec::new();
+        pack::pack_a(&a, 0, m.min(1), 0, 0, &mut out);
+        assert!(out.is_empty(), "{ctx}");
+    }
 }
 
 #[test]
