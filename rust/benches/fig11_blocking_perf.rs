@@ -17,10 +17,12 @@
 //! keeps its 8×1024×1024 shape in both modes (it is cheap — `m = 8` —
 //! and the CI gate pins that exact shape).
 
+use sgemm_cube::exec::pipeline::DEFAULT_PIPELINE_DEPTH;
+use sgemm_cube::exec::pool::{self, Pool};
 use sgemm_cube::experiments::fig11_blocking_perf;
 use sgemm_cube::gemm::blocked::{
-    cube_gemm_blocked, cube_gemm_blocked_overlapped, cube_gemm_blocked_staged,
-    cube_gemm_prepacked, hgemm_blocked, host_block, sgemm_blocked,
+    cube_gemm_blocked, cube_gemm_blocked_overlapped, cube_gemm_blocked_overlapped_ab,
+    cube_gemm_blocked_staged, cube_gemm_prepacked, hgemm_blocked, host_block, sgemm_blocked,
 };
 use sgemm_cube::gemm::fast::cube_gemm_three_pass;
 use sgemm_cube::gemm::prepacked::{PrepackPath, PrepackedMatrix};
@@ -114,6 +116,53 @@ fn main() {
     let overlap_speedup = serial_median / overlap_median;
     println!("overlapped vs serial blocked: {overlap_speedup:.2}x");
     bench.record_scalar(&format!("blocked/overlap_speedup/{n}^3"), overlap_speedup);
+
+    // ---- A+B dual-panel pipeline on the persistent pool ----
+    // The executor subsystem's deeper schedule: a pool prefetch job
+    // packs the next block's B panel *and* A row-block stripe through a
+    // depth-configurable ring while kernel-only sweeps consume the
+    // current one (exec::pipeline). Bit-identical output; CI gates
+    // ab_overlap_speedup >= 0.90 * overlap_speedup (A prefetch must not
+    // cost pipeline throughput; on multi-core hosts it should exceed
+    // the B-only speedup because pack-A leaves the sweep threads).
+    println!("\nA+B dual-panel pipeline at {n}³ (ring depth {DEFAULT_PIPELINE_DEPTH}):");
+    let ab_median = bench
+        .bench(&format!("host/cube_gemm_overlapped_ab/{n}^3"), Some(flops), || {
+            cube_gemm_blocked_overlapped_ab(&a, &b, cfg, DEFAULT_PIPELINE_DEPTH)
+        })
+        .seconds
+        .median;
+    let ab_speedup = serial_median / ab_median;
+    println!("A+B overlapped vs serial blocked: {ab_speedup:.2}x");
+    bench.record_scalar(&format!("blocked/ab_overlap_speedup/{n}^3"), ab_speedup);
+
+    // ---- persistent-pool dispatch overhead ----
+    // One empty run_chunks round (queue push per chunk + caller
+    // participation + completion wait) — the cost that replaced the
+    // per-sweep scoped spawn/join. Recorded in nanoseconds. On a
+    // 1-worker host run_chunks degenerates to a direct call and would
+    // measure nothing, so the record always comes from a >= 2-worker
+    // pool (a dedicated one if the global pool is that small) — the
+    // number stays comparable across runners with different core
+    // counts.
+    let gpool = pool::global();
+    let nw = gpool.n_workers();
+    let owned;
+    let (mpool, mworkers) = if nw >= 2 {
+        (gpool, nw)
+    } else {
+        owned = Pool::new(2);
+        (&owned, 2)
+    };
+    let spawn_overhead = bench
+        .bench("exec/pool_run_chunks_noop", None, || mpool.run_chunks(mworkers, |_, _| {}))
+        .seconds
+        .median;
+    bench.record_scalar("exec/pool_spawn_overhead_ns", spawn_overhead * 1e9);
+    println!(
+        "pool dispatch round-trip ({mworkers} workers): {:.0} ns per run_chunks",
+        spawn_overhead * 1e9
+    );
 
     // ---- measured stage breakdown → recalibrated sim::pipeline α ----
     // The instrumented single-threaded pass times each stage. Deriving

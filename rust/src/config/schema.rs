@@ -8,7 +8,7 @@ use crate::config::parser::ConfigFile;
 use crate::coordinator::batcher::BatcherConfig;
 use crate::coordinator::policy::PrecisionPolicy;
 use crate::coordinator::server::ServiceConfig;
-use crate::gemm::backend::Backend;
+use crate::gemm::backend::{Backend, Schedule};
 use crate::sim::blocking::BlockConfig;
 use crate::sim::chip::Chip;
 
@@ -43,8 +43,25 @@ impl ServerConfig {
             // 0 = cache disabled (miss-through), see gemm::cache.
             sc.prepack_capacity = mb << 20;
         }
+        // Legacy boolean schedule toggle; the richer `schedule` key
+        // below wins when both are present.
         if let Some(ov) = cfg.get_bool("server", "overlap")? {
-            sc.overlap = ov;
+            sc.schedule = if ov { Schedule::OverlapB } else { Schedule::Serial };
+        }
+        if let Some(s) = cfg.get("server", "schedule") {
+            sc.schedule = Schedule::parse(s).ok_or_else(|| {
+                anyhow::anyhow!("[server] schedule = {s}: expected serial, overlap-b or overlap-ab")
+            })?;
+        }
+        if let Some(d) = cfg.get_usize("server", "pipeline_depth")? {
+            if d == 0 {
+                bail!("[server] pipeline_depth must be >= 1");
+            }
+            sc.pipeline_depth = d;
+        }
+        if let Some(p) = cfg.get_usize("server", "pool_threads")? {
+            // 0 = the shared global executor pool (the default).
+            sc.pool_threads = p;
         }
         Ok(ServerConfig(sc))
     }
@@ -98,7 +115,7 @@ mod tests {
     #[test]
     fn server_section_roundtrip() {
         let cfg = ConfigFile::parse(
-            "[server]\nworkers = 3\nmax_batch = 16\nmax_wait_ms = 5\nbackend = fp16\nerror_budget = 1e-3\nprepack_cache_mb = 64\noverlap = true",
+            "[server]\nworkers = 3\nmax_batch = 16\nmax_wait_ms = 5\nbackend = fp16\nerror_budget = 1e-3\nprepack_cache_mb = 64\noverlap = true\npipeline_depth = 3\npool_threads = 2",
         )
         .unwrap();
         let sc = ServerConfig::from_config(&cfg).unwrap().0;
@@ -108,14 +125,39 @@ mod tests {
         assert_eq!(sc.policy.default_backend, Backend::Fp16);
         assert_eq!(sc.policy.error_budget, Some(1e-3));
         assert_eq!(sc.prepack_capacity, 64 << 20);
-        assert!(sc.overlap);
-        // Defaults: workers track the host, capacity is nonzero.
+        assert_eq!(sc.schedule, Schedule::OverlapB);
+        assert_eq!(sc.pipeline_depth, 3);
+        assert_eq!(sc.pool_threads, 2);
+        // Defaults: workers track the host, capacity is nonzero, the
+        // shared pool is used.
         let sc = ServerConfig::from_config(&ConfigFile::parse("").unwrap()).unwrap().0;
         assert!(sc.n_workers >= 1);
         assert!(sc.prepack_capacity > 0);
-        // overlap = false explicitly wins over the env default.
+        assert_eq!(sc.pool_threads, 0);
+        // overlap = false explicitly selects the serial schedule.
         let cfg = ConfigFile::parse("[server]\noverlap = false").unwrap();
-        assert!(!ServerConfig::from_config(&cfg).unwrap().0.overlap);
+        assert_eq!(ServerConfig::from_config(&cfg).unwrap().0.schedule, Schedule::Serial);
+    }
+
+    #[test]
+    fn schedule_key_wins_over_legacy_overlap_toggle() {
+        let cfg =
+            ConfigFile::parse("[server]\noverlap = false\nschedule = overlap-ab").unwrap();
+        let sc = ServerConfig::from_config(&cfg).unwrap().0;
+        assert_eq!(sc.schedule, Schedule::OverlapAB);
+        for name in ["serial", "overlap-b", "overlap-ab"] {
+            let cfg = ConfigFile::parse(&format!("[server]\nschedule = {name}")).unwrap();
+            let sc = ServerConfig::from_config(&cfg).unwrap().0;
+            assert_eq!(sc.schedule.name(), name);
+        }
+        let bad = ConfigFile::parse("[server]\nschedule = warp-speed").unwrap();
+        assert!(ServerConfig::from_config(&bad).is_err());
+    }
+
+    #[test]
+    fn zero_pipeline_depth_rejected() {
+        let cfg = ConfigFile::parse("[server]\npipeline_depth = 0").unwrap();
+        assert!(ServerConfig::from_config(&cfg).is_err());
     }
 
     #[test]

@@ -1,28 +1,44 @@
 //! The GEMM service: submission API, weight registry, dispatcher
-//! thread, worker pool, prepacked-operand cache.
+//! thread, pool-backed batch execution, prepacked-operand cache.
 //!
 //! Architecture (std threads; the image has no tokio):
 //!
 //! ```text
 //! clients --register_weights()--> weight registry (Arc<WeightEntry>)
-//! clients --submit()-----------> dispatcher --(batch by shape+weight)--> workers
+//! clients --submit()-----------> dispatcher --(batch by shape+weight)--> exec::pool tasks
 //!                                                                     \--> reply channels
-//!                                        workers <--> prepack cache (LRU, Arc<PrepackedMatrix>)
+//!                                    batch tasks <--> prepack cache (LRU, Arc<PrepackedMatrix>)
 //! ```
 //!
-//! The dispatcher owns the [`Batcher`]; full or expired batches go to a
-//! work queue consumed by `n_workers` threads. Each worker executes the
-//! batch through the precision path chosen by the [`PrecisionPolicy`]
-//! (or the request's explicit backend) on the native numerics engine.
-//! Requests against a registered weight are served from the prepacked
-//! cache: the weight's FP32→2×FP16 split and panel packing are done at
-//! most once per `(weight, path, s_b)` and every subsequent request pays
-//! only for preparing its A operand ([`crate::gemm::prepacked`]).
+//! The dispatcher (a dedicated control thread — it blocks on the
+//! request channel, so it must not occupy a pool worker) owns the
+//! [`Batcher`]; full or expired batches are submitted as **detached
+//! jobs on the executor pool** ([`crate::exec::pool`]) — the same
+//! persistent worker population that runs the blocked sweeps and the
+//! pipeline prefetch, so concurrent serving load shares one thread set
+//! instead of oversubscribing the host with per-service workers. A
+//! counting gate bounds the batches in flight to `n_workers`
+//! (back-pressure: the dispatcher stops draining submissions while the
+//! pool is that far behind, so batches keep growing instead of
+//! queueing). Each batch task executes its requests through the
+//! precision path chosen by the [`PrecisionPolicy`] (or the request's
+//! explicit backend) on the native numerics engine, under the host
+//! schedule configured by [`ServiceConfig::schedule`]. Requests against
+//! a registered weight are served from the prepacked cache: the
+//! weight's FP32→2×FP16 split and panel packing are done at most once
+//! per `(weight, path, s_b)` and every subsequent request pays only for
+//! preparing its A operand ([`crate::gemm::prepacked`]).
+//!
+//! By default batches run on the process-global pool; setting
+//! [`ServiceConfig::pool_threads`] gives the service a dedicated pool
+//! of that size (isolation for tests and co-tenant deployments). The
+//! sweeps inside a batch always use the global pool via
+//! `parallel_chunks`, with the batch task's thread participating.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -30,7 +46,9 @@ use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::policy::{matrix_exponent_range, PolicyDecision, PrecisionPolicy};
 use crate::coordinator::request::{BOperand, GemmRequest, GemmResponse, WeightEntry, WeightId};
-use crate::gemm::backend::{Backend, GemmBackend};
+use crate::exec::pipeline::DEFAULT_PIPELINE_DEPTH;
+use crate::exec::pool::{self, Pool};
+use crate::gemm::backend::{default_schedule, Backend, GemmBackend, Schedule};
 use crate::gemm::blocked;
 use crate::gemm::cache::{CacheStats, PrepackCache, PrepackKey};
 use crate::gemm::error::GemmError;
@@ -42,7 +60,7 @@ use crate::util::mat::Matrix;
 /// memory budget.
 pub const DEFAULT_PREPACK_CAPACITY: usize = 256 << 20;
 
-/// Default worker count: one per available core
+/// Default in-flight batch bound: one per available core
 /// (`std::thread::available_parallelism`), honoring the operator's
 /// `SGEMM_CUBE_THREADS` override, clamped to at least one.
 pub fn default_workers() -> usize {
@@ -54,16 +72,25 @@ pub fn default_workers() -> usize {
 pub struct ServiceConfig {
     pub batcher: BatcherConfig,
     pub policy: PrecisionPolicy,
-    /// Worker threads (0 = available parallelism, same as the default).
+    /// Maximum batches concurrently in flight on the pool
+    /// (0 = available parallelism, same as the default).
     pub n_workers: usize,
     /// Prepacked-operand cache capacity in bytes. `0` disables the
     /// cache entirely (miss-through — every request repacks).
     pub prepack_capacity: usize,
-    /// Route inline (non-prepacked) requests through the overlapped
-    /// (double-buffered) b_k pipeline ([`crate::gemm::overlap`]).
-    /// Bit-identical results; defaults to the `SGEMM_CUBE_OVERLAP` env
-    /// toggle, and the config file's `[server] overlap` key overrides.
-    pub overlap: bool,
+    /// Host schedule for inline (non-prepacked) requests: serial /
+    /// overlapped-B / overlapped-AB — bit-identical results; defaults
+    /// to the `SGEMM_CUBE_SCHEDULE` / `SGEMM_CUBE_OVERLAP` env knobs,
+    /// and the config file's `[server] schedule` / `[server] overlap`
+    /// keys override.
+    pub schedule: Schedule,
+    /// Prefetch-ring depth for [`Schedule::OverlapAB`]
+    /// (`[server] pipeline_depth`; depth 2 = classic double buffer).
+    pub pipeline_depth: usize,
+    /// `0` (default): batches run on the shared global executor pool.
+    /// `> 0`: the service owns a dedicated pool of that many workers
+    /// (`[server] pool_threads`).
+    pub pool_threads: usize,
 }
 
 impl Default for ServiceConfig {
@@ -73,7 +100,9 @@ impl Default for ServiceConfig {
             policy: PrecisionPolicy::default(),
             n_workers: default_workers(),
             prepack_capacity: DEFAULT_PREPACK_CAPACITY,
-            overlap: crate::gemm::overlap::overlap_enabled(),
+            schedule: default_schedule(),
+            pipeline_depth: DEFAULT_PIPELINE_DEPTH,
+            pool_threads: 0,
         }
     }
 }
@@ -81,6 +110,78 @@ impl Default for ServiceConfig {
 enum DispatchMsg {
     Request(GemmRequest),
     Shutdown,
+}
+
+/// Which pool the service schedules batch tasks on.
+#[derive(Clone)]
+enum ServicePool {
+    /// The process-wide executor pool ([`pool::global`]).
+    Global,
+    /// A pool owned by (and dropped with) this service.
+    Owned(Arc<Pool>),
+}
+
+impl ServicePool {
+    fn pool(&self) -> &Pool {
+        match self {
+            ServicePool::Global => pool::global(),
+            ServicePool::Owned(p) => p.as_ref(),
+        }
+    }
+}
+
+/// Counting gate bounding the batches in flight; `wait_idle` is the
+/// drain barrier `shutdown` uses in place of per-worker joins.
+struct Gate {
+    count: Mutex<usize>,
+    changed: Condvar,
+}
+
+impl Gate {
+    fn new() -> Gate {
+        Gate { count: Mutex::new(0), changed: Condvar::new() }
+    }
+
+    fn acquire(&self, max: usize) {
+        let mut c = self.count.lock().unwrap();
+        while *c >= max.max(1) {
+            c = self.changed.wait(c).unwrap();
+        }
+        *c += 1;
+    }
+
+    fn release(&self) {
+        let mut c = self.count.lock().unwrap();
+        *c -= 1;
+        self.changed.notify_all();
+    }
+
+    fn wait_idle(&self) {
+        let mut c = self.count.lock().unwrap();
+        while *c > 0 {
+            c = self.changed.wait(c).unwrap();
+        }
+    }
+}
+
+/// Releases the gate when a batch task finishes — including by panic
+/// (the pool contains detached panics, but the slot must still free).
+struct GateRelease<'a>(&'a Gate);
+
+impl Drop for GateRelease<'_> {
+    fn drop(&mut self) {
+        self.0.release();
+    }
+}
+
+/// Everything a batch task needs, shared once per service.
+struct BatchCtx {
+    metrics: Arc<Metrics>,
+    policy: PrecisionPolicy,
+    cache: Arc<PrepackCache>,
+    schedule: Schedule,
+    pipeline_depth: usize,
+    gate: Gate,
 }
 
 /// Handle to a running GEMM service.
@@ -91,37 +192,36 @@ pub struct GemmService {
     weights: Mutex<HashMap<WeightId, Arc<WeightEntry>>>,
     next_weight: AtomicU64,
     prepack: Arc<PrepackCache>,
+    ctx: Arc<BatchCtx>,
+    pool: ServicePool,
     dispatcher: Option<JoinHandle<()>>,
-    workers: Vec<JoinHandle<()>>,
 }
 
 impl GemmService {
-    /// Start the dispatcher and worker pool.
+    /// Start the dispatcher and wire batch execution onto the pool.
     pub fn start(cfg: ServiceConfig) -> GemmService {
         let metrics = Arc::new(Metrics::new());
         let prepack = Arc::new(PrepackCache::new(cfg.prepack_capacity));
         let (tx, rx) = channel::<DispatchMsg>();
-        let (work_tx, work_rx) = channel::<Vec<GemmRequest>>();
-        let work_rx = Arc::new(Mutex::new(work_rx));
-
-        let n_workers = if cfg.n_workers == 0 { default_workers() } else { cfg.n_workers };
-
-        let mut workers = Vec::with_capacity(n_workers);
-        for _ in 0..n_workers {
-            let work_rx = work_rx.clone();
-            let metrics = metrics.clone();
-            let policy = cfg.policy.clone();
-            let cache = prepack.clone();
-            let overlap = cfg.overlap;
-            workers.push(std::thread::spawn(move || {
-                worker_loop(work_rx, metrics, policy, cache, overlap)
-            }));
-        }
-
-        let metrics_d = metrics.clone();
+        let pool = if cfg.pool_threads == 0 {
+            ServicePool::Global
+        } else {
+            ServicePool::Owned(Arc::new(Pool::new(cfg.pool_threads)))
+        };
+        let max_in_flight = if cfg.n_workers == 0 { default_workers() } else { cfg.n_workers };
+        let ctx = Arc::new(BatchCtx {
+            metrics: Arc::clone(&metrics),
+            policy: cfg.policy.clone(),
+            cache: Arc::clone(&prepack),
+            schedule: cfg.schedule,
+            pipeline_depth: cfg.pipeline_depth,
+            gate: Gate::new(),
+        });
         let batcher_cfg = cfg.batcher.clone();
-        let dispatcher = std::thread::spawn(move || {
-            dispatcher_loop(rx, work_tx, batcher_cfg, metrics_d);
+        let ctx_d = Arc::clone(&ctx);
+        let pool_d = pool.clone();
+        let dispatcher = pool::spawn_named("gemm-dispatcher", move || {
+            dispatcher_loop(&rx, batcher_cfg, &ctx_d, &pool_d, max_in_flight);
         });
 
         GemmService {
@@ -131,9 +231,17 @@ impl GemmService {
             weights: Mutex::new(HashMap::new()),
             next_weight: AtomicU64::new(1),
             prepack,
+            ctx,
+            pool,
             dispatcher: Some(dispatcher),
-            workers,
         }
+    }
+
+    /// The executor pool this service schedules batch tasks on (the
+    /// global pool unless [`ServiceConfig::pool_threads`] carved out a
+    /// dedicated one).
+    pub fn pool(&self) -> &Pool {
+        self.pool.pool()
     }
 
     /// Register a cache-stable B operand (a weight matrix). Its exponent
@@ -172,7 +280,7 @@ impl GemmService {
         backend: Option<Backend>,
     ) -> Result<(u64, Receiver<GemmResponse>), GemmError> {
         // Validate here, in the caller's thread, so a malformed request
-        // is a typed error instead of a panic inside a worker. The
+        // is a typed error instead of a panic inside a batch task. The
         // kernels keep their asserts as last-resort invariants.
         check_shapes(&a, b.matrix())?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
@@ -221,7 +329,7 @@ impl GemmService {
         backend: Option<Backend>,
     ) -> Result<GemmResponse, GemmError> {
         let (_, rx) = self.submit(a, b, backend)?;
-        Ok(rx.recv().expect("worker dropped the reply channel"))
+        Ok(rx.recv().expect("batch task dropped the reply channel"))
     }
 
     /// Blocking convenience for the register-weights-then-serve flow.
@@ -232,7 +340,7 @@ impl GemmService {
         backend: Option<Backend>,
     ) -> Result<GemmResponse, GemmError> {
         let (_, rx) = self.submit_prepacked(a, id, backend)?;
-        Ok(rx.recv().expect("worker dropped the reply channel"))
+        Ok(rx.recv().expect("batch task dropped the reply channel"))
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -245,35 +353,33 @@ impl GemmService {
         self.prepack.stats()
     }
 
-    /// Stop accepting work, drain, and join all threads.
+    /// Stop accepting work, drain, and join the dispatcher; waits until
+    /// every in-flight batch task released the gate.
     pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
         let _ = self.tx.send(DispatchMsg::Shutdown);
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
         }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.ctx.gate.wait_idle();
     }
 }
 
 impl Drop for GemmService {
     fn drop(&mut self) {
-        let _ = self.tx.send(DispatchMsg::Shutdown);
-        if let Some(d) = self.dispatcher.take() {
-            let _ = d.join();
-        }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.stop();
     }
 }
 
 fn dispatcher_loop(
-    rx: Receiver<DispatchMsg>,
-    work_tx: Sender<Vec<GemmRequest>>,
+    rx: &Receiver<DispatchMsg>,
     batcher_cfg: BatcherConfig,
-    metrics: Arc<Metrics>,
+    ctx: &Arc<BatchCtx>,
+    pool: &ServicePool,
+    max_in_flight: usize,
 ) {
     let mut batcher = Batcher::new(batcher_cfg);
     loop {
@@ -283,31 +389,23 @@ fn dispatcher_loop(
         match rx.recv_timeout(timeout) {
             Ok(DispatchMsg::Request(req)) => {
                 if let Some(batch) = batcher.push(req) {
-                    metrics.record_batch();
-                    if work_tx.send(batch).is_err() {
-                        return;
-                    }
+                    dispatch_batch(batch, ctx, pool, max_in_flight);
                 }
             }
             Ok(DispatchMsg::Shutdown) => {
                 for batch in batcher.flush_all() {
-                    metrics.record_batch();
-                    let _ = work_tx.send(batch);
+                    dispatch_batch(batch, ctx, pool, max_in_flight);
                 }
-                return; // dropping work_tx stops the workers
+                return;
             }
             Err(RecvTimeoutError::Timeout) => {
                 for batch in batcher.flush_expired(Instant::now()) {
-                    metrics.record_batch();
-                    if work_tx.send(batch).is_err() {
-                        return;
-                    }
+                    dispatch_batch(batch, ctx, pool, max_in_flight);
                 }
             }
             Err(RecvTimeoutError::Disconnected) => {
                 for batch in batcher.flush_all() {
-                    metrics.record_batch();
-                    let _ = work_tx.send(batch);
+                    dispatch_batch(batch, ctx, pool, max_in_flight);
                 }
                 return;
             }
@@ -315,53 +413,57 @@ fn dispatcher_loop(
     }
 }
 
-fn worker_loop(
-    work_rx: Arc<Mutex<Receiver<Vec<GemmRequest>>>>,
-    metrics: Arc<Metrics>,
-    policy: PrecisionPolicy,
-    cache: Arc<PrepackCache>,
-    overlap: bool,
+/// Submit one batch as a detached pool task, blocking first on the
+/// in-flight gate (back-pressure toward the batcher).
+fn dispatch_batch(
+    batch: Vec<GemmRequest>,
+    ctx: &Arc<BatchCtx>,
+    pool: &ServicePool,
+    max_in_flight: usize,
 ) {
-    loop {
-        // Hold the lock only while receiving, not while computing.
-        let batch = match work_rx.lock().unwrap().recv() {
-            Ok(b) => b,
-            Err(_) => return,
+    ctx.metrics.record_batch();
+    ctx.gate.acquire(max_in_flight);
+    let ctx = Arc::clone(ctx);
+    pool.pool().submit(move || {
+        let _release = GateRelease(&ctx.gate);
+        execute_batch(batch, &ctx);
+    });
+}
+
+fn execute_batch(batch: Vec<GemmRequest>, ctx: &BatchCtx) {
+    for req in batch {
+        let decision = match req.backend {
+            Some(b) => PolicyDecision { backend: b, scale_exp: 12, e_min: None, e_max: None },
+            // Registered weights carry their exponent range from
+            // registration time; only A is scanned per request.
+            None => match req.b.weight() {
+                Some(w) => {
+                    ctx.policy.decide_ranges(matrix_exponent_range(&req.a), (w.e_min, w.e_max))
+                }
+                None => ctx.policy.decide(&req.a, req.b.matrix()),
+            },
         };
-        for req in batch {
-            let decision = match req.backend {
-                Some(b) => PolicyDecision { backend: b, scale_exp: 12, e_min: None, e_max: None },
-                // Registered weights carry their exponent range from
-                // registration time; only A is scanned per request.
-                None => match req.b.weight() {
-                    Some(w) => {
-                        policy.decide_ranges(matrix_exponent_range(&req.a), (w.e_min, w.e_max))
-                    }
-                    None => policy.decide(&req.a, req.b.matrix()),
-                },
-            };
-            let shape = req.shape();
-            // Revalidate before executing: submission already checked,
-            // but a worker must never be one bad request away from a
-            // panic — the kernels' asserts stay as last-resort
-            // invariants behind this check and the catch_unwind.
-            let result = match check_shapes(&req.a, req.b.matrix()) {
-                Err(e) => Err(e),
-                Ok(()) => std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    execute_request(&req, &decision, &cache, overlap)
-                }))
-                .map_err(|p| GemmError::Panicked(panic_message(p))),
-            };
-            let latency = req.submitted.elapsed().as_secs_f64();
-            metrics.record_request(latency, shape.flops(), result.is_ok());
-            let _ = req.reply.send(GemmResponse {
-                id: req.id,
-                result,
-                backend: decision.backend,
-                scale_exp: decision.scale_exp,
-                latency,
-            });
-        }
+        let shape = req.shape();
+        // Revalidate before executing: submission already checked, but
+        // a batch task must never be one bad request away from a panic
+        // — the kernels' asserts stay as last-resort invariants behind
+        // this check and the catch_unwind.
+        let result = match check_shapes(&req.a, req.b.matrix()) {
+            Err(e) => Err(e),
+            Ok(()) => std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                execute_request(&req, &decision, ctx)
+            }))
+            .map_err(|p| GemmError::Panicked(panic_message(p))),
+        };
+        let latency = req.submitted.elapsed().as_secs_f64();
+        ctx.metrics.record_request(latency, shape.flops(), result.is_ok());
+        let _ = req.reply.send(GemmResponse {
+            id: req.id,
+            result,
+            backend: decision.backend,
+            scale_exp: decision.scale_exp,
+            latency,
+        });
     }
 }
 
@@ -391,12 +493,7 @@ fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
 /// bit-identical to the inline path for the same decision, since both
 /// run the same sweeps over equal panel bytes
 /// ([`crate::gemm::blocked::gemm_prepacked`]).
-fn execute_request(
-    req: &GemmRequest,
-    decision: &PolicyDecision,
-    cache: &PrepackCache,
-    overlap: bool,
-) -> Matrix<f32> {
+fn execute_request(req: &GemmRequest, decision: &PolicyDecision, ctx: &BatchCtx) -> Matrix<f32> {
     if let (Some(w), Some(path)) = (req.b.weight(), decision.prepack_path()) {
         // Normalize the key the way the panels are shared: both cube
         // orders execute the same fused kernel, and non-cube paths
@@ -415,12 +512,15 @@ fn execute_request(
             backend,
             scale_exp,
         };
-        let packed = cache.get_or_insert_with(key, || PrepackedMatrix::prepack(&w.matrix, path));
+        let packed = ctx
+            .cache
+            .get_or_insert_with(key, || PrepackedMatrix::prepack(&w.matrix, path));
         return blocked::gemm_prepacked(&req.a, &packed);
     }
     GemmBackend::new(decision.backend)
         .with_scale(decision.scale_exp)
-        .with_overlap(overlap)
+        .with_schedule(ctx.schedule)
+        .with_pipeline_depth(ctx.pipeline_depth)
         .gemm(&req.a, req.b.matrix())
 }
 
@@ -443,11 +543,37 @@ mod tests {
     #[test]
     fn default_workers_track_available_parallelism() {
         let d = ServiceConfig::default();
-        assert!(d.n_workers >= 1, "clamped to at least one worker");
+        assert!(d.n_workers >= 1, "clamped to at least one in-flight batch");
         // One per core (or the operator's SGEMM_CUBE_THREADS override —
         // num_threads() resolves both).
         assert_eq!(d.n_workers, crate::util::threads::num_threads().max(1));
         assert!(d.prepack_capacity > 0);
+        assert_eq!(d.pool_threads, 0, "default: shared global pool");
+        assert_eq!(d.pipeline_depth, DEFAULT_PIPELINE_DEPTH);
+    }
+
+    #[test]
+    fn service_uses_the_global_pool_by_default() {
+        let svc = GemmService::start(small_cfg());
+        assert!(std::ptr::eq(svc.pool(), pool::global()));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn dedicated_pool_is_sized_and_bounded() {
+        let svc = GemmService::start(ServiceConfig { pool_threads: 2, ..small_cfg() });
+        assert_eq!(svc.pool().n_workers(), 2);
+        assert!(!std::ptr::eq(svc.pool(), pool::global()));
+        let mut rng = Rng::new(9);
+        for _ in 0..4 {
+            let a = Matrix::random_symmetric(8, 12, 0, &mut rng);
+            let b = Matrix::random_symmetric(12, 8, 0, &mut rng);
+            let resp = svc.gemm_blocking(a, b, None).expect("submit");
+            assert!(resp.result.is_ok());
+        }
+        assert!(svc.pool().high_water() >= 1, "batches must run on the dedicated pool");
+        assert!(svc.pool().high_water() <= 2, "pool must never exceed its worker count");
+        svc.shutdown();
     }
 
     #[test]
@@ -560,8 +686,8 @@ mod tests {
             Err(GemmError::ShapeMismatch { m: 4, k_a: 5, k_b: 6, n: 4 }) => {}
             other => panic!("expected ShapeMismatch, got {:?}", other.map(|(id, _)| id)),
         }
-        // The service is still healthy afterwards: workers never saw the
-        // bad request, and a well-formed one completes.
+        // The service is still healthy afterwards: batch tasks never
+        // saw the bad request, and a well-formed one completes.
         let mut rng = Rng::new(6);
         let a = Matrix::random_symmetric(4, 6, 0, &mut rng);
         let b = Matrix::random_symmetric(6, 4, 0, &mut rng);
@@ -573,7 +699,7 @@ mod tests {
     #[test]
     fn degenerate_zero_dim_requests_are_served() {
         // m, k or n of zero must produce an empty/zero result through
-        // the full dispatcher → batcher → worker path, not a panic.
+        // the full dispatcher → batcher → pool path, not a panic.
         let svc = GemmService::start(small_cfg());
         for (m, k, n) in [(0usize, 8usize, 4usize), (3, 0, 4), (3, 8, 0), (0, 0, 0)] {
             let a: Matrix<f32> = Matrix::zeros(m, k);
@@ -587,22 +713,35 @@ mod tests {
     }
 
     #[test]
-    fn overlap_enabled_service_bit_matches_serial_service() {
-        let serial = GemmService::start(ServiceConfig { overlap: false, ..small_cfg() });
-        let overlapped = GemmService::start(ServiceConfig { overlap: true, ..small_cfg() });
+    fn every_schedule_serves_bit_identical_results() {
+        let serial = GemmService::start(ServiceConfig {
+            schedule: Schedule::Serial,
+            ..small_cfg()
+        });
+        let overlapped =
+            GemmService::start(ServiceConfig { schedule: Schedule::OverlapB, ..small_cfg() });
+        let ab = GemmService::start(ServiceConfig {
+            schedule: Schedule::OverlapAB,
+            pipeline_depth: 3,
+            ..small_cfg()
+        });
         let mut rng = Rng::new(8);
         let a = Matrix::random_symmetric(24, 40, 0, &mut rng);
         let b = Matrix::random_symmetric(40, 16, 0, &mut rng);
         for bk in [None, Some(Backend::Fp32), Some(Backend::CubeTermwise)] {
             let x = serial.gemm_blocking(a.clone(), b.clone(), bk).expect("submit");
             let y = overlapped.gemm_blocking(a.clone(), b.clone(), bk).expect("submit");
-            let (cx, cy) = (x.result.unwrap(), y.result.unwrap());
-            for (u, v) in cx.as_slice().iter().zip(cy.as_slice()) {
-                assert_eq!(u.to_bits(), v.to_bits(), "backend {bk:?}");
+            let z = ab.gemm_blocking(a.clone(), b.clone(), bk).expect("submit");
+            let cx = x.result.unwrap();
+            for other in [y.result.unwrap(), z.result.unwrap()] {
+                for (u, v) in cx.as_slice().iter().zip(other.as_slice()) {
+                    assert_eq!(u.to_bits(), v.to_bits(), "backend {bk:?}");
+                }
             }
         }
         serial.shutdown();
         overlapped.shutdown();
+        ab.shutdown();
     }
 
     #[test]

@@ -1,0 +1,23 @@
+//! Persistent executor subsystem: one worker pool for sweeps, prefetch
+//! and serving.
+//!
+//! * [`pool`] — the lazily-initialized process-wide worker pool
+//!   ([`pool::global`]): a scoped data-parallel primitive
+//!   ([`pool::Pool::run_chunks`], the engine of
+//!   [`crate::util::threads::parallel_chunks`]) plus detached jobs with
+//!   cancellable handles ([`pool::Pool::submit`]). Replaces the
+//!   per-sweep scoped spawns, the per-call prefetch threads and the
+//!   per-service worker sets of earlier PRs with a single fixed thread
+//!   population, so concurrent serving load no longer oversubscribes
+//!   the host.
+//! * [`pipeline`] — the depth-configurable prefetch ring over the
+//!   blocked engine's `b_n → b_k` panel loop: overlapped-B (the paper's
+//!   Fig. 7 double-buffered B stream) and overlapped-AB (B panel + A
+//!   row-block stripe prefetched together), both bit-identical to the
+//!   serial sweeps.
+
+pub mod pipeline;
+pub mod pool;
+
+pub use pipeline::{clamp_depth, DEFAULT_PIPELINE_DEPTH, MAX_PIPELINE_DEPTH};
+pub use pool::{Pool, TaskHandle, TaskState};

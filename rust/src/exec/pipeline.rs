@@ -1,0 +1,625 @@
+//! Depth-configurable prefetch pipeline for the blocked engine's
+//! `b_n → b_k` panel loop — the generalization of the PR-3 two-slot
+//! B-panel ring (`gemm/overlap.rs`, now a shim over this module) to a
+//! ring of `pipeline_depth` slots that can prefetch **both** the next
+//! block's B panel and its A row-block stripe, driven by the persistent
+//! worker pool ([`crate::exec::pool`]) instead of a per-call thread.
+//!
+//! Schedules, in increasing pipeline depth (all bit-identical — same
+//! pack routines, same `b_n → b_k` consumption order, same shared
+//! sweeps):
+//!
+//! * **Serial** — pack then sweep on the critical path
+//!   (`gemm/blocked.rs` serial drivers).
+//! * **Overlap-B** — the next `(j, k)` block's B panel is packed by a
+//!   prefetch job while the sweeps consume the current one; A row
+//!   blocks are still packed inside the sweep threads (the paper's
+//!   Fig. 7 double-buffered B stream).
+//! * **Overlap-AB** — the prefetch job additionally packs the next
+//!   block's full A row-block stripe (per executed row block, byte-
+//!   identical to the sweeps' own `pack_a`), so the consuming sweeps
+//!   run kernel-only; this removes the last packing span from the
+//!   compute path, the ROADMAP's "next pipeline depth".
+//!
+//! **Ring discipline.** `depth` slot buffers circulate between a single
+//! prefetch job (claimed from the pool injector via
+//! [`crate::exec::pool::Pool::submit`]) and the consuming caller. Jobs
+//! are claimed strictly in consumption order; the free-slot supply
+//! bounds the lookahead to `depth − 1` blocks past the one being
+//! consumed (depth 2 ≡ the PR-3 double buffer; depth 1 degenerates to
+//! the serial pack-then-sweep loop). The consumer never waits on work
+//! the pool has not started: if the next job is still unclaimed (the
+//! prefetch task is queued behind other pool work, or never ran), the
+//! consumer claims and packs it **inline** — graceful degradation to
+//! the serial schedule instead of a stall, which also makes the ring
+//! deadlock-free under full pool saturation.
+//!
+//! **Scoped-borrow safety.** The prefetch job reaches the operands
+//! through a lifetime-erased pointer ([`RawPackFn`]). Two facts keep it
+//! sound: (1) packs only happen for claimed job indices, every claimed
+//! job is delivered to and awaited by the consumer before the driver
+//! returns; (2) the driver's drop guard ([`PrefetchGuard`]) sets the
+//! ring's shutdown flag and then [`TaskHandle::cancel_or_join`]s the
+//! prefetch task — removing it unrun from the queue, or waiting out its
+//! current (bounded) step — before the borrowed operands can go out of
+//! scope, including on unwind.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+use crate::exec::pool::{self, TaskHandle};
+use crate::gemm::blocked::{
+    exec_bm, host_block, sweep_rows_cube, sweep_rows_cube_packed, sweep_rows_f32,
+    sweep_rows_f32_packed,
+};
+use crate::gemm::pack;
+use crate::util::mat::Matrix;
+use crate::util::threads::SendPtr;
+
+/// Default ring depth: two slots — the classic double buffer, one block
+/// prefetched ahead of the one being consumed (the PR-3 schedule).
+pub const DEFAULT_PIPELINE_DEPTH: usize = 2;
+
+/// Upper bound on the ring depth; beyond a few slots the prefetcher is
+/// purely buffer-bound and extra depth only costs panel memory.
+pub const MAX_PIPELINE_DEPTH: usize = 8;
+
+/// Clamp a configured depth into the supported `[1, MAX]` window.
+pub fn clamp_depth(depth: usize) -> usize {
+    depth.clamp(1, MAX_PIPELINE_DEPTH)
+}
+
+/// One `(column block, k block)` iteration of the `b_n → b_k` panel
+/// loop, in consumption order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PanelJob {
+    /// Column-block index (`j0 / b_n`).
+    pub jb: usize,
+    /// k-block index (`p0 / b_k`).
+    pub pb: usize,
+    /// First column of the block.
+    pub j0: usize,
+    /// Columns in the block (`≤ b_n`).
+    pub nc: usize,
+    /// First k step of the block.
+    pub p0: usize,
+    /// k steps in the block (`≤ b_k`).
+    pub kc: usize,
+}
+
+/// The `b_n → b_k` block schedule of the serial drivers, as a flat job
+/// list (outer loop over columns, inner over k — the exact consumption
+/// order the serial, overlapped-B and overlapped-AB nests all use).
+pub fn panel_jobs(n: usize, k: usize, bn: usize, bk: usize) -> Vec<PanelJob> {
+    let mut jobs = Vec::new();
+    if n == 0 || k == 0 {
+        return jobs;
+    }
+    for (jb, j0) in (0..n).step_by(bn).enumerate() {
+        let nc = bn.min(n - j0);
+        for (pb, p0) in (0..k).step_by(bk).enumerate() {
+            let kc = bk.min(k - p0);
+            jobs.push(PanelJob { jb, pb, j0, nc, p0, kc });
+        }
+    }
+    jobs
+}
+
+/// What the prefetcher packs B panels from: the plain B matrix
+/// (single-component panels) or the split high/low pair (dual-component
+/// panels for the fused cube kernel).
+pub(crate) enum PanelSource<'a> {
+    Single(&'a Matrix<f32>),
+    Dual { high: &'a Matrix<f32>, low: &'a Matrix<f32> },
+}
+
+impl PanelSource<'_> {
+    /// Pack `job`'s B block into `out` — exactly what the serial drivers
+    /// call, so prefetched panels are byte-identical.
+    pub(crate) fn pack(&self, job: &PanelJob, out: &mut Vec<f32>) {
+        match self {
+            PanelSource::Single(b) => pack::pack_b(b, job.p0, job.kc, job.j0, job.nc, out),
+            PanelSource::Dual { high, low } => {
+                pack::pack_b_dual(high, low, job.p0, job.kc, job.j0, job.nc, out)
+            }
+        }
+    }
+}
+
+/// One ring slot: the packed B panel for a `(j, k)` block, plus — on the
+/// A+B schedule — the packed A row-block stripe for the same k block.
+#[derive(Default)]
+pub struct PanelSlot {
+    /// Packed B panel (`pack_b` / `pack_b_dual` output bytes).
+    pub b: Vec<f32>,
+    /// Concatenated per-row-block A panels (`pack_a` / `pack_a_dual`
+    /// output bytes, one segment per executed row block). Empty on the
+    /// B-only schedule.
+    pub a: Vec<f32>,
+    /// `a_off[rb] .. a_off[rb + 1]` bounds row block `rb` inside `a`.
+    pub a_off: Vec<usize>,
+    /// Reused scratch for the per-row-block A pack (the pack routines
+    /// clear their output, so blocks are packed here, then appended).
+    scratch: Vec<f32>,
+}
+
+/// Pack the full A row-block stripe of one k block, segment per
+/// executed row block — byte-identical per segment to the `pack_a` the
+/// serial sweeps perform themselves.
+fn pack_a_stripe(a: &Matrix<f32>, bm: usize, p0: usize, kc: usize, slot: &mut PanelSlot) {
+    let m = a.rows();
+    slot.a.clear();
+    slot.a_off.clear();
+    slot.a_off.push(0);
+    let mut scratch = std::mem::take(&mut slot.scratch);
+    for i0 in (0..m).step_by(bm) {
+        let mc = bm.min(m - i0);
+        pack::pack_a(a, i0, mc, p0, kc, &mut scratch);
+        slot.a.extend_from_slice(&scratch);
+        slot.a_off.push(slot.a.len());
+    }
+    slot.scratch = scratch;
+}
+
+/// Dual-component counterpart of [`pack_a_stripe`] (`pack_a_dual` per
+/// row block).
+fn pack_a_stripe_dual(
+    ah: &Matrix<f32>,
+    al: &Matrix<f32>,
+    bm: usize,
+    p0: usize,
+    kc: usize,
+    slot: &mut PanelSlot,
+) {
+    let m = ah.rows();
+    slot.a.clear();
+    slot.a_off.clear();
+    slot.a_off.push(0);
+    let mut scratch = std::mem::take(&mut slot.scratch);
+    for i0 in (0..m).step_by(bm) {
+        let mc = bm.min(m - i0);
+        pack::pack_a_dual(ah, al, i0, mc, p0, kc, &mut scratch);
+        slot.a.extend_from_slice(&scratch);
+        slot.a_off.push(slot.a.len());
+    }
+    slot.scratch = scratch;
+}
+
+struct RingState {
+    n_jobs: usize,
+    /// Next job index to claim (claims are strictly in job order).
+    next_claim: usize,
+    /// Packed slots awaiting consumption (at most `depth − 1` entries).
+    ready: Vec<(usize, PanelSlot)>,
+    /// Idle slot buffers.
+    free: Vec<PanelSlot>,
+    /// Consumer is done (or unwinding); the prefetcher must exit.
+    shutdown: bool,
+    /// The prefetcher panicked mid-pack; the consumer must not wait.
+    poisoned: bool,
+}
+
+struct Ring {
+    state: Mutex<RingState>,
+    cv: Condvar,
+}
+
+impl Ring {
+    /// Poison-tolerant lock: ring invariants are maintained under the
+    /// lock only, and both sides must keep draining during unwinds.
+    fn lock(&self) -> MutexGuard<'_, RingState> {
+        self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    fn wait<'a>(&self, g: MutexGuard<'a, RingState>) -> MutexGuard<'a, RingState> {
+        self.cv.wait(g).unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+}
+
+/// Lifetime-erased `&P` of the pack closure, shipped into the detached
+/// prefetch task. Sound because packs only run for claimed jobs and the
+/// driver cancel-or-joins the task before its borrows end (module docs).
+struct RawPackFn {
+    data: *const (),
+    call: unsafe fn(*const (), usize, &mut PanelSlot),
+}
+unsafe impl Send for RawPackFn {}
+
+unsafe fn pack_thunk<P: Fn(usize, &mut PanelSlot)>(
+    data: *const (),
+    idx: usize,
+    slot: &mut PanelSlot,
+) {
+    (*(data as *const P))(idx, slot)
+}
+
+/// Body of the detached prefetch task: claim jobs in order whenever a
+/// free slot exists, pack off-thread, deliver to the ready list.
+fn prefetch_loop(ring: &Ring, raw: RawPackFn) {
+    loop {
+        let (idx, mut slot) = {
+            let mut st = ring.lock();
+            loop {
+                if st.shutdown || st.poisoned || st.next_claim >= st.n_jobs {
+                    return;
+                }
+                if let Some(slot) = st.free.pop() {
+                    let idx = st.next_claim;
+                    st.next_claim += 1;
+                    break (idx, slot);
+                }
+                st = ring.wait(st);
+            }
+        };
+        let r = catch_unwind(AssertUnwindSafe(|| unsafe {
+            (raw.call)(raw.data, idx, &mut slot)
+        }));
+        let mut st = ring.lock();
+        match r {
+            Ok(()) => st.ready.push((idx, slot)),
+            Err(_) => st.poisoned = true,
+        }
+        let poisoned = st.poisoned;
+        drop(st);
+        ring.cv.notify_all();
+        if poisoned {
+            return;
+        }
+    }
+}
+
+/// Drop guard of the consuming driver: stops the prefetcher and makes
+/// sure its closure can never run again before borrowed operands die —
+/// on normal return and on unwind alike.
+struct PrefetchGuard<'a> {
+    ring: &'a Arc<Ring>,
+    handle: Option<TaskHandle>,
+}
+
+impl Drop for PrefetchGuard<'_> {
+    fn drop(&mut self) {
+        self.ring.lock().shutdown = true;
+        self.ring.cv.notify_all();
+        if let Some(h) = self.handle.take() {
+            h.cancel_or_join();
+        }
+    }
+}
+
+/// Obtain job `s`'s packed slot: from the ready list if the prefetcher
+/// delivered it, by packing inline if it is still unclaimed, or by
+/// waiting iff the prefetcher is actively packing it right now.
+fn acquire_slot<P: Fn(usize, &mut PanelSlot)>(ring: &Ring, s: usize, pack: &P) -> PanelSlot {
+    let mut st = ring.lock();
+    loop {
+        if st.poisoned {
+            drop(st);
+            panic!("pipeline prefetch task panicked while packing panels");
+        }
+        if let Some(pos) = st.ready.iter().position(|(i, _)| *i == s) {
+            return st.ready.swap_remove(pos).1;
+        }
+        if st.next_claim == s {
+            st.next_claim += 1;
+            // Unclaimed job s means every earlier claim was delivered
+            // and consumed, so all ring buffers are back on the free
+            // list — a free slot must exist.
+            let mut slot = st.free.pop().expect("free ring slot for inline pack");
+            drop(st);
+            pack(s, &mut slot);
+            return slot;
+        }
+        st = ring.wait(st);
+    }
+}
+
+/// Run `consume` over every job's packed slot in order, with up to
+/// `depth − 1` future jobs packed ahead by a pool prefetch task.
+///
+/// `pack(i, slot)` must fill the slot for job `i` deterministically (it
+/// runs on the prefetch task *or* inline on the consumer); `consume`
+/// always runs on the calling thread, strictly in job order — which is
+/// what preserves the serial drivers' per-cell accumulation order and
+/// hence bit-identity.
+pub(crate) fn run_prefetch<P, C>(depth: usize, n_jobs: usize, pack: P, mut consume: C)
+where
+    P: Fn(usize, &mut PanelSlot) + Sync,
+    C: FnMut(usize, &PanelSlot),
+{
+    let depth = clamp_depth(depth);
+    let pool = pool::global();
+    if pool.n_workers() < 2 || n_jobs < 2 || depth < 2 {
+        // Nothing to overlap with (or overlap disabled by depth 1):
+        // degenerate to the serial pack-then-consume loop, one reused
+        // slot, no detached task.
+        let mut slot = PanelSlot::default();
+        for i in 0..n_jobs {
+            pack(i, &mut slot);
+            consume(i, &slot);
+        }
+        return;
+    }
+    let ring = Arc::new(Ring {
+        state: Mutex::new(RingState {
+            n_jobs,
+            next_claim: 0,
+            ready: Vec::new(),
+            free: (0..depth.min(n_jobs)).map(|_| PanelSlot::default()).collect(),
+            shutdown: false,
+            poisoned: false,
+        }),
+        cv: Condvar::new(),
+    });
+    let raw = RawPackFn { data: &pack as *const P as *const (), call: pack_thunk::<P> };
+    let handle = {
+        let ring = Arc::clone(&ring);
+        pool.submit(move || prefetch_loop(&ring, raw))
+    };
+    let _guard = PrefetchGuard { ring: &ring, handle: Some(handle) };
+    for s in 0..n_jobs {
+        let slot = acquire_slot(&ring, s, &pack);
+        consume(s, &slot);
+        ring.lock().free.push(slot);
+        ring.cv.notify_all();
+    }
+}
+
+/// Single-component overlapped-B driver — the pipeline counterpart of
+/// `blocked::gemm_blocked_core`, bit-identical by shared sweeps (the
+/// PR-3 schedule, now pool-backed).
+pub(crate) fn gemm_overlapped_core(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
+    gemm_pipeline_single(a, b, false, DEFAULT_PIPELINE_DEPTH)
+}
+
+/// Single-component overlapped-AB driver: B panel **and** A row-block
+/// stripe of the next block prefetched through a `depth`-slot ring.
+pub(crate) fn gemm_ab_core(a: &Matrix<f32>, b: &Matrix<f32>, depth: usize) -> Matrix<f32> {
+    gemm_pipeline_single(a, b, true, depth)
+}
+
+fn gemm_pipeline_single(a: &Matrix<f32>, b: &Matrix<f32>, ab: bool, depth: usize) -> Matrix<f32> {
+    let (m, k) = a.shape();
+    let n = b.cols();
+    let mut c = Matrix::zeros(m, n);
+    if m == 0 || n == 0 || k == 0 {
+        return c;
+    }
+    let block = host_block();
+    let bm = exec_bm(m, block.bm);
+    let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
+    let jobs = panel_jobs(n, k, block.bn, block.bk);
+    if ab {
+        run_prefetch(
+            depth,
+            jobs.len(),
+            |i: usize, slot: &mut PanelSlot| {
+                let job = &jobs[i];
+                pack::pack_b(b, job.p0, job.kc, job.j0, job.nc, &mut slot.b);
+                pack_a_stripe(a, bm, job.p0, job.kc, slot);
+            },
+            |i: usize, slot: &PanelSlot| {
+                let job = &jobs[i];
+                sweep_rows_f32_packed(&slot.a, &slot.a_off, m, &slot.b, &cp, n, bm, job.j0, job.kc);
+            },
+        );
+    } else {
+        run_prefetch(
+            depth,
+            jobs.len(),
+            |i: usize, slot: &mut PanelSlot| {
+                let job = &jobs[i];
+                pack::pack_b(b, job.p0, job.kc, job.j0, job.nc, &mut slot.b);
+            },
+            |i: usize, slot: &PanelSlot| {
+                let job = &jobs[i];
+                sweep_rows_f32(a, &slot.b, &cp, n, bm, job.j0, job.p0, job.kc);
+            },
+        );
+    }
+    c
+}
+
+/// Dual-component overlapped-B driver — the pipeline counterpart of
+/// `blocked::cube_blocked_core`.
+pub(crate) fn cube_overlapped_core(
+    ah: &Matrix<f32>,
+    al: &Matrix<f32>,
+    bh: &Matrix<f32>,
+    bl: &Matrix<f32>,
+    inv_sf: f32,
+) -> Matrix<f32> {
+    cube_pipeline_dual(ah, al, bh, bl, inv_sf, false, DEFAULT_PIPELINE_DEPTH)
+}
+
+/// Dual-component overlapped-AB driver.
+pub(crate) fn cube_ab_core(
+    ah: &Matrix<f32>,
+    al: &Matrix<f32>,
+    bh: &Matrix<f32>,
+    bl: &Matrix<f32>,
+    inv_sf: f32,
+    depth: usize,
+) -> Matrix<f32> {
+    cube_pipeline_dual(ah, al, bh, bl, inv_sf, true, depth)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn cube_pipeline_dual(
+    ah: &Matrix<f32>,
+    al: &Matrix<f32>,
+    bh: &Matrix<f32>,
+    bl: &Matrix<f32>,
+    inv_sf: f32,
+    ab: bool,
+    depth: usize,
+) -> Matrix<f32> {
+    let (m, k) = ah.shape();
+    let n = bh.cols();
+    let mut c = Matrix::zeros(m, n);
+    if m == 0 || n == 0 || k == 0 {
+        return c;
+    }
+    let block = host_block();
+    let bm = exec_bm(m, block.bm);
+    let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
+    let jobs = panel_jobs(n, k, block.bn, block.bk);
+    if ab {
+        run_prefetch(
+            depth,
+            jobs.len(),
+            |i: usize, slot: &mut PanelSlot| {
+                let job = &jobs[i];
+                pack::pack_b_dual(bh, bl, job.p0, job.kc, job.j0, job.nc, &mut slot.b);
+                pack_a_stripe_dual(ah, al, bm, job.p0, job.kc, slot);
+            },
+            |i: usize, slot: &PanelSlot| {
+                let job = &jobs[i];
+                sweep_rows_cube_packed(
+                    &slot.a, &slot.a_off, m, &slot.b, &cp, n, bm, job.j0, job.kc, inv_sf,
+                );
+            },
+        );
+    } else {
+        run_prefetch(
+            depth,
+            jobs.len(),
+            |i: usize, slot: &mut PanelSlot| {
+                let job = &jobs[i];
+                pack::pack_b_dual(bh, bl, job.p0, job.kc, job.j0, job.nc, &mut slot.b);
+            },
+            |i: usize, slot: &PanelSlot| {
+                let job = &jobs[i];
+                sweep_rows_cube(ah, al, &slot.b, &cp, n, bm, job.j0, job.p0, job.kc, inv_sf);
+            },
+        );
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn clamp_depth_window() {
+        assert_eq!(clamp_depth(0), 1);
+        assert_eq!(clamp_depth(1), 1);
+        assert_eq!(clamp_depth(2), 2);
+        assert_eq!(clamp_depth(100), MAX_PIPELINE_DEPTH);
+    }
+
+    #[test]
+    fn panel_jobs_cover_the_nest_in_order() {
+        let jobs = panel_jobs(70, 130, 32, 64);
+        // n=70/bn=32 → j0 in {0,32,64}; k=130/bk=64 → p0 in {0,64,128}.
+        assert_eq!(jobs.len(), 9);
+        assert_eq!(jobs[0], PanelJob { jb: 0, pb: 0, j0: 0, nc: 32, p0: 0, kc: 64 });
+        assert_eq!(jobs[2], PanelJob { jb: 0, pb: 2, j0: 0, nc: 32, p0: 128, kc: 2 });
+        assert_eq!(jobs[8], PanelJob { jb: 2, pb: 2, j0: 64, nc: 6, p0: 128, kc: 2 });
+        for w in jobs.windows(2) {
+            assert!((w[0].jb, w[0].pb) < (w[1].jb, w[1].pb));
+        }
+        assert!(panel_jobs(0, 64, 32, 32).is_empty());
+        assert!(panel_jobs(64, 0, 32, 32).is_empty());
+    }
+
+    #[test]
+    fn run_prefetch_delivers_every_job_in_order_at_every_depth() {
+        for depth in [1usize, 2, 3, 4] {
+            let mut seen = Vec::new();
+            run_prefetch(
+                depth,
+                9,
+                |i: usize, slot: &mut PanelSlot| {
+                    slot.b.clear();
+                    slot.b.push(i as f32);
+                },
+                |i: usize, slot: &PanelSlot| {
+                    assert_eq!(slot.b, vec![i as f32], "depth {depth}");
+                    seen.push(i);
+                },
+            );
+            assert_eq!(seen, (0..9).collect::<Vec<_>>(), "depth {depth}");
+        }
+        // Empty and single-job rings.
+        let mut count = 0;
+        run_prefetch(2, 0, |_: usize, _: &mut PanelSlot| {}, |_: usize, _: &PanelSlot| count += 1);
+        assert_eq!(count, 0);
+        run_prefetch(3, 1, |_: usize, _: &mut PanelSlot| {}, |_: usize, _: &PanelSlot| count += 1);
+        assert_eq!(count, 1);
+    }
+
+    #[test]
+    fn prefetched_slots_byte_match_serial_packs() {
+        let mut rng = Rng::new(91);
+        let a = Matrix::random_symmetric(37, 100, 0, &mut rng);
+        let b = Matrix::random_symmetric(100, 50, 0, &mut rng);
+        let jobs = panel_jobs(50, 100, 16, 32);
+        let bm = 8;
+        // Serial reference: pack_b plus the per-row-block pack_a stripe.
+        let mut want = Vec::new();
+        for job in &jobs {
+            let mut bp = Vec::new();
+            pack::pack_b(&b, job.p0, job.kc, job.j0, job.nc, &mut bp);
+            let mut ap = Vec::new();
+            let mut tmp = Vec::new();
+            for i0 in (0..a.rows()).step_by(bm) {
+                let mc = bm.min(a.rows() - i0);
+                pack::pack_a(&a, i0, mc, job.p0, job.kc, &mut tmp);
+                ap.extend_from_slice(&tmp);
+            }
+            want.push((bp, ap));
+        }
+        let mut got: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+        run_prefetch(
+            3,
+            jobs.len(),
+            |i: usize, slot: &mut PanelSlot| {
+                let job = &jobs[i];
+                pack::pack_b(&b, job.p0, job.kc, job.j0, job.nc, &mut slot.b);
+                pack_a_stripe(&a, bm, job.p0, job.kc, slot);
+            },
+            |_: usize, slot: &PanelSlot| got.push((slot.b.clone(), slot.a.clone())),
+        );
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.0, w.0, "prefetched B panel differs from serial pack");
+            assert_eq!(g.1, w.1, "prefetched A stripe differs from serial packs");
+        }
+    }
+
+    #[test]
+    fn pack_a_stripe_offsets_bound_row_blocks() {
+        let mut rng = Rng::new(92);
+        let a = Matrix::random_symmetric(21, 16, 0, &mut rng);
+        let mut slot = PanelSlot::default();
+        pack_a_stripe(&a, 8, 0, 16, &mut slot);
+        // 21 rows / bm=8 → 3 row blocks (8, 8, 5 rows).
+        assert_eq!(slot.a_off.len(), 4);
+        assert_eq!(slot.a_off[0], 0);
+        assert_eq!(*slot.a_off.last().unwrap(), slot.a.len());
+        let mut tmp = Vec::new();
+        pack::pack_a(&a, 16, 5, 0, 16, &mut tmp);
+        assert_eq!(&slot.a[slot.a_off[2]..slot.a_off[3]], &tmp[..]);
+    }
+
+    #[test]
+    fn pack_panic_propagates_to_the_consumer() {
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            run_prefetch(
+                2,
+                4,
+                |i: usize, _: &mut PanelSlot| {
+                    if i == 2 {
+                        panic!("pack blew up");
+                    }
+                },
+                |_: usize, _: &PanelSlot| {},
+            );
+        }));
+        // Whether job 2 was packed inline (original payload) or by the
+        // prefetch task (ring-poisoned report), the consumer panics.
+        assert!(r.is_err(), "pack panic must reach the consumer");
+    }
+}

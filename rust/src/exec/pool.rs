@@ -1,0 +1,529 @@
+//! Persistent worker pool — one fixed thread population for blocked
+//! sweeps, pipeline prefetch and the serving tier.
+//!
+//! Before this subsystem the repo ran three uncoordinated thread
+//! populations: a `std::thread::scope` spawn/join round per `(j, k)`
+//! block sweep (`util::threads::parallel_chunks`), a fresh prefetch
+//! thread per overlapped GEMM call (`gemm::overlap`), and a resident
+//! worker set per `GemmService`. Under concurrent serving load those
+//! multiply into `cores × requests` runnable threads. The pool replaces
+//! all three with **one** lazily-initialized population of
+//! `num_threads()` workers ([`global`]) that lives for the process:
+//!
+//! * [`Pool::run_chunks`] — the scoped data-parallel primitive with the
+//!   exact disjoint-chunk contract of the old `parallel_chunks`
+//!   (same chunking, same `Sync` requirements), executed by pool
+//!   workers **and the calling thread together**. The caller
+//!   participates in draining the chunk batch, so a saturated (or
+//!   single-worker) pool can never deadlock a sweep — worst case the
+//!   caller runs every chunk itself, which is the old serial
+//!   degeneration with zero spawn cost.
+//! * [`Pool::submit`] — detached jobs (pipeline prefetch, service
+//!   batches) pushed to a shared injector queue, with a [`TaskHandle`]
+//!   that can observe, cancel-before-start, or join the job.
+//!
+//! Queue discipline: one injector ([`Pool::submit`]) plus one queue per
+//! worker ([`Pool::run_chunks`] enlists every worker through its own
+//! queue). Workers prefer their own queue, so sweep chunks — latency
+//! critical, caller blocked — jump ahead of queued detached jobs. All
+//! queues hang off a single mutex: tasks are block-granular (a chunk
+//! batch, a panel pack, a request batch), so the lock is cold compared
+//! to the work it hands out.
+//!
+//! Panic discipline: a panic inside a `run_chunks` closure is caught on
+//! the executing thread, the batch still completes, and the first
+//! payload is re-thrown on the **calling** thread (same observable
+//! behaviour as the old scoped spawn). A panic inside a detached job is
+//! caught and swallowed by the worker — detached submitters own their
+//! own failure signalling (the pipeline ring poisons itself, the
+//! service replies with a typed error) — and the worker thread
+//! survives.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Observable lifecycle of a detached task submitted with
+/// [`Pool::submit`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskState {
+    /// In the injector, not yet picked up by a worker.
+    Queued,
+    /// A worker is executing it.
+    Running,
+    /// Finished (including by panic — detached panics are swallowed).
+    Done,
+    /// Removed from the queue by [`TaskHandle::cancel_or_join`] before
+    /// any worker started it; the closure never ran.
+    Cancelled,
+}
+
+struct StatusCell {
+    state: Mutex<TaskState>,
+    changed: Condvar,
+}
+
+/// Handle to a detached task. Dropping it detaches the task for good.
+pub struct TaskHandle {
+    cell: Arc<StatusCell>,
+    shared: Arc<Shared>,
+}
+
+impl TaskHandle {
+    /// Current lifecycle state.
+    pub fn state(&self) -> TaskState {
+        *self.cell.state.lock().unwrap()
+    }
+
+    /// Cancel the task if it has not started (it will then never run),
+    /// otherwise wait for it to finish. On return the task's closure is
+    /// guaranteed to not be running and to never run again — the
+    /// property scoped users (the pipeline ring) need before letting
+    /// borrowed data go out of scope. Never blocks behind *other*
+    /// queued tasks: a still-queued task is removed, not waited for.
+    pub fn cancel_or_join(&self) -> TaskState {
+        {
+            let mut q = self.shared.state.lock().unwrap();
+            let before = q.injector.len();
+            q.injector.retain(|t| match &t.status {
+                Some(c) => !Arc::ptr_eq(c, &self.cell),
+                None => true,
+            });
+            if q.injector.len() < before {
+                let mut st = self.cell.state.lock().unwrap();
+                *st = TaskState::Cancelled;
+                self.cell.changed.notify_all();
+                return TaskState::Cancelled;
+            }
+        }
+        self.join()
+    }
+
+    /// Block until the task finished (or was cancelled).
+    pub fn join(&self) -> TaskState {
+        let mut st = self.cell.state.lock().unwrap();
+        while !matches!(*st, TaskState::Done | TaskState::Cancelled) {
+            st = self.cell.changed.wait(st).unwrap();
+        }
+        *st
+    }
+}
+
+struct Task {
+    run: Box<dyn FnOnce() + Send + 'static>,
+    /// Present for handle-carrying detached jobs; `run_chunks`
+    /// participants are anonymous.
+    status: Option<Arc<StatusCell>>,
+}
+
+struct Queues {
+    injector: VecDeque<Task>,
+    worker: Vec<VecDeque<Task>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<Queues>,
+    work: Condvar,
+    /// Tasks currently executing on pool workers (caller participation
+    /// in `run_chunks` is not counted — it spends the caller's thread,
+    /// not a pool worker).
+    active: AtomicUsize,
+    /// High-water mark of `active`; by construction it can never exceed
+    /// the worker count — exposed so tests can pin that invariant.
+    high_water: AtomicUsize,
+}
+
+/// A fixed-size persistent worker pool. See the module docs; most code
+/// uses the process-wide [`global`] instance via
+/// [`crate::util::threads::parallel_chunks`].
+pub struct Pool {
+    shared: Arc<Shared>,
+    n_workers: usize,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Pool {
+    /// Spawn a pool with `n_workers` threads (clamped to at least one).
+    pub fn new(n_workers: usize) -> Pool {
+        let n = n_workers.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(Queues {
+                injector: VecDeque::new(),
+                worker: (0..n).map(|_| VecDeque::new()).collect(),
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            active: AtomicUsize::new(0),
+            high_water: AtomicUsize::new(0),
+        });
+        let mut handles = Vec::with_capacity(n);
+        for w in 0..n {
+            let shared = Arc::clone(&shared);
+            let h = std::thread::Builder::new()
+                .name(format!("sgemm-pool-{w}"))
+                .spawn(move || worker_main(&shared, w))
+                .expect("spawning pool worker thread");
+            handles.push(h);
+        }
+        Pool { shared, n_workers: n, handles: Mutex::new(handles) }
+    }
+
+    /// Number of worker threads (fixed at construction).
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    /// Tasks currently executing on pool workers.
+    pub fn active(&self) -> usize {
+        self.shared.active.load(Ordering::SeqCst)
+    }
+
+    /// High-water mark of concurrently executing pool-worker tasks;
+    /// `high_water() <= n_workers()` always holds.
+    pub fn high_water(&self) -> usize {
+        self.shared.high_water.load(Ordering::SeqCst)
+    }
+
+    /// Submit a detached job to the injector queue. It runs exactly once
+    /// on some worker (unless cancelled first via the returned handle).
+    pub fn submit(&self, f: impl FnOnce() + Send + 'static) -> TaskHandle {
+        let cell = Arc::new(StatusCell {
+            state: Mutex::new(TaskState::Queued),
+            changed: Condvar::new(),
+        });
+        {
+            let mut q = self.shared.state.lock().unwrap();
+            q.injector.push_back(Task { run: Box::new(f), status: Some(Arc::clone(&cell)) });
+        }
+        self.shared.work.notify_all();
+        TaskHandle { cell, shared: Arc::clone(&self.shared) }
+    }
+
+    /// Run `f(start, end)` over disjoint chunks of `0..n`, blocking
+    /// until every chunk completed — the drop-in contract of the old
+    /// scoped `parallel_chunks` (same chunk geometry: up to
+    /// `n_workers` contiguous chunks of `ceil(n / workers)`), without
+    /// the per-call spawn/join round.
+    ///
+    /// The calling thread participates in draining the batch, so this
+    /// never deadlocks regardless of pool saturation or nesting (a
+    /// pool worker may itself call `run_chunks`). `f` must be `Sync`;
+    /// disjoint-output safety (e.g. raw-pointer writes per index range)
+    /// remains the caller's responsibility, exactly as before.
+    ///
+    /// A panic inside `f` is re-thrown on the calling thread with its
+    /// original payload once the batch has fully completed.
+    pub fn run_chunks<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        let workers = self.n_workers.min(n.max(1));
+        if workers <= 1 || n == 0 {
+            f(0, n);
+            return;
+        }
+        let chunk = n.div_ceil(workers);
+        let n_chunks = n.div_ceil(chunk);
+        let batch = Arc::new(ChunkBatch {
+            raw: RawChunkFn { data: &f as *const F as *const (), call: chunk_thunk::<F> },
+            n,
+            chunk,
+            n_chunks,
+            next: AtomicUsize::new(0),
+            remaining: Mutex::new(n_chunks),
+            finished: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        {
+            // One participant per chunk is enough — the caller is an
+            // extra executor on top, and with this module's chunk math
+            // n_chunks <= n_workers, so large batches still enlist
+            // every worker. (Workers not enlisted can't help, but the
+            // caller's own drain bounds the worst case.)
+            let mut q = self.shared.state.lock().unwrap();
+            for wq in q.worker.iter_mut().take(n_chunks) {
+                let b = Arc::clone(&batch);
+                wq.push_back(Task { run: Box::new(move || b.drain()), status: None });
+            }
+        }
+        self.shared.work.notify_all();
+        // The caller participates: claim and run chunks until none are
+        // left unclaimed...
+        batch.drain();
+        // ...then wait out the chunks other workers claimed.
+        let mut rem = batch.remaining.lock().unwrap();
+        while *rem > 0 {
+            rem = batch.finished.wait(rem).unwrap();
+        }
+        drop(rem);
+        if let Some(payload) = batch.panic.lock().unwrap().take() {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.work.notify_all();
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_main(shared: &Arc<Shared>, me: usize) {
+    loop {
+        let task = {
+            let mut q = shared.state.lock().unwrap();
+            loop {
+                // Own queue first: sweep chunks (a blocked caller) beat
+                // queued detached jobs.
+                if let Some(t) = q.worker[me].pop_front() {
+                    break t;
+                }
+                if let Some(t) = q.injector.pop_front() {
+                    break t;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.work.wait(q).unwrap();
+            }
+        };
+        if let Some(cell) = &task.status {
+            *cell.state.lock().unwrap() = TaskState::Running;
+            cell.changed.notify_all();
+        }
+        let active = shared.active.fetch_add(1, Ordering::SeqCst) + 1;
+        shared.high_water.fetch_max(active, Ordering::SeqCst);
+        let status = task.status;
+        // Detached panics are contained here (the submitter signals its
+        // own failures); run_chunks participants contain theirs in
+        // ChunkBatch::drain and re-throw on the caller.
+        let _ = catch_unwind(AssertUnwindSafe(task.run));
+        shared.active.fetch_sub(1, Ordering::SeqCst);
+        if let Some(cell) = status {
+            *cell.state.lock().unwrap() = TaskState::Done;
+            cell.changed.notify_all();
+        }
+    }
+}
+
+/// Lifetime-erased `&F` of a chunk closure. Safety argument: the only
+/// dereference site is [`ChunkBatch::drain`], gated on claiming a chunk
+/// index below `n_chunks` — and the submitting caller stays blocked in
+/// [`Pool::run_chunks`] until every claimed chunk has finished, so the
+/// referent outlives every dereference. Stale participant tasks popped
+/// after the batch completed observe `next >= n_chunks` and never touch
+/// the pointer.
+struct RawChunkFn {
+    data: *const (),
+    call: unsafe fn(*const (), usize, usize),
+}
+unsafe impl Send for RawChunkFn {}
+unsafe impl Sync for RawChunkFn {}
+
+unsafe fn chunk_thunk<F: Fn(usize, usize)>(data: *const (), start: usize, end: usize) {
+    (*(data as *const F))(start, end)
+}
+
+struct ChunkBatch {
+    raw: RawChunkFn,
+    n: usize,
+    chunk: usize,
+    n_chunks: usize,
+    next: AtomicUsize,
+    remaining: Mutex<usize>,
+    finished: Condvar,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl ChunkBatch {
+    /// Claim and run chunks until none remain unclaimed. Runs on pool
+    /// workers and on the submitting caller alike.
+    fn drain(&self) {
+        loop {
+            let idx = self.next.fetch_add(1, Ordering::SeqCst);
+            if idx >= self.n_chunks {
+                return;
+            }
+            let start = idx * self.chunk;
+            let end = ((idx + 1) * self.chunk).min(self.n);
+            // SAFETY: idx < n_chunks, so the submitting caller is still
+            // blocked in run_chunks and the erased closure is alive
+            // (see RawChunkFn).
+            let r = catch_unwind(AssertUnwindSafe(|| unsafe {
+                (self.raw.call)(self.raw.data, start, end)
+            }));
+            if let Err(payload) = r {
+                let mut slot = self.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+            let mut rem = self.remaining.lock().unwrap();
+            *rem -= 1;
+            if *rem == 0 {
+                self.finished.notify_all();
+            }
+        }
+    }
+}
+
+/// The process-wide pool, created on first use and sized **once** from
+/// [`crate::util::threads::num_threads`] (`SGEMM_CUBE_THREADS` override,
+/// else available parallelism). Every blocked sweep, pipeline prefetch
+/// and (by default) serving batch runs here.
+pub fn global() -> &'static Pool {
+    static GLOBAL: OnceLock<Pool> = OnceLock::new();
+    GLOBAL.get_or_init(|| Pool::new(crate::util::threads::num_threads()))
+}
+
+/// Spawn a dedicated named **control** thread (service dispatchers and
+/// similar long-lived loops that mostly block on channels). Control
+/// threads must not run on pool workers — parking a worker on a channel
+/// for the process lifetime would permanently shrink the compute pool —
+/// so this is the sanctioned escape hatch that keeps direct
+/// `std::thread::spawn` calls out of the serving and engine layers.
+pub fn spawn_named<F>(name: &str, f: F) -> JoinHandle<()>
+where
+    F: FnOnce() + Send + 'static,
+{
+    std::thread::Builder::new()
+        .name(name.to_string())
+        .spawn(f)
+        .expect("spawning control thread")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn run_chunks_covers_all_indices_once() {
+        let pool = Pool::new(4);
+        let counter = AtomicUsize::new(0);
+        pool.run_chunks(1000, |s, e| {
+            counter.fetch_add(e - s, Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 1000);
+        // Zero and one-element ranges take the serial path.
+        pool.run_chunks(0, |s, e| assert_eq!((s, e), (0, 0)));
+        let hit = AtomicUsize::new(0);
+        pool.run_chunks(1, |s, e| {
+            assert_eq!((s, e), (0, 1));
+            hit.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hit.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn run_chunks_nests_without_deadlock() {
+        // A chunk closure that itself fans out on the same pool: the
+        // caller-participation design must keep making progress even
+        // when every worker is already busy with the outer batch.
+        let pool = Pool::new(2);
+        let counter = AtomicUsize::new(0);
+        pool.run_chunks(4, |s, e| {
+            for _ in s..e {
+                pool.run_chunks(8, |s2, e2| {
+                    counter.fetch_add(e2 - s2, Ordering::SeqCst);
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn run_chunks_propagates_panic_payload() {
+        let pool = Pool::new(2);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_chunks(10, |s, _| {
+                if s == 0 {
+                    panic!("boom in chunk");
+                }
+            });
+        }));
+        let payload = r.expect_err("panic must propagate to the caller");
+        assert_eq!(payload.downcast_ref::<&str>(), Some(&"boom in chunk"));
+        // The pool survives the panic and keeps serving.
+        let counter = AtomicUsize::new(0);
+        pool.run_chunks(100, |s, e| {
+            counter.fetch_add(e - s, Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn submit_runs_detached_and_joins() {
+        let pool = Pool::new(2);
+        let (tx, rx) = channel();
+        let h = pool.submit(move || {
+            tx.send(42u32).unwrap();
+        });
+        assert_eq!(rx.recv().unwrap(), 42);
+        assert_eq!(h.join(), TaskState::Done);
+        assert_eq!(h.state(), TaskState::Done);
+    }
+
+    #[test]
+    fn cancel_before_start_never_runs() {
+        // One worker, blocked on a gate: the second task stays queued
+        // and must be cancellable without ever running.
+        let pool = Pool::new(1);
+        let (gate_tx, gate_rx) = channel::<()>();
+        let blocker = pool.submit(move || {
+            gate_rx.recv().unwrap();
+        });
+        let ran = Arc::new(AtomicUsize::new(0));
+        let ran2 = Arc::clone(&ran);
+        let victim = pool.submit(move || {
+            ran2.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(victim.cancel_or_join(), TaskState::Cancelled);
+        gate_tx.send(()).unwrap();
+        assert_eq!(blocker.join(), TaskState::Done);
+        assert_eq!(ran.load(Ordering::SeqCst), 0, "cancelled task must never run");
+        // cancel_or_join on a finished task degenerates to join.
+        assert_eq!(blocker.cancel_or_join(), TaskState::Done);
+    }
+
+    #[test]
+    fn high_water_never_exceeds_worker_count() {
+        let pool = Pool::new(3);
+        for _ in 0..5 {
+            let counter = AtomicUsize::new(0);
+            pool.run_chunks(300, |s, e| {
+                counter.fetch_add(e - s, Ordering::SeqCst);
+            });
+            assert_eq!(counter.load(Ordering::SeqCst), 300);
+        }
+        assert!(pool.high_water() <= pool.n_workers(), "{}", pool.high_water());
+        assert_eq!(pool.n_workers(), 3);
+    }
+
+    #[test]
+    fn detached_panic_does_not_kill_workers() {
+        let pool = Pool::new(1);
+        let h = pool.submit(|| panic!("detached boom"));
+        assert_eq!(h.join(), TaskState::Done);
+        // The single worker survived and still executes work.
+        let (tx, rx) = channel();
+        pool.submit(move || tx.send(7u8).unwrap());
+        assert_eq!(rx.recv().unwrap(), 7);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_sized_from_num_threads() {
+        let p1 = global();
+        let p2 = global();
+        assert!(std::ptr::eq(p1, p2));
+        assert_eq!(p1.n_workers(), crate::util::threads::num_threads().max(1));
+    }
+}

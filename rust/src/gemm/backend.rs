@@ -4,6 +4,7 @@
 //! paths at runtime; `Backend` names them and [`GemmBackend`] executes
 //! them with one call signature.
 
+use crate::exec::pipeline::DEFAULT_PIPELINE_DEPTH;
 use crate::gemm::cube::{cube_gemm, Accumulation};
 use crate::gemm::hgemm::{hgemm, AccumulateMode};
 use crate::gemm::sgemm::sgemm;
@@ -70,6 +71,87 @@ impl std::fmt::Display for Backend {
     }
 }
 
+/// Host execution schedule of the blocked engine's panel loop. Every
+/// schedule produces **bit-identical** results (same pack routines,
+/// same block order, same shared sweeps) — this knob only selects how
+/// much operand movement is hidden behind compute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Schedule {
+    /// Pack-then-sweep on the critical path (the serial nest).
+    Serial,
+    /// Double-buffered B-panel prefetch: the next `(j, k)` B panel is
+    /// packed by a pool prefetch job while the sweeps consume the
+    /// current one (the paper's Fig. 7 B stream).
+    OverlapB,
+    /// A+B dual-panel prefetch: the next block's B panel **and** A
+    /// row-block stripe are packed ahead through a depth-configurable
+    /// ring ([`crate::exec::pipeline`]); the consuming sweeps run
+    /// kernel-only.
+    OverlapAB,
+}
+
+impl Schedule {
+    pub const ALL: [Schedule; 3] = [Schedule::Serial, Schedule::OverlapB, Schedule::OverlapAB];
+
+    /// Stable identifier used by the CLI/config layer.
+    pub fn name(self) -> &'static str {
+        match self {
+            Schedule::Serial => "serial",
+            Schedule::OverlapB => "overlap-b",
+            Schedule::OverlapAB => "overlap-ab",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Schedule> {
+        match s {
+            "serial" => Some(Schedule::Serial),
+            "overlap-b" | "overlap" => Some(Schedule::OverlapB),
+            "overlap-ab" | "ab" => Some(Schedule::OverlapAB),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Schedule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The process default schedule, resolved **once**: the
+/// `SGEMM_CUBE_SCHEDULE` env knob (`serial` / `overlap-b` /
+/// `overlap-ab`) when set to a recognized value, else the legacy
+/// `SGEMM_CUBE_OVERLAP` boolean toggle mapped to
+/// [`Schedule::OverlapB`], else [`Schedule::Serial`].
+pub fn default_schedule() -> Schedule {
+    static DEFAULT: std::sync::OnceLock<Schedule> = std::sync::OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        let fallback = || {
+            if crate::gemm::overlap::overlap_enabled() {
+                Schedule::OverlapB
+            } else {
+                Schedule::Serial
+            }
+        };
+        match std::env::var("SGEMM_CUBE_SCHEDULE") {
+            Ok(v) => match Schedule::parse(v.trim()) {
+                Some(s) => s,
+                None => {
+                    // Unlike the config-file path (which hard-errors),
+                    // an env typo cannot abort every binary that links
+                    // the engine — but it must not fail silently either.
+                    eprintln!(
+                        "warning: SGEMM_CUBE_SCHEDULE={v:?} not recognized \
+                         (expected serial, overlap-b or overlap-ab); using the default schedule"
+                    );
+                    fallback()
+                }
+            },
+            Err(_) => fallback(),
+        }
+    })
+}
+
 /// Executable GEMM backend with its numeric configuration.
 #[derive(Debug, Clone)]
 pub struct GemmBackend {
@@ -83,11 +165,15 @@ pub struct GemmBackend {
     /// Set `false` for the bit-faithful single-chain accumulation order
     /// the accuracy experiments study.
     pub fast: bool,
-    /// Run the hot path through the overlapped (double-buffered) b_k
-    /// pipeline (`crate::gemm::overlap`): the next B panel is packed by
-    /// a prefetch worker while the current one is consumed. Results are
-    /// bit-identical; defaults to the `SGEMM_CUBE_OVERLAP` env toggle.
-    pub overlap: bool,
+    /// Host schedule of the hot path (serial / overlapped-B /
+    /// overlapped-AB; bit-identical results either way). Defaults to
+    /// [`default_schedule`] (`SGEMM_CUBE_SCHEDULE` /
+    /// `SGEMM_CUBE_OVERLAP` env knobs).
+    pub schedule: Schedule,
+    /// Prefetch-ring depth for [`Schedule::OverlapAB`] (clamped into
+    /// `[1, MAX_PIPELINE_DEPTH]` by the pipeline; depth 2 = classic
+    /// double buffer).
+    pub pipeline_depth: usize,
 }
 
 impl GemmBackend {
@@ -97,7 +183,8 @@ impl GemmBackend {
             split: SplitConfig::default(),
             accumulate: AccumulateMode::Fp32Rn,
             fast: true,
-            overlap: crate::gemm::overlap::overlap_enabled(),
+            schedule: default_schedule(),
+            pipeline_depth: DEFAULT_PIPELINE_DEPTH,
         }
     }
 
@@ -106,9 +193,23 @@ impl GemmBackend {
         self
     }
 
-    /// Select the overlapped (prefetching) schedule for the hot path.
+    /// Legacy boolean schedule selector: `true` = overlapped-B
+    /// prefetch, `false` = serial. Kept for the PR-3 call sites;
+    /// [`GemmBackend::with_schedule`] is the full knob.
     pub fn with_overlap(mut self, overlap: bool) -> GemmBackend {
-        self.overlap = overlap;
+        self.schedule = if overlap { Schedule::OverlapB } else { Schedule::Serial };
+        self
+    }
+
+    /// Select the host execution schedule for the hot path.
+    pub fn with_schedule(mut self, schedule: Schedule) -> GemmBackend {
+        self.schedule = schedule;
+        self
+    }
+
+    /// Prefetch-ring depth used by [`Schedule::OverlapAB`].
+    pub fn with_pipeline_depth(mut self, depth: usize) -> GemmBackend {
+        self.pipeline_depth = depth;
         self
     }
 
@@ -125,18 +226,27 @@ impl GemmBackend {
             // The elementwise/termwise distinction is an accuracy-
             // experiment concern; the hot path serves the paper's
             // default (termwise) structure through the blocked fused
-            // three-term kernel — serial or overlapped schedule, same
-            // bits either way.
-            return match (self.backend, self.overlap) {
-                (Backend::Fp32, false) => blocked::sgemm_blocked(a, b),
-                (Backend::Fp32, true) => blocked::sgemm_blocked_overlapped(a, b),
-                (Backend::Fp16, false) => blocked::hgemm_blocked(a, b),
-                (Backend::Fp16, true) => blocked::hgemm_blocked_overlapped(a, b),
-                (Backend::CubeElementwise | Backend::CubeTermwise, false) => {
+            // three-term kernel — any schedule, same bits either way.
+            let d = self.pipeline_depth;
+            return match (self.backend, self.schedule) {
+                (Backend::Fp32, Schedule::Serial) => blocked::sgemm_blocked(a, b),
+                (Backend::Fp32, Schedule::OverlapB) => blocked::sgemm_blocked_overlapped(a, b),
+                (Backend::Fp32, Schedule::OverlapAB) => {
+                    blocked::sgemm_blocked_overlapped_ab(a, b, d)
+                }
+                (Backend::Fp16, Schedule::Serial) => blocked::hgemm_blocked(a, b),
+                (Backend::Fp16, Schedule::OverlapB) => blocked::hgemm_blocked_overlapped(a, b),
+                (Backend::Fp16, Schedule::OverlapAB) => {
+                    blocked::hgemm_blocked_overlapped_ab(a, b, d)
+                }
+                (Backend::CubeElementwise | Backend::CubeTermwise, Schedule::Serial) => {
                     blocked::cube_gemm_blocked(a, b, self.split)
                 }
-                (Backend::CubeElementwise | Backend::CubeTermwise, true) => {
+                (Backend::CubeElementwise | Backend::CubeTermwise, Schedule::OverlapB) => {
                     blocked::cube_gemm_blocked_overlapped(a, b, self.split)
+                }
+                (Backend::CubeElementwise | Backend::CubeTermwise, Schedule::OverlapAB) => {
+                    blocked::cube_gemm_blocked_overlapped_ab(a, b, self.split, d)
                 }
             };
         }
@@ -209,5 +319,55 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits(), "{bk}");
             }
         }
+    }
+
+    #[test]
+    fn every_schedule_is_bit_identical_per_backend() {
+        let mut rng = Rng::new(22);
+        let a = Matrix::random_symmetric(19, 140, 0, &mut rng);
+        let b = Matrix::random_symmetric(140, 21, 0, &mut rng);
+        for bk in Backend::ALL {
+            let serial = GemmBackend::new(bk).with_schedule(Schedule::Serial).gemm(&a, &b);
+            for schedule in Schedule::ALL {
+                for depth in [1usize, 3] {
+                    let c = GemmBackend::new(bk)
+                        .with_schedule(schedule)
+                        .with_pipeline_depth(depth)
+                        .gemm(&a, &b);
+                    for (x, y) in serial.as_slice().iter().zip(c.as_slice()) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "{bk} {schedule} depth {depth}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_name_parse_roundtrip() {
+        for s in Schedule::ALL {
+            assert_eq!(Schedule::parse(s.name()), Some(s));
+        }
+        assert_eq!(Schedule::parse("overlap"), Some(Schedule::OverlapB));
+        assert_eq!(Schedule::parse("ab"), Some(Schedule::OverlapAB));
+        assert_eq!(Schedule::parse("nope"), None);
+        // with_overlap maps onto the schedule knob.
+        let g = GemmBackend::new(Backend::Fp32).with_overlap(true);
+        assert_eq!(g.schedule, Schedule::OverlapB);
+        let g = g.with_overlap(false);
+        assert_eq!(g.schedule, Schedule::Serial);
+        // The process default agrees with the env-derived resolution.
+        let want = match std::env::var("SGEMM_CUBE_SCHEDULE").ok().and_then(|v| {
+            Schedule::parse(v.trim())
+        }) {
+            Some(s) => s,
+            None => {
+                if crate::gemm::overlap::overlap_enabled() {
+                    Schedule::OverlapB
+                } else {
+                    Schedule::Serial
+                }
+            }
+        };
+        assert_eq!(default_schedule(), want);
     }
 }

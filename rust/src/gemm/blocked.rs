@@ -30,12 +30,18 @@
 //! aggregate among themselves before meeting the high product, which is
 //! the property Sec. 4.4 actually needs.
 //!
-//! Parallelism: one `parallel_chunks` round of scoped threads per
-//! `(b_n, b_k)` block, so every thread reads the same freshly packed B
-//! panel. The spawn/join cost is a few µs per round — ≲1% of the block's
-//! micro-kernel work at serving sizes — and buys a pool-free design; a
-//! persistent worker pool is the upgrade path if profiles ever show the
-//! barrier. The model's `b_m` is an *upper* bound on the row-block
+//! Parallelism: one `parallel_chunks` round per `(b_n, b_k)` block, so
+//! every thread reads the same freshly packed B panel. Rounds execute
+//! on the **persistent worker pool** ([`crate::exec::pool`]) — the
+//! calling thread participates and the pool threads live for the
+//! process, so the per-round cost is a queue push per worker instead of
+//! a spawn/join, and concurrent GEMM calls share one thread population
+//! instead of oversubscribing the host (the fig11 bench records the
+//! round-trip as `exec/pool_spawn_overhead_ns`). The prefetching
+//! schedules ride the same pool: `*_overlapped` (B panel prefetch) and
+//! `*_overlapped_ab` (B panel + A row-block stripe prefetch through a
+//! depth-configurable ring, [`crate::exec::pipeline`]).
+//! The model's `b_m` is an *upper* bound on the row-block
 //! grain: when `m` is too small to give every worker a `b_m` block, the
 //! executed row block shrinks (to an `MR` multiple) so the engine keeps
 //! all cores busy — `b_m` governs packing/cache reuse, not the thread
@@ -56,6 +62,7 @@
 
 use std::sync::OnceLock;
 
+use crate::exec::pipeline;
 use crate::gemm::cube::WideSplit;
 use crate::gemm::overlap;
 use crate::gemm::pack::{self, MR, NR};
@@ -142,7 +149,7 @@ pub fn cube_gemm_blocked_split(a: &WideSplit, b: &WideSplit) -> Matrix<f32> {
 /// block order, same shared sweeps.
 pub fn sgemm_blocked_overlapped(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
     assert_eq!(a.cols(), b.rows(), "inner dimensions must match: {} vs {}", a.cols(), b.rows());
-    overlap::gemm_overlapped_core(a, b)
+    pipeline::gemm_overlapped_core(a, b)
 }
 
 /// FP16 Cube GEMM through the overlapped pipeline; bit-identical to
@@ -151,7 +158,7 @@ pub fn hgemm_blocked_overlapped(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32>
     assert_eq!(a.cols(), b.rows(), "inner dimensions must match: {} vs {}", a.cols(), b.rows());
     let ah = a.map(|v| F16::from_f32_rn(v).to_f32());
     let bh = b.map(|v| F16::from_f32_rn(v).to_f32());
-    overlap::gemm_overlapped_core(&ah, &bh)
+    pipeline::gemm_overlapped_core(&ah, &bh)
 }
 
 /// SGEMM-cube through the overlapped pipeline: the dual high/low split
@@ -175,7 +182,57 @@ pub fn cube_gemm_blocked_split_overlapped(a: &WideSplit, b: &WideSplit) -> Matri
     let kb = b.high.rows();
     assert_eq!(k, kb, "inner dimensions must match: {k} vs {kb}");
     let inv_sf = 1.0f32 / a.cfg.scale_factor();
-    overlap::cube_overlapped_core(&a.high, &a.low, &b.high, &b.low, inv_sf)
+    pipeline::cube_overlapped_core(&a.high, &a.low, &b.high, &b.low, inv_sf)
+}
+
+/// FP32 blocked GEMM through the A+B dual-panel pipeline: a pool
+/// prefetch job packs **both** the next `(k, j)` block's B panel and
+/// its A row-block stripe through a `depth`-slot ring
+/// ([`crate::exec::pipeline`]) while the kernel-only sweeps consume the
+/// current one. **Bit-identical** to [`sgemm_blocked`] for every
+/// `depth` — same pack routines, same block order, same kernel loops.
+pub fn sgemm_blocked_overlapped_ab(a: &Matrix<f32>, b: &Matrix<f32>, depth: usize) -> Matrix<f32> {
+    assert_eq!(a.cols(), b.rows(), "inner dimensions must match: {} vs {}", a.cols(), b.rows());
+    pipeline::gemm_ab_core(a, b, depth)
+}
+
+/// FP16 Cube GEMM through the A+B dual-panel pipeline; bit-identical to
+/// [`hgemm_blocked`].
+pub fn hgemm_blocked_overlapped_ab(a: &Matrix<f32>, b: &Matrix<f32>, depth: usize) -> Matrix<f32> {
+    assert_eq!(a.cols(), b.rows(), "inner dimensions must match: {} vs {}", a.cols(), b.rows());
+    let ah = a.map(|v| F16::from_f32_rn(v).to_f32());
+    let bh = b.map(|v| F16::from_f32_rn(v).to_f32());
+    pipeline::gemm_ab_core(&ah, &bh, depth)
+}
+
+/// SGEMM-cube through the A+B dual-panel pipeline: the dual high/low
+/// split B panels **and** dual A row-block stripes are prefetched while
+/// the fused three-term micro-kernel consumes the current block.
+/// Bit-identical to [`cube_gemm_blocked`].
+pub fn cube_gemm_blocked_overlapped_ab(
+    a: &Matrix<f32>,
+    b: &Matrix<f32>,
+    cfg: SplitConfig,
+    depth: usize,
+) -> Matrix<f32> {
+    assert_eq!(a.cols(), b.rows(), "inner dimensions must match: {} vs {}", a.cols(), b.rows());
+    let asp = WideSplit::of(a, cfg);
+    let bsp = WideSplit::of(b, cfg);
+    cube_gemm_blocked_split_overlapped_ab(&asp, &bsp, depth)
+}
+
+/// A+B-pipeline counterpart of [`cube_gemm_blocked_split`].
+pub fn cube_gemm_blocked_split_overlapped_ab(
+    a: &WideSplit,
+    b: &WideSplit,
+    depth: usize,
+) -> Matrix<f32> {
+    assert_eq!(a.cfg, b.cfg, "operands must be split with the same configuration");
+    let (_, k) = a.high.shape();
+    let kb = b.high.rows();
+    assert_eq!(k, kb, "inner dimensions must match: {k} vs {kb}");
+    let inv_sf = 1.0f32 / a.cfg.scale_factor();
+    pipeline::cube_ab_core(&a.high, &a.low, &b.high, &b.low, inv_sf, depth)
 }
 
 /// Instrumented serial FP32 blocked GEMM: the exact serial nest run
@@ -366,6 +423,44 @@ pub(crate) fn sweep_rows_f32(
     });
 }
 
+/// [`sweep_rows_f32`] over a **prepacked A stripe**: the A+B pipeline's
+/// consumption side. `ap_all`/`a_off` carry one `pack_a` output segment
+/// per executed row block (packed ahead by the prefetcher,
+/// [`crate::exec::pipeline`]); everything else — chunking, panel
+/// iteration, kernel, C update — is the exact sweep above, which is
+/// what keeps the A+B schedule bit-identical.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sweep_rows_f32_packed(
+    ap_all: &[f32],
+    a_off: &[usize],
+    m: usize,
+    bp: &[f32],
+    cp: &SendPtr<f32>,
+    n: usize,
+    bm: usize,
+    j0: usize,
+    kc: usize,
+) {
+    let row_blocks = m.div_ceil(bm);
+    debug_assert_eq!(a_off.len(), row_blocks + 1);
+    parallel_chunks(row_blocks, |rb0, rb1| {
+        for rb in rb0..rb1 {
+            let i0 = rb * bm;
+            let ap = &ap_all[a_off[rb]..a_off[rb + 1]];
+            for (rp, apanel) in ap.chunks_exact(kc * MR).enumerate() {
+                let ci = i0 + rp * MR;
+                let mr_eff = MR.min(m - ci);
+                for (cpnl, bpanel) in bp.chunks_exact(kc * NR).enumerate() {
+                    let cj = j0 + cpnl * NR;
+                    let nr_eff = NR.min(n - cj);
+                    let acc = kernel_f32(apanel, bpanel);
+                    add_tile(cp, n, ci, cj, mr_eff, nr_eff, &acc);
+                }
+            }
+        }
+    });
+}
+
 /// Dual-component blocked driver with the fused three-term micro-kernel.
 fn cube_blocked_core(
     ah: &Matrix<f32>,
@@ -420,6 +515,41 @@ pub(crate) fn sweep_rows_cube(
             let i0 = rb * bm;
             let mc = bm.min(m - i0);
             pack::pack_a_dual(ah, al, i0, mc, p0, kc, &mut ap);
+            for (rp, apanel) in ap.chunks_exact(kc * 2 * MR).enumerate() {
+                let ci = i0 + rp * MR;
+                let mr_eff = MR.min(m - ci);
+                for (cpnl, bpanel) in bp.chunks_exact(kc * 2 * NR).enumerate() {
+                    let cj = j0 + cpnl * NR;
+                    let nr_eff = NR.min(n - cj);
+                    let (hh, corr) = kernel_cube(apanel, bpanel);
+                    add_tile_cube(cp, n, ci, cj, mr_eff, nr_eff, &hh, &corr, inv_sf);
+                }
+            }
+        }
+    });
+}
+
+/// [`sweep_rows_cube`] over a prepacked dual-component A stripe (cube
+/// counterpart of [`sweep_rows_f32_packed`]).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sweep_rows_cube_packed(
+    ap_all: &[f32],
+    a_off: &[usize],
+    m: usize,
+    bp: &[f32],
+    cp: &SendPtr<f32>,
+    n: usize,
+    bm: usize,
+    j0: usize,
+    kc: usize,
+    inv_sf: f32,
+) {
+    let row_blocks = m.div_ceil(bm);
+    debug_assert_eq!(a_off.len(), row_blocks + 1);
+    parallel_chunks(row_blocks, |rb0, rb1| {
+        for rb in rb0..rb1 {
+            let i0 = rb * bm;
+            let ap = &ap_all[a_off[rb]..a_off[rb + 1]];
             for (rp, apanel) in ap.chunks_exact(kc * 2 * MR).enumerate() {
                 let ci = i0 + rp * MR;
                 let mr_eff = MR.min(m - ci);
@@ -712,6 +842,37 @@ mod tests {
             let over = cube_gemm_blocked_overlapped(&a, &b, cfg);
             for (x, y) in serial.as_slice().iter().zip(over.as_slice()) {
                 assert_eq!(x.to_bits(), y.to_bits(), "cube {m}x{k}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn ab_overlapped_bit_identical_to_serial_at_every_depth() {
+        // The full random-shape sweep lives in tests/properties.rs
+        // (prop_ab_prefetch_bit_identical_to_serial_blocked); this pins
+        // the invariant at module level on awkward edges, including
+        // multiple k blocks (several prefetched A stripes per column).
+        let bk = host_block().bk;
+        let mut rng = Rng::new(55);
+        for depth in [1usize, 2, 3] {
+            for (m, k, n) in [(1, 1, 1), (5, 2 * bk + 3, 9), (33, 65, 24)] {
+                let a = Matrix::random_symmetric(m, k, 0, &mut rng);
+                let b = Matrix::random_symmetric(k, n, 0, &mut rng);
+                let pairs = [
+                    (sgemm_blocked(&a, &b), sgemm_blocked_overlapped_ab(&a, &b, depth)),
+                    (hgemm_blocked(&a, &b), hgemm_blocked_overlapped_ab(&a, &b, depth)),
+                ];
+                for (serial, ab) in &pairs {
+                    for (x, y) in serial.as_slice().iter().zip(ab.as_slice()) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "depth {depth} {m}x{k}x{n}");
+                    }
+                }
+                let cfg = SplitConfig::default();
+                let serial = cube_gemm_blocked(&a, &b, cfg);
+                let ab = cube_gemm_blocked_overlapped_ab(&a, &b, cfg, depth);
+                for (x, y) in serial.as_slice().iter().zip(ab.as_slice()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "cube depth {depth} {m}x{k}x{n}");
+                }
             }
         }
     }

@@ -49,9 +49,10 @@ pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
 }
 
 /// FP32 GEMM through the blocked packed engine. Thin sugar over
-/// [`GemmBackend`], which owns the serial-vs-overlapped schedule
-/// dispatch (defaulting to the `SGEMM_CUBE_OVERLAP` toggle — results
-/// are bit-identical either way, see [`crate::gemm::overlap`]).
+/// [`GemmBackend`], which owns the schedule dispatch
+/// (serial / overlap-b / overlap-ab, defaulting to the
+/// `SGEMM_CUBE_SCHEDULE` / `SGEMM_CUBE_OVERLAP` env knobs — results
+/// are bit-identical either way, see [`crate::exec::pipeline`]).
 pub fn sgemm_fast(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
     GemmBackend::new(Backend::Fp32).gemm(a, b)
 }

@@ -31,10 +31,11 @@
 //!   sizes come from [`crate::sim::blocking`] on the host cache model.
 //! * [`fast`] — the hot-path entry points (wrappers over [`blocked`],
 //!   plus the retained pre-blocking baselines).
-//! * [`overlap`] — the double-buffered (prefetching) variant of the
-//!   `b_n → b_k` panel loop: a prefetch worker packs the next B panel
-//!   through a two-slot ring while the micro-kernel consumes the
-//!   current one; bit-identical `*_overlapped` entry points plus the
+//! * [`overlap`] — compatibility shim over the executor pipeline
+//!   ([`crate::exec::pipeline`]), which prefetches the next block's B
+//!   panel (and, on the A+B schedule, its A row-block stripe) through a
+//!   depth-configurable ring on the persistent pool; bit-identical
+//!   `*_overlapped` / `*_overlapped_ab` entry points plus the
 //!   instrumented `*_staged` drivers that calibrate
 //!   [`crate::sim::pipeline`] from measured stage times.
 //! * [`prepacked`] — stable B operands with the split + pack work done
@@ -57,10 +58,12 @@ pub mod pack;
 pub mod prepacked;
 pub mod sgemm;
 
-pub use backend::{Backend, GemmBackend};
+pub use backend::{default_schedule, Backend, GemmBackend, Schedule};
 pub use blocked::{
-    cube_gemm_blocked, cube_gemm_blocked_overlapped, cube_gemm_prepacked, gemm_prepacked,
-    hgemm_blocked, hgemm_blocked_overlapped, sgemm_blocked, sgemm_blocked_overlapped,
+    cube_gemm_blocked, cube_gemm_blocked_overlapped, cube_gemm_blocked_overlapped_ab,
+    cube_gemm_prepacked, gemm_prepacked, hgemm_blocked, hgemm_blocked_overlapped,
+    hgemm_blocked_overlapped_ab, sgemm_blocked, sgemm_blocked_overlapped,
+    sgemm_blocked_overlapped_ab,
 };
 pub use cache::{CacheStats, PrepackCache, PrepackKey};
 pub use cube::{cube_gemm, cube_gemm_split, Accumulation};

@@ -1,59 +1,41 @@
-//! Overlapped (double-buffered) host pipeline for the blocked engine's
-//! `b_n → b_k` panel loop — the executed counterpart of the paper's
-//! Fig. 7 double-buffered B stream.
+//! Compatibility shim over the executor pipeline
+//! ([`crate::exec::pipeline`]) plus the instrumented serial drivers.
 //!
-//! The serial blocked driver ([`crate::gemm::blocked`]) alternates two
-//! phases per `(j, k)` block: pack the B panel (single-threaded, the
-//! "transfer" analogue of the Ascend's main-memory → L1 B stream), then
-//! sweep the row blocks against it (parallel, the "compute" analogue).
-//! Packing therefore sits on the critical path exactly like the
-//! non-overlapped `T_comp + T_mem` of Sec. 5.1.2.
+//! PR 3 introduced this module as the overlapped (double-buffered) host
+//! pipeline for the blocked engine's `b_n → b_k` panel loop: a
+//! dedicated per-call prefetch thread packing the next B panel through
+//! a two-slot ring. The executor refactor generalized that ring —
+//! depth-configurable slots, A-panel prefetch, persistent pool workers
+//! instead of per-call spawns — and moved the machinery to
+//! `exec/pipeline.rs`. What remains here:
 //!
-//! This module hides it the way the paper's double buffer does: a
-//! dedicated **prefetch worker** packs the *next* `(k, j)` block's panel
-//! (including the dual high/low split format) while the micro-kernel
-//! consumes the current one, through a **two-slot panel ring** — two
-//! `Vec<f32>` buffers whose ownership rotates main ⇄ prefetcher over a
-//! pair of channels, so neither side ever waits on a lock and at most
-//! one panel is in flight ahead of the consumer.
+//! * the `SGEMM_CUBE_OVERLAP` toggle ([`overlap_enabled`]) feeding the
+//!   default execution schedule
+//!   ([`crate::gemm::backend::default_schedule`]);
+//! * re-exports of the panel-schedule types ([`PanelJob`],
+//!   [`panel_jobs`]) and the [`run_overlapped`] driver, now thin
+//!   delegations to the pipeline at the classic depth 2;
+//! * the **instrumented serial drivers** (`*_staged`): single-threaded
+//!   passes timing each stage (pack-A, pack-B, micro-kernel, C update)
+//!   into a [`crate::util::bench::StageBreakdown`]. The fig11 bench
+//!   feeds those spans into
+//!   [`crate::sim::pipeline::IterTiming::from_measured`] to calibrate
+//!   the simulator's non-overlapped fraction α from real engine
+//!   timings — see EXPERIMENTS.md §Overlap.
 //!
-//! **Bit identity.** The overlapped driver packs with the same
-//! [`crate::gemm::pack`] routines, consumes blocks in the same
-//! `b_n → b_k` order, and runs the same shared sweeps
-//! ([`crate::gemm::blocked::sweep_rows_f32`] /
-//! [`crate::gemm::blocked::sweep_rows_cube`]) over the same panel bytes
-//! — so every `*_overlapped` entry point is byte-for-byte identical to
-//! its serial counterpart (enforced by `tests/properties.rs`).
-//!
-//! On a single-core host (`num_threads() < 2`) the ring degenerates to
-//! the serial pack-then-sweep loop — same code path as the serial
-//! driver, no thread spawn, no oversubscription.
-//!
-//! Cost model: one scoped thread spawn/join plus two channel setups per
-//! GEMM call — the same order as the per-block spawns the blocked
-//! engine already accepts (see the parallelism note in
-//! [`crate::gemm::blocked`]), worthwhile when the hidden pack-B span
-//! exceeds it (large inline GEMMs), marginal at tiny serving shapes
-//! (where the prepacked path skips B packing entirely anyway). The
-//! persistent-worker-pool upgrade that would amortize both is tracked
-//! in ROADMAP.md.
-//!
-//! The module also carries the **instrumented serial drivers**
-//! (`*_staged`): single-threaded passes that time each stage (pack-A,
-//! pack-B, micro-kernel, C update) into a
-//! [`crate::util::bench::StageBreakdown`]. The fig11 bench feeds those
-//! measured spans into [`crate::sim::pipeline::IterTiming::from_measured`]
-//! to calibrate the simulator's non-overlapped fraction α from real
-//! engine timings instead of the hard-coded guess — see EXPERIMENTS.md
-//! §Overlap.
+//! **Bit identity** is unchanged: every `*_overlapped` entry point
+//! packs with the same [`crate::gemm::pack`] routines, consumes blocks
+//! in the same `b_n → b_k` order, and runs the same shared sweeps as
+//! the serial drivers (enforced by `tests/properties.rs`).
 
-use std::sync::mpsc::channel;
 use std::time::Instant;
 
-use crate::gemm::blocked::{
-    add_tile, add_tile_cube, exec_bm, host_block, kernel_cube, kernel_f32, sweep_rows_cube,
-    sweep_rows_f32,
-};
+pub use crate::exec::pipeline::{panel_jobs, PanelJob};
+
+pub(crate) use crate::exec::pipeline::PanelSource;
+
+use crate::exec::pipeline::{run_prefetch, PanelSlot, DEFAULT_PIPELINE_DEPTH};
+use crate::gemm::blocked::{add_tile, add_tile_cube, exec_bm, host_block, kernel_cube, kernel_f32};
 use crate::gemm::pack::{self, MR, NR};
 use crate::util::bench::StageBreakdown;
 use crate::util::mat::Matrix;
@@ -62,16 +44,15 @@ use crate::util::threads::SendPtr;
 /// Whether the pack-on-the-fly hot-path entry points should run the
 /// overlapped pipeline: `SGEMM_CUBE_OVERLAP=1|true|on|yes` enables it,
 /// anything else (or unset) keeps the serial driver. Results are
-/// bit-identical either way; this only selects the schedule. The serving
-/// tier carries the same knob as `[server] overlap`
-/// ([`crate::coordinator::server::ServiceConfig`]).
+/// bit-identical either way; this only selects the schedule (the
+/// richer `SGEMM_CUBE_SCHEDULE` env knob and the `[server] schedule`
+/// config key supersede it, see
+/// [`crate::gemm::backend::default_schedule`]).
 ///
 /// The environment is read **once** per process (like
 /// [`crate::gemm::blocked::host_block`]): this sits on the hot path of
 /// every `fast::*` call and `GemmBackend::new`, and a cached read also
-/// keeps the getenv out of multi-threaded request loops. Callers that
-/// need per-call control use the explicit knobs
-/// (`GemmBackend::with_overlap`, the `*_overlapped` entry points).
+/// keeps the getenv out of multi-threaded request loops.
 pub fn overlap_enabled() -> bool {
     static ENABLED: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
     *ENABLED.get_or_init(|| {
@@ -85,155 +66,20 @@ fn parse_overlap_toggle(v: &str) -> bool {
     matches!(v.trim(), "1" | "true" | "on" | "yes")
 }
 
-/// One `(column block, k block)` iteration of the `b_n → b_k` panel
-/// loop, in consumption order.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct PanelJob {
-    /// Column-block index (`j0 / b_n`).
-    pub jb: usize,
-    /// k-block index (`p0 / b_k`).
-    pub pb: usize,
-    /// First column of the block.
-    pub j0: usize,
-    /// Columns in the block (`≤ b_n`).
-    pub nc: usize,
-    /// First k step of the block.
-    pub p0: usize,
-    /// k steps in the block (`≤ b_k`).
-    pub kc: usize,
-}
-
-/// The `b_n → b_k` block schedule of the serial drivers, as a flat job
-/// list (outer loop over columns, inner over k — the exact consumption
-/// order both the serial and the overlapped nests use).
-pub fn panel_jobs(n: usize, k: usize, bn: usize, bk: usize) -> Vec<PanelJob> {
-    let mut jobs = Vec::new();
-    if n == 0 || k == 0 {
-        return jobs;
-    }
-    for (jb, j0) in (0..n).step_by(bn).enumerate() {
-        let nc = bn.min(n - j0);
-        for (pb, p0) in (0..k).step_by(bk).enumerate() {
-            let kc = bk.min(k - p0);
-            jobs.push(PanelJob { jb, pb, j0, nc, p0, kc });
-        }
-    }
-    jobs
-}
-
-/// What the prefetch worker packs from: the plain B matrix
-/// (single-component panels) or the split high/low pair (dual-component
-/// panels for the fused cube kernel).
-pub(crate) enum PanelSource<'a> {
-    Single(&'a Matrix<f32>),
-    Dual { high: &'a Matrix<f32>, low: &'a Matrix<f32> },
-}
-
-impl PanelSource<'_> {
-    /// Pack `job`'s block into `out` — exactly what the serial drivers
-    /// call, so overlapped panels are byte-identical.
-    fn pack(&self, job: &PanelJob, out: &mut Vec<f32>) {
-        match self {
-            PanelSource::Single(b) => pack::pack_b(b, job.p0, job.kc, job.j0, job.nc, out),
-            PanelSource::Dual { high, low } => {
-                pack::pack_b_dual(high, low, job.p0, job.kc, job.j0, job.nc, out)
-            }
-        }
-    }
-}
-
-/// Run `consume` over every job's packed panel, with the next panel
-/// packed by a prefetch worker while the current one is consumed.
-///
-/// The two-slot ring: two buffers circulate main → (`job_tx`) →
-/// prefetcher → (`ready_tx`) → main. Channels are FIFO and the
-/// prefetcher is single, so panels arrive in job order; the consumer
-/// never holds more than one buffer and the prefetcher never runs more
-/// than one job ahead.
+/// Run `consume` over every job's packed B panel, with the next panel
+/// packed ahead by a pool prefetch job (the classic two-slot schedule:
+/// pipeline depth 2). Thin shim over
+/// [`crate::exec::pipeline::run_prefetch`].
 pub(crate) fn run_overlapped<F>(src: PanelSource<'_>, jobs: &[PanelJob], mut consume: F)
 where
     F: FnMut(&PanelJob, &[f32]),
 {
-    // One worker (or one job): nothing to overlap with — degenerate to
-    // the serial pack-then-consume loop, one reused buffer, no threads.
-    if crate::util::threads::num_threads() < 2 || jobs.len() < 2 {
-        let mut buf = Vec::new();
-        for job in jobs {
-            src.pack(job, &mut buf);
-            consume(job, &buf);
-        }
-        return;
-    }
-    std::thread::scope(|scope| {
-        let (job_tx, job_rx) = channel::<(usize, Vec<f32>)>();
-        let (ready_tx, ready_rx) = channel::<(usize, Vec<f32>)>();
-        scope.spawn(move || {
-            for (idx, mut buf) in job_rx {
-                src.pack(&jobs[idx], &mut buf);
-                if ready_tx.send((idx, buf)).is_err() {
-                    return; // consumer is gone (panic unwind)
-                }
-            }
-        });
-        // Seed both ring slots: the prefetcher starts on jobs 0 and 1.
-        job_tx.send((0, Vec::new())).expect("prefetch worker alive");
-        job_tx.send((1, Vec::new())).expect("prefetch worker alive");
-        let mut next = 2;
-        for expect in 0..jobs.len() {
-            let (idx, buf) = ready_rx.recv().expect("prefetch worker died");
-            debug_assert_eq!(idx, expect, "panels must arrive in job order");
-            consume(&jobs[idx], &buf);
-            if next < jobs.len() {
-                job_tx.send((next, buf)).expect("prefetch worker alive");
-                next += 1;
-            }
-        }
-        drop(job_tx); // prefetcher's job loop ends; scope joins it
-    });
-}
-
-/// Single-component overlapped driver — the pipeline counterpart of
-/// `blocked::gemm_blocked_core`, bit-identical by shared sweeps.
-pub(crate) fn gemm_overlapped_core(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
-    let (m, k) = a.shape();
-    let n = b.cols();
-    let mut c = Matrix::zeros(m, n);
-    if m == 0 || n == 0 || k == 0 {
-        return c;
-    }
-    let block = host_block();
-    let bm = exec_bm(m, block.bm);
-    let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
-    let jobs = panel_jobs(n, k, block.bn, block.bk);
-    run_overlapped(PanelSource::Single(b), &jobs, |job, bp| {
-        sweep_rows_f32(a, bp, &cp, n, bm, job.j0, job.p0, job.kc);
-    });
-    c
-}
-
-/// Dual-component overlapped driver — the pipeline counterpart of
-/// `blocked::cube_blocked_core`.
-pub(crate) fn cube_overlapped_core(
-    ah: &Matrix<f32>,
-    al: &Matrix<f32>,
-    bh: &Matrix<f32>,
-    bl: &Matrix<f32>,
-    inv_sf: f32,
-) -> Matrix<f32> {
-    let (m, k) = ah.shape();
-    let n = bh.cols();
-    let mut c = Matrix::zeros(m, n);
-    if m == 0 || n == 0 || k == 0 {
-        return c;
-    }
-    let block = host_block();
-    let bm = exec_bm(m, block.bm);
-    let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
-    let jobs = panel_jobs(n, k, block.bn, block.bk);
-    run_overlapped(PanelSource::Dual { high: bh, low: bl }, &jobs, |job, bp| {
-        sweep_rows_cube(ah, al, bp, &cp, n, bm, job.j0, job.p0, job.kc, inv_sf);
-    });
-    c
+    run_prefetch(
+        DEFAULT_PIPELINE_DEPTH,
+        jobs.len(),
+        |i: usize, slot: &mut PanelSlot| src.pack(&jobs[i], &mut slot.b),
+        |i: usize, slot: &PanelSlot| consume(&jobs[i], &slot.b),
+    );
 }
 
 #[inline]
@@ -342,23 +188,6 @@ pub(crate) fn cube_staged_core(
 mod tests {
     use super::*;
     use crate::util::rng::Rng;
-
-    #[test]
-    fn panel_jobs_cover_the_nest_in_order() {
-        let jobs = panel_jobs(70, 130, 32, 64);
-        // 3 column blocks × 3 k blocks... n=70/bn=32 → j0 in {0,32,64};
-        // k=130/bk=64 → p0 in {0,64,128}.
-        assert_eq!(jobs.len(), 9);
-        assert_eq!(jobs[0], PanelJob { jb: 0, pb: 0, j0: 0, nc: 32, p0: 0, kc: 64 });
-        assert_eq!(jobs[2], PanelJob { jb: 0, pb: 2, j0: 0, nc: 32, p0: 128, kc: 2 });
-        assert_eq!(jobs[8], PanelJob { jb: 2, pb: 2, j0: 64, nc: 6, p0: 128, kc: 2 });
-        // Consumption order: outer j, inner p — exactly the serial nest.
-        for w in jobs.windows(2) {
-            assert!((w[0].jb, w[0].pb) < (w[1].jb, w[1].pb));
-        }
-        assert!(panel_jobs(0, 64, 32, 32).is_empty());
-        assert!(panel_jobs(64, 0, 32, 32).is_empty());
-    }
 
     #[test]
     fn run_overlapped_delivers_every_panel_in_order() {

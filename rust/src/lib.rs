@@ -21,6 +21,7 @@
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod exec;
 pub mod experiments;
 pub mod gemm;
 #[cfg(feature = "pjrt")]

@@ -1,47 +1,47 @@
-//! Tiny data-parallel helper (rayon substitute).
+//! Tiny data-parallel helpers (rayon substitute), backed by the
+//! persistent worker pool.
 //!
-//! `parallel_chunks` splits an index range into contiguous chunks and runs
-//! a closure per chunk on scoped std threads. Used by the blocked GEMM
-//! kernels and the experiment sweeps. On the 1-core CI image this
-//! degenerates to a serial loop (zero thread overhead), but scales on
-//! multi-core hosts.
+//! `parallel_chunks` splits an index range into contiguous chunks and
+//! runs a closure per chunk — historically on scoped std threads
+//! (one spawn/join round per call), now on the process-wide
+//! [`crate::exec::pool`] with the calling thread participating, which
+//! keeps the exact same contract (same chunk geometry, panics re-thrown
+//! on the caller, serial degeneration at `n <= 1` or one worker) while
+//! amortizing thread creation across the process. Used by the blocked
+//! GEMM kernels and the experiment sweeps.
+
+use std::sync::OnceLock;
 
 /// Number of worker threads to use: `SGEMM_CUBE_THREADS` env override,
 /// else `available_parallelism`.
+///
+/// Resolved **once** per process (same pattern as the cached
+/// `SGEMM_CUBE_OVERLAP` toggle): this sits inside hot sweeps
+/// (`exec_bm`, the serial-path check of every `parallel_chunks` round),
+/// where a per-call `getenv` is both measurable overhead and a
+/// syscall-shaped wart in multi-threaded request loops. The cached
+/// value also sizes the global pool, so the two can never disagree.
 pub fn num_threads() -> usize {
-    if let Ok(v) = std::env::var("SGEMM_CUBE_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(v) = std::env::var("SGEMM_CUBE_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
         }
-    }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
 }
 
 /// Run `f(start, end)` over disjoint chunks of `0..n` on up to
-/// `num_threads()` scoped threads. `f` must be `Sync` — interior
-/// mutability (or disjoint output regions via raw pointers at the caller)
-/// is the caller's responsibility.
+/// `num_threads()` pool workers (plus the calling thread). `f` must be
+/// `Sync` — interior mutability (or disjoint output regions via raw
+/// pointers at the caller) is the caller's responsibility.
 pub fn parallel_chunks<F>(n: usize, f: F)
 where
     F: Fn(usize, usize) + Sync,
 {
-    let workers = num_threads().min(n.max(1));
-    if workers <= 1 || n == 0 {
-        f(0, n);
-        return;
-    }
-    let chunk = n.div_ceil(workers);
-    std::thread::scope(|scope| {
-        for w in 0..workers {
-            let start = w * chunk;
-            let end = ((w + 1) * chunk).min(n);
-            if start >= end {
-                break;
-            }
-            let f = &f;
-            scope.spawn(move || f(start, end));
-        }
-    });
+    crate::exec::pool::global().run_chunks(n, f);
 }
 
 /// Map `0..n` to a `Vec<R>` in parallel, preserving order.
@@ -56,7 +56,8 @@ where
         let p = out_ptr; // copy the Send wrapper into the closure
         for i in start..end {
             // SAFETY: chunks are disjoint, so each index is written by
-            // exactly one thread; the Vec outlives the scope.
+            // exactly one thread; the Vec outlives the blocking
+            // parallel_chunks call.
             unsafe { *p.0.add(i) = f(i) };
         }
     });
@@ -66,7 +67,8 @@ where
 /// Raw-pointer wrapper asserting cross-thread transfer is safe for
 /// disjoint-index writes. Shared by the blocked GEMM engine and the
 /// kernel drivers — keep the safety argument (callers write disjoint
-/// index ranges per thread and the buffer outlives the scope) here.
+/// index ranges per thread and the buffer outlives the blocking
+/// parallel call) here.
 pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 impl<T> Clone for SendPtr<T> {
     fn clone(&self) -> Self {
@@ -106,7 +108,11 @@ mod tests {
     }
 
     #[test]
-    fn num_threads_at_least_one() {
+    fn num_threads_at_least_one_and_cached() {
         assert!(num_threads() >= 1);
+        // The resolution is process-stable: repeated calls agree (the
+        // OnceLock read never consults the environment again).
+        assert_eq!(num_threads(), num_threads());
+        assert_eq!(num_threads(), crate::exec::pool::global().n_workers());
     }
 }

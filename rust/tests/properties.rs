@@ -4,8 +4,9 @@
 use sgemm_cube::coordinator::request::ShapeKey;
 use sgemm_cube::coordinator::scheduler::{assign, imbalance, tiles_of};
 use sgemm_cube::gemm::blocked::{
-    cube_gemm_blocked, cube_gemm_blocked_overlapped, gemm_prepacked, hgemm_blocked,
-    hgemm_blocked_overlapped, host_block, sgemm_blocked, sgemm_blocked_overlapped,
+    cube_gemm_blocked, cube_gemm_blocked_overlapped, cube_gemm_blocked_overlapped_ab,
+    gemm_prepacked, hgemm_blocked, hgemm_blocked_overlapped, hgemm_blocked_overlapped_ab,
+    host_block, sgemm_blocked, sgemm_blocked_overlapped, sgemm_blocked_overlapped_ab,
 };
 use sgemm_cube::gemm::cube::{cube_gemm, Accumulation};
 use sgemm_cube::gemm::dgemm::dgemm_of_f32;
@@ -293,6 +294,58 @@ fn prop_overlapped_bit_identical_to_serial_blocked() {
 }
 
 #[test]
+fn prop_ab_prefetch_bit_identical_to_serial_blocked() {
+    // ISSUE requirement: the A+B dual-panel pipeline (B panel and A
+    // row-block stripe prefetched through a depth-configurable ring on
+    // the persistent pool) must be byte-for-byte equal to the serial
+    // blocked engine across the fp32/fp16/cube paths, random shapes
+    // including zero dims, and pipeline_depth ∈ {1, 2, 3}.
+    let bk = host_block().bk;
+    property("A+B prefetch == serial, bitwise", 8, |g: &mut Gen| {
+        // Zero extents ride along: each dimension independently has a
+        // small chance of being zero.
+        let m = if g.case == 1 { 0 } else { g.usize_in(1, 49) };
+        // Bias k across the b_k boundary so several stripes are
+        // prefetched per column block.
+        let k = match g.case {
+            2 => 0,
+            _ if g.bool() => g.usize_in(1, bk + 1),
+            _ => g.usize_in(bk + 1, 3 * bk + 5),
+        };
+        let n = if g.case == 3 { 0 } else { g.usize_in(1, 81) };
+        let mut rng = Rng::new(g.u64());
+        let a = Matrix::random_symmetric(m, k, 0, &mut rng);
+        let b = Matrix::random_symmetric(k, n, 0, &mut rng);
+        let bitwise = |x: &Matrix<f32>, y: &Matrix<f32>, what: &str| -> Result<(), String> {
+            if x.shape() != y.shape() {
+                return Err(format!("{what} ({m},{k},{n}): shape {:?} vs {:?}", x.shape(), y.shape()));
+            }
+            for (u, v) in x.as_slice().iter().zip(y.as_slice()) {
+                if u.to_bits() != v.to_bits() {
+                    return Err(format!("{what} ({m},{k},{n}): {u} vs {v}"));
+                }
+            }
+            Ok(())
+        };
+        let s_ref = sgemm_blocked(&a, &b);
+        let h_ref = hgemm_blocked(&a, &b);
+        for depth in [1usize, 2, 3] {
+            bitwise(&s_ref, &sgemm_blocked_overlapped_ab(&a, &b, depth), &format!("fp32 d{depth}"))?;
+            bitwise(&h_ref, &hgemm_blocked_overlapped_ab(&a, &b, depth), &format!("fp16 d{depth}"))?;
+            for s_b in [12, 8] {
+                let cfg = SplitConfig::with_scale(s_b);
+                bitwise(
+                    &cube_gemm_blocked(&a, &b, cfg),
+                    &cube_gemm_blocked_overlapped_ab(&a, &b, cfg, depth),
+                    &format!("cube s_b={s_b} d{depth}"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_degenerate_zero_dims_never_panic() {
     // ISSUE requirement: m, n or k of zero returns an empty/zero result
     // through every engine entry point — serial, overlapped, prepacked —
@@ -319,6 +372,9 @@ fn prop_degenerate_zero_dims_never_panic() {
             sgemm_blocked_overlapped(&a, &b),
             hgemm_blocked_overlapped(&a, &b),
             cube_gemm_blocked_overlapped(&a, &b, cfg),
+            sgemm_blocked_overlapped_ab(&a, &b, 2),
+            hgemm_blocked_overlapped_ab(&a, &b, 3),
+            cube_gemm_blocked_overlapped_ab(&a, &b, cfg, 2),
         ];
         for c in &results {
             assert_eq!(c.shape(), (m, n), "{ctx}");

@@ -5,12 +5,16 @@ The fig11 bench (`cargo bench --bench fig11_blocking_perf`) writes every
 measurement to BENCH_gemm.json at the repo root; the CI bench-smoke job
 uploads the same file as a workflow artifact on every PR. This script
 turns that JSON into the markdown rows EXPERIMENTS.md keeps in
-§Perf-iteration-log (item 3), §Serving-amortization and §Overlap, so
-filling the tables is mechanical:
+§Perf-iteration-log (item 3), §Serving-amortization, §Overlap and
+§Executor, so filling the tables is mechanical:
 
     python3 tools/render_bench_tables.py [BENCH_gemm.json]
 
-Rows whose records are missing from the JSON render as "_pending_".
+Degrades gracefully: rows whose records are missing from the JSON (an
+older bench run, a partial artifact) render as "_pending_", and a
+missing or malformed JSON file renders every row pending — the exit
+status is 0 in all cases, so the script is safe to call from docs
+tooling regardless of which bench revision produced the file.
 """
 
 import json
@@ -37,9 +41,27 @@ def fmt_f(v, digits=3):
     return PENDING if v is None else f"{v:.{digits}f}"
 
 
+def fmt_ns(v):
+    return PENDING if v is None else f"{v:,.0f} ns"
+
+
+def load_rows(path):
+    try:
+        rows = json.load(open(path))
+    except (OSError, ValueError) as e:
+        print(f"warning: could not read {path} ({e}); rendering all rows as {PENDING}",
+              file=sys.stderr)
+        return []
+    if not isinstance(rows, list):
+        print(f"warning: {path} is not a JSON array; rendering all rows as {PENDING}",
+              file=sys.stderr)
+        return []
+    return [r for r in rows if isinstance(r, dict) and "name" in r]
+
+
 def main():
     path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_gemm.json"
-    rows = json.load(open(path))
+    rows = load_rows(path)
 
     def find(prefix):
         for r in rows:
@@ -49,11 +71,14 @@ def main():
 
     def med(prefix):
         r = find(prefix)
-        return None if r is None else r["median_s"]
+        return None if r is None else r.get("median_s")
 
     def gflops(prefix):
         r = find(prefix)
         return PENDING if r is None or r.get("gflops") is None else str(r["gflops"])
+
+    def ratio(num, den):
+        return None if num is None or den is None or den == 0 else num / den
 
     three = med("host/cube_gemm_three_pass/")
     blocked = med("host/cube_gemm_blocked/")
@@ -63,7 +88,7 @@ def main():
     print("|--------|----------|---------|-----------------------|")
     entries = [
         ("host/cube_gemm_three_pass/", "1.0×"),
-        ("host/cube_gemm_blocked/", fmt_x(three / blocked) if three and blocked else PENDING),
+        ("host/cube_gemm_blocked/", fmt_x(ratio(three, blocked))),
         ("host/sgemm_blocked/", "—"),
         ("host/hgemm_blocked/", "—"),
     ]
@@ -89,11 +114,19 @@ def main():
         v = None
         for r in rows:
             if r["name"].startswith("blocked/stage/") and r["name"].endswith(f"/{stage}_s"):
-                v = r["median_s"]
+                v = r.get("median_s")
                 break
         print(f"| stage `{stage}` | {fmt_s(v)} | instrumented serial pass |")
     print(f"| `blocked/alpha_measured` | {fmt_f(med('blocked/alpha_measured'))} | replaces hard-coded α = 0.25 |")
     print(f"| `sim/double_util_alpha_measured` | {fmt_f(med('sim/double_util_alpha_measured'))} | paper anchor 0.766 |")
+
+    print("\n## §Executor\n")
+    print("| record | value | note |")
+    print("|--------|-------|------|")
+    print(f"| `host/cube_gemm_overlapped_ab` | {fmt_s(med('host/cube_gemm_overlapped_ab/'))} | A+B dual-panel pipeline |")
+    print(f"| `blocked/overlap_speedup` | {fmt_x(med('blocked/overlap_speedup'))} | B-only prefetch baseline |")
+    print(f"| `blocked/ab_overlap_speedup` | {fmt_x(med('blocked/ab_overlap_speedup'))} | gate: ≥ 0.90 × overlap_speedup |")
+    print(f"| `exec/pool_spawn_overhead_ns` | {fmt_ns(med('exec/pool_spawn_overhead_ns'))} | run_chunks round-trip on the pool |")
 
 
 if __name__ == "__main__":
