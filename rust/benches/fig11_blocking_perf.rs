@@ -3,7 +3,9 @@
 //! counterpart: the cache-blocked packed engine vs the pre-blocking
 //! three-pass kernel, the serving-amortization column (prepacked
 //! weight panels vs per-request split + pack at a serving-realistic
-//! shape), and the overlapped-pipeline column (prefetched B panels vs
+//! shape, including the kernel-only prepacked-AB row: cached B panels
+//! with the A stripe prefetched), and the overlapped-pipeline column
+//! (prefetched B panels vs
 //! the serial `b_k` loop, `blocked/overlap_speedup`) with the measured
 //! stage breakdown and the recalibrated non-overlapped fraction α fed
 //! into `sim::pipeline` (`blocked/alpha_measured`). Measurements are
@@ -22,7 +24,8 @@ use sgemm_cube::exec::pool::{self, Pool};
 use sgemm_cube::experiments::fig11_blocking_perf;
 use sgemm_cube::gemm::blocked::{
     cube_gemm_blocked, cube_gemm_blocked_overlapped, cube_gemm_blocked_overlapped_ab,
-    cube_gemm_blocked_staged, cube_gemm_prepacked, hgemm_blocked, host_block, sgemm_blocked,
+    cube_gemm_blocked_staged, cube_gemm_prepacked, gemm_prepacked_overlapped_ab,
+    gemm_prepacked_overlapped_staged, hgemm_blocked, host_block, sgemm_blocked,
 };
 use sgemm_cube::gemm::fast::cube_gemm_three_pass;
 use sgemm_cube::gemm::prepacked::{PrepackPath, PrepackedMatrix};
@@ -30,7 +33,7 @@ use sgemm_cube::sim::blocking::{BlockConfig, GemmShape};
 use sgemm_cube::sim::chip::Chip;
 use sgemm_cube::sim::pipeline::{Buffering, IterTiming, ALPHA_NONOVERLAP};
 use sgemm_cube::softfloat::split::SplitConfig;
-use sgemm_cube::util::bench::{black_box, Bencher};
+use sgemm_cube::util::bench::{black_box, fmt_duration, Bencher};
 use sgemm_cube::util::mat::Matrix;
 use sgemm_cube::util::rng::Rng;
 
@@ -85,20 +88,76 @@ fn main() {
     let a_act = Matrix::random_symmetric(sm, skn, 0, &mut rng);
     let w = Matrix::random_symmetric(skn, skn, 0, &mut rng);
     let sflops = 2.0 * sm as f64 * skn as f64 * skn as f64;
-    bench.bench(&format!("serving/cube_repack/{sm}x{skn}x{skn}"), Some(sflops), || {
-        cube_gemm_blocked(&a_act, &w, cfg)
-    });
+    let repack_median = bench
+        .bench(&format!("serving/cube_repack/{sm}x{skn}x{skn}"), Some(sflops), || {
+            cube_gemm_blocked(&a_act, &w, cfg)
+        })
+        .seconds
+        .median;
     let packed = PrepackedMatrix::prepack(&w, PrepackPath::Cube(cfg));
-    bench.bench(&format!("serving/cube_prepacked/{sm}x{skn}x{skn}"), Some(sflops), || {
-        cube_gemm_prepacked(&a_act, &packed)
-    });
-    let results = bench.results();
-    let prepack_speedup =
-        results[results.len() - 2].seconds.median / results[results.len() - 1].seconds.median;
+    let prepacked_median = bench
+        .bench(&format!("serving/cube_prepacked/{sm}x{skn}x{skn}"), Some(sflops), || {
+            cube_gemm_prepacked(&a_act, &packed)
+        })
+        .seconds
+        .median;
+    let prepack_speedup = repack_median / prepacked_median;
     println!(
         "prepacked vs per-request packing: {prepack_speedup:.2}x (CI bench-smoke gate ≥ 1.2x)"
     );
     bench.record_scalar(&format!("serving/prepacked_speedup/{sm}x{skn}x{skn}"), prepack_speedup);
+
+    // ---- kernel-only prepacked serving: cached B + prefetched A ----
+    // gemm_prepacked_overlapped_ab routes the per-request A stripe
+    // through the prefetch ring while B panels stream straight from the
+    // prepacked operand, so the consuming sweeps are kernel-only
+    // (exec::pipeline). Measured against the same per-request repack
+    // baseline as the serial prepacked column; the CI gate is >= 1.0x —
+    // the prefetched path must never fall below the baseline that still
+    // pays the weight split + pack per request (on a 1-core runner the
+    // ring degenerates to the serial prepacked nest, so ~prepack_speedup
+    // is expected there too).
+    let prepacked_ab_median = bench
+        .bench(&format!("serving/cube_prepacked_ab/{sm}x{skn}x{skn}"), Some(sflops), || {
+            gemm_prepacked_overlapped_ab(&a_act, &packed, DEFAULT_PIPELINE_DEPTH)
+        })
+        .seconds
+        .median;
+    let prepacked_ab_speedup = repack_median / prepacked_ab_median;
+    println!(
+        "prepacked-AB (prefetched A) vs per-request packing: {prepacked_ab_speedup:.2}x \
+         (CI gate ≥ 1.0x)"
+    );
+    let ab_record = format!("serving/prepacked_ab_speedup/{sm}x{skn}x{skn}");
+    bench.record_scalar(&ab_record, prepacked_ab_speedup);
+    // Consumer-side critical path of the staged prepacked-AB pass: B is
+    // never packed (structurally zero) and A staging reaches the
+    // consumer only as inline fallback packs or stalls behind a
+    // mid-pack prefetcher — the kernel-only serving evidence for
+    // EXPERIMENTS.md §Serving-amortization. Median-of-5 probes by
+    // critical-path staging time: a single cold run is hostage to one
+    // descheduled prefetcher on a shared runner.
+    let mut probes = Vec::new();
+    for _ in 0..5 {
+        let (c_pp, stages, stats) =
+            gemm_prepacked_overlapped_staged(&a_act, &packed, DEFAULT_PIPELINE_DEPTH);
+        black_box(c_pp);
+        probes.push((stages, stats));
+    }
+    probes.sort_by(|x, y| x.0.pack_a.total_cmp(&y.0.pack_a));
+    let (pp_stages, pp_stats) = probes[probes.len() / 2];
+    println!(
+        "prepacked-AB consumer critical-path A staging: {} of {} total \
+         ({} of {} stripes inline, {} ring wait)",
+        fmt_duration(pp_stages.pack_a),
+        fmt_duration(pp_stages.total()),
+        pp_stats.inline_packs,
+        pp_stats.inline_packs + pp_stats.prefetched,
+        fmt_duration(pp_stats.wait_s),
+    );
+    bench.record_scalar("serving/prepacked_ab_inline_pack_s", pp_stats.inline_pack_s);
+    bench.record_scalar("serving/prepacked_ab_consumer_wait_s", pp_stats.wait_s);
+    bench.record_scalar("serving/prepacked_ab_inline_packs", pp_stats.inline_packs as f64);
 
     // ---- overlapped b_k pipeline: prefetched B panels vs serial pack ----
     // The serial driver packs each B panel on the critical path; the

@@ -44,13 +44,31 @@ impl ServerConfig {
             sc.prepack_capacity = mb << 20;
         }
         // Legacy boolean schedule toggle; the richer `schedule` key
-        // below wins when both are present.
+        // below wins when both are present. Like `schedule`, it is the
+        // common knob: it sets both the raw-operand and the prepacked
+        // path.
         if let Some(ov) = cfg.get_bool("server", "overlap")? {
-            sc.schedule = if ov { Schedule::OverlapB } else { Schedule::Serial };
+            let schedule = if ov { Schedule::OverlapB } else { Schedule::Serial };
+            sc.schedule = schedule;
+            sc.schedule_prepacked = schedule;
         }
         if let Some(s) = cfg.get("server", "schedule") {
-            sc.schedule = Schedule::parse(s).ok_or_else(|| {
+            let schedule = Schedule::parse(s).ok_or_else(|| {
                 anyhow::anyhow!("[server] schedule = {s}: expected serial, overlap-b or overlap-ab")
+            })?;
+            sc.schedule = schedule;
+            sc.schedule_prepacked = schedule;
+        }
+        // Per-path override: registered-weight (prepacked) requests can
+        // run a different host schedule than raw operands — e.g.
+        // `schedule_prepacked = overlap-ab` routes the per-request A
+        // stripe through the prefetch ring for kernel-only serving
+        // while inline requests stay serial.
+        if let Some(s) = cfg.get("server", "schedule_prepacked") {
+            sc.schedule_prepacked = Schedule::parse(s).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "[server] schedule_prepacked = {s}: expected serial, overlap-b or overlap-ab"
+                )
             })?;
         }
         if let Some(d) = cfg.get_usize("server", "pipeline_depth")? {
@@ -151,6 +169,29 @@ mod tests {
             assert_eq!(sc.schedule.name(), name);
         }
         let bad = ConfigFile::parse("[server]\nschedule = warp-speed").unwrap();
+        assert!(ServerConfig::from_config(&bad).is_err());
+    }
+
+    #[test]
+    fn per_path_schedule_selection() {
+        // The per-path key overrides only the prepacked path.
+        let cfg =
+            ConfigFile::parse("[server]\nschedule = serial\nschedule_prepacked = overlap-ab")
+                .unwrap();
+        let sc = ServerConfig::from_config(&cfg).unwrap().0;
+        assert_eq!(sc.schedule, Schedule::Serial);
+        assert_eq!(sc.schedule_prepacked, Schedule::OverlapAB);
+        // The common knob sets both paths when the per-path key is
+        // absent — and so does the legacy boolean toggle.
+        let cfg = ConfigFile::parse("[server]\nschedule = overlap-b").unwrap();
+        let sc = ServerConfig::from_config(&cfg).unwrap().0;
+        assert_eq!(sc.schedule, Schedule::OverlapB);
+        assert_eq!(sc.schedule_prepacked, Schedule::OverlapB);
+        let cfg = ConfigFile::parse("[server]\noverlap = true").unwrap();
+        let sc = ServerConfig::from_config(&cfg).unwrap().0;
+        assert_eq!(sc.schedule_prepacked, Schedule::OverlapB);
+        // Unknown values hard-error like the common key.
+        let bad = ConfigFile::parse("[server]\nschedule_prepacked = warp-speed").unwrap();
         assert!(ServerConfig::from_config(&bad).is_err());
     }
 

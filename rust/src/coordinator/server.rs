@@ -22,12 +22,16 @@
 //! pool is that far behind, so batches keep growing instead of
 //! queueing). Each batch task executes its requests through the
 //! precision path chosen by the [`PrecisionPolicy`] (or the request's
-//! explicit backend) on the native numerics engine, under the host
-//! schedule configured by [`ServiceConfig::schedule`]. Requests against
-//! a registered weight are served from the prepacked cache: the
-//! weight's FP32→2×FP16 split and panel packing are done at most once
-//! per `(weight, path, s_b)` and every subsequent request pays only for
-//! preparing its A operand ([`crate::gemm::prepacked`]).
+//! explicit backend) on the native numerics engine, under a per-path
+//! host schedule: [`ServiceConfig::schedule`] for raw operands,
+//! [`ServiceConfig::schedule_prepacked`] for registered weights.
+//! Requests against a registered weight are served from the prepacked
+//! cache: the weight's FP32→2×FP16 split and panel packing are done at
+//! most once per `(weight, path, s_b)`, and under the overlapped
+//! prepacked schedules the per-request A stripe is prefetched through
+//! the pipeline ring too, so batch tasks run kernel-only sweeps with
+//! zero pack work on the critical path ([`crate::gemm::prepacked`],
+//! [`crate::gemm::blocked::gemm_prepacked_scheduled`]).
 //!
 //! By default batches run on the process-global pool; setting
 //! [`ServiceConfig::pool_threads`] gives the service a dedicated pool
@@ -49,7 +53,6 @@ use crate::coordinator::request::{BOperand, GemmRequest, GemmResponse, WeightEnt
 use crate::exec::pipeline::DEFAULT_PIPELINE_DEPTH;
 use crate::exec::pool::{self, Pool};
 use crate::gemm::backend::{default_schedule, Backend, GemmBackend, Schedule};
-use crate::gemm::blocked;
 use crate::gemm::cache::{CacheStats, PrepackCache, PrepackKey};
 use crate::gemm::error::GemmError;
 use crate::gemm::prepacked::PrepackedMatrix;
@@ -84,6 +87,17 @@ pub struct ServiceConfig {
     /// and the config file's `[server] schedule` / `[server] overlap`
     /// keys override.
     pub schedule: Schedule,
+    /// Host schedule for requests against **registered weights**
+    /// (prepacked B). With the weight's panels cached, the only operand
+    /// movement left per request is the A row-block stripe, which the
+    /// overlapped schedules route through the A-stripe prefetch ring so
+    /// batch tasks run kernel-only sweeps
+    /// ([`crate::gemm::blocked::gemm_prepacked_scheduled`]).
+    /// Bit-identical to `serial` either way. Defaults to the same
+    /// env-derived schedule as [`ServiceConfig::schedule`]; the
+    /// `[server] schedule` key sets both paths and
+    /// `[server] schedule_prepacked` overrides this one.
+    pub schedule_prepacked: Schedule,
     /// Prefetch-ring depth for [`Schedule::OverlapAB`]
     /// (`[server] pipeline_depth`; depth 2 = classic double buffer).
     pub pipeline_depth: usize,
@@ -101,6 +115,7 @@ impl Default for ServiceConfig {
             n_workers: default_workers(),
             prepack_capacity: DEFAULT_PREPACK_CAPACITY,
             schedule: default_schedule(),
+            schedule_prepacked: default_schedule(),
             pipeline_depth: DEFAULT_PIPELINE_DEPTH,
             pool_threads: 0,
         }
@@ -180,6 +195,7 @@ struct BatchCtx {
     policy: PrecisionPolicy,
     cache: Arc<PrepackCache>,
     schedule: Schedule,
+    schedule_prepacked: Schedule,
     pipeline_depth: usize,
     gate: Gate,
 }
@@ -214,6 +230,7 @@ impl GemmService {
             policy: cfg.policy.clone(),
             cache: Arc::clone(&prepack),
             schedule: cfg.schedule,
+            schedule_prepacked: cfg.schedule_prepacked,
             pipeline_depth: cfg.pipeline_depth,
             gate: Gate::new(),
         });
@@ -488,12 +505,17 @@ fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
     }
 }
 
-/// Execute one request on the decided path. Registered weights go
-/// through the prepack cache and the prepacked blocked entry points —
-/// bit-identical to the inline path for the same decision, since both
-/// run the same sweeps over equal panel bytes
-/// ([`crate::gemm::blocked::gemm_prepacked`]).
+/// Execute one request through one code path: a [`GemmBackend`] built
+/// from the decision, dispatching prepacked and raw operands alike.
+/// Registered weights go through the prepack cache and the prepacked
+/// entry points under [`BatchCtx::schedule_prepacked`] — bit-identical
+/// to the inline path for the same decision, since both run the same
+/// sweeps over equal panel bytes
+/// ([`crate::gemm::blocked::gemm_prepacked_scheduled`]).
 fn execute_request(req: &GemmRequest, decision: &PolicyDecision, ctx: &BatchCtx) -> Matrix<f32> {
+    let engine = GemmBackend::new(decision.backend)
+        .with_scale(decision.scale_exp)
+        .with_pipeline_depth(ctx.pipeline_depth);
     if let (Some(w), Some(path)) = (req.b.weight(), decision.prepack_path()) {
         // Normalize the key the way the panels are shared: both cube
         // orders execute the same fused kernel, and non-cube paths
@@ -515,13 +537,16 @@ fn execute_request(req: &GemmRequest, decision: &PolicyDecision, ctx: &BatchCtx)
         let packed = ctx
             .cache
             .get_or_insert_with(key, || PrepackedMatrix::prepack(&w.matrix, path));
-        return blocked::gemm_prepacked(&req.a, &packed);
+        // `packed` (an Arc) is held across the whole execution below:
+        // cache eviction or a weight purge racing this batch can drop
+        // the cache's own reference, but the panels the A-stripe
+        // prefetch ring has claimed stay alive until the ring is
+        // drained and this call returns (see gemm::cache module docs).
+        return engine
+            .with_schedule(ctx.schedule_prepacked)
+            .gemm_prepacked(&req.a, &packed);
     }
-    GemmBackend::new(decision.backend)
-        .with_scale(decision.scale_exp)
-        .with_schedule(ctx.schedule)
-        .with_pipeline_depth(ctx.pipeline_depth)
-        .gemm(&req.a, req.b.matrix())
+    engine.with_schedule(ctx.schedule).gemm(&req.a, req.b.matrix())
 }
 
 #[cfg(test)]
@@ -550,6 +575,8 @@ mod tests {
         assert!(d.prepack_capacity > 0);
         assert_eq!(d.pool_threads, 0, "default: shared global pool");
         assert_eq!(d.pipeline_depth, DEFAULT_PIPELINE_DEPTH);
+        // Both paths start from the same env-derived schedule.
+        assert_eq!(d.schedule_prepacked, d.schedule);
     }
 
     #[test]
@@ -738,6 +765,56 @@ mod tests {
                     assert_eq!(u.to_bits(), v.to_bits(), "backend {bk:?}");
                 }
             }
+        }
+        serial.shutdown();
+        overlapped.shutdown();
+        ab.shutdown();
+    }
+
+    #[test]
+    fn prepacked_schedules_serve_bit_identical_results() {
+        // The same registered weight served under every prepacked
+        // schedule: responses bit-match (the panels pin the numerics;
+        // only the A-stripe staging differs) and the cache still packs
+        // exactly once per (weight, path).
+        let serial = GemmService::start(ServiceConfig {
+            schedule_prepacked: Schedule::Serial,
+            ..small_cfg()
+        });
+        let overlapped = GemmService::start(ServiceConfig {
+            schedule_prepacked: Schedule::OverlapB,
+            ..small_cfg()
+        });
+        let ab = GemmService::start(ServiceConfig {
+            schedule_prepacked: Schedule::OverlapAB,
+            pipeline_depth: 3,
+            ..small_cfg()
+        });
+        let mut rng = Rng::new(11);
+        let w = Matrix::random_symmetric(40, 16, 0, &mut rng);
+        let ids = [
+            serial.register_weights(w.clone()),
+            overlapped.register_weights(w.clone()),
+            ab.register_weights(w.clone()),
+        ];
+        for _ in 0..3 {
+            let a = Matrix::random_symmetric(8, 40, 0, &mut rng);
+            let x = serial.gemm_blocking_prepacked(a.clone(), ids[0], None).expect("submit");
+            let y = overlapped.gemm_blocking_prepacked(a.clone(), ids[1], None).expect("submit");
+            let z = ab.gemm_blocking_prepacked(a, ids[2], None).expect("submit");
+            assert_eq!(x.backend, y.backend);
+            assert_eq!(x.backend, z.backend);
+            let cx = x.result.unwrap();
+            for other in [y.result.unwrap(), z.result.unwrap()] {
+                for (u, v) in cx.as_slice().iter().zip(other.as_slice()) {
+                    assert_eq!(u.to_bits(), v.to_bits());
+                }
+            }
+        }
+        for svc in [&serial, &overlapped, &ab] {
+            let s = svc.prepack_stats();
+            assert_eq!(s.misses, 1, "one pack per (weight, path): {s:?}");
+            assert_eq!(s.hits, 2, "subsequent requests served from cache: {s:?}");
         }
         serial.shutdown();
         overlapped.shutdown();

@@ -19,5 +19,5 @@
 pub mod pipeline;
 pub mod pool;
 
-pub use pipeline::{clamp_depth, DEFAULT_PIPELINE_DEPTH, MAX_PIPELINE_DEPTH};
+pub use pipeline::{clamp_depth, PrefetchStats, DEFAULT_PIPELINE_DEPTH, MAX_PIPELINE_DEPTH};
 pub use pool::{Pool, TaskHandle, TaskState};

@@ -20,6 +20,16 @@
 //!   identical to the sweeps' own `pack_a`), so the consuming sweeps
 //!   run kernel-only; this removes the last packing span from the
 //!   compute path, the ROADMAP's "next pipeline depth".
+//! * **Prepacked-AB** — the serving variant: B panels stream straight
+//!   from a [`PrepackedMatrix`] (pack-B is zero everywhere, not just
+//!   off the critical path) and the ring prefetches only A row-block
+//!   stripes — **one job per k block**, each stripe swept across every
+//!   column block before its slot recycles — so registered-weight
+//!   requests run kernel-only sweeps end to end
+//!   ([`gemm_prepacked_ab_core`] / [`cube_prepacked_ab_core`]).
+//!   Consumer-side accounting ([`PrefetchStats`]) records the only
+//!   A-staging time that can appear on the critical path of this
+//!   schedule: inline fallback packs and ring-wait stalls.
 //!
 //! **Ring discipline.** `depth` slot buffers circulate between a single
 //! prefetch job (claimed from the pool injector via
@@ -46,6 +56,7 @@
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Instant;
 
 use crate::exec::pool::{self, TaskHandle};
 use crate::gemm::blocked::{
@@ -53,6 +64,7 @@ use crate::gemm::blocked::{
     sweep_rows_f32_packed,
 };
 use crate::gemm::pack;
+use crate::gemm::prepacked::PrepackedMatrix;
 use crate::util::mat::Matrix;
 use crate::util::threads::SendPtr;
 
@@ -286,10 +298,39 @@ impl Drop for PrefetchGuard<'_> {
     }
 }
 
+/// Consumer-side accounting of one prefetched run: how every job's slot
+/// reached the consumer, and how much staging wall time landed on the
+/// critical path. `prefetched + inline_packs` always equals the job
+/// count; `inline_pack_s + wait_s` is zero exactly when the ring kept
+/// up (the kernel-only regime the prepacked serving path targets) —
+/// stalls behind a mid-pack prefetcher count as `wait_s`, so a ring
+/// that claims jobs but cannot pack them ahead of consumption does not
+/// masquerade as kernel-only.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PrefetchStats {
+    /// Jobs whose slot was packed ahead of time by the pool prefetch
+    /// task — zero pack work on the consumer.
+    pub prefetched: usize,
+    /// Jobs the consumer packed inline: unclaimed at consumption time
+    /// (queued-behind pool, serial degeneration, or depth 1).
+    pub inline_packs: usize,
+    /// Wall time the consumer spent packing inline.
+    pub inline_pack_s: f64,
+    /// Wall time the consumer spent blocked on the ring waiting for a
+    /// claimed-but-undelivered slot (the prefetcher mid-pack).
+    pub wait_s: f64,
+}
+
 /// Obtain job `s`'s packed slot: from the ready list if the prefetcher
-/// delivered it, by packing inline if it is still unclaimed, or by
-/// waiting iff the prefetcher is actively packing it right now.
-fn acquire_slot<P: Fn(usize, &mut PanelSlot)>(ring: &Ring, s: usize, pack: &P) -> PanelSlot {
+/// delivered it (`inline: None`), by packing inline if it is still
+/// unclaimed (`inline: Some(pack wall time)`), or by waiting iff the
+/// prefetcher is actively packing it right now (`waited_s` > 0).
+fn acquire_slot<P: Fn(usize, &mut PanelSlot)>(
+    ring: &Ring,
+    s: usize,
+    pack: &P,
+) -> (PanelSlot, Option<f64>, f64) {
+    let mut waited_s = 0.0f64;
     let mut st = ring.lock();
     loop {
         if st.poisoned {
@@ -297,7 +338,7 @@ fn acquire_slot<P: Fn(usize, &mut PanelSlot)>(ring: &Ring, s: usize, pack: &P) -
             panic!("pipeline prefetch task panicked while packing panels");
         }
         if let Some(pos) = st.ready.iter().position(|(i, _)| *i == s) {
-            return st.ready.swap_remove(pos).1;
+            return (st.ready.swap_remove(pos).1, None, waited_s);
         }
         if st.next_claim == s {
             st.next_claim += 1;
@@ -306,38 +347,61 @@ fn acquire_slot<P: Fn(usize, &mut PanelSlot)>(ring: &Ring, s: usize, pack: &P) -
             // list — a free slot must exist.
             let mut slot = st.free.pop().expect("free ring slot for inline pack");
             drop(st);
+            let t = Instant::now();
             pack(s, &mut slot);
-            return slot;
+            return (slot, Some(t.elapsed().as_secs_f64()), waited_s);
         }
+        let t = Instant::now();
         st = ring.wait(st);
+        waited_s += t.elapsed().as_secs_f64();
     }
 }
 
+/// [`run_prefetch_stats`] with the consumer-side accounting discarded —
+/// the hot-path entry used by every non-instrumented driver.
+pub(crate) fn run_prefetch<P, C>(depth: usize, n_jobs: usize, pack: P, consume: C)
+where
+    P: Fn(usize, &mut PanelSlot) + Sync,
+    C: FnMut(usize, &PanelSlot),
+{
+    let _ = run_prefetch_stats(depth, n_jobs, pack, consume);
+}
+
 /// Run `consume` over every job's packed slot in order, with up to
-/// `depth − 1` future jobs packed ahead by a pool prefetch task.
+/// `depth − 1` future jobs packed ahead by a pool prefetch task;
+/// returns the consumer-side [`PrefetchStats`].
 ///
 /// `pack(i, slot)` must fill the slot for job `i` deterministically (it
 /// runs on the prefetch task *or* inline on the consumer); `consume`
 /// always runs on the calling thread, strictly in job order — which is
 /// what preserves the serial drivers' per-cell accumulation order and
 /// hence bit-identity.
-pub(crate) fn run_prefetch<P, C>(depth: usize, n_jobs: usize, pack: P, mut consume: C)
+pub(crate) fn run_prefetch_stats<P, C>(
+    depth: usize,
+    n_jobs: usize,
+    pack: P,
+    mut consume: C,
+) -> PrefetchStats
 where
     P: Fn(usize, &mut PanelSlot) + Sync,
     C: FnMut(usize, &PanelSlot),
 {
+    let mut stats = PrefetchStats::default();
     let depth = clamp_depth(depth);
     let pool = pool::global();
     if pool.n_workers() < 2 || n_jobs < 2 || depth < 2 {
         // Nothing to overlap with (or overlap disabled by depth 1):
         // degenerate to the serial pack-then-consume loop, one reused
-        // slot, no detached task.
+        // slot, no detached task — every pack is on the critical path.
         let mut slot = PanelSlot::default();
         for i in 0..n_jobs {
+            let t = Instant::now();
             pack(i, &mut slot);
+            stats.inline_packs += 1;
+            stats.inline_pack_s += t.elapsed().as_secs_f64();
             consume(i, &slot);
         }
-        return;
+        return stats;
     }
     let ring = Arc::new(Ring {
         state: Mutex::new(RingState {
@@ -357,11 +421,20 @@ where
     };
     let _guard = PrefetchGuard { ring: &ring, handle: Some(handle) };
     for s in 0..n_jobs {
-        let slot = acquire_slot(&ring, s, &pack);
+        let (slot, inline, waited_s) = acquire_slot(&ring, s, &pack);
+        stats.wait_s += waited_s;
+        match inline {
+            Some(spent) => {
+                stats.inline_packs += 1;
+                stats.inline_pack_s += spent;
+            }
+            None => stats.prefetched += 1,
+        }
         consume(s, &slot);
         ring.lock().free.push(slot);
         ring.cv.notify_all();
     }
+    stats
 }
 
 /// Single-component overlapped-B driver — the pipeline counterpart of
@@ -496,6 +569,116 @@ fn cube_pipeline_dual(
     c
 }
 
+/// Single-component prepacked-B pipeline driver: B panels stream
+/// straight from the [`PrepackedMatrix`] (no pack-B work exists at
+/// all) while the ring prefetches only A row-block stripes — the
+/// consuming packed sweeps run kernel-only.
+///
+/// **Nest order.** The stripe for k block `pb` depends only on
+/// `(p0, kc)`, so the ring runs **one job per k block** and the
+/// consumer sweeps that stripe across *every* column block before
+/// releasing the slot (k-outer / column-inner) — each stripe is packed
+/// exactly once, instead of once per column block as the jb-outer
+/// serial nest does. Still **bit-identical** to
+/// `blocked::gemm_prepacked`: every output cell receives its k-block
+/// contributions in ascending `pb` order either way (cells in
+/// different column blocks never share an accumulation chain), the
+/// `pack_a` segments are byte-identical, and the per-block sweeps are
+/// the same shared code.
+pub(crate) fn gemm_prepacked_ab_core(
+    a: &Matrix<f32>,
+    b: &PrepackedMatrix,
+    depth: usize,
+) -> Matrix<f32> {
+    gemm_prepacked_ab_with_stats(a, b, depth).0
+}
+
+/// [`gemm_prepacked_ab_core`] returning the consumer-side
+/// [`PrefetchStats`] (the instrumented serving path).
+pub(crate) fn gemm_prepacked_ab_with_stats(
+    a: &Matrix<f32>,
+    b: &PrepackedMatrix,
+    depth: usize,
+) -> (Matrix<f32>, PrefetchStats) {
+    let (m, k) = a.shape();
+    let n = b.n();
+    let mut c = Matrix::zeros(m, n);
+    if m == 0 || n == 0 || k == 0 {
+        return (c, PrefetchStats::default());
+    }
+    let bm = exec_bm(m, host_block().bm);
+    let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
+    let (bk, bn) = (b.bk(), b.bn());
+    let stats = run_prefetch_stats(
+        depth,
+        b.k_blocks(),
+        |pb: usize, slot: &mut PanelSlot| {
+            let p0 = pb * bk;
+            pack_a_stripe(a, bm, p0, bk.min(k - p0), slot);
+        },
+        |pb: usize, slot: &PanelSlot| {
+            let p0 = pb * bk;
+            let kc = bk.min(k - p0);
+            for (jb, j0) in (0..n).step_by(bn).enumerate() {
+                sweep_rows_f32_packed(&slot.a, &slot.a_off, m, b.panel(jb, pb), &cp, n, bm, j0, kc);
+            }
+        },
+    );
+    (c, stats)
+}
+
+/// Dual-component prepacked-B pipeline driver (cube counterpart of
+/// [`gemm_prepacked_ab_core`], same one-job-per-k-block nest): cached
+/// dual-format B panels, each dual A stripe prefetched once, kernel-only
+/// fused sweeps.
+pub(crate) fn cube_prepacked_ab_core(
+    ah: &Matrix<f32>,
+    al: &Matrix<f32>,
+    b: &PrepackedMatrix,
+    inv_sf: f32,
+    depth: usize,
+) -> Matrix<f32> {
+    cube_prepacked_ab_with_stats(ah, al, b, inv_sf, depth).0
+}
+
+/// [`cube_prepacked_ab_core`] returning the consumer-side
+/// [`PrefetchStats`].
+pub(crate) fn cube_prepacked_ab_with_stats(
+    ah: &Matrix<f32>,
+    al: &Matrix<f32>,
+    b: &PrepackedMatrix,
+    inv_sf: f32,
+    depth: usize,
+) -> (Matrix<f32>, PrefetchStats) {
+    let (m, k) = ah.shape();
+    let n = b.n();
+    let mut c = Matrix::zeros(m, n);
+    if m == 0 || n == 0 || k == 0 {
+        return (c, PrefetchStats::default());
+    }
+    let bm = exec_bm(m, host_block().bm);
+    let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
+    let (bk, bn) = (b.bk(), b.bn());
+    let stats = run_prefetch_stats(
+        depth,
+        b.k_blocks(),
+        |pb: usize, slot: &mut PanelSlot| {
+            let p0 = pb * bk;
+            pack_a_stripe_dual(ah, al, bm, p0, bk.min(k - p0), slot);
+        },
+        |pb: usize, slot: &PanelSlot| {
+            let p0 = pb * bk;
+            let kc = bk.min(k - p0);
+            for (jb, j0) in (0..n).step_by(bn).enumerate() {
+                sweep_rows_cube_packed(
+                    &slot.a, &slot.a_off, m, b.panel(jb, pb), &cp, n, bm, j0, kc, inv_sf,
+                );
+            }
+        },
+    );
+    (c, stats)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -587,6 +770,57 @@ mod tests {
             assert_eq!(g.0, w.0, "prefetched B panel differs from serial pack");
             assert_eq!(g.1, w.1, "prefetched A stripe differs from serial packs");
         }
+    }
+
+    #[test]
+    fn prefetch_stats_account_every_job_exactly_once() {
+        for depth in [1usize, 2, 3] {
+            let stats = run_prefetch_stats(
+                depth,
+                7,
+                |i: usize, slot: &mut PanelSlot| {
+                    slot.b.clear();
+                    slot.b.push(i as f32);
+                },
+                |i: usize, slot: &PanelSlot| assert_eq!(slot.b, vec![i as f32], "depth {depth}"),
+            );
+            assert_eq!(stats.prefetched + stats.inline_packs, 7, "depth {depth}");
+            if depth < 2 || pool::global().n_workers() < 2 {
+                // Serial degeneration: every pack is on the critical
+                // path and the consumer never blocks on the ring.
+                assert_eq!(stats.prefetched, 0, "depth {depth}");
+                assert_eq!(stats.inline_packs, 7, "depth {depth}");
+                assert_eq!(stats.wait_s, 0.0, "depth {depth}");
+            }
+            assert!(stats.inline_pack_s >= 0.0);
+            assert!(stats.wait_s >= 0.0);
+            if stats.inline_packs == 0 {
+                assert_eq!(stats.inline_pack_s, 0.0);
+            }
+        }
+        // Empty runs account nothing.
+        let noop_pack = |_: usize, _: &mut PanelSlot| {};
+        let stats = run_prefetch_stats(2, 0, noop_pack, |_: usize, _: &PanelSlot| {});
+        assert_eq!(stats, PrefetchStats::default());
+    }
+
+    #[test]
+    fn prepacked_ab_stripes_match_serial_consumption_geometry() {
+        // The prepacked driver must walk the exact (jb, pb) grid the
+        // serial prepacked nest walks and feed byte-identical A stripes;
+        // full bit-identity of the results is pinned at the blocked
+        // entry points and in tests/properties.rs.
+        let mut rng = Rng::new(93);
+        let a = Matrix::random_symmetric(13, 70, 0, &mut rng);
+        let b = Matrix::random_symmetric(70, 37, 0, &mut rng);
+        let pp = PrepackedMatrix::prepack(&b, crate::gemm::prepacked::PrepackPath::Fp32);
+        let (c, stats) = gemm_prepacked_ab_with_stats(&a, &pp, 3);
+        let want = crate::gemm::blocked::gemm_prepacked(&a, &pp);
+        for (x, y) in c.as_slice().iter().zip(want.as_slice()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // One ring job per k block — each stripe packed exactly once.
+        assert_eq!(stats.prefetched + stats.inline_packs, pp.k_blocks());
     }
 
     #[test]

@@ -7,6 +7,7 @@
 use crate::exec::pipeline::DEFAULT_PIPELINE_DEPTH;
 use crate::gemm::cube::{cube_gemm, Accumulation};
 use crate::gemm::hgemm::{hgemm, AccumulateMode};
+use crate::gemm::prepacked::PrepackedMatrix;
 use crate::gemm::sgemm::sgemm;
 use crate::softfloat::split::SplitConfig;
 use crate::util::mat::Matrix;
@@ -257,6 +258,19 @@ impl GemmBackend {
             Backend::CubeTermwise => cube_gemm(a, b, self.split, Accumulation::Termwise),
         }
     }
+
+    /// `C = A · B` against a prepacked B operand, under this backend's
+    /// host schedule and pipeline depth — the serving tier's unified
+    /// dispatch ([`crate::gemm::blocked::gemm_prepacked_scheduled`]).
+    /// The packed panels fix the precision path and the numerics at
+    /// prepack time, so the result is independent of `self.backend` /
+    /// `self.split` / `self.fast` and **bit-identical** across
+    /// schedules and to the pack-on-the-fly entry point the operand
+    /// was prepared for (prepacked operands always execute through the
+    /// blocked engine — they *are* its panel format).
+    pub fn gemm_prepacked(&self, a: &Matrix<f32>, b: &PrepackedMatrix) -> Matrix<f32> {
+        crate::gemm::blocked::gemm_prepacked_scheduled(a, b, self.schedule, self.pipeline_depth)
+    }
 }
 
 #[cfg(test)]
@@ -337,6 +351,33 @@ mod tests {
                     for (x, y) in serial.as_slice().iter().zip(c.as_slice()) {
                         assert_eq!(x.to_bits(), y.to_bits(), "{bk} {schedule} depth {depth}");
                     }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prepacked_dispatch_is_bit_identical_across_schedules() {
+        use crate::gemm::blocked::gemm_prepacked;
+        use crate::gemm::prepacked::PrepackPath;
+        let mut rng = Rng::new(23);
+        let a = Matrix::random_symmetric(9, 90, 0, &mut rng);
+        let b = Matrix::random_symmetric(90, 21, 0, &mut rng);
+        let cases = [
+            (Backend::Fp32, PrepackPath::Fp32),
+            (Backend::Fp16, PrepackPath::Fp16),
+            (Backend::CubeTermwise, PrepackPath::Cube(SplitConfig::with_scale(12))),
+        ];
+        for (bk, path) in cases {
+            let pp = PrepackedMatrix::prepack(&b, path);
+            let want = gemm_prepacked(&a, &pp);
+            for schedule in Schedule::ALL {
+                let got = GemmBackend::new(bk)
+                    .with_schedule(schedule)
+                    .with_pipeline_depth(3)
+                    .gemm_prepacked(&a, &pp);
+                for (x, y) in want.as_slice().iter().zip(got.as_slice()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{bk} {schedule}");
                 }
             }
         }

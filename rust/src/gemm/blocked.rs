@@ -55,14 +55,22 @@
 //! paying that cost once per weight — outputs are bit-identical to the
 //! pack-on-the-fly path because the sweeps are shared
 //! ([`sweep_rows_f32`]/[`sweep_rows_cube`]) and the panel bytes are
-//! equal. See EXPERIMENTS.md §Serving-amortization.
+//! equal. The prepacked-overlapped entry points
+//! ([`gemm_prepacked_overlapped`], [`gemm_prepacked_overlapped_ab`],
+//! dispatched per [`Schedule`] by [`gemm_prepacked_scheduled`]) go one
+//! step further and route the remaining per-request pack work — the A
+//! row-block stripe — through the prefetch ring, so registered-weight
+//! serving runs the kernel-only packed sweeps with zero pack work on
+//! the critical path. See EXPERIMENTS.md §Serving-amortization.
 //!
 //! The measured before/after for this engine is recorded in
 //! EXPERIMENTS.md §Perf-iteration-log.
 
 use std::sync::OnceLock;
+use std::time::Instant;
 
-use crate::exec::pipeline;
+use crate::exec::pipeline::{self, PrefetchStats};
+use crate::gemm::backend::Schedule;
 use crate::gemm::cube::WideSplit;
 use crate::gemm::overlap;
 use crate::gemm::pack::{self, MR, NR};
@@ -273,6 +281,153 @@ pub fn gemm_prepacked(a: &Matrix<f32>, b: &PrepackedMatrix) -> Matrix<f32> {
         PrepackPath::Fp16 => hgemm_prepacked(a, b),
         PrepackPath::Cube(_) => cube_gemm_prepacked(a, b),
     }
+}
+
+/// GEMM against a prepacked B operand under an explicit host
+/// [`Schedule`] — the serving tier's single dispatch point
+/// ([`crate::gemm::backend::GemmBackend::gemm_prepacked`] and the
+/// coordinator's batch tasks land here). Every schedule is
+/// **bit-identical** to [`gemm_prepacked`]: the panel bytes were fixed
+/// at prepack time and all schedules run the same shared sweeps.
+///
+/// With B already packed, the only operand movement left to hide is
+/// the per-row-block A stripe: [`Schedule::Serial`] packs it inside the
+/// sweeps, [`Schedule::OverlapB`] routes it through the A-stripe
+/// prefetch ring at the classic double-buffer depth (the closest
+/// prepacked analogue of the B-panel prefetch), and
+/// [`Schedule::OverlapAB`] uses the configured ring `depth`.
+pub fn gemm_prepacked_scheduled(
+    a: &Matrix<f32>,
+    b: &PrepackedMatrix,
+    schedule: Schedule,
+    depth: usize,
+) -> Matrix<f32> {
+    match schedule {
+        Schedule::Serial => gemm_prepacked(a, b),
+        Schedule::OverlapB => gemm_prepacked_overlapped(a, b),
+        Schedule::OverlapAB => gemm_prepacked_overlapped_ab(a, b, depth),
+    }
+}
+
+/// [`gemm_prepacked`] with the next block's A row-block stripe
+/// prefetched through the classic two-slot ring (pipeline depth 2); B
+/// panels stream straight from the cached operand. Bit-identical to
+/// [`gemm_prepacked`].
+pub fn gemm_prepacked_overlapped(a: &Matrix<f32>, b: &PrepackedMatrix) -> Matrix<f32> {
+    gemm_prepacked_overlapped_ab(a, b, pipeline::DEFAULT_PIPELINE_DEPTH)
+}
+
+/// [`gemm_prepacked`] through the depth-configurable A-stripe ring
+/// ([`crate::exec::pipeline`]): a pool prefetch job packs only the next
+/// k block's A row-block stripe (dual high/low split included on the
+/// cube path, one ring job per k block — each stripe is packed exactly
+/// once and swept across every column block) while the kernel-only
+/// packed sweeps consume the current one against cached B panels —
+/// zero pack-A/pack-B work on the critical path once the ring is
+/// primed. Bit-identical to [`gemm_prepacked`] at every depth.
+pub fn gemm_prepacked_overlapped_ab(
+    a: &Matrix<f32>,
+    b: &PrepackedMatrix,
+    depth: usize,
+) -> Matrix<f32> {
+    match b.path() {
+        PrepackPath::Fp32 => sgemm_prepacked_overlapped_ab(a, b, depth),
+        PrepackPath::Fp16 => hgemm_prepacked_overlapped_ab(a, b, depth),
+        PrepackPath::Cube(_) => cube_gemm_prepacked_overlapped_ab(a, b, depth),
+    }
+}
+
+/// FP32 prepacked GEMM with the A stripe prefetched; bit-identical to
+/// [`sgemm_prepacked`].
+pub fn sgemm_prepacked_overlapped_ab(
+    a: &Matrix<f32>,
+    b: &PrepackedMatrix,
+    depth: usize,
+) -> Matrix<f32> {
+    assert_eq!(b.path(), PrepackPath::Fp32, "operand was prepacked for {:?}", b.path());
+    assert_eq!(a.cols(), b.k(), "inner dimensions must match: {} vs {}", a.cols(), b.k());
+    pipeline::gemm_prepacked_ab_core(a, b, depth)
+}
+
+/// FP16 prepacked GEMM with the A stripe prefetched (A converted per
+/// call exactly as [`hgemm_prepacked`] does); bit-identical to it.
+pub fn hgemm_prepacked_overlapped_ab(
+    a: &Matrix<f32>,
+    b: &PrepackedMatrix,
+    depth: usize,
+) -> Matrix<f32> {
+    assert_eq!(b.path(), PrepackPath::Fp16, "operand was prepacked for {:?}", b.path());
+    assert_eq!(a.cols(), b.k(), "inner dimensions must match: {} vs {}", a.cols(), b.k());
+    let ah = a.map(|v| F16::from_f32_rn(v).to_f32());
+    pipeline::gemm_prepacked_ab_core(&ah, b, depth)
+}
+
+/// SGEMM-cube over prepacked dual-component B panels with the dual A
+/// stripe prefetched; bit-identical to [`cube_gemm_prepacked`].
+pub fn cube_gemm_prepacked_overlapped_ab(
+    a: &Matrix<f32>,
+    b: &PrepackedMatrix,
+    depth: usize,
+) -> Matrix<f32> {
+    let cfg = match b.path() {
+        PrepackPath::Cube(cfg) => cfg,
+        p => panic!("operand was prepacked for {p:?}, not the cube path"),
+    };
+    assert_eq!(a.cols(), b.k(), "inner dimensions must match: {} vs {}", a.cols(), b.k());
+    let asp = WideSplit::of(a, cfg);
+    let inv_sf = 1.0f32 / cfg.scale_factor();
+    pipeline::cube_prepacked_ab_core(&asp.high, &asp.low, b, inv_sf, depth)
+}
+
+/// Instrumented [`gemm_prepacked_overlapped_ab`]: same computation,
+/// same bits, plus consumer-side critical-path accounting. The
+/// returned [`StageBreakdown`] carries the only A-staging time that
+/// can reach the critical path of this schedule — `pack_b` is
+/// **structurally zero** (B panels come prepacked) and `pack_a` is
+/// inline fallback packs **plus** stalls waiting on a mid-pack
+/// prefetcher ([`PrefetchStats::inline_pack_s`] + `wait_s`), zero
+/// whenever the ring kept up; `kernel` carries the remaining (sweep)
+/// span. The per-request A operand prep (FP16 rounding / cube split)
+/// is excluded from the breakdown, exactly as
+/// [`cube_gemm_blocked_staged`] excludes the operand split — the
+/// stages cover the consuming nest only. This is the acceptance probe
+/// for the kernel-only serving claim — see EXPERIMENTS.md
+/// §Serving-amortization.
+pub fn gemm_prepacked_overlapped_staged(
+    a: &Matrix<f32>,
+    b: &PrepackedMatrix,
+    depth: usize,
+) -> (Matrix<f32>, StageBreakdown, PrefetchStats) {
+    assert_eq!(a.cols(), b.k(), "inner dimensions must match: {} vs {}", a.cols(), b.k());
+    let (c, stats, total) = match b.path() {
+        PrepackPath::Fp32 => {
+            let t0 = Instant::now();
+            let (c, stats) = pipeline::gemm_prepacked_ab_with_stats(a, b, depth);
+            (c, stats, t0.elapsed().as_secs_f64())
+        }
+        PrepackPath::Fp16 => {
+            let ah = a.map(|v| F16::from_f32_rn(v).to_f32());
+            let t0 = Instant::now();
+            let (c, stats) = pipeline::gemm_prepacked_ab_with_stats(&ah, b, depth);
+            (c, stats, t0.elapsed().as_secs_f64())
+        }
+        PrepackPath::Cube(cfg) => {
+            let asp = WideSplit::of(a, cfg);
+            let inv_sf = 1.0f32 / cfg.scale_factor();
+            let t0 = Instant::now();
+            let (c, stats) =
+                pipeline::cube_prepacked_ab_with_stats(&asp.high, &asp.low, b, inv_sf, depth);
+            (c, stats, t0.elapsed().as_secs_f64())
+        }
+    };
+    let staging = stats.inline_pack_s + stats.wait_s;
+    let stages = StageBreakdown {
+        pack_a: staging,
+        pack_b: 0.0,
+        kernel: (total - staging).max(0.0),
+        c_update: 0.0,
+    };
+    (c, stages, stats)
 }
 
 /// FP32 blocked GEMM over prepacked B panels.
@@ -782,6 +937,81 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn prepacked_overlapped_bit_identical_at_every_depth_and_schedule() {
+        // Awkward edges, including multiple k blocks (several prefetched
+        // A stripes per column block); the random-shape sweep lives in
+        // tests/properties.rs (prop_prepacked_prefetch_bit_identical).
+        let bk = host_block().bk;
+        let mut rng = Rng::new(56);
+        for (m, k, n) in [(1, 1, 1), (5, 2 * bk + 3, 9), (33, 65, 24)] {
+            let a = Matrix::random_symmetric(m, k, 0, &mut rng);
+            let b = Matrix::random_symmetric(k, n, 0, &mut rng);
+            let paths = [
+                PrepackPath::Fp32,
+                PrepackPath::Fp16,
+                PrepackPath::Cube(SplitConfig::with_scale(12)),
+            ];
+            for path in paths {
+                let pp = PrepackedMatrix::prepack(&b, path);
+                let want = gemm_prepacked(&a, &pp);
+                let check = |got: &Matrix<f32>, what: &str| {
+                    for (x, y) in want.as_slice().iter().zip(got.as_slice()) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "{what} {path:?} {m}x{k}x{n}");
+                    }
+                };
+                check(&gemm_prepacked_overlapped(&a, &pp), "overlapped");
+                for depth in [1usize, 2, 3] {
+                    check(&gemm_prepacked_overlapped_ab(&a, &pp, depth), "ab");
+                }
+                for schedule in Schedule::ALL {
+                    check(&gemm_prepacked_scheduled(&a, &pp, schedule, 2), schedule.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prepacked_staged_driver_is_kernel_only_on_the_critical_path() {
+        let mut rng = Rng::new(57);
+        let a = Matrix::random_symmetric(20, 70, 0, &mut rng);
+        let b = Matrix::random_symmetric(70, 30, 0, &mut rng);
+        let pp = PrepackedMatrix::prepack(&b, PrepackPath::Cube(SplitConfig::default()));
+        let want = gemm_prepacked(&a, &pp);
+        let (c, st, stats) = gemm_prepacked_overlapped_staged(&a, &pp, 2);
+        for (x, y) in c.as_slice().iter().zip(want.as_slice()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // B panels come prepacked: pack-B can never reach the critical
+        // path — it is structurally zero, not merely small.
+        assert_eq!(st.pack_b, 0.0);
+        // One ring job per k block (each stripe packed exactly once),
+        // and the only critical-path A-staging time is inline fallback
+        // packs plus ring stalls (zero when the ring kept up).
+        assert_eq!(stats.prefetched + stats.inline_packs, pp.k_blocks());
+        assert_eq!(st.pack_a, stats.inline_pack_s + stats.wait_s);
+        if stats.inline_packs == 0 && stats.wait_s == 0.0 {
+            assert_eq!(st.pack_a, 0.0, "kernel-only consumption must show zero pack stages");
+        }
+        assert!(st.kernel > 0.0);
+        assert_eq!(st.c_update, 0.0);
+    }
+
+    #[test]
+    fn prepacked_overlapped_path_mismatch_panics() {
+        let b = Matrix::zeros(4, 4);
+        let pp = PrepackedMatrix::prepack(&b, PrepackPath::Fp16);
+        let a = Matrix::zeros(2, 4);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            cube_gemm_prepacked_overlapped_ab(&a, &pp, 2)
+        }));
+        assert!(r.is_err());
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            sgemm_prepacked_overlapped_ab(&a, &pp, 2)
+        }));
+        assert!(r.is_err());
     }
 
     #[test]

@@ -19,6 +19,19 @@
 //! stalls workers hitting other entries. Two workers racing on the same
 //! cold key may both pack; the second insert discards its copy and
 //! adopts the first — wasted work once per race, no inconsistency.
+//!
+//! **Eviction vs in-flight batches.** Lookups hand out
+//! `Arc<PrepackedMatrix>`, and batch tasks hold that `Arc` for the
+//! request's whole execution — including the prepacked A-stripe
+//! prefetch pipeline, whose detached pool job reads the panels through
+//! a lifetime-erased borrow that the driver joins before returning
+//! ([`crate::exec::pipeline`]). Eviction and [`PrepackCache::purge_weight`]
+//! therefore only drop the *cache's* reference: panels already claimed
+//! by an in-flight ring stay alive and byte-stable until the batch
+//! finishes, while the freed bytes stop counting against capacity
+//! immediately (the entry's memory is reclaimed when the last holder
+//! drops). Pinned by `evicted_entry_stays_alive_for_holders` below and
+//! the eviction-race test in `tests/executor.rs`.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -305,6 +318,30 @@ mod tests {
         // The survivor is the most recent insert.
         assert!(cache.get(&key(4, 16)).is_some());
         assert!(cache.get(&key(1, 16)).is_none());
+    }
+
+    #[test]
+    fn evicted_entry_stays_alive_for_holders() {
+        // An Arc handed out before eviction keeps the packed panels
+        // alive and byte-stable while the cache moves on — the property
+        // in-flight prefetched batches rely on (the server holds the
+        // Arc for the request's lifetime; see module docs).
+        let one = packed(16, 1).bytes();
+        let cache = PrepackCache::new(one + one / 2); // room for ~1 entry
+        let held = cache.get_or_insert_with(key(1, 16), || packed(16, 1));
+        let before: Vec<f32> = held.panel(0, 0).to_vec();
+        for w in 2..=5u64 {
+            cache.get_or_insert_with(key(w, 16), || packed(16, w));
+        }
+        assert!(cache.get(&key(1, 16)).is_none(), "entry 1 evicted");
+        assert!(cache.stats().evictions >= 1);
+        assert_eq!(held.panel(0, 0), &before[..], "held Arc unaffected by eviction");
+        assert_eq!(held.n(), 16);
+        // purge_weight on a held entry is equally harmless.
+        let held2 = cache.get_or_insert_with(key(9, 16), || packed(16, 9));
+        cache.purge_weight(9);
+        assert_eq!(held2.n(), 16);
+        assert!(!held2.panel(0, 0).is_empty());
     }
 
     #[test]

@@ -26,6 +26,16 @@
 //! prepacked at `s_b = 12` cannot serve a request decided at `s_b = 8`,
 //! which is why the serving cache ([`crate::gemm::cache`]) keys on the
 //! scaling parameters as well as the shape and path.
+//!
+//! Consumption is schedule-agnostic: the panel bytes here feed the
+//! serial prepacked nest and the A-stripe prefetch pipeline alike
+//! ([`crate::gemm::blocked::gemm_prepacked_scheduled`] threads the
+//! host [`crate::gemm::backend::Schedule`] knob through), and every
+//! schedule is bit-identical because the panels are immutable after
+//! [`PrepackedMatrix::prepack`] and all schedules run the same shared
+//! sweeps. The panel grid accessors ([`PrepackedMatrix::k_blocks`],
+//! [`PrepackedMatrix::n_blocks`]) expose the geometry the pipeline's
+//! job list must replay.
 
 use crate::gemm::blocked::host_block;
 use crate::gemm::cube::WideSplit;
@@ -147,6 +157,18 @@ impl PrepackedMatrix {
         self.bn
     }
 
+    /// Number of k blocks in the packed panel grid
+    /// (`ceil(k / bk)`; 0 when `k == 0`).
+    pub fn k_blocks(&self) -> usize {
+        self.k_blocks
+    }
+
+    /// Number of column blocks in the packed panel grid
+    /// (`ceil(n / bn)`; 0 when `n == 0` or `k == 0`).
+    pub fn n_blocks(&self) -> usize {
+        self.panels.len() / self.k_blocks.max(1)
+    }
+
     /// The precision path this operand was prepared for.
     pub fn path(&self) -> PrepackPath {
         self.path
@@ -183,6 +205,9 @@ mod tests {
         let pp = PrepackedMatrix::prepack_with_block(&b, PrepackPath::Fp32, block);
         assert_eq!(pp.k(), 70);
         assert_eq!(pp.n(), 37);
+        // 70 / bk=32 → 3 k blocks; 37 / bn=16 → 3 column blocks.
+        assert_eq!(pp.k_blocks(), 3);
+        assert_eq!(pp.n_blocks(), 3);
         let mut out = Vec::new();
         for (jb, j0) in (0..37).step_by(block.bn).enumerate() {
             let nc = block.bn.min(37 - j0);
@@ -227,9 +252,12 @@ mod tests {
         let pp = PrepackedMatrix::prepack(&b, PrepackPath::Fp32);
         assert_eq!(pp.k(), 0);
         assert_eq!(pp.n(), 5);
+        assert_eq!(pp.k_blocks(), 0);
+        assert_eq!(pp.n_blocks(), 0);
         let b: Matrix<f32> = Matrix::zeros(5, 0);
         let pp = PrepackedMatrix::prepack(&b, PrepackPath::Fp16);
         assert_eq!(pp.n(), 0);
+        assert_eq!(pp.n_blocks(), 0);
         assert!(pp.bytes() < 1024);
     }
 }

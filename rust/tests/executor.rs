@@ -1,12 +1,14 @@
 //! Executor-subsystem integration tests: the persistent pool under
-//! concurrent serving load (ISSUE 4 stress satellite).
+//! concurrent serving load (ISSUE 4 stress satellite, extended by the
+//! ISSUE 5 registered-weight and eviction-race satellites).
 //!
 //! The scenario the refactor exists for: several client threads
 //! submitting mixed-shape GEMMs against one `GemmService` whose batch
 //! tasks, blocked sweeps and A+B prefetch jobs all draw from worker
 //! pools — asserting every served result bit-matches the serial blocked
-//! reference and the service's pool never runs more concurrent tasks
-//! than its configured worker count.
+//! reference, the prepack-cache counters balance, and the service's
+//! pool never runs more concurrent tasks than its configured worker
+//! count.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -14,10 +16,15 @@ use std::time::Duration;
 
 use sgemm_cube::coordinator::batcher::BatcherConfig;
 use sgemm_cube::coordinator::policy::PrecisionPolicy;
+use sgemm_cube::coordinator::request::WeightId;
 use sgemm_cube::coordinator::server::{GemmService, ServiceConfig};
 use sgemm_cube::exec::pool::Pool;
 use sgemm_cube::gemm::backend::{Backend, Schedule};
-use sgemm_cube::gemm::blocked::{cube_gemm_blocked, hgemm_blocked, sgemm_blocked};
+use sgemm_cube::gemm::blocked::{
+    cube_gemm_blocked, gemm_prepacked, gemm_prepacked_overlapped_ab, hgemm_blocked, sgemm_blocked,
+};
+use sgemm_cube::gemm::cache::{PrepackCache, PrepackKey};
+use sgemm_cube::gemm::prepacked::{PrepackPath, PrepackedMatrix};
 use sgemm_cube::softfloat::split::SplitConfig;
 use sgemm_cube::util::mat::Matrix;
 use sgemm_cube::util::rng::Rng;
@@ -98,6 +105,144 @@ fn concurrent_mixed_shape_serving_bit_matches_serial_and_bounds_the_pool() {
 
     let svc = Arc::try_unwrap(svc).ok().expect("all clients dropped their handles");
     svc.shutdown();
+}
+
+#[test]
+fn registered_weight_serving_bit_matches_serial_with_clean_cache_stats() {
+    // ISSUE 5 satellite: N clients hammering one service with
+    // registered weights under a dedicated 2-worker pool and the
+    // prepacked A-stripe prefetch schedule. Every response must
+    // bit-match the serial blocked reference (prepacked panels are
+    // bit-identical to pack-on-the-fly by construction), the cache
+    // counters must balance (hits + misses == prepacked requests, no
+    // evictions at this capacity), and the pool must never run more
+    // concurrent batch tasks than its worker count.
+    let svc = Arc::new(GemmService::start(ServiceConfig {
+        batcher: BatcherConfig { max_batch: 3, max_wait: Duration::from_millis(1) },
+        policy: PrecisionPolicy::default(),
+        n_workers: 4,
+        pool_threads: 2,
+        schedule: Schedule::OverlapAB,
+        schedule_prepacked: Schedule::OverlapAB,
+        pipeline_depth: 3,
+        ..Default::default()
+    }));
+    let mut rng = Rng::new(600);
+    let shapes = [(40usize, 17usize), (96, 8), (130, 25)];
+    let weights: Arc<Vec<(WeightId, Matrix<f32>)>> = Arc::new(
+        shapes
+            .iter()
+            .map(|&(k, n)| {
+                let w = Matrix::random_symmetric(k, n, 0, &mut rng);
+                (svc.register_weights(w.clone()), w)
+            })
+            .collect(),
+    );
+
+    const CLIENTS: u64 = 4;
+    const PER_CLIENT: usize = 6;
+    let mut threads = Vec::new();
+    for t in 0..CLIENTS {
+        let svc = Arc::clone(&svc);
+        let weights = Arc::clone(&weights);
+        threads.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(700 + t);
+            for i in 0..PER_CLIENT {
+                let (id, w) = &weights[(t as usize + i) % weights.len()];
+                let m = [3usize, 9, 16][i % 3];
+                let a = Matrix::random_symmetric(m, w.rows(), 0, &mut rng);
+                let backend = match i % 3 {
+                    0 => None, // policy decides (cube for moderate inputs)
+                    1 => Some(Backend::Fp32),
+                    _ => Some(Backend::CubeTermwise),
+                };
+                let resp = svc.gemm_blocking_prepacked(a.clone(), *id, backend).expect("submit");
+                let c = resp.result.expect("request failed");
+                let want = serial_reference(&a, w, resp.backend, resp.scale_exp);
+                for (x, y) in c.as_slice().iter().zip(want.as_slice()) {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "m={m} weight {id:?} backend {} differs from serial reference",
+                        resp.backend
+                    );
+                }
+            }
+        }));
+    }
+    for th in threads {
+        th.join().expect("client thread panicked");
+    }
+
+    let total = CLIENTS * PER_CLIENT as u64;
+    let report = svc.metrics().report();
+    assert_eq!(report.requests, total);
+    assert_eq!(report.errors, 0);
+    let s = svc.prepack_stats();
+    assert_eq!(s.hits + s.misses, total, "one cache lookup per prepacked request: {s:?}");
+    // 3 weights × {fp32, cube} = 6 distinct keys: each packs at least
+    // once (racing cold lookups may add a few extra misses) and stays
+    // resident — the adopt-on-race insert never duplicates entries.
+    assert!(s.misses >= 6, "each (weight, path) pair packs at least once: {s:?}");
+    assert_eq!(s.entries, 6, "one resident entry per (weight, path): {s:?}");
+    assert_eq!(s.evictions, 0, "capacity was never exceeded: {s:?}");
+    let (high, workers) = (svc.pool().high_water(), svc.pool().n_workers());
+    assert!(high >= 1, "batches must actually run on the service pool");
+    assert!(high <= workers, "pool ran {high} concurrent tasks with only {workers} workers");
+
+    let svc = Arc::try_unwrap(svc).ok().expect("all clients dropped their handles");
+    svc.shutdown();
+}
+
+#[test]
+fn cache_eviction_racing_an_in_flight_prefetched_batch_is_harmless() {
+    // ISSUE 5 satellite: the cache hands out `Arc<PrepackedMatrix>` and
+    // the batch holds that Arc for its lifetime, so eviction racing the
+    // A-stripe prefetch ring must neither invalidate panels the ring
+    // has already claimed nor perturb a single output bit. The tiny
+    // capacity below makes every insert from the evictor thread evict.
+    let cfg = SplitConfig::with_scale(12);
+    let mut rng = Rng::new(800);
+    let b = Matrix::random_symmetric(130, 25, 0, &mut rng);
+    let probe = PrepackedMatrix::prepack(&b, PrepackPath::Cube(cfg));
+    let cache = Arc::new(PrepackCache::new(probe.bytes() + probe.bytes() / 2));
+    let key = |weight: u64| PrepackKey {
+        weight,
+        k: 130,
+        n: 25,
+        backend: Backend::CubeTermwise,
+        scale_exp: 12,
+    };
+    let held = cache.get_or_insert_with(key(1), || probe.clone());
+    let a = Matrix::random_symmetric(16, 130, 0, &mut rng);
+    let want = gemm_prepacked(&a, &held);
+
+    let evictor = {
+        let cache = Arc::clone(&cache);
+        let b = b.clone();
+        std::thread::spawn(move || {
+            for w in 2..40u64 {
+                cache.get_or_insert_with(key(w), || {
+                    PrepackedMatrix::prepack(&b, PrepackPath::Cube(cfg))
+                });
+            }
+        })
+    };
+    for round in 0..10 {
+        let got = gemm_prepacked_overlapped_ab(&a, &held, 3);
+        for (x, y) in got.as_slice().iter().zip(want.as_slice()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "round {round}");
+        }
+    }
+    evictor.join().expect("evictor thread panicked");
+    let s = cache.stats();
+    assert!(s.evictions >= 1, "the storm must actually evict: {s:?}");
+    assert!(cache.get(&key(1)).is_none(), "held key evicted while its Arc stayed usable");
+    // The held operand is still fully intact after the storm.
+    let again = gemm_prepacked_overlapped_ab(&a, &held, 2);
+    for (x, y) in again.as_slice().iter().zip(want.as_slice()) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
 }
 
 #[test]

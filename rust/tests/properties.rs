@@ -346,6 +346,72 @@ fn prop_ab_prefetch_bit_identical_to_serial_blocked() {
 }
 
 #[test]
+fn prop_prepacked_prefetch_bit_identical() {
+    // ISSUE 5 requirement: the prepacked A-stripe prefetch path (cached
+    // B panels + prefetched A) must be byte-for-byte equal to serial
+    // `gemm_prepacked` across the fp32/fp16/cube paths, random shapes
+    // including zero dims, pipeline depth ∈ {1, 2, 3}, and regardless
+    // of whether the operand came fresh from a pack (cache miss) or out
+    // of the LRU (cache hit).
+    use sgemm_cube::gemm::backend::Backend;
+    use sgemm_cube::gemm::blocked::{gemm_prepacked_overlapped, gemm_prepacked_overlapped_ab};
+    use sgemm_cube::gemm::cache::{PrepackCache, PrepackKey};
+    use sgemm_cube::gemm::prepacked::{PrepackPath, PrepackedMatrix};
+    let bk = host_block().bk;
+    property("prepacked A-stripe prefetch == serial prepacked, bitwise", 8, |g: &mut Gen| {
+        // Zero extents ride along: each dimension independently has a
+        // small chance of being zero.
+        let m = if g.case == 1 { 0 } else { g.usize_in(1, 41) };
+        // Bias k across the b_k boundary so several stripes are
+        // prefetched per column block.
+        let k = match g.case {
+            2 => 0,
+            _ if g.bool() => g.usize_in(1, bk + 1),
+            _ => g.usize_in(bk + 1, 2 * bk + 5),
+        };
+        let n = if g.case == 3 { 0 } else { g.usize_in(1, 65) };
+        let mut rng = Rng::new(g.u64());
+        let a = Matrix::random_symmetric(m, k, 0, &mut rng);
+        let b = Matrix::random_symmetric(k, n, 0, &mut rng);
+        let cache = PrepackCache::new(64 << 20);
+        let cases = [
+            (Backend::Fp32, 0, PrepackPath::Fp32, "fp32"),
+            (Backend::Fp16, 0, PrepackPath::Fp16, "fp16"),
+            (Backend::CubeTermwise, 12, PrepackPath::Cube(SplitConfig::with_scale(12)), "cube"),
+        ];
+        for (backend, scale_exp, path, what) in cases {
+            let key = PrepackKey { weight: 1, k, n, backend, scale_exp };
+            // Lookup 0 misses (packs fresh), lookup 1 hits the LRU; the
+            // prefetched path must be bit-identical either way.
+            for lookup in 0..2 {
+                let pp = cache.get_or_insert_with(key, || PrepackedMatrix::prepack(&b, path));
+                let want = gemm_prepacked(&a, &pp);
+                let mut candidates = vec![(gemm_prepacked_overlapped(&a, &pp), "d2".to_string())];
+                for depth in [1usize, 2, 3] {
+                    let got = gemm_prepacked_overlapped_ab(&a, &pp, depth);
+                    candidates.push((got, format!("ab d{depth}")));
+                }
+                for (got, which) in &candidates {
+                    if want.shape() != got.shape() {
+                        return Err(format!("{what} {which} lookup {lookup} ({m},{k},{n}): shape"));
+                    }
+                    for (u, v) in want.as_slice().iter().zip(got.as_slice()) {
+                        if u.to_bits() != v.to_bits() {
+                            return Err(format!(
+                                "{what} {which} lookup {lookup} ({m},{k},{n}): {u} vs {v}"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        let s = cache.stats();
+        qc_assert!(s.misses == 3 && s.hits == 3, "one miss + one hit per path: {s:?}");
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_degenerate_zero_dims_never_panic() {
     // ISSUE requirement: m, n or k of zero returns an empty/zero result
     // through every engine entry point — serial, overlapped, prepacked —
@@ -383,9 +449,12 @@ fn prop_degenerate_zero_dims_never_panic() {
         for path in [PrepackPath::Fp32, PrepackPath::Fp16, PrepackPath::Cube(cfg)] {
             let pp = PrepackedMatrix::prepack(&b, path);
             assert_eq!((pp.k(), pp.n()), (k, n), "{ctx} {path:?}");
-            let c = gemm_prepacked(&a, &pp);
-            assert_eq!(c.shape(), (m, n), "{ctx} {path:?}");
-            assert!(c.as_slice().iter().all(|&v| v == 0.0), "{ctx} {path:?}");
+            let serial = gemm_prepacked(&a, &pp);
+            let prefetched = sgemm_cube::gemm::blocked::gemm_prepacked_overlapped_ab(&a, &pp, 2);
+            for c in [&serial, &prefetched] {
+                assert_eq!(c.shape(), (m, n), "{ctx} {path:?}");
+                assert!(c.as_slice().iter().all(|&v| v == 0.0), "{ctx} {path:?}");
+            }
         }
         // Packing with zero extents yields empty panel sets, not reads
         // out of bounds.

@@ -103,6 +103,10 @@ def main():
     print(f"| `serving/cube_repack` | {fmt_s(med('serving/cube_repack/'))} | split+pack per request |")
     print(f"| `serving/cube_prepacked` | {fmt_s(med('serving/cube_prepacked/'))} | panels from cache |")
     print(f"| `serving/prepacked_speedup` | {fmt_x(med('serving/prepacked_speedup/'))} | gate: ≥ 1.2× |")
+    print(f"| `serving/cube_prepacked_ab` | {fmt_s(med('serving/cube_prepacked_ab/'))} | cached B + prefetched A (kernel-only) |")
+    print(f"| `serving/prepacked_ab_speedup` | {fmt_x(med('serving/prepacked_ab_speedup/'))} | gate: ≥ 1.0× vs repack |")
+    print(f"| `serving/prepacked_ab_inline_pack_s` | {fmt_s(med('serving/prepacked_ab_inline_pack_s'))} | consumer inline packs (≈ 0 when the ring keeps up) |")
+    print(f"| `serving/prepacked_ab_consumer_wait_s` | {fmt_s(med('serving/prepacked_ab_consumer_wait_s'))} | consumer stalls behind the prefetcher (≈ 0 when the ring keeps up) |")
 
     print("\n## §Overlap\n")
     print("| record | value | note |")
