@@ -19,9 +19,15 @@
 //! keeps its 8×1024×1024 shape in both modes (it is cheap — `m = 8` —
 //! and the CI gate pins that exact shape).
 
+use std::sync::Arc;
+
+use sgemm_cube::coordinator::metrics::Metrics;
+use sgemm_cube::coordinator::{ShardConfig, ShardRouter};
 use sgemm_cube::exec::pipeline::DEFAULT_PIPELINE_DEPTH;
 use sgemm_cube::exec::pool::{self, Pool};
 use sgemm_cube::experiments::fig11_blocking_perf;
+use sgemm_cube::gemm::backend::{Backend, Schedule};
+use sgemm_cube::gemm::cache::PrepackCache;
 use sgemm_cube::gemm::blocked::{
     cube_gemm_blocked, cube_gemm_blocked_overlapped, cube_gemm_blocked_overlapped_ab,
     cube_gemm_blocked_staged, cube_gemm_prepacked, gemm_prepacked_overlapped_ab,
@@ -158,6 +164,61 @@ fn main() {
     bench.record_scalar("serving/prepacked_ab_inline_pack_s", pp_stats.inline_pack_s);
     bench.record_scalar("serving/prepacked_ab_consumer_wait_s", pp_stats.wait_s);
     bench.record_scalar("serving/prepacked_ab_inline_packs", pp_stats.inline_packs as f64);
+
+    // ---- resilient serving: column-shard fan-out and failover ----
+    // The same serving weight column-partitioned across 4 logical
+    // shards (coordinator::shard): slice panels are cached per shard,
+    // requests fan out one slice-GEMM per live shard and recombine
+    // bit-identically. shard_scaling is the healthy 4-shard router
+    // against the single prepacked run (fan-out + recombine overhead on
+    // a 1-core runner, parallel slices on multi-core); killing a shard
+    // reassigns its slice to a survivor, and failover_overhead is the
+    // degraded 3-of-4 median against the healthy sharded median —
+    // bench-smoke asserts both records exist and stay within sane
+    // bounds rather than pinning a ratio (the split is runner-core
+    // dependent).
+    println!("\nsharded serving at {sm}x{skn}x{skn} (4 column shards, shared prepack cache):");
+    let shard_cache = Arc::new(PrepackCache::new(256 << 20));
+    let router = Arc::new(ShardRouter::new(
+        1,
+        &w,
+        ShardConfig { count: 4, ..Default::default() },
+        shard_cache,
+        Arc::new(Metrics::new()),
+    ));
+    let shard_gemm = |r: &Arc<ShardRouter>| {
+        r.gemm(
+            &a_act,
+            Backend::CubeTermwise,
+            cfg.scale_exp,
+            PrepackPath::Cube(cfg),
+            Schedule::Serial,
+            DEFAULT_PIPELINE_DEPTH,
+            None,
+        )
+        .expect("sharded gemm")
+    };
+    black_box(shard_gemm(&router)); // pack all slice panels once, off the clock
+    let shard_median = bench
+        .bench(&format!("serving/cube_sharded4/{sm}x{skn}x{skn}"), Some(sflops), || {
+            shard_gemm(&router)
+        })
+        .seconds
+        .median;
+    let shard_scaling = prepacked_median / shard_median;
+    println!("4-shard router vs single prepacked: {shard_scaling:.2}x");
+    bench.record_scalar("serving/shard_scaling", shard_scaling);
+    router.kill(1); // lose one shard; its slice moves to a survivor
+    black_box(shard_gemm(&router));
+    let degraded_median = bench
+        .bench(&format!("serving/cube_sharded3of4/{sm}x{skn}x{skn}"), Some(sflops), || {
+            shard_gemm(&router)
+        })
+        .seconds
+        .median;
+    let failover_overhead = degraded_median / shard_median;
+    println!("degraded 3-of-4 vs healthy sharded: {failover_overhead:.2}x");
+    bench.record_scalar("serving/failover_overhead", failover_overhead);
 
     // ---- overlapped b_k pipeline: prefetched B panels vs serial pack ----
     // The serial driver packs each B panel on the critical path; the

@@ -81,6 +81,62 @@ impl ServerConfig {
             // 0 = the shared global executor pool (the default).
             sc.pool_threads = p;
         }
+        if let Some(ms) = cfg.get_f64("server", "request_timeout_ms")? {
+            if ms < 0.0 {
+                bail!("[server] request_timeout_ms must be >= 0");
+            }
+            // 0 = no deadline (the default), same as omitting the key.
+            sc.request_timeout =
+                if ms == 0.0 { None } else { Some(Duration::from_secs_f64(ms / 1e3)) };
+        }
+        if let Some(p) = cfg.get_usize("server", "max_pending")? {
+            // 0 = unbounded admission (the default).
+            sc.max_pending = p;
+        }
+        if let Some(r) = cfg.get_usize("server", "retries")? {
+            // 0 = no retries; transient failures surface immediately.
+            sc.retries = r;
+        }
+        if let Some(ms) = cfg.get_f64("server", "retry_backoff_ms")? {
+            if ms < 0.0 {
+                bail!("[server] retry_backoff_ms must be >= 0");
+            }
+            sc.retry_backoff = Duration::from_secs_f64(ms / 1e3);
+        }
+        // `[shards]` section → the column-shard router configuration
+        // ([`crate::coordinator::shard`]); count < 2 keeps single-node
+        // serving.
+        if let Some(c) = cfg.get_usize("shards", "count")? {
+            sc.shards.count = c;
+        }
+        if let Some(v) = cfg.get_usize("shards", "suspect_after")? {
+            if v == 0 {
+                bail!("[shards] suspect_after must be >= 1");
+            }
+            sc.shards.suspect_after = v as u32;
+        }
+        if let Some(v) = cfg.get_usize("shards", "dead_after")? {
+            if v == 0 {
+                bail!("[shards] dead_after must be >= 1");
+            }
+            sc.shards.dead_after = v as u32;
+        }
+        if sc.shards.dead_after < sc.shards.suspect_after {
+            bail!(
+                "[shards] dead_after ({}) must be >= suspect_after ({})",
+                sc.shards.dead_after,
+                sc.shards.suspect_after
+            );
+        }
+        if let Some(v) = cfg.get_usize("shards", "retries")? {
+            sc.shards.retries = v;
+        }
+        if let Some(ms) = cfg.get_f64("shards", "backoff_ms")? {
+            if ms < 0.0 {
+                bail!("[shards] backoff_ms must be >= 0");
+            }
+            sc.shards.backoff = Duration::from_secs_f64(ms / 1e3);
+        }
         Ok(ServerConfig(sc))
     }
 }
@@ -236,5 +292,57 @@ mod tests {
     fn zero_max_batch_rejected() {
         let cfg = ConfigFile::parse("[server]\nmax_batch = 0").unwrap();
         assert!(ServerConfig::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn resilience_knobs_roundtrip() {
+        let cfg = ConfigFile::parse(
+            "[server]\nrequest_timeout_ms = 250\nmax_pending = 64\nretries = 3\nretry_backoff_ms = 0.5",
+        )
+        .unwrap();
+        let sc = ServerConfig::from_config(&cfg).unwrap().0;
+        assert_eq!(sc.request_timeout, Some(Duration::from_millis(250)));
+        assert_eq!(sc.max_pending, 64);
+        assert_eq!(sc.retries, 3);
+        assert_eq!(sc.retry_backoff, Duration::from_micros(500));
+        // Defaults: no deadline, unbounded admission, the stock retry
+        // budget; 0 explicitly disables the deadline too.
+        let sc = ServerConfig::from_config(&ConfigFile::parse("").unwrap()).unwrap().0;
+        assert_eq!(sc.request_timeout, None);
+        assert_eq!(sc.max_pending, 0);
+        let cfg = ConfigFile::parse("[server]\nrequest_timeout_ms = 0").unwrap();
+        assert_eq!(ServerConfig::from_config(&cfg).unwrap().0.request_timeout, None);
+        // Negative durations are rejected.
+        let bad = ConfigFile::parse("[server]\nrequest_timeout_ms = -1").unwrap();
+        assert!(ServerConfig::from_config(&bad).is_err());
+        let bad = ConfigFile::parse("[server]\nretry_backoff_ms = -1").unwrap();
+        assert!(ServerConfig::from_config(&bad).is_err());
+    }
+
+    #[test]
+    fn shards_section_roundtrip_and_validation() {
+        let cfg = ConfigFile::parse(
+            "[shards]\ncount = 4\nsuspect_after = 2\ndead_after = 5\nretries = 2\nbackoff_ms = 1",
+        )
+        .unwrap();
+        let sh = ServerConfig::from_config(&cfg).unwrap().0.shards;
+        assert_eq!(sh.count, 4);
+        assert_eq!(sh.suspect_after, 2);
+        assert_eq!(sh.dead_after, 5);
+        assert_eq!(sh.retries, 2);
+        assert_eq!(sh.backoff, Duration::from_millis(1));
+        // Default: sharding off.
+        let sh = ServerConfig::from_config(&ConfigFile::parse("").unwrap()).unwrap().0.shards;
+        assert_eq!(sh.count, 0);
+        // Thresholds must be >= 1 and ordered.
+        for bad in [
+            "[shards]\nsuspect_after = 0",
+            "[shards]\ndead_after = 0",
+            "[shards]\nsuspect_after = 5\ndead_after = 2",
+            "[shards]\nbackoff_ms = -1",
+        ] {
+            let cfg = ConfigFile::parse(bad).unwrap();
+            assert!(ServerConfig::from_config(&cfg).is_err(), "{bad}");
+        }
     }
 }

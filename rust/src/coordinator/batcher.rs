@@ -108,6 +108,7 @@ mod tests {
             b: BOperand::Inline(Matrix::zeros(k, n)),
             backend: None,
             submitted: Instant::now(),
+            deadline: None,
             reply: tx,
         }
     }
@@ -125,6 +126,7 @@ mod tests {
             })),
             backend: None,
             submitted: Instant::now(),
+            deadline: None,
             reply: tx,
         }
     }

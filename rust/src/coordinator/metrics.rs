@@ -1,9 +1,78 @@
-//! Service metrics: request counts, latency distribution, throughput.
+//! Service metrics: request counts, latency distribution (exact summary
+//! + fixed-bucket histogram with p50/p95/p99), throughput, and the
+//! resilience counters (shed / timeout / retry / failover).
 
 use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::util::stats::Summary;
+
+/// Number of fixed log-spaced latency buckets. Bucket `i` covers
+/// `(2^{i-1} µs, 2^i µs]` (bucket 0 is `(0, 1 µs]`); the last bucket —
+/// `2^27 µs ≈ 134 s` and up — is the catch-all.
+pub const LATENCY_BUCKETS: usize = 28;
+
+/// Lower edge of the histogram: one microsecond.
+const BUCKET_FLOOR_S: f64 = 1e-6;
+
+/// Fixed-bucket latency histogram: log-spaced, O(1) per record,
+/// constant memory regardless of request count — the scalable
+/// complement to the exact (but unbounded) sample the [`Summary`] is
+/// computed from. Quantiles are conservative: [`LatencyHistogram::quantile`]
+/// returns the *upper bound* of the bucket holding the requested rank,
+/// so a reported p99 never understates the true p99 by more than one
+/// bucket ratio (2×).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    counts: [u64; LATENCY_BUCKETS],
+    total: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram { counts: [0; LATENCY_BUCKETS], total: 0 }
+    }
+}
+
+impl LatencyHistogram {
+    fn bucket(secs: f64) -> usize {
+        if secs.is_nan() || secs <= BUCKET_FLOOR_S {
+            // NaN/negative/zero and anything at or under the floor all
+            // land in bucket 0.
+            return 0;
+        }
+        let b = (secs / BUCKET_FLOOR_S).log2().ceil() as usize;
+        b.min(LATENCY_BUCKETS - 1)
+    }
+
+    /// Count one latency sample (seconds).
+    pub fn record(&mut self, secs: f64) {
+        self.counts[Self::bucket(secs)] += 1;
+        self.total += 1;
+    }
+
+    /// Samples recorded.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Upper bound (seconds) of the bucket holding the `q`-quantile
+    /// sample, `0 < q <= 1`; `None` until the first sample.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.total == 0 {
+            return None;
+        }
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Some(BUCKET_FLOOR_S * (1u64 << i) as f64);
+            }
+        }
+        None
+    }
+}
 
 /// Shared metrics registry (interior mutability; cheap enough for the
 /// request rates this service sees).
@@ -15,10 +84,15 @@ pub struct Metrics {
 #[derive(Debug, Default)]
 struct Inner {
     latencies: Vec<f64>,
+    hist: LatencyHistogram,
     flops: f64,
     batches: u64,
     requests: u64,
     errors: u64,
+    shed: u64,
+    timeouts: u64,
+    retries: u64,
+    failovers: u64,
     started: Option<Instant>,
     finished: Option<Instant>,
 }
@@ -31,6 +105,21 @@ pub struct MetricsReport {
     pub errors: u64,
     /// Latency summary in seconds (None until the first request).
     pub latency: Option<Summary>,
+    /// Histogram quantiles in seconds (bucket upper bounds; None until
+    /// the first successful request).
+    pub p50: Option<f64>,
+    pub p95: Option<f64>,
+    pub p99: Option<f64>,
+    /// Requests shed by admission control ([`GemmError::Overloaded`]).
+    ///
+    /// [`GemmError::Overloaded`]: crate::gemm::error::GemmError::Overloaded
+    pub shed: u64,
+    /// Deadline expiries observed (client waits and server-side sheds).
+    pub timeouts: u64,
+    /// Retries attempted by the blocking entry points.
+    pub retries: u64,
+    /// Column slices recovered on a shard other than their owner.
+    pub failovers: u64,
     /// Aggregate achieved FLOP/s over the active window.
     pub flops_per_sec: f64,
     /// Mean requests per batch.
@@ -42,7 +131,10 @@ impl Metrics {
         Metrics::default()
     }
 
-    /// Record one completed request.
+    /// Record one completed request. Successful latencies feed both the
+    /// exact summary and the histogram; failures only count as errors
+    /// (error latencies say more about the failure mode than the
+    /// service).
     pub fn record_request(&self, latency_secs: f64, flops: f64, ok: bool) {
         let mut g = self.inner.lock().unwrap();
         let now = Instant::now();
@@ -51,6 +143,7 @@ impl Metrics {
         g.requests += 1;
         if ok {
             g.latencies.push(latency_secs);
+            g.hist.record(latency_secs);
             g.flops += flops;
         } else {
             g.errors += 1;
@@ -60,6 +153,26 @@ impl Metrics {
     /// Record one executed batch.
     pub fn record_batch(&self) {
         self.inner.lock().unwrap().batches += 1;
+    }
+
+    /// Record one request shed by admission control.
+    pub fn record_shed(&self) {
+        self.inner.lock().unwrap().shed += 1;
+    }
+
+    /// Record one deadline expiry.
+    pub fn record_timeout(&self) {
+        self.inner.lock().unwrap().timeouts += 1;
+    }
+
+    /// Record one retry attempt.
+    pub fn record_retry(&self) {
+        self.inner.lock().unwrap().retries += 1;
+    }
+
+    /// Record one slice failed over to a surviving shard.
+    pub fn record_failover(&self) {
+        self.inner.lock().unwrap().failovers += 1;
     }
 
     pub fn report(&self) -> MetricsReport {
@@ -73,6 +186,13 @@ impl Metrics {
             batches: g.batches,
             errors: g.errors,
             latency: if g.latencies.is_empty() { None } else { Some(Summary::of(&g.latencies)) },
+            p50: g.hist.quantile(0.50),
+            p95: g.hist.quantile(0.95),
+            p99: g.hist.quantile(0.99),
+            shed: g.shed,
+            timeouts: g.timeouts,
+            retries: g.retries,
+            failovers: g.failovers,
             flops_per_sec: g.flops / window,
             mean_batch_size: if g.batches == 0 { 0.0 } else { g.requests as f64 / g.batches as f64 },
         }
@@ -82,17 +202,25 @@ impl Metrics {
 impl MetricsReport {
     /// One-line human-readable summary.
     pub fn line(&self) -> String {
-        let lat = self
-            .latency
-            .as_ref()
-            .map(|l| format!("p50={:.3}ms p95={:.3}ms", l.median * 1e3, l.p95 * 1e3))
-            .unwrap_or_else(|| "no-latency".into());
+        let lat = match (self.p50, self.p95, self.p99) {
+            (Some(p50), Some(p95), Some(p99)) => format!(
+                "p50≤{:.3}ms p95≤{:.3}ms p99≤{:.3}ms",
+                p50 * 1e3,
+                p95 * 1e3,
+                p99 * 1e3
+            ),
+            _ => "no-latency".into(),
+        };
         format!(
-            "requests={} batches={} (mean {:.1}/batch) errors={} {} throughput={:.2} GFLOP/s",
+            "requests={} batches={} (mean {:.1}/batch) errors={} shed={} timeouts={} retries={} failovers={} {} throughput={:.2} GFLOP/s",
             self.requests,
             self.batches,
             self.mean_batch_size,
             self.errors,
+            self.shed,
+            self.timeouts,
+            self.retries,
+            self.failovers,
             lat,
             self.flops_per_sec / 1e9
         )
@@ -125,7 +253,74 @@ mod tests {
         let r = Metrics::new().report();
         assert_eq!(r.requests, 0);
         assert!(r.latency.is_none());
+        assert!(r.p99.is_none());
         assert_eq!(r.mean_batch_size, 0.0);
         assert_eq!(r.flops_per_sec, 0.0);
+        assert_eq!((r.shed, r.timeouts, r.retries, r.failovers), (0, 0, 0, 0));
+        assert!(r.line().contains("no-latency"));
+    }
+
+    #[test]
+    fn histogram_bucket_edges() {
+        // Bucket i covers (2^{i-1} µs, 2^i µs]; the floor and below land
+        // in bucket 0, the far tail saturates into the last bucket.
+        assert_eq!(LatencyHistogram::bucket(0.0), 0);
+        assert_eq!(LatencyHistogram::bucket(-1.0), 0);
+        assert_eq!(LatencyHistogram::bucket(f64::NAN), 0);
+        assert_eq!(LatencyHistogram::bucket(1e-6), 0);
+        assert_eq!(LatencyHistogram::bucket(1.5e-6), 1);
+        assert_eq!(LatencyHistogram::bucket(2e-6), 1);
+        assert_eq!(LatencyHistogram::bucket(2.1e-6), 2);
+        assert_eq!(LatencyHistogram::bucket(1e9), LATENCY_BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_quantiles_are_bucket_upper_bounds() {
+        let mut h = LatencyHistogram::default();
+        assert_eq!(h.quantile(0.5), None);
+        // 99 samples at ~1 ms, one at ~100 ms.
+        for _ in 0..99 {
+            h.record(0.0009);
+        }
+        h.record(0.100);
+        assert_eq!(h.total(), 100);
+        // 0.9 ms sits in the bucket with upper bound 2^10 µs = 1.024 ms.
+        let ms = 1024.0 * 1e-6;
+        assert_eq!(h.quantile(0.50), Some(ms));
+        assert_eq!(h.quantile(0.95), Some(ms));
+        assert_eq!(h.quantile(0.99), Some(ms));
+        // The single outlier owns the tail: 100 ms ≤ 2^17 µs = 131.072 ms.
+        assert_eq!(h.quantile(1.0), Some(131072.0 * 1e-6));
+    }
+
+    #[test]
+    fn resilience_counters_reach_report_and_line() {
+        let m = Metrics::new();
+        m.record_shed();
+        m.record_shed();
+        m.record_timeout();
+        m.record_retry();
+        m.record_retry();
+        m.record_retry();
+        m.record_failover();
+        m.record_request(0.002, 1e6, true);
+        let r = m.report();
+        assert_eq!((r.shed, r.timeouts, r.retries, r.failovers), (2, 1, 3, 1));
+        let line = r.line();
+        assert!(line.contains("shed=2"), "{line}");
+        assert!(line.contains("timeouts=1"), "{line}");
+        assert!(line.contains("retries=3"), "{line}");
+        assert!(line.contains("failovers=1"), "{line}");
+        assert!(line.contains("p99≤"), "{line}");
+    }
+
+    #[test]
+    fn histogram_quantiles_track_successes_only() {
+        let m = Metrics::new();
+        m.record_request(0.001, 0.0, true);
+        m.record_request(10.0, 0.0, false); // error latency excluded
+        let r = m.report();
+        assert_eq!(r.p99, Some(1024.0 * 1e-6));
+        assert_eq!(r.errors, 1);
     }
 }

@@ -17,7 +17,12 @@
 //!    cache-stable weights served from prepacked panels
 //!    ([`crate::gemm::prepacked`], [`crate::gemm::cache`]) so the
 //!    split + pack cost is paid once per weight, not once per request,
-//! 4. and records latency/throughput metrics ([`metrics`]).
+//! 4. records latency/throughput metrics, a fixed-bucket latency
+//!    histogram, and the resilience counters ([`metrics`]),
+//! 5. and hardens the whole front door: bounded admission, per-request
+//!    deadlines, typed channel-loss errors, bounded retry, and an
+//!    in-process column-shard router with health tracking and failover
+//!    ([`shard`]) — responses bit-identical to single-node serving.
 
 pub mod batcher;
 pub mod metrics;
@@ -25,9 +30,11 @@ pub mod policy;
 pub mod request;
 pub mod scheduler;
 pub mod server;
+pub mod shard;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::Metrics;
 pub use policy::{PolicyDecision, PrecisionPolicy};
 pub use request::{BOperand, GemmRequest, GemmResponse, ShapeKey, WeightEntry, WeightId};
 pub use server::{GemmService, ServiceConfig};
+pub use shard::{ShardConfig, ShardHealth, ShardRouter};

@@ -94,6 +94,12 @@ pub struct GemmRequest {
     pub backend: Option<Backend>,
     /// When the request entered the service (for latency accounting).
     pub submitted: Instant,
+    /// Absolute deadline: batch workers shed the request with
+    /// [`GemmError::Timeout`] once this instant passes, and the
+    /// blocking entry points stop waiting for the reply
+    /// (`None` = no deadline; set from
+    /// [`ServiceConfig::request_timeout`](crate::coordinator::server::ServiceConfig::request_timeout)).
+    pub deadline: Option<Instant>,
     /// Where to deliver the result.
     pub reply: Sender<GemmResponse>,
 }
@@ -171,6 +177,7 @@ mod tests {
             b,
             backend: None,
             submitted: Instant::now(),
+            deadline: None,
             reply: tx.clone(),
         };
         let k_inline = mk(BOperand::Inline(Matrix::zeros(5, 7))).batch_key();

@@ -5,8 +5,9 @@
 //!
 //! ```text
 //! clients --register_weights()--> weight registry (Arc<WeightEntry>)
-//! clients --submit()-----------> dispatcher --(batch by shape+weight)--> exec::pool tasks
-//!                                                                     \--> reply channels
+//!                                  \--> shard router ([shards] count >= 2)
+//! clients --submit()---[admission]--> dispatcher --(batch by shape+weight)--> exec::pool tasks
+//!                                                                          \--> reply channels
 //!                                    batch tasks <--> prepack cache (LRU, Arc<PrepackedMatrix>)
 //! ```
 //!
@@ -33,6 +34,22 @@
 //! zero pack work on the critical path ([`crate::gemm::prepacked`],
 //! [`crate::gemm::blocked::gemm_prepacked_scheduled`]).
 //!
+//! **Resilience.** The front door is hardened end to end: bounded
+//! admission sheds submissions past [`ServiceConfig::max_pending`] with
+//! a typed [`GemmError::Overloaded`] instead of queueing without bound;
+//! every request carries an optional absolute deadline
+//! ([`ServiceConfig::request_timeout`]) that both the batch workers
+//! (server-side shed) and the blocking waiters honor — no `.expect` on
+//! a reply channel anywhere, a dead worker or a shut-down dispatcher is
+//! [`GemmError::ChannelClosed`]; and the blocking entry points retry
+//! transient failures ([`GemmError::is_retryable`]) up to
+//! [`ServiceConfig::retries`] times with doubling backoff. Weights
+//! registered while `[shards] count >= 2` are column-partitioned across
+//! an in-process shard router with per-shard health and failover
+//! ([`crate::coordinator::shard`]) — responses stay bit-identical to
+//! single-node serving. Fault injection for all of it lives in
+//! [`crate::exec::faults`].
+//!
 //! By default batches run on the process-global pool; setting
 //! [`ServiceConfig::pool_threads`] gives the service a dedicated pool
 //! of that size (isolation for tests and co-tenant deployments). The
@@ -40,7 +57,7 @@
 //! `parallel_chunks`, with the batch task's thread participating.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -50,6 +67,7 @@ use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::policy::{matrix_exponent_range, PolicyDecision, PrecisionPolicy};
 use crate::coordinator::request::{BOperand, GemmRequest, GemmResponse, WeightEntry, WeightId};
+use crate::coordinator::shard::{ShardConfig, ShardRouter};
 use crate::exec::pipeline::DEFAULT_PIPELINE_DEPTH;
 use crate::exec::pool::{self, Pool};
 use crate::gemm::backend::{default_schedule, Backend, GemmBackend, Schedule};
@@ -69,6 +87,12 @@ pub const DEFAULT_PREPACK_CAPACITY: usize = 256 << 20;
 pub fn default_workers() -> usize {
     crate::util::threads::num_threads().max(1)
 }
+
+/// Default blocking-entry retry budget for transient failures.
+pub const DEFAULT_RETRIES: usize = 2;
+
+/// Default base backoff before the first retry (doubled per attempt).
+pub const DEFAULT_RETRY_BACKOFF: Duration = Duration::from_micros(200);
 
 /// Service configuration.
 #[derive(Debug, Clone)]
@@ -105,6 +129,27 @@ pub struct ServiceConfig {
     /// `> 0`: the service owns a dedicated pool of that many workers
     /// (`[server] pool_threads`).
     pub pool_threads: usize,
+    /// Per-request deadline (`[server] request_timeout_ms`; `None` =
+    /// wait forever, the default). A request past its deadline is shed
+    /// by the batch worker with [`GemmError::Timeout`] before any
+    /// kernel work, and the blocking entry points stop waiting for the
+    /// reply after the same duration.
+    pub request_timeout: Option<Duration>,
+    /// Admission bound: requests queued or executing at once
+    /// (`[server] max_pending`; `0` = unbounded, the default). A
+    /// submission over the bound is shed immediately with
+    /// [`GemmError::Overloaded`] — load-shedding at the front door
+    /// instead of unbounded queue growth.
+    pub max_pending: usize,
+    /// Retry budget of the blocking entry points for transient
+    /// failures — [`GemmError::is_retryable`] — (`[server] retries`).
+    pub retries: usize,
+    /// Base backoff before the first retry, doubled per attempt
+    /// (`[server] retry_backoff_ms`).
+    pub retry_backoff: Duration,
+    /// Column-shard router configuration (`[shards]` section);
+    /// `count < 2` (the default) serves every weight single-node.
+    pub shards: ShardConfig,
 }
 
 impl Default for ServiceConfig {
@@ -118,6 +163,11 @@ impl Default for ServiceConfig {
             schedule_prepacked: default_schedule(),
             pipeline_depth: DEFAULT_PIPELINE_DEPTH,
             pool_threads: 0,
+            request_timeout: None,
+            max_pending: 0,
+            retries: DEFAULT_RETRIES,
+            retry_backoff: DEFAULT_RETRY_BACKOFF,
+            shards: ShardConfig::default(),
         }
     }
 }
@@ -198,6 +248,11 @@ struct BatchCtx {
     schedule_prepacked: Schedule,
     pipeline_depth: usize,
     gate: Gate,
+    /// Requests admitted but not yet replied to (admission control).
+    pending: AtomicUsize,
+    /// Shard routers by weight id — populated at registration when
+    /// `[shards] count >= 2`, consulted by batch tasks per request.
+    shard_routers: Mutex<HashMap<u64, Arc<ShardRouter>>>,
 }
 
 /// Handle to a running GEMM service.
@@ -210,7 +265,12 @@ pub struct GemmService {
     prepack: Arc<PrepackCache>,
     ctx: Arc<BatchCtx>,
     pool: ServicePool,
-    dispatcher: Option<JoinHandle<()>>,
+    dispatcher: Mutex<Option<JoinHandle<()>>>,
+    request_timeout: Option<Duration>,
+    max_pending: usize,
+    retries: usize,
+    retry_backoff: Duration,
+    shards: ShardConfig,
 }
 
 impl GemmService {
@@ -233,6 +293,8 @@ impl GemmService {
             schedule_prepacked: cfg.schedule_prepacked,
             pipeline_depth: cfg.pipeline_depth,
             gate: Gate::new(),
+            pending: AtomicUsize::new(0),
+            shard_routers: Mutex::new(HashMap::new()),
         });
         let batcher_cfg = cfg.batcher.clone();
         let ctx_d = Arc::clone(&ctx);
@@ -250,7 +312,12 @@ impl GemmService {
             prepack,
             ctx,
             pool,
-            dispatcher: Some(dispatcher),
+            dispatcher: Mutex::new(Some(dispatcher)),
+            request_timeout: cfg.request_timeout,
+            max_pending: cfg.max_pending,
+            retries: cfg.retries,
+            retry_backoff: cfg.retry_backoff,
+            shards: cfg.shards,
         }
     }
 
@@ -264,11 +331,24 @@ impl GemmService {
     /// Register a cache-stable B operand (a weight matrix). Its exponent
     /// range is computed now, once; its packed/split representation is
     /// built lazily on first use per precision path and then served from
-    /// the prepack cache. Returns the handle to pass to
-    /// [`GemmService::submit_prepacked`].
+    /// the prepack cache. With `[shards] count >= 2` the weight is also
+    /// column-partitioned across the in-process shard router
+    /// ([`crate::coordinator::shard`]) — same wire behaviour,
+    /// bit-identical responses, per-shard health and failover. Returns
+    /// the handle to pass to [`GemmService::submit_prepacked`].
     pub fn register_weights(&self, b: Matrix<f32>) -> WeightId {
         let id = WeightId(self.next_weight.fetch_add(1, Ordering::Relaxed));
         let (e_min, e_max) = matrix_exponent_range(&b);
+        if self.shards.count >= 2 && b.cols() >= 2 {
+            let router = Arc::new(ShardRouter::new(
+                id.0,
+                &b,
+                self.shards.clone(),
+                Arc::clone(&self.prepack),
+                Arc::clone(&self.metrics),
+            ));
+            self.ctx.shard_routers.lock().unwrap().insert(id.0, router);
+        }
         let entry = Arc::new(WeightEntry { id, matrix: b, e_min, e_max });
         self.weights.lock().unwrap().insert(id, entry);
         id
@@ -279,12 +359,19 @@ impl GemmService {
         self.weights.lock().unwrap().get(&id).cloned()
     }
 
+    /// The shard router serving `id`, if the weight was registered
+    /// under `[shards] count >= 2` (health inspection, chaos `kill`).
+    pub fn shard_router(&self, id: WeightId) -> Option<Arc<ShardRouter>> {
+        self.ctx.shard_routers.lock().unwrap().get(&id.0).cloned()
+    }
+
     /// Drop a registered weight and purge its prepacked panels from the
     /// cache (weight ids are never reused, so stale entries could only
-    /// waste capacity).
+    /// waste capacity). Any shard router goes with it.
     pub fn unregister_weights(&self, id: WeightId) -> bool {
         let removed = self.weights.lock().unwrap().remove(&id).is_some();
         if removed {
+            self.ctx.shard_routers.lock().unwrap().remove(&id.0);
             self.prepack.purge_weight(id.0);
         }
         removed
@@ -300,17 +387,31 @@ impl GemmService {
         // is a typed error instead of a panic inside a batch task. The
         // kernels keep their asserts as last-resort invariants.
         check_shapes(&a, b.matrix())?;
+        // Admission: count this request in, shed if that overflows the
+        // bound. The counter drops when the batch worker replies.
+        let pending = self.ctx.pending.fetch_add(1, Ordering::SeqCst) + 1;
+        if self.max_pending > 0 && pending > self.max_pending {
+            self.ctx.pending.fetch_sub(1, Ordering::SeqCst);
+            self.metrics.record_shed();
+            return Err(GemmError::Overloaded { in_flight: pending, limit: self.max_pending });
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = channel();
-        let req = GemmRequest { id, a, b, backend, submitted: Instant::now(), reply };
-        self.tx
-            .send(DispatchMsg::Request(req))
-            .expect("service dispatcher is gone");
+        let deadline = self.request_timeout.map(|t| Instant::now() + t);
+        let req = GemmRequest { id, a, b, backend, submitted: Instant::now(), deadline, reply };
+        if self.tx.send(DispatchMsg::Request(req)).is_err() {
+            // The dispatcher is gone (shutdown raced or completed):
+            // typed error, not a panic in the caller's thread.
+            self.ctx.pending.fetch_sub(1, Ordering::SeqCst);
+            return Err(GemmError::ChannelClosed);
+        }
         Ok((id, rx))
     }
 
-    /// Submit a GEMM; returns (request id, receiver for the response),
-    /// or [`GemmError::ShapeMismatch`] for incompatible operands.
+    /// Submit a GEMM; returns (request id, receiver for the response).
+    /// Typed submit-time failures: [`GemmError::ShapeMismatch`] for
+    /// incompatible operands, [`GemmError::Overloaded`] when admission
+    /// control sheds, [`GemmError::ChannelClosed`] after shutdown.
     pub fn submit(
         &self,
         a: Matrix<f32>,
@@ -324,8 +425,8 @@ impl GemmService {
     /// requests on the same weight and served from its prepacked panels.
     ///
     /// Returns [`GemmError::UnknownWeight`] if `id` was never registered
-    /// (or was unregistered), [`GemmError::ShapeMismatch`] for
-    /// incompatible operands.
+    /// (or was unregistered), plus the same submit-time failures as
+    /// [`GemmService::submit`].
     pub fn submit_prepacked(
         &self,
         a: Matrix<f32>,
@@ -336,28 +437,76 @@ impl GemmService {
         self.submit_operand(a, BOperand::Weight(entry), backend)
     }
 
-    /// Blocking convenience: submit and wait. Submit-time failures
-    /// (shape mismatch) surface as the outer error; execution failures
-    /// stay in [`GemmResponse::result`].
+    /// Blocking convenience: submit and wait, bounded by
+    /// [`ServiceConfig::request_timeout`] and retried (submit included)
+    /// up to [`ServiceConfig::retries`] times on transient failures.
+    /// Submit-time failures surface as the outer error; execution
+    /// failures stay in [`GemmResponse::result`].
     pub fn gemm_blocking(
         &self,
         a: Matrix<f32>,
         b: Matrix<f32>,
         backend: Option<Backend>,
     ) -> Result<GemmResponse, GemmError> {
-        let (_, rx) = self.submit(a, b, backend)?;
-        Ok(rx.recv().expect("batch task dropped the reply channel"))
+        self.blocking_with_retry(|| self.submit(a.clone(), b.clone(), backend))
     }
 
-    /// Blocking convenience for the register-weights-then-serve flow.
+    /// Blocking convenience for the register-weights-then-serve flow;
+    /// same deadline and retry behaviour as [`GemmService::gemm_blocking`].
     pub fn gemm_blocking_prepacked(
         &self,
         a: Matrix<f32>,
         id: WeightId,
         backend: Option<Backend>,
     ) -> Result<GemmResponse, GemmError> {
-        let (_, rx) = self.submit_prepacked(a, id, backend)?;
-        Ok(rx.recv().expect("batch task dropped the reply channel"))
+        self.blocking_with_retry(|| self.submit_prepacked(a.clone(), id, backend))
+    }
+
+    /// Submit-and-wait with bounded retry: transient failures
+    /// ([`GemmError::is_retryable`] — a panicked batch, a dropped reply
+    /// channel, an injected fault) are resubmitted with doubling
+    /// backoff; everything else (including deterministic rejections and
+    /// back-pressure) returns on the first attempt.
+    fn blocking_with_retry(
+        &self,
+        submit: impl Fn() -> Result<(u64, Receiver<GemmResponse>), GemmError>,
+    ) -> Result<GemmResponse, GemmError> {
+        let mut attempt = 0usize;
+        loop {
+            let outcome = submit().and_then(|(_, rx)| self.wait_reply(&rx));
+            let retryable = match &outcome {
+                Ok(resp) => resp.result.as_ref().err().is_some_and(|e| e.is_retryable()),
+                Err(e) => e.is_retryable(),
+            };
+            if !retryable || attempt >= self.retries {
+                return outcome;
+            }
+            attempt += 1;
+            self.metrics.record_retry();
+            let shift = u32::try_from((attempt - 1).min(10)).unwrap_or(10);
+            let backoff = self.retry_backoff.saturating_mul(1u32 << shift);
+            if !backoff.is_zero() {
+                std::thread::sleep(backoff);
+            }
+        }
+    }
+
+    /// Wait for one reply, bounded by the configured request timeout.
+    /// A dropped channel (shutdown, or a batch worker dying without
+    /// replying) is [`GemmError::ChannelClosed`]; a deadline expiry is
+    /// [`GemmError::Timeout`] and counts toward the timeout metric.
+    fn wait_reply(&self, rx: &Receiver<GemmResponse>) -> Result<GemmResponse, GemmError> {
+        match self.request_timeout {
+            None => rx.recv().map_err(|_| GemmError::ChannelClosed),
+            Some(t) => match rx.recv_timeout(t) {
+                Ok(resp) => Ok(resp),
+                Err(RecvTimeoutError::Timeout) => {
+                    self.metrics.record_timeout();
+                    Err(GemmError::Timeout { after: t })
+                }
+                Err(RecvTimeoutError::Disconnected) => Err(GemmError::ChannelClosed),
+            },
+        }
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -371,14 +520,13 @@ impl GemmService {
     }
 
     /// Stop accepting work, drain, and join the dispatcher; waits until
-    /// every in-flight batch task released the gate.
-    pub fn shutdown(mut self) {
-        self.stop();
-    }
-
-    fn stop(&mut self) {
+    /// every in-flight batch task released the gate. Idempotent, and
+    /// callable through a shared reference — submissions racing (or
+    /// following) shutdown get [`GemmError::ChannelClosed`], they never
+    /// panic the submitting thread.
+    pub fn shutdown(&self) {
         let _ = self.tx.send(DispatchMsg::Shutdown);
-        if let Some(d) = self.dispatcher.take() {
+        if let Some(d) = self.dispatcher.lock().unwrap().take() {
             let _ = d.join();
         }
         self.ctx.gate.wait_idle();
@@ -387,7 +535,7 @@ impl GemmService {
 
 impl Drop for GemmService {
     fn drop(&mut self) {
-        self.stop();
+        self.shutdown();
     }
 }
 
@@ -461,17 +609,34 @@ fn execute_batch(batch: Vec<GemmRequest>, ctx: &BatchCtx) {
             },
         };
         let shape = req.shape();
+        // A request past its deadline is shed before any kernel work —
+        // the client stopped waiting, so the cycles would be wasted.
+        let expired = req.deadline.is_some_and(|dl| Instant::now() >= dl);
         // Revalidate before executing: submission already checked, but
         // a batch task must never be one bad request away from a panic
         // — the kernels' asserts stay as last-resort invariants behind
         // this check and the catch_unwind.
-        let result = match check_shapes(&req.a, req.b.matrix()) {
-            Err(e) => Err(e),
-            Ok(()) => std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                execute_request(&req, &decision, ctx)
-            }))
-            .map_err(|p| GemmError::Panicked(panic_message(p))),
+        let result = if expired {
+            Err(GemmError::Timeout { after: req.submitted.elapsed() })
+        } else {
+            match check_shapes(&req.a, req.b.matrix()) {
+                Err(e) => Err(e),
+                Ok(()) => {
+                    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        execute_request(&req, &decision, ctx)
+                    })) {
+                        Ok(r) => r,
+                        Err(p) => Err(GemmError::Panicked(panic_message(p))),
+                    }
+                }
+            }
         };
+        if matches!(result, Err(GemmError::Timeout { .. })) {
+            // Server-side expiries (shed above, or a shard fan-out that
+            // ran out of deadline) all count here; client-side waiter
+            // expiries are counted by `wait_reply`.
+            ctx.metrics.record_timeout();
+        }
         let latency = req.submitted.elapsed().as_secs_f64();
         ctx.metrics.record_request(latency, shape.flops(), result.is_ok());
         let _ = req.reply.send(GemmResponse {
@@ -481,6 +646,7 @@ fn execute_batch(batch: Vec<GemmRequest>, ctx: &BatchCtx) {
             scale_exp: decision.scale_exp,
             latency,
         });
+        ctx.pending.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
@@ -495,7 +661,7 @@ fn check_shapes(a: &Matrix<f32>, b: &Matrix<f32>) -> Result<(), GemmError> {
 }
 
 /// Best-effort text of a caught panic payload.
-fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+pub(crate) fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
     if let Some(s) = payload.downcast_ref::<&str>() {
         (*s).to_string()
     } else if let Some(s) = payload.downcast_ref::<String>() {
@@ -508,11 +674,18 @@ fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
 /// Execute one request through one code path: a [`GemmBackend`] built
 /// from the decision, dispatching prepacked and raw operands alike.
 /// Registered weights go through the prepack cache and the prepacked
-/// entry points under [`BatchCtx::schedule_prepacked`] — bit-identical
-/// to the inline path for the same decision, since both run the same
-/// sweeps over equal panel bytes
-/// ([`crate::gemm::blocked::gemm_prepacked_scheduled`]).
-fn execute_request(req: &GemmRequest, decision: &PolicyDecision, ctx: &BatchCtx) -> Matrix<f32> {
+/// entry points under [`BatchCtx::schedule_prepacked`] — or through the
+/// weight's shard router when one was built at registration; both are
+/// bit-identical to the inline path for the same decision, since all
+/// of them run the same sweeps over equal panel bytes
+/// ([`crate::gemm::blocked::gemm_prepacked_scheduled`],
+/// [`crate::coordinator::shard`]).
+fn execute_request(
+    req: &GemmRequest,
+    decision: &PolicyDecision,
+    ctx: &BatchCtx,
+) -> Result<Matrix<f32>, GemmError> {
+    crate::exec::faults::check("coordinator.batch.exec")?;
     let engine = GemmBackend::new(decision.backend)
         .with_scale(decision.scale_exp)
         .with_pipeline_depth(ctx.pipeline_depth);
@@ -527,12 +700,25 @@ fn execute_request(req: &GemmRequest, decision: &PolicyDecision, ctx: &BatchCtx)
                 (Backend::CubeTermwise, decision.scale_exp)
             }
         };
+        let router = ctx.shard_routers.lock().unwrap().get(&w.id.0).cloned();
+        if let Some(router) = router {
+            return router.gemm(
+                &req.a,
+                backend,
+                scale_exp,
+                path,
+                ctx.schedule_prepacked,
+                ctx.pipeline_depth,
+                req.deadline,
+            );
+        }
         let key = PrepackKey {
             weight: w.id.0,
             k: w.matrix.rows(),
             n: w.matrix.cols(),
             backend,
             scale_exp,
+            col0: 0,
         };
         let packed = ctx
             .cache
@@ -542,11 +728,11 @@ fn execute_request(req: &GemmRequest, decision: &PolicyDecision, ctx: &BatchCtx)
         // the cache's own reference, but the panels the A-stripe
         // prefetch ring has claimed stay alive until the ring is
         // drained and this call returns (see gemm::cache module docs).
-        return engine
+        return Ok(engine
             .with_schedule(ctx.schedule_prepacked)
-            .gemm_prepacked(&req.a, &packed);
+            .gemm_prepacked(&req.a, &packed));
     }
-    engine.with_schedule(ctx.schedule).gemm(&req.a, req.b.matrix())
+    Ok(engine.with_schedule(ctx.schedule).gemm(&req.a, req.b.matrix()))
 }
 
 #[cfg(test)]
@@ -577,6 +763,13 @@ mod tests {
         assert_eq!(d.pipeline_depth, DEFAULT_PIPELINE_DEPTH);
         // Both paths start from the same env-derived schedule.
         assert_eq!(d.schedule_prepacked, d.schedule);
+        // Resilience knobs: opt-in deadlines/admission/sharding, a small
+        // default retry budget for transient failures.
+        assert_eq!(d.request_timeout, None);
+        assert_eq!(d.max_pending, 0);
+        assert_eq!(d.retries, DEFAULT_RETRIES);
+        assert_eq!(d.retry_backoff, DEFAULT_RETRY_BACKOFF);
+        assert_eq!(d.shards.count, 0, "sharding is opt-in");
     }
 
     #[test]
@@ -829,5 +1022,78 @@ mod tests {
         let b = Matrix::random_symmetric(8, 8, 0, &mut rng);
         let _ = svc.gemm_blocking(a, b, None).expect("submit");
         drop(svc); // Drop impl must not hang
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_a_typed_error() {
+        let svc = GemmService::start(ServiceConfig { retries: 0, ..small_cfg() });
+        svc.shutdown();
+        let a: Matrix<f32> = Matrix::zeros(2, 3);
+        let b: Matrix<f32> = Matrix::zeros(3, 2);
+        match svc.submit(a.clone(), b.clone(), None) {
+            Err(GemmError::ChannelClosed) => {}
+            other => panic!("expected ChannelClosed, got {:?}", other.map(|(id, _)| id)),
+        }
+        match svc.gemm_blocking(a, b, None) {
+            Err(GemmError::ChannelClosed) => {}
+            other => panic!("expected ChannelClosed, got {other:?}"),
+        }
+        // A second shutdown and the Drop-time one are both no-ops.
+        svc.shutdown();
+        drop(svc);
+    }
+
+    #[test]
+    fn admission_control_sheds_when_saturated() {
+        let svc = GemmService::start(ServiceConfig { max_pending: 1, ..small_cfg() });
+        // Occupy the only admission slot synthetically — deterministic,
+        // no timing race against the dispatcher.
+        svc.ctx.pending.fetch_add(1, Ordering::SeqCst);
+        let a: Matrix<f32> = Matrix::zeros(2, 2);
+        let b: Matrix<f32> = Matrix::zeros(2, 2);
+        match svc.submit(a.clone(), b.clone(), None) {
+            Err(GemmError::Overloaded { in_flight: 2, limit: 1 }) => {}
+            other => panic!("expected Overloaded, got {:?}", other.map(|(id, _)| id)),
+        }
+        assert_eq!(svc.metrics().report().shed, 1);
+        // Freeing the slot re-opens the front door.
+        svc.ctx.pending.fetch_sub(1, Ordering::SeqCst);
+        let resp = svc.gemm_blocking(a, b, None).expect("slot freed");
+        assert!(resp.result.is_ok());
+        assert_eq!(svc.ctx.pending.load(Ordering::SeqCst), 0, "balanced after reply");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn sharded_weight_serving_is_bit_identical_to_single_node() {
+        let plain = GemmService::start(small_cfg());
+        let sharded = GemmService::start(ServiceConfig {
+            shards: ShardConfig { count: 3, ..Default::default() },
+            ..small_cfg()
+        });
+        let mut rng = Rng::new(12);
+        let w = Matrix::random_symmetric(40, 22, 0, &mut rng);
+        let id_p = plain.register_weights(w.clone());
+        let id_s = sharded.register_weights(w);
+        assert!(plain.shard_router(id_p).is_none(), "count=0 keeps single-node serving");
+        let router = sharded.shard_router(id_s).expect("router built at registration");
+        assert_eq!(router.shard_count(), 3);
+        for _ in 0..3 {
+            let a = Matrix::random_symmetric(8, 40, 0, &mut rng);
+            let x = plain.gemm_blocking_prepacked(a.clone(), id_p, None).expect("submit");
+            let y = sharded.gemm_blocking_prepacked(a, id_s, None).expect("submit");
+            assert_eq!(x.backend, y.backend);
+            let cx = x.result.unwrap();
+            let cy = y.result.unwrap();
+            for (u, v) in cx.as_slice().iter().zip(cy.as_slice()) {
+                assert_eq!(u.to_bits(), v.to_bits());
+            }
+        }
+        assert_eq!(sharded.prepack_stats().misses, 3, "one pack per slice");
+        // Unregistering drops the router with the weight.
+        assert!(sharded.unregister_weights(id_s));
+        assert!(sharded.shard_router(id_s).is_none());
+        plain.shutdown();
+        sharded.shutdown();
     }
 }

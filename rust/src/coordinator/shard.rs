@@ -1,0 +1,700 @@
+//! In-process shard router: column-partitioned serving of a registered
+//! weight across S logical shards, with per-shard health, bounded
+//! retry, and failover — responses **bit-identical** to single-node
+//! execution.
+//!
+//! A weight's `k × n` matrix is split once, at registration, into S
+//! contiguous column slices (widths differ by at most one). Each slice
+//! is an independent serving unit: its panels are prepacked and cached
+//! per `(path, s_b)` like any whole weight ([`crate::gemm::cache`],
+//! keyed by the slice origin `col0`), and a request fans out as one
+//! GEMM per slice whose `m × w` result is bit-copied into the full
+//! `m × n` response.
+//!
+//! **Why recombination is bit-identical.** In the blocked engine every
+//! output cell `(i, j)` is produced by one per-cell accumulation chain
+//! that depends only on the k-blocking (`bk` from
+//! [`crate::gemm::blocked::host_block`], identical for the slice and
+//! the full matrix — it does not depend on `n`), the per-lane kernel
+//! order (lanes accumulate independently, so a column's position within
+//! its micro-panel does not change its arithmetic), and the operand
+//! *values* `A(i, :)` / `B(:, j)` — the FP32→2×FP16 split is
+//! elementwise, so slicing columns first changes nothing. Computing
+//! columns `[n0, n0+w)` standalone therefore replays exactly the chains
+//! the full sweep would run for those columns, every schedule included
+//! (all schedules run the same shared sweeps). The chaos suite pins
+//! this against a single-node service with a shard killed mid-stream.
+//!
+//! **Execution and deadlock safety.** The router is called from inside
+//! a batch task that already occupies one of the gate-bounded pool
+//! slots, so it must not block on detached-task progress alone (a
+//! saturated pool would deadlock). Fan-out follows the
+//! [`Pool::run_chunks`](crate::exec::pool::Pool::run_chunks)
+//! philosophy: slice jobs go into a shared claim queue drained by
+//! detached helpers **and the calling thread together** — worst case
+//! the caller computes every slice serially, which always terminates.
+//! Failure handling (retry with backoff on the owner, then failover
+//! across survivors) runs inline on the caller.
+//!
+//! **Health.** Consecutive failures drive Healthy → Suspect
+//! ([`ShardConfig::suspect_after`]) → Dead ([`ShardConfig::dead_after`]);
+//! a success resets a Suspect shard to Healthy. Death permanently
+//! reassigns the shard's slices round-robin to survivors, so later
+//! requests never touch it; the in-flight request recovers via
+//! failover ([`Metrics::record_failover`] counts each slice recovered
+//! away from its owner). The `coordinator.shard.exec` failpoint
+//! ([`crate::exec::faults`], indexed per shard) injects all of this
+//! deterministically.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::Metrics;
+use crate::exec::{faults, pool};
+use crate::gemm::backend::{Backend, GemmBackend, Schedule};
+use crate::gemm::cache::{PrepackCache, PrepackKey};
+use crate::gemm::error::GemmError;
+use crate::gemm::prepacked::{PrepackPath, PrepackedMatrix};
+use crate::util::mat::Matrix;
+
+/// `[shards]` section: column-shard router configuration.
+#[derive(Debug, Clone)]
+pub struct ShardConfig {
+    /// Number of column shards a registered weight is partitioned
+    /// across; `< 2` disables the router (single-node serving).
+    pub count: usize,
+    /// Consecutive failures before a Healthy shard turns Suspect.
+    pub suspect_after: u32,
+    /// Consecutive failures before a shard is declared Dead and its
+    /// slices are permanently reassigned to survivors.
+    pub dead_after: u32,
+    /// Per-slice retries on the owning shard before failing over.
+    pub retries: usize,
+    /// Backoff before each same-shard retry, doubled per attempt.
+    pub backoff: Duration,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig {
+            count: 0,
+            suspect_after: 1,
+            dead_after: 3,
+            retries: 1,
+            backoff: Duration::from_micros(200),
+        }
+    }
+}
+
+/// Health of one shard, driven by consecutive failures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardHealth {
+    Healthy,
+    /// Failing but still assigned traffic (and still retried first).
+    Suspect,
+    /// Removed from the assignment; its slices belong to survivors.
+    Dead,
+}
+
+/// One column slice of the weight: columns `[n0, n0 + matrix.cols())`.
+struct SliceSpec {
+    n0: usize,
+    matrix: Matrix<f32>,
+}
+
+struct ShardState {
+    health: ShardHealth,
+    consecutive_failures: u32,
+    /// Slices this shard currently owns (moves on death).
+    slices: Vec<Arc<SliceSpec>>,
+}
+
+/// The router behind one registered weight. Shards are logical (one
+/// process, shared pool and prepack cache — per ROADMAP that is what
+/// makes this cheap); their independent failure behaviour comes from
+/// the health state machine plus the per-shard failpoints.
+pub struct ShardRouter {
+    weight: u64,
+    k: usize,
+    n: usize,
+    cfg: ShardConfig,
+    cache: Arc<PrepackCache>,
+    metrics: Arc<Metrics>,
+    state: Mutex<Vec<ShardState>>,
+}
+
+impl ShardRouter {
+    /// Partition `matrix` (the registered weight `weight`) into
+    /// `cfg.count` contiguous column slices (clamped to at least 2 and
+    /// at most one shard per column). Slices are materialized once,
+    /// here; panels are packed lazily through `cache` on first use per
+    /// precision path.
+    pub fn new(
+        weight: u64,
+        matrix: &Matrix<f32>,
+        cfg: ShardConfig,
+        cache: Arc<PrepackCache>,
+        metrics: Arc<Metrics>,
+    ) -> ShardRouter {
+        let (k, n) = matrix.shape();
+        let count = cfg.count.max(2).min(n.max(1));
+        let base = n / count;
+        let rem = n % count;
+        let mut shards = Vec::with_capacity(count);
+        let mut n0 = 0usize;
+        for i in 0..count {
+            let w = base + usize::from(i < rem);
+            let slice = Matrix::from_fn(k, w, |r, c| matrix.get(r, n0 + c));
+            shards.push(ShardState {
+                health: ShardHealth::Healthy,
+                consecutive_failures: 0,
+                slices: vec![Arc::new(SliceSpec { n0, matrix: slice })],
+            });
+            n0 += w;
+        }
+        ShardRouter {
+            weight,
+            k,
+            n,
+            cfg: ShardConfig { count, ..cfg },
+            cache,
+            metrics,
+            state: Mutex::new(shards),
+        }
+    }
+
+    /// Number of shards (fixed at construction; dead shards count).
+    pub fn shard_count(&self) -> usize {
+        self.cfg.count
+    }
+
+    /// Current health of shard `i`.
+    pub fn health(&self, i: usize) -> ShardHealth {
+        self.state.lock().unwrap()[i].health
+    }
+
+    /// Shards not yet declared Dead.
+    pub fn live_count(&self) -> usize {
+        self.state.lock().unwrap().iter().filter(|s| s.health != ShardHealth::Dead).count()
+    }
+
+    /// Current slice assignment, `(n0, width)` per shard — empty for
+    /// dead shards once their slices moved.
+    pub fn assignments(&self) -> Vec<Vec<(usize, usize)>> {
+        self.state
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|s| s.slices.iter().map(|sl| (sl.n0, sl.matrix.cols())).collect())
+            .collect()
+    }
+
+    /// Kill shard `i` (test/chaos API): mark it Dead and reassign its
+    /// slices to survivors, exactly as `dead_after` consecutive
+    /// failures would.
+    pub fn kill(&self, i: usize) {
+        let mut st = self.state.lock().unwrap();
+        if st[i].health != ShardHealth::Dead {
+            Self::mark_dead(&mut st, i);
+        }
+    }
+
+    /// Serve one request: fan out over the live slice assignment,
+    /// recover failures (retry on the owner, then failover across
+    /// survivors), and recombine into the full `m × n` product —
+    /// bit-identical to single-node execution of the same decision.
+    ///
+    /// `backend`/`scale_exp` are the cache-normalized decision the
+    /// server computed; `path` is its prepack format. `deadline` bounds
+    /// the whole fan-out ([`GemmError::Timeout`] on expiry).
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm(
+        self: &Arc<Self>,
+        a: &Matrix<f32>,
+        backend: Backend,
+        scale_exp: i32,
+        path: PrepackPath,
+        schedule: Schedule,
+        pipeline_depth: usize,
+        deadline: Option<Instant>,
+    ) -> Result<Matrix<f32>, GemmError> {
+        let started = Instant::now();
+        let (m, k_a) = a.shape();
+        if k_a != self.k {
+            return Err(GemmError::ShapeMismatch { m, k_a, k_b: self.k, n: self.n });
+        }
+        let mut c = Matrix::zeros(m, self.n);
+        // Snapshot the live assignment: (owner, slice) jobs.
+        let jobs: Vec<(usize, Arc<SliceSpec>)> = {
+            let st = self.state.lock().unwrap();
+            st.iter()
+                .enumerate()
+                .filter(|(_, s)| s.health != ShardHealth::Dead)
+                .flat_map(|(i, s)| s.slices.iter().map(move |sl| (i, Arc::clone(sl))))
+                .collect()
+        };
+        if jobs.is_empty() {
+            return Err(GemmError::ShardFailed {
+                shard: 0,
+                reason: "no live shards hold a slice assignment".into(),
+            });
+        }
+        let n_jobs = jobs.len();
+        let exec = ExecParams { backend, scale_exp, path, schedule, pipeline_depth };
+        // Fan out through a shared claim queue: detached pool helpers
+        // plus the calling thread, so a saturated pool degrades to the
+        // caller computing slices serially instead of deadlocking (the
+        // caller is itself a gate-bounded pool task).
+        let queue = Arc::new(Mutex::new(jobs));
+        let (tx, rx) = channel();
+        let helpers = (n_jobs - 1).min(pool::global().n_workers());
+        let a_shared = Arc::new(a.clone());
+        for _ in 0..helpers {
+            let router = Arc::clone(self);
+            let queue = Arc::clone(&queue);
+            let tx = tx.clone();
+            let a_shared = Arc::clone(&a_shared);
+            pool::global().submit(move || loop {
+                let job = queue.lock().unwrap().pop();
+                let Some((owner, slice)) = job else { return };
+                let r = router.compute_slice(&a_shared, owner, &slice, exec);
+                if tx.send((owner, slice, r)).is_err() {
+                    return; // the caller gave up (deadline); drain out
+                }
+            });
+        }
+        drop(tx);
+        // The caller drains the queue too, handling its claims inline.
+        let mut outcomes = Vec::with_capacity(n_jobs);
+        loop {
+            let job = queue.lock().unwrap().pop();
+            let Some((owner, slice)) = job else { break };
+            let r = self.compute_slice(a, owner, &slice, exec);
+            outcomes.push((owner, slice, r));
+        }
+        // Collect what the helpers claimed, bounded by the deadline.
+        while outcomes.len() < n_jobs {
+            let wait = match deadline {
+                None => Duration::from_secs(3600),
+                Some(dl) => {
+                    let left = dl.saturating_duration_since(Instant::now());
+                    if left.is_zero() {
+                        return Err(GemmError::Timeout { after: started.elapsed() });
+                    }
+                    left
+                }
+            };
+            match rx.recv_timeout(wait) {
+                Ok(o) => outcomes.push(o),
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(GemmError::Timeout { after: started.elapsed() })
+                }
+                // All helper senders dropped without delivering: only
+                // possible if helper tasks died before claiming (e.g.
+                // an armed exec.pool.task panic) — the jobs they never
+                // claimed were drained by the caller above, so this
+                // means every remaining job already produced a result.
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // Successes land in C; failures drive health and recovery.
+        let mut failed: Vec<(usize, Arc<SliceSpec>)> = Vec::new();
+        for (owner, slice, r) in outcomes {
+            match r {
+                Ok(cs) => {
+                    self.on_success(owner);
+                    copy_slice(&mut c, &slice, &cs);
+                }
+                Err(_) => {
+                    self.on_failure(owner);
+                    failed.push((owner, slice));
+                }
+            }
+        }
+        for (owner, slice) in failed {
+            let cs = self.recover_slice(a, owner, &slice, exec, deadline, started)?;
+            copy_slice(&mut c, &slice, &cs);
+        }
+        Ok(c)
+    }
+
+    /// Recover one failed slice: bounded retries on the owner (while it
+    /// lives), then one failover attempt per survivor.
+    fn recover_slice(
+        &self,
+        a: &Matrix<f32>,
+        owner: usize,
+        slice: &SliceSpec,
+        exec: ExecParams,
+        deadline: Option<Instant>,
+        started: Instant,
+    ) -> Result<Matrix<f32>, GemmError> {
+        let expired = |dl: Option<Instant>| dl.is_some_and(|d| Instant::now() >= d);
+        let mut last = String::new();
+        for attempt in 0..self.cfg.retries {
+            if self.health(owner) == ShardHealth::Dead {
+                break;
+            }
+            if expired(deadline) {
+                return Err(GemmError::Timeout { after: started.elapsed() });
+            }
+            let backoff = self.cfg.backoff.saturating_mul(1u32 << attempt.min(10));
+            if !backoff.is_zero() {
+                std::thread::sleep(backoff);
+            }
+            match self.compute_slice(a, owner, slice, exec) {
+                Ok(cs) => {
+                    self.on_success(owner);
+                    return Ok(cs);
+                }
+                Err(e) => {
+                    self.on_failure(owner);
+                    last = e.to_string();
+                }
+            }
+        }
+        // Failover: one attempt per surviving shard, in index order.
+        for target in 0..self.cfg.count {
+            if target == owner || self.health(target) == ShardHealth::Dead {
+                continue;
+            }
+            if expired(deadline) {
+                return Err(GemmError::Timeout { after: started.elapsed() });
+            }
+            match self.compute_slice(a, target, slice, exec) {
+                Ok(cs) => {
+                    self.on_success(target);
+                    self.metrics.record_failover();
+                    return Ok(cs);
+                }
+                Err(e) => {
+                    self.on_failure(target);
+                    last = e.to_string();
+                }
+            }
+        }
+        Err(GemmError::ShardFailed {
+            shard: owner,
+            reason: format!(
+                "slice at column {} ({} wide) exhausted retries and failover: {last}",
+                slice.n0,
+                slice.matrix.cols()
+            ),
+        })
+    }
+
+    /// Compute one slice "on" shard `shard`: panels from the shared
+    /// cache (keyed by the slice origin), executed through the same
+    /// prepacked entry point single-node serving uses. Panics are
+    /// contained to a typed [`GemmError::ShardFailed`].
+    fn compute_slice(
+        &self,
+        a: &Matrix<f32>,
+        shard: usize,
+        slice: &SliceSpec,
+        exec: ExecParams,
+    ) -> Result<Matrix<f32>, GemmError> {
+        if self.health(shard) == ShardHealth::Dead {
+            return Err(GemmError::ShardFailed { shard, reason: "shard is dead".into() });
+        }
+        faults::check_indexed("coordinator.shard.exec", shard).map_err(GemmError::from)?;
+        let key = PrepackKey {
+            weight: self.weight,
+            k: self.k,
+            n: slice.matrix.cols(),
+            backend: exec.backend,
+            scale_exp: exec.scale_exp,
+            col0: slice.n0,
+        };
+        catch_unwind(AssertUnwindSafe(|| {
+            let packed = self
+                .cache
+                .get_or_insert_with(key, || PrepackedMatrix::prepack(&slice.matrix, exec.path));
+            GemmBackend::new(exec.backend)
+                .with_scale(exec.scale_exp)
+                .with_schedule(exec.schedule)
+                .with_pipeline_depth(exec.pipeline_depth)
+                .gemm_prepacked(a, &packed)
+        }))
+        .map_err(|p| GemmError::ShardFailed {
+            shard,
+            reason: format!(
+                "slice execution panicked: {}",
+                crate::coordinator::server::panic_message(p)
+            ),
+        })
+    }
+
+    fn on_success(&self, shard: usize) {
+        let mut st = self.state.lock().unwrap();
+        let s = &mut st[shard];
+        if s.health == ShardHealth::Dead {
+            return;
+        }
+        s.consecutive_failures = 0;
+        s.health = ShardHealth::Healthy;
+    }
+
+    fn on_failure(&self, shard: usize) {
+        let mut st = self.state.lock().unwrap();
+        let s = &mut st[shard];
+        if s.health == ShardHealth::Dead {
+            return;
+        }
+        s.consecutive_failures += 1;
+        if s.consecutive_failures >= self.cfg.dead_after {
+            Self::mark_dead(&mut st, shard);
+        } else if s.consecutive_failures >= self.cfg.suspect_after {
+            s.health = ShardHealth::Suspect;
+        }
+    }
+
+    /// Declare `shard` Dead and move its slices round-robin onto
+    /// survivors. If no shard survives, the slices stay stranded on the
+    /// dead shard (requests then fail with a typed `ShardFailed`).
+    fn mark_dead(st: &mut [ShardState], shard: usize) {
+        st[shard].health = ShardHealth::Dead;
+        let orphans = std::mem::take(&mut st[shard].slices);
+        let live: Vec<usize> = st
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.health != ShardHealth::Dead)
+            .map(|(i, _)| i)
+            .collect();
+        if live.is_empty() {
+            st[shard].slices = orphans;
+            return;
+        }
+        for (j, sl) in orphans.into_iter().enumerate() {
+            st[live[j % live.len()]].slices.push(sl);
+        }
+    }
+}
+
+/// The per-request execution parameters threaded through fan-out.
+#[derive(Clone, Copy)]
+struct ExecParams {
+    backend: Backend,
+    scale_exp: i32,
+    path: PrepackPath,
+    schedule: Schedule,
+    pipeline_depth: usize,
+}
+
+/// Bit-copy an `m × w` slice result into columns `[n0, n0+w)` of `c`.
+fn copy_slice(c: &mut Matrix<f32>, slice: &SliceSpec, cs: &Matrix<f32>) {
+    let w = slice.matrix.cols();
+    for i in 0..cs.rows() {
+        c.row_mut(i)[slice.n0..slice.n0 + w].copy_from_slice(cs.row(i));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::softfloat::split::SplitConfig;
+    use crate::util::rng::Rng;
+
+    fn router(weight: u64, b: &Matrix<f32>, count: usize) -> Arc<ShardRouter> {
+        Arc::new(ShardRouter::new(
+            weight,
+            b,
+            ShardConfig { count, ..Default::default() },
+            Arc::new(PrepackCache::new(64 << 20)),
+            Arc::new(Metrics::new()),
+        ))
+    }
+
+    fn assert_bits_eq(x: &Matrix<f32>, y: &Matrix<f32>, what: &str) {
+        assert_eq!(x.shape(), y.shape(), "{what}");
+        for (u, v) in x.as_slice().iter().zip(y.as_slice()) {
+            assert_eq!(u.to_bits(), v.to_bits(), "{what}");
+        }
+    }
+
+    #[test]
+    fn partition_covers_all_columns_with_balanced_widths() {
+        let mut rng = Rng::new(31);
+        let b = Matrix::random_symmetric(16, 53, 0, &mut rng);
+        let r = router(1, &b, 4);
+        assert_eq!(r.shard_count(), 4);
+        assert_eq!(r.live_count(), 4);
+        let asn = r.assignments();
+        let mut expect_n0 = 0usize;
+        for slices in &asn {
+            assert_eq!(slices.len(), 1);
+            let (n0, w) = slices[0];
+            assert_eq!(n0, expect_n0, "contiguous, in order");
+            assert!(w == 13 || w == 14, "53 over 4 shards: widths 14,13,13,13 — got {w}");
+            expect_n0 += w;
+        }
+        assert_eq!(expect_n0, 53, "every column assigned exactly once");
+        // Count is clamped: at most one shard per column, at least two.
+        let tiny = Matrix::zeros(4, 3);
+        assert_eq!(router(2, &tiny, 8).shard_count(), 3);
+    }
+
+    #[test]
+    fn sharded_gemm_bit_matches_full_prepack_for_every_count() {
+        let mut rng = Rng::new(32);
+        let b = Matrix::random_symmetric(48, 37, 0, &mut rng);
+        let a = Matrix::random_symmetric(8, 48, 0, &mut rng);
+        let split = SplitConfig::with_scale(12);
+        let pp = PrepackedMatrix::prepack(&b, PrepackPath::Cube(split));
+        let want = GemmBackend::new(Backend::CubeTermwise)
+            .with_scale(12)
+            .gemm_prepacked(&a, &pp);
+        for count in [2usize, 3, 5] {
+            let r = router(count as u64, &b, count);
+            let got = r
+                .gemm(
+                    &a,
+                    Backend::CubeTermwise,
+                    12,
+                    PrepackPath::Cube(split),
+                    Schedule::Serial,
+                    2,
+                    None,
+                )
+                .expect("sharded gemm");
+            assert_bits_eq(&want, &got, &format!("count={count}"));
+        }
+        // Fp32 path too (different panel format).
+        let pp32 = PrepackedMatrix::prepack(&b, PrepackPath::Fp32);
+        let want32 = GemmBackend::new(Backend::Fp32).gemm_prepacked(&a, &pp32);
+        let r = router(9, &b, 3);
+        let got32 = r
+            .gemm(&a, Backend::Fp32, 0, PrepackPath::Fp32, Schedule::Serial, 2, None)
+            .expect("sharded fp32 gemm");
+        assert_bits_eq(&want32, &got32, "fp32");
+    }
+
+    #[test]
+    fn slice_panels_are_cached_per_slice() {
+        let mut rng = Rng::new(33);
+        let b = Matrix::random_symmetric(32, 24, 0, &mut rng);
+        let cache = Arc::new(PrepackCache::new(64 << 20));
+        let r = Arc::new(ShardRouter::new(
+            5,
+            &b,
+            ShardConfig { count: 3, ..Default::default() },
+            Arc::clone(&cache),
+            Arc::new(Metrics::new()),
+        ));
+        let a = Matrix::random_symmetric(4, 32, 0, &mut rng);
+        let split = SplitConfig::with_scale(12);
+        for _ in 0..3 {
+            r.gemm(
+                &a,
+                Backend::CubeTermwise,
+                12,
+                PrepackPath::Cube(split),
+                Schedule::Serial,
+                2,
+                None,
+            )
+            .expect("sharded gemm");
+        }
+        let s = cache.stats();
+        assert_eq!(s.misses, 3, "one pack per slice: {s:?}");
+        assert_eq!(s.hits, 6, "later requests served from cache: {s:?}");
+    }
+
+    #[test]
+    fn kill_reassigns_slices_and_results_stay_bit_identical() {
+        let mut rng = Rng::new(34);
+        let b = Matrix::random_symmetric(40, 30, 0, &mut rng);
+        let a = Matrix::random_symmetric(6, 40, 0, &mut rng);
+        let split = SplitConfig::with_scale(12);
+        let pp = PrepackedMatrix::prepack(&b, PrepackPath::Cube(split));
+        let want = GemmBackend::new(Backend::CubeTermwise)
+            .with_scale(12)
+            .gemm_prepacked(&a, &pp);
+        let r = router(6, &b, 3);
+        let run = |r: &Arc<ShardRouter>| {
+            r.gemm(
+                &a,
+                Backend::CubeTermwise,
+                12,
+                PrepackPath::Cube(split),
+                Schedule::Serial,
+                2,
+                None,
+            )
+            .expect("sharded gemm")
+        };
+        assert_bits_eq(&want, &run(&r), "before kill");
+        r.kill(1);
+        assert_eq!(r.health(1), ShardHealth::Dead);
+        assert_eq!(r.live_count(), 2);
+        // Shard 1's slice moved to a survivor; coverage is still total.
+        let widths: usize = r.assignments().iter().flatten().map(|&(_, w)| w).sum();
+        assert_eq!(widths, 30);
+        assert!(r.assignments()[1].is_empty(), "dead shard owns nothing");
+        assert_bits_eq(&want, &run(&r), "after kill");
+        // Killing the rest leaves no live shard: typed error, no panic.
+        r.kill(0);
+        r.kill(2);
+        assert_eq!(r.live_count(), 0);
+        match r.gemm(
+            &a,
+            Backend::CubeTermwise,
+            12,
+            PrepackPath::Cube(split),
+            Schedule::Serial,
+            2,
+            None,
+        ) {
+            Err(GemmError::ShardFailed { .. }) => {}
+            other => panic!("expected ShardFailed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_is_typed() {
+        let b = Matrix::zeros(8, 12);
+        let r = router(7, &b, 2);
+        let a = Matrix::zeros(2, 9);
+        match r.gemm(&a, Backend::Fp32, 0, PrepackPath::Fp32, Schedule::Serial, 2, None) {
+            Err(GemmError::ShapeMismatch { m: 2, k_a: 9, k_b: 8, n: 12 }) => {}
+            other => panic!("expected ShapeMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn zero_row_requests_are_served() {
+        let mut rng = Rng::new(35);
+        let b = Matrix::random_symmetric(16, 10, 0, &mut rng);
+        let r = router(8, &b, 2);
+        let a: Matrix<f32> = Matrix::zeros(0, 16);
+        let c = r
+            .gemm(&a, Backend::Fp32, 0, PrepackPath::Fp32, Schedule::Serial, 2, None)
+            .expect("empty request");
+        assert_eq!(c.shape(), (0, 10));
+    }
+
+    #[test]
+    fn health_transitions_and_default_config() {
+        let d = ShardConfig::default();
+        assert_eq!(d.count, 0, "sharding is opt-in");
+        assert!(d.dead_after >= d.suspect_after);
+        let mut rng = Rng::new(36);
+        let b = Matrix::random_symmetric(8, 8, 0, &mut rng);
+        let r = router(9, &b, 2);
+        // Failures march Healthy → Suspect → Dead at the thresholds.
+        r.on_failure(0);
+        assert_eq!(r.health(0), ShardHealth::Suspect, "suspect_after=1");
+        r.on_success(0);
+        assert_eq!(r.health(0), ShardHealth::Healthy, "success resets");
+        r.on_failure(0);
+        r.on_failure(0);
+        assert_eq!(r.health(0), ShardHealth::Suspect);
+        r.on_failure(0);
+        assert_eq!(r.health(0), ShardHealth::Dead, "dead_after=3");
+        // Dead is terminal.
+        r.on_success(0);
+        assert_eq!(r.health(0), ShardHealth::Dead);
+    }
+}

@@ -1,0 +1,409 @@
+//! Deterministic fault injection: named failpoints for the serving and
+//! executor layers.
+//!
+//! A *failpoint* is a named site in production code — e.g.
+//! `coordinator.batch.exec` — that is a no-op until a test (or the
+//! `SGEMM_CUBE_FAILPOINTS` environment variable) arms it with a policy:
+//!
+//! * `panic` — panic at the site (exercises the `catch_unwind` /
+//!   detached-panic containment paths),
+//! * `error` — return [`InjectedFault`], which call sites map to a
+//!   typed [`crate::gemm::error::GemmError::Injected`],
+//! * `delay(ms)` — sleep at the site (exercises deadlines, overload
+//!   shedding and pipeline stalls),
+//! * `off` — remove the site's configuration.
+//!
+//! Trigger counting is deterministic: a site configured with
+//! [`configure_nth`]`(site, policy, after, times)` fires on hits
+//! `after, after+1, …` until it has fired `times` times, then goes
+//! quiet. Hit and fire counters are observable ([`hits`], [`fired`])
+//! so chaos tests can pin exact schedules.
+//!
+//! **Disabled cost.** When nothing is armed, [`check`] compiles to a
+//! single relaxed atomic load and an equality test — no lock, no map
+//! lookup, no allocation. The registry only gets involved while at
+//! least one site holds a non-`off` policy.
+//!
+//! Environment syntax (applied once, on first use):
+//!
+//! ```text
+//! SGEMM_CUBE_FAILPOINTS="site=policy[@after[:times]][;site2=...]"
+//! SGEMM_CUBE_FAILPOINTS="coordinator.batch.exec=panic@3:1;exec.pipeline.prefetch=delay(5)"
+//! ```
+//!
+//! Planted sites (all no-ops unless armed):
+//!
+//! | site | where | effect when armed |
+//! |------|-------|-------------------|
+//! | `exec.pool.task` | start of every detached pool task | detached-panic containment |
+//! | `exec.pipeline.prefetch` | prefetch-ring pack step | ring poisoning → consumer panic |
+//! | `gemm.cache.prepack` | prepack-cache miss path (outside the lock) | pack failure without lock poisoning |
+//! | `coordinator.batch.exec` | per-request batch execution | typed request failure / retry |
+//! | `coordinator.shard.exec` (+ `.N`) | per-slice shard execution | shard failure → health/failover |
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, Once, OnceLock};
+use std::time::Duration;
+
+/// What a triggered failpoint does at its site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailPolicy {
+    /// Not armed (configuring a site `Off` removes it).
+    Off,
+    /// Panic at the site.
+    Panic,
+    /// Return [`InjectedFault`] from [`check`].
+    Error,
+    /// Sleep this many milliseconds at the site, then proceed normally.
+    Delay(u64),
+}
+
+impl FailPolicy {
+    /// Parse the env-spec form: `off`, `panic`, `error`, `delay(ms)`.
+    pub fn parse(s: &str) -> Option<FailPolicy> {
+        match s {
+            "off" => Some(FailPolicy::Off),
+            "panic" => Some(FailPolicy::Panic),
+            "error" => Some(FailPolicy::Error),
+            _ => {
+                let ms = s.strip_prefix("delay(")?.strip_suffix(')')?;
+                Some(FailPolicy::Delay(ms.trim().parse().ok()?))
+            }
+        }
+    }
+}
+
+/// The typed result of an `error`-policy failpoint firing. Call sites
+/// on the serving path convert it to
+/// [`crate::gemm::error::GemmError::Injected`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InjectedFault {
+    /// The site that fired.
+    pub site: String,
+    /// Which hit at the site this was (1-based).
+    pub hit: u64,
+}
+
+impl std::fmt::Display for InjectedFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "failpoint '{}' injected error (hit {})", self.site, self.hit)
+    }
+}
+
+impl std::error::Error for InjectedFault {}
+
+// Arming state: a three-valued relaxed atomic so the disabled fast path
+// is one load. UNINIT forces the first check through the slow path,
+// which applies SGEMM_CUBE_FAILPOINTS exactly once and then settles on
+// DISARMED/ARMED.
+const UNINIT: u8 = 0;
+const DISARMED: u8 = 1;
+const ARMED: u8 = 2;
+static STATE: AtomicU8 = AtomicU8::new(UNINIT);
+
+#[derive(Debug, Clone, Copy)]
+struct Site {
+    policy: FailPolicy,
+    /// First hit (1-based) that triggers.
+    after: u64,
+    /// Maximum number of triggers before the site goes quiet.
+    times: u64,
+    hits: u64,
+    fired: u64,
+}
+
+fn registry() -> &'static Mutex<HashMap<String, Site>> {
+    static REG: OnceLock<Mutex<HashMap<String, Site>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Apply `SGEMM_CUBE_FAILPOINTS` exactly once (idempotent, re-entrant
+/// safe: inserts into the registry directly rather than recursing
+/// through [`configure_nth`]).
+fn ensure_init() {
+    static INIT: Once = Once::new();
+    INIT.call_once(|| {
+        if let Ok(spec) = std::env::var("SGEMM_CUBE_FAILPOINTS") {
+            let mut reg = registry().lock().unwrap();
+            for entry in spec.split(';').map(str::trim).filter(|e| !e.is_empty()) {
+                match parse_entry(entry) {
+                    Some((site, FailPolicy::Off, _, _)) => {
+                        reg.remove(&site);
+                    }
+                    Some((site, policy, after, times)) => {
+                        reg.insert(
+                            site,
+                            Site { policy, after, times, hits: 0, fired: 0 },
+                        );
+                    }
+                    None => eprintln!(
+                        "SGEMM_CUBE_FAILPOINTS: ignoring malformed entry '{entry}'"
+                    ),
+                }
+            }
+            rearm(&reg);
+        }
+        // No env (or env armed nothing): settle out of UNINIT so every
+        // later check is the one-load fast path.
+        let _ = STATE.compare_exchange(UNINIT, DISARMED, Ordering::SeqCst, Ordering::SeqCst);
+    });
+}
+
+/// `site=policy[@after[:times]]` → `(site, policy, after, times)`.
+fn parse_entry(entry: &str) -> Option<(String, FailPolicy, u64, u64)> {
+    let (site, rhs) = entry.split_once('=')?;
+    let site = site.trim();
+    if site.is_empty() {
+        return None;
+    }
+    let (policy_s, after, times) = match rhs.trim().split_once('@') {
+        Some((p, trigger)) => {
+            let (after, times) = match trigger.split_once(':') {
+                Some((a, t)) => (a.trim().parse().ok()?, t.trim().parse().ok()?),
+                None => (trigger.trim().parse().ok()?, u64::MAX),
+            };
+            (p.trim(), after, times)
+        }
+        None => (rhs.trim(), 1, u64::MAX),
+    };
+    let policy = FailPolicy::parse(policy_s)?;
+    Some((site.to_string(), policy, after.max(1), times))
+}
+
+/// Recompute the arming flag from the registry contents (caller holds
+/// the registry lock and passes the guarded map).
+fn rearm(reg: &HashMap<String, Site>) {
+    let armed = reg.values().any(|s| s.policy != FailPolicy::Off);
+    STATE.store(if armed { ARMED } else { DISARMED }, Ordering::SeqCst);
+}
+
+/// Arm `site` with `policy`, triggering from the first hit with no
+/// fire limit. `FailPolicy::Off` disarms the site.
+pub fn configure(site: &str, policy: FailPolicy) {
+    configure_nth(site, policy, 1, u64::MAX);
+}
+
+/// Arm `site` with `policy`, triggering on hits `after, after+1, …`
+/// (1-based) for at most `times` fires. Resets the site's hit/fire
+/// counters, so reconfiguring replays the same deterministic schedule.
+pub fn configure_nth(site: &str, policy: FailPolicy, after: u64, times: u64) {
+    ensure_init();
+    let mut reg = registry().lock().unwrap();
+    if policy == FailPolicy::Off {
+        reg.remove(site);
+    } else {
+        reg.insert(
+            site.to_string(),
+            Site { policy, after: after.max(1), times, hits: 0, fired: 0 },
+        );
+    }
+    rearm(&reg);
+}
+
+/// Disarm every site (test teardown).
+pub fn reset() {
+    ensure_init();
+    let mut reg = registry().lock().unwrap();
+    reg.clear();
+    rearm(&reg);
+}
+
+/// Whether any site is currently armed.
+pub fn armed() -> bool {
+    STATE.load(Ordering::Relaxed) == ARMED
+}
+
+/// Total hits observed at `site` since it was (re)configured.
+pub fn hits(site: &str) -> u64 {
+    registry().lock().unwrap().get(site).map_or(0, |s| s.hits)
+}
+
+/// Times `site` actually triggered since it was (re)configured.
+pub fn fired(site: &str) -> u64 {
+    registry().lock().unwrap().get(site).map_or(0, |s| s.fired)
+}
+
+/// Evaluate the failpoint at `site`. Disabled cost: one relaxed atomic
+/// load. When the site triggers: `Panic` panics here, `Delay` sleeps
+/// here, `Error` returns the fault for the call site to surface as a
+/// typed error.
+#[inline]
+pub fn check(site: &str) -> Result<(), InjectedFault> {
+    if STATE.load(Ordering::Relaxed) == DISARMED {
+        return Ok(());
+    }
+    check_slow(site)
+}
+
+/// Like [`check`] for sites that cannot propagate an error (detached
+/// pool tasks, cache pack closures): an `error` policy panics too.
+#[inline]
+pub fn fire(site: &str) {
+    if STATE.load(Ordering::Relaxed) == DISARMED {
+        return;
+    }
+    if let Err(f) = check_slow(site) {
+        panic!("{f}");
+    }
+}
+
+/// Per-instance variant for replicated sites (shards): consults
+/// `"{site}.{idx}"` first, then the bare `site`, so a test can target
+/// one shard or all of them. Allocates the composed name only while
+/// armed.
+#[inline]
+pub fn check_indexed(site: &str, idx: usize) -> Result<(), InjectedFault> {
+    if STATE.load(Ordering::Relaxed) == DISARMED {
+        return Ok(());
+    }
+    check_slow(&format!("{site}.{idx}"))?;
+    check_slow(site)
+}
+
+#[cold]
+fn check_slow(site: &str) -> Result<(), InjectedFault> {
+    ensure_init();
+    if STATE.load(Ordering::Relaxed) == DISARMED {
+        return Ok(());
+    }
+    let (policy, hit) = {
+        let mut reg = registry().lock().unwrap();
+        let Some(s) = reg.get_mut(site) else { return Ok(()) };
+        s.hits += 1;
+        if s.policy == FailPolicy::Off || s.hits < s.after || s.fired >= s.times {
+            return Ok(());
+        }
+        s.fired += 1;
+        (s.policy, s.hits)
+    };
+    match policy {
+        FailPolicy::Off => Ok(()),
+        FailPolicy::Panic => panic!("failpoint '{site}' injected panic (hit {hit})"),
+        FailPolicy::Delay(ms) => {
+            // Sleep outside the registry lock so a delayed site never
+            // stalls checks at other sites.
+            std::thread::sleep(Duration::from_millis(ms));
+            Ok(())
+        }
+        FailPolicy::Error => Err(InjectedFault { site: site.to_string(), hit }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests share the process-global registry with every other
+    // test in the lib binary, so they only touch synthetic
+    // `test.faults.*` sites and disarm exactly those sites when done
+    // (never `reset()`, which would disarm concurrent tests).
+
+    #[test]
+    fn unconfigured_site_is_a_noop() {
+        for _ in 0..10 {
+            assert!(check("test.faults.never").is_ok());
+        }
+        assert_eq!(hits("test.faults.never"), 0, "disabled checks must not even count");
+    }
+
+    #[test]
+    fn error_policy_fires_deterministically_from_nth_hit() {
+        let site = "test.faults.nth";
+        configure_nth(site, FailPolicy::Error, 3, 2);
+        assert!(armed());
+        let fires: Vec<u64> =
+            (1..=8u64).filter(|_| check(site).is_err()).collect();
+        // 1-based positions 3 and 4 fire; the `times` budget then quiets
+        // the site for good.
+        assert_eq!(hits(site), 8);
+        assert_eq!(fired(site), 2);
+        assert_eq!(fires.len(), 2);
+        // Reconfiguring resets counters: the schedule replays exactly.
+        configure_nth(site, FailPolicy::Error, 3, 2);
+        let replay: Vec<usize> =
+            (1..=8usize).filter(|_| check(site).is_err()).collect();
+        assert_eq!(replay, vec![3, 4]);
+        configure(site, FailPolicy::Off);
+    }
+
+    #[test]
+    fn error_carries_site_and_hit() {
+        let site = "test.faults.err";
+        configure(site, FailPolicy::Error);
+        let f = check(site).unwrap_err();
+        assert_eq!(f.site, site);
+        assert_eq!(f.hit, 1);
+        assert!(format!("{f}").contains("test.faults.err"));
+        configure(site, FailPolicy::Off);
+        assert!(check(site).is_ok(), "off removes the site");
+    }
+
+    #[test]
+    fn panic_policy_panics_with_site_name() {
+        let site = "test.faults.boom";
+        configure(site, FailPolicy::Panic);
+        let r = std::panic::catch_unwind(|| {
+            let _ = check(site);
+        });
+        configure(site, FailPolicy::Off);
+        let payload = r.expect_err("panic policy must panic");
+        let msg = payload.downcast_ref::<String>().expect("string payload");
+        assert!(msg.contains("test.faults.boom"), "{msg}");
+    }
+
+    #[test]
+    fn fire_panics_on_error_policy() {
+        let site = "test.faults.fire";
+        configure(site, FailPolicy::Error);
+        let r = std::panic::catch_unwind(|| fire(site));
+        configure(site, FailPolicy::Off);
+        assert!(r.is_err(), "fire() must escalate error policies to panics");
+    }
+
+    #[test]
+    fn delay_policy_sleeps_then_proceeds() {
+        let site = "test.faults.delay";
+        configure(site, FailPolicy::Delay(20));
+        let t0 = std::time::Instant::now();
+        assert!(check(site).is_ok());
+        assert!(t0.elapsed() >= Duration::from_millis(15), "{:?}", t0.elapsed());
+        configure(site, FailPolicy::Off);
+    }
+
+    #[test]
+    fn indexed_sites_match_suffix_then_base() {
+        let site = "test.faults.shardy";
+        configure(&format!("{site}.1"), FailPolicy::Error);
+        assert!(check_indexed(site, 0).is_ok());
+        assert!(check_indexed(site, 1).is_err());
+        configure(&format!("{site}.1"), FailPolicy::Off);
+        configure(site, FailPolicy::Error);
+        assert!(check_indexed(site, 0).is_err(), "base site catches every index");
+        configure(site, FailPolicy::Off);
+    }
+
+    #[test]
+    fn env_spec_parsing() {
+        assert_eq!(
+            parse_entry("a.b=panic"),
+            Some(("a.b".to_string(), FailPolicy::Panic, 1, u64::MAX))
+        );
+        assert_eq!(
+            parse_entry(" a.b = delay(5) @ 3 : 2 "),
+            Some(("a.b".to_string(), FailPolicy::Delay(5), 3, 2))
+        );
+        assert_eq!(
+            parse_entry("x=error@7"),
+            Some(("x".to_string(), FailPolicy::Error, 7, u64::MAX))
+        );
+        assert_eq!(parse_entry("x=off"), Some(("x".to_string(), FailPolicy::Off, 1, u64::MAX)));
+        // `after` is clamped to 1 (hit counting is 1-based).
+        assert_eq!(parse_entry("x=error@0"), Some(("x".to_string(), FailPolicy::Error, 1, u64::MAX)));
+        for bad in ["", "=panic", "x", "x=warp", "x=delay(", "x=delay(a)", "x=error@a"] {
+            assert_eq!(parse_entry(bad), None, "{bad:?}");
+        }
+        assert_eq!(FailPolicy::parse("delay(250)"), Some(FailPolicy::Delay(250)));
+        assert_eq!(FailPolicy::parse("panic "), None, "caller trims");
+    }
+}

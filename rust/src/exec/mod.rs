@@ -15,9 +15,16 @@
 //!   Fig. 7 double-buffered B stream) and overlapped-AB (B panel + A
 //!   row-block stripe prefetched together), both bit-identical to the
 //!   serial sweeps.
+//! * [`faults`] — deterministic failpoints planted in the pool task
+//!   path, the prefetch ring, the prepack cache and batch/shard
+//!   execution; a single relaxed atomic load when disarmed, the chaos
+//!   suite's lever when armed (`SGEMM_CUBE_FAILPOINTS` or the
+//!   programmatic API).
 
+pub mod faults;
 pub mod pipeline;
 pub mod pool;
 
+pub use faults::{FailPolicy, InjectedFault};
 pub use pipeline::{clamp_depth, PrefetchStats, DEFAULT_PIPELINE_DEPTH, MAX_PIPELINE_DEPTH};
 pub use pool::{Pool, TaskHandle, TaskState};

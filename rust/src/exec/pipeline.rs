@@ -264,6 +264,11 @@ fn prefetch_loop(ring: &Ring, raw: RawPackFn) {
             }
         };
         let r = catch_unwind(AssertUnwindSafe(|| unsafe {
+            // Failpoint inside the pack step's containment: an armed
+            // panic poisons the ring (consumer panics with the typed
+            // report), a delay stalls the prefetcher so consumer-wait
+            // accounting and serial degeneration get exercised.
+            crate::exec::faults::fire("exec.pipeline.prefetch");
             (raw.call)(raw.data, idx, &mut slot)
         }));
         let mut st = ring.lock();

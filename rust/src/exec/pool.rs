@@ -194,9 +194,17 @@ impl Pool {
             state: Mutex::new(TaskState::Queued),
             changed: Condvar::new(),
         });
+        // Failpoint at the head of every detached task, before the
+        // closure runs or claims anything: a chaos-armed panic here is
+        // exactly a worker dying at task start (contained like any
+        // detached panic), and a delay models a slow pickup.
+        let run = Box::new(move || {
+            crate::exec::faults::fire("exec.pool.task");
+            f();
+        });
         {
             let mut q = self.shared.state.lock().unwrap();
-            q.injector.push_back(Task { run: Box::new(f), status: Some(Arc::clone(&cell)) });
+            q.injector.push_back(Task { run, status: Some(Arc::clone(&cell)) });
         }
         self.shared.work.notify_all();
         TaskHandle { cell, shared: Arc::clone(&self.shared) }

@@ -43,7 +43,11 @@ use crate::gemm::prepacked::PrepackedMatrix;
 /// identity (two distinct weights of equal shape must not collide);
 /// `backend`/`scale_exp` pin the precision path and scaling the panels
 /// were prepared for (callers normalize: both cube orders share packed
-/// panels, and `scale_exp` is 0 on non-cube paths).
+/// panels, and `scale_exp` is 0 on non-cube paths). `col0` is the first
+/// weight column covered by the entry: 0 with `n` = the full width for
+/// whole-weight packs, the slice origin for the shard router's
+/// column-partition packs ([`crate::coordinator::shard`]) — so slices
+/// of one weight coexist with each other and with the full pack.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct PrepackKey {
     pub weight: u64,
@@ -51,6 +55,7 @@ pub struct PrepackKey {
     pub n: usize,
     pub backend: Backend,
     pub scale_exp: i32,
+    pub col0: usize,
 }
 
 /// Point-in-time cache counters.
@@ -126,6 +131,11 @@ impl PrepackCache {
             }
             g.misses += 1;
         }
+        // Failpoint on the miss path, outside the lock like the pack
+        // itself: an armed panic unwinds through the caller's
+        // containment without poisoning the cache mutex, and a retry
+        // simply misses again and repacks.
+        crate::exec::faults::fire("gemm.cache.prepack");
         let packed = Arc::new(pack());
         if self.capacity_bytes == 0 {
             // Disabled cache: serve the packed operand without retaining
@@ -228,7 +238,7 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn key(weight: u64, n: usize) -> PrepackKey {
-        PrepackKey { weight, k: n, n, backend: Backend::Fp32, scale_exp: 0 }
+        PrepackKey { weight, k: n, n, backend: Backend::Fp32, scale_exp: 0, col0: 0 }
     }
 
     fn packed(n: usize, seed: u64) -> PrepackedMatrix {
@@ -263,8 +273,13 @@ mod tests {
         let mut k3 = key(1, 16);
         k3.scale_exp = 8;
         cache.get_or_insert_with(k3, || packed(16, 3));
-        assert_eq!(cache.stats().entries, 3);
-        assert_eq!(cache.stats().misses, 3);
+        // A column slice of weight 1 (same shape, nonzero origin) is its
+        // own entry — the shard router relies on this.
+        let mut k4 = key(1, 16);
+        k4.col0 = 16;
+        cache.get_or_insert_with(k4, || packed(16, 4));
+        assert_eq!(cache.stats().entries, 4);
+        assert_eq!(cache.stats().misses, 4);
     }
 
     #[test]

@@ -2,6 +2,8 @@
 //! `err = ||C_true - C_calc||_2 / ||C_true||_2` (Frobenius norms) —
 //! plus [`GemmError`], the typed failure the serving path returns.
 
+use std::time::Duration;
+
 use crate::util::mat::Matrix;
 
 /// Typed failure of a GEMM request through the serving path
@@ -20,6 +22,44 @@ pub enum GemmError {
     UnknownWeight(u64),
     /// The kernel panicked while executing; carries the panic message.
     Panicked(String),
+    /// The request's deadline elapsed before a result was produced
+    /// (`[server] request_timeout_ms`); `after` is how long the request
+    /// had been outstanding when the caller (or server) gave up.
+    Timeout { after: Duration },
+    /// Admission control shed the request at submit time: `in_flight`
+    /// requests were already queued or executing against a bound of
+    /// `limit` (`[server] max_pending`).
+    Overloaded { in_flight: usize, limit: usize },
+    /// The shard router could not produce the column slice owned by
+    /// `shard`, even after its retry and failover budget.
+    ShardFailed { shard: usize, reason: String },
+    /// The dispatcher or a batch task dropped the channel — the service
+    /// shut down, or a worker died mid-request.
+    ChannelClosed,
+    /// A failpoint injected this failure
+    /// ([`crate::exec::faults`]; chaos tests only) — carries the site.
+    Injected(String),
+}
+
+impl GemmError {
+    /// Whether a retry of the same request could plausibly succeed.
+    ///
+    /// Transient worker-side failures (a panicked batch, a dropped
+    /// reply channel, an injected fault) are retryable — the blocking
+    /// entry points resubmit them under
+    /// [`ServiceConfig::retries`](crate::coordinator::server::ServiceConfig::retries).
+    /// Deterministic rejections ([`GemmError::ShapeMismatch`],
+    /// [`GemmError::UnknownWeight`]) and back-pressure signals
+    /// ([`GemmError::Timeout`], [`GemmError::Overloaded`]) are not;
+    /// neither is [`GemmError::ShardFailed`], which the router only
+    /// returns after exhausting its own per-slice retry + failover
+    /// budget.
+    pub fn is_retryable(&self) -> bool {
+        matches!(
+            self,
+            GemmError::Panicked(_) | GemmError::ChannelClosed | GemmError::Injected(_)
+        )
+    }
 }
 
 impl std::fmt::Display for GemmError {
@@ -33,11 +73,31 @@ impl std::fmt::Display for GemmError {
                 write!(f, "unknown weight id {id}; call register_weights first")
             }
             GemmError::Panicked(msg) => write!(f, "gemm panicked: {msg}"),
+            GemmError::Timeout { after } => {
+                write!(f, "request timed out after {:.3} ms", after.as_secs_f64() * 1e3)
+            }
+            GemmError::Overloaded { in_flight, limit } => write!(
+                f,
+                "service overloaded: {in_flight} requests pending against a bound of {limit}"
+            ),
+            GemmError::ShardFailed { shard, reason } => {
+                write!(f, "shard {shard} failed: {reason}")
+            }
+            GemmError::ChannelClosed => {
+                write!(f, "service channel closed (shut down, or a worker died mid-request)")
+            }
+            GemmError::Injected(site) => write!(f, "injected fault at failpoint '{site}'"),
         }
     }
 }
 
 impl std::error::Error for GemmError {}
+
+impl From<crate::exec::faults::InjectedFault> for GemmError {
+    fn from(f: crate::exec::faults::InjectedFault) -> GemmError {
+        GemmError::Injected(f.site)
+    }
+}
 
 /// Relative Frobenius-norm error of `calc` against `truth` (both f64;
 /// promote f32 results with [`Matrix::to_f64`] first).
@@ -121,5 +181,38 @@ mod tests {
         let any: anyhow::Error = e.clone().into();
         assert!(format!("{any}").contains("inner dimensions"));
         assert_eq!(e, e.clone());
+    }
+
+    #[test]
+    fn resilience_errors_display() {
+        let t = GemmError::Timeout { after: Duration::from_millis(25) };
+        assert!(format!("{t}").contains("25.000 ms"), "{t}");
+        let o = GemmError::Overloaded { in_flight: 9, limit: 8 };
+        assert!(format!("{o}").contains("9 requests pending"), "{o}");
+        let s = GemmError::ShardFailed { shard: 2, reason: "boom".into() };
+        assert!(format!("{s}").contains("shard 2"), "{s}");
+        assert!(format!("{}", GemmError::ChannelClosed).contains("channel closed"));
+        let i = GemmError::Injected("coordinator.batch.exec".into());
+        assert!(format!("{i}").contains("coordinator.batch.exec"), "{i}");
+    }
+
+    #[test]
+    fn retryability_classification() {
+        // Transient worker-side failures: a retry may succeed.
+        assert!(GemmError::Panicked("x".into()).is_retryable());
+        assert!(GemmError::ChannelClosed.is_retryable());
+        assert!(GemmError::Injected("site".into()).is_retryable());
+        // Deterministic rejections and back-pressure: never retried.
+        assert!(!GemmError::ShapeMismatch { m: 1, k_a: 2, k_b: 3, n: 4 }.is_retryable());
+        assert!(!GemmError::UnknownWeight(1).is_retryable());
+        assert!(!GemmError::Timeout { after: Duration::ZERO }.is_retryable());
+        assert!(!GemmError::Overloaded { in_flight: 1, limit: 1 }.is_retryable());
+        assert!(!GemmError::ShardFailed { shard: 0, reason: String::new() }.is_retryable());
+    }
+
+    #[test]
+    fn injected_fault_converts_to_typed_error() {
+        let f = crate::exec::faults::InjectedFault { site: "a.b".into(), hit: 3 };
+        assert_eq!(GemmError::from(f), GemmError::Injected("a.b".into()));
     }
 }

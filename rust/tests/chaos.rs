@@ -1,0 +1,318 @@
+//! Chaos suite: fault-injected resilient serving.
+//!
+//! Every scenario arms real failpoints ([`sgemm_cube::exec::faults`])
+//! in the serving path and asserts the typed, bounded behaviour the
+//! coordinator promises: a killed or failing shard is invisible to
+//! clients (responses stay bit-identical to single-node serving),
+//! injected batch panics/errors are retried behind the blocking entry
+//! points, saturation sheds with [`GemmError::Overloaded`] instead of
+//! deadlocking, deadlines surface as [`GemmError::Timeout`] instead of
+//! hanging the waiter, and the same failpoint schedule replays
+//! identically across runs.
+//!
+//! The failpoint registry is process-global, so the tests serialize on
+//! one lock and reset the registry on entry (with poison recovery — an
+//! injected panic unwinding through an assertion must not wedge the
+//! rest of the suite).
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use sgemm_cube::coordinator::batcher::BatcherConfig;
+use sgemm_cube::coordinator::server::{GemmService, ServiceConfig};
+use sgemm_cube::coordinator::shard::{ShardConfig, ShardHealth};
+use sgemm_cube::exec::faults::{self, FailPolicy};
+use sgemm_cube::gemm::error::GemmError;
+use sgemm_cube::util::mat::Matrix;
+use sgemm_cube::util::rng::Rng;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize the test and start it from a disarmed registry.
+fn chaos_guard() -> std::sync::MutexGuard<'static, ()> {
+    let g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    faults::reset();
+    g
+}
+
+fn cfg() -> ServiceConfig {
+    ServiceConfig {
+        batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+        n_workers: 2,
+        ..Default::default()
+    }
+}
+
+fn assert_bits_eq(x: &Matrix<f32>, y: &Matrix<f32>, what: &str) {
+    assert_eq!(x.shape(), y.shape(), "{what}");
+    for (u, v) in x.as_slice().iter().zip(y.as_slice()) {
+        assert_eq!(u.to_bits(), v.to_bits(), "{what}");
+    }
+}
+
+/// Kill one shard mid-stream: requests before and after the loss all
+/// bit-match an unsharded reference service — failover is invisible to
+/// clients, and the router's health reflects the loss.
+#[test]
+fn killed_shard_mid_stream_failover_bit_matches_single_node() {
+    let _g = chaos_guard();
+    let single = GemmService::start(cfg());
+    let sharded = GemmService::start(ServiceConfig {
+        shards: ShardConfig { count: 3, ..Default::default() },
+        ..cfg()
+    });
+    let mut rng = Rng::new(71);
+    let w = Matrix::random_symmetric(64, 53, 0, &mut rng);
+    let id_single = single.register_weights(w.clone());
+    let id_sharded = sharded.register_weights(w);
+    let router = sharded.shard_router(id_sharded).expect("router built at registration");
+    assert_eq!(router.live_count(), 3);
+    for i in 0..6 {
+        if i == 3 {
+            router.kill(1); // lose a shard with traffic in flight
+        }
+        let a = Matrix::random_symmetric(8, 64, 0, &mut rng);
+        let want = single
+            .gemm_blocking_prepacked(a.clone(), id_single, None)
+            .expect("submit")
+            .result
+            .expect("single-node request");
+        let got = sharded
+            .gemm_blocking_prepacked(a, id_sharded, None)
+            .expect("submit")
+            .result
+            .expect("sharded request");
+        assert_bits_eq(&want, &got, &format!("request {i}"));
+    }
+    assert_eq!(router.health(1), ShardHealth::Dead);
+    assert_eq!(router.live_count(), 2);
+    assert_eq!(sharded.metrics().report().errors, 0, "failover is invisible to clients");
+    single.shutdown();
+    sharded.shutdown();
+}
+
+/// Persistent injected errors on one shard march it Healthy → Suspect →
+/// Dead while every response stays bit-identical; the recoveries count
+/// as failovers, never as client-visible errors.
+#[test]
+fn injected_shard_errors_drive_health_failover_and_reassignment() {
+    let _g = chaos_guard();
+    faults::configure("coordinator.shard.exec.1", FailPolicy::Error);
+    let single = GemmService::start(cfg());
+    let sharded = GemmService::start(ServiceConfig {
+        shards: ShardConfig {
+            count: 3,
+            suspect_after: 1,
+            dead_after: 2,
+            retries: 1,
+            backoff: Duration::ZERO,
+        },
+        ..cfg()
+    });
+    let mut rng = Rng::new(72);
+    let w = Matrix::random_symmetric(48, 30, 0, &mut rng);
+    let id_single = single.register_weights(w.clone());
+    let id_sharded = sharded.register_weights(w);
+    let router = sharded.shard_router(id_sharded).expect("router");
+    for i in 0..3 {
+        let a = Matrix::random_symmetric(6, 48, 0, &mut rng);
+        let want = single
+            .gemm_blocking_prepacked(a.clone(), id_single, None)
+            .expect("submit")
+            .result
+            .expect("single-node request");
+        let got = sharded
+            .gemm_blocking_prepacked(a, id_sharded, None)
+            .expect("submit")
+            .result
+            .expect("sharded request");
+        assert_bits_eq(&want, &got, &format!("request {i}"));
+    }
+    // One fan-out failure (Suspect at 1) + one same-shard retry failure
+    // (Dead at 2): the first request already buries shard 1.
+    assert_eq!(router.health(1), ShardHealth::Dead);
+    assert_eq!(router.live_count(), 2);
+    let report = sharded.metrics().report();
+    assert!(report.failovers >= 1, "failovers={}", report.failovers);
+    assert_eq!(report.errors, 0, "recovery must be invisible to clients");
+    assert!(faults::fired("coordinator.shard.exec.1") >= 2);
+    faults::reset();
+    single.shutdown();
+    sharded.shutdown();
+}
+
+/// A panic injected into batch execution is contained by the worker,
+/// surfaced as a retryable typed error, and masked by the blocking
+/// entry point's retry — and the retry is counted.
+#[test]
+fn injected_batch_panic_is_retried_to_success() {
+    let _g = chaos_guard();
+    faults::configure_nth("coordinator.batch.exec", FailPolicy::Panic, 1, 1);
+    let svc = GemmService::start(ServiceConfig { retry_backoff: Duration::ZERO, ..cfg() });
+    let mut rng = Rng::new(73);
+    let a = Matrix::random_symmetric(8, 16, 0, &mut rng);
+    let b = Matrix::random_symmetric(16, 8, 0, &mut rng);
+    let resp = svc.gemm_blocking(a, b, None).expect("submit");
+    assert!(resp.result.is_ok(), "retry must mask the injected panic: {:?}", resp.result);
+    assert!(svc.metrics().report().retries >= 1);
+    assert_eq!(faults::fired("coordinator.batch.exec"), 1);
+    faults::reset();
+    svc.shutdown();
+}
+
+/// The `error` policy takes the typed-injection path instead of the
+/// unwind path; once the retry budget is exhausted the typed error
+/// reaches the client, naming the failpoint.
+#[test]
+fn injected_batch_error_retries_then_surfaces_typed() {
+    let _g = chaos_guard();
+    faults::configure_nth("coordinator.batch.exec", FailPolicy::Error, 1, 1);
+    let svc = GemmService::start(ServiceConfig { retry_backoff: Duration::ZERO, ..cfg() });
+    let mut rng = Rng::new(74);
+    let a = Matrix::random_symmetric(8, 16, 0, &mut rng);
+    let b = Matrix::random_symmetric(16, 8, 0, &mut rng);
+    let resp = svc.gemm_blocking(a.clone(), b.clone(), None).expect("submit");
+    assert!(resp.result.is_ok(), "one injected error, budget of 2: {:?}", resp.result);
+    // Unlimited injection exhausts the budget; the typed error surfaces.
+    faults::configure("coordinator.batch.exec", FailPolicy::Error);
+    let resp = svc.gemm_blocking(a, b, None).expect("submit");
+    match resp.result {
+        Err(GemmError::Injected(site)) => assert_eq!(site, "coordinator.batch.exec"),
+        other => panic!("expected Injected, got {other:?}"),
+    }
+    assert!(svc.metrics().report().retries >= 3, "1 masking retry + 2 exhausted");
+    faults::reset();
+    svc.shutdown();
+}
+
+/// A panic injected into the prepack-cache miss path is contained (no
+/// lock poisoning — the next attempt simply misses again and repacks)
+/// and masked by the retry.
+#[test]
+fn injected_prepack_panic_is_contained_and_retried() {
+    let _g = chaos_guard();
+    faults::configure_nth("gemm.cache.prepack", FailPolicy::Panic, 1, 1);
+    let svc = GemmService::start(ServiceConfig { retry_backoff: Duration::ZERO, ..cfg() });
+    let mut rng = Rng::new(75);
+    let w = Matrix::random_symmetric(24, 16, 0, &mut rng);
+    let id = svc.register_weights(w);
+    let a = Matrix::random_symmetric(4, 24, 0, &mut rng);
+    let resp = svc.gemm_blocking_prepacked(a, id, None).expect("submit");
+    assert!(resp.result.is_ok(), "{:?}", resp.result);
+    assert!(svc.metrics().report().retries >= 1);
+    assert_eq!(svc.prepack_stats().misses, 2, "the failed pack never inserted");
+    faults::reset();
+    svc.shutdown();
+}
+
+/// Saturating a 1-worker service whose batches are slowed by an
+/// injected delay: admission control sheds the burst with a typed
+/// `Overloaded`, every admitted request still completes, nothing
+/// deadlocks.
+#[test]
+fn saturation_sheds_with_typed_overloaded_and_no_deadlock() {
+    let _g = chaos_guard();
+    faults::configure("coordinator.batch.exec", FailPolicy::Delay(25));
+    let svc = GemmService::start(ServiceConfig {
+        batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
+        n_workers: 1,
+        max_pending: 2,
+        retries: 0,
+        ..Default::default()
+    });
+    let mut rng = Rng::new(76);
+    let a = Matrix::random_symmetric(4, 8, 0, &mut rng);
+    let b = Matrix::random_symmetric(8, 4, 0, &mut rng);
+    let mut accepted = Vec::new();
+    let mut shed = 0u64;
+    for _ in 0..10 {
+        match svc.submit(a.clone(), b.clone(), None) {
+            Ok((_, rx)) => accepted.push(rx),
+            Err(GemmError::Overloaded { in_flight, limit }) => {
+                assert!(in_flight > limit);
+                assert_eq!(limit, 2);
+                shed += 1;
+            }
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    assert_eq!(accepted.len() as u64 + shed, 10);
+    assert!(shed >= 1, "the bound must shed under burst");
+    assert!(accepted.len() >= 2, "the bound must admit up to max_pending");
+    for rx in accepted {
+        let resp = rx.recv_timeout(Duration::from_secs(10)).expect("no deadlock");
+        assert!(resp.result.is_ok());
+    }
+    assert_eq!(svc.metrics().report().shed, shed);
+    faults::reset();
+    svc.shutdown();
+}
+
+/// A request that outlives its deadline returns a typed `Timeout`
+/// promptly — the waiter never hangs on a stalled batch — and the
+/// expiry is counted.
+#[test]
+fn deadline_expiry_is_a_typed_timeout_not_a_hang() {
+    let _g = chaos_guard();
+    faults::configure("coordinator.batch.exec", FailPolicy::Delay(200));
+    let svc = GemmService::start(ServiceConfig {
+        request_timeout: Some(Duration::from_millis(30)),
+        retries: 0,
+        ..cfg()
+    });
+    let mut rng = Rng::new(77);
+    let a = Matrix::random_symmetric(4, 8, 0, &mut rng);
+    let b = Matrix::random_symmetric(8, 4, 0, &mut rng);
+    let t0 = Instant::now();
+    match svc.gemm_blocking(a, b, None) {
+        Err(GemmError::Timeout { after }) => assert_eq!(after, Duration::from_millis(30)),
+        other => panic!("expected Timeout, got {other:?}"),
+    }
+    assert!(t0.elapsed() < Duration::from_secs(5), "waiter must give up promptly");
+    assert!(svc.metrics().report().timeouts >= 1);
+    // Disarm before shutdown so the drain isn't delayed per request.
+    faults::reset();
+    svc.shutdown();
+}
+
+/// Submissions after shutdown fail with a typed `ChannelClosed`; they
+/// never panic the submitting thread.
+#[test]
+fn submit_after_shutdown_is_channel_closed() {
+    let _g = chaos_guard();
+    let svc = GemmService::start(ServiceConfig { retries: 0, ..cfg() });
+    svc.shutdown();
+    let a: Matrix<f32> = Matrix::zeros(2, 3);
+    let b: Matrix<f32> = Matrix::zeros(3, 2);
+    match svc.submit(a.clone(), b.clone(), None) {
+        Err(GemmError::ChannelClosed) => {}
+        other => panic!("expected ChannelClosed, got {:?}", other.map(|(id, _)| id)),
+    }
+    match svc.gemm_blocking(a, b, None) {
+        Err(GemmError::ChannelClosed) => {}
+        other => panic!("expected ChannelClosed, got {other:?}"),
+    }
+}
+
+/// The same failpoint configuration replays the same schedule, run
+/// after run — chaos scenarios are reproducible, and a disarmed
+/// registry is a no-op.
+#[test]
+fn failpoint_schedules_replay_deterministically() {
+    let _g = chaos_guard();
+    let site = "chaos.determinism";
+    let mut runs = Vec::new();
+    for _ in 0..2 {
+        faults::configure_nth(site, FailPolicy::Error, 3, 2);
+        let fired: Vec<usize> = (1..=10).filter(|_| faults::check(site).is_err()).collect();
+        runs.push(fired);
+    }
+    assert_eq!(runs[0], vec![3, 4], "fires on hits 3 and 4, then goes quiet");
+    assert_eq!(runs[0], runs[1], "same config, same schedule");
+    assert_eq!(faults::hits(site), 10);
+    assert_eq!(faults::fired(site), 2);
+    faults::reset();
+    assert!(!faults::armed());
+    assert!(faults::check("coordinator.batch.exec").is_ok(), "disarmed sites are no-ops");
+    assert_eq!(faults::hits("coordinator.batch.exec"), 0);
+}

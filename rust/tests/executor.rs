@@ -212,6 +212,7 @@ fn cache_eviction_racing_an_in_flight_prefetched_batch_is_harmless() {
         n: 25,
         backend: Backend::CubeTermwise,
         scale_exp: 12,
+        col0: 0,
     };
     let held = cache.get_or_insert_with(key(1), || probe.clone());
     let a = Matrix::random_symmetric(16, 130, 0, &mut rng);

@@ -5,8 +5,8 @@ The fig11 bench (`cargo bench --bench fig11_blocking_perf`) writes every
 measurement to BENCH_gemm.json at the repo root; the CI bench-smoke job
 uploads the same file as a workflow artifact on every PR. This script
 turns that JSON into the markdown rows EXPERIMENTS.md keeps in
-§Perf-iteration-log (item 3), §Serving-amortization, §Overlap and
-§Executor, so filling the tables is mechanical:
+§Perf-iteration-log (item 3), §Serving-amortization, §Resilience,
+§Overlap and §Executor, so filling the tables is mechanical:
 
     python3 tools/render_bench_tables.py [BENCH_gemm.json]
 
@@ -107,6 +107,14 @@ def main():
     print(f"| `serving/prepacked_ab_speedup` | {fmt_x(med('serving/prepacked_ab_speedup/'))} | gate: ≥ 1.0× vs repack |")
     print(f"| `serving/prepacked_ab_inline_pack_s` | {fmt_s(med('serving/prepacked_ab_inline_pack_s'))} | consumer inline packs (≈ 0 when the ring keeps up) |")
     print(f"| `serving/prepacked_ab_consumer_wait_s` | {fmt_s(med('serving/prepacked_ab_consumer_wait_s'))} | consumer stalls behind the prefetcher (≈ 0 when the ring keeps up) |")
+
+    print("\n## §Resilience\n")
+    print("| record | value | note |")
+    print("|--------|-------|------|")
+    print(f"| `serving/cube_sharded4` | {fmt_s(med('serving/cube_sharded4/'))} | 4-shard fan-out, all healthy |")
+    print(f"| `serving/shard_scaling` | {fmt_x(med('serving/shard_scaling'))} | vs single prepacked; runner-core dependent (CI floor 0.25×) |")
+    print(f"| `serving/cube_sharded3of4` | {fmt_s(med('serving/cube_sharded3of4/'))} | one shard killed, slice on a survivor |")
+    print(f"| `serving/failover_overhead` | {fmt_x(med('serving/failover_overhead'))} | degraded vs healthy sharded; CI band [0.25×, 4.0×] |")
 
     print("\n## §Overlap\n")
     print("| record | value | note |")
