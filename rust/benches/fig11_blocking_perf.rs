@@ -34,6 +34,8 @@ use sgemm_cube::gemm::blocked::{
     gemm_prepacked_overlapped_staged, hgemm_blocked, host_block, sgemm_blocked,
 };
 use sgemm_cube::gemm::fast::cube_gemm_three_pass;
+use sgemm_cube::gemm::kernels::{detect_lane, force_lane, Lane};
+use sgemm_cube::gemm::pack::{MR, NR};
 use sgemm_cube::gemm::prepacked::{PrepackPath, PrepackedMatrix};
 use sgemm_cube::sim::blocking::{BlockConfig, GemmShape};
 use sgemm_cube::sim::chip::Chip;
@@ -76,12 +78,41 @@ fn main() {
         })
         .seconds
         .median;
-    bench.bench(&format!("host/sgemm_blocked/{n}^3"), Some(flops), || sgemm_blocked(&a, &b));
+    let sgemm_detected_median = bench
+        .bench(&format!("host/sgemm_blocked/{n}^3"), Some(flops), || sgemm_blocked(&a, &b))
+        .seconds
+        .median;
     bench.bench(&format!("host/hgemm_blocked/{n}^3"), Some(flops), || hgemm_blocked(&a, &b));
 
     let results = bench.results();
     let speedup = results[0].seconds.median / results[1].seconds.median;
     println!("\ncube blocked-fused vs three-pass speedup: {speedup:.2}x (target ≥ 3x at 1024³)");
+
+    // ---- kernel dispatch: detected SIMD lane vs forced scalar ----
+    // The sweeps dispatch per-lane micro-kernels (gemm::kernels):
+    // AVX2+FMA or NEON when the host supports them, portable scalar
+    // otherwise. Pinning the scalar lane on the same operands isolates
+    // the SIMD contribution; the detected lane is restored before every
+    // later measurement. kernel/lane records the detected lane's stable
+    // code (0 scalar / 1 avx2 / 2 neon) so the CI gate and the
+    // EXPERIMENTS table can condition on what the runner actually has.
+    let lane = detect_lane();
+    bench.record_scalar("kernel/lane", lane.code() as f64);
+    bench.record_scalar("kernel/mr", MR as f64);
+    bench.record_scalar("kernel/nr", NR as f64);
+    assert!(force_lane(Lane::Scalar), "the scalar lane is always available");
+    let scalar_median = bench
+        .bench(&format!("host/sgemm_blocked_scalar/{n}^3"), Some(flops), || sgemm_blocked(&a, &b))
+        .seconds
+        .median;
+    assert!(force_lane(lane), "the detected lane must be forceable");
+    let simd_speedup = scalar_median / sgemm_detected_median;
+    println!(
+        "\nkernel dispatch: lane '{lane}' (micro-tile {MR}x{NR}); \
+         detected vs forced-scalar fp32 speedup: {simd_speedup:.2}x \
+         (CI gates ≥ 2x only when the avx2 lane is detected)"
+    );
+    bench.record_scalar(&format!("blocked/simd_speedup/{n}^3"), simd_speedup);
 
     // ---- serving amortization: prepacked weight vs per-request packing ----
     // Serving-realistic shape: small activation batch against a fixed

@@ -7,6 +7,7 @@ use anyhow::{anyhow, bail, Result};
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// The subcommand (first non-flag token; `help` when absent).
     pub command: String,
     flags: BTreeMap<String, String>,
     consumed: std::cell::RefCell<std::collections::BTreeSet<String>>,
@@ -46,19 +47,24 @@ impl Args {
         Ok(Args { command, flags, consumed: Default::default() })
     }
 
+    /// Parse the process arguments.
     pub fn from_env() -> Result<Args> {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Raw value of `--key`, if present (marks the flag consumed).
     pub fn get(&self, key: &str) -> Option<&str> {
         self.consumed.borrow_mut().insert(key.to_string());
         self.flags.get(key).map(String::as_str)
     }
 
+    /// Raw value of `--key`, or `default` when absent.
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
+    /// Parse `--key` as a `usize`; `default` when absent, `Err` on a
+    /// malformed value.
     pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
         match self.get(key) {
             None => Ok(default),
@@ -66,6 +72,7 @@ impl Args {
         }
     }
 
+    /// Parse `--key` as an `i32` (same contract as [`Args::get_usize`]).
     pub fn get_i32(&self, key: &str, default: i32) -> Result<i32> {
         match self.get(key) {
             None => Ok(default),
@@ -73,6 +80,7 @@ impl Args {
         }
     }
 
+    /// Parse `--key` as a `u64` (same contract as [`Args::get_usize`]).
     pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
         match self.get(key) {
             None => Ok(default),
@@ -80,6 +88,8 @@ impl Args {
         }
     }
 
+    /// True when `--key` is present as `true`/`1`/`yes` (bare `--key`
+    /// parses as `true`).
     pub fn get_bool(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }

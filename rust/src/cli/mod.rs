@@ -31,6 +31,7 @@ OPTIONS (common):
     -h, --help           show this help
 ";
 
+/// Print [`USAGE`] to stdout.
 pub fn print_usage() {
     print!("{USAGE}");
 }

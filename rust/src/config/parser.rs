@@ -52,32 +52,40 @@ impl ConfigFile {
         ConfigFile::parse(&text)
     }
 
+    /// Raw value of `key` in `section`, if present.
     pub fn get(&self, section: &str, key: &str) -> Option<&str> {
         self.sections.get(section)?.get(key).map(String::as_str)
     }
 
+    /// Raw value of `key` in `section`, or `default` when absent.
     pub fn get_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
         self.get(section, key).unwrap_or(default)
     }
 
+    /// Parse `key` as a `usize`; `Ok(None)` when absent, `Err` on a
+    /// malformed value.
     pub fn get_usize(&self, section: &str, key: &str) -> Result<Option<usize>> {
         self.get(section, key)
             .map(|v| v.parse().with_context(|| format!("[{section}] {key} = {v}: not an integer")))
             .transpose()
     }
 
+    /// Parse `key` as an `i32` (same contract as [`ConfigFile::get_usize`]).
     pub fn get_i32(&self, section: &str, key: &str) -> Result<Option<i32>> {
         self.get(section, key)
             .map(|v| v.parse().with_context(|| format!("[{section}] {key} = {v}: not an integer")))
             .transpose()
     }
 
+    /// Parse `key` as an `f64` (same contract as [`ConfigFile::get_usize`]).
     pub fn get_f64(&self, section: &str, key: &str) -> Result<Option<f64>> {
         self.get(section, key)
             .map(|v| v.parse().with_context(|| format!("[{section}] {key} = {v}: not a number")))
             .transpose()
     }
 
+    /// Parse `key` as a literal `true` / `false` (same contract as
+    /// [`ConfigFile::get_usize`]).
     pub fn get_bool(&self, section: &str, key: &str) -> Result<Option<bool>> {
         self.get(section, key)
             .map(|v| match v {
@@ -88,6 +96,7 @@ impl ConfigFile {
             .transpose()
     }
 
+    /// Names of every non-empty section, in arbitrary order.
     pub fn sections(&self) -> impl Iterator<Item = &str> {
         self.sections.keys().map(String::as_str).filter(|s| !s.is_empty())
     }

@@ -17,6 +17,8 @@ use crate::sim::chip::Chip;
 pub struct ServerConfig(pub ServiceConfig);
 
 impl ServerConfig {
+    /// Build a [`ServiceConfig`] from the `[server]` section, starting
+    /// from defaults and applying only the keys present.
     pub fn from_config(cfg: &ConfigFile) -> Result<ServerConfig> {
         let mut sc = ServiceConfig::default();
         if let Some(w) = cfg.get_usize("server", "workers")? {
@@ -146,6 +148,7 @@ impl ServerConfig {
 pub struct ChipConfig(pub Chip);
 
 impl ChipConfig {
+    /// Resolve the `[chip]` preset and apply any numeric overrides.
     pub fn from_config(cfg: &ConfigFile) -> Result<ChipConfig> {
         let mut chip = match cfg.get_or("chip", "preset", "910a") {
             "910a" | "ascend-910a" => Chip::ascend_910a(),
@@ -170,6 +173,8 @@ impl ChipConfig {
 pub struct BlockingConfig(pub BlockConfig);
 
 impl BlockingConfig {
+    /// Read `[blocking]` block sizes (paper-best defaults) and validate
+    /// them against `chip`'s Eq. (12) constraints.
     pub fn from_config(cfg: &ConfigFile, chip: &Chip) -> Result<BlockingConfig> {
         let bm = cfg.get_usize("blocking", "bm")?.unwrap_or(176);
         let bk = cfg.get_usize("blocking", "bk")?.unwrap_or(64);

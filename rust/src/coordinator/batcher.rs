@@ -17,7 +17,9 @@ use crate::coordinator::request::{BatchKey, GemmRequest};
 /// Batching knobs.
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
+    /// Flush a batch as soon as it reaches this many requests.
     pub max_batch: usize,
+    /// Flush a batch once its oldest request has waited this long.
     pub max_wait: Duration,
 }
 
@@ -34,6 +36,7 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// An empty batcher with the given knobs.
     pub fn new(cfg: BatcherConfig) -> Batcher {
         Batcher { cfg, pending: HashMap::new() }
     }
@@ -74,6 +77,7 @@ impl Batcher {
         keys.into_iter().filter_map(|k| self.pending.remove(&k)).collect()
     }
 
+    /// Number of requests currently queued across all pending batches.
     pub fn pending_count(&self) -> usize {
         self.pending.values().map(Vec::len).sum()
     }

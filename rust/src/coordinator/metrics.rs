@@ -100,15 +100,20 @@ struct Inner {
 /// A snapshot for reporting.
 #[derive(Debug, Clone)]
 pub struct MetricsReport {
+    /// Completed requests, successes and failures alike.
     pub requests: u64,
+    /// Executed batches.
     pub batches: u64,
+    /// Requests that completed with an error.
     pub errors: u64,
     /// Latency summary in seconds (None until the first request).
     pub latency: Option<Summary>,
     /// Histogram quantiles in seconds (bucket upper bounds; None until
     /// the first successful request).
     pub p50: Option<f64>,
+    /// 95th-percentile latency bucket bound, seconds.
     pub p95: Option<f64>,
+    /// 99th-percentile latency bucket bound, seconds.
     pub p99: Option<f64>,
     /// Requests shed by admission control ([`GemmError::Overloaded`]).
     ///
@@ -127,6 +132,7 @@ pub struct MetricsReport {
 }
 
 impl Metrics {
+    /// Fresh, all-zero metrics.
     pub fn new() -> Metrics {
         Metrics::default()
     }
@@ -175,6 +181,7 @@ impl Metrics {
         self.inner.lock().unwrap().failovers += 1;
     }
 
+    /// Snapshot everything recorded so far into a [`MetricsReport`].
     pub fn report(&self) -> MetricsReport {
         let g = self.inner.lock().unwrap();
         let window = match (g.started, g.finished) {

@@ -24,12 +24,14 @@ use crate::util::mat::Matrix;
 /// What the policy decided for a request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PolicyDecision {
+    /// The precision path to execute.
     pub backend: Backend,
     /// Residual scaling exponent for cube paths (ignored otherwise).
     pub scale_exp: i32,
     /// Unbiased exponent range observed in the operands, if any finite
     /// non-zero entry exists.
     pub e_min: Option<i32>,
+    /// Upper end of the same exponent range.
     pub e_max: Option<i32>,
 }
 

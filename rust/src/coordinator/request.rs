@@ -12,16 +12,21 @@ use crate::util::mat::Matrix;
 /// the same batch (same executable / same kernel configuration).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct ShapeKey {
+    /// Rows of A and C.
     pub m: usize,
+    /// Inner (contraction) dimension.
     pub k: usize,
+    /// Columns of B and C.
     pub n: usize,
 }
 
 impl ShapeKey {
+    /// The shape key of an `(A, B)` operand pair.
     pub fn of(a: &Matrix<f32>, b: &Matrix<f32>) -> ShapeKey {
         ShapeKey { m: a.rows(), k: a.cols(), n: b.cols() }
     }
 
+    /// FLOP count of one GEMM at this shape (`2·m·n·k`).
     pub fn flops(&self) -> f64 {
         2.0 * self.m as f64 * self.k as f64 * self.n as f64
     }
@@ -38,11 +43,14 @@ pub struct WeightId(pub u64);
 /// ([`crate::gemm::cache`]), which is the point of registering at all.
 #[derive(Debug)]
 pub struct WeightEntry {
+    /// Identity the weight was registered under.
     pub id: WeightId,
+    /// The weight values.
     pub matrix: Matrix<f32>,
     /// Unbiased exponent range of the weight's finite non-zero entries
     /// (see [`crate::coordinator::policy::matrix_exponent_range`]).
     pub e_min: Option<i32>,
+    /// Upper end of the same exponent range.
     pub e_max: Option<i32>,
 }
 
@@ -50,7 +58,9 @@ pub struct WeightEntry {
 /// weight shared (via `Arc`) with the service registry and every other
 /// request against it.
 pub enum BOperand {
+    /// A one-shot B matrix owned by the request.
     Inline(Matrix<f32>),
+    /// A registered weight shared with the service registry.
     Weight(Arc<WeightEntry>),
 }
 
@@ -71,6 +81,7 @@ impl BOperand {
         }
     }
 
+    /// The registered weight identity, if this operand is cache-stable.
     pub fn weight_id(&self) -> Option<WeightId> {
         self.weight().map(|w| w.id)
     }
@@ -81,14 +92,19 @@ impl BOperand {
 /// reuse) and never mix with inline requests that merely share a shape.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct BatchKey {
+    /// The GEMM shape.
     pub shape: ShapeKey,
+    /// The registered weight identity, `None` for inline operands.
     pub weight: Option<WeightId>,
 }
 
 /// A GEMM job submitted to the service.
 pub struct GemmRequest {
+    /// Caller-chosen request identifier, echoed in the response.
     pub id: u64,
+    /// The A operand.
     pub a: Matrix<f32>,
+    /// The B operand (inline or registered weight).
     pub b: BOperand,
     /// Fixed precision path, or `None` to let the policy decide.
     pub backend: Option<Backend>,
@@ -105,10 +121,12 @@ pub struct GemmRequest {
 }
 
 impl GemmRequest {
+    /// The request's GEMM shape.
     pub fn shape(&self) -> ShapeKey {
         ShapeKey::of(&self.a, self.b.matrix())
     }
 
+    /// The key this request batches under (shape + weight identity).
     pub fn batch_key(&self) -> BatchKey {
         BatchKey { shape: self.shape(), weight: self.b.weight_id() }
     }
@@ -117,6 +135,7 @@ impl GemmRequest {
 /// The service's answer.
 #[derive(Debug)]
 pub struct GemmResponse {
+    /// The `id` of the request this answers.
     pub id: u64,
     /// The product, or the typed failure ([`GemmError`]) — a worker
     /// never panics on a bad request; it reports here.

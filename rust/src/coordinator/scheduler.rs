@@ -10,11 +10,14 @@ use crate::coordinator::request::ShapeKey;
 /// One schedulable tile: rows `[row_start, row_end)` of a GEMM.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Tile {
+    /// First row of the tile (inclusive).
     pub row_start: usize,
+    /// One past the last row of the tile.
     pub row_end: usize,
 }
 
 impl Tile {
+    /// Number of rows in the tile.
     pub fn rows(&self) -> usize {
         self.row_end - self.row_start
     }

@@ -97,7 +97,9 @@ pub const DEFAULT_RETRY_BACKOFF: Duration = Duration::from_micros(200);
 /// Service configuration.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
+    /// Dynamic-batching knobs.
     pub batcher: BatcherConfig,
+    /// Precision-path selection policy.
     pub policy: PrecisionPolicy,
     /// Maximum batches concurrently in flight on the pool
     /// (0 = available parallelism, same as the default).
@@ -509,6 +511,7 @@ impl GemmService {
         }
     }
 
+    /// The service's live metrics sink.
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
     }

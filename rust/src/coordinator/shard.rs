@@ -91,6 +91,7 @@ impl Default for ShardConfig {
 /// Health of one shard, driven by consecutive failures.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ShardHealth {
+    /// Serving normally.
     Healthy,
     /// Failing but still assigned traffic (and still retried first).
     Suspect,

@@ -5,9 +5,11 @@
 //! block's B panel and its A row-block stripe, driven by the persistent
 //! worker pool ([`crate::exec::pool`]) instead of a per-call thread.
 //!
-//! Schedules, in increasing pipeline depth (all bit-identical — same
-//! pack routines, same `b_n → b_k` consumption order, same shared
-//! sweeps):
+//! Schedules, in increasing pipeline depth (all bit-identical *per
+//! kernel lane* — same pack routines, same `b_n → b_k` consumption
+//! order, same shared sweeps; the ring stages packed panels only, which
+//! are lane-independent, and each sweep resolves its
+//! [`crate::gemm::kernels`] lane exactly once):
 //!
 //! * **Serial** — pack then sweep on the critical path
 //!   (`gemm/blocked.rs` serial drivers).
@@ -26,7 +28,7 @@
 //!   stripes — **one job per k block**, each stripe swept across every
 //!   column block before its slot recycles — so registered-weight
 //!   requests run kernel-only sweeps end to end
-//!   ([`gemm_prepacked_ab_core`] / [`cube_prepacked_ab_core`]).
+//!   (`gemm_prepacked_ab_core` / `cube_prepacked_ab_core`).
 //!   Consumer-side accounting ([`PrefetchStats`]) records the only
 //!   A-staging time that can appear on the critical path of this
 //!   schedule: inline fallback packs and ring-wait stalls.
@@ -45,10 +47,10 @@
 //! deadlock-free under full pool saturation.
 //!
 //! **Scoped-borrow safety.** The prefetch job reaches the operands
-//! through a lifetime-erased pointer ([`RawPackFn`]). Two facts keep it
+//! through a lifetime-erased pointer (`RawPackFn`). Two facts keep it
 //! sound: (1) packs only happen for claimed job indices, every claimed
 //! job is delivered to and awaited by the consumer before the driver
-//! returns; (2) the driver's drop guard ([`PrefetchGuard`]) sets the
+//! returns; (2) the driver's drop guard (`PrefetchGuard`) sets the
 //! ring's shutdown flag and then [`TaskHandle::cancel_or_join`]s the
 //! prefetch task — removing it unrun from the queue, or waiting out its
 //! current (bounded) step — before the borrowed operands can go out of

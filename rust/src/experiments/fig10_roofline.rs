@@ -9,6 +9,7 @@ use crate::sim::executor::simulate_sgemm_cube;
 use crate::sim::pipeline::Buffering;
 use crate::sim::roofline::knee_oi;
 
+/// The block configurations Fig. 10 sweeps.
 pub fn sweep_configs() -> Vec<BlockConfig> {
     vec![
         BlockConfig::new(48, 64, 48),
@@ -22,6 +23,7 @@ pub fn sweep_configs() -> Vec<BlockConfig> {
     ]
 }
 
+/// Run the Fig. 10 roofline sweep for `shape`.
 pub fn run(shape: GemmShape) -> Table {
     let chip = Chip::ascend_910a();
     let mut t = Table::new(

@@ -15,11 +15,14 @@ use crate::util::rng::Rng;
 /// Input distribution of Sec. 6.1.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Sampling {
+    /// Zero-mean uniform `U[-2^e, 2^e]`.
     Symmetric,
+    /// Non-negative uniform `U[0, 2^e]` (the error-amplifying case).
     NonNegative,
 }
 
 impl Sampling {
+    /// Human-readable distribution label.
     pub fn name(self) -> &'static str {
         match self {
             Sampling::Symmetric => "U[-2^e, 2^e]",

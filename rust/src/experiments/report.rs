@@ -5,12 +5,16 @@ use std::fmt::Write as _;
 /// A simple column-aligned table.
 #[derive(Debug, Clone, Default)]
 pub struct Table {
+    /// Table title (rendered as a `== title ==` banner).
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Data rows; each must match the header width.
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table with the given title and column headers.
     pub fn new(title: &str, headers: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -19,6 +23,7 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header width).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
         self.rows.push(cells);
@@ -77,7 +82,7 @@ impl Table {
     }
 }
 
-/// Format helpers shared by the figure modules.
+/// Scientific-notation cell formatting (`0` stays `0`).
 pub fn sci(v: f64) -> String {
     if v == 0.0 {
         "0".into()
@@ -86,6 +91,7 @@ pub fn sci(v: f64) -> String {
     }
 }
 
+/// Fixed-point cell formatting with `digits` decimals.
 pub fn fixed(v: f64, digits: usize) -> String {
     format!("{v:.digits$}")
 }

@@ -13,6 +13,7 @@ use crate::softfloat::split::SplitConfig;
 use crate::util::mat::Matrix;
 use crate::util::rng::Rng;
 
+/// Prior-work rows of Table 2: `(method, hardware, bits, throughput)`.
 pub const PRIOR_WORK: &[(&str, &str, &str, &str)] = &[
     ("Markidis et al.", "NVIDIA V100", "Truncation-based (RZ)", "2 bits"),
     ("Feng et al.", "NVIDIA T4/RTX6000", "No hidden bit, RZ", "2 bits"),
@@ -37,6 +38,7 @@ pub fn measured_precision_bits(n: usize) -> f64 {
     -err.log2()
 }
 
+/// Render Table 2 (prior work vs this reproduction).
 pub fn run() -> Table {
     let mut t = Table::new(
         "Table 2: FP32 approximation methods (prior rows = published claims)",

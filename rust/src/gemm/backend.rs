@@ -27,6 +27,7 @@ pub enum Backend {
 }
 
 impl Backend {
+    /// Every precision path, in report order.
     pub const ALL: [Backend; 4] = [
         Backend::Fp32,
         Backend::Fp16,
@@ -44,6 +45,7 @@ impl Backend {
         }
     }
 
+    /// Parse a CLI/config backend name (accepts the short aliases).
     pub fn parse(s: &str) -> Option<Backend> {
         match s {
             "fp32" => Some(Backend::Fp32),
@@ -92,6 +94,7 @@ pub enum Schedule {
 }
 
 impl Schedule {
+    /// Every schedule, in increasing pipeline depth.
     pub const ALL: [Schedule; 3] = [Schedule::Serial, Schedule::OverlapB, Schedule::OverlapAB];
 
     /// Stable identifier used by the CLI/config layer.
@@ -103,6 +106,7 @@ impl Schedule {
         }
     }
 
+    /// Parse a CLI/config schedule name (accepts the short aliases).
     pub fn parse(s: &str) -> Option<Schedule> {
         match s {
             "serial" => Some(Schedule::Serial),
@@ -156,8 +160,11 @@ pub fn default_schedule() -> Schedule {
 /// Executable GEMM backend with its numeric configuration.
 #[derive(Debug, Clone)]
 pub struct GemmBackend {
+    /// The precision path to execute.
     pub backend: Backend,
+    /// Two-component split configuration for the cube paths.
     pub split: SplitConfig,
+    /// FP16-path accumulation mode (RN vs. the Tensor-Core RZ model).
     pub accumulate: AccumulateMode,
     /// Hot-path mode (default): the cache-blocked packed engine
     /// (`crate::gemm::fast` → `crate::gemm::blocked`) — panel packing,
@@ -178,6 +185,8 @@ pub struct GemmBackend {
 }
 
 impl GemmBackend {
+    /// A backend on the hot path with default split/accumulation and the
+    /// process-default schedule.
     pub fn new(backend: Backend) -> GemmBackend {
         GemmBackend {
             backend,
@@ -189,6 +198,7 @@ impl GemmBackend {
         }
     }
 
+    /// Builder: set the residual scaling exponent `s_b` for cube paths.
     pub fn with_scale(mut self, s_b: i32) -> GemmBackend {
         self.split.scale_exp = s_b;
         self

@@ -22,11 +22,14 @@ use crate::util::threads::parallel_chunks;
 
 /// Split operands: BF16 components widened exactly to f32.
 pub struct BfSplit {
+    /// High component: `bf16(v)`, widened exactly to f32.
     pub high: Matrix<f32>,
+    /// Residual component: `bf16(v - high)`, widened exactly to f32.
     pub low: Matrix<f32>,
 }
 
 impl BfSplit {
+    /// Split every element of `m` into BF16 high/residual components.
     pub fn of(m: &Matrix<f32>) -> BfSplit {
         let mut high = Matrix::zeros(m.rows(), m.cols());
         let mut low = Matrix::zeros(m.rows(), m.cols());

@@ -50,22 +50,34 @@ use crate::gemm::prepacked::PrepackedMatrix;
 /// of one weight coexist with each other and with the full pack.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct PrepackKey {
+    /// Registered weight identity.
     pub weight: u64,
+    /// Weight rows (GEMM inner dimension).
     pub k: usize,
+    /// Weight columns covered by this entry.
     pub n: usize,
+    /// Precision path the panels were prepared for (normalized).
     pub backend: Backend,
+    /// Residual scaling exponent baked into the split (0 off cube paths).
     pub scale_exp: i32,
+    /// First weight column covered (nonzero for shard column slices).
     pub col0: usize,
 }
 
 /// Point-in-time cache counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CacheStats {
+    /// Lookups served from cache.
     pub hits: u64,
+    /// Lookups that had to pack.
     pub misses: u64,
+    /// Entries evicted to make room.
     pub evictions: u64,
+    /// Entries currently resident.
     pub entries: usize,
+    /// Bytes currently resident.
     pub bytes: usize,
+    /// Configured capacity in bytes (0 = cache disabled).
     pub capacity_bytes: usize,
 }
 
@@ -217,6 +229,7 @@ impl PrepackCache {
         g.bytes = 0;
     }
 
+    /// Point-in-time snapshot of the cache counters.
     pub fn stats(&self) -> CacheStats {
         let g = self.inner.lock().unwrap();
         CacheStats {

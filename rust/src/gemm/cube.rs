@@ -39,12 +39,16 @@ pub enum Accumulation {
 /// kernels: FP16 values stored exactly as f32 (so products/sums execute
 /// on the f32 datapath exactly as the Cube would).
 pub struct WideSplit {
+    /// FP16 high component, widened exactly to f32.
     pub high: Matrix<f32>,
+    /// Scaled FP16 residual component, widened exactly to f32.
     pub low: Matrix<f32>,
+    /// The split configuration (residual scaling exponent) used.
     pub cfg: SplitConfig,
 }
 
 impl WideSplit {
+    /// Split every element of `m` under `cfg` and widen to f32.
     pub fn of(m: &Matrix<f32>, cfg: SplitConfig) -> WideSplit {
         let sm = SplitMatrix::from_f32(m, cfg);
         WideSplit {

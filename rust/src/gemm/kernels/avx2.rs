@@ -1,0 +1,106 @@
+//! AVX2 + FMA micro-kernels (x86_64).
+//!
+//! `NR = 8` is exactly one 256-bit YMM register of f32 lanes, so each
+//! micro-tile row is a single vector accumulator: the f32 kernel holds
+//! `MR = 4` accumulators and the fused cube kernel holds `2·MR = 8`
+//! (high·high plane + correction plane), leaving half the 16-register
+//! YMM file for the B vectors and the broadcast A value — the register
+//! budget [`crate::sim::blocking::micro_tile`] derives.
+//!
+//! Pinned accumulation contract of this lane (see [`super`] for the
+//! cross-lane comparison): every chain step is a **fused** multiply-add
+//! (`_mm256_fmadd_ps`, one rounding), and the cube correction chain is
+//! `corr = fma(a_h, b_l, fma(a_l, b_h, corr))` — the `a_l·b_h` term
+//! joins first. Packed panels are read with unaligned loads
+//! (`_mm256_loadu_ps`); the pack layer guarantees panel lengths are
+//! `NR`-step multiples, not pointer alignment.
+
+use core::arch::x86_64::{
+    __m256, _mm256_fmadd_ps, _mm256_loadu_ps, _mm256_set1_ps, _mm256_setzero_ps, _mm256_storeu_ps,
+};
+
+use crate::gemm::pack::{MR, NR};
+
+// The kernels below hard-code "one row == one YMM"; refuse to compile
+// if the shared micro-tile geometry ever drifts.
+const _: () = assert!(MR == 4 && NR == 8, "AVX2 lane is written for a 4x8 micro-tile");
+
+/// AVX2+FMA `MR × NR` f32 micro-kernel: one YMM accumulator per row,
+/// one fused multiply-add per row per k step. Panel layout and the
+/// chain-per-cell semantics match [`super::scalar::kernel_f32`]; only
+/// the per-step rounding differs (fused, one rounding).
+///
+/// # Safety
+///
+/// The caller must ensure the executing CPU supports AVX2 and FMA
+/// (`Lane::Avx2.is_available()`, checked by [`super::dispatch`]).
+/// `apanel`/`bpanel` must be panels for the same `kc`:
+/// `apanel.len() == kc·MR` and `bpanel.len() == kc·NR`.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn kernel_f32(apanel: &[f32], bpanel: &[f32]) -> [[f32; NR]; MR] {
+    let steps = bpanel.len() / NR;
+    debug_assert_eq!(apanel.len(), steps * MR);
+    debug_assert_eq!(bpanel.len(), steps * NR);
+    let a = apanel.as_ptr();
+    let b = bpanel.as_ptr();
+    let mut acc = [_mm256_setzero_ps(); MR];
+    for p in 0..steps {
+        let bv = _mm256_loadu_ps(b.add(p * NR));
+        let ap = a.add(p * MR);
+        for (i, accr) in acc.iter_mut().enumerate() {
+            *accr = _mm256_fmadd_ps(_mm256_set1_ps(*ap.add(i)), bv, *accr);
+        }
+    }
+    store_tile(&acc)
+}
+
+/// AVX2+FMA fused three-term cube micro-kernel over dual-component
+/// panels (layout of [`crate::gemm::pack::pack_a_dual`] /
+/// [`crate::gemm::pack::pack_b_dual`]): per k step, the high·high plane
+/// takes `hh = fma(a_h, b_h, hh)` and the correction plane takes
+/// `corr = fma(a_h, b_l, fma(a_l, b_h, corr))` — this lane's pinned
+/// correction-chain order. Corrections aggregate among themselves and
+/// meet the high product only at the tile combine (Sec. 4.4), exactly
+/// as in [`super::scalar::kernel_cube`].
+///
+/// # Safety
+///
+/// The caller must ensure the executing CPU supports AVX2 and FMA
+/// (`Lane::Avx2.is_available()`, checked by [`super::dispatch`]).
+/// `apanel`/`bpanel` must be dual panels for the same `kc`:
+/// `apanel.len() == kc·2·MR` and `bpanel.len() == kc·2·NR`.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn kernel_cube(apanel: &[f32], bpanel: &[f32]) -> ([[f32; NR]; MR], [[f32; NR]; MR]) {
+    let steps = bpanel.len() / (2 * NR);
+    debug_assert_eq!(apanel.len(), steps * 2 * MR);
+    debug_assert_eq!(bpanel.len(), steps * 2 * NR);
+    let a = apanel.as_ptr();
+    let b = bpanel.as_ptr();
+    let mut hh = [_mm256_setzero_ps(); MR];
+    let mut corr = [_mm256_setzero_ps(); MR];
+    for p in 0..steps {
+        let bh = _mm256_loadu_ps(b.add(p * 2 * NR));
+        let bl = _mm256_loadu_ps(b.add(p * 2 * NR + NR));
+        let ap = a.add(p * 2 * MR);
+        for (i, (hhr, corrr)) in hh.iter_mut().zip(corr.iter_mut()).enumerate() {
+            let ah = _mm256_set1_ps(*ap.add(i));
+            let al = _mm256_set1_ps(*ap.add(MR + i));
+            *hhr = _mm256_fmadd_ps(ah, bh, *hhr);
+            *corrr = _mm256_fmadd_ps(ah, bl, _mm256_fmadd_ps(al, bh, *corrr));
+        }
+    }
+    (store_tile(&hh), store_tile(&corr))
+}
+
+/// Spill `MR` YMM accumulators into the `[[f32; NR]; MR]` tile shape the
+/// shared C-update path ([`crate::gemm::blocked`]) consumes. Compiled
+/// with the same target features as its callers so the stores lower to
+/// plain YMM moves.
+#[target_feature(enable = "avx2,fma")]
+unsafe fn store_tile(acc: &[__m256; MR]) -> [[f32; NR]; MR] {
+    let mut out = [[0.0f32; NR]; MR];
+    for (dst, v) in out.iter_mut().zip(acc) {
+        _mm256_storeu_ps(dst.as_mut_ptr(), *v);
+    }
+    out
+}

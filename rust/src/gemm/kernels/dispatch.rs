@@ -1,0 +1,420 @@
+//! Runtime lane selection for the micro-kernels.
+//!
+//! The engine resolves a [`Lane`] once per sweep (the hot loops never
+//! re-check CPU features) from, in priority order:
+//!
+//! 1. a programmatic [`force_lane`] call (benches and the dispatch test
+//!    suite use this to pin a lane mid-process);
+//! 2. the `SGEMM_CUBE_KERNEL` environment variable — `scalar`, `avx2`,
+//!    `neon` or `auto`; an unavailable or unrecognized value warns on
+//!    stderr and falls back to detection, it never aborts (same
+//!    contract as `SGEMM_CUBE_SCHEDULE`,
+//!    [`crate::gemm::backend::default_schedule`]);
+//! 3. CPU feature detection ([`detect_lane`]): AVX2+FMA on x86_64,
+//!    NEON on aarch64, scalar otherwise.
+//!
+//! Selection state is one relaxed `AtomicU8`: a load on the sweep path,
+//! a store in [`force_lane`]. Forcing a lane affects *subsequent*
+//! sweeps; tests that force lanes serialize themselves (see
+//! `tests/dispatch.rs`) because the knob is process-global.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::gemm::kernels::scalar;
+use crate::gemm::pack::{MR, NR};
+
+/// One micro-kernel implementation family. The lane decides how each
+/// FP32 accumulation-chain step rounds (see the
+/// [`crate::gemm::kernels`] contract); everything above the kernels —
+/// packing, block order, schedules — is lane-independent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lane {
+    /// Portable Rust ([`super::scalar`]): rounded multiply + rounded
+    /// add per step. Always available.
+    Scalar,
+    /// AVX2 + FMA intrinsics (the arch-gated `super::avx2` module):
+    /// fused multiply-add, one rounding per step. x86_64 with AVX2 and
+    /// FMA only.
+    Avx2,
+    /// NEON intrinsics (the arch-gated `super::neon` module): fused
+    /// multiply-add, one rounding per step. aarch64 only.
+    Neon,
+}
+
+impl Lane {
+    /// Every lane, in preference order (most portable last).
+    pub const ALL: [Lane; 3] = [Lane::Avx2, Lane::Neon, Lane::Scalar];
+
+    /// The lane's `SGEMM_CUBE_KERNEL` spelling (also the bench/EXPERIMENTS
+    /// label).
+    pub fn name(self) -> &'static str {
+        match self {
+            Lane::Scalar => "scalar",
+            Lane::Avx2 => "avx2",
+            Lane::Neon => "neon",
+        }
+    }
+
+    /// Parse an `SGEMM_CUBE_KERNEL` value. `None` for anything that is
+    /// not a known lane name (including `auto`, which callers map to
+    /// detection).
+    pub fn parse(s: &str) -> Option<Lane> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(Lane::Scalar),
+            "avx2" => Some(Lane::Avx2),
+            "neon" => Some(Lane::Neon),
+            _ => None,
+        }
+    }
+
+    /// Whether this lane can execute on the current host. Scalar is
+    /// always available; the SIMD lanes require both the compile target
+    /// and the runtime CPU features (cached by `std`'s detection
+    /// macros, so this is an atomic load after the first call).
+    pub fn is_available(self) -> bool {
+        match self {
+            Lane::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Lane::Avx2 => {
+                std::arch::is_x86_feature_detected!("avx2")
+                    && std::arch::is_x86_feature_detected!("fma")
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            Lane::Avx2 => false,
+            #[cfg(target_arch = "aarch64")]
+            Lane::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+            #[cfg(not(target_arch = "aarch64"))]
+            Lane::Neon => false,
+        }
+    }
+
+    /// Stable numeric code for bench records (`kernel/lane` in
+    /// BENCH_gemm.json): scalar = 0, avx2 = 1, neon = 2.
+    pub fn code(self) -> u8 {
+        match self {
+            Lane::Scalar => 0,
+            Lane::Avx2 => 1,
+            Lane::Neon => 2,
+        }
+    }
+
+    fn from_code(code: u8) -> Lane {
+        match code {
+            0 => Lane::Scalar,
+            1 => Lane::Avx2,
+            2 => Lane::Neon,
+            _ => unreachable!("invalid lane code {code}"),
+        }
+    }
+}
+
+impl std::fmt::Display for Lane {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The best lane the current host supports, ignoring the environment
+/// override: the first available entry of [`Lane::ALL`].
+pub fn detect_lane() -> Lane {
+    Lane::ALL.into_iter().find(|l| l.is_available()).unwrap_or(Lane::Scalar)
+}
+
+/// Resolve the process-initial lane: `SGEMM_CUBE_KERNEL` if set and
+/// usable, detection otherwise. Split out of [`active_lane`] so the
+/// fallback policy is unit-testable without touching process state.
+fn initial_lane(env: Option<&str>) -> Lane {
+    let Some(v) = env else { return detect_lane() };
+    if v.trim().is_empty() || v.trim().eq_ignore_ascii_case("auto") {
+        return detect_lane();
+    }
+    match Lane::parse(v) {
+        Some(lane) if lane.is_available() => lane,
+        Some(lane) => {
+            eprintln!(
+                "SGEMM_CUBE_KERNEL={v}: lane '{lane}' is not available on this host; \
+                 falling back to '{}'",
+                detect_lane()
+            );
+            detect_lane()
+        }
+        None => {
+            eprintln!(
+                "SGEMM_CUBE_KERNEL={v}: unrecognized lane (expected scalar|avx2|neon|auto); \
+                 falling back to '{}'",
+                detect_lane()
+            );
+            detect_lane()
+        }
+    }
+}
+
+/// Unset marker for the lane cell; real lanes use [`Lane::code`] 0–2.
+const LANE_UNSET: u8 = u8::MAX;
+
+static LANE: AtomicU8 = AtomicU8::new(LANE_UNSET);
+
+/// The lane the sweeps will use, resolving and caching the
+/// `SGEMM_CUBE_KERNEL` / detection decision on first use. One relaxed
+/// atomic load thereafter — cheap enough to call once per sweep, which
+/// is exactly what [`crate::gemm::blocked`] does (the lane is *not*
+/// re-read per micro-tile, so a concurrent [`force_lane`] never splits
+/// a single sweep across lanes).
+pub fn active_lane() -> Lane {
+    match LANE.load(Ordering::Relaxed) {
+        LANE_UNSET => {
+            let lane = initial_lane(std::env::var("SGEMM_CUBE_KERNEL").ok().as_deref());
+            // First writer wins so concurrent initializers agree.
+            match LANE.compare_exchange(
+                LANE_UNSET,
+                lane.code(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => lane,
+                Err(cur) => Lane::from_code(cur),
+            }
+        }
+        code => Lane::from_code(code),
+    }
+}
+
+/// Pin the active lane for all subsequent sweeps. Returns `false`
+/// (changing nothing) if the lane is unavailable on this host. This is
+/// process-global state for benches (`blocked/simd_speedup` measures
+/// forced-scalar vs. detected) and the dispatch test suite; serving
+/// code configures lanes via `SGEMM_CUBE_KERNEL` instead.
+pub fn force_lane(lane: Lane) -> bool {
+    if !lane.is_available() {
+        return false;
+    }
+    LANE.store(lane.code(), Ordering::Relaxed);
+    true
+}
+
+/// Run the `MR × NR` f32 micro-kernel on an explicit lane. Panics if a
+/// SIMD lane is requested on a host that cannot execute it (the check
+/// is what makes this safe to expose; [`active_lane`] / [`force_lane`]
+/// only ever hand out available lanes).
+#[inline]
+pub fn kernel_f32(lane: Lane, apanel: &[f32], bpanel: &[f32]) -> [[f32; NR]; MR] {
+    match lane {
+        Lane::Scalar => scalar::kernel_f32(apanel, bpanel),
+        #[cfg(target_arch = "x86_64")]
+        Lane::Avx2 => {
+            assert!(lane.is_available(), "avx2 lane dispatched on a host without AVX2+FMA");
+            // SAFETY: availability checked above; panel lengths are
+            // validated by the kernel's debug asserts.
+            unsafe { super::avx2::kernel_f32(apanel, bpanel) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Lane::Neon => {
+            assert!(lane.is_available(), "neon lane dispatched on a host without NEON");
+            // SAFETY: availability checked above.
+            unsafe { super::neon::kernel_f32(apanel, bpanel) }
+        }
+        other => panic!("lane '{other}' cannot execute on this target"),
+    }
+}
+
+/// Run the fused three-term cube micro-kernel on an explicit lane
+/// (dual-component panels; see [`kernel_f32`] for the dispatch
+/// contract).
+#[inline]
+pub fn kernel_cube(
+    lane: Lane,
+    apanel: &[f32],
+    bpanel: &[f32],
+) -> ([[f32; NR]; MR], [[f32; NR]; MR]) {
+    match lane {
+        Lane::Scalar => scalar::kernel_cube(apanel, bpanel),
+        #[cfg(target_arch = "x86_64")]
+        Lane::Avx2 => {
+            assert!(lane.is_available(), "avx2 lane dispatched on a host without AVX2+FMA");
+            // SAFETY: availability checked above.
+            unsafe { super::avx2::kernel_cube(apanel, bpanel) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Lane::Neon => {
+            assert!(lane.is_available(), "neon lane dispatched on a host without NEON");
+            // SAFETY: availability checked above.
+            unsafe { super::neon::kernel_cube(apanel, bpanel) }
+        }
+        other => panic!("lane '{other}' cannot execute on this target"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn panels(kc: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let ap: Vec<f32> = (0..kc * MR).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let bp: Vec<f32> = (0..kc * NR).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        (ap, bp)
+    }
+
+    fn dual_panels(kc: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let ap: Vec<f32> = (0..kc * 2 * MR).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let bp: Vec<f32> = (0..kc * 2 * NR).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        (ap, bp)
+    }
+
+    #[test]
+    fn lane_names_round_trip() {
+        for lane in Lane::ALL {
+            assert_eq!(Lane::parse(lane.name()), Some(lane));
+            assert_eq!(Lane::parse(&lane.name().to_uppercase()), Some(lane));
+            assert_eq!(Lane::from_code(lane.code()), lane);
+            assert_eq!(format!("{lane}"), lane.name());
+        }
+        assert_eq!(Lane::parse("auto"), None);
+        assert_eq!(Lane::parse("avx512"), None);
+        assert_eq!(Lane::parse(""), None);
+    }
+
+    #[test]
+    fn initial_lane_fallback_policy() {
+        // Unset / auto / empty -> detection.
+        assert_eq!(initial_lane(None), detect_lane());
+        assert_eq!(initial_lane(Some("auto")), detect_lane());
+        assert_eq!(initial_lane(Some(" AUTO ")), detect_lane());
+        assert_eq!(initial_lane(Some("")), detect_lane());
+        // Unrecognized -> warn + detection, never abort.
+        assert_eq!(initial_lane(Some("fastest")), detect_lane());
+        // Scalar is always honored.
+        assert_eq!(initial_lane(Some("scalar")), Lane::Scalar);
+        // Available lanes are honored; unavailable ones fall back.
+        for lane in Lane::ALL {
+            let got = initial_lane(Some(lane.name()));
+            if lane.is_available() {
+                assert_eq!(got, lane);
+            } else {
+                assert_eq!(got, detect_lane());
+            }
+        }
+    }
+
+    #[test]
+    fn detection_is_available_and_preferred() {
+        let lane = detect_lane();
+        assert!(lane.is_available());
+        // No lane earlier in preference order is available.
+        for cand in Lane::ALL {
+            if cand == lane {
+                break;
+            }
+            assert!(!cand.is_available(), "{cand} available but {lane} detected");
+        }
+        // The scalar fallback can always execute.
+        assert!(Lane::Scalar.is_available());
+        // active_lane only ever hands out an executable lane.
+        assert!(active_lane().is_available());
+    }
+
+    #[test]
+    fn force_rejects_unavailable_lanes() {
+        for lane in Lane::ALL {
+            if !lane.is_available() {
+                let before = active_lane();
+                assert!(!force_lane(lane));
+                assert_eq!(active_lane(), before, "rejected force must not change the lane");
+            }
+        }
+    }
+
+    #[test]
+    fn lanes_agree_within_fma_rounding() {
+        // Scalar vs. every available SIMD lane on the same panels: each
+        // chain step differs by at most a couple of roundings, so the
+        // results agree within a standard forward-error envelope of the
+        // absolute-value dot product. Explicit-lane calls — no global
+        // state, no races with concurrently running sweeps.
+        let kc = 96;
+        let envelope = |absdot: f32| 4.0 * (kc as f32) * f32::EPSILON * absdot.max(1.0);
+        let (ap, bp) = panels(kc, 7);
+        let want = kernel_f32(Lane::Scalar, &ap, &bp);
+        let (dap, dbp) = dual_panels(kc, 8);
+        let (whh, wcorr) = kernel_cube(Lane::Scalar, &dap, &dbp);
+        for lane in Lane::ALL {
+            if !lane.is_available() || lane == Lane::Scalar {
+                continue;
+            }
+            let got = kernel_f32(lane, &ap, &bp);
+            for i in 0..MR {
+                for j in 0..NR {
+                    let mut absdot = 0.0f32;
+                    for p in 0..kc {
+                        absdot += ap[p * MR + i].abs() * bp[p * NR + j].abs();
+                    }
+                    let (x, y) = (want[i][j], got[i][j]);
+                    assert!((x - y).abs() <= envelope(absdot), "{lane} f32 [{i}][{j}]: {x} vs {y}");
+                }
+            }
+            let (ghh, gcorr) = kernel_cube(lane, &dap, &dbp);
+            for i in 0..MR {
+                for j in 0..NR {
+                    let mut hi = 0.0f32;
+                    let mut co = 0.0f32;
+                    for p in 0..kc {
+                        let (ah, al) = (dap[p * 2 * MR + i].abs(), dap[p * 2 * MR + MR + i].abs());
+                        let (bh, bl) = (dbp[p * 2 * NR + j].abs(), dbp[p * 2 * NR + NR + j].abs());
+                        hi += ah * bh;
+                        co += ah * bl + al * bh;
+                    }
+                    let (x, y) = (whh[i][j], ghh[i][j]);
+                    assert!((x - y).abs() <= envelope(hi), "{lane} hh [{i}][{j}]: {x} vs {y}");
+                    let (x, y) = (wcorr[i][j], gcorr[i][j]);
+                    assert!((x - y).abs() <= envelope(co), "{lane} corr [{i}][{j}]: {x} vs {y}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_lane_is_deterministic() {
+        // Same lane + same panels -> identical bits, the kernel-level
+        // half of the per-lane bit-identity contract (the schedule-level
+        // half lives in tests/dispatch.rs).
+        let (ap, bp) = panels(64, 9);
+        let (dap, dbp) = dual_panels(64, 10);
+        for lane in Lane::ALL {
+            if !lane.is_available() {
+                continue;
+            }
+            let x = kernel_f32(lane, &ap, &bp);
+            let y = kernel_f32(lane, &ap, &bp);
+            for (rx, ry) in x.iter().zip(&y) {
+                for (u, v) in rx.iter().zip(ry) {
+                    assert_eq!(u.to_bits(), v.to_bits(), "{lane}");
+                }
+            }
+            let (hx, cx) = kernel_cube(lane, &dap, &dbp);
+            let (hy, cy) = kernel_cube(lane, &dap, &dbp);
+            for (px, py) in [(hx, hy), (cx, cy)] {
+                for (rx, ry) in px.iter().zip(&py) {
+                    for (u, v) in rx.iter().zip(ry) {
+                        assert_eq!(u.to_bits(), v.to_bits(), "{lane}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_step_panels_yield_zero_tiles() {
+        for lane in Lane::ALL {
+            if !lane.is_available() {
+                continue;
+            }
+            let tile = kernel_f32(lane, &[], &[]);
+            assert!(tile.iter().all(|r| r.iter().all(|&v| v == 0.0)), "{lane}");
+            let (hh, corr) = kernel_cube(lane, &[], &[]);
+            assert!(hh.iter().all(|r| r.iter().all(|&v| v == 0.0)), "{lane}");
+            assert!(corr.iter().all(|r| r.iter().all(|&v| v == 0.0)), "{lane}");
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! SIMD micro-kernels with runtime dispatch.
+//!
+//! The blocked engine ([`crate::gemm::blocked`]) executes exactly two
+//! inner loops: the `MR × NR` f32 micro-kernel and the fused three-term
+//! cube micro-kernel. This module holds every implementation of those
+//! two loops — one per **lane** — plus the machinery that picks a lane
+//! at runtime:
+//!
+//! * [`scalar`] — portable Rust, always available, the reference the
+//!   other lanes are measured against;
+//! * `avx2` (compiled on x86_64 only) — explicit `std::arch` AVX2 + FMA
+//!   intrinsics, one 8-lane YMM accumulator per micro-tile row;
+//! * `neon` (compiled on aarch64 only) — explicit NEON intrinsics, two
+//!   4-lane q-register accumulators per micro-tile row;
+//! * [`dispatch`] — the [`Lane`] enum, CPU feature detection, the
+//!   `SGEMM_CUBE_KERNEL` environment override, [`force_lane`] for
+//!   benches/tests, and the dispatching [`kernel_f32`] /
+//!   [`kernel_cube`] entry points the sweeps call.
+//!
+//! # The per-lane accumulation-order contract
+//!
+//! Every lane consumes the same packed panel bytes
+//! ([`crate::gemm::pack`]) in the same k order and accumulates one FP32
+//! chain per output cell per k block. What differs between lanes is
+//! **rounding within each chain step**, so results are bit-identical
+//! *per lane*, not across lanes:
+//!
+//! * **scalar**: `acc += a·b` is a rounded multiply followed by a
+//!   rounded add (two roundings per step); the cube correction chain is
+//!   `corr += (a_h·b_l + a_l·b_h)` — both products rounded, their sum
+//!   rounded, then the accumulate rounded.
+//! * **avx2** / **neon**: `acc = fma(a, b, acc)` fuses each
+//!   multiply-add into a single rounding; the cube correction chain is
+//!   pinned as `corr = fma(a_h, b_l, fma(a_l, b_h, corr))` — the
+//!   `a_l·b_h` term joins the chain first, each join a single rounding.
+//!
+//! Both shapes keep the paper's Sec. 4.4 termwise property — the two
+//! correction terms aggregate *with each other* across all k steps and
+//! meet the high·high product only at the tile combine — and both land
+//! in the same ≤ 2⁻²² accuracy class (`tests/accuracy.rs` runs its
+//! bounds against whichever lane is active; `tests/dispatch.rs` forces
+//! each lane in turn). FMA's single rounding is never *less* accurate
+//! per step than the scalar double rounding.
+//!
+//! What **is** guaranteed across schedules: for a fixed lane, every
+//! path through the engine — serial, overlap-B, overlap-AB, prepacked,
+//! sharded — produces bit-identical output, because packing, block
+//! order and the sweeps are shared and the lane is resolved once per
+//! sweep. Lane selection is the *only* numerics degree of freedom this
+//! module adds, and it is observable/forcible via `SGEMM_CUBE_KERNEL`
+//! (see [`dispatch::active_lane`]).
+//!
+//! The micro-tile geometry `MR = 4`, `NR = 8`
+//! ([`crate::gemm::pack::MR`]/[`crate::gemm::pack::NR`]) is shared by
+//! all lanes — it is derived from the vector register files in
+//! [`crate::sim::blocking::micro_tile`] (the fused cube kernel's two
+//! accumulator planes fit both the 16-YMM AVX2 file and the 32-q NEON
+//! file at 4×8, see that function's docs), so panel formats and
+//! prepacked operands are lane-independent.
+
+pub mod dispatch;
+pub mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+
+pub use dispatch::{active_lane, detect_lane, force_lane, kernel_cube, kernel_f32, Lane};

@@ -1,0 +1,113 @@
+//! NEON micro-kernels (aarch64).
+//!
+//! NEON q-registers are 128 bits — four f32 lanes — so the shared
+//! `NR = 8` micro-tile row is a **pair** of q-register accumulators.
+//! The f32 kernel holds `2·MR = 8` accumulators and the fused cube
+//! kernel `4·MR = 16` (high·high plane + correction plane, two vectors
+//! each), comfortably inside the 32-register file — the register
+//! budget [`crate::sim::blocking::micro_tile`] derives.
+//!
+//! Pinned accumulation contract of this lane (see [`super`] for the
+//! cross-lane comparison): every chain step is a **fused** multiply-add
+//! (`vfmaq_f32`, one rounding), and the cube correction chain is
+//! `corr = fma(a_h, b_l, fma(a_l, b_h, corr))` — the `a_l·b_h` term
+//! joins first, the same order the AVX2 lane pins. The two lanes are
+//! *still* not bit-interchangeable in general (they only ever run on
+//! different hosts); the contract is pinned per lane.
+
+use core::arch::aarch64::{float32x4_t, vdupq_n_f32, vfmaq_f32, vld1q_f32, vst1q_f32};
+
+use crate::gemm::pack::{MR, NR};
+
+// The kernels below hard-code "one row == two q-registers"; refuse to
+// compile if the shared micro-tile geometry ever drifts.
+const _: () = assert!(MR == 4 && NR == 8, "NEON lane is written for a 4x8 micro-tile");
+
+/// NEON `MR × NR` f32 micro-kernel: two q-register accumulators per
+/// row, one fused multiply-add per half-row per k step. Panel layout
+/// and the chain-per-cell semantics match
+/// [`super::scalar::kernel_f32`]; only the per-step rounding differs
+/// (fused, one rounding).
+///
+/// # Safety
+///
+/// The caller must ensure the executing CPU supports NEON
+/// (`Lane::Neon.is_available()`, checked by [`super::dispatch`] —
+/// always true on aarch64). `apanel`/`bpanel` must be panels for the
+/// same `kc`: `apanel.len() == kc·MR` and `bpanel.len() == kc·NR`.
+#[target_feature(enable = "neon")]
+pub unsafe fn kernel_f32(apanel: &[f32], bpanel: &[f32]) -> [[f32; NR]; MR] {
+    let steps = bpanel.len() / NR;
+    debug_assert_eq!(apanel.len(), steps * MR);
+    debug_assert_eq!(bpanel.len(), steps * NR);
+    let a = apanel.as_ptr();
+    let b = bpanel.as_ptr();
+    let mut acc = [[vdupq_n_f32(0.0); 2]; MR];
+    for p in 0..steps {
+        let b0 = vld1q_f32(b.add(p * NR));
+        let b1 = vld1q_f32(b.add(p * NR + 4));
+        let ap = a.add(p * MR);
+        for (i, accr) in acc.iter_mut().enumerate() {
+            let av = vdupq_n_f32(*ap.add(i));
+            accr[0] = vfmaq_f32(accr[0], av, b0);
+            accr[1] = vfmaq_f32(accr[1], av, b1);
+        }
+    }
+    store_tile(&acc)
+}
+
+/// NEON fused three-term cube micro-kernel over dual-component panels
+/// (layout of [`crate::gemm::pack::pack_a_dual`] /
+/// [`crate::gemm::pack::pack_b_dual`]): per k step, the high·high plane
+/// takes `hh = fma(a_h, b_h, hh)` and the correction plane takes
+/// `corr = fma(a_h, b_l, fma(a_l, b_h, corr))` — this lane's pinned
+/// correction-chain order, applied per 4-lane half-row. Corrections
+/// aggregate among themselves and meet the high product only at the
+/// tile combine (Sec. 4.4), exactly as in
+/// [`super::scalar::kernel_cube`].
+///
+/// # Safety
+///
+/// The caller must ensure the executing CPU supports NEON
+/// (`Lane::Neon.is_available()`, checked by [`super::dispatch`]).
+/// `apanel`/`bpanel` must be dual panels for the same `kc`:
+/// `apanel.len() == kc·2·MR` and `bpanel.len() == kc·2·NR`.
+#[target_feature(enable = "neon")]
+pub unsafe fn kernel_cube(apanel: &[f32], bpanel: &[f32]) -> ([[f32; NR]; MR], [[f32; NR]; MR]) {
+    let steps = bpanel.len() / (2 * NR);
+    debug_assert_eq!(apanel.len(), steps * 2 * MR);
+    debug_assert_eq!(bpanel.len(), steps * 2 * NR);
+    let a = apanel.as_ptr();
+    let b = bpanel.as_ptr();
+    let mut hh = [[vdupq_n_f32(0.0); 2]; MR];
+    let mut corr = [[vdupq_n_f32(0.0); 2]; MR];
+    for p in 0..steps {
+        let bh0 = vld1q_f32(b.add(p * 2 * NR));
+        let bh1 = vld1q_f32(b.add(p * 2 * NR + 4));
+        let bl0 = vld1q_f32(b.add(p * 2 * NR + NR));
+        let bl1 = vld1q_f32(b.add(p * 2 * NR + NR + 4));
+        let ap = a.add(p * 2 * MR);
+        for (i, (hhr, corrr)) in hh.iter_mut().zip(corr.iter_mut()).enumerate() {
+            let ah = vdupq_n_f32(*ap.add(i));
+            let al = vdupq_n_f32(*ap.add(MR + i));
+            hhr[0] = vfmaq_f32(hhr[0], ah, bh0);
+            hhr[1] = vfmaq_f32(hhr[1], ah, bh1);
+            corrr[0] = vfmaq_f32(vfmaq_f32(corrr[0], al, bh0), ah, bl0);
+            corrr[1] = vfmaq_f32(vfmaq_f32(corrr[1], al, bh1), ah, bl1);
+        }
+    }
+    (store_tile(&hh), store_tile(&corr))
+}
+
+/// Spill `MR` q-register accumulator pairs into the `[[f32; NR]; MR]`
+/// tile shape the shared C-update path ([`crate::gemm::blocked`])
+/// consumes. Compiled with the same target features as its callers.
+#[target_feature(enable = "neon")]
+unsafe fn store_tile(acc: &[[float32x4_t; 2]; MR]) -> [[f32; NR]; MR] {
+    let mut out = [[0.0f32; NR]; MR];
+    for (dst, v) in out.iter_mut().zip(acc) {
+        vst1q_f32(dst.as_mut_ptr(), v[0]);
+        vst1q_f32(dst.as_mut_ptr().add(4), v[1]);
+    }
+    out
+}

@@ -1,0 +1,66 @@
+//! Portable scalar micro-kernels — the always-available fallback lane.
+//!
+//! This is the code the blocked engine shipped with before the SIMD
+//! lanes existed, moved here verbatim so [`super::dispatch`] can treat
+//! it as one lane among equals. The inner loops are written so LLVM
+//! can autovectorize the `NR`-wide row updates, but nothing is
+//! guaranteed beyond scalar IEEE-754 semantics: each `acc += a·b` step
+//! is a rounded multiply followed by a rounded add (two roundings),
+//! which is the lane's pinned accumulation contract (see the
+//! [`super`] module docs for the cross-lane comparison).
+
+use crate::gemm::pack::{MR, NR};
+
+/// `MR × NR` register micro-kernel: one FP32 chain per cell over the
+/// panel's k steps, `NR`-lane rows autovectorizing to SIMD FMAs where
+/// the compiler finds them profitable (the *explicit* FMA lanes live in
+/// the arch-gated `super::avx2` / `super::neon` modules).
+///
+/// `apanel` is one `MR`-interleaved A row panel (`kc·MR` values),
+/// `bpanel` one `NR`-interleaved B column panel (`kc·NR` values); see
+/// [`crate::gemm::pack`].
+#[inline]
+pub fn kernel_f32(apanel: &[f32], bpanel: &[f32]) -> [[f32; NR]; MR] {
+    let mut acc = [[0.0f32; NR]; MR];
+    for (av, bv) in apanel.chunks_exact(MR).zip(bpanel.chunks_exact(NR)) {
+        for (i, acc_row) in acc.iter_mut().enumerate() {
+            let a = av[i];
+            for (dst, &bj) in acc_row.iter_mut().zip(bv) {
+                *dst += a * bj;
+            }
+        }
+    }
+    acc
+}
+
+/// Fused three-term cube micro-kernel over dual-component panels: per k
+/// step it reads `(a_h, a_l)` and `(b_h, b_l)` once and feeds two
+/// accumulator planes — the high·high product and the combined
+/// corrections `a_h·b_l + a_l·b_h`. The corrections therefore aggregate
+/// among themselves and meet the high product only at the tile combine
+/// (the paper's termwise order, Sec. 4.4), while the three terms share a
+/// single traversal instead of the reference's three passes.
+///
+/// Panels are in the dual format of [`crate::gemm::pack::pack_a_dual`] /
+/// [`crate::gemm::pack::pack_b_dual`]: per k step, `MR` highs then `MR`
+/// lows (resp. `NR`/`NR`).
+#[inline]
+pub fn kernel_cube(apanel: &[f32], bpanel: &[f32]) -> ([[f32; NR]; MR], [[f32; NR]; MR]) {
+    let mut hh = [[0.0f32; NR]; MR];
+    let mut corr = [[0.0f32; NR]; MR];
+    for (av, bv) in apanel.chunks_exact(2 * MR).zip(bpanel.chunks_exact(2 * NR)) {
+        let (ahs, als) = av.split_at(MR);
+        let (bhs, bls) = bv.split_at(NR);
+        for i in 0..MR {
+            let vh = ahs[i];
+            let vl = als[i];
+            let hh_row = &mut hh[i];
+            let corr_row = &mut corr[i];
+            for j in 0..NR {
+                hh_row[j] += vh * bhs[j];
+                corr_row[j] += vh * bls[j] + vl * bhs[j];
+            }
+        }
+    }
+    (hh, corr)
+}

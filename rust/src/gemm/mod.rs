@@ -26,9 +26,14 @@
 //! * [`pack`] — `MR`/`NR`-interleaved panel packing, including the
 //!   dual-component format that carries the split high/low FP16
 //!   components in one stream.
-//! * [`blocked`] — the `b_n → b_k → b_m` loop nest, the register
-//!   micro-kernel and the fused three-term cube micro-kernel; block
-//!   sizes come from [`crate::sim::blocking`] on the host cache model.
+//! * [`blocked`] — the `b_n → b_k → b_m` loop nest driving the
+//!   micro-kernels over packed panels; block sizes come from
+//!   [`crate::sim::blocking`] on the host cache model.
+//! * [`kernels`] — the `MR × NR` register micro-kernels themselves:
+//!   scalar reference plus explicit AVX2+FMA and NEON variants,
+//!   runtime-selected once per process ([`kernels::active_lane`],
+//!   `SGEMM_CUBE_KERNEL` override) with a pinned per-lane
+//!   accumulation-order contract.
 //! * [`fast`] — the hot-path entry points (wrappers over [`blocked`],
 //!   plus the retained pre-blocking baselines).
 //! * [`overlap`] — compatibility shim over the executor pipeline
@@ -53,6 +58,7 @@ pub mod dgemm;
 pub mod error;
 pub mod fast;
 pub mod hgemm;
+pub mod kernels;
 pub mod overlap;
 pub mod pack;
 pub mod prepacked;
@@ -71,6 +77,7 @@ pub use cube::{cube_gemm, cube_gemm_split, Accumulation};
 pub use dgemm::dgemm;
 pub use error::{relative_error, GemmError};
 pub use hgemm::{hgemm, AccumulateMode};
+pub use kernels::{active_lane, detect_lane, force_lane, Lane};
 pub use overlap::overlap_enabled;
 pub use prepacked::{PrepackPath, PrepackedMatrix};
 pub use sgemm::sgemm;

@@ -13,7 +13,7 @@
 //!   default execution schedule
 //!   ([`crate::gemm::backend::default_schedule`]);
 //! * re-exports of the panel-schedule types ([`PanelJob`],
-//!   [`panel_jobs`]) and the [`run_overlapped`] driver, now thin
+//!   [`panel_jobs`]) and the `run_overlapped` driver, now thin
 //!   delegations to the pipeline at the classic depth 2;
 //! * the **instrumented serial drivers** (`*_staged`): single-threaded
 //!   passes timing each stage (pack-A, pack-B, micro-kernel, C update)
@@ -35,7 +35,8 @@ pub use crate::exec::pipeline::{panel_jobs, PanelJob};
 pub(crate) use crate::exec::pipeline::PanelSource;
 
 use crate::exec::pipeline::{run_prefetch, PanelSlot, DEFAULT_PIPELINE_DEPTH};
-use crate::gemm::blocked::{add_tile, add_tile_cube, exec_bm, host_block, kernel_cube, kernel_f32};
+use crate::gemm::blocked::{add_tile, add_tile_cube, exec_bm, host_block};
+use crate::gemm::kernels;
 use crate::gemm::pack::{self, MR, NR};
 use crate::util::bench::StageBreakdown;
 use crate::util::mat::Matrix;
@@ -103,6 +104,9 @@ pub(crate) fn gemm_staged_core(a: &Matrix<f32>, b: &Matrix<f32>) -> (Matrix<f32>
     }
     let block = host_block();
     let bm = exec_bm(m, block.bm);
+    // Same lane as the shared sweeps: resolved once per call, so the
+    // staged timings measure the kernel the serving paths actually run.
+    let lane = kernels::active_lane();
     let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
     let mut bp = Vec::new();
     let mut ap = Vec::new();
@@ -122,7 +126,7 @@ pub(crate) fn gemm_staged_core(a: &Matrix<f32>, b: &Matrix<f32>) -> (Matrix<f32>
                     let cj = job.j0 + cpnl * NR;
                     let nr_eff = NR.min(n - cj);
                     let t = Instant::now();
-                    let acc = kernel_f32(apanel, bpanel);
+                    let acc = kernels::kernel_f32(lane, apanel, bpanel);
                     stages.kernel += elapsed(t);
                     let t = Instant::now();
                     add_tile(&cp, n, ci, cj, mr_eff, nr_eff, &acc);
@@ -153,6 +157,7 @@ pub(crate) fn cube_staged_core(
     }
     let block = host_block();
     let bm = exec_bm(m, block.bm);
+    let lane = kernels::active_lane();
     let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
     let mut bp = Vec::new();
     let mut ap = Vec::new();
@@ -172,7 +177,7 @@ pub(crate) fn cube_staged_core(
                     let cj = job.j0 + cpnl * NR;
                     let nr_eff = NR.min(n - cj);
                     let t = Instant::now();
-                    let (hh, corr) = kernel_cube(apanel, bpanel);
+                    let (hh, corr) = kernels::kernel_cube(lane, apanel, bpanel);
                     stages.kernel += elapsed(t);
                     let t = Instant::now();
                     add_tile_cube(&cp, n, ci, cj, mr_eff, nr_eff, &hh, &corr, inv_sf);

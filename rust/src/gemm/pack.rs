@@ -22,13 +22,25 @@
 //! and the store path simply drops the padded rows/columns. Padding only
 //! ever adds rows/columns, never k steps, so every *valid* output cell
 //! accumulates exactly the true products in k order.
+//!
+//! This panel format is shared by **every** kernel lane
+//! ([`crate::gemm::kernels`]): the SIMD lanes read whole `NR`-wide (or
+//! half-row) vectors per k step, which the zero-padding makes safe —
+//! each panel is a full `kc·NR` (or `kc·2·NR` dual) multiple, so vector
+//! loads never run past the buffer. Because packing is lane-independent,
+//! prepacked operands ([`crate::gemm::prepacked`]) and the prefetch ring
+//! carry no lane state and schedules stay bit-identical per lane.
 
 use crate::util::mat::Matrix;
 
 /// Rows of the register micro-tile; A panels are `MR`-interleaved.
+/// Derived from the vector register budget by
+/// [`crate::sim::blocking::micro_tile`] (both SIMD register files give
+/// 4) and pinned by const asserts in the SIMD kernels.
 pub const MR: usize = 4;
 /// Columns of the register micro-tile; B panels are `NR`-interleaved.
-/// Matches the 8-lane accumulator width that autovectorizes like `dot8`.
+/// One AVX2 YMM register (or a NEON q-register pair) of f32 lanes —
+/// see [`crate::sim::blocking::micro_tile`].
 pub const NR: usize = 8;
 
 /// Number of `MR`-row panels covering `mc` rows.

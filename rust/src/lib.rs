@@ -18,6 +18,8 @@
 //! See `DESIGN.md` for the experiment index mapping every table and figure
 //! of the paper to a module and a bench target.
 
+#![warn(missing_docs)]
+
 pub mod cli;
 pub mod config;
 pub mod coordinator;

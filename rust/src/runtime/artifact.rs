@@ -16,11 +16,14 @@ use anyhow::{anyhow, bail, Context, Result};
 /// Element type of a tensor (only what the artifacts use).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit IEEE float (`float32`).
     F32,
+    /// 16-bit IEEE float (`float16`).
     F16,
 }
 
 impl DType {
+    /// Parse a manifest dtype name (`float32` / `float16`).
     pub fn parse(s: &str) -> Result<DType> {
         match s {
             "float32" => Ok(DType::F32),
@@ -29,6 +32,7 @@ impl DType {
         }
     }
 
+    /// The manifest spelling of this dtype.
     pub fn name(self) -> &'static str {
         match self {
             DType::F32 => "float32",
@@ -40,7 +44,9 @@ impl DType {
 /// Shape + dtype of one artifact input/output.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TensorSpec {
+    /// Element type.
     pub dtype: DType,
+    /// Dimensions, outermost first (empty = scalar).
     pub dims: Vec<usize>,
 }
 
@@ -60,6 +66,7 @@ impl TensorSpec {
         Ok(TensorSpec { dtype: DType::parse(ty)?, dims })
     }
 
+    /// Total number of elements (product of `dims`; 1 for scalars).
     pub fn element_count(&self) -> usize {
         self.dims.iter().product()
     }
@@ -78,15 +85,20 @@ impl TensorSpec {
 /// One artifact entry.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ArtifactSpec {
+    /// Artifact name (lookup key).
     pub name: String,
+    /// Path to the artifact file (absolute once parsed).
     pub path: PathBuf,
+    /// Input tensor specs, in call order.
     pub inputs: Vec<TensorSpec>,
+    /// Output tensor specs, in return order.
     pub outputs: Vec<TensorSpec>,
 }
 
 /// The parsed manifest.
 #[derive(Debug, Clone, Default)]
 pub struct Manifest {
+    /// Every artifact record, in file order.
     pub artifacts: Vec<ArtifactSpec>,
 }
 
@@ -144,10 +156,12 @@ impl Manifest {
         Manifest::parse(&text, dir)
     }
 
+    /// Look up an artifact by name.
     pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
         self.artifacts.iter().find(|a| a.name == name)
     }
 
+    /// All artifact names, in manifest order.
     pub fn names(&self) -> Vec<&str> {
         self.artifacts.iter().map(|a| a.name.as_str()).collect()
     }

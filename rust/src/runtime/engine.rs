@@ -59,14 +59,17 @@ impl Engine {
         Engine::new(&Engine::default_dir())
     }
 
+    /// The loaded artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// Name of the PJRT platform the client runs on (e.g. `cpu`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    /// The artifact spec for `name`, or an error naming what exists.
     pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
         self.manifest
             .get(name)

@@ -6,18 +6,25 @@
 //! * Eq. (12): hardware feasibility constraints.
 //! * `b_m,opt = sqrt(f·L1 / (2·N_core))` — the analytic optimum derived
 //!   by minimizing Eq. (9) in `b_m` (≈ 88 on 910A, rounded to 96).
+//! * [`micro_tile`] — the innermost tier of the same capacity argument:
+//!   the register-file budget that fixes the host micro-kernel's
+//!   `MR × NR` tile, mirroring how Eq. (12) sizes the cache blocks.
 
 use crate::sim::chip::Chip;
 
 /// GEMM problem shape.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct GemmShape {
+    /// Rows of A and C.
     pub m: usize,
+    /// Inner (contraction) dimension.
     pub k: usize,
+    /// Columns of B and C.
     pub n: usize,
 }
 
 impl GemmShape {
+    /// Bundle an `(m, k, n)` problem shape.
     pub fn new(m: usize, k: usize, n: usize) -> GemmShape {
         GemmShape { m, k, n }
     }
@@ -31,18 +38,50 @@ impl GemmShape {
 /// A blocking configuration `(b_m, b_k, b_n)`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BlockConfig {
+    /// Row-block size `b_m`.
     pub bm: usize,
+    /// Inner-dimension block size `b_k`.
     pub bk: usize,
+    /// Column-block size `b_n`.
     pub bn: usize,
 }
 
 /// Why a block configuration is infeasible (Eq. 12).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ConstraintViolation {
-    Alignment { align: usize, bm: usize, bk: usize, bn: usize },
-    L0aCapacity { got: u64, cap: u64 },
-    L0bCapacity { got: u64, cap: u64 },
-    UbCapacity { got: u64, cap: u64 },
+    /// Block sizes are zero or not multiples of the chip alignment.
+    Alignment {
+        /// Required alignment (elements).
+        align: usize,
+        /// Offending `b_m`.
+        bm: usize,
+        /// Offending `b_k`.
+        bk: usize,
+        /// Offending `b_n`.
+        bn: usize,
+    },
+    /// `b_m·b_k` exceeds the L0A buffer.
+    L0aCapacity {
+        /// Elements requested.
+        got: u64,
+        /// L0A capacity in elements.
+        cap: u64,
+    },
+    /// `b_k·b_n` exceeds the L0B buffer.
+    L0bCapacity {
+        /// Elements requested.
+        got: u64,
+        /// L0B capacity in elements.
+        cap: u64,
+    },
+    /// The C tile traffic exceeds the L0C/UB byte budget.
+    UbCapacity {
+        /// Bytes requested (`b_m·b_n·6`).
+        got: u64,
+        /// UB budget in bytes.
+        cap: u64,
+    },
+    /// L1 cannot hold one A block next to double-buffered B blocks.
     L1Capacity,
 }
 
@@ -71,6 +110,7 @@ impl std::fmt::Display for ConstraintViolation {
 impl std::error::Error for ConstraintViolation {}
 
 impl BlockConfig {
+    /// Bundle a `(b_m, b_k, b_n)` blocking configuration.
     pub fn new(bm: usize, bk: usize, bn: usize) -> BlockConfig {
         BlockConfig { bm, bk, bn }
     }
@@ -191,6 +231,41 @@ pub fn optimal_bm(chip: &Chip) -> f64 {
 pub fn round_to_align(x: f64, chip: &Chip) -> usize {
     let a = chip.align as f64;
     ((x / a).round().max(1.0) as usize) * chip.align
+}
+
+/// Derive the micro-kernel tile `(MR, NR)` from a vector register file —
+/// the register-tier analogue of the Eq. (12) cache constraints.
+///
+/// `regs` is the number of architectural vector registers and `lanes`
+/// the f32 lanes per register. The tile row is sized so the B panel
+/// step is read as whole vectors: `NR = lanes·⌈8/lanes⌉` (8 f32 per
+/// row — one AVX2 YMM, or two NEON q-registers). `MR` is then the
+/// largest power of two whose **cube** working set still fits:
+///
+/// ```text
+/// 2·MR·vpr  (high·high + correction accumulator planes)
+///  + 2·vpr  (the b_h and b_l step vectors)
+///  + 1      (the broadcast A value)
+///           ≤ regs,    where vpr = NR / lanes
+/// ```
+///
+/// The cube kernel is the binding case — the plain f32 kernel holds
+/// half the accumulators. Both SIMD register files land on the same
+/// `(4, 8)` tile (AVX2: 16 regs × 8 lanes; NEON: 32 regs × 4 lanes),
+/// which is why [`crate::gemm::pack`] can hard-code `MR`/`NR` and keep
+/// one panel format for every lane; the scalar lane reuses the same
+/// tile for format compatibility. The geometry is pinned by const
+/// asserts in the SIMD kernels and by a test here against
+/// [`crate::gemm::pack::MR`]/[`crate::gemm::pack::NR`].
+pub fn micro_tile(regs: usize, lanes: usize) -> (usize, usize) {
+    assert!(regs >= 4 && lanes >= 1, "degenerate register file ({regs} regs, {lanes} lanes)");
+    let nr = lanes * 8usize.div_ceil(lanes);
+    let vpr = nr / lanes;
+    let mut mr = 1;
+    while 2 * (2 * mr) * vpr + 2 * vpr + 1 <= regs {
+        mr *= 2;
+    }
+    (mr, nr)
 }
 
 /// Enumerate all feasible block configurations on `chip` with dimensions
@@ -316,6 +391,28 @@ mod tests {
         assert!(format!("{err}").contains("multiples of 16"));
         let err = BlockConfig::new(256, 128, 16).validate(&chip).unwrap_err();
         assert!(format!("{err}").contains("L0A"));
+    }
+
+    #[test]
+    fn micro_tile_matches_pack_geometry_on_both_register_files() {
+        // AVX2: 16 YMM × 8 lanes; NEON: 32 q × 4 lanes. Both derive the
+        // 4×8 tile the pack layer hard-codes.
+        assert_eq!(micro_tile(16, 8), (4, 8));
+        assert_eq!(micro_tile(32, 4), (4, 8));
+        let (mr, nr) = micro_tile(16, 8);
+        assert_eq!((mr, nr), (crate::gemm::pack::MR, crate::gemm::pack::NR));
+    }
+
+    #[test]
+    fn micro_tile_scales_with_register_budget() {
+        // NR is lane-granular: a 16-lane file still rounds the row to
+        // whole vectors; a 4-lane row needs two vectors.
+        assert_eq!(micro_tile(32, 16).1, 16);
+        assert_eq!(micro_tile(32, 4).1, 8);
+        // MR grows with the register file and shrinks with starvation.
+        assert!(micro_tile(64, 8).0 > micro_tile(16, 8).0);
+        assert_eq!(micro_tile(8, 8).0, 2); // 2·2·1 + 2 + 1 = 7 regs
+        assert_eq!(micro_tile(6, 8).0, 1);
     }
 
     #[test]

@@ -10,6 +10,7 @@
 /// A simulated NPU.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Chip {
+    /// Human-readable platform name (shown in reports and bench records).
     pub name: &'static str,
     /// Number of AI cores.
     pub n_cores: u32,
@@ -24,8 +25,9 @@ pub struct Chip {
     pub mem_bw_gbs: f64,
     /// L1 buffer capacity per core, in bytes.
     pub l1_bytes: u64,
-    /// L0A / L0B capacity constraints, in *elements* (Eq. 12).
+    /// L0A capacity constraint on `b_m·b_k`, in *elements* (Eq. 12).
     pub l0a_elems: u64,
+    /// L0B capacity constraint on `b_k·b_n`, in *elements* (Eq. 12).
     pub l0b_elems: u64,
     /// Combined L0C + UB constraint: `b_m·b_n·6 ≤ ub_budget_bytes` (Eq. 12).
     pub ub_budget_bytes: u64,
@@ -117,18 +119,27 @@ impl Chip {
     /// * `ub_budget_bytes` — caps `b_m·b_n·6`, bounding the C tile a
     ///   thread revisits per k block (the L0C/UB role);
     /// * `align` — 16, which also keeps blocks divisible by the
-    ///   micro-kernel geometry (`MR = 4`, `NR = 8`).
+    ///   micro-kernel geometry (`MR = 4`, `NR = 8`, derived from the
+    ///   vector register file by [`crate::sim::blocking::micro_tile`]).
     ///
-    /// The throughput/bandwidth fields are rough host figures; they feed
+    /// `cube_macs_per_cycle` follows the kernel lane the dispatcher
+    /// selected ([`crate::gemm::kernels::active_lane`]): two FMA issue
+    /// ports × the lane's f32 width (AVX2 16, NEON 8, scalar 2). The
+    /// throughput/bandwidth fields are rough host figures; they feed
     /// roofline diagnostics only — block *selection* uses capacities and
-    /// the traffic model alone.
+    /// the traffic model alone, so the chosen blocks are identical on
+    /// every lane (part of the cross-schedule bit-identity story).
     pub fn host_cpu() -> Chip {
+        let macs = match crate::gemm::kernels::active_lane() {
+            crate::gemm::kernels::Lane::Avx2 => 16,
+            crate::gemm::kernels::Lane::Neon => 8,
+            crate::gemm::kernels::Lane::Scalar => 2,
+        };
         Chip {
             name: "host-cpu",
             n_cores: crate::util::threads::num_threads() as u32,
             freq_ghz: 3.0,
-            // Two 8-lane FMA ports.
-            cube_macs_per_cycle: 16,
+            cube_macs_per_cycle: macs,
             elem_bytes: 4,
             mem_bw_gbs: 30.0,
             l1_bytes: 512 * 1024,

@@ -29,11 +29,14 @@ use crate::sim::chip::Chip;
 /// L1 B-buffer strategy (Fig. 7).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Buffering {
+    /// One L1 B buffer: stream and compute serialize.
     Single,
+    /// Two L1 B buffers: the next B block streams under compute.
     Double,
 }
 
 impl Buffering {
+    /// Stable identifier used in reports.
     pub fn name(self) -> &'static str {
         match self {
             Buffering::Single => "single-buffer",
@@ -53,10 +56,15 @@ pub const ALPHA_NONOVERLAP: f64 = 0.25;
 /// Per-iteration timing decomposition, in cycles.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct IterTiming {
+    /// Cube compute cycles (MAC tiles + fill/drain bubble).
     pub t_comp: f64,
+    /// Main-memory → L1 streaming cycles for the B block.
     pub t_b_stream: f64,
+    /// L1 → L0A/L0B staging cycles.
     pub t_l0: f64,
+    /// Per-iteration share of the C tile's UB read+write (Eq. 9).
     pub c_amortized: f64,
+    /// Fixed per-iteration synchronization overhead, in cycles.
     pub sync: f64,
     /// DMA setup cost (cycles) — the α residual source in double mode.
     pub dma_setup: f64,

@@ -166,10 +166,15 @@ pub fn measure_precision_bits(e_offset: i32, s_b: i32, samples: usize, rng: &mut
 /// One row of the Fig. 2(a) sweep.
 #[derive(Debug, Clone, Copy)]
 pub struct UnderflowRow {
+    /// Input offset exponent `e`.
     pub e_offset: i32,
+    /// Eq. (5) analytic P(underflow or gradual underflow).
     pub analytic_gradual_or_under: f64,
+    /// Eq. (5) analytic P(complete underflow).
     pub analytic_under: f64,
+    /// Monte-Carlo measured gradual-or-under fraction.
     pub measured_gradual_or_under: f64,
+    /// Monte-Carlo measured complete-underflow fraction.
     pub measured_under: f64,
 }
 

@@ -16,8 +16,11 @@ const EXP_MASK: u16 = 0x7f80;
 const MAN_MASK: u16 = 0x007f;
 
 impl Bf16 {
+    /// Positive zero.
     pub const ZERO: Bf16 = Bf16(0);
+    /// The value 1.0.
     pub const ONE: Bf16 = Bf16(0x3f80);
+    /// Positive infinity.
     pub const INFINITY: Bf16 = Bf16(0x7f80);
     /// Largest finite value ≈ 3.39e38.
     pub const MAX: Bf16 = Bf16(0x7f7f);
@@ -58,11 +61,13 @@ impl Bf16 {
         f32::from_bits((self.0 as u32) << 16)
     }
 
+    /// True for any NaN pattern.
     #[inline]
     pub fn is_nan(self) -> bool {
         (self.0 & EXP_MASK) == EXP_MASK && (self.0 & MAN_MASK) != 0
     }
 
+    /// True for ±infinity.
     #[inline]
     pub fn is_infinite(self) -> bool {
         (self.0 & EXP_MASK) == EXP_MASK && (self.0 & MAN_MASK) == 0

@@ -21,7 +21,9 @@ pub enum Rounding {
 /// Fig. 2(a) contrasts both behaviours.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SubnormalMode {
+    /// Gradual underflow: subnormal results are kept.
     Supported,
+    /// Subnormal results flush to (sign-preserving) zero.
     FlushToZero,
 }
 
@@ -34,10 +36,15 @@ const SIGN_MASK: u16 = 0x8000;
 pub struct F16(pub u16);
 
 impl F16 {
+    /// Positive zero.
     pub const ZERO: F16 = F16(0);
+    /// Negative zero.
     pub const NEG_ZERO: F16 = F16(0x8000);
+    /// The value 1.0.
     pub const ONE: F16 = F16(0x3c00);
+    /// Positive infinity.
     pub const INFINITY: F16 = F16(0x7c00);
+    /// Negative infinity.
     pub const NEG_INFINITY: F16 = F16(0xfc00);
     /// Largest finite value: (2 - 2^-10) * 2^15 = 65504.
     pub const MAX: F16 = F16(0x7bff);
@@ -48,36 +55,43 @@ impl F16 {
     /// A quiet NaN.
     pub const NAN: F16 = F16(0x7e00);
 
+    /// Value with the given bit pattern.
     #[inline]
     pub fn from_bits(bits: u16) -> F16 {
         F16(bits)
     }
 
+    /// The raw bit pattern.
     #[inline]
     pub fn to_bits(self) -> u16 {
         self.0
     }
 
+    /// True for any NaN pattern.
     #[inline]
     pub fn is_nan(self) -> bool {
         (self.0 & EXP_MASK) == EXP_MASK && (self.0 & MAN_MASK) != 0
     }
 
+    /// True for ±infinity.
     #[inline]
     pub fn is_infinite(self) -> bool {
         (self.0 & EXP_MASK) == EXP_MASK && (self.0 & MAN_MASK) == 0
     }
 
+    /// True for nonzero values with a zero biased exponent.
     #[inline]
     pub fn is_subnormal(self) -> bool {
         (self.0 & EXP_MASK) == 0 && (self.0 & MAN_MASK) != 0
     }
 
+    /// True for ±0.
     #[inline]
     pub fn is_zero(self) -> bool {
         (self.0 & !SIGN_MASK) == 0
     }
 
+    /// True when the sign bit is set (including -0 and negative NaNs).
     #[inline]
     pub fn is_sign_negative(self) -> bool {
         (self.0 & SIGN_MASK) != 0

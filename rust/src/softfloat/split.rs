@@ -37,6 +37,7 @@ impl Default for SplitConfig {
 }
 
 impl SplitConfig {
+    /// Default configuration with an explicit scaling exponent `s_b`.
     pub fn with_scale(scale_exp: i32) -> Self {
         SplitConfig { scale_exp, ..Default::default() }
     }
@@ -77,8 +78,11 @@ pub fn reconstruct(high: F16, low: F16, cfg: &SplitConfig) -> f32 {
 /// the operand format consumed by the three-term cube GEMM.
 #[derive(Debug, Clone)]
 pub struct SplitMatrix {
+    /// FP16 high components.
     pub high: Matrix<F16>,
+    /// FP16 scaled-residual components.
     pub low: Matrix<F16>,
+    /// The split configuration both components were produced under.
     pub cfg: SplitConfig,
 }
 
@@ -108,6 +112,7 @@ impl SplitMatrix {
         out
     }
 
+    /// `(rows, cols)` of the split matrix.
     pub fn shape(&self) -> (usize, usize) {
         self.high.shape()
     }

@@ -10,15 +10,20 @@ use crate::util::rng::Rng;
 
 /// A fully-connected network with ReLU hidden activations and MSE loss.
 pub struct Mlp {
+    /// Per-layer weight matrices (`d_in × d_out` each).
     pub weights: Vec<Matrix<f32>>,
+    /// Per-layer bias vectors.
     pub biases: Vec<Vec<f32>>,
+    /// Precision path both passes route through.
     pub backend: GemmBackend,
 }
 
 /// One row of the training log.
 #[derive(Debug, Clone, Copy)]
 pub struct TrainRecord {
+    /// Zero-based step index.
     pub step: usize,
+    /// Full-batch MSE loss before the step's update.
     pub loss: f64,
 }
 
@@ -36,6 +41,7 @@ impl Mlp {
         Mlp { weights, biases, backend }
     }
 
+    /// Total number of trainable parameters.
     pub fn n_params(&self) -> usize {
         self.weights.iter().map(|w| w.rows() * w.cols()).sum::<usize>()
             + self.biases.iter().map(Vec::len).sum::<usize>()
@@ -63,6 +69,7 @@ impl Mlp {
         acts
     }
 
+    /// Forward pass returning only the final prediction.
     pub fn predict(&self, x: &Matrix<f32>) -> Matrix<f32> {
         self.forward(x).pop().unwrap()
     }

@@ -12,6 +12,7 @@ use crate::util::stats::Summary;
 /// One benchmark result.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark name (the JSON record key).
     pub name: String,
     /// Per-iteration wall time statistics, in seconds.
     pub seconds: Summary,
@@ -169,9 +170,13 @@ pub fn fmt_si(v: f64) -> String {
 /// Benchmark runner configuration.
 #[derive(Debug, Clone)]
 pub struct Bencher {
+    /// Untimed warm-up budget before sampling starts.
     pub warmup: Duration,
+    /// Minimum total sampling wall time.
     pub min_time: Duration,
+    /// Minimum number of timed iterations.
     pub min_iters: usize,
+    /// Hard cap on timed iterations.
     pub max_iters: usize,
     results: Vec<BenchResult>,
 }
@@ -189,6 +194,7 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// The default full-measurement profile.
     pub fn new() -> Self {
         Self::default()
     }
@@ -259,6 +265,7 @@ impl Bencher {
         self.record_scalar(&format!("{prefix}/c_update_s"), stages.c_update);
     }
 
+    /// Every result recorded so far, in measurement order.
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }

@@ -39,11 +39,13 @@ impl<T: Copy + Default> Matrix<T> {
         Matrix { rows, cols, data }
     }
 
+    /// Number of rows.
     #[inline]
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Number of columns.
     #[inline]
     pub fn cols(&self) -> usize {
         self.cols
@@ -55,12 +57,14 @@ impl<T: Copy + Default> Matrix<T> {
         (self.rows, self.cols)
     }
 
+    /// The element at `(i, j)`.
     #[inline]
     pub fn get(&self, i: usize, j: usize) -> T {
         debug_assert!(i < self.rows && j < self.cols);
         self.data[i * self.cols + j]
     }
 
+    /// Overwrite the element at `(i, j)`.
     #[inline]
     pub fn set(&mut self, i: usize, j: usize, v: T) {
         debug_assert!(i < self.rows && j < self.cols);
@@ -73,6 +77,7 @@ impl<T: Copy + Default> Matrix<T> {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Mutable contiguous row slice.
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [T] {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
@@ -84,6 +89,7 @@ impl<T: Copy + Default> Matrix<T> {
         &self.data
     }
 
+    /// Mutable full backing buffer (row-major).
     #[inline]
     pub fn as_mut_slice(&mut self) -> &mut [T] {
         &mut self.data

@@ -22,32 +22,40 @@ use crate::util::rng::Rng;
 /// Case generator handed to each property invocation.
 pub struct Gen {
     rng: Rng,
+    /// Zero-based index of the current case (for failure reports).
     pub case: usize,
 }
 
 impl Gen {
+    /// Generator for one case, seeded deterministically from
+    /// `(seed, case)`.
     pub fn new(seed: u64, case: usize) -> Self {
         Gen { rng: Rng::new(seed ^ (case as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)), case }
     }
 
+    /// Direct access to the underlying [`Rng`].
     pub fn rng(&mut self) -> &mut Rng {
         &mut self.rng
     }
 
+    /// A uniform random `u64`.
     pub fn u64(&mut self) -> u64 {
         self.rng.next_u64()
     }
 
+    /// A uniform `usize` in `[lo, hi)`.
     pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
         assert!(lo < hi);
         lo + self.rng.usize_below(hi - lo)
     }
 
+    /// A uniform `i32` in `[lo, hi)`.
     pub fn i32_in(&mut self, lo: i32, hi: i32) -> i32 {
         assert!(lo < hi);
         lo + self.rng.usize_below((hi - lo) as usize) as i32
     }
 
+    /// A uniform `f32` in `[lo, hi)`.
     pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
         self.rng.f32_range(lo, hi)
     }
@@ -73,6 +81,7 @@ impl Gen {
         s * m * (e as f32).exp2()
     }
 
+    /// A fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.u64() & 1 == 1
     }

@@ -4,12 +4,19 @@
 /// Summary statistics of a sample.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Sample standard deviation (0 for a single sample).
     pub stddev: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
+    /// Median (linear interpolation, see [`percentile_sorted`]).
     pub median: f64,
+    /// 95th percentile (linear interpolation).
     pub p95: f64,
 }
 

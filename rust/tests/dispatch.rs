@@ -1,0 +1,232 @@
+//! Forced-lane dispatch tests: the per-lane bit-identity contract.
+//!
+//! [`force_lane`] is process-global, so every test that pins a lane
+//! takes [`lane_lock`] first and restores the detected lane before
+//! releasing it. These tests live in their own integration binary —
+//! cargo runs each binary's tests in one process, so nothing here can
+//! race the lane-agnostic suites (`tests/properties.rs` et al.), which
+//! execute in *their* processes under the detected lane.
+//!
+//! Contract under test (see `gemm::kernels` module docs):
+//!
+//! * **Per lane, across schedules**: with any single lane pinned, the
+//!   serial, overlap-B, overlap-AB and prepacked paths are bit-identical
+//!   — packing and block order are lane-independent, and each sweep
+//!   resolves its lane exactly once.
+//! * **Scalar lane vs exact**: the scalar kernel performs the same
+//!   rounded-multiply + rounded-add chain as the exact reference
+//!   kernels, so for `k <= b_k` (one k block, one accumulation chain)
+//!   the blocked fp32 engine is bit-identical to `sgemm`.
+//! * **Across lanes**: results agree within an accumulation-order
+//!   envelope (FMA lanes round once per chain step, scalar twice), but
+//!   are *not* expected to be bit-identical.
+
+use std::sync::{Mutex, MutexGuard};
+
+use sgemm_cube::gemm::blocked::{
+    cube_gemm_blocked, cube_gemm_blocked_overlapped, cube_gemm_blocked_overlapped_ab,
+    gemm_prepacked, gemm_prepacked_overlapped, gemm_prepacked_overlapped_ab, hgemm_blocked,
+    hgemm_blocked_overlapped, hgemm_blocked_overlapped_ab, host_block, sgemm_blocked,
+    sgemm_blocked_overlapped, sgemm_blocked_overlapped_ab,
+};
+use sgemm_cube::gemm::dgemm::dgemm_of_f32;
+use sgemm_cube::gemm::kernels::{active_lane, detect_lane, force_lane, Lane};
+use sgemm_cube::gemm::prepacked::{PrepackPath, PrepackedMatrix};
+use sgemm_cube::gemm::sgemm::sgemm;
+use sgemm_cube::softfloat::split::SplitConfig;
+use sgemm_cube::util::mat::Matrix;
+use sgemm_cube::util::rng::Rng;
+
+/// Serializes every forced-lane test in this binary.
+static LANE_LOCK: Mutex<()> = Mutex::new(());
+
+fn lane_lock() -> MutexGuard<'static, ()> {
+    LANE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Pin `lane` for the duration of the returned guard; the detected lane
+/// is restored on drop (also on panic, so one failing test does not
+/// leak a stale lane into the next).
+struct ForcedLane(MutexGuard<'static, ()>);
+
+impl ForcedLane {
+    fn pin(lane: Lane) -> Option<ForcedLane> {
+        let guard = lane_lock();
+        if !force_lane(lane) {
+            return None; // unavailable on this host; caller skips
+        }
+        Some(ForcedLane(guard))
+    }
+}
+
+impl Drop for ForcedLane {
+    fn drop(&mut self) {
+        assert!(force_lane(detect_lane()));
+    }
+}
+
+fn operands(m: usize, k: usize, n: usize, seed: u64) -> (Matrix<f32>, Matrix<f32>) {
+    let mut rng = Rng::new(seed);
+    let a = Matrix::random_symmetric(m, k, 0, &mut rng);
+    let b = Matrix::random_symmetric(k, n, 0, &mut rng);
+    (a, b)
+}
+
+fn assert_bits(want: &Matrix<f32>, got: &Matrix<f32>, what: &str) {
+    assert_eq!(want.shape(), got.shape(), "{what}: shape");
+    for (u, v) in want.as_slice().iter().zip(got.as_slice()) {
+        assert_eq!(u.to_bits(), v.to_bits(), "{what}: {u} vs {v}");
+    }
+}
+
+#[test]
+fn every_available_lane_is_bit_identical_across_schedules() {
+    // Shapes straddle the b_k boundary and the MR/NR edges so multiple
+    // panels, partial tiles and the prefetch ring all engage.
+    let bk = host_block().bk;
+    let shapes = [(17, bk - 1, 23), (9, 2 * bk + 5, 33), (4, 1, 1)];
+    let cfg = SplitConfig::default();
+    for lane in Lane::ALL {
+        let Some(_pin) = ForcedLane::pin(lane) else { continue };
+        assert_eq!(active_lane(), lane);
+        for (sh, (m, k, n)) in shapes.into_iter().enumerate() {
+            let (a, b) = operands(m, k, n, 100 + sh as u64);
+            let ctx = |path: &str, sched: &str| format!("{lane} {path} {sched} ({m},{k},{n})");
+
+            let want = sgemm_blocked(&a, &b);
+            assert_bits(&want, &sgemm_blocked_overlapped(&a, &b), &ctx("fp32", "overlap-b"));
+            for depth in [1usize, 3] {
+                let got = sgemm_blocked_overlapped_ab(&a, &b, depth);
+                assert_bits(&want, &got, &ctx("fp32", &format!("overlap-ab d{depth}")));
+            }
+
+            let want = hgemm_blocked(&a, &b);
+            assert_bits(&want, &hgemm_blocked_overlapped(&a, &b), &ctx("fp16", "overlap-b"));
+            let got = hgemm_blocked_overlapped_ab(&a, &b, 2);
+            assert_bits(&want, &got, &ctx("fp16", "overlap-ab d2"));
+
+            let want = cube_gemm_blocked(&a, &b, cfg);
+            let got = cube_gemm_blocked_overlapped(&a, &b, cfg);
+            assert_bits(&want, &got, &ctx("cube", "overlap-b"));
+            let got = cube_gemm_blocked_overlapped_ab(&a, &b, cfg, 3);
+            assert_bits(&want, &got, &ctx("cube", "overlap-ab d3"));
+        }
+    }
+}
+
+#[test]
+fn every_available_lane_is_bit_identical_on_the_prepacked_paths() {
+    let bk = host_block().bk;
+    let (m, k, n) = (11, 2 * bk + 3, 29);
+    let paths = [
+        (PrepackPath::Fp32, "fp32"),
+        (PrepackPath::Fp16, "fp16"),
+        (PrepackPath::Cube(SplitConfig::default()), "cube"),
+    ];
+    for lane in Lane::ALL {
+        let Some(_pin) = ForcedLane::pin(lane) else { continue };
+        let (a, b) = operands(m, k, n, 200);
+        for (path, what) in paths {
+            // Prepack once per lane: panels are lane-independent, but
+            // packing under the pinned lane also proves that.
+            let pp = PrepackedMatrix::prepack(&b, path);
+            let want = gemm_prepacked(&a, &pp);
+            let ctx = |s: &str| format!("{lane} prepacked {what} {s}");
+            assert_bits(&want, &gemm_prepacked_overlapped(&a, &pp), &ctx("overlap"));
+            for depth in [1usize, 2, 3] {
+                let got = gemm_prepacked_overlapped_ab(&a, &pp, depth);
+                assert_bits(&want, &got, &ctx(&format!("ab d{depth}")));
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_panels_are_lane_independent() {
+    // Prepack under each available lane; the panel bytes must be equal.
+    // (Packing routines never dispatch — this pins that property.)
+    let (_, b) = operands(1, 150, 37, 300);
+    let reference: Vec<(Lane, PrepackedMatrix)> = Lane::ALL
+        .into_iter()
+        .filter_map(|lane| {
+            let _pin = ForcedLane::pin(lane)?;
+            Some((lane, PrepackedMatrix::prepack(&b, PrepackPath::Cube(SplitConfig::default()))))
+        })
+        .collect();
+    let (l0, first) = &reference[0];
+    for (lane, pp) in &reference[1..] {
+        assert_eq!((first.k_blocks(), first.n_blocks()), (pp.k_blocks(), pp.n_blocks()));
+        for jb in 0..first.n_blocks() {
+            for pb in 0..first.k_blocks() {
+                let (x, y) = (first.panel(jb, pb), pp.panel(jb, pb));
+                assert_eq!(x.len(), y.len(), "panel ({jb},{pb}) size: {l0} vs {lane}");
+                for (u, v) in x.iter().zip(y) {
+                    assert_eq!(
+                        u.to_bits(),
+                        v.to_bits(),
+                        "panel ({jb},{pb}) differs between lanes {l0} and {lane}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn forced_scalar_is_bit_identical_to_exact_within_one_k_block() {
+    // The promise referenced from gemm::blocked and tests/properties.rs:
+    // on the scalar lane the blocked fp32 engine runs the same rounded
+    // mul + rounded add chain as the exact kernel, so one k block
+    // (k <= b_k, a single accumulation chain per output) matches sgemm
+    // bit for bit. FMA lanes break this on purpose (one rounding per
+    // step), which is why the claim is pinned under a forced lane here
+    // rather than under detection.
+    let _pin = ForcedLane::pin(Lane::Scalar).expect("scalar is always available");
+    let bk = host_block().bk;
+    for (m, k, n, seed) in [(7, bk, 13, 400u64), (33, bk - 3, 5, 401), (2, 1, 2, 402)] {
+        let (a, b) = operands(m, k, n, seed);
+        let exact = sgemm(&a, &b);
+        let blocked = sgemm_blocked(&a, &b);
+        assert_bits(&exact, &blocked, &format!("scalar vs exact ({m},{k},{n})"));
+    }
+}
+
+#[test]
+fn lanes_agree_within_accumulation_order_noise_end_to_end() {
+    // Full-GEMM version of the kernel-level envelope: pin each available
+    // lane in turn on identical operands; results agree with the scalar
+    // lane within a forward-error bound of k·eps·Σ|a||b| per entry.
+    let (m, k, n) = (19, 150, 21);
+    let (a, b) = operands(m, k, n, 500);
+    let abs_p = dgemm_of_f32(&a.map(f32::abs), &b.map(f32::abs));
+    let scalar = {
+        let _pin = ForcedLane::pin(Lane::Scalar).expect("scalar is always available");
+        sgemm_blocked(&a, &b)
+    };
+    for lane in [Lane::Avx2, Lane::Neon] {
+        let Some(_pin) = ForcedLane::pin(lane) else { continue };
+        let got = sgemm_blocked(&a, &b);
+        for i in 0..m {
+            for j in 0..n {
+                let (x, y) = (scalar.get(i, j) as f64, got.get(i, j) as f64);
+                let tol = 4.0 * k as f64 * f32::EPSILON as f64 * abs_p.get(i, j) + 1e-30;
+                assert!(
+                    (x - y).abs() <= tol,
+                    "{lane} vs scalar at ({i},{j}): {x} vs {y} (tol {tol:.3e})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn forcing_an_unavailable_lane_changes_nothing() {
+    let _guard = lane_lock();
+    let before = active_lane();
+    for lane in Lane::ALL {
+        if !lane.is_available() {
+            assert!(!force_lane(lane), "{lane} force should be rejected");
+            assert_eq!(active_lane(), before, "{lane}");
+        }
+    }
+}

@@ -1,0 +1,120 @@
+#!/usr/bin/env python3
+"""Check relative links and anchors in the repo's markdown docs.
+
+Walks every tracked *.md file (skipping .git/, target/, and vendored
+trees), extracts inline links, and verifies that
+
+* relative file links resolve to an existing file or directory, and
+* fragment links (``#anchor``) match a heading in the target file,
+  using GitHub's slugification (lowercase, punctuation stripped,
+  spaces -> hyphens, ``-1``/``-2`` suffixes for duplicates).
+
+External links (http/https/mailto) are not fetched — the CI docs job
+must stay hermetic. Exits non-zero listing every broken link.
+
+Usage: python3 tools/check_md_links.py [repo_root]
+"""
+
+import os
+import re
+import sys
+
+SKIP_DIRS = {".git", "target", "node_modules", "__pycache__", ".claude"}
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$")
+FENCE_RE = re.compile(r"^(```|~~~)")
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def md_files(root):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames if d not in SKIP_DIRS)
+        for name in sorted(filenames):
+            if name.endswith(".md"):
+                yield os.path.join(dirpath, name)
+
+
+def strip_fences(text):
+    """Blank out fenced code blocks so example links are not checked."""
+    out, in_fence = [], False
+    for line in text.splitlines():
+        if FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            out.append("")
+        else:
+            out.append("" if in_fence else line)
+    return "\n".join(out)
+
+
+def slugify(heading):
+    """GitHub-style anchor slug for one heading (pre-dedup)."""
+    # Inline code and emphasis markers contribute their text only.
+    heading = re.sub(r"[`*_]", "", heading)
+    # Markdown links in headings anchor on the link text.
+    heading = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", heading)
+    heading = heading.strip().lower()
+    heading = re.sub(r"[^\w\- ]", "", heading)
+    return heading.replace(" ", "-")
+
+
+def anchors_of(path, cache={}):
+    if path not in cache:
+        with open(path, encoding="utf-8") as f:
+            text = strip_fences(f.read())
+        slugs, seen = set(), {}
+        for line in text.splitlines():
+            m = HEADING_RE.match(line)
+            if not m:
+                continue
+            slug = slugify(m.group(1))
+            n = seen.get(slug, 0)
+            seen[slug] = n + 1
+            slugs.add(slug if n == 0 else f"{slug}-{n}")
+        cache[path] = slugs
+    return cache[path]
+
+
+def check_file(path, root):
+    errors = []
+    with open(path, encoding="utf-8") as f:
+        text = strip_fences(f.read())
+    rel = os.path.relpath(path, root)
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(EXTERNAL) or target.startswith("<"):
+            continue
+        target, _, fragment = target.partition("#")
+        if target:
+            dest = os.path.normpath(os.path.join(os.path.dirname(path), target))
+        else:
+            dest = path  # same-file fragment
+        if not os.path.exists(dest):
+            errors.append(f"{rel}: broken link '{m.group(1)}' (no such file)")
+            continue
+        if fragment:
+            if not dest.endswith(".md") or os.path.isdir(dest):
+                continue  # anchors into non-markdown targets: not checked
+            if fragment.lower() not in anchors_of(dest):
+                errors.append(f"{rel}: broken anchor '{m.group(1)}'")
+    return errors
+
+
+def main():
+    root = os.path.abspath(sys.argv[1] if len(sys.argv) > 1 else ".")
+    files = list(md_files(root))
+    errors = []
+    for path in files:
+        errors.extend(check_file(path, root))
+    print(f"checked {len(files)} markdown files under {root}")
+    if errors:
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        print(f"{len(errors)} broken link(s)", file=sys.stderr)
+        return 1
+    print("all relative links and anchors resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,7 +6,8 @@ measurement to BENCH_gemm.json at the repo root; the CI bench-smoke job
 uploads the same file as a workflow artifact on every PR. This script
 turns that JSON into the markdown rows EXPERIMENTS.md keeps in
 §Perf-iteration-log (item 3), §Serving-amortization, §Resilience,
-§Overlap and §Executor, so filling the tables is mechanical:
+§Overlap, §Executor and §Kernel-dispatch, so filling the tables is
+mechanical:
 
     python3 tools/render_bench_tables.py [BENCH_gemm.json]
 
@@ -139,6 +140,20 @@ def main():
     print(f"| `blocked/overlap_speedup` | {fmt_x(med('blocked/overlap_speedup'))} | B-only prefetch baseline |")
     print(f"| `blocked/ab_overlap_speedup` | {fmt_x(med('blocked/ab_overlap_speedup'))} | gate: ≥ 0.90 × overlap_speedup |")
     print(f"| `exec/pool_spawn_overhead_ns` | {fmt_ns(med('exec/pool_spawn_overhead_ns'))} | run_chunks round-trip on the pool |")
+
+    print("\n## §Kernel-dispatch\n")
+    lane = med("kernel/lane")
+    lane_cell = PENDING
+    if lane is not None:
+        lane_cell = {0: "scalar (0)", 1: "avx2 (1)", 2: "neon (2)"}.get(int(lane), f"? ({lane:.0f})")
+    mr, nr = med("kernel/mr"), med("kernel/nr")
+    tile = PENDING if mr is None or nr is None else f"{mr:.0f} × {nr:.0f}"
+    print("| record | value | note |")
+    print("|--------|-------|------|")
+    print(f"| `kernel/lane` | {lane_cell} | 0 scalar / 1 avx2 / 2 neon |")
+    print(f"| `kernel/mr` × `kernel/nr` | {tile} | micro-tile, shared by all lanes |")
+    print(f"| `host/sgemm_blocked_scalar` | {fmt_s(med('host/sgemm_blocked_scalar/'))} | blocked fp32, scalar lane forced |")
+    print(f"| `blocked/simd_speedup` | {fmt_x(med('blocked/simd_speedup'))} | gate: ≥ 2× when avx2 detected |")
 
 
 if __name__ == "__main__":
