@@ -8,7 +8,11 @@
 //! (prefetched B panels vs
 //! the serial `b_k` loop, `blocked/overlap_speedup`) with the measured
 //! stage breakdown and the recalibrated non-overlapped fraction α fed
-//! into `sim::pipeline` (`blocked/alpha_measured`). Measurements are
+//! into `sim::pipeline` (`blocked/alpha_measured`), and the
+//! precision-family column: per-tier timing plus measured accuracy bits
+//! for the fp16x2 / bf16x2 / bf16x3 specs on the one family engine,
+//! with `precision/frontier` recording what the exact 3-way BF16 split
+//! costs relative to the paper's 2-way FP16 split. Measurements are
 //! written to `BENCH_gemm.json` at the repository root (overwritten
 //! with the latest run; commit it per PR — the CI bench-smoke job also
 //! uploads it as a workflow artifact — see EXPERIMENTS.md
@@ -30,9 +34,12 @@ use sgemm_cube::gemm::backend::{Backend, Schedule};
 use sgemm_cube::gemm::cache::PrepackCache;
 use sgemm_cube::gemm::blocked::{
     cube_gemm_blocked, cube_gemm_blocked_overlapped, cube_gemm_blocked_overlapped_ab,
-    cube_gemm_blocked_staged, cube_gemm_prepacked, gemm_prepacked_overlapped_ab,
-    gemm_prepacked_overlapped_staged, hgemm_blocked, host_block, sgemm_blocked,
+    cube_gemm_blocked_staged, cube_gemm_prepacked, family_gemm_blocked,
+    gemm_prepacked_overlapped_ab, gemm_prepacked_overlapped_staged, hgemm_blocked, host_block,
+    sgemm_blocked,
 };
+use sgemm_cube::gemm::dgemm::dgemm_of_f32;
+use sgemm_cube::gemm::error::relative_error;
 use sgemm_cube::gemm::fast::cube_gemm_three_pass;
 use sgemm_cube::gemm::kernels::{detect_lane, force_lane, Lane};
 use sgemm_cube::gemm::pack::{MR, NR};
@@ -40,6 +47,7 @@ use sgemm_cube::gemm::prepacked::{PrepackPath, PrepackedMatrix};
 use sgemm_cube::sim::blocking::{BlockConfig, GemmShape};
 use sgemm_cube::sim::chip::Chip;
 use sgemm_cube::sim::pipeline::{Buffering, IterTiming, ALPHA_NONOVERLAP};
+use sgemm_cube::softfloat::family::SplitSpec;
 use sgemm_cube::softfloat::split::SplitConfig;
 use sgemm_cube::util::bench::{black_box, fmt_duration, Bencher};
 use sgemm_cube::util::mat::Matrix;
@@ -113,6 +121,43 @@ fn main() {
          (CI gates ≥ 2x only when the avx2 lane is detected)"
     );
     bench.record_scalar(&format!("blocked/simd_speedup/{n}^3"), simd_speedup);
+
+    // ---- precision-emulation family: cost vs measured bits per tier ----
+    // One engine (family_gemm_blocked) serves every tier; the fp16x2
+    // spec is bit-identical to cube_gemm_blocked (pinned by the
+    // dispatch/property suites), so its timing row doubles as the
+    // family-dispatch overhead check. The BF16 tiers put numbers on the
+    // frontier the coordinator's budget ladder walks: bf16x2 covers the
+    // full f32 exponent range at ~16 bits, bf16x3 splits exactly
+    // (3 × 8 ≥ 24 mantissa bits) so only f32 accumulation error
+    // remains — FP32-class accuracy off the emulated cube datapath at
+    // twice the fused-term count of the 2-way split.
+    println!("\nprecision-emulation family at {n}³ (one engine, per-tier spec):");
+    let c_ref = dgemm_of_f32(&a, &b);
+    let tiers = [
+        ("fp16x2", SplitSpec::fp16x2(cfg)),
+        ("bf16x2", SplitSpec::bf16x2()),
+        ("bf16x3", SplitSpec::bf16x3()),
+    ];
+    let mut tier_medians = [0.0f64; 3];
+    for (i, (tier, spec)) in tiers.iter().enumerate() {
+        tier_medians[i] = bench
+            .bench(&format!("precision/{tier}/{n}^3"), Some(flops), || {
+                family_gemm_blocked(&a, &b, *spec)
+            })
+            .seconds
+            .median;
+        let err = relative_error(&c_ref, &family_gemm_blocked(&a, &b, *spec).to_f64());
+        // The 1e-15 floor keeps an exactly-zero error finite (~49.8 bits).
+        let bits = -err.max(1e-15).log2();
+        println!("  {tier}: {bits:.1} measured bits (derived bound {:.0})", spec.bound_bits());
+        bench.record_scalar(&format!("precision/{tier}_bits"), bits);
+    }
+    // Accuracy/cost frontier: what the highest-accuracy tier costs
+    // relative to the paper's 2-way split on the same engine.
+    let frontier = tier_medians[2] / tier_medians[0];
+    println!("  frontier: bf16x3 costs {frontier:.2}x fp16x2 for the exact split");
+    bench.record_scalar("precision/frontier", frontier);
 
     // ---- serving amortization: prepacked weight vs per-request packing ----
     // Serving-realistic shape: small activation batch against a fixed

@@ -41,6 +41,18 @@ impl ServerConfig {
         if let Some(e) = cfg.get_f64("server", "error_budget")? {
             sc.policy.error_budget = Some(e);
         }
+        // `precision` is the user-facing spelling of the same knob: a
+        // relative-error budget the policy satisfies with the cheapest
+        // precision-emulation tier (fp16 → fp16×2 cube → bf16×3; the
+        // full-range bf16 tiers replace the FP32 fallback out of
+        // window). It wins over `error_budget` when both are present,
+        // and per-request `submit_with_precision` overrides both.
+        if let Some(p) = cfg.get_f64("server", "precision")? {
+            if p <= 0.0 {
+                bail!("[server] precision must be > 0");
+            }
+            sc.policy.error_budget = Some(p);
+        }
         if let Some(mb) = cfg.get_usize("server", "prepack_cache_mb")? {
             // 0 = cache disabled (miss-through), see gemm::cache.
             sc.prepack_capacity = mb << 20;
@@ -253,6 +265,21 @@ mod tests {
         assert_eq!(sc.schedule_prepacked, Schedule::OverlapB);
         // Unknown values hard-error like the common key.
         let bad = ConfigFile::parse("[server]\nschedule_prepacked = warp-speed").unwrap();
+        assert!(ServerConfig::from_config(&bad).is_err());
+    }
+
+    #[test]
+    fn precision_key_sets_the_error_budget() {
+        let cfg = ConfigFile::parse("[server]\nprecision = 1e-7").unwrap();
+        let sc = ServerConfig::from_config(&cfg).unwrap().0;
+        assert_eq!(sc.policy.error_budget, Some(1e-7));
+        // The user-facing key wins over the legacy spelling.
+        let cfg = ConfigFile::parse("[server]\nerror_budget = 1e-3\nprecision = 1e-7").unwrap();
+        let sc = ServerConfig::from_config(&cfg).unwrap().0;
+        assert_eq!(sc.policy.error_budget, Some(1e-7));
+        let bad = ConfigFile::parse("[server]\nprecision = 0").unwrap();
+        assert!(ServerConfig::from_config(&bad).is_err());
+        let bad = ConfigFile::parse("[server]\nprecision = -1e-6").unwrap();
         assert!(ServerConfig::from_config(&bad).is_err());
     }
 

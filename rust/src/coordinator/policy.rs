@@ -10,14 +10,24 @@
 //! ```
 //!
 //! * operands whose magnitudes exceed the FP16 range (`e_max > 15`)
-//!   cannot use the cube path at all → FP32 fallback (Sec. 3.1);
+//!   cannot use the FP16 cube path at all (Sec. 3.1);
 //! * otherwise `s_b` is chosen inside the Eq. (6) window, preferring the
-//!   paper's default 12, shrinking only when large inputs force it;
-//! * a caller-provided error budget may select plain FP16 when ~11 bits
-//!   suffice (1-pass instead of 3-pass → 3× cheaper, Table 2 note).
+//!   paper's default 12, shrinking only when large inputs force it —
+//!   with the upper bound tightened by one below Eq. (6)'s nominal
+//!   `15 + 12 - e_max` to cover round-to-nearest *ties* (see
+//!   `decide_ranges`);
+//! * a caller-provided error budget selects the cheapest member of the
+//!   precision-emulation family ([`crate::softfloat::family`]) whose
+//!   derived bound meets it: one-pass FP16 when ~11 bits suffice
+//!   (3× cheaper than the cube, Table 2 note), the FP16×2 cube by
+//!   default, BF16×3 when the budget demands more than the cube's ~22
+//!   bits, and the full-range BF16 tiers instead of the FP32 fallback
+//!   when the operands leave the FP16 window but the budget is
+//!   satisfiable at 16 (BF16×2) or 24 (BF16×3) bits.
 
 use crate::gemm::backend::Backend;
 use crate::gemm::prepacked::PrepackPath;
+use crate::softfloat::family::SplitSpec;
 use crate::softfloat::split::SplitConfig;
 use crate::util::mat::Matrix;
 
@@ -51,6 +61,9 @@ impl PolicyDecision {
             Backend::CubeElementwise | Backend::CubeTermwise => {
                 PrepackPath::Cube(SplitConfig::with_scale(self.scale_exp))
             }
+            Backend::Bf16x2 | Backend::Bf16x3 => PrepackPath::Family(
+                self.backend.family_spec().expect("bf16 tier has a family spec"),
+            ),
         })
     }
 }
@@ -69,6 +82,14 @@ impl Default for PrecisionPolicy {
     fn default() -> Self {
         PrecisionPolicy { error_budget: None, default_backend: Backend::CubeTermwise }
     }
+}
+
+/// Relative-error class a tier recovering `bits` mantissa bits can meet
+/// (`2^-bits`), compared against the caller's budget. `bits` comes from
+/// [`SplitSpec::bound_bits`] so the ladder tracks the family's derived
+/// bounds rather than restating them.
+fn tier_error(bits: f64) -> f64 {
+    2f64.powf(-bits)
 }
 
 /// Unbiased exponent of a finite non-zero f32.
@@ -146,32 +167,57 @@ impl PrecisionPolicy {
             }
         };
 
-        // Out of the FP16 high-component range → FP32 fallback (Sec 3.1:
-        // "inputs larger than the FP16 maximum may overflow ..."). The
-        // low side falls back when *all* magnitudes sit below 2^-12:
-        // there the high component is (or nearly is) subnormal and the
-        // contiguous high+low mantissa tops out well under 22 bits —
-        // growing s_b cannot recover it (both parts would need scaling,
-        // which the paper leaves out of scope). Measured in
-        // `experiments::ablations::run_dynamic_scaling`.
+        // Out of the FP16 high-component range the scaled-FP16 scheme is
+        // unusable (Sec 3.1: "inputs larger than the FP16 maximum may
+        // overflow ..."). The low side is out too when *all* magnitudes
+        // sit below 2^-12: there the high component is (or nearly is)
+        // subnormal and the contiguous high+low mantissa tops out well
+        // under 22 bits — growing s_b cannot recover it (both parts
+        // would need scaling, which the paper leaves out of scope;
+        // measured in `experiments::ablations::run_dynamic_scaling`).
+        // BF16 components carry FP32's full exponent, so with an error
+        // budget the full-range BF16 tiers take these inputs at 3 resp.
+        // 6 cube passes; without one (best effort) the conservative
+        // FP32 fallback stands.
         if hi > 15 || hi < -12 || lo < -24 {
-            return PolicyDecision { backend: Backend::Fp32, scale_exp: 0, e_min, e_max };
+            let backend = match self.error_budget {
+                Some(budget) if budget >= tier_error(SplitSpec::bf16x2().bound_bits()) => {
+                    Backend::Bf16x2
+                }
+                Some(budget) if budget >= tier_error(SplitSpec::bf16x3().bound_bits()) => {
+                    Backend::Bf16x3
+                }
+                _ => Backend::Fp32,
+            };
+            return PolicyDecision { backend, scale_exp: 0, e_min, e_max };
         }
 
-        // An explicit error budget of >= ~2^-11 is satisfiable by one
-        // FP16 pass — three times cheaper than the cube path.
         if let Some(budget) = self.error_budget {
+            // >= ~2^-11 is satisfiable by one FP16 pass — three times
+            // cheaper than any recovery tier.
             if budget >= 2f64.powi(-11) {
                 return PolicyDecision { backend: Backend::Fp16, scale_exp: 0, e_min, e_max };
             }
+            // Tighter than the FP16×2 cube's ~22 recovered bits: only
+            // the six-pass BF16×3 cascade (≈ 24 bits) can satisfy it.
+            if budget < 2f64.powi(-22) {
+                return PolicyDecision { backend: Backend::Bf16x3, scale_exp: 0, e_min, e_max };
+            }
         }
 
-        // Eq. (6) upper bound: s_b <= 15 + 12 - e_max. Prefer the paper's
-        // default 12 and shrink it only when large inputs force it
+        // Eq. (6) upper bound: s_b <= 15 + 12 - e_max — tightened by one
+        // to 26 - e_max. The nominal bound sizes the *rounded* residual
+        // (|v - RN_fp16(v)| <= 2^{e_max-12}, so s_f·residual fits), but
+        // an exact round-to-nearest tie attains weight 2^{e_max-11}: at
+        // e_max = 15 the witness 61936.0 rounds to 61952 leaving a
+        // residual of -16, which s_b = 12 scales to -65536 — past the
+        // FP16 maximum, reconstructing ±inf from an in-range input.
+        // Shrinking the cap by one keeps every tie's scaled residual
+        // representable. Prefer the paper's default 12 otherwise
         // (growing beyond 12 for small inputs buys nothing — the high
         // component's subnormal quantization is the binding constraint
         // there, see the fallback above).
-        let sb_hi = 27 - hi;
+        let sb_hi = 26 - hi;
         let scale_exp = 12.min(sb_hi).max(0);
         PolicyDecision { backend: self.default_backend, scale_exp, e_min, e_max }
     }
@@ -216,15 +262,36 @@ mod tests {
 
     #[test]
     fn large_inputs_shrink_scale_exp() {
-        // e_max = 15 → s_b ≤ 27 - 15 = 12 still; e_max = 14..15 fine,
-        // but a *range-bound* window with e_max=15 keeps 12; verify the
-        // shrink kicks in via a synthetic bound: e_max = 20 is fp32
-        // already, so test sb_hi via e_max=15 staying 12.
-        let a = mat_with_exponents(&[15]);
+        // e_max = 15 → s_b ≤ 26 - 15 = 11: the tie-safe bound shaves one
+        // off Eq. (6)'s nominal 27 - e_max so exact round-to-nearest
+        // ties (residual weight 2^{e_max-11}) cannot overflow the scaled
+        // low component. e_max = 14 → s_b ≤ 12, the paper's default.
+        let b = mat_with_exponents(&[0]);
+        let d = PrecisionPolicy::default().decide(&mat_with_exponents(&[15]), &b);
+        assert_eq!(d.backend, Backend::CubeTermwise);
+        assert_eq!(d.scale_exp, 11);
+        let d14 = PrecisionPolicy::default().decide(&mat_with_exponents(&[14]), &b);
+        assert_eq!(d14.scale_exp, 12);
+    }
+
+    #[test]
+    fn rule2_tie_at_emax_never_overflows_the_residual() {
+        // 61936.0 sits exactly midway between the FP16 neighbours 61920
+        // and 61952 (spacing 32 at e = 15); round-to-nearest-even picks
+        // 61952, leaving residual -16. Under the nominal s_b = 12 the
+        // scaled residual is -65536 — past the FP16 max of 65504, so the
+        // split reconstructs -inf from a perfectly in-range input. The
+        // policy's tightened cap keeps it finite.
+        use crate::softfloat::split::split_f32;
+        let a = Matrix::from_vec(1, 1, vec![61936.0f32]);
         let b = mat_with_exponents(&[0]);
         let d = PrecisionPolicy::default().decide(&a, &b);
         assert_eq!(d.backend, Backend::CubeTermwise);
-        assert_eq!(d.scale_exp, 12);
+        assert_eq!(d.scale_exp, 11);
+        let (_, low) = split_f32(61936.0, &SplitConfig::with_scale(d.scale_exp));
+        assert!(low.to_f32().is_finite(), "tie residual must stay representable");
+        let (_, bad) = split_f32(61936.0, &SplitConfig::with_scale(12));
+        assert!(!bad.to_f32().is_finite(), "witness: nominal bound does overflow");
     }
 
     #[test]
@@ -270,13 +337,38 @@ mod tests {
     }
 
     #[test]
-    fn loose_error_budget_selects_fp16() {
+    fn error_budget_walks_the_tier_ladder() {
         let a = mat_with_exponents(&[0, 1]);
         let b = mat_with_exponents(&[0]);
-        let p = PrecisionPolicy { error_budget: Some(1e-3), ..Default::default() };
-        assert_eq!(p.decide(&a, &b).backend, Backend::Fp16);
-        let tight = PrecisionPolicy { error_budget: Some(1e-7), ..Default::default() };
-        assert_eq!(tight.decide(&a, &b).backend, Backend::CubeTermwise);
+        let with = |budget| PrecisionPolicy { error_budget: Some(budget), ..Default::default() };
+        // ~11 bits: one FP16 pass suffices.
+        assert_eq!(with(1e-3).decide(&a, &b).backend, Backend::Fp16);
+        // Up to ~22 bits: the FP16×2 cube (the default) meets it.
+        assert_eq!(with(1e-6).decide(&a, &b).backend, Backend::CubeTermwise);
+        // Tighter than the cube's bound: only BF16×3 (≈ 24 bits) can —
+        // the one case where the six-pass cascade earns its cost.
+        assert_eq!(with(1e-7).decide(&a, &b).backend, Backend::Bf16x3);
+        // Best effort (no budget) never picks the expensive cascade.
+        assert_eq!(PrecisionPolicy::default().decide(&a, &b).backend, Backend::CubeTermwise);
+    }
+
+    #[test]
+    fn out_of_window_budget_selects_full_range_bf16() {
+        // Exponent 17 exceeds the FP16 window, so the scaled-FP16 cube
+        // is out; BF16 components carry the full FP32 exponent.
+        let a = mat_with_exponents(&[0, 17]);
+        let b = mat_with_exponents(&[0]);
+        let with = |budget| PrecisionPolicy { error_budget: Some(budget), ..Default::default() };
+        assert_eq!(with(1e-4).decide(&a, &b).backend, Backend::Bf16x2);
+        assert_eq!(with(1e-6).decide(&a, &b).backend, Backend::Bf16x3);
+        // Tighter than BF16×3's bound → conservative FP32 fallback.
+        assert_eq!(with(1e-9).decide(&a, &b).backend, Backend::Fp32);
+        // Same ladder below the window.
+        let tiny = mat_with_exponents(&[-20]);
+        assert_eq!(with(1e-4).decide(&tiny, &b).backend, Backend::Bf16x2);
+        // Bf16 tiers advertise the family prepack format.
+        let d = with(1e-4).decide(&a, &b);
+        assert_eq!(d.prepack_path(), Some(PrepackPath::Family(SplitSpec::bf16x2())));
     }
 
     #[test]

@@ -108,6 +108,14 @@ pub struct GemmRequest {
     pub b: BOperand,
     /// Fixed precision path, or `None` to let the policy decide.
     pub backend: Option<Backend>,
+    /// Per-request relative-error budget (the `precision` knob):
+    /// overrides the service policy's configured budget for this request
+    /// only, letting the policy pick the cheapest precision-emulation
+    /// tier that meets it — one-pass FP16 for loose budgets up to the
+    /// six-pass BF16×3 cascade for budgets tighter than the FP16×2
+    /// cube's ~22 bits. Ignored when `backend` is fixed; `None` defers
+    /// to the service-wide `[server] precision` setting.
+    pub precision: Option<f64>,
     /// When the request entered the service (for latency accounting).
     pub submitted: Instant,
     /// Absolute deadline: batch workers shed the request with
@@ -195,6 +203,7 @@ mod tests {
             a: Matrix::zeros(3, 5),
             b,
             backend: None,
+            precision: None,
             submitted: Instant::now(),
             deadline: None,
             reply: tx.clone(),

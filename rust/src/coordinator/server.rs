@@ -384,6 +384,7 @@ impl GemmService {
         a: Matrix<f32>,
         b: BOperand,
         backend: Option<Backend>,
+        precision: Option<f64>,
     ) -> Result<(u64, Receiver<GemmResponse>), GemmError> {
         // Validate here, in the caller's thread, so a malformed request
         // is a typed error instead of a panic inside a batch task. The
@@ -400,7 +401,8 @@ impl GemmService {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = channel();
         let deadline = self.request_timeout.map(|t| Instant::now() + t);
-        let req = GemmRequest { id, a, b, backend, submitted: Instant::now(), deadline, reply };
+        let req =
+            GemmRequest { id, a, b, backend, precision, submitted: Instant::now(), deadline, reply };
         if self.tx.send(DispatchMsg::Request(req)).is_err() {
             // The dispatcher is gone (shutdown raced or completed):
             // typed error, not a panic in the caller's thread.
@@ -420,7 +422,25 @@ impl GemmService {
         b: Matrix<f32>,
         backend: Option<Backend>,
     ) -> Result<(u64, Receiver<GemmResponse>), GemmError> {
-        self.submit_operand(a, BOperand::Inline(b), backend)
+        self.submit_operand(a, BOperand::Inline(b), backend, None)
+    }
+
+    /// [`GemmService::submit`] with a per-request relative-error budget
+    /// (the `precision` knob): the policy picks the cheapest
+    /// precision-emulation tier meeting it — one-pass FP16 for loose
+    /// budgets, the FP16×2 cube in the middle, the six-pass BF16×3
+    /// cascade for budgets tighter than the cube's ~22 bits, and the
+    /// full-range BF16 tiers instead of FP32 for out-of-window operands.
+    /// Overrides the service-wide `[server] precision` setting for this
+    /// request; ignored if `backend` is fixed.
+    pub fn submit_with_precision(
+        &self,
+        a: Matrix<f32>,
+        b: Matrix<f32>,
+        backend: Option<Backend>,
+        precision: Option<f64>,
+    ) -> Result<(u64, Receiver<GemmResponse>), GemmError> {
+        self.submit_operand(a, BOperand::Inline(b), backend, precision)
     }
 
     /// Submit a GEMM against a registered weight: batched with other
@@ -435,8 +455,23 @@ impl GemmService {
         id: WeightId,
         backend: Option<Backend>,
     ) -> Result<(u64, Receiver<GemmResponse>), GemmError> {
+        self.submit_prepacked_with_precision(a, id, backend, None)
+    }
+
+    /// [`GemmService::submit_prepacked`] with a per-request error budget
+    /// (see [`GemmService::submit_with_precision`]). The weight's
+    /// exponent range was recorded at registration, so tier selection
+    /// costs only the A scan; each tier packs the weight once and serves
+    /// it from the prepack cache under its own key.
+    pub fn submit_prepacked_with_precision(
+        &self,
+        a: Matrix<f32>,
+        id: WeightId,
+        backend: Option<Backend>,
+        precision: Option<f64>,
+    ) -> Result<(u64, Receiver<GemmResponse>), GemmError> {
         let entry = self.weight(id).ok_or(GemmError::UnknownWeight(id.0))?;
-        self.submit_operand(a, BOperand::Weight(entry), backend)
+        self.submit_operand(a, BOperand::Weight(entry), backend, precision)
     }
 
     /// Blocking convenience: submit and wait, bounded by
@@ -451,6 +486,34 @@ impl GemmService {
         backend: Option<Backend>,
     ) -> Result<GemmResponse, GemmError> {
         self.blocking_with_retry(|| self.submit(a.clone(), b.clone(), backend))
+    }
+
+    /// Blocking convenience for [`GemmService::submit_with_precision`];
+    /// same deadline and retry behaviour as [`GemmService::gemm_blocking`].
+    pub fn gemm_blocking_with_precision(
+        &self,
+        a: Matrix<f32>,
+        b: Matrix<f32>,
+        backend: Option<Backend>,
+        precision: Option<f64>,
+    ) -> Result<GemmResponse, GemmError> {
+        self.blocking_with_retry(|| {
+            self.submit_with_precision(a.clone(), b.clone(), backend, precision)
+        })
+    }
+
+    /// Blocking convenience for
+    /// [`GemmService::submit_prepacked_with_precision`].
+    pub fn gemm_blocking_prepacked_with_precision(
+        &self,
+        a: Matrix<f32>,
+        id: WeightId,
+        backend: Option<Backend>,
+        precision: Option<f64>,
+    ) -> Result<GemmResponse, GemmError> {
+        self.blocking_with_retry(|| {
+            self.submit_prepacked_with_precision(a.clone(), id, backend, precision)
+        })
     }
 
     /// Blocking convenience for the register-weights-then-serve flow;
@@ -603,13 +666,23 @@ fn execute_batch(batch: Vec<GemmRequest>, ctx: &BatchCtx) {
         let decision = match req.backend {
             Some(b) => PolicyDecision { backend: b, scale_exp: 12, e_min: None, e_max: None },
             // Registered weights carry their exponent range from
-            // registration time; only A is scanned per request.
-            None => match req.b.weight() {
-                Some(w) => {
-                    ctx.policy.decide_ranges(matrix_exponent_range(&req.a), (w.e_min, w.e_max))
+            // registration time; only A is scanned per request. The
+            // request's precision knob, when set, overrides the
+            // service-wide error budget for tier selection.
+            None => {
+                let policy = match req.precision {
+                    Some(budget) => {
+                        PrecisionPolicy { error_budget: Some(budget), ..ctx.policy.clone() }
+                    }
+                    None => ctx.policy.clone(),
+                };
+                match req.b.weight() {
+                    Some(w) => {
+                        policy.decide_ranges(matrix_exponent_range(&req.a), (w.e_min, w.e_max))
+                    }
+                    None => policy.decide(&req.a, req.b.matrix()),
                 }
-                None => ctx.policy.decide(&req.a, req.b.matrix()),
-            },
+            }
         };
         let shape = req.shape();
         // A request past its deadline is shed before any kernel work —
@@ -702,6 +775,9 @@ fn execute_request(
             Backend::CubeElementwise | Backend::CubeTermwise => {
                 (Backend::CubeTermwise, decision.scale_exp)
             }
+            // The family tiers pack under their own spec; no scaling.
+            Backend::Bf16x2 => (Backend::Bf16x2, 0),
+            Backend::Bf16x3 => (Backend::Bf16x3, 0),
         };
         let router = ctx.shard_routers.lock().unwrap().get(&w.id.0).cloned();
         if let Some(router) = router {
@@ -885,6 +961,46 @@ mod tests {
             assert_eq!(resp.backend, bk);
             assert!(resp.result.is_ok());
         }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn precision_knob_walks_the_tier_ladder() {
+        let svc = GemmService::start(small_cfg());
+        let mut rng = Rng::new(21);
+        let a = Matrix::random_symmetric(16, 24, 0, &mut rng);
+        let b = Matrix::random_symmetric(24, 16, 0, &mut rng);
+        // Loose budget → one-pass FP16; tight budget → BF16×3 cascade;
+        // no knob → the default cube path.
+        for (precision, want) in [
+            (Some(1e-3), Backend::Fp16),
+            (Some(1e-7), Backend::Bf16x3),
+            (None, Backend::CubeTermwise),
+        ] {
+            let resp = svc
+                .gemm_blocking_with_precision(a.clone(), b.clone(), None, precision)
+                .expect("submit");
+            assert_eq!(resp.backend, want, "precision {precision:?}");
+            assert!(resp.result.is_ok());
+        }
+        // The knob rides the prepacked path too: each tier packs the
+        // weight once under its own cache key and serves from the LRU.
+        let id = svc.register_weights(b.clone());
+        for _ in 0..2 {
+            let resp = svc
+                .gemm_blocking_prepacked_with_precision(a.clone(), id, None, Some(1e-7))
+                .expect("submit");
+            assert_eq!(resp.backend, Backend::Bf16x3);
+            assert!(resp.result.is_ok());
+        }
+        let stats = svc.prepack_stats();
+        assert_eq!(stats.misses, 1, "one pack per (weight, tier)");
+        assert_eq!(stats.hits, 1, "second request served from cache");
+        // An explicit backend wins over the knob.
+        let resp = svc
+            .gemm_blocking_with_precision(a.clone(), b.clone(), Some(Backend::Fp32), Some(1e-3))
+            .expect("submit");
+        assert_eq!(resp.backend, Backend::Fp32);
         svc.shutdown();
     }
 

@@ -63,10 +63,11 @@ use std::time::Instant;
 use crate::exec::pool::{self, TaskHandle};
 use crate::gemm::blocked::{
     exec_bm, host_block, sweep_rows_cube, sweep_rows_cube_packed, sweep_rows_f32,
-    sweep_rows_f32_packed,
+    sweep_rows_f32_packed, sweep_rows_family, sweep_rows_family_packed,
 };
 use crate::gemm::pack;
 use crate::gemm::prepacked::PrepackedMatrix;
+use crate::softfloat::family::SplitSpec;
 use crate::util::mat::Matrix;
 use crate::util::threads::SendPtr;
 
@@ -193,6 +194,29 @@ fn pack_a_stripe_dual(
     for i0 in (0..m).step_by(bm) {
         let mc = bm.min(m - i0);
         pack::pack_a_dual(ah, al, i0, mc, p0, kc, &mut scratch);
+        slot.a.extend_from_slice(&scratch);
+        slot.a_off.push(slot.a.len());
+    }
+    slot.scratch = scratch;
+}
+
+/// Multi-component counterpart of [`pack_a_stripe`]
+/// (`pack_a_multi` per row block).
+fn pack_a_stripe_multi(
+    a_comps: &[Matrix<f32>],
+    bm: usize,
+    p0: usize,
+    kc: usize,
+    slot: &mut PanelSlot,
+) {
+    let m = a_comps[0].rows();
+    slot.a.clear();
+    slot.a_off.clear();
+    slot.a_off.push(0);
+    let mut scratch = std::mem::take(&mut slot.scratch);
+    for i0 in (0..m).step_by(bm) {
+        let mc = bm.min(m - i0);
+        pack::pack_a_multi(a_comps, i0, mc, p0, kc, &mut scratch);
         slot.a.extend_from_slice(&scratch);
         slot.a_off.push(slot.a.len());
     }
@@ -576,6 +600,80 @@ fn cube_pipeline_dual(
     c
 }
 
+/// Multi-component overlapped-B driver — the pipeline counterpart of
+/// `blocked::family_blocked_core` (N-term family tiers).
+pub(crate) fn family_overlapped_core(
+    a_comps: &[Matrix<f32>],
+    b_comps: &[Matrix<f32>],
+    spec: &SplitSpec,
+) -> Matrix<f32> {
+    family_pipeline_multi(a_comps, b_comps, spec, false, DEFAULT_PIPELINE_DEPTH)
+}
+
+/// Multi-component overlapped-AB driver.
+pub(crate) fn family_ab_core(
+    a_comps: &[Matrix<f32>],
+    b_comps: &[Matrix<f32>],
+    spec: &SplitSpec,
+    depth: usize,
+) -> Matrix<f32> {
+    family_pipeline_multi(a_comps, b_comps, spec, true, depth)
+}
+
+fn family_pipeline_multi(
+    a_comps: &[Matrix<f32>],
+    b_comps: &[Matrix<f32>],
+    spec: &SplitSpec,
+    ab: bool,
+    depth: usize,
+) -> Matrix<f32> {
+    let (m, k) = a_comps[0].shape();
+    let n = b_comps[0].cols();
+    let mut c = Matrix::zeros(m, n);
+    if m == 0 || n == 0 || k == 0 {
+        return c;
+    }
+    let block = host_block();
+    let bm = exec_bm(m, block.bm);
+    let weights = spec.order_weights();
+    let ncomp = spec.ncomp();
+    let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
+    let jobs = panel_jobs(n, k, block.bn, block.bk);
+    if ab {
+        run_prefetch(
+            depth,
+            jobs.len(),
+            |i: usize, slot: &mut PanelSlot| {
+                let job = &jobs[i];
+                pack::pack_b_multi(b_comps, job.p0, job.kc, job.j0, job.nc, &mut slot.b);
+                pack_a_stripe_multi(a_comps, bm, job.p0, job.kc, slot);
+            },
+            |i: usize, slot: &PanelSlot| {
+                let job = &jobs[i];
+                sweep_rows_family_packed(
+                    &slot.a, &slot.a_off, m, &slot.b, &cp, n, bm, job.j0, job.kc, &weights, ncomp,
+                );
+            },
+        );
+    } else {
+        run_prefetch(
+            depth,
+            jobs.len(),
+            |i: usize, slot: &mut PanelSlot| {
+                let job = &jobs[i];
+                pack::pack_b_multi(b_comps, job.p0, job.kc, job.j0, job.nc, &mut slot.b);
+            },
+            |i: usize, slot: &PanelSlot| {
+                let job = &jobs[i];
+                sweep_rows_family(
+                    a_comps, &slot.b, &cp, n, bm, job.j0, job.p0, job.kc, &weights, ncomp,
+                );
+            },
+        );
+    }
+    c
+}
+
 /// Single-component prepacked-B pipeline driver: B panels stream
 /// straight from the [`PrepackedMatrix`] (no pack-B work exists at
 /// all) while the ring prefetches only A row-block stripes — the
@@ -679,6 +777,58 @@ pub(crate) fn cube_prepacked_ab_with_stats(
             for (jb, j0) in (0..n).step_by(bn).enumerate() {
                 sweep_rows_cube_packed(
                     &slot.a, &slot.a_off, m, b.panel(jb, pb), &cp, n, bm, j0, kc, inv_sf,
+                );
+            }
+        },
+    );
+    (c, stats)
+}
+
+/// Multi-component prepacked-B pipeline driver (family counterpart of
+/// [`cube_prepacked_ab_core`], same one-job-per-k-block nest): cached
+/// multi-format B panels, each multi-component A stripe prefetched
+/// once, kernel-only N-term sweeps.
+pub(crate) fn family_prepacked_ab_core(
+    a_comps: &[Matrix<f32>],
+    b: &PrepackedMatrix,
+    spec: &SplitSpec,
+    depth: usize,
+) -> Matrix<f32> {
+    family_prepacked_ab_with_stats(a_comps, b, spec, depth).0
+}
+
+/// [`family_prepacked_ab_core`] returning the consumer-side
+/// [`PrefetchStats`].
+pub(crate) fn family_prepacked_ab_with_stats(
+    a_comps: &[Matrix<f32>],
+    b: &PrepackedMatrix,
+    spec: &SplitSpec,
+    depth: usize,
+) -> (Matrix<f32>, PrefetchStats) {
+    let (m, k) = a_comps[0].shape();
+    let n = b.n();
+    let mut c = Matrix::zeros(m, n);
+    if m == 0 || n == 0 || k == 0 {
+        return (c, PrefetchStats::default());
+    }
+    let bm = exec_bm(m, host_block().bm);
+    let weights = spec.order_weights();
+    let ncomp = spec.ncomp();
+    let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
+    let (bk, bn) = (b.bk(), b.bn());
+    let stats = run_prefetch_stats(
+        depth,
+        b.k_blocks(),
+        |pb: usize, slot: &mut PanelSlot| {
+            let p0 = pb * bk;
+            pack_a_stripe_multi(a_comps, bm, p0, bk.min(k - p0), slot);
+        },
+        |pb: usize, slot: &PanelSlot| {
+            let p0 = pb * bk;
+            let kc = bk.min(k - p0);
+            for (jb, j0) in (0..n).step_by(bn).enumerate() {
+                sweep_rows_family_packed(
+                    &slot.a, &slot.a_off, m, b.panel(jb, pb), &cp, n, bm, j0, kc, &weights, ncomp,
                 );
             }
         },

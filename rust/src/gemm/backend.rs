@@ -9,6 +9,7 @@ use crate::gemm::cube::{cube_gemm, Accumulation};
 use crate::gemm::hgemm::{hgemm, AccumulateMode};
 use crate::gemm::prepacked::PrepackedMatrix;
 use crate::gemm::sgemm::sgemm;
+use crate::softfloat::family::SplitSpec;
 use crate::softfloat::split::SplitConfig;
 use crate::util::mat::Matrix;
 
@@ -24,15 +25,25 @@ pub enum Backend {
     CubeElementwise,
     /// SGEMM-cube with termwise accumulation (the paper's default).
     CubeTermwise,
+    /// BF16×2 precision-family tier: two unscaled BF16 components,
+    /// ≈ 16 recovered bits over the **full** f32 exponent range (no
+    /// Eq. (6) window limit).
+    Bf16x2,
+    /// BF16×3 precision-family tier: three unscaled BF16 components,
+    /// ≈ 24 recovered bits (meets/exceeds FP32 storage accuracy) over
+    /// the full range — the Ozaki-style "exceeds FP32" point.
+    Bf16x3,
 }
 
 impl Backend {
     /// Every precision path, in report order.
-    pub const ALL: [Backend; 4] = [
+    pub const ALL: [Backend; 6] = [
         Backend::Fp32,
         Backend::Fp16,
         Backend::CubeElementwise,
         Backend::CubeTermwise,
+        Backend::Bf16x2,
+        Backend::Bf16x3,
     ];
 
     /// Stable identifier used by the CLI/config layer.
@@ -42,6 +53,8 @@ impl Backend {
             Backend::Fp16 => "fp16",
             Backend::CubeElementwise => "cube-elementwise",
             Backend::CubeTermwise => "cube-termwise",
+            Backend::Bf16x2 => "bf16x2",
+            Backend::Bf16x3 => "bf16x3",
         }
     }
 
@@ -52,18 +65,34 @@ impl Backend {
             "fp16" => Some(Backend::Fp16),
             "cube-elementwise" | "cube-el" => Some(Backend::CubeElementwise),
             "cube-termwise" | "cube" | "cube-tw" => Some(Backend::CubeTermwise),
+            "bf16x2" => Some(Backend::Bf16x2),
+            "bf16x3" => Some(Backend::Bf16x3),
             _ => None,
         }
     }
 
     /// Number of Cube GEMM passes this backend issues per logical GEMM —
     /// the basis of the paper's "FP32-equivalent peak = FP16 peak / 3"
-    /// convention (Table 2 note).
+    /// convention (Table 2 note). For the family tiers this is the kept
+    /// cross-term count `N(N+1)/2` ([`SplitSpec::passes`]).
     pub fn cube_passes(self) -> u32 {
         match self {
             Backend::Fp32 => 0,
             Backend::Fp16 => 1,
             Backend::CubeElementwise | Backend::CubeTermwise => 3,
+            Backend::Bf16x2 => 3,
+            Backend::Bf16x3 => 6,
+        }
+    }
+
+    /// The family [`SplitSpec`] this backend executes through, when it
+    /// is an N-component tier served by the generic family engine
+    /// (`None` for the dedicated fp32/fp16/cube paths).
+    pub fn family_spec(self) -> Option<SplitSpec> {
+        match self {
+            Backend::Bf16x2 => Some(SplitSpec::bf16x2()),
+            Backend::Bf16x3 => Some(SplitSpec::bf16x3()),
+            _ => None,
         }
     }
 }
@@ -259,6 +288,16 @@ impl GemmBackend {
                 (Backend::CubeElementwise | Backend::CubeTermwise, Schedule::OverlapAB) => {
                     blocked::cube_gemm_blocked_overlapped_ab(a, b, self.split, d)
                 }
+                (Backend::Bf16x2 | Backend::Bf16x3, schedule) => {
+                    let spec = self.backend.family_spec().expect("bf16 tier has a family spec");
+                    match schedule {
+                        Schedule::Serial => blocked::family_gemm_blocked(a, b, spec),
+                        Schedule::OverlapB => blocked::family_gemm_blocked_overlapped(a, b, spec),
+                        Schedule::OverlapAB => {
+                            blocked::family_gemm_blocked_overlapped_ab(a, b, spec, d)
+                        }
+                    }
+                }
             };
         }
         match self.backend {
@@ -266,6 +305,14 @@ impl GemmBackend {
             Backend::Fp16 => hgemm(a, b, self.accumulate),
             Backend::CubeElementwise => cube_gemm(a, b, self.split, Accumulation::Elementwise),
             Backend::CubeTermwise => cube_gemm(a, b, self.split, Accumulation::Termwise),
+            Backend::Bf16x2 | Backend::Bf16x3 => {
+                // The family tiers have no separate order-faithful
+                // reference kernel: the N-term engine's serial nest *is*
+                // their definition (gemm::bfcube keeps a flat-loop
+                // oracle under #[cfg(test)] for the BF16×2 tier).
+                let spec = self.backend.family_spec().expect("bf16 tier has a family spec");
+                crate::gemm::blocked::family_gemm_blocked(a, b, spec)
+            }
         }
     }
 
@@ -304,6 +351,24 @@ mod tests {
         assert_eq!(Backend::Fp32.cube_passes(), 0);
         assert_eq!(Backend::Fp16.cube_passes(), 1);
         assert_eq!(Backend::CubeTermwise.cube_passes(), 3);
+        // Family tiers: N(N+1)/2 kept cross terms.
+        assert_eq!(Backend::Bf16x2.cube_passes(), 3);
+        assert_eq!(Backend::Bf16x3.cube_passes(), 6);
+    }
+
+    #[test]
+    fn family_spec_maps_tiers_only() {
+        assert_eq!(Backend::Bf16x2.family_spec(), Some(SplitSpec::bf16x2()));
+        assert_eq!(Backend::Bf16x3.family_spec(), Some(SplitSpec::bf16x3()));
+        for bk in [Backend::Fp32, Backend::Fp16, Backend::CubeElementwise, Backend::CubeTermwise] {
+            assert_eq!(bk.family_spec(), None, "{bk}");
+        }
+        for bk in Backend::ALL {
+            if let Some(spec) = bk.family_spec() {
+                assert_eq!(spec.passes() as u32, bk.cube_passes(), "{bk}");
+                assert_eq!(spec.name(), bk.name(), "{bk}");
+            }
+        }
     }
 
     #[test]
@@ -377,6 +442,8 @@ mod tests {
             (Backend::Fp32, PrepackPath::Fp32),
             (Backend::Fp16, PrepackPath::Fp16),
             (Backend::CubeTermwise, PrepackPath::Cube(SplitConfig::with_scale(12))),
+            (Backend::Bf16x2, PrepackPath::Family(SplitSpec::bf16x2())),
+            (Backend::Bf16x3, PrepackPath::Family(SplitSpec::bf16x3())),
         ];
         for (bk, path) in cases {
             let pp = PrepackedMatrix::prepack(&b, path);

@@ -88,6 +88,7 @@ use crate::gemm::prepacked::{PrepackPath, PrepackedMatrix};
 use crate::sim::blocking::{feasible_blocks, BlockConfig, GemmShape, Traffic};
 use crate::sim::chip::Chip;
 use crate::softfloat::f16::F16;
+use crate::softfloat::family::{ComponentFormat, FamilySplit, SplitSpec, MAX_COMPONENTS};
 use crate::softfloat::split::SplitConfig;
 use crate::util::bench::StageBreakdown;
 use crate::util::mat::Matrix;
@@ -158,6 +159,29 @@ pub fn cube_gemm_blocked_split(a: &WideSplit, b: &WideSplit) -> Matrix<f32> {
     assert_eq!(k, kb, "inner dimensions must match: {k} vs {kb}");
     let inv_sf = 1.0f32 / a.cfg.scale_factor();
     cube_blocked_core(&a.high, &a.low, &b.high, &b.low, inv_sf)
+}
+
+/// Precision-family GEMM through the blocked engine: split both
+/// operands under `spec`, then run the generic N-term fused sweep over
+/// `ncomp`-component packed panels.
+///
+/// The N = 2 FP16 spec routes **structurally** onto the existing cube
+/// path ([`cube_gemm_blocked`]) — the paper's scheme *is* that family
+/// member, and reusing the original entry point keeps it bit-identical
+/// to the pre-family engine by construction. Every other spec (BF16
+/// tiers, N ≥ 3 cascades) runs the generic family core, whose `N = 2`
+/// kernels and combine are themselves bit-compatible with the cube ones
+/// (see [`crate::gemm::kernels::kernel_family`]).
+pub fn family_gemm_blocked(a: &Matrix<f32>, b: &Matrix<f32>, spec: SplitSpec) -> Matrix<f32> {
+    assert_eq!(a.cols(), b.rows(), "inner dimensions must match: {} vs {}", a.cols(), b.rows());
+    if let ComponentFormat::Fp16Scaled(cfg) = spec.format {
+        if spec.components == 2 {
+            return cube_gemm_blocked(a, b, cfg);
+        }
+    }
+    let asp = FamilySplit::of(a, spec);
+    let bsp = FamilySplit::of(b, spec);
+    family_blocked_core(asp.comps(), bsp.comps(), &spec)
 }
 
 /// FP32 blocked GEMM through the overlapped (double-buffered) pipeline:
@@ -253,6 +277,49 @@ pub fn cube_gemm_blocked_split_overlapped_ab(
     pipeline::cube_ab_core(&a.high, &a.low, &b.high, &b.low, inv_sf, depth)
 }
 
+/// Precision-family GEMM through the overlapped (double-buffered)
+/// pipeline: the `ncomp`-component B panels are prefetched while the
+/// N-term family micro-kernel consumes the current block. The N = 2
+/// FP16 spec routes onto [`cube_gemm_blocked_overlapped`]; every
+/// schedule is bit-identical to [`family_gemm_blocked`].
+pub fn family_gemm_blocked_overlapped(
+    a: &Matrix<f32>,
+    b: &Matrix<f32>,
+    spec: SplitSpec,
+) -> Matrix<f32> {
+    assert_eq!(a.cols(), b.rows(), "inner dimensions must match: {} vs {}", a.cols(), b.rows());
+    if let ComponentFormat::Fp16Scaled(cfg) = spec.format {
+        if spec.components == 2 {
+            return cube_gemm_blocked_overlapped(a, b, cfg);
+        }
+    }
+    let asp = FamilySplit::of(a, spec);
+    let bsp = FamilySplit::of(b, spec);
+    pipeline::family_overlapped_core(asp.comps(), bsp.comps(), &spec)
+}
+
+/// Precision-family GEMM through the A+B dual-panel pipeline
+/// (multi-component B panels **and** A row-block stripes prefetched
+/// through a `depth`-slot ring). The N = 2 FP16 spec routes onto
+/// [`cube_gemm_blocked_overlapped_ab`]; bit-identical to
+/// [`family_gemm_blocked`] at every depth.
+pub fn family_gemm_blocked_overlapped_ab(
+    a: &Matrix<f32>,
+    b: &Matrix<f32>,
+    spec: SplitSpec,
+    depth: usize,
+) -> Matrix<f32> {
+    assert_eq!(a.cols(), b.rows(), "inner dimensions must match: {} vs {}", a.cols(), b.rows());
+    if let ComponentFormat::Fp16Scaled(cfg) = spec.format {
+        if spec.components == 2 {
+            return cube_gemm_blocked_overlapped_ab(a, b, cfg, depth);
+        }
+    }
+    let asp = FamilySplit::of(a, spec);
+    let bsp = FamilySplit::of(b, spec);
+    pipeline::family_ab_core(asp.comps(), bsp.comps(), &spec, depth)
+}
+
 /// Instrumented serial FP32 blocked GEMM: the exact serial nest run
 /// single-threaded with per-stage wall times (pack-A, pack-B,
 /// micro-kernel, C update). Calibration/diagnostics path — see
@@ -290,6 +357,7 @@ pub fn gemm_prepacked(a: &Matrix<f32>, b: &PrepackedMatrix) -> Matrix<f32> {
         PrepackPath::Fp32 => sgemm_prepacked(a, b),
         PrepackPath::Fp16 => hgemm_prepacked(a, b),
         PrepackPath::Cube(_) => cube_gemm_prepacked(a, b),
+        PrepackPath::Family(_) => family_gemm_prepacked(a, b),
     }
 }
 
@@ -344,6 +412,7 @@ pub fn gemm_prepacked_overlapped_ab(
         PrepackPath::Fp32 => sgemm_prepacked_overlapped_ab(a, b, depth),
         PrepackPath::Fp16 => hgemm_prepacked_overlapped_ab(a, b, depth),
         PrepackPath::Cube(_) => cube_gemm_prepacked_overlapped_ab(a, b, depth),
+        PrepackPath::Family(_) => family_gemm_prepacked_overlapped_ab(a, b, depth),
     }
 }
 
@@ -389,6 +458,23 @@ pub fn cube_gemm_prepacked_overlapped_ab(
     pipeline::cube_prepacked_ab_core(&asp.high, &asp.low, b, inv_sf, depth)
 }
 
+/// Precision-family GEMM over prepacked multi-component B panels with
+/// the multi-component A stripe prefetched; bit-identical to
+/// [`family_gemm_prepacked`].
+pub fn family_gemm_prepacked_overlapped_ab(
+    a: &Matrix<f32>,
+    b: &PrepackedMatrix,
+    depth: usize,
+) -> Matrix<f32> {
+    let spec = match b.path() {
+        PrepackPath::Family(spec) => spec,
+        p => panic!("operand was prepacked for {p:?}, not the family path"),
+    };
+    assert_eq!(a.cols(), b.k(), "inner dimensions must match: {} vs {}", a.cols(), b.k());
+    let asp = FamilySplit::of(a, spec);
+    pipeline::family_prepacked_ab_core(asp.comps(), b, &spec, depth)
+}
+
 /// Instrumented [`gemm_prepacked_overlapped_ab`]: same computation,
 /// same bits, plus consumer-side critical-path accounting. The
 /// returned [`StageBreakdown`] carries the only A-staging time that
@@ -427,6 +513,13 @@ pub fn gemm_prepacked_overlapped_staged(
             let t0 = Instant::now();
             let (c, stats) =
                 pipeline::cube_prepacked_ab_with_stats(&asp.high, &asp.low, b, inv_sf, depth);
+            (c, stats, t0.elapsed().as_secs_f64())
+        }
+        PrepackPath::Family(spec) => {
+            let asp = FamilySplit::of(a, spec);
+            let t0 = Instant::now();
+            let (c, stats) =
+                pipeline::family_prepacked_ab_with_stats(asp.comps(), b, &spec, depth);
             (c, stats, t0.elapsed().as_secs_f64())
         }
     };
@@ -470,6 +563,22 @@ pub fn cube_gemm_prepacked(a: &Matrix<f32>, b: &PrepackedMatrix) -> Matrix<f32> 
     prepacked_core_cube(&asp.high, &asp.low, b, inv_sf)
 }
 
+/// Precision-family GEMM over prepacked multi-component B panels: A is
+/// split per call under the [`SplitSpec`] recorded in the packed
+/// operand, then the N-term family sweep runs against the cached
+/// panels. Bit-identical to [`family_gemm_blocked`] with the same spec
+/// — including the N = 2 FP16 spec, whose family panels and kernels are
+/// bit-compatible with the cube path's.
+pub fn family_gemm_prepacked(a: &Matrix<f32>, b: &PrepackedMatrix) -> Matrix<f32> {
+    let spec = match b.path() {
+        PrepackPath::Family(spec) => spec,
+        p => panic!("operand was prepacked for {p:?}, not the family path"),
+    };
+    assert_eq!(a.cols(), b.k(), "inner dimensions must match: {} vs {}", a.cols(), b.k());
+    let asp = FamilySplit::of(a, spec);
+    prepacked_core_family(asp.comps(), b, &spec)
+}
+
 /// Single-component nest over prepacked panels: the `b_n → b_k` loops of
 /// [`gemm_blocked_core`] with `pack_b` replaced by a panel lookup.
 fn prepacked_core_single(a: &Matrix<f32>, b: &PrepackedMatrix) -> Matrix<f32> {
@@ -510,6 +619,32 @@ fn prepacked_core_cube(
         for (pb, p0) in (0..k).step_by(b.bk()).enumerate() {
             let kc = b.bk().min(k - p0);
             sweep_rows_cube(ah, al, b.panel(jb, pb), &cp, n, bm, j0, p0, kc, inv_sf);
+        }
+    }
+    c
+}
+
+/// Multi-component nest over prepacked panels (family counterpart of
+/// [`prepacked_core_cube`]).
+fn prepacked_core_family(
+    a_comps: &[Matrix<f32>],
+    b: &PrepackedMatrix,
+    spec: &SplitSpec,
+) -> Matrix<f32> {
+    let (m, k) = a_comps[0].shape();
+    let n = b.n();
+    let mut c = Matrix::zeros(m, n);
+    if m == 0 || n == 0 || k == 0 {
+        return c;
+    }
+    let bm = exec_bm(m, host_block().bm);
+    let weights = spec.order_weights();
+    let ncomp = spec.ncomp();
+    let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
+    for (jb, j0) in (0..n).step_by(b.bn()).enumerate() {
+        for (pb, p0) in (0..k).step_by(b.bk()).enumerate() {
+            let kc = b.bk().min(k - p0);
+            sweep_rows_family(a_comps, b.panel(jb, pb), &cp, n, bm, j0, p0, kc, &weights, ncomp);
         }
     }
     c
@@ -660,6 +795,36 @@ fn cube_blocked_core(
     c
 }
 
+/// Multi-component blocked driver with the generic N-term family
+/// micro-kernel (family counterpart of [`cube_blocked_core`]).
+fn family_blocked_core(
+    a_comps: &[Matrix<f32>],
+    b_comps: &[Matrix<f32>],
+    spec: &SplitSpec,
+) -> Matrix<f32> {
+    let (m, k) = a_comps[0].shape();
+    let n = b_comps[0].cols();
+    let mut c = Matrix::zeros(m, n);
+    if m == 0 || n == 0 || k == 0 {
+        return c;
+    }
+    let block = host_block();
+    let (bm, bk, bn) = (exec_bm(m, block.bm), block.bk, block.bn);
+    let weights = spec.order_weights();
+    let ncomp = spec.ncomp();
+    let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
+    let mut bp = Vec::new();
+    for j0 in (0..n).step_by(bn) {
+        let nc = bn.min(n - j0);
+        for p0 in (0..k).step_by(bk) {
+            let kc = bk.min(k - p0);
+            pack::pack_b_multi(b_comps, p0, kc, j0, nc, &mut bp);
+            sweep_rows_family(a_comps, &bp, &cp, n, bm, j0, p0, kc, &weights, ncomp);
+        }
+    }
+    c
+}
+
 /// Dual-component counterpart of [`sweep_rows_f32`]: one `(j, k)` block
 /// of the fused cube nest against the dual-format packed B panel `bp`
 /// (freshly packed or prepacked — the shared sweep keeps both paths
@@ -736,6 +901,83 @@ pub(crate) fn sweep_rows_cube_packed(
     });
 }
 
+/// Multi-component counterpart of [`sweep_rows_cube`]: one `(j, k)`
+/// block of the N-term family nest against the `ncomp`-component packed
+/// B panel `bp` (freshly packed or prepacked — the shared sweep keeps
+/// both paths bit-identical).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sweep_rows_family(
+    a_comps: &[Matrix<f32>],
+    bp: &[f32],
+    cp: &SendPtr<f32>,
+    n: usize,
+    bm: usize,
+    j0: usize,
+    p0: usize,
+    kc: usize,
+    weights: &[f32; MAX_COMPONENTS],
+    ncomp: usize,
+) {
+    let m = a_comps[0].rows();
+    let row_blocks = m.div_ceil(bm);
+    let lane = kernels::active_lane();
+    parallel_chunks(row_blocks, |rb0, rb1| {
+        let mut ap = Vec::new();
+        for rb in rb0..rb1 {
+            let i0 = rb * bm;
+            let mc = bm.min(m - i0);
+            pack::pack_a_multi(a_comps, i0, mc, p0, kc, &mut ap);
+            for (rp, apanel) in ap.chunks_exact(kc * ncomp * MR).enumerate() {
+                let ci = i0 + rp * MR;
+                let mr_eff = MR.min(m - ci);
+                for (cpnl, bpanel) in bp.chunks_exact(kc * ncomp * NR).enumerate() {
+                    let cj = j0 + cpnl * NR;
+                    let nr_eff = NR.min(n - cj);
+                    let acc = kernels::kernel_family(lane, apanel, bpanel, ncomp);
+                    add_tile_family(cp, n, ci, cj, mr_eff, nr_eff, &acc, weights, ncomp);
+                }
+            }
+        }
+    });
+}
+
+/// [`sweep_rows_family`] over a prepacked multi-component A stripe
+/// (family counterpart of [`sweep_rows_cube_packed`]).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sweep_rows_family_packed(
+    ap_all: &[f32],
+    a_off: &[usize],
+    m: usize,
+    bp: &[f32],
+    cp: &SendPtr<f32>,
+    n: usize,
+    bm: usize,
+    j0: usize,
+    kc: usize,
+    weights: &[f32; MAX_COMPONENTS],
+    ncomp: usize,
+) {
+    let row_blocks = m.div_ceil(bm);
+    debug_assert_eq!(a_off.len(), row_blocks + 1);
+    let lane = kernels::active_lane();
+    parallel_chunks(row_blocks, |rb0, rb1| {
+        for rb in rb0..rb1 {
+            let i0 = rb * bm;
+            let ap = &ap_all[a_off[rb]..a_off[rb + 1]];
+            for (rp, apanel) in ap.chunks_exact(kc * ncomp * MR).enumerate() {
+                let ci = i0 + rp * MR;
+                let mr_eff = MR.min(m - ci);
+                for (cpnl, bpanel) in bp.chunks_exact(kc * ncomp * NR).enumerate() {
+                    let cj = j0 + cpnl * NR;
+                    let nr_eff = NR.min(n - cj);
+                    let acc = kernels::kernel_family(lane, apanel, bpanel, ncomp);
+                    add_tile_family(cp, n, ci, cj, mr_eff, nr_eff, &acc, weights, ncomp);
+                }
+            }
+        }
+    });
+}
+
 /// `C[ci.., cj..] += acc` for the valid `mr_eff × nr_eff` sub-tile.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn add_tile(
@@ -777,6 +1019,40 @@ pub(crate) fn add_tile_cube(
             // SAFETY: row-block chunks are disjoint across threads and the
             // output buffer outlives the parallel scope.
             unsafe { *cp.0.add(base + j) += hh[i][j] + corr[i][j] * inv_sf };
+        }
+    }
+}
+
+/// Family tile combine: the per-order accumulator planes fold highest
+/// order first — `tail = Σ_d acc_d · w_d` joined as
+/// `acc_{n-1}·w_{n-1}`, then `fma`-shaped `acc_d·w_d + tail` down to
+/// `d = 1` — and meet the order-0 plane once per k block. At
+/// `ncomp == 2` this is *exactly* [`add_tile_cube`]'s
+/// `hh + corr·inv_sf` (same operations, same order), which is what
+/// keeps the N = 2 family instantiation bit-identical to the cube
+/// path.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn add_tile_family(
+    cp: &SendPtr<f32>,
+    n: usize,
+    ci: usize,
+    cj: usize,
+    mr_eff: usize,
+    nr_eff: usize,
+    acc: &[[[f32; NR]; MR]; MAX_COMPONENTS],
+    weights: &[f32; MAX_COMPONENTS],
+    ncomp: usize,
+) {
+    for i in 0..mr_eff {
+        let base = (ci + i) * n + cj;
+        for j in 0..nr_eff {
+            let mut tail = acc[ncomp - 1][i][j] * weights[ncomp - 1];
+            for d in (1..ncomp - 1).rev() {
+                tail = acc[d][i][j] * weights[d] + tail;
+            }
+            // SAFETY: row-block chunks are disjoint across threads and the
+            // output buffer outlives the parallel scope.
+            unsafe { *cp.0.add(base + j) += acc[0][i][j] + tail };
         }
     }
 }
@@ -1117,6 +1393,110 @@ mod tests {
         }
         assert!(st.transfer() > 0.0, "pack-B span must be accounted: {st:?}");
         assert!(st.compute() > 0.0);
+    }
+
+    #[test]
+    fn family_fp16x2_is_the_cube_engine() {
+        // The N = 2 FP16 spec must reproduce today's cube engine exactly:
+        // the split entry routes onto it structurally, and the *generic*
+        // family path (exercised through a Family-prepacked operand) packs
+        // bit-equal panels, dispatches ncomp == 2 to the cube kernel, and
+        // combines with the same `hh + corr·inv_sf` shape.
+        let mut rng = Rng::new(58);
+        for s_b in [12u32, 8] {
+            let cfg = SplitConfig::with_scale(s_b as i32);
+            let spec = SplitSpec::fp16x2(cfg);
+            for (m, k, n) in [(5, 17, 9), (33, 65, 24)] {
+                let a = Matrix::random_symmetric(m, k, 0, &mut rng);
+                let b = Matrix::random_symmetric(k, n, 0, &mut rng);
+                let want = cube_gemm_blocked(&a, &b, cfg);
+                let via_family = family_gemm_blocked(&a, &b, spec);
+                for (x, y) in want.as_slice().iter().zip(via_family.as_slice()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "entry s_b={s_b} {m}x{k}x{n}");
+                }
+                let pp = PrepackedMatrix::prepack(&b, PrepackPath::Family(spec));
+                let generic = family_gemm_prepacked(&a, &pp);
+                for (x, y) in want.as_slice().iter().zip(generic.as_slice()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "generic s_b={s_b} {m}x{k}x{n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn family_schedules_and_prepacked_bit_identical() {
+        let bk = host_block().bk;
+        let mut rng = Rng::new(59);
+        let specs = [
+            SplitSpec::bf16x2(),
+            SplitSpec::bf16x3(),
+            SplitSpec { format: ComponentFormat::Fp16Scaled(SplitConfig::default()), components: 3 },
+        ];
+        for spec in specs {
+            for (m, k, n) in [(1, 1, 1), (5, 2 * bk + 3, 9), (33, 65, 24)] {
+                let a = Matrix::random_symmetric(m, k, 0, &mut rng);
+                let b = Matrix::random_symmetric(k, n, 0, &mut rng);
+                let want = family_gemm_blocked(&a, &b, spec);
+                let check = |got: &Matrix<f32>, what: &str| {
+                    for (x, y) in want.as_slice().iter().zip(got.as_slice()) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "{what} {spec:?} {m}x{k}x{n}");
+                    }
+                };
+                check(&family_gemm_blocked_overlapped(&a, &b, spec), "overlapped");
+                let pp = PrepackedMatrix::prepack(&b, PrepackPath::Family(spec));
+                check(&family_gemm_prepacked(&a, &pp), "prepacked");
+                for depth in [1usize, 2, 3] {
+                    check(&family_gemm_blocked_overlapped_ab(&a, &b, spec, depth), "ab");
+                    check(&family_gemm_prepacked_overlapped_ab(&a, &pp, depth), "prepacked-ab");
+                }
+                check(&gemm_prepacked(&a, &pp), "dispatched");
+                for schedule in Schedule::ALL {
+                    check(&gemm_prepacked_scheduled(&a, &pp, schedule, 2), schedule.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn family_accuracy_ladder_bf16() {
+        // BF16×3 keeps six kept terms / three planes and must land far
+        // inside BF16×2's error; the full per-tier bound table lives in
+        // tests/accuracy.rs.
+        let mut rng = Rng::new(60);
+        let a = Matrix::random_symmetric(48, 200, 0, &mut rng);
+        let b = Matrix::random_symmetric(200, 40, 0, &mut rng);
+        let c_ref = dgemm_of_f32(&a, &b);
+        let e2 = relative_error(&c_ref, &family_gemm_blocked(&a, &b, SplitSpec::bf16x2()).to_f64());
+        let e3 = relative_error(&c_ref, &family_gemm_blocked(&a, &b, SplitSpec::bf16x3()).to_f64());
+        assert!(e3 < e2 / 20.0, "bf16x3 {e3} vs bf16x2 {e2}");
+        assert!(e3 < 1e-6, "bf16x3 {e3}");
+    }
+
+    #[test]
+    fn family_prepacked_path_mismatch_panics() {
+        let b = Matrix::zeros(4, 4);
+        let pp = PrepackedMatrix::prepack(&b, PrepackPath::Fp32);
+        let a = Matrix::zeros(2, 4);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            family_gemm_prepacked(&a, &pp)
+        }));
+        assert!(r.is_err());
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            family_gemm_prepacked_overlapped_ab(&a, &pp, 2)
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn family_degenerate_shapes() {
+        let a: Matrix<f32> = Matrix::zeros(0, 5);
+        let b: Matrix<f32> = Matrix::zeros(5, 4);
+        assert_eq!(family_gemm_blocked(&a, &b, SplitSpec::bf16x3()).shape(), (0, 4));
+        let a: Matrix<f32> = Matrix::zeros(3, 0);
+        let b: Matrix<f32> = Matrix::zeros(0, 2);
+        let c = family_gemm_blocked_overlapped(&a, &b, SplitSpec::bf16x2());
+        assert_eq!(c.shape(), (3, 2));
+        assert!(c.as_slice().iter().all(|&v| v == 0.0));
     }
 
     #[test]

@@ -20,6 +20,7 @@ use core::arch::x86_64::{
 };
 
 use crate::gemm::pack::{MR, NR};
+use crate::softfloat::family::MAX_COMPONENTS;
 
 // The kernels below hard-code "one row == one YMM"; refuse to compile
 // if the shared micro-tile geometry ever drifts.
@@ -90,6 +91,65 @@ pub unsafe fn kernel_cube(apanel: &[f32], bpanel: &[f32]) -> ([[f32; NR]; MR], [
         }
     }
     (store_tile(&hh), store_tile(&corr))
+}
+
+/// AVX2+FMA generic N-term family micro-kernel over `ncomp`-component
+/// panels ([`crate::gemm::pack::pack_a_multi`] / `pack_b_multi`
+/// layout): one YMM accumulator plane per term order `d < ncomp`. Per k
+/// step each order chains its kept products as nested FMAs with the
+/// *highest* `a` component joining first —
+/// `acc_d = fma(a_0, b_d, … fma(a_d, b_0, acc_d))` — the same
+/// convention as [`kernel_cube`]'s correction chain (`a_l·b_h` joins
+/// first), generalized. Planes of order ≥ `ncomp` stay exactly zero.
+///
+/// The engine dispatches `ncomp == 2` to [`kernel_cube`] instead; this
+/// generic path serves `ncomp ≥ 3`.
+///
+/// # Safety
+///
+/// The caller must ensure the executing CPU supports AVX2 and FMA
+/// (`Lane::Avx2.is_available()`, checked by [`super::dispatch`]).
+/// `apanel`/`bpanel` must be `ncomp`-component panels for the same
+/// `kc`: `apanel.len() == kc·ncomp·MR` and
+/// `bpanel.len() == kc·ncomp·NR`, with `2 <= ncomp <= MAX_COMPONENTS`.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn kernel_family(
+    apanel: &[f32],
+    bpanel: &[f32],
+    ncomp: usize,
+) -> [[[f32; NR]; MR]; MAX_COMPONENTS] {
+    debug_assert!((2..=MAX_COMPONENTS).contains(&ncomp));
+    let steps = bpanel.len() / (ncomp * NR);
+    debug_assert_eq!(apanel.len(), steps * ncomp * MR);
+    debug_assert_eq!(bpanel.len(), steps * ncomp * NR);
+    let a = apanel.as_ptr();
+    let b = bpanel.as_ptr();
+    let mut acc = [[_mm256_setzero_ps(); MR]; MAX_COMPONENTS];
+    for p in 0..steps {
+        let mut bv = [_mm256_setzero_ps(); MAX_COMPONENTS];
+        for (c, slot) in bv.iter_mut().enumerate().take(ncomp) {
+            *slot = _mm256_loadu_ps(b.add(p * ncomp * NR + c * NR));
+        }
+        let ap = a.add(p * ncomp * MR);
+        for i in 0..MR {
+            let mut av = [_mm256_setzero_ps(); MAX_COMPONENTS];
+            for (c, slot) in av.iter_mut().enumerate().take(ncomp) {
+                *slot = _mm256_set1_ps(*ap.add(c * MR + i));
+            }
+            for (d, plane) in acc.iter_mut().enumerate().take(ncomp) {
+                let mut v = plane[i];
+                for ci in (0..=d).rev() {
+                    v = _mm256_fmadd_ps(av[ci], bv[d - ci], v);
+                }
+                plane[i] = v;
+            }
+        }
+    }
+    let mut out = [[[0.0f32; NR]; MR]; MAX_COMPONENTS];
+    for (dst, plane) in out.iter_mut().zip(&acc) {
+        *dst = store_tile(plane);
+    }
+    out
 }
 
 /// Spill `MR` YMM accumulators into the `[[f32; NR]; MR]` tile shape the

@@ -22,6 +22,7 @@ use std::sync::atomic::{AtomicU8, Ordering};
 
 use crate::gemm::kernels::scalar;
 use crate::gemm::pack::{MR, NR};
+use crate::softfloat::family::MAX_COMPONENTS;
 
 /// One micro-kernel implementation family. The lane decides how each
 /// FP32 accumulation-chain step rounds (see the
@@ -244,6 +245,46 @@ pub fn kernel_cube(
     }
 }
 
+/// Run the generic N-term family micro-kernel on an explicit lane over
+/// `ncomp`-component panels; returns one accumulator plane per term
+/// order (planes past `ncomp` are exactly zero).
+///
+/// `ncomp == 2` dispatches to the dedicated [`kernel_cube`] — the dual
+/// and 2-component panel layouts coincide, and routing through the
+/// original kernel keeps every N = 2 tier bit-identical to the
+/// pre-family engine. `ncomp >= 3` runs the lane's generic fused sweep.
+#[inline]
+pub fn kernel_family(
+    lane: Lane,
+    apanel: &[f32],
+    bpanel: &[f32],
+    ncomp: usize,
+) -> [[[f32; NR]; MR]; MAX_COMPONENTS] {
+    if ncomp == 2 {
+        let (hh, corr) = kernel_cube(lane, apanel, bpanel);
+        let mut out = [[[0.0f32; NR]; MR]; MAX_COMPONENTS];
+        out[0] = hh;
+        out[1] = corr;
+        return out;
+    }
+    match lane {
+        Lane::Scalar => scalar::kernel_family(apanel, bpanel, ncomp),
+        #[cfg(target_arch = "x86_64")]
+        Lane::Avx2 => {
+            assert!(lane.is_available(), "avx2 lane dispatched on a host without AVX2+FMA");
+            // SAFETY: availability checked above.
+            unsafe { super::avx2::kernel_family(apanel, bpanel, ncomp) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Lane::Neon => {
+            assert!(lane.is_available(), "neon lane dispatched on a host without NEON");
+            // SAFETY: availability checked above.
+            unsafe { super::neon::kernel_family(apanel, bpanel, ncomp) }
+        }
+        other => panic!("lane '{other}' cannot execute on this target"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -369,6 +410,108 @@ mod tests {
                     assert!((x - y).abs() <= envelope(hi), "{lane} hh [{i}][{j}]: {x} vs {y}");
                     let (x, y) = (wcorr[i][j], gcorr[i][j]);
                     assert!((x - y).abs() <= envelope(co), "{lane} corr [{i}][{j}]: {x} vs {y}");
+                }
+            }
+        }
+    }
+
+    fn multi_panels(kc: usize, ncomp: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let ap: Vec<f32> = (0..kc * ncomp * MR).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let bp: Vec<f32> = (0..kc * ncomp * NR).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        (ap, bp)
+    }
+
+    #[test]
+    fn family_at_two_components_is_kernel_cube_bitwise() {
+        // The N = 2 family tier must be served by the original cube
+        // kernel — same panels in, same bits out, on every lane.
+        let (dap, dbp) = dual_panels(96, 21);
+        for lane in Lane::ALL {
+            if !lane.is_available() {
+                continue;
+            }
+            let (hh, corr) = kernel_cube(lane, &dap, &dbp);
+            let fam = kernel_family(lane, &dap, &dbp, 2);
+            for i in 0..MR {
+                for j in 0..NR {
+                    assert_eq!(fam[0][i][j].to_bits(), hh[i][j].to_bits(), "{lane}");
+                    assert_eq!(fam[1][i][j].to_bits(), corr[i][j].to_bits(), "{lane}");
+                    assert_eq!(fam[2][i][j], 0.0, "{lane}");
+                    assert_eq!(fam[3][i][j], 0.0, "{lane}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn family_three_components_lanes_agree_within_fma_rounding() {
+        let kc = 64;
+        let ncomp = 3;
+        let envelope = |absdot: f32| 4.0 * (kc as f32) * f32::EPSILON * absdot.max(1.0);
+        let (ap, bp) = multi_panels(kc, ncomp, 22);
+        let want = kernel_family(Lane::Scalar, &ap, &bp, ncomp);
+        // Unused planes are exactly zero, and plane d holds the kept
+        // order-d products (checked against a direct f64 sum).
+        for i in 0..MR {
+            for j in 0..NR {
+                assert_eq!(want[3][i][j], 0.0);
+                for d in 0..ncomp {
+                    let mut sum = 0.0f64;
+                    for p in 0..kc {
+                        for ci in 0..=d {
+                            sum += ap[p * ncomp * MR + ci * MR + i] as f64
+                                * bp[p * ncomp * NR + (d - ci) * NR + j] as f64;
+                        }
+                    }
+                    let got = want[d][i][j] as f64;
+                    assert!(
+                        (sum - got).abs() <= 1e-4 * sum.abs().max(1.0),
+                        "d={d} [{i}][{j}]: {sum} vs {got}"
+                    );
+                }
+            }
+        }
+        for lane in Lane::ALL {
+            if !lane.is_available() || lane == Lane::Scalar {
+                continue;
+            }
+            let got = kernel_family(lane, &ap, &bp, ncomp);
+            for d in 0..ncomp {
+                for i in 0..MR {
+                    for j in 0..NR {
+                        let mut absdot = 0.0f32;
+                        for p in 0..kc {
+                            for ci in 0..=d {
+                                absdot += ap[p * ncomp * MR + ci * MR + i].abs()
+                                    * bp[p * ncomp * NR + (d - ci) * NR + j].abs();
+                            }
+                        }
+                        let (x, y) = (want[d][i][j], got[d][i][j]);
+                        assert!(
+                            (x - y).abs() <= envelope(absdot),
+                            "{lane} d={d} [{i}][{j}]: {x} vs {y}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn family_kernel_is_deterministic_per_lane() {
+        let (ap, bp) = multi_panels(48, 3, 23);
+        for lane in Lane::ALL {
+            if !lane.is_available() {
+                continue;
+            }
+            let x = kernel_family(lane, &ap, &bp, 3);
+            let y = kernel_family(lane, &ap, &bp, 3);
+            for (px, py) in x.iter().zip(&y) {
+                for (rx, ry) in px.iter().zip(py) {
+                    for (u, v) in rx.iter().zip(ry) {
+                        assert_eq!(u.to_bits(), v.to_bits(), "{lane}");
+                    }
                 }
             }
         }

@@ -1,10 +1,12 @@
 //! SIMD micro-kernels with runtime dispatch.
 //!
-//! The blocked engine ([`crate::gemm::blocked`]) executes exactly two
-//! inner loops: the `MR × NR` f32 micro-kernel and the fused three-term
-//! cube micro-kernel. This module holds every implementation of those
-//! two loops — one per **lane** — plus the machinery that picks a lane
-//! at runtime:
+//! The blocked engine ([`crate::gemm::blocked`]) executes exactly three
+//! inner loops: the `MR × NR` f32 micro-kernel, the fused three-term
+//! cube micro-kernel, and the generic N-term family micro-kernel
+//! ([`kernel_family`], serving the `ncomp ≥ 3` precision-emulation
+//! tiers; `ncomp == 2` routes to the cube kernel for bit-identity).
+//! This module holds every implementation of those loops — one per
+//! **lane** — plus the machinery that picks a lane at runtime:
 //!
 //! * [`scalar`] — portable Rust, always available, the reference the
 //!   other lanes are measured against;
@@ -67,4 +69,4 @@ pub mod avx2;
 #[cfg(target_arch = "aarch64")]
 pub mod neon;
 
-pub use dispatch::{active_lane, detect_lane, force_lane, kernel_cube, kernel_f32, Lane};
+pub use dispatch::{active_lane, detect_lane, force_lane, kernel_cube, kernel_f32, kernel_family, Lane};

@@ -18,6 +18,7 @@
 use core::arch::aarch64::{float32x4_t, vdupq_n_f32, vfmaq_f32, vld1q_f32, vst1q_f32};
 
 use crate::gemm::pack::{MR, NR};
+use crate::softfloat::family::MAX_COMPONENTS;
 
 // The kernels below hard-code "one row == two q-registers"; refuse to
 // compile if the shared micro-tile geometry ever drifts.
@@ -97,6 +98,69 @@ pub unsafe fn kernel_cube(apanel: &[f32], bpanel: &[f32]) -> ([[f32; NR]; MR], [
         }
     }
     (store_tile(&hh), store_tile(&corr))
+}
+
+/// NEON generic N-term family micro-kernel over `ncomp`-component
+/// panels ([`crate::gemm::pack::pack_a_multi`] / `pack_b_multi`
+/// layout): one q-register-pair accumulator plane per term order
+/// `d < ncomp`. Per k step each order chains its kept products as
+/// nested FMAs with the *highest* `a` component joining first — the
+/// same convention as [`kernel_cube`]'s correction chain, generalized,
+/// applied per 4-lane half-row. Planes of order ≥ `ncomp` stay exactly
+/// zero.
+///
+/// The engine dispatches `ncomp == 2` to [`kernel_cube`] instead; this
+/// generic path serves `ncomp ≥ 3`.
+///
+/// # Safety
+///
+/// The caller must ensure the executing CPU supports NEON
+/// (`Lane::Neon.is_available()`, checked by [`super::dispatch`]).
+/// `apanel`/`bpanel` must be `ncomp`-component panels for the same
+/// `kc`: `apanel.len() == kc·ncomp·MR` and
+/// `bpanel.len() == kc·ncomp·NR`, with `2 <= ncomp <= MAX_COMPONENTS`.
+#[target_feature(enable = "neon")]
+pub unsafe fn kernel_family(
+    apanel: &[f32],
+    bpanel: &[f32],
+    ncomp: usize,
+) -> [[[f32; NR]; MR]; MAX_COMPONENTS] {
+    debug_assert!((2..=MAX_COMPONENTS).contains(&ncomp));
+    let steps = bpanel.len() / (ncomp * NR);
+    debug_assert_eq!(apanel.len(), steps * ncomp * MR);
+    debug_assert_eq!(bpanel.len(), steps * ncomp * NR);
+    let a = apanel.as_ptr();
+    let b = bpanel.as_ptr();
+    let mut acc = [[[vdupq_n_f32(0.0); 2]; MR]; MAX_COMPONENTS];
+    for p in 0..steps {
+        let mut bv = [[vdupq_n_f32(0.0); 2]; MAX_COMPONENTS];
+        for (c, slot) in bv.iter_mut().enumerate().take(ncomp) {
+            slot[0] = vld1q_f32(b.add(p * ncomp * NR + c * NR));
+            slot[1] = vld1q_f32(b.add(p * ncomp * NR + c * NR + 4));
+        }
+        let ap = a.add(p * ncomp * MR);
+        for i in 0..MR {
+            let mut av = [vdupq_n_f32(0.0); MAX_COMPONENTS];
+            for (c, slot) in av.iter_mut().enumerate().take(ncomp) {
+                *slot = vdupq_n_f32(*ap.add(c * MR + i));
+            }
+            for (d, plane) in acc.iter_mut().enumerate().take(ncomp) {
+                let mut v0 = plane[i][0];
+                let mut v1 = plane[i][1];
+                for ci in (0..=d).rev() {
+                    v0 = vfmaq_f32(v0, av[ci], bv[d - ci][0]);
+                    v1 = vfmaq_f32(v1, av[ci], bv[d - ci][1]);
+                }
+                plane[i][0] = v0;
+                plane[i][1] = v1;
+            }
+        }
+    }
+    let mut out = [[[0.0f32; NR]; MR]; MAX_COMPONENTS];
+    for (dst, plane) in out.iter_mut().zip(&acc) {
+        *dst = store_tile(plane);
+    }
+    out
 }
 
 /// Spill `MR` q-register accumulator pairs into the `[[f32; NR]; MR]`

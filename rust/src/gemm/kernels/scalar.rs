@@ -10,6 +10,7 @@
 //! [`super`] module docs for the cross-lane comparison).
 
 use crate::gemm::pack::{MR, NR};
+use crate::softfloat::family::MAX_COMPONENTS;
 
 /// `MR × NR` register micro-kernel: one FP32 chain per cell over the
 /// panel's k steps, `NR`-lane rows autovectorizing to SIMD FMAs where
@@ -63,4 +64,41 @@ pub fn kernel_cube(apanel: &[f32], bpanel: &[f32]) -> ([[f32; NR]; MR], [[f32; N
         }
     }
     (hh, corr)
+}
+
+/// Generic N-term family micro-kernel over `ncomp`-component panels
+/// ([`crate::gemm::pack::pack_a_multi`] / `pack_b_multi` layout): one
+/// accumulator plane per term order `d = i + j < ncomp`. Per k step each
+/// order's kept products are summed left-to-right with `i` ascending
+/// (`a_0·b_d + a_1·b_{d-1} + …`) and folded into the plane with **one**
+/// rounded `+=` — the same per-step rounding shape as
+/// [`kernel_cube`]'s correction plane, generalized. Planes of order ≥
+/// `ncomp` stay exactly zero.
+///
+/// The engine dispatches `ncomp == 2` to [`kernel_cube`] instead (the
+/// layouts coincide), keeping the N = 2 tiers bit-identical to the
+/// pre-family kernels; this generic path serves `ncomp ≥ 3`.
+#[inline]
+pub fn kernel_family(
+    apanel: &[f32],
+    bpanel: &[f32],
+    ncomp: usize,
+) -> [[[f32; NR]; MR]; MAX_COMPONENTS] {
+    debug_assert!((2..=MAX_COMPONENTS).contains(&ncomp));
+    let mut acc = [[[0.0f32; NR]; MR]; MAX_COMPONENTS];
+    for (av, bv) in apanel.chunks_exact(ncomp * MR).zip(bpanel.chunks_exact(ncomp * NR)) {
+        for i in 0..MR {
+            for (d, plane) in acc.iter_mut().enumerate().take(ncomp) {
+                let row = &mut plane[i];
+                for (j, dst) in row.iter_mut().enumerate() {
+                    let mut t = av[i] * bv[d * NR + j];
+                    for ci in 1..=d {
+                        t += av[ci * MR + i] * bv[(d - ci) * NR + j];
+                    }
+                    *dst += t;
+                }
+            }
+        }
+    }
+    acc
 }

@@ -67,10 +67,11 @@ pub mod sgemm;
 pub use backend::{default_schedule, Backend, GemmBackend, Schedule};
 pub use blocked::{
     cube_gemm_blocked, cube_gemm_blocked_overlapped, cube_gemm_blocked_overlapped_ab,
-    cube_gemm_prepacked, gemm_prepacked, gemm_prepacked_overlapped, gemm_prepacked_overlapped_ab,
-    gemm_prepacked_scheduled, hgemm_blocked, hgemm_blocked_overlapped,
-    hgemm_blocked_overlapped_ab, sgemm_blocked, sgemm_blocked_overlapped,
-    sgemm_blocked_overlapped_ab,
+    cube_gemm_prepacked, family_gemm_blocked, family_gemm_blocked_overlapped,
+    family_gemm_blocked_overlapped_ab, family_gemm_prepacked, gemm_prepacked,
+    gemm_prepacked_overlapped, gemm_prepacked_overlapped_ab, gemm_prepacked_scheduled,
+    hgemm_blocked, hgemm_blocked_overlapped, hgemm_blocked_overlapped_ab, sgemm_blocked,
+    sgemm_blocked_overlapped, sgemm_blocked_overlapped_ab,
 };
 pub use cache::{CacheStats, PrepackCache, PrepackKey};
 pub use cube::{cube_gemm, cube_gemm_split, Accumulation};

@@ -144,6 +144,64 @@ pub fn pack_b_dual(
     }
 }
 
+/// N-component A packing for the precision family: per k step, `MR`
+/// values of component 0, then `MR` of component 1, … (stride
+/// `ncomp·MR` per step). All component planes must share a shape. At
+/// `ncomp = 2` the layout is exactly [`pack_a_dual`]'s.
+pub fn pack_a_multi(
+    comps: &[Matrix<f32>],
+    i0: usize,
+    mc: usize,
+    p0: usize,
+    kc: usize,
+    out: &mut Vec<f32>,
+) {
+    let ncomp = comps.len();
+    debug_assert!(ncomp >= 2);
+    debug_assert!(comps.iter().all(|c| c.shape() == comps[0].shape()));
+    out.clear();
+    out.reserve(a_panels(mc) * kc * ncomp * MR);
+    for r in 0..a_panels(mc) {
+        for p in 0..kc {
+            for comp in comps {
+                for i in 0..MR {
+                    let row = r * MR + i;
+                    out.push(if row < mc { comp.get(i0 + row, p0 + p) } else { 0.0 });
+                }
+            }
+        }
+    }
+}
+
+/// N-component B packing: per k step, `NR` values of component 0, then
+/// `NR` of component 1, … (stride `ncomp·NR` per step). At `ncomp = 2`
+/// the layout is exactly [`pack_b_dual`]'s.
+pub fn pack_b_multi(
+    comps: &[Matrix<f32>],
+    p0: usize,
+    kc: usize,
+    j0: usize,
+    nc: usize,
+    out: &mut Vec<f32>,
+) {
+    let ncomp = comps.len();
+    debug_assert!(ncomp >= 2);
+    debug_assert!(comps.iter().all(|c| c.shape() == comps[0].shape()));
+    out.clear();
+    out.reserve(b_panels(nc) * kc * ncomp * NR);
+    for c in 0..b_panels(nc) {
+        for p in 0..kc {
+            for comp in comps {
+                let row = comp.row(p0 + p);
+                for j in 0..NR {
+                    let col = c * NR + j;
+                    out.push(if col < nc { row[j0 + col] } else { 0.0 });
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -194,6 +252,55 @@ mod tests {
                 let col = NR + j;
                 let want = if col < 13 { b.get(1 + p, 2 + col) } else { 0.0 };
                 assert_eq!(out[base + p * NR + j], want, "panel 1 p={p} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn multi_packing_at_two_components_matches_dual_bitwise() {
+        let high = mat(7, 6, 5);
+        let low = mat(7, 6, 6);
+        let comps = [high.clone(), low.clone()];
+        let (mut dual, mut multi) = (Vec::new(), Vec::new());
+        pack_a_dual(&high, &low, 1, 5, 2, 3, &mut dual);
+        pack_a_multi(&comps, 1, 5, 2, 3, &mut multi);
+        assert_eq!(dual, multi);
+        pack_b_dual(&high, &low, 1, 3, 2, 4, &mut dual);
+        pack_b_multi(&comps, 1, 3, 2, 4, &mut multi);
+        assert_eq!(dual, multi);
+    }
+
+    #[test]
+    fn multi_packing_three_components_layout() {
+        let c0 = mat(5, 4, 7);
+        let c1 = mat(5, 4, 8);
+        let c2 = mat(5, 4, 9);
+        let comps = [c0.clone(), c1.clone(), c2.clone()];
+        let mut ap = Vec::new();
+        pack_a_multi(&comps, 0, 5, 0, 4, &mut ap);
+        assert_eq!(ap.len(), a_panels(5) * 4 * 3 * MR);
+        for p in 0..4 {
+            let s = p * 3 * MR;
+            for i in 0..MR {
+                assert_eq!(ap[s + i], c0.get(i, p));
+                assert_eq!(ap[s + MR + i], c1.get(i, p));
+                assert_eq!(ap[s + 2 * MR + i], c2.get(i, p));
+            }
+        }
+        let mut bp = Vec::new();
+        pack_b_multi(&comps, 0, 5, 0, 4, &mut bp);
+        assert_eq!(bp.len(), b_panels(4) * 5 * 3 * NR);
+        for p in 0..5 {
+            let s = p * 3 * NR;
+            for j in 0..4 {
+                assert_eq!(bp[s + j], c0.get(p, j));
+                assert_eq!(bp[s + NR + j], c1.get(p, j));
+                assert_eq!(bp[s + 2 * NR + j], c2.get(p, j));
+            }
+            for j in 4..NR {
+                assert_eq!(bp[s + j], 0.0);
+                assert_eq!(bp[s + NR + j], 0.0);
+                assert_eq!(bp[s + 2 * NR + j], 0.0);
             }
         }
     }

@@ -19,13 +19,15 @@
 //! traversal over cached panels and its output is **bit-identical** to
 //! the pack-on-the-fly path for the same scaling parameters.
 //!
-//! Three formats, one per precision path the policy can choose
+//! Four formats, one per precision path the policy can choose
 //! ([`PrepackPath`]): plain FP32 panels, FP16-rounded panels (widened to
-//! f32, the Cube operand convention), and dual high/low split panels for
-//! SGEMM-cube. The split configuration is part of the format — a weight
-//! prepacked at `s_b = 12` cannot serve a request decided at `s_b = 8`,
-//! which is why the serving cache ([`crate::gemm::cache`]) keys on the
-//! scaling parameters as well as the shape and path.
+//! f32, the Cube operand convention), dual high/low split panels for
+//! SGEMM-cube, and `N`-component panels for the precision-emulation
+//! family tiers (BF16×2, BF16×3, …). The split configuration/spec is
+//! part of the format — a weight prepacked at `s_b = 12` cannot serve a
+//! request decided at `s_b = 8`, which is why the serving cache
+//! ([`crate::gemm::cache`]) keys on the scaling parameters as well as
+//! the shape and path.
 //!
 //! Consumption is schedule-agnostic: the panel bytes here feed the
 //! serial prepacked nest and the A-stripe prefetch pipeline alike
@@ -42,6 +44,7 @@ use crate::gemm::cube::WideSplit;
 use crate::gemm::pack;
 use crate::sim::blocking::BlockConfig;
 use crate::softfloat::f16::F16;
+use crate::softfloat::family::{FamilySplit, SplitSpec};
 use crate::softfloat::split::SplitConfig;
 use crate::util::mat::Matrix;
 
@@ -60,6 +63,13 @@ pub enum PrepackPath {
     /// Dual high/low split panels (`pack_b_dual`) for the fused
     /// three-term cube kernel, split with this configuration.
     Cube(SplitConfig),
+    /// Multi-component panels (`pack_b_multi`) for the generic N-term
+    /// family kernel, split under this [`SplitSpec`] — the BF16 tiers
+    /// and N ≥ 3 cascades. (The fp16×2 spec also packs here when
+    /// requested explicitly; its panels are bit-compatible with
+    /// [`PrepackPath::Cube`]'s at N = 2, but the serving policy prefers
+    /// the dedicated cube path for cache sharing.)
+    Family(SplitSpec),
 }
 
 /// A B operand with the blocked engine's split + pack work already done:
@@ -104,10 +114,12 @@ impl PrepackedMatrix {
         // Converted/split form of B, shared across every block.
         let converted;
         let split;
+        let family;
         #[derive(Clone, Copy)]
         enum Src<'a> {
             Single(&'a Matrix<f32>),
             Dual(&'a WideSplit),
+            Multi(&'a FamilySplit),
         }
         let src = match path {
             PrepackPath::Fp32 => Src::Single(b),
@@ -118,6 +130,10 @@ impl PrepackedMatrix {
             PrepackPath::Cube(cfg) => {
                 split = WideSplit::of(b, cfg);
                 Src::Dual(&split)
+            }
+            PrepackPath::Family(spec) => {
+                family = FamilySplit::of(b, spec);
+                Src::Multi(&family)
             }
         };
         for j0 in (0..n).step_by(bn) {
@@ -130,6 +146,7 @@ impl PrepackedMatrix {
                     Src::Dual(sp) => {
                         pack::pack_b_dual(&sp.high, &sp.low, p0, kc, j0, nc, &mut out)
                     }
+                    Src::Multi(fs) => pack::pack_b_multi(fs.comps(), p0, kc, j0, nc, &mut out),
                 }
                 panels.push(out);
             }
@@ -232,6 +249,22 @@ mod tests {
         pack::pack_b_dual(&sp.high, &sp.low, 0, 32, 0, 16, &mut out);
         assert_eq!(pp.panel(0, 0), &out[..]);
         pack::pack_b_dual(&sp.high, &sp.low, 32, 8, 16, 8, &mut out);
+        assert_eq!(pp.panel(1, 1), &out[..]);
+    }
+
+    #[test]
+    fn family_panels_match_multi_packing_of_split() {
+        let mut rng = Rng::new(10);
+        let b = Matrix::random_symmetric(40, 24, 0, &mut rng);
+        let spec = SplitSpec::bf16x3();
+        let block = BlockConfig::new(16, 32, 16);
+        let pp = PrepackedMatrix::prepack_with_block(&b, PrepackPath::Family(spec), block);
+        assert_eq!(pp.path(), PrepackPath::Family(spec));
+        let fs = FamilySplit::of(&b, spec);
+        let mut out = Vec::new();
+        pack::pack_b_multi(fs.comps(), 0, 32, 0, 16, &mut out);
+        assert_eq!(pp.panel(0, 0), &out[..]);
+        pack::pack_b_multi(fs.comps(), 32, 8, 16, 8, &mut out);
         assert_eq!(pp.panel(1, 1), &out[..]);
     }
 

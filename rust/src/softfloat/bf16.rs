@@ -79,7 +79,14 @@ impl Bf16 {
 #[inline]
 pub fn split_bf16(v: f32) -> (Bf16, Bf16) {
     let high = Bf16::from_f32_rn(v);
-    if high.is_infinite() && v.is_finite() {
+    if !v.is_finite() {
+        // Family-wide non-finite contract (see `softfloat::family`): the
+        // first component carries the converted NaN/Inf, the residual is
+        // exactly zero. (`v - high.to_f32()` would otherwise be NaN for
+        // both Inf and NaN inputs.)
+        return (high, Bf16::ZERO);
+    }
+    if high.is_infinite() {
         // |v| rounded past BF16::MAX (only the very top of the f32
         // range): keep the truncated high part so the pair stays finite.
         let high = Bf16::from_f32_rz(v);
@@ -173,6 +180,23 @@ mod tests {
         assert!(!hb.is_infinite());
         let rel = ((v as f64) - reconstruct_bf16(hb, lb) as f64).abs() / (v as f64).abs();
         assert!(rel <= 2f64.powi(-15));
+    }
+
+    #[test]
+    fn non_finite_inputs_have_zero_residual() {
+        // Family-wide non-finite contract: component 0 carries the
+        // converted NaN/Inf, the residual is exactly zero (previously
+        // `inf - inf` / NaN propagation gave a NaN low component).
+        let (h, l) = split_bf16(f32::NAN);
+        assert!(h.is_nan());
+        assert_eq!(l, Bf16::ZERO);
+        assert!(reconstruct_bf16(h, l).is_nan());
+        for v in [f32::INFINITY, f32::NEG_INFINITY] {
+            let (h, l) = split_bf16(v);
+            assert!(h.is_infinite());
+            assert_eq!(l, Bf16::ZERO);
+            assert_eq!(reconstruct_bf16(h, l), v);
+        }
     }
 
     #[test]

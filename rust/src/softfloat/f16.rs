@@ -6,7 +6,7 @@
 //! (Sec. 3.3 of the paper).
 
 /// Rounding mode for `f32 -> f16` conversion.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Rounding {
     /// Round-to-nearest, ties-to-even — what Ascend NPUs implement and
     /// what the paper's analysis (Sec. 4) assumes.
@@ -19,7 +19,7 @@ pub enum Rounding {
 
 /// Whether subnormal (denormal) FP16 values are kept or flushed to zero.
 /// Fig. 2(a) contrasts both behaviours.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum SubnormalMode {
     /// Gradual underflow: subnormal results are kept.
     Supported,

@@ -1,0 +1,462 @@
+//! The N-component precision-emulation family.
+//!
+//! The paper's Eq. (7) decomposition — FP32 → high + scaled residual in
+//! FP16 — is one point in a family of split-and-correct schemes (Ozaki
+//! et al.; Bayraktar et al.'s BF16×3 "exceeds FP32"; Mukunoki's
+//! FP8-based emulated DGEMM). This module makes the component **count**
+//! and component **format** parameters instead of structure:
+//!
+//! * a value `v` splits into components `c_0 .. c_{N-1}` such that
+//!   `v ≈ Σ c_i · w^i` where `w` is the per-format component weight
+//!   (`2^{-s_b}` for the FP16 scheme, `1` for BF16);
+//! * a GEMM over two split operands keeps the cross terms
+//!   `A_i · B_j` with `i + j ≤ N - 1` (the terms of order `d = i + j`
+//!   share the weight `w^d`), generalizing the paper's three-term
+//!   recovery (N = 2: `A_h·B_h`, `A_h·B_l`, `A_l·B_h`);
+//! * each spec carries its derived error bound so the coordinator's
+//!   policy can pick the cheapest spec meeting a requested budget.
+//!
+//! **Non-finite contract** (shared with [`split_f32`] and
+//! [`split_bf16`]): for NaN/Inf inputs the *first* component carries the
+//! format-converted non-finite value and every residual component is
+//! exactly zero, so reconstruction — and therefore the GEMM's output —
+//! propagates the NaN/Inf through the order-0 term only.
+
+use crate::softfloat::bf16::{split_bf16, Bf16};
+use crate::softfloat::f16::F16;
+use crate::softfloat::split::{split_f32, SplitConfig};
+use crate::util::mat::Matrix;
+
+/// Upper bound on the component count any spec in the family may carry.
+/// Sized so kernel accumulator arrays can be fixed-size; raising it is a
+/// mechanical change (the kernels loop over the runtime count).
+pub const MAX_COMPONENTS: usize = 4;
+
+/// The storage/conversion format of each split component.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ComponentFormat {
+    /// FP16 components with the paper's power-of-two residual scaling
+    /// (`s_f = 2^{s_b}`): high accuracy (≈ 11 bits per component) but
+    /// confined to the FP16-representable exponent window of Eq. (6).
+    Fp16Scaled(SplitConfig),
+    /// BF16 components, unscaled — BF16 shares FP32's exponent range, so
+    /// the scheme covers the full f32 normal range at ≈ 8 bits per
+    /// component.
+    Bf16,
+}
+
+/// A point in the precision-emulation family: component format ×
+/// component count, plus the derived term schedule and error bound.
+///
+/// The spec is `Copy + Eq + Hash` so it can key prepack caches directly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SplitSpec {
+    /// Format every component is stored/rounded in.
+    pub format: ComponentFormat,
+    /// Number of components `N` (2 ..= [`MAX_COMPONENTS`]).
+    pub components: u8,
+}
+
+impl SplitSpec {
+    /// The paper's scheme: 2×FP16 with residual scaling `cfg`.
+    pub fn fp16x2(cfg: SplitConfig) -> SplitSpec {
+        SplitSpec { format: ComponentFormat::Fp16Scaled(cfg), components: 2 }
+    }
+
+    /// 2×BF16, unscaled: ≈ 16 bits over the full f32 exponent range.
+    pub fn bf16x2() -> SplitSpec {
+        SplitSpec { format: ComponentFormat::Bf16, components: 2 }
+    }
+
+    /// 3×BF16, unscaled: ≈ 24 bits (meets/exceeds FP32) full-range.
+    pub fn bf16x3() -> SplitSpec {
+        SplitSpec { format: ComponentFormat::Bf16, components: 3 }
+    }
+
+    /// Component count as a usize (always in `2 ..= MAX_COMPONENTS`).
+    #[inline]
+    pub fn ncomp(&self) -> usize {
+        let n = self.components as usize;
+        assert!((2..=MAX_COMPONENTS).contains(&n), "component count {n} out of range");
+        n
+    }
+
+    /// Number of kept `A_i·B_j` cross terms: `N(N+1)/2` — the cube-pass
+    /// count of the tier (3 for N = 2, 6 for N = 3).
+    #[inline]
+    pub fn passes(&self) -> usize {
+        let n = self.ncomp();
+        n * (n + 1) / 2
+    }
+
+    /// The kept cross terms `(i, j)` in the paper's termwise order:
+    /// grouped by order `d = i + j` ascending (terms of one order share
+    /// an accumulator plane), `i` ascending within an order.
+    pub fn kept_terms(&self) -> Vec<(usize, usize)> {
+        let n = self.ncomp();
+        let mut terms = Vec::with_capacity(self.passes());
+        for d in 0..n {
+            for i in 0..=d {
+                terms.push((i, d - i));
+            }
+        }
+        terms
+    }
+
+    /// Weight of component `i` (and equally of the order-`d = i`
+    /// accumulator plane at combine time): `2^{-i·s_b}` for the FP16
+    /// scheme, `1` for BF16. Exact powers of two, so multiplying by the
+    /// weight is exact absent underflow.
+    #[inline]
+    pub fn comp_weight(&self, i: usize) -> f32 {
+        match self.format {
+            ComponentFormat::Fp16Scaled(cfg) => (-(cfg.scale_exp * i as i32) as f32).exp2(),
+            ComponentFormat::Bf16 => 1.0,
+        }
+    }
+
+    /// The per-order combine weights `w^0 .. w^{N-1}` (padded with zeros
+    /// beyond `N`), in the layout the fused kernels consume.
+    pub fn order_weights(&self) -> [f32; MAX_COMPONENTS] {
+        let mut w = [0.0f32; MAX_COMPONENTS];
+        for (d, slot) in w.iter_mut().enumerate().take(self.ncomp()) {
+            *slot = self.comp_weight(d);
+        }
+        w
+    }
+
+    /// Approximate recovered mantissa bits of the tier — the derived
+    /// error bound the policy compares against a requested budget.
+    /// FP16: ≈ 11 bits per component *inside the Eq. (6) window*
+    /// (22 for the paper's N = 2). BF16: ≈ 8 bits per component over the
+    /// full f32 range (16 for ×2, 24 for ×3). Clamped at FP32-storage
+    /// limits.
+    pub fn bound_bits(&self) -> f64 {
+        let n = self.components as i32;
+        match self.format {
+            ComponentFormat::Fp16Scaled(_) => (11 * n).min(24) as f64,
+            ComponentFormat::Bf16 => (8 * n).min(30) as f64,
+        }
+    }
+
+    /// True when the tier covers the full f32 normal exponent range
+    /// (BF16); false for the window-limited FP16 scheme.
+    #[inline]
+    pub fn full_range(&self) -> bool {
+        matches!(self.format, ComponentFormat::Bf16)
+    }
+
+    /// Canonical tier name: `fp16x2`, `bf16x2`, `bf16x3`, …
+    pub fn name(&self) -> String {
+        let tag = match self.format {
+            ComponentFormat::Fp16Scaled(_) => "fp16",
+            ComponentFormat::Bf16 => "bf16",
+        };
+        format!("{tag}x{}", self.components)
+    }
+
+    /// Parse a tier name (`fp16xN` uses the default `SplitConfig`).
+    pub fn parse(s: &str) -> Option<SplitSpec> {
+        let (tag, n) = s.split_once('x')?;
+        let n: u8 = n.parse().ok()?;
+        if !(2..=MAX_COMPONENTS as u8).contains(&n) {
+            return None;
+        }
+        match tag {
+            "fp16" => Some(SplitSpec { format: ComponentFormat::Fp16Scaled(SplitConfig::default()), components: n }),
+            "bf16" => Some(SplitSpec { format: ComponentFormat::Bf16, components: n }),
+            _ => None,
+        }
+    }
+}
+
+/// Split one f32 into the spec's components, each widened back to f32
+/// (the engine packs and multiplies components as f32 — widening is
+/// exact for both FP16 and BF16). Slots past `N` are zero.
+///
+/// Bit-compatibility: at `N = 2` this is exactly [`split_f32`] /
+/// [`split_bf16`] (the first two components are produced *by* them).
+/// Extra components cascade: `c_i = round(r_i)`, `r_{i+1} = (r_i − c_i)`
+/// rescaled by `s_f` for the FP16 scheme.
+pub fn split_family(v: f32, spec: &SplitSpec) -> [f32; MAX_COMPONENTS] {
+    let n = spec.ncomp();
+    let mut out = [0.0f32; MAX_COMPONENTS];
+    match spec.format {
+        ComponentFormat::Fp16Scaled(cfg) => {
+            let (h, l) = split_f32(v, &cfg);
+            out[0] = h.to_f32();
+            out[1] = l.to_f32();
+            if n > 2 && v.is_finite() && !h.is_infinite() {
+                // Continue the Eq. (7) cascade past the paper's two
+                // components: r_1 is exact (see split.rs), and each
+                // further residual subtraction is exact by Sterbenz.
+                let mut r = (v - h.to_f32()) * cfg.scale_factor();
+                let mut c = l;
+                for slot in out.iter_mut().take(n).skip(2) {
+                    if c.is_infinite() {
+                        break; // Rule-2 residual overflow: stop the cascade
+                    }
+                    r = (r - c.to_f32()) * cfg.scale_factor();
+                    c = F16::from_f32(r, cfg.rounding).apply_subnormal_mode(cfg.subnormals);
+                    *slot = c.to_f32();
+                }
+            }
+        }
+        ComponentFormat::Bf16 => {
+            let (h, l) = split_bf16(v);
+            out[0] = h.to_f32();
+            out[1] = l.to_f32();
+            if n > 2 && v.is_finite() && !h.is_infinite() && !l.is_infinite() {
+                // r_2 = (v - c_0) - c_1: both subtractions are exact
+                // (c_1 = RN(v - c_0), so Sterbenz applies).
+                let mut r = v - out[0] - out[1];
+                for slot in out.iter_mut().take(n).skip(2) {
+                    let c = Bf16::from_f32_rn(r);
+                    *slot = c.to_f32();
+                    r -= c.to_f32();
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Reconstruct `Σ c_i · w^i`, folding from the smallest term up (the
+/// same tail-first order the fused kernels use at combine time). At
+/// `N = 2` FP16 this is bit-identical to [`crate::softfloat::split::reconstruct`].
+pub fn reconstruct_family(comps: &[f32; MAX_COMPONENTS], spec: &SplitSpec) -> f32 {
+    let n = spec.ncomp();
+    let mut tail = 0.0f32;
+    for i in (1..n).rev() {
+        tail = comps[i] * spec.comp_weight(i) + tail;
+    }
+    comps[0] + tail
+}
+
+/// A matrix split into N f32-widened component planes — the operand
+/// format consumed by the family GEMM engine. Replaces the former
+/// `SplitMatrix`/`BfSplit` pair for every tier except the fp16×2 fast
+/// path (which keeps the dedicated dual-panel layout for bit-identity
+/// with the pre-family engine).
+#[derive(Debug, Clone)]
+pub struct FamilySplit {
+    comps: Vec<Matrix<f32>>,
+    spec: SplitSpec,
+}
+
+impl FamilySplit {
+    /// Split every element of `m` under `spec`.
+    pub fn of(m: &Matrix<f32>, spec: SplitSpec) -> FamilySplit {
+        let n = spec.ncomp();
+        let mut comps: Vec<Matrix<f32>> =
+            (0..n).map(|_| Matrix::zeros(m.rows(), m.cols())).collect();
+        for i in 0..m.rows() {
+            for j in 0..m.cols() {
+                let c = split_family(m.get(i, j), &spec);
+                for (p, plane) in comps.iter_mut().enumerate() {
+                    plane.set(i, j, c[p]);
+                }
+            }
+        }
+        FamilySplit { comps, spec }
+    }
+
+    /// The spec this operand was split under.
+    #[inline]
+    pub fn spec(&self) -> SplitSpec {
+        self.spec
+    }
+
+    /// The component planes, order 0 (high) first.
+    #[inline]
+    pub fn comps(&self) -> &[Matrix<f32>] {
+        &self.comps
+    }
+
+    /// Component plane `i`.
+    #[inline]
+    pub fn comp(&self, i: usize) -> &Matrix<f32> {
+        &self.comps[i]
+    }
+
+    /// `(rows, cols)` of the split matrix.
+    pub fn shape(&self) -> (usize, usize) {
+        self.comps[0].shape()
+    }
+
+    /// Reconstruct the f32 approximation of the original matrix.
+    pub fn reconstruct(&self) -> Matrix<f32> {
+        let (r, c) = self.shape();
+        let mut out = Matrix::zeros(r, c);
+        let mut comps = [0.0f32; MAX_COMPONENTS];
+        for i in 0..r {
+            for j in 0..c {
+                for (p, plane) in self.comps.iter().enumerate() {
+                    comps[p] = plane.get(i, j);
+                }
+                out.set(i, j, reconstruct_family(&comps, &self.spec));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::softfloat::split::reconstruct;
+    use crate::util::rng::Rng;
+
+    fn rel_err(v: f64, w: f64) -> f64 {
+        if v == 0.0 {
+            w.abs()
+        } else {
+            (v - w).abs() / v.abs()
+        }
+    }
+
+    #[test]
+    fn fp16x2_matches_split_f32_bitwise() {
+        let cfg = SplitConfig::default();
+        let spec = SplitSpec::fp16x2(cfg);
+        let mut rng = Rng::new(17);
+        for _ in 0..50_000 {
+            let e = (rng.usize_below(32) as i32) - 16;
+            let v = rng.f32_with_exponent(e);
+            let c = split_family(v, &spec);
+            let (h, l) = split_f32(v, &cfg);
+            assert_eq!(c[0].to_bits(), h.to_f32().to_bits(), "v={v}");
+            assert_eq!(c[1].to_bits(), l.to_f32().to_bits(), "v={v}");
+            assert_eq!(c[2], 0.0);
+            let rec = reconstruct_family(&c, &spec);
+            assert_eq!(rec.to_bits(), reconstruct(h, l, &cfg).to_bits(), "v={v}");
+        }
+    }
+
+    #[test]
+    fn bf16x2_matches_split_bf16_bitwise() {
+        let spec = SplitSpec::bf16x2();
+        let mut rng = Rng::new(18);
+        for e in [-60, -12, 0, 15, 40, 90] {
+            for _ in 0..5_000 {
+                let v = rng.f32_with_exponent(e);
+                let c = split_family(v, &spec);
+                let (h, l) = split_bf16(v);
+                assert_eq!(c[0].to_bits(), h.to_f32().to_bits(), "v={v}");
+                assert_eq!(c[1].to_bits(), l.to_f32().to_bits(), "v={v}");
+                assert_eq!(c[2], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn bf16x3_recovers_about_24_bits_full_range() {
+        let spec = SplitSpec::bf16x3();
+        let mut rng = Rng::new(19);
+        for e in [-60, -20, -5, 0, 8, 20, 45, 90] {
+            for _ in 0..5_000 {
+                let v = rng.f32_with_exponent(e);
+                let c = split_family(v, &spec);
+                let rec = reconstruct_family(&c, &spec) as f64;
+                // Three BF16 components carry >= 24 significand bits;
+                // the reconstruction is exact at f32 precision for all
+                // but tie patterns, and never worse than ~2^-22.
+                assert!(rel_err(v as f64, rec) <= 2f64.powi(-22), "e={e} v={v} rec={rec}");
+            }
+        }
+    }
+
+    #[test]
+    fn fp16x3_extends_the_cascade_inside_the_window() {
+        let spec = SplitSpec { format: ComponentFormat::Fp16Scaled(SplitConfig::default()), components: 3 };
+        let mut rng = Rng::new(20);
+        for _ in 0..20_000 {
+            let e = (rng.usize_below(21) as i32) - 10;
+            let v = rng.f32_with_exponent(e);
+            let c = split_family(v, &spec);
+            let rec = reconstruct_family(&c, &spec) as f64;
+            assert!(rel_err(v as f64, rec) <= 2f64.powi(-23), "e={e} v={v}");
+        }
+    }
+
+    #[test]
+    fn non_finite_contract_all_formats() {
+        for spec in [
+            SplitSpec::fp16x2(SplitConfig::default()),
+            SplitSpec::bf16x2(),
+            SplitSpec::bf16x3(),
+            SplitSpec { format: ComponentFormat::Fp16Scaled(SplitConfig::default()), components: 3 },
+        ] {
+            let c = split_family(f32::NAN, &spec);
+            assert!(c[0].is_nan(), "{}", spec.name());
+            assert!(c[1..].iter().all(|&x| x == 0.0), "{}", spec.name());
+            assert!(reconstruct_family(&c, &spec).is_nan(), "{}", spec.name());
+            for v in [f32::INFINITY, f32::NEG_INFINITY] {
+                let c = split_family(v, &spec);
+                assert!(c[0].is_infinite(), "{}", spec.name());
+                assert!(c[1..].iter().all(|&x| x == 0.0), "{}", spec.name());
+                assert_eq!(reconstruct_family(&c, &spec), v, "{}", spec.name());
+            }
+        }
+    }
+
+    #[test]
+    fn term_schedule_and_passes() {
+        let s2 = SplitSpec::fp16x2(SplitConfig::default());
+        assert_eq!(s2.passes(), 3);
+        assert_eq!(s2.kept_terms(), vec![(0, 0), (0, 1), (1, 0)]);
+        let s3 = SplitSpec::bf16x3();
+        assert_eq!(s3.passes(), 6);
+        assert_eq!(s3.kept_terms(), vec![(0, 0), (0, 1), (1, 0), (0, 2), (1, 1), (2, 0)]);
+        // Every kept term's order is < N; weights match the order.
+        for (i, j) in s3.kept_terms() {
+            assert!(i + j < s3.ncomp());
+        }
+        let w = s2.order_weights();
+        assert_eq!(w[0], 1.0);
+        assert_eq!(w[1], 2f32.powi(-12));
+        assert_eq!(w[2], 0.0);
+        assert_eq!(s3.order_weights(), [1.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn names_parse_roundtrip() {
+        for spec in [SplitSpec::fp16x2(SplitConfig::default()), SplitSpec::bf16x2(), SplitSpec::bf16x3()] {
+            assert_eq!(SplitSpec::parse(&spec.name()), Some(spec));
+        }
+        assert_eq!(SplitSpec::parse("fp16x2"), Some(SplitSpec::fp16x2(SplitConfig::default())));
+        assert!(SplitSpec::parse("fp16x1").is_none());
+        assert!(SplitSpec::parse("fp16x9").is_none());
+        assert!(SplitSpec::parse("fp8x2").is_none());
+        assert!(SplitSpec::parse("bf16").is_none());
+    }
+
+    #[test]
+    fn matrix_family_split_reconstructs() {
+        let mut rng = Rng::new(23);
+        let m = Matrix::random_symmetric(9, 13, 0, &mut rng);
+        for spec in [SplitSpec::fp16x2(SplitConfig::default()), SplitSpec::bf16x2(), SplitSpec::bf16x3()] {
+            let fs = FamilySplit::of(&m, spec);
+            assert_eq!(fs.shape(), (9, 13));
+            assert_eq!(fs.comps().len(), spec.ncomp());
+            let r = fs.reconstruct();
+            let tol = 2f64.powf(-(spec.bound_bits() - 1.5));
+            for i in 0..9 {
+                for j in 0..13 {
+                    let v = m.get(i, j) as f64;
+                    let w = r.get(i, j) as f64;
+                    assert!(rel_err(v, w) <= tol, "{} ({i},{j}): {v} vs {w}", spec.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bound_bits_ladder() {
+        assert_eq!(SplitSpec::fp16x2(SplitConfig::default()).bound_bits(), 22.0);
+        assert_eq!(SplitSpec::bf16x2().bound_bits(), 16.0);
+        assert_eq!(SplitSpec::bf16x3().bound_bits(), 24.0);
+        assert!(SplitSpec::bf16x2().full_range());
+        assert!(!SplitSpec::fp16x2(SplitConfig::default()).full_range());
+    }
+}

@@ -11,13 +11,17 @@
 //! Submodules:
 //! * [`f16`] — the `F16` type: conversion, arithmetic helpers, ULP tools.
 //! * [`split`] — the two-component FP32→2×FP16 split of Eq. (7).
+//! * [`family`] — the N-component precision-emulation family
+//!   generalizing the split over component count and format.
 //! * [`analysis`] — the RN underflow-probability and precision-bits
 //!   analysis of Sec. 4 (Fig. 2).
 
 pub mod analysis;
 pub mod bf16;
 pub mod f16;
+pub mod family;
 pub mod split;
 
 pub use f16::{F16, Rounding, SubnormalMode};
+pub use family::{split_family, reconstruct_family, ComponentFormat, FamilySplit, SplitSpec, MAX_COMPONENTS};
 pub use split::{split_f32, reconstruct, SplitConfig, SplitMatrix};

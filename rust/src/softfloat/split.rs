@@ -16,7 +16,7 @@ use crate::softfloat::f16::{F16, Rounding, SubnormalMode};
 use crate::util::mat::Matrix;
 
 /// Configuration of the splitting operator.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct SplitConfig {
     /// Scaling exponent `s_b` (factor is `2^{s_b}`). Paper default: 12.
     pub scale_exp: i32,
@@ -57,9 +57,16 @@ pub fn split_f32(v: f32, cfg: &SplitConfig) -> (F16, F16) {
     // closeness whenever `high` is finite and near `v` (error analysis in
     // Sec. 4); multiplication by a power of two is exact absent
     // overflow/underflow.
-    let residual = if high.is_infinite() {
-        // Overflowed high part: the scheme is out of range (Sec. 3.1).
-        // Keep the residual at zero; reconstruction returns ±inf.
+    // Non-finite contract (shared by every split in the precision
+    // family, see `softfloat::family`): the *first* component carries the
+    // format-converted NaN/Inf; every residual component is exactly zero.
+    // Without this, `v - high.to_f32()` is NaN for NaN *and* overflowed
+    // inputs, and the policy's range scan / shard recombination would see
+    // a NaN low component where reconstruction promises ±inf.
+    let residual = if !v.is_finite() || high.is_infinite() {
+        // Overflowed or non-finite high part: the scheme is out of range
+        // (Sec. 3.1). Keep the residual at zero; reconstruction returns
+        // the high component's ±inf / NaN.
         0.0
     } else {
         (v - high.to_f32()) * cfg.scale_factor()
@@ -237,6 +244,31 @@ mod tests {
                 assert!(!l.is_infinite(), "residual overflow at s_b=12 for v={v}");
             }
         }
+    }
+
+    #[test]
+    fn non_finite_inputs_have_zero_residual() {
+        // The family-wide non-finite contract: component 0 carries the
+        // converted NaN/Inf, all residuals are exactly zero.
+        let cfg = SplitConfig::default();
+        let (h, l) = split_f32(f32::NAN, &cfg);
+        assert!(h.is_nan());
+        assert_eq!(l, F16::ZERO);
+        assert!(reconstruct(h, l, &cfg).is_nan());
+        for v in [f32::INFINITY, f32::NEG_INFINITY] {
+            let (h, l) = split_f32(v, &cfg);
+            assert!(h.is_infinite());
+            assert_eq!(l, F16::ZERO);
+            assert_eq!(reconstruct(h, l, &cfg), v);
+        }
+        // Matrix-level: a NaN element must not poison its residual plane.
+        let mut m = Matrix::zeros(2, 2);
+        m.set(0, 0, f32::NAN);
+        m.set(1, 1, 3.5);
+        let sm = SplitMatrix::from_f32(&m, cfg);
+        assert!(sm.high.get(0, 0).is_nan());
+        assert_eq!(sm.low.get(0, 0), F16::ZERO);
+        assert_eq!(sm.high.get(1, 1).to_f32(), 3.5);
     }
 
     #[test]

@@ -16,11 +16,14 @@
 //! regression this suite exists to catch — see
 //! `recovery_beats_plain_fp16_by_an_order_of_magnitude`.
 
+use sgemm_cube::coordinator::server::{GemmService, ServiceConfig};
+use sgemm_cube::gemm::backend::Backend;
 use sgemm_cube::gemm::blocked::{
     cube_gemm_blocked, cube_gemm_blocked_overlapped, cube_gemm_blocked_overlapped_ab,
-    cube_gemm_prepacked, gemm_prepacked_overlapped, gemm_prepacked_overlapped_ab, hgemm_blocked,
-    sgemm_blocked,
+    cube_gemm_prepacked, family_gemm_blocked, gemm_prepacked_overlapped,
+    gemm_prepacked_overlapped_ab, hgemm_blocked, sgemm_blocked,
 };
+use sgemm_cube::softfloat::family::SplitSpec;
 use sgemm_cube::gemm::cube::{cube_gemm, Accumulation};
 use sgemm_cube::gemm::dgemm::dgemm_of_f32;
 use sgemm_cube::gemm::error::{max_elementwise_error, relative_error};
@@ -80,6 +83,111 @@ fn cube_paths_hold_22_bit_recovery_across_the_regime_table() {
             );
         }
     }
+}
+
+/// BF16×2 tolerance: ~16 recovered bits per product (2×8 significand
+/// bits, residual truncation at 2^-16) plus FP32 chain accumulation.
+fn tol_bf16x2(k: usize) -> f64 {
+    16.0 * 2f64.powi(-16) + (k as f64 + 16.0) * 2f64.powi(-24)
+}
+
+/// BF16×3 tolerance: the three-component split is *exact* for normal
+/// f32 (3×8 ≥ 24 significand bits) and every kept product is exact in
+/// FP32, so only chain accumulation remains — FP32-class, ≥ 24 bits
+/// per product.
+fn tol_bf16x3(k: usize) -> f64 {
+    4.0 * (k as f64 + 16.0) * 2f64.powi(-24)
+}
+
+#[test]
+fn family_tiers_hold_their_bounds_across_the_regime_table() {
+    // Per-tier derived bounds over fig8's regime table: FP16×2 ≈ 22
+    // bits inside the Eq. (6) window (identical to the cube suite
+    // above — the N = 2 FP16 spec *is* that engine), BF16×2 ≈ 16 bits,
+    // BF16×3 ≥ 24 bits.
+    for &(e, m, k, n) in REGIMES {
+        let mut rng = Rng::new(9400 + e.unsigned_abs() as u64);
+        let a = Matrix::random_nonneg(m, k, e, &mut rng);
+        let b = Matrix::random_nonneg(k, n, e, &mut rng);
+        let c_ref = dgemm_of_f32(&a, &b);
+        let tiers = [
+            ("fp16x2", SplitSpec::fp16x2(SplitConfig::with_scale(12)), tol_cube(k)),
+            ("bf16x2", SplitSpec::bf16x2(), tol_bf16x2(k)),
+            ("bf16x3", SplitSpec::bf16x3(), tol_bf16x3(k)),
+        ];
+        for (name, spec, tol) in tiers {
+            let c = family_gemm_blocked(&a, &b, spec);
+            let err = max_elementwise_error(&c_ref, &c.to_f64());
+            assert!(
+                err <= tol,
+                "{name} at e={e} ({m}x{k}x{n}): max elementwise rel err {err:.3e} above \
+                 its derived bound {tol:.3e}"
+            );
+        }
+    }
+}
+
+#[test]
+fn bf16_tiers_hold_their_bounds_outside_the_fp16_window() {
+    // The BF16 tiers' full-range claim: the same bounds hold at
+    // exponents the scaled-FP16 scheme cannot represent at all. k is
+    // kept small so the 2^-16-scale operand truncation of the 2-way
+    // split stays well above the shared f32 accumulation floor
+    // (~2^-24·√k), which at deep k narrows the measured gap between
+    // the tiers to the point where a ratio assertion gets noisy.
+    for e in [-30, 20, 45] {
+        let (m, k, n) = (16, 12, 16);
+        let mut rng = Rng::new(9500 + e.unsigned_abs() as u64);
+        let a = Matrix::random_nonneg(m, k, e, &mut rng);
+        let b = Matrix::random_nonneg(k, n, e, &mut rng);
+        let c_ref = dgemm_of_f32(&a, &b);
+        let e2 =
+            max_elementwise_error(&c_ref, &family_gemm_blocked(&a, &b, SplitSpec::bf16x2()).to_f64());
+        let e3 =
+            max_elementwise_error(&c_ref, &family_gemm_blocked(&a, &b, SplitSpec::bf16x3()).to_f64());
+        assert!(e2 <= tol_bf16x2(k), "bf16x2 at e={e}: {e2:.3e}");
+        assert!(e3 <= tol_bf16x3(k), "bf16x3 at e={e}: {e3:.3e}");
+        assert!(e3 < e2 / 8.0, "the third component must buy ≥ 3 bits: {e3:.3e} vs {e2:.3e}");
+    }
+}
+
+#[test]
+fn bf16x3_through_the_server_beats_the_fp32_tier() {
+    // Acceptance: a tight-budget request routes to the six-pass BF16×3
+    // cascade, whose measured accuracy beats the FP32 tier. The
+    // operands are drawn from one binade ([1, 2)) with k ≤ 64 so the
+    // win is structural, not statistical: every BF16 component product
+    // carries ≤ 16 significant bits and the dominant high×high plane
+    // accumulates *exactly* in f32 (16 + log2 k + carry ≤ 24 bits),
+    // leaving the cascade only its final combine roundings — while
+    // FP32 rounds every 46-bit product and every partial sum. On
+    // unstructured operands both paths sit on the same f32
+    // accumulation-noise floor and neither reliably beats the other.
+    // And the policy only picks the cascade when the budget demands
+    // it: a budget the cube can meet stays on the cube.
+    let svc = GemmService::start(ServiceConfig::default());
+    let mut rng = Rng::new(9600);
+    let (m, k, n) = (24, 48, 24);
+    let a = Matrix::from_fn(m, k, |_, _| rng.f32_range(1.0, 2.0));
+    let b = Matrix::from_fn(k, n, |_, _| rng.f32_range(1.0, 2.0));
+    let c_ref = dgemm_of_f32(&a, &b);
+
+    let r3 = svc
+        .gemm_blocking_with_precision(a.clone(), b.clone(), None, Some(1e-7))
+        .expect("submit");
+    assert_eq!(r3.backend, Backend::Bf16x3, "budget tighter than the cube's ~22 bits");
+    let e3 = max_elementwise_error(&c_ref, &r3.result.unwrap().to_f64());
+
+    let r32 = svc.gemm_blocking(a.clone(), b.clone(), Some(Backend::Fp32)).expect("submit");
+    let e32 = max_elementwise_error(&c_ref, &r32.result.unwrap().to_f64());
+    assert!(e3 < e32, "bf16x3 {e3:.3e} must beat fp32 {e32:.3e}");
+    assert!(e3 <= tol_bf16x3(k), "bf16x3 {e3:.3e} above its bound");
+
+    let r_cube = svc
+        .gemm_blocking_with_precision(a.clone(), b.clone(), None, Some(1e-6))
+        .expect("submit");
+    assert_eq!(r_cube.backend, Backend::CubeTermwise, "satisfiable budgets stay off the cascade");
+    svc.shutdown();
 }
 
 #[test]

@@ -25,6 +25,7 @@ use std::sync::{Mutex, MutexGuard};
 
 use sgemm_cube::gemm::blocked::{
     cube_gemm_blocked, cube_gemm_blocked_overlapped, cube_gemm_blocked_overlapped_ab,
+    family_gemm_blocked, family_gemm_blocked_overlapped, family_gemm_blocked_overlapped_ab,
     gemm_prepacked, gemm_prepacked_overlapped, gemm_prepacked_overlapped_ab, hgemm_blocked,
     hgemm_blocked_overlapped, hgemm_blocked_overlapped_ab, host_block, sgemm_blocked,
     sgemm_blocked_overlapped, sgemm_blocked_overlapped_ab,
@@ -33,6 +34,7 @@ use sgemm_cube::gemm::dgemm::dgemm_of_f32;
 use sgemm_cube::gemm::kernels::{active_lane, detect_lane, force_lane, Lane};
 use sgemm_cube::gemm::prepacked::{PrepackPath, PrepackedMatrix};
 use sgemm_cube::gemm::sgemm::sgemm;
+use sgemm_cube::softfloat::family::SplitSpec;
 use sgemm_cube::softfloat::split::SplitConfig;
 use sgemm_cube::util::mat::Matrix;
 use sgemm_cube::util::rng::Rng;
@@ -137,6 +139,60 @@ fn every_available_lane_is_bit_identical_on_the_prepacked_paths() {
                 let got = gemm_prepacked_overlapped_ab(&a, &pp, depth);
                 assert_bits(&want, &got, &ctx(&format!("ab d{depth}")));
             }
+        }
+    }
+}
+
+#[test]
+fn family_fp16x2_is_bit_identical_to_the_cube_engine_on_every_lane() {
+    // The tentpole's anchor, pinned per lane: the N = 2 FP16 spec *is*
+    // the pre-family cube engine — the family entry points delegate to
+    // it structurally, and even the generic N-term machinery (the
+    // `Family` prepack format → `pack_b_multi` panels → `kernel_family`
+    // dispatch) reproduces its bits, because multi-packing at N = 2
+    // lays out the same bytes as dual-packing and `kernel_family`
+    // routes `ncomp == 2` onto `kernel_cube`.
+    let bk = host_block().bk;
+    let cfg = SplitConfig::default();
+    let spec = SplitSpec::fp16x2(cfg);
+    for lane in Lane::ALL {
+        let Some(_pin) = ForcedLane::pin(lane) else { continue };
+        for (sh, (m, k, n)) in [(17, bk - 1, 23), (9, 2 * bk + 5, 33)].into_iter().enumerate() {
+            let (a, b) = operands(m, k, n, 600 + sh as u64);
+            let want = cube_gemm_blocked(&a, &b, cfg);
+            let ctx = |s: &str| format!("{lane} fp16x2-family {s} ({m},{k},{n})");
+            assert_bits(&want, &family_gemm_blocked(&a, &b, spec), &ctx("serial"));
+            assert_bits(&want, &family_gemm_blocked_overlapped(&a, &b, spec), &ctx("overlap-b"));
+            let got = family_gemm_blocked_overlapped_ab(&a, &b, spec, 3);
+            assert_bits(&want, &got, &ctx("overlap-ab d3"));
+            // Generic family panels vs the dedicated cube panels.
+            let pp = PrepackedMatrix::prepack(&b, PrepackPath::Family(spec));
+            assert_bits(&want, &gemm_prepacked(&a, &pp), &ctx("prepacked"));
+            let got = gemm_prepacked_overlapped_ab(&a, &pp, 2);
+            assert_bits(&want, &got, &ctx("prepacked ab d2"));
+        }
+    }
+}
+
+#[test]
+fn bf16_tiers_are_bit_identical_across_schedules_on_every_lane() {
+    let bk = host_block().bk;
+    let (m, k, n) = (11, 2 * bk + 3, 29);
+    for lane in Lane::ALL {
+        let Some(_pin) = ForcedLane::pin(lane) else { continue };
+        let (a, b) = operands(m, k, n, 700);
+        for spec in [SplitSpec::bf16x2(), SplitSpec::bf16x3()] {
+            let want = family_gemm_blocked(&a, &b, spec);
+            let ctx = |s: &str| format!("{lane} {} {s}", spec.name());
+            assert_bits(&want, &family_gemm_blocked_overlapped(&a, &b, spec), &ctx("overlap-b"));
+            for depth in [1usize, 3] {
+                let got = family_gemm_blocked_overlapped_ab(&a, &b, spec, depth);
+                assert_bits(&want, &got, &ctx(&format!("overlap-ab d{depth}")));
+            }
+            let pp = PrepackedMatrix::prepack(&b, PrepackPath::Family(spec));
+            assert_bits(&want, &gemm_prepacked(&a, &pp), &ctx("prepacked"));
+            let got = gemm_prepacked_overlapped_ab(&a, &pp, 2);
+            assert_bits(&want, &got, &ctx("prepacked ab d2"));
         }
     }
 }

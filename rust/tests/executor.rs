@@ -21,7 +21,8 @@ use sgemm_cube::coordinator::server::{GemmService, ServiceConfig};
 use sgemm_cube::exec::pool::Pool;
 use sgemm_cube::gemm::backend::{Backend, Schedule};
 use sgemm_cube::gemm::blocked::{
-    cube_gemm_blocked, gemm_prepacked, gemm_prepacked_overlapped_ab, hgemm_blocked, sgemm_blocked,
+    cube_gemm_blocked, family_gemm_blocked, gemm_prepacked, gemm_prepacked_overlapped_ab,
+    hgemm_blocked, sgemm_blocked,
 };
 use sgemm_cube::gemm::cache::{PrepackCache, PrepackKey};
 use sgemm_cube::gemm::prepacked::{PrepackPath, PrepackedMatrix};
@@ -37,6 +38,9 @@ fn serial_reference(a: &Matrix<f32>, b: &Matrix<f32>, backend: Backend, s_b: i32
         Backend::Fp16 => hgemm_blocked(a, b),
         Backend::CubeElementwise | Backend::CubeTermwise => {
             cube_gemm_blocked(a, b, SplitConfig::with_scale(s_b))
+        }
+        Backend::Bf16x2 | Backend::Bf16x3 => {
+            family_gemm_blocked(a, b, backend.family_spec().expect("bf16 tier"))
         }
     }
 }

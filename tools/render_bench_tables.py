@@ -6,8 +6,8 @@ measurement to BENCH_gemm.json at the repo root; the CI bench-smoke job
 uploads the same file as a workflow artifact on every PR. This script
 turns that JSON into the markdown rows EXPERIMENTS.md keeps in
 §Perf-iteration-log (item 3), §Serving-amortization, §Resilience,
-§Overlap, §Executor and §Kernel-dispatch, so filling the tables is
-mechanical:
+§Overlap, §Executor, §Kernel-dispatch and §Precision-family, so filling
+the tables is mechanical:
 
     python3 tools/render_bench_tables.py [BENCH_gemm.json]
 
@@ -154,6 +154,17 @@ def main():
     print(f"| `kernel/mr` × `kernel/nr` | {tile} | micro-tile, shared by all lanes |")
     print(f"| `host/sgemm_blocked_scalar` | {fmt_s(med('host/sgemm_blocked_scalar/'))} | blocked fp32, scalar lane forced |")
     print(f"| `blocked/simd_speedup` | {fmt_x(med('blocked/simd_speedup'))} | gate: ≥ 2× when avx2 detected |")
+
+    print("\n## §Precision-family\n")
+    print("| record | value | note |")
+    print("|--------|-------|------|")
+    print(f"| `precision/fp16x2` | {fmt_s(med('precision/fp16x2/'))} | family engine, N = 2 FP16 (bit-identical to the cube path) |")
+    print(f"| `precision/fp16x2_bits` | {fmt_f(med('precision/fp16x2_bits'), 1)} | derived bound ≈ 22 in-window; CI floor 18 |")
+    print(f"| `precision/bf16x2` | {fmt_s(med('precision/bf16x2/'))} | full-exponent-range BF16 pair |")
+    print(f"| `precision/bf16x2_bits` | {fmt_f(med('precision/bf16x2_bits'), 1)} | derived bound ≈ 16; CI floor 12 |")
+    print(f"| `precision/bf16x3` | {fmt_s(med('precision/bf16x3/'))} | exact 3-way split, accumulation-limited |")
+    print(f"| `precision/bf16x3_bits` | {fmt_f(med('precision/bf16x3_bits'), 1)} | derived bound ≥ 24; CI floor 18 |")
+    print(f"| `precision/frontier` | {fmt_x(med('precision/frontier'))} | bf16x3 cost vs fp16x2 on the same engine |")
 
 
 if __name__ == "__main__":
