@@ -42,7 +42,6 @@ use sgemm_cube::gemm::dgemm::dgemm_of_f32;
 use sgemm_cube::gemm::error::relative_error;
 use sgemm_cube::gemm::fast::cube_gemm_three_pass;
 use sgemm_cube::gemm::kernels::{detect_lane, force_lane, Lane};
-use sgemm_cube::gemm::pack::{MR, NR};
 use sgemm_cube::gemm::prepacked::{PrepackPath, PrepackedMatrix};
 use sgemm_cube::sim::blocking::{BlockConfig, GemmShape};
 use sgemm_cube::sim::chip::Chip;
@@ -98,16 +97,19 @@ fn main() {
 
     // ---- kernel dispatch: detected SIMD lane vs forced scalar ----
     // The sweeps dispatch per-lane micro-kernels (gemm::kernels):
-    // AVX2+FMA or NEON when the host supports them, portable scalar
-    // otherwise. Pinning the scalar lane on the same operands isolates
-    // the SIMD contribution; the detected lane is restored before every
-    // later measurement. kernel/lane records the detected lane's stable
-    // code (0 scalar / 1 avx2 / 2 neon) so the CI gate and the
-    // EXPERIMENTS table can condition on what the runner actually has.
+    // AVX-512F, AVX2+FMA or NEON when the host supports them, portable
+    // scalar otherwise. Pinning the scalar lane on the same operands
+    // isolates the SIMD contribution; the detected lane is restored
+    // before every later measurement. kernel/lane records the detected
+    // lane's stable code (0 scalar / 1 avx2 / 2 neon / 3 avx512) and
+    // kernel/mr / kernel/nr its register-derived micro-tile, so the CI
+    // gate and the EXPERIMENTS table can condition on what the runner
+    // actually has.
     let lane = detect_lane();
+    let (lane_mr, lane_nr) = lane.tile_dims();
     bench.record_scalar("kernel/lane", lane.code() as f64);
-    bench.record_scalar("kernel/mr", MR as f64);
-    bench.record_scalar("kernel/nr", NR as f64);
+    bench.record_scalar("kernel/mr", lane_mr as f64);
+    bench.record_scalar("kernel/nr", lane_nr as f64);
     assert!(force_lane(Lane::Scalar), "the scalar lane is always available");
     let scalar_median = bench
         .bench(&format!("host/sgemm_blocked_scalar/{n}^3"), Some(flops), || sgemm_blocked(&a, &b))
@@ -116,11 +118,41 @@ fn main() {
     assert!(force_lane(lane), "the detected lane must be forceable");
     let simd_speedup = scalar_median / sgemm_detected_median;
     println!(
-        "\nkernel dispatch: lane '{lane}' (micro-tile {MR}x{NR}); \
+        "\nkernel dispatch: lane '{lane}' (micro-tile {lane_mr}x{lane_nr}); \
          detected vs forced-scalar fp32 speedup: {simd_speedup:.2}x \
-         (CI gates ≥ 2x only when the avx2 lane is detected)"
+         (CI gates ≥ 2x on avx2 and ≥ 1.8x on avx512 runners)"
     );
     bench.record_scalar(&format!("blocked/simd_speedup/{n}^3"), simd_speedup);
+
+    // ---- wide lane: forced AVX-512 vs forced AVX2 on the same host ----
+    // On AVX-512F hosts, pin both x86 lanes on identical operands: the
+    // wide 8×16 micro-tile must not lose to the narrow 4×8 one (the CI
+    // acceptance for the wide lane). Skipped silently elsewhere — the
+    // records are simply absent and the renderer shows `_pending_`.
+    if Lane::Avx512.is_available() {
+        assert!(force_lane(Lane::Avx512));
+        let avx512_median = bench
+            .bench(&format!("host/sgemm_blocked_avx512/{n}^3"), Some(flops), || {
+                sgemm_blocked(&a, &b)
+            })
+            .seconds
+            .median;
+        if Lane::Avx2.is_available() {
+            assert!(force_lane(Lane::Avx2));
+            let avx2_median = bench
+                .bench(&format!("host/sgemm_blocked_avx2/{n}^3"), Some(flops), || {
+                    sgemm_blocked(&a, &b)
+                })
+                .seconds
+                .median;
+            let wide_speedup = avx2_median / avx512_median;
+            println!(
+                "wide-lane dispatch: forced avx512 vs forced avx2 fp32: {wide_speedup:.2}x"
+            );
+            bench.record_scalar(&format!("blocked/avx512_vs_avx2/{n}^3"), wide_speedup);
+        }
+        assert!(force_lane(lane), "the detected lane must be restorable");
+    }
 
     // ---- precision-emulation family: cost vs measured bits per tier ----
     // One engine (family_gemm_blocked) serves every tier; the fp16x2
@@ -359,6 +391,25 @@ fn main() {
         "pool dispatch round-trip ({mworkers} workers): {:.0} ns per run_chunks",
         spawn_overhead * 1e9
     );
+
+    // ---- work-stealing instrumentation on the global pool ----
+    // Every sweep above enlisted the global pool's per-worker queues, so
+    // its cumulative counters describe this whole run: steal_ratio is
+    // steals / (steals + hungry parks) — how often an idle scan found a
+    // backlog to take versus going to sleep. On a 1-worker pool both
+    // counters stay ~0 and the ratio records 0.
+    let (steals, steal_fails) = (gpool.steals(), gpool.steal_fails());
+    let steal_ratio = if steals + steal_fails == 0 {
+        0.0
+    } else {
+        steals as f64 / (steals + steal_fails) as f64
+    };
+    println!(
+        "work stealing on the global pool: {steals} steals, {steal_fails} hungry parks \
+         (ratio {steal_ratio:.3})"
+    );
+    bench.record_scalar("exec/steals", steals as f64);
+    bench.record_scalar("exec/steal_ratio", steal_ratio);
 
     // ---- measured stage breakdown → recalibrated sim::pipeline α ----
     // The instrumented single-threaded pass times each stage. Deriving

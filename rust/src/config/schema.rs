@@ -74,10 +74,11 @@ impl ServerConfig {
             sc.schedule_prepacked = schedule;
         }
         // Per-path override: registered-weight (prepacked) requests can
-        // run a different host schedule than raw operands — e.g.
-        // `schedule_prepacked = overlap-ab` routes the per-request A
-        // stripe through the prefetch ring for kernel-only serving
-        // while inline requests stay serial.
+        // run a different host schedule than raw operands. The default
+        // is already `overlap-ab` (the A-stripe prefetch ring is the
+        // measured win on the serving shape), so this key is mostly
+        // used to *back off* — `schedule_prepacked = serial` — or to
+        // diverge from a common `schedule` key, which sets both paths.
         if let Some(s) = cfg.get("server", "schedule_prepacked") {
             sc.schedule_prepacked = Schedule::parse(s).ok_or_else(|| {
                 anyhow::anyhow!(
@@ -266,6 +267,13 @@ mod tests {
         // Unknown values hard-error like the common key.
         let bad = ConfigFile::parse("[server]\nschedule_prepacked = warp-speed").unwrap();
         assert!(ServerConfig::from_config(&bad).is_err());
+        // With no keys at all the prepacked path defaults to the
+        // A-stripe prefetch ring, and the per-path key can back it off.
+        let sc = ServerConfig::from_config(&ConfigFile::parse("").unwrap()).unwrap().0;
+        assert_eq!(sc.schedule_prepacked, Schedule::OverlapAB);
+        let cfg = ConfigFile::parse("[server]\nschedule_prepacked = serial").unwrap();
+        let sc = ServerConfig::from_config(&cfg).unwrap().0;
+        assert_eq!(sc.schedule_prepacked, Schedule::Serial);
     }
 
     #[test]

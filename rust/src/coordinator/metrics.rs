@@ -1,6 +1,9 @@
 //! Service metrics: request counts, latency distribution (exact summary
-//! + fixed-bucket histogram with p50/p95/p99), throughput, and the
-//! resilience counters (shed / timeout / retry / failover).
+//! + fixed-bucket histogram with p50/p95/p99), throughput, the
+//! resilience counters (shed / timeout / retry / failover), and the
+//! global pool's work-stealing counters (sampled at report time from
+//! [`crate::exec::pool::global`] — they are process-wide, not
+//! per-service, so concurrent services see the same stream).
 
 use std::sync::Mutex;
 use std::time::Instant;
@@ -129,6 +132,13 @@ pub struct MetricsReport {
     pub flops_per_sec: f64,
     /// Mean requests per batch.
     pub mean_batch_size: f64,
+    /// Tasks stolen from a peer worker's queue on the process-wide pool
+    /// ([`crate::exec::pool::Pool::steals`]; cumulative since process
+    /// start, sampled at report time).
+    pub pool_steals: u64,
+    /// Idle scans on the process-wide pool that parked a worker without
+    /// work to run or steal ([`crate::exec::pool::Pool::steal_fails`]).
+    pub pool_steal_fails: u64,
 }
 
 impl Metrics {
@@ -202,6 +212,8 @@ impl Metrics {
             failovers: g.failovers,
             flops_per_sec: g.flops / window,
             mean_batch_size: if g.batches == 0 { 0.0 } else { g.requests as f64 / g.batches as f64 },
+            pool_steals: crate::exec::pool::global().steals(),
+            pool_steal_fails: crate::exec::pool::global().steal_fails(),
         }
     }
 }
@@ -219,7 +231,7 @@ impl MetricsReport {
             _ => "no-latency".into(),
         };
         format!(
-            "requests={} batches={} (mean {:.1}/batch) errors={} shed={} timeouts={} retries={} failovers={} {} throughput={:.2} GFLOP/s",
+            "requests={} batches={} (mean {:.1}/batch) errors={} shed={} timeouts={} retries={} failovers={} steals={} steal_fails={} {} throughput={:.2} GFLOP/s",
             self.requests,
             self.batches,
             self.mean_batch_size,
@@ -228,6 +240,8 @@ impl MetricsReport {
             self.timeouts,
             self.retries,
             self.failovers,
+            self.pool_steals,
+            self.pool_steal_fails,
             lat,
             self.flops_per_sec / 1e9
         )
@@ -319,6 +333,16 @@ mod tests {
         assert!(line.contains("retries=3"), "{line}");
         assert!(line.contains("failovers=1"), "{line}");
         assert!(line.contains("p99≤"), "{line}");
+    }
+
+    #[test]
+    fn pool_steal_counters_reach_report_and_line() {
+        // The counters are process-wide (shared global pool), so other
+        // tests may have advanced them — assert presence, not values.
+        let r = Metrics::new().report();
+        let line = r.line();
+        assert!(line.contains(" steals="), "{line}");
+        assert!(line.contains(&format!(" steal_fails={} ", r.pool_steal_fails)), "{line}");
     }
 
     #[test]

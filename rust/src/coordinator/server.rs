@@ -119,10 +119,14 @@ pub struct ServiceConfig {
     /// overlapped schedules route through the A-stripe prefetch ring so
     /// batch tasks run kernel-only sweeps
     /// ([`crate::gemm::blocked::gemm_prepacked_scheduled`]).
-    /// Bit-identical to `serial` either way. Defaults to the same
-    /// env-derived schedule as [`ServiceConfig::schedule`]; the
-    /// `[server] schedule` key sets both paths and
-    /// `[server] schedule_prepacked` overrides this one.
+    /// Bit-identical to `serial` either way. **Defaults to
+    /// [`Schedule::OverlapAB`]** — on the serving shape (cached B
+    /// panels, small activations) the A-stripe prefetch ring is the
+    /// measured win with no numerics cost, so it is on out of the box.
+    /// The `[server] schedule` key sets both paths and
+    /// `[server] schedule_prepacked` overrides this one; inline
+    /// requests ([`ServiceConfig::schedule`]) keep the env-derived
+    /// default.
     pub schedule_prepacked: Schedule,
     /// Prefetch-ring depth for [`Schedule::OverlapAB`]
     /// (`[server] pipeline_depth`; depth 2 = classic double buffer).
@@ -162,7 +166,7 @@ impl Default for ServiceConfig {
             n_workers: default_workers(),
             prepack_capacity: DEFAULT_PREPACK_CAPACITY,
             schedule: default_schedule(),
-            schedule_prepacked: default_schedule(),
+            schedule_prepacked: Schedule::OverlapAB,
             pipeline_depth: DEFAULT_PIPELINE_DEPTH,
             pool_threads: 0,
             request_timeout: None,
@@ -797,6 +801,7 @@ fn execute_request(
             n: w.matrix.cols(),
             backend,
             scale_exp,
+            lane: crate::gemm::kernels::active_lane(),
             col0: 0,
         };
         let packed = ctx
@@ -840,8 +845,10 @@ mod tests {
         assert!(d.prepack_capacity > 0);
         assert_eq!(d.pool_threads, 0, "default: shared global pool");
         assert_eq!(d.pipeline_depth, DEFAULT_PIPELINE_DEPTH);
-        // Both paths start from the same env-derived schedule.
-        assert_eq!(d.schedule_prepacked, d.schedule);
+        // Inline requests follow the env-derived schedule; the
+        // prepacked path defaults to the A-stripe prefetch ring.
+        assert_eq!(d.schedule, default_schedule());
+        assert_eq!(d.schedule_prepacked, Schedule::OverlapAB);
         // Resilience knobs: opt-in deadlines/admission/sharding, a small
         // default retry budget for transient failures.
         assert_eq!(d.request_timeout, None);

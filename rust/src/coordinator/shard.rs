@@ -407,6 +407,7 @@ impl ShardRouter {
             n: slice.matrix.cols(),
             backend: exec.backend,
             scale_exp: exec.scale_exp,
+            lane: crate::gemm::kernels::active_lane(),
             col0: slice.n0,
         };
         catch_unwind(AssertUnwindSafe(|| {

@@ -7,9 +7,13 @@
 //!
 //! Schedules, in increasing pipeline depth (all bit-identical *per
 //! kernel lane* — same pack routines, same `b_n → b_k` consumption
-//! order, same shared sweeps; the ring stages packed panels only, which
-//! are lane-independent, and each sweep resolves its
-//! [`crate::gemm::kernels`] lane exactly once):
+//! order, same shared sweeps; each driver resolves its
+//! [`crate::gemm::kernels`] lane exactly once and uses it for **both**
+//! the panel interleave it packs — panel geometry follows the lane's
+//! micro-tile ([`crate::gemm::kernels::Lane::tile_dims`]) — and the
+//! sweeps that consume those panels, so a run can never mix
+//! interleaves; prepacked operands are consumed with the lane recorded
+//! at prepack time):
 //!
 //! * **Serial** — pack then sweep on the critical path
 //!   (`gemm/blocked.rs` serial drivers).
@@ -65,6 +69,7 @@ use crate::gemm::blocked::{
     exec_bm, host_block, sweep_rows_cube, sweep_rows_cube_packed, sweep_rows_f32,
     sweep_rows_f32_packed, sweep_rows_family, sweep_rows_family_packed,
 };
+use crate::gemm::kernels;
 use crate::gemm::pack;
 use crate::gemm::prepacked::PrepackedMatrix;
 use crate::softfloat::family::SplitSpec;
@@ -129,13 +134,14 @@ pub(crate) enum PanelSource<'a> {
 }
 
 impl PanelSource<'_> {
-    /// Pack `job`'s B block into `out` — exactly what the serial drivers
-    /// call, so prefetched panels are byte-identical.
-    pub(crate) fn pack(&self, job: &PanelJob, out: &mut Vec<f32>) {
+    /// Pack `job`'s B block into `out` with the panel width `nr` of the
+    /// consuming lane — exactly what the serial drivers call, so
+    /// prefetched panels are byte-identical.
+    pub(crate) fn pack(&self, job: &PanelJob, nr: usize, out: &mut Vec<f32>) {
         match self {
-            PanelSource::Single(b) => pack::pack_b(b, job.p0, job.kc, job.j0, job.nc, out),
+            PanelSource::Single(b) => pack::pack_b(b, job.p0, job.kc, job.j0, job.nc, nr, out),
             PanelSource::Dual { high, low } => {
-                pack::pack_b_dual(high, low, job.p0, job.kc, job.j0, job.nc, out)
+                pack::pack_b_dual(high, low, job.p0, job.kc, job.j0, job.nc, nr, out)
             }
         }
     }
@@ -160,8 +166,9 @@ pub struct PanelSlot {
 
 /// Pack the full A row-block stripe of one k block, segment per
 /// executed row block — byte-identical per segment to the `pack_a` the
-/// serial sweeps perform themselves.
-fn pack_a_stripe(a: &Matrix<f32>, bm: usize, p0: usize, kc: usize, slot: &mut PanelSlot) {
+/// serial sweeps perform themselves (`mr` is the consuming lane's panel
+/// height).
+fn pack_a_stripe(a: &Matrix<f32>, bm: usize, p0: usize, kc: usize, mr: usize, slot: &mut PanelSlot) {
     let m = a.rows();
     slot.a.clear();
     slot.a_off.clear();
@@ -169,7 +176,7 @@ fn pack_a_stripe(a: &Matrix<f32>, bm: usize, p0: usize, kc: usize, slot: &mut Pa
     let mut scratch = std::mem::take(&mut slot.scratch);
     for i0 in (0..m).step_by(bm) {
         let mc = bm.min(m - i0);
-        pack::pack_a(a, i0, mc, p0, kc, &mut scratch);
+        pack::pack_a(a, i0, mc, p0, kc, mr, &mut scratch);
         slot.a.extend_from_slice(&scratch);
         slot.a_off.push(slot.a.len());
     }
@@ -178,12 +185,14 @@ fn pack_a_stripe(a: &Matrix<f32>, bm: usize, p0: usize, kc: usize, slot: &mut Pa
 
 /// Dual-component counterpart of [`pack_a_stripe`] (`pack_a_dual` per
 /// row block).
+#[allow(clippy::too_many_arguments)]
 fn pack_a_stripe_dual(
     ah: &Matrix<f32>,
     al: &Matrix<f32>,
     bm: usize,
     p0: usize,
     kc: usize,
+    mr: usize,
     slot: &mut PanelSlot,
 ) {
     let m = ah.rows();
@@ -193,7 +202,7 @@ fn pack_a_stripe_dual(
     let mut scratch = std::mem::take(&mut slot.scratch);
     for i0 in (0..m).step_by(bm) {
         let mc = bm.min(m - i0);
-        pack::pack_a_dual(ah, al, i0, mc, p0, kc, &mut scratch);
+        pack::pack_a_dual(ah, al, i0, mc, p0, kc, mr, &mut scratch);
         slot.a.extend_from_slice(&scratch);
         slot.a_off.push(slot.a.len());
     }
@@ -207,6 +216,7 @@ fn pack_a_stripe_multi(
     bm: usize,
     p0: usize,
     kc: usize,
+    mr: usize,
     slot: &mut PanelSlot,
 ) {
     let m = a_comps[0].rows();
@@ -216,7 +226,7 @@ fn pack_a_stripe_multi(
     let mut scratch = std::mem::take(&mut slot.scratch);
     for i0 in (0..m).step_by(bm) {
         let mc = bm.min(m - i0);
-        pack::pack_a_multi(a_comps, i0, mc, p0, kc, &mut scratch);
+        pack::pack_a_multi(a_comps, i0, mc, p0, kc, mr, &mut scratch);
         slot.a.extend_from_slice(&scratch);
         slot.a_off.push(slot.a.len());
     }
@@ -489,7 +499,11 @@ fn gemm_pipeline_single(a: &Matrix<f32>, b: &Matrix<f32>, ab: bool, depth: usize
         return c;
     }
     let block = host_block();
-    let bm = exec_bm(m, block.bm);
+    // One lane per driver call: it fixes the interleave the prefetcher
+    // packs *and* the kernels the sweeps dispatch (module docs).
+    let lane = kernels::active_lane();
+    let (mr, nr) = lane.tile_dims();
+    let bm = exec_bm(m, block.bm, mr);
     let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
     let jobs = panel_jobs(n, k, block.bn, block.bk);
     if ab {
@@ -498,12 +512,14 @@ fn gemm_pipeline_single(a: &Matrix<f32>, b: &Matrix<f32>, ab: bool, depth: usize
             jobs.len(),
             |i: usize, slot: &mut PanelSlot| {
                 let job = &jobs[i];
-                pack::pack_b(b, job.p0, job.kc, job.j0, job.nc, &mut slot.b);
-                pack_a_stripe(a, bm, job.p0, job.kc, slot);
+                pack::pack_b(b, job.p0, job.kc, job.j0, job.nc, nr, &mut slot.b);
+                pack_a_stripe(a, bm, job.p0, job.kc, mr, slot);
             },
             |i: usize, slot: &PanelSlot| {
                 let job = &jobs[i];
-                sweep_rows_f32_packed(&slot.a, &slot.a_off, m, &slot.b, &cp, n, bm, job.j0, job.kc);
+                sweep_rows_f32_packed(
+                    &slot.a, &slot.a_off, m, &slot.b, &cp, n, bm, job.j0, job.kc, lane,
+                );
             },
         );
     } else {
@@ -512,11 +528,11 @@ fn gemm_pipeline_single(a: &Matrix<f32>, b: &Matrix<f32>, ab: bool, depth: usize
             jobs.len(),
             |i: usize, slot: &mut PanelSlot| {
                 let job = &jobs[i];
-                pack::pack_b(b, job.p0, job.kc, job.j0, job.nc, &mut slot.b);
+                pack::pack_b(b, job.p0, job.kc, job.j0, job.nc, nr, &mut slot.b);
             },
             |i: usize, slot: &PanelSlot| {
                 let job = &jobs[i];
-                sweep_rows_f32(a, &slot.b, &cp, n, bm, job.j0, job.p0, job.kc);
+                sweep_rows_f32(a, &slot.b, &cp, n, bm, job.j0, job.p0, job.kc, lane);
             },
         );
     }
@@ -564,7 +580,9 @@ fn cube_pipeline_dual(
         return c;
     }
     let block = host_block();
-    let bm = exec_bm(m, block.bm);
+    let lane = kernels::active_lane();
+    let (mr, nr) = lane.tile_dims();
+    let bm = exec_bm(m, block.bm, mr);
     let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
     let jobs = panel_jobs(n, k, block.bn, block.bk);
     if ab {
@@ -573,13 +591,13 @@ fn cube_pipeline_dual(
             jobs.len(),
             |i: usize, slot: &mut PanelSlot| {
                 let job = &jobs[i];
-                pack::pack_b_dual(bh, bl, job.p0, job.kc, job.j0, job.nc, &mut slot.b);
-                pack_a_stripe_dual(ah, al, bm, job.p0, job.kc, slot);
+                pack::pack_b_dual(bh, bl, job.p0, job.kc, job.j0, job.nc, nr, &mut slot.b);
+                pack_a_stripe_dual(ah, al, bm, job.p0, job.kc, mr, slot);
             },
             |i: usize, slot: &PanelSlot| {
                 let job = &jobs[i];
                 sweep_rows_cube_packed(
-                    &slot.a, &slot.a_off, m, &slot.b, &cp, n, bm, job.j0, job.kc, inv_sf,
+                    &slot.a, &slot.a_off, m, &slot.b, &cp, n, bm, job.j0, job.kc, inv_sf, lane,
                 );
             },
         );
@@ -589,11 +607,11 @@ fn cube_pipeline_dual(
             jobs.len(),
             |i: usize, slot: &mut PanelSlot| {
                 let job = &jobs[i];
-                pack::pack_b_dual(bh, bl, job.p0, job.kc, job.j0, job.nc, &mut slot.b);
+                pack::pack_b_dual(bh, bl, job.p0, job.kc, job.j0, job.nc, nr, &mut slot.b);
             },
             |i: usize, slot: &PanelSlot| {
                 let job = &jobs[i];
-                sweep_rows_cube(ah, al, &slot.b, &cp, n, bm, job.j0, job.p0, job.kc, inv_sf);
+                sweep_rows_cube(ah, al, &slot.b, &cp, n, bm, job.j0, job.p0, job.kc, inv_sf, lane);
             },
         );
     }
@@ -634,7 +652,9 @@ fn family_pipeline_multi(
         return c;
     }
     let block = host_block();
-    let bm = exec_bm(m, block.bm);
+    let lane = kernels::active_lane();
+    let (mr, nr) = lane.tile_dims();
+    let bm = exec_bm(m, block.bm, mr);
     let weights = spec.order_weights();
     let ncomp = spec.ncomp();
     let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
@@ -645,13 +665,14 @@ fn family_pipeline_multi(
             jobs.len(),
             |i: usize, slot: &mut PanelSlot| {
                 let job = &jobs[i];
-                pack::pack_b_multi(b_comps, job.p0, job.kc, job.j0, job.nc, &mut slot.b);
-                pack_a_stripe_multi(a_comps, bm, job.p0, job.kc, slot);
+                pack::pack_b_multi(b_comps, job.p0, job.kc, job.j0, job.nc, nr, &mut slot.b);
+                pack_a_stripe_multi(a_comps, bm, job.p0, job.kc, mr, slot);
             },
             |i: usize, slot: &PanelSlot| {
                 let job = &jobs[i];
                 sweep_rows_family_packed(
-                    &slot.a, &slot.a_off, m, &slot.b, &cp, n, bm, job.j0, job.kc, &weights, ncomp,
+                    &slot.a, &slot.a_off, m, &slot.b, &cp, n, bm, job.j0, job.kc, &weights,
+                    ncomp, lane,
                 );
             },
         );
@@ -661,12 +682,12 @@ fn family_pipeline_multi(
             jobs.len(),
             |i: usize, slot: &mut PanelSlot| {
                 let job = &jobs[i];
-                pack::pack_b_multi(b_comps, job.p0, job.kc, job.j0, job.nc, &mut slot.b);
+                pack::pack_b_multi(b_comps, job.p0, job.kc, job.j0, job.nc, nr, &mut slot.b);
             },
             |i: usize, slot: &PanelSlot| {
                 let job = &jobs[i];
                 sweep_rows_family(
-                    a_comps, &slot.b, &cp, n, bm, job.j0, job.p0, job.kc, &weights, ncomp,
+                    a_comps, &slot.b, &cp, n, bm, job.j0, job.p0, job.kc, &weights, ncomp, lane,
                 );
             },
         );
@@ -711,7 +732,11 @@ pub(crate) fn gemm_prepacked_ab_with_stats(
     if m == 0 || n == 0 || k == 0 {
         return (c, PrefetchStats::default());
     }
-    let bm = exec_bm(m, host_block().bm);
+    // Panels in `b` were interleaved for the lane recorded at prepack
+    // time; the A stripes and sweeps must use the same lane.
+    let lane = b.lane();
+    let (mr, _) = lane.tile_dims();
+    let bm = exec_bm(m, host_block().bm, mr);
     let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
     let (bk, bn) = (b.bk(), b.bn());
     let stats = run_prefetch_stats(
@@ -719,13 +744,24 @@ pub(crate) fn gemm_prepacked_ab_with_stats(
         b.k_blocks(),
         |pb: usize, slot: &mut PanelSlot| {
             let p0 = pb * bk;
-            pack_a_stripe(a, bm, p0, bk.min(k - p0), slot);
+            pack_a_stripe(a, bm, p0, bk.min(k - p0), mr, slot);
         },
         |pb: usize, slot: &PanelSlot| {
             let p0 = pb * bk;
             let kc = bk.min(k - p0);
             for (jb, j0) in (0..n).step_by(bn).enumerate() {
-                sweep_rows_f32_packed(&slot.a, &slot.a_off, m, b.panel(jb, pb), &cp, n, bm, j0, kc);
+                sweep_rows_f32_packed(
+                    &slot.a,
+                    &slot.a_off,
+                    m,
+                    b.panel(jb, pb),
+                    &cp,
+                    n,
+                    bm,
+                    j0,
+                    kc,
+                    lane,
+                );
             }
         },
     );
@@ -761,7 +797,9 @@ pub(crate) fn cube_prepacked_ab_with_stats(
     if m == 0 || n == 0 || k == 0 {
         return (c, PrefetchStats::default());
     }
-    let bm = exec_bm(m, host_block().bm);
+    let lane = b.lane();
+    let (mr, _) = lane.tile_dims();
+    let bm = exec_bm(m, host_block().bm, mr);
     let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
     let (bk, bn) = (b.bk(), b.bn());
     let stats = run_prefetch_stats(
@@ -769,14 +807,14 @@ pub(crate) fn cube_prepacked_ab_with_stats(
         b.k_blocks(),
         |pb: usize, slot: &mut PanelSlot| {
             let p0 = pb * bk;
-            pack_a_stripe_dual(ah, al, bm, p0, bk.min(k - p0), slot);
+            pack_a_stripe_dual(ah, al, bm, p0, bk.min(k - p0), mr, slot);
         },
         |pb: usize, slot: &PanelSlot| {
             let p0 = pb * bk;
             let kc = bk.min(k - p0);
             for (jb, j0) in (0..n).step_by(bn).enumerate() {
                 sweep_rows_cube_packed(
-                    &slot.a, &slot.a_off, m, b.panel(jb, pb), &cp, n, bm, j0, kc, inv_sf,
+                    &slot.a, &slot.a_off, m, b.panel(jb, pb), &cp, n, bm, j0, kc, inv_sf, lane,
                 );
             }
         },
@@ -811,7 +849,9 @@ pub(crate) fn family_prepacked_ab_with_stats(
     if m == 0 || n == 0 || k == 0 {
         return (c, PrefetchStats::default());
     }
-    let bm = exec_bm(m, host_block().bm);
+    let lane = b.lane();
+    let (mr, _) = lane.tile_dims();
+    let bm = exec_bm(m, host_block().bm, mr);
     let weights = spec.order_weights();
     let ncomp = spec.ncomp();
     let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
@@ -821,14 +861,15 @@ pub(crate) fn family_prepacked_ab_with_stats(
         b.k_blocks(),
         |pb: usize, slot: &mut PanelSlot| {
             let p0 = pb * bk;
-            pack_a_stripe_multi(a_comps, bm, p0, bk.min(k - p0), slot);
+            pack_a_stripe_multi(a_comps, bm, p0, bk.min(k - p0), mr, slot);
         },
         |pb: usize, slot: &PanelSlot| {
             let p0 = pb * bk;
             let kc = bk.min(k - p0);
             for (jb, j0) in (0..n).step_by(bn).enumerate() {
                 sweep_rows_family_packed(
-                    &slot.a, &slot.a_off, m, b.panel(jb, pb), &cp, n, bm, j0, kc, &weights, ncomp,
+                    &slot.a, &slot.a_off, m, b.panel(jb, pb), &cp, n, bm, j0, kc, &weights,
+                    ncomp, lane,
                 );
             }
         },
@@ -892,40 +933,45 @@ mod tests {
 
     #[test]
     fn prefetched_slots_byte_match_serial_packs() {
+        use crate::gemm::pack::{MAX_MR, MAX_NR, MR, NR};
         let mut rng = Rng::new(91);
         let a = Matrix::random_symmetric(37, 100, 0, &mut rng);
         let b = Matrix::random_symmetric(100, 50, 0, &mut rng);
         let jobs = panel_jobs(50, 100, 16, 32);
-        let bm = 8;
-        // Serial reference: pack_b plus the per-row-block pack_a stripe.
-        let mut want = Vec::new();
-        for job in &jobs {
-            let mut bp = Vec::new();
-            pack::pack_b(&b, job.p0, job.kc, job.j0, job.nc, &mut bp);
-            let mut ap = Vec::new();
-            let mut tmp = Vec::new();
-            for i0 in (0..a.rows()).step_by(bm) {
-                let mc = bm.min(a.rows() - i0);
-                pack::pack_a(&a, i0, mc, job.p0, job.kc, &mut tmp);
-                ap.extend_from_slice(&tmp);
+        // Both the narrow and the wide lane geometries stage
+        // byte-identically.
+        for (mr, nr, bm) in [(MR, NR, 8), (MAX_MR, MAX_NR, 16)] {
+            // Serial reference: pack_b plus the per-row-block pack_a
+            // stripe.
+            let mut want = Vec::new();
+            for job in &jobs {
+                let mut bp = Vec::new();
+                pack::pack_b(&b, job.p0, job.kc, job.j0, job.nc, nr, &mut bp);
+                let mut ap = Vec::new();
+                let mut tmp = Vec::new();
+                for i0 in (0..a.rows()).step_by(bm) {
+                    let mc = bm.min(a.rows() - i0);
+                    pack::pack_a(&a, i0, mc, job.p0, job.kc, mr, &mut tmp);
+                    ap.extend_from_slice(&tmp);
+                }
+                want.push((bp, ap));
             }
-            want.push((bp, ap));
-        }
-        let mut got: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
-        run_prefetch(
-            3,
-            jobs.len(),
-            |i: usize, slot: &mut PanelSlot| {
-                let job = &jobs[i];
-                pack::pack_b(&b, job.p0, job.kc, job.j0, job.nc, &mut slot.b);
-                pack_a_stripe(&a, bm, job.p0, job.kc, slot);
-            },
-            |_: usize, slot: &PanelSlot| got.push((slot.b.clone(), slot.a.clone())),
-        );
-        assert_eq!(got.len(), want.len());
-        for (g, w) in got.iter().zip(&want) {
-            assert_eq!(g.0, w.0, "prefetched B panel differs from serial pack");
-            assert_eq!(g.1, w.1, "prefetched A stripe differs from serial packs");
+            let mut got: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+            run_prefetch(
+                3,
+                jobs.len(),
+                |i: usize, slot: &mut PanelSlot| {
+                    let job = &jobs[i];
+                    pack::pack_b(&b, job.p0, job.kc, job.j0, job.nc, nr, &mut slot.b);
+                    pack_a_stripe(&a, bm, job.p0, job.kc, mr, slot);
+                },
+                |_: usize, slot: &PanelSlot| got.push((slot.b.clone(), slot.a.clone())),
+            );
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.0, w.0, "mr={mr} prefetched B panel differs from serial pack");
+                assert_eq!(g.1, w.1, "mr={mr} prefetched A stripe differs from serial packs");
+            }
         }
     }
 
@@ -982,16 +1028,17 @@ mod tests {
 
     #[test]
     fn pack_a_stripe_offsets_bound_row_blocks() {
+        use crate::gemm::pack::MR;
         let mut rng = Rng::new(92);
         let a = Matrix::random_symmetric(21, 16, 0, &mut rng);
         let mut slot = PanelSlot::default();
-        pack_a_stripe(&a, 8, 0, 16, &mut slot);
+        pack_a_stripe(&a, 8, 0, 16, MR, &mut slot);
         // 21 rows / bm=8 → 3 row blocks (8, 8, 5 rows).
         assert_eq!(slot.a_off.len(), 4);
         assert_eq!(slot.a_off[0], 0);
         assert_eq!(*slot.a_off.last().unwrap(), slot.a.len());
         let mut tmp = Vec::new();
-        pack::pack_a(&a, 16, 5, 0, 16, &mut tmp);
+        pack::pack_a(&a, 16, 5, 0, 16, MR, &mut tmp);
         assert_eq!(&slot.a[slot.a_off[2]..slot.a_off[3]], &tmp[..]);
     }
 

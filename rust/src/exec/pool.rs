@@ -30,6 +30,21 @@
 //! batch, a panel pack, a request batch), so the lock is cold compared
 //! to the work it hands out.
 //!
+//! **Work stealing.** A worker whose own queue and the injector are both
+//! empty does not park while a peer's queue is backed up: it steals the
+//! front task from the *deepest* non-empty peer queue. This matters
+//! under skew — a worker pinned by a long detached job (a gated service
+//! batch, a slow prefetch) leaves its enlisted sweep-chunk drains
+//! queued, and without stealing those drains would wait for the pinned
+//! worker while free workers sleep. Stolen tasks are safe by
+//! construction: worker queues only ever hold anonymous
+//! `ChunkBatch::drain` participants (chunk claims are atomic, and extra
+//! drains of a finished batch no-op), and handle-carrying detached jobs
+//! live in the injector, which [`TaskHandle::cancel_or_join`] scans —
+//! so cancellation semantics are untouched. Steal traffic is counted
+//! ([`Pool::steals`] / [`Pool::steal_fails`]) and surfaced through the
+//! coordinator metrics as `exec/steal_ratio`.
+//!
 //! Panic discipline: a panic inside a `run_chunks` closure is caught on
 //! the executing thread, the batch still completes, and the first
 //! payload is re-thrown on the **calling** thread (same observable
@@ -41,7 +56,7 @@
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
@@ -134,6 +149,11 @@ struct Shared {
     /// High-water mark of `active`; by construction it can never exceed
     /// the worker count — exposed so tests can pin that invariant.
     high_water: AtomicUsize,
+    /// Tasks taken from a peer worker's queue (see module docs).
+    steals: AtomicU64,
+    /// Scans that found the own queue, the injector and every peer
+    /// queue empty, immediately before the worker parked.
+    steal_fails: AtomicU64,
 }
 
 /// A fixed-size persistent worker pool. See the module docs; most code
@@ -158,6 +178,8 @@ impl Pool {
             work: Condvar::new(),
             active: AtomicUsize::new(0),
             high_water: AtomicUsize::new(0),
+            steals: AtomicU64::new(0),
+            steal_fails: AtomicU64::new(0),
         });
         let mut handles = Vec::with_capacity(n);
         for w in 0..n {
@@ -185,6 +207,20 @@ impl Pool {
     /// `high_water() <= n_workers()` always holds.
     pub fn high_water(&self) -> usize {
         self.shared.high_water.load(Ordering::SeqCst)
+    }
+
+    /// Tasks a worker took from a peer's queue instead of parking
+    /// (cumulative; see the work-stealing section of the module docs).
+    pub fn steals(&self) -> u64 {
+        self.shared.steals.load(Ordering::Relaxed)
+    }
+
+    /// Idle scans that found nothing to run *or* steal, immediately
+    /// before the worker parked (cumulative). The steal ratio
+    /// `steals / (steals + steal_fails)` is the fig11 `exec/steal_ratio`
+    /// record.
+    pub fn steal_fails(&self) -> u64 {
+        self.shared.steal_fails.load(Ordering::Relaxed)
     }
 
     /// Submit a detached job to the injector queue. It runs exactly once
@@ -296,9 +332,21 @@ fn worker_main(shared: &Arc<Shared>, me: usize) {
                 if let Some(t) = q.injector.pop_front() {
                     break t;
                 }
+                // Nothing of our own: steal from the deepest peer queue
+                // rather than sleeping while a pinned worker's backlog
+                // waits (only status-None chunk drains ever live here;
+                // see the module docs for why that makes stealing safe).
+                let victim = (0..q.worker.len())
+                    .filter(|&w| w != me && !q.worker[w].is_empty())
+                    .max_by_key(|&w| q.worker[w].len());
+                if let Some(v) = victim {
+                    shared.steals.fetch_add(1, Ordering::Relaxed);
+                    break q.worker[v].pop_front().expect("victim queue observed non-empty");
+                }
                 if q.shutdown {
                     return;
                 }
+                shared.steal_fails.fetch_add(1, Ordering::Relaxed);
                 q = shared.work.wait(q).unwrap();
             }
         };
@@ -525,6 +573,48 @@ mod tests {
         let (tx, rx) = channel();
         pool.submit(move || tx.send(7u8).unwrap());
         assert_eq!(rx.recv().unwrap(), 7);
+    }
+
+    #[test]
+    fn idle_worker_steals_from_pinned_workers_queue() {
+        // Pin one of two workers on a gated detached job, then run a
+        // chunk batch: run_chunks enlists *both* worker queues, so the
+        // pinned worker's drain task sits queued behind the gate. The
+        // free worker must steal it (the batch itself is finished by
+        // the caller + free worker, so the stolen drain no-ops — but
+        // the steal is what proves the backlog never waits on the
+        // pinned worker).
+        let pool = Pool::new(2);
+        let (gate_tx, gate_rx) = channel::<()>();
+        let blocker = pool.submit(move || {
+            gate_rx.recv().unwrap();
+        });
+        while blocker.state() != TaskState::Running {
+            std::thread::yield_now();
+        }
+        let before = pool.steals();
+        let counter = AtomicUsize::new(0);
+        pool.run_chunks(64, |s, e| {
+            counter.fetch_add(e - s, Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 64, "batch completes despite the pin");
+        // The free worker loops back after the batch and must find (and
+        // steal) the pinned worker's queued drain before it can park.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while pool.steals() == before {
+            assert!(std::time::Instant::now() < deadline, "no steal observed");
+            std::thread::yield_now();
+        }
+        gate_tx.send(()).unwrap();
+        assert_eq!(blocker.join(), TaskState::Done);
+        assert!(pool.steals() > before, "steal counter must advance");
+        // With everything drained the workers park hungry: the failed
+        // final scans show up in steal_fails (polled — parking happens
+        // after the join returns to us).
+        while pool.steal_fails() == 0 {
+            assert!(std::time::Instant::now() < deadline, "no hungry park observed");
+            std::thread::yield_now();
+        }
     }
 
     #[test]

@@ -5,14 +5,21 @@
 //! [`crate::gemm::cube`]) are accuracy-faithful but stream the full B
 //! panel from memory once per output row. This module is the serving
 //! tier: a three-level `b_n → b_k → b_m` loop nest over packed panels
-//! ([`crate::gemm::pack`]) with an `MR × NR` register micro-kernel, and —
-//! for SGEMM-cube — a **fused three-term micro-kernel** that accumulates
-//! the high·high product and both correction terms in a single pass over
-//! dual-component interleaved panels, instead of the reference's three
-//! separate traversals. The micro-kernels themselves live in
-//! [`crate::gemm::kernels`]: a runtime-dispatched lane (scalar fallback,
-//! AVX2+FMA on x86_64, NEON on aarch64, `SGEMM_CUBE_KERNEL` override)
-//! resolved **once per sweep**, so one GEMM call never mixes lanes.
+//! ([`crate::gemm::pack`]) with a lane-sized `mr × nr` register
+//! micro-kernel, and — for SGEMM-cube — a **fused three-term
+//! micro-kernel** that accumulates the high·high product and both
+//! correction terms in a single pass over dual-component interleaved
+//! panels, instead of the reference's three separate traversals. The
+//! micro-kernels themselves live in [`crate::gemm::kernels`]: a
+//! runtime-dispatched lane (scalar fallback, AVX2+FMA or AVX-512F on
+//! x86_64, NEON on aarch64, `SGEMM_CUBE_KERNEL` override) resolved
+//! **once per GEMM call**, so one call never mixes lanes — which
+//! matters doubly now that the micro-tile (and hence the packed-panel
+//! interleave) follows the lane ([`Lane::tile_dims`]): the AVX-512
+//! lane runs the wide 8×16 tile, every other lane the narrow 4×8. The
+//! drivers below resolve the lane, pack with its dims, and thread it
+//! into the shared sweeps explicitly; prepacked operands carry the
+//! lane they were packed for ([`PrepackedMatrix::lane`]).
 //!
 //! Block sizes are not hand-tuned: [`host_block`] runs the repo's own
 //! Eq. (12) feasibility machinery ([`crate::sim::blocking`]) against the
@@ -52,9 +59,9 @@
 //! depth-configurable ring, [`crate::exec::pipeline`]).
 //! The model's `b_m` is an *upper* bound on the row-block
 //! grain: when `m` is too small to give every worker a `b_m` block, the
-//! executed row block shrinks (to an `MR` multiple) so the engine keeps
-//! all cores busy — `b_m` governs packing/cache reuse, not the thread
-//! count (see [`exec_bm`]).
+//! executed row block shrinks (to a multiple of the lane's `mr`) so the
+//! engine keeps all cores busy — `b_m` governs packing/cache reuse, not
+//! the thread count (see [`exec_bm`]).
 //!
 //! Serving path: the split + pack cost of a *stable* B operand (a
 //! weight matrix) is `O(k·n)` work independent of `m`, so at serving
@@ -81,9 +88,9 @@ use std::time::Instant;
 use crate::exec::pipeline::{self, PrefetchStats};
 use crate::gemm::backend::Schedule;
 use crate::gemm::cube::WideSplit;
-use crate::gemm::kernels;
+use crate::gemm::kernels::{self, Lane};
 use crate::gemm::overlap;
-use crate::gemm::pack::{self, MR, NR};
+use crate::gemm::pack::{self, MAX_MR, MAX_NR, MR, NR};
 use crate::gemm::prepacked::{PrepackPath, PrepackedMatrix};
 use crate::sim::blocking::{feasible_blocks, BlockConfig, GemmShape, Traffic};
 use crate::sim::chip::Chip;
@@ -588,12 +595,16 @@ fn prepacked_core_single(a: &Matrix<f32>, b: &PrepackedMatrix) -> Matrix<f32> {
     if m == 0 || n == 0 || k == 0 {
         return c;
     }
-    let bm = exec_bm(m, host_block().bm);
+    // The sweep must consume these panels with the interleave they were
+    // packed for: the lane is the one recorded at prepack time, not
+    // whatever is active now.
+    let lane = b.lane();
+    let bm = exec_bm(m, host_block().bm, lane.tile_dims().0);
     let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
     for (jb, j0) in (0..n).step_by(b.bn()).enumerate() {
         for (pb, p0) in (0..k).step_by(b.bk()).enumerate() {
             let kc = b.bk().min(k - p0);
-            sweep_rows_f32(a, b.panel(jb, pb), &cp, n, bm, j0, p0, kc);
+            sweep_rows_f32(a, b.panel(jb, pb), &cp, n, bm, j0, p0, kc, lane);
         }
     }
     c
@@ -613,12 +624,13 @@ fn prepacked_core_cube(
     if m == 0 || n == 0 || k == 0 {
         return c;
     }
-    let bm = exec_bm(m, host_block().bm);
+    let lane = b.lane();
+    let bm = exec_bm(m, host_block().bm, lane.tile_dims().0);
     let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
     for (jb, j0) in (0..n).step_by(b.bn()).enumerate() {
         for (pb, p0) in (0..k).step_by(b.bk()).enumerate() {
             let kc = b.bk().min(k - p0);
-            sweep_rows_cube(ah, al, b.panel(jb, pb), &cp, n, bm, j0, p0, kc, inv_sf);
+            sweep_rows_cube(ah, al, b.panel(jb, pb), &cp, n, bm, j0, p0, kc, inv_sf, lane);
         }
     }
     c
@@ -637,14 +649,27 @@ fn prepacked_core_family(
     if m == 0 || n == 0 || k == 0 {
         return c;
     }
-    let bm = exec_bm(m, host_block().bm);
+    let lane = b.lane();
+    let bm = exec_bm(m, host_block().bm, lane.tile_dims().0);
     let weights = spec.order_weights();
     let ncomp = spec.ncomp();
     let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
     for (jb, j0) in (0..n).step_by(b.bn()).enumerate() {
         for (pb, p0) in (0..k).step_by(b.bk()).enumerate() {
             let kc = b.bk().min(k - p0);
-            sweep_rows_family(a_comps, b.panel(jb, pb), &cp, n, bm, j0, p0, kc, &weights, ncomp);
+            sweep_rows_family(
+                a_comps,
+                b.panel(jb, pb),
+                &cp,
+                n,
+                bm,
+                j0,
+                p0,
+                kc,
+                &weights,
+                ncomp,
+                lane,
+            );
         }
     }
     c
@@ -652,12 +677,14 @@ fn prepacked_core_family(
 
 /// The executed row-block size: the model's `b_m` capped so that `m`
 /// yields at least one row block per worker (keeping all cores busy on
-/// serving-size problems), rounded to the `MR` panel geometry.
-pub fn exec_bm(m: usize, model_bm: usize) -> usize {
+/// serving-size problems), rounded to the active lane's `mr` panel
+/// geometry (the model block itself is alignment-sized, a multiple of
+/// every lane's `mr`).
+pub fn exec_bm(m: usize, model_bm: usize, mr: usize) -> usize {
     let workers = crate::util::threads::num_threads().max(1);
-    // Rounded *down* to an MR multiple so small m still splits into at
-    // least one block per worker whenever m >= MR·workers.
-    let per_worker = (m.div_ceil(workers) / MR * MR).max(MR);
+    // Rounded *down* to an mr multiple so small m still splits into at
+    // least one block per worker whenever m >= mr·workers.
+    let per_worker = (m.div_ceil(workers) / mr * mr).max(mr);
     model_bm.min(per_worker)
 }
 
@@ -671,15 +698,20 @@ fn gemm_blocked_core(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
         return c;
     }
     let block = host_block();
-    let (bm, bk, bn) = (exec_bm(m, block.bm), block.bk, block.bn);
+    // One lane for the whole call — it fixes both the panel interleave
+    // packed below and the micro-kernel the sweep dispatches, so a
+    // concurrent `force_lane` can never split one GEMM across lanes.
+    let lane = kernels::active_lane();
+    let (mr, nr) = lane.tile_dims();
+    let (bm, bk, bn) = (exec_bm(m, block.bm, mr), block.bk, block.bn);
     let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
     let mut bp = Vec::new();
     for j0 in (0..n).step_by(bn) {
         let nc = bn.min(n - j0);
         for p0 in (0..k).step_by(bk) {
             let kc = bk.min(k - p0);
-            pack::pack_b(b, p0, kc, j0, nc, &mut bp);
-            sweep_rows_f32(a, &bp, &cp, n, bm, j0, p0, kc);
+            pack::pack_b(b, p0, kc, j0, nc, nr, &mut bp);
+            sweep_rows_f32(a, &bp, &cp, n, bm, j0, p0, kc, lane);
         }
     }
     c
@@ -700,27 +732,30 @@ pub(crate) fn sweep_rows_f32(
     j0: usize,
     p0: usize,
     kc: usize,
+    lane: Lane,
 ) {
     let m = a.rows();
     let row_blocks = m.div_ceil(bm);
-    // One lane for the whole sweep: resolved here, not per micro-tile,
-    // so a concurrent `force_lane` can never split one GEMM across
-    // kernel implementations.
-    let lane = kernels::active_lane();
+    // The caller resolved `lane` once for the whole GEMM call and packed
+    // `bp` with its tile dims; the same dims drive pack_a, the panel
+    // chunking, and the kernel dispatch here, so one call can never mix
+    // lanes (or interleaves) even under a concurrent `force_lane`.
+    let (mr, nr) = lane.tile_dims();
     parallel_chunks(row_blocks, |rb0, rb1| {
         let mut ap = Vec::new();
+        let mut acc = [0.0f32; MAX_MR * MAX_NR];
         for rb in rb0..rb1 {
             let i0 = rb * bm;
             let mc = bm.min(m - i0);
-            pack::pack_a(a, i0, mc, p0, kc, &mut ap);
-            for (rp, apanel) in ap.chunks_exact(kc * MR).enumerate() {
-                let ci = i0 + rp * MR;
-                let mr_eff = MR.min(m - ci);
-                for (cpnl, bpanel) in bp.chunks_exact(kc * NR).enumerate() {
-                    let cj = j0 + cpnl * NR;
-                    let nr_eff = NR.min(n - cj);
-                    let acc = kernels::kernel_f32(lane, apanel, bpanel);
-                    add_tile(cp, n, ci, cj, mr_eff, nr_eff, &acc);
+            pack::pack_a(a, i0, mc, p0, kc, mr, &mut ap);
+            for (rp, apanel) in ap.chunks_exact(kc * mr).enumerate() {
+                let ci = i0 + rp * mr;
+                let mr_eff = mr.min(m - ci);
+                for (cpnl, bpanel) in bp.chunks_exact(kc * nr).enumerate() {
+                    let cj = j0 + cpnl * nr;
+                    let nr_eff = nr.min(n - cj);
+                    kernels::kernel_f32(lane, apanel, bpanel, &mut acc[..mr * nr]);
+                    add_tile(cp, n, ci, cj, mr_eff, nr_eff, nr, &acc[..mr * nr]);
                 }
             }
         }
@@ -744,22 +779,24 @@ pub(crate) fn sweep_rows_f32_packed(
     bm: usize,
     j0: usize,
     kc: usize,
+    lane: Lane,
 ) {
     let row_blocks = m.div_ceil(bm);
     debug_assert_eq!(a_off.len(), row_blocks + 1);
-    let lane = kernels::active_lane();
+    let (mr, nr) = lane.tile_dims();
     parallel_chunks(row_blocks, |rb0, rb1| {
+        let mut acc = [0.0f32; MAX_MR * MAX_NR];
         for rb in rb0..rb1 {
             let i0 = rb * bm;
             let ap = &ap_all[a_off[rb]..a_off[rb + 1]];
-            for (rp, apanel) in ap.chunks_exact(kc * MR).enumerate() {
-                let ci = i0 + rp * MR;
-                let mr_eff = MR.min(m - ci);
-                for (cpnl, bpanel) in bp.chunks_exact(kc * NR).enumerate() {
-                    let cj = j0 + cpnl * NR;
-                    let nr_eff = NR.min(n - cj);
-                    let acc = kernels::kernel_f32(lane, apanel, bpanel);
-                    add_tile(cp, n, ci, cj, mr_eff, nr_eff, &acc);
+            for (rp, apanel) in ap.chunks_exact(kc * mr).enumerate() {
+                let ci = i0 + rp * mr;
+                let mr_eff = mr.min(m - ci);
+                for (cpnl, bpanel) in bp.chunks_exact(kc * nr).enumerate() {
+                    let cj = j0 + cpnl * nr;
+                    let nr_eff = nr.min(n - cj);
+                    kernels::kernel_f32(lane, apanel, bpanel, &mut acc[..mr * nr]);
+                    add_tile(cp, n, ci, cj, mr_eff, nr_eff, nr, &acc[..mr * nr]);
                 }
             }
         }
@@ -781,15 +818,17 @@ fn cube_blocked_core(
         return c;
     }
     let block = host_block();
-    let (bm, bk, bn) = (exec_bm(m, block.bm), block.bk, block.bn);
+    let lane = kernels::active_lane();
+    let (mr, nr) = lane.tile_dims();
+    let (bm, bk, bn) = (exec_bm(m, block.bm, mr), block.bk, block.bn);
     let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
     let mut bp = Vec::new();
     for j0 in (0..n).step_by(bn) {
         let nc = bn.min(n - j0);
         for p0 in (0..k).step_by(bk) {
             let kc = bk.min(k - p0);
-            pack::pack_b_dual(bh, bl, p0, kc, j0, nc, &mut bp);
-            sweep_rows_cube(ah, al, &bp, &cp, n, bm, j0, p0, kc, inv_sf);
+            pack::pack_b_dual(bh, bl, p0, kc, j0, nc, nr, &mut bp);
+            sweep_rows_cube(ah, al, &bp, &cp, n, bm, j0, p0, kc, inv_sf, lane);
         }
     }
     c
@@ -809,7 +848,9 @@ fn family_blocked_core(
         return c;
     }
     let block = host_block();
-    let (bm, bk, bn) = (exec_bm(m, block.bm), block.bk, block.bn);
+    let lane = kernels::active_lane();
+    let (mr, nr) = lane.tile_dims();
+    let (bm, bk, bn) = (exec_bm(m, block.bm, mr), block.bk, block.bn);
     let weights = spec.order_weights();
     let ncomp = spec.ncomp();
     let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
@@ -818,8 +859,8 @@ fn family_blocked_core(
         let nc = bn.min(n - j0);
         for p0 in (0..k).step_by(bk) {
             let kc = bk.min(k - p0);
-            pack::pack_b_multi(b_comps, p0, kc, j0, nc, &mut bp);
-            sweep_rows_family(a_comps, &bp, &cp, n, bm, j0, p0, kc, &weights, ncomp);
+            pack::pack_b_multi(b_comps, p0, kc, j0, nc, nr, &mut bp);
+            sweep_rows_family(a_comps, &bp, &cp, n, bm, j0, p0, kc, &weights, ncomp, lane);
         }
     }
     c
@@ -841,24 +882,44 @@ pub(crate) fn sweep_rows_cube(
     p0: usize,
     kc: usize,
     inv_sf: f32,
+    lane: Lane,
 ) {
     let m = ah.rows();
     let row_blocks = m.div_ceil(bm);
-    let lane = kernels::active_lane();
+    let (mr, nr) = lane.tile_dims();
     parallel_chunks(row_blocks, |rb0, rb1| {
         let mut ap = Vec::new();
+        let mut hh = [0.0f32; MAX_MR * MAX_NR];
+        let mut corr = [0.0f32; MAX_MR * MAX_NR];
         for rb in rb0..rb1 {
             let i0 = rb * bm;
             let mc = bm.min(m - i0);
-            pack::pack_a_dual(ah, al, i0, mc, p0, kc, &mut ap);
-            for (rp, apanel) in ap.chunks_exact(kc * 2 * MR).enumerate() {
-                let ci = i0 + rp * MR;
-                let mr_eff = MR.min(m - ci);
-                for (cpnl, bpanel) in bp.chunks_exact(kc * 2 * NR).enumerate() {
-                    let cj = j0 + cpnl * NR;
-                    let nr_eff = NR.min(n - cj);
-                    let (hh, corr) = kernels::kernel_cube(lane, apanel, bpanel);
-                    add_tile_cube(cp, n, ci, cj, mr_eff, nr_eff, &hh, &corr, inv_sf);
+            pack::pack_a_dual(ah, al, i0, mc, p0, kc, mr, &mut ap);
+            for (rp, apanel) in ap.chunks_exact(kc * 2 * mr).enumerate() {
+                let ci = i0 + rp * mr;
+                let mr_eff = mr.min(m - ci);
+                for (cpnl, bpanel) in bp.chunks_exact(kc * 2 * nr).enumerate() {
+                    let cj = j0 + cpnl * nr;
+                    let nr_eff = nr.min(n - cj);
+                    kernels::kernel_cube(
+                        lane,
+                        apanel,
+                        bpanel,
+                        &mut hh[..mr * nr],
+                        &mut corr[..mr * nr],
+                    );
+                    add_tile_cube(
+                        cp,
+                        n,
+                        ci,
+                        cj,
+                        mr_eff,
+                        nr_eff,
+                        nr,
+                        &hh[..mr * nr],
+                        &corr[..mr * nr],
+                        inv_sf,
+                    );
                 }
             }
         }
@@ -879,22 +940,42 @@ pub(crate) fn sweep_rows_cube_packed(
     j0: usize,
     kc: usize,
     inv_sf: f32,
+    lane: Lane,
 ) {
     let row_blocks = m.div_ceil(bm);
     debug_assert_eq!(a_off.len(), row_blocks + 1);
-    let lane = kernels::active_lane();
+    let (mr, nr) = lane.tile_dims();
     parallel_chunks(row_blocks, |rb0, rb1| {
+        let mut hh = [0.0f32; MAX_MR * MAX_NR];
+        let mut corr = [0.0f32; MAX_MR * MAX_NR];
         for rb in rb0..rb1 {
             let i0 = rb * bm;
             let ap = &ap_all[a_off[rb]..a_off[rb + 1]];
-            for (rp, apanel) in ap.chunks_exact(kc * 2 * MR).enumerate() {
-                let ci = i0 + rp * MR;
-                let mr_eff = MR.min(m - ci);
-                for (cpnl, bpanel) in bp.chunks_exact(kc * 2 * NR).enumerate() {
-                    let cj = j0 + cpnl * NR;
-                    let nr_eff = NR.min(n - cj);
-                    let (hh, corr) = kernels::kernel_cube(lane, apanel, bpanel);
-                    add_tile_cube(cp, n, ci, cj, mr_eff, nr_eff, &hh, &corr, inv_sf);
+            for (rp, apanel) in ap.chunks_exact(kc * 2 * mr).enumerate() {
+                let ci = i0 + rp * mr;
+                let mr_eff = mr.min(m - ci);
+                for (cpnl, bpanel) in bp.chunks_exact(kc * 2 * nr).enumerate() {
+                    let cj = j0 + cpnl * nr;
+                    let nr_eff = nr.min(n - cj);
+                    kernels::kernel_cube(
+                        lane,
+                        apanel,
+                        bpanel,
+                        &mut hh[..mr * nr],
+                        &mut corr[..mr * nr],
+                    );
+                    add_tile_cube(
+                        cp,
+                        n,
+                        ci,
+                        cj,
+                        mr_eff,
+                        nr_eff,
+                        nr,
+                        &hh[..mr * nr],
+                        &corr[..mr * nr],
+                        inv_sf,
+                    );
                 }
             }
         }
@@ -917,24 +998,26 @@ pub(crate) fn sweep_rows_family(
     kc: usize,
     weights: &[f32; MAX_COMPONENTS],
     ncomp: usize,
+    lane: Lane,
 ) {
     let m = a_comps[0].rows();
     let row_blocks = m.div_ceil(bm);
-    let lane = kernels::active_lane();
+    let (mr, nr) = lane.tile_dims();
     parallel_chunks(row_blocks, |rb0, rb1| {
         let mut ap = Vec::new();
+        let mut acc = [0.0f32; MAX_COMPONENTS * MAX_MR * MAX_NR];
         for rb in rb0..rb1 {
             let i0 = rb * bm;
             let mc = bm.min(m - i0);
-            pack::pack_a_multi(a_comps, i0, mc, p0, kc, &mut ap);
-            for (rp, apanel) in ap.chunks_exact(kc * ncomp * MR).enumerate() {
-                let ci = i0 + rp * MR;
-                let mr_eff = MR.min(m - ci);
-                for (cpnl, bpanel) in bp.chunks_exact(kc * ncomp * NR).enumerate() {
-                    let cj = j0 + cpnl * NR;
-                    let nr_eff = NR.min(n - cj);
-                    let acc = kernels::kernel_family(lane, apanel, bpanel, ncomp);
-                    add_tile_family(cp, n, ci, cj, mr_eff, nr_eff, &acc, weights, ncomp);
+            pack::pack_a_multi(a_comps, i0, mc, p0, kc, mr, &mut ap);
+            for (rp, apanel) in ap.chunks_exact(kc * ncomp * mr).enumerate() {
+                let ci = i0 + rp * mr;
+                let mr_eff = mr.min(m - ci);
+                for (cpnl, bpanel) in bp.chunks_exact(kc * ncomp * nr).enumerate() {
+                    let cj = j0 + cpnl * nr;
+                    let nr_eff = nr.min(n - cj);
+                    kernels::kernel_family(lane, apanel, bpanel, ncomp, &mut acc);
+                    add_tile_family(cp, n, ci, cj, mr_eff, nr_eff, mr, nr, &acc, weights, ncomp);
                 }
             }
         }
@@ -956,22 +1039,24 @@ pub(crate) fn sweep_rows_family_packed(
     kc: usize,
     weights: &[f32; MAX_COMPONENTS],
     ncomp: usize,
+    lane: Lane,
 ) {
     let row_blocks = m.div_ceil(bm);
     debug_assert_eq!(a_off.len(), row_blocks + 1);
-    let lane = kernels::active_lane();
+    let (mr, nr) = lane.tile_dims();
     parallel_chunks(row_blocks, |rb0, rb1| {
+        let mut acc = [0.0f32; MAX_COMPONENTS * MAX_MR * MAX_NR];
         for rb in rb0..rb1 {
             let i0 = rb * bm;
             let ap = &ap_all[a_off[rb]..a_off[rb + 1]];
-            for (rp, apanel) in ap.chunks_exact(kc * ncomp * MR).enumerate() {
-                let ci = i0 + rp * MR;
-                let mr_eff = MR.min(m - ci);
-                for (cpnl, bpanel) in bp.chunks_exact(kc * ncomp * NR).enumerate() {
-                    let cj = j0 + cpnl * NR;
-                    let nr_eff = NR.min(n - cj);
-                    let acc = kernels::kernel_family(lane, apanel, bpanel, ncomp);
-                    add_tile_family(cp, n, ci, cj, mr_eff, nr_eff, &acc, weights, ncomp);
+            for (rp, apanel) in ap.chunks_exact(kc * ncomp * mr).enumerate() {
+                let ci = i0 + rp * mr;
+                let mr_eff = mr.min(m - ci);
+                for (cpnl, bpanel) in bp.chunks_exact(kc * ncomp * nr).enumerate() {
+                    let cj = j0 + cpnl * nr;
+                    let nr_eff = nr.min(n - cj);
+                    kernels::kernel_family(lane, apanel, bpanel, ncomp, &mut acc);
+                    add_tile_family(cp, n, ci, cj, mr_eff, nr_eff, mr, nr, &acc, weights, ncomp);
                 }
             }
         }
@@ -979,6 +1064,8 @@ pub(crate) fn sweep_rows_family_packed(
 }
 
 /// `C[ci.., cj..] += acc` for the valid `mr_eff × nr_eff` sub-tile.
+/// `acc` is the flat row-major `mr × nr` tile a kernel wrote (row `i`
+/// at `acc[i·nr..]`), for whichever lane's `nr` the caller is running.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn add_tile(
     cp: &SendPtr<f32>,
@@ -987,11 +1074,12 @@ pub(crate) fn add_tile(
     cj: usize,
     mr_eff: usize,
     nr_eff: usize,
-    acc: &[[f32; NR]; MR],
+    nr: usize,
+    acc: &[f32],
 ) {
-    for (i, acc_row) in acc.iter().enumerate().take(mr_eff) {
+    for i in 0..mr_eff {
         let base = (ci + i) * n + cj;
-        for (j, &v) in acc_row.iter().enumerate().take(nr_eff) {
+        for (j, &v) in acc[i * nr..i * nr + nr_eff].iter().enumerate() {
             // SAFETY: row-block chunks are disjoint across threads and the
             // output buffer outlives the parallel scope.
             unsafe { *cp.0.add(base + j) += v };
@@ -1000,7 +1088,8 @@ pub(crate) fn add_tile(
 }
 
 /// Cube tile combine: corrections (already aggregated together) are
-/// scaled and meet the high product once per k block.
+/// scaled and meet the high product once per k block. `hh`/`corr` are
+/// flat row-major `mr × nr` tiles (row `i` at `[i·nr..]`).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn add_tile_cube(
     cp: &SendPtr<f32>,
@@ -1009,8 +1098,9 @@ pub(crate) fn add_tile_cube(
     cj: usize,
     mr_eff: usize,
     nr_eff: usize,
-    hh: &[[f32; NR]; MR],
-    corr: &[[f32; NR]; MR],
+    nr: usize,
+    hh: &[f32],
+    corr: &[f32],
     inv_sf: f32,
 ) {
     for i in 0..mr_eff {
@@ -1018,7 +1108,7 @@ pub(crate) fn add_tile_cube(
         for j in 0..nr_eff {
             // SAFETY: row-block chunks are disjoint across threads and the
             // output buffer outlives the parallel scope.
-            unsafe { *cp.0.add(base + j) += hh[i][j] + corr[i][j] * inv_sf };
+            unsafe { *cp.0.add(base + j) += hh[i * nr + j] + corr[i * nr + j] * inv_sf };
         }
     }
 }
@@ -1031,6 +1121,9 @@ pub(crate) fn add_tile_cube(
 /// `hh + corr·inv_sf` (same operations, same order), which is what
 /// keeps the N = 2 family instantiation bit-identical to the cube
 /// path.
+/// `acc` is the flat `MAX_COMPONENTS` planes of row-major `mr × nr`
+/// tiles a family kernel wrote (plane `d` at `acc[d·mr·nr..]`, row `i`
+/// of a plane at `[i·nr..]`).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn add_tile_family(
     cp: &SendPtr<f32>,
@@ -1039,20 +1132,23 @@ pub(crate) fn add_tile_family(
     cj: usize,
     mr_eff: usize,
     nr_eff: usize,
-    acc: &[[[f32; NR]; MR]; MAX_COMPONENTS],
+    mr: usize,
+    nr: usize,
+    acc: &[f32],
     weights: &[f32; MAX_COMPONENTS],
     ncomp: usize,
 ) {
+    let plane = mr * nr;
     for i in 0..mr_eff {
         let base = (ci + i) * n + cj;
         for j in 0..nr_eff {
-            let mut tail = acc[ncomp - 1][i][j] * weights[ncomp - 1];
+            let mut tail = acc[(ncomp - 1) * plane + i * nr + j] * weights[ncomp - 1];
             for d in (1..ncomp - 1).rev() {
-                tail = acc[d][i][j] * weights[d] + tail;
+                tail = acc[d * plane + i * nr + j] * weights[d] + tail;
             }
             // SAFETY: row-block chunks are disjoint across threads and the
             // output buffer outlives the parallel scope.
-            unsafe { *cp.0.add(base + j) += acc[0][i][j] + tail };
+            unsafe { *cp.0.add(base + j) += acc[i * nr + j] + tail };
         }
     }
 }
@@ -1073,9 +1169,13 @@ mod tests {
         let block = host_block();
         assert!(block.validate(&chip).is_ok(), "{block:?}");
         assert!(block.n_fused(&chip) >= 1);
-        // Multiples of the alignment, hence of the micro-kernel geometry.
+        // Multiples of the alignment, hence of the micro-kernel geometry
+        // — for the narrow lanes *and* the wide AVX-512 tile, so one
+        // model block serves every lane.
         assert_eq!(block.bm % MR, 0);
         assert_eq!(block.bn % NR, 0);
+        assert_eq!(block.bm % MAX_MR, 0);
+        assert_eq!(block.bn % MAX_NR, 0);
         // It is the argmin of the host traffic model over the feasible set.
         let shape = GemmShape::new(1024, 1024, 1024);
         let best = Traffic::host_blocked(shape, block).total_elems();
@@ -1090,17 +1190,20 @@ mod tests {
     #[test]
     fn exec_bm_caps_model_block_and_keeps_workers_busy() {
         let workers = crate::util::threads::num_threads().max(1);
-        for m in [1usize, 7, 96, 128, 1024, 5000] {
-            let e = exec_bm(m, 128);
-            assert!(e >= MR && e <= 128 && e % MR == 0, "m={m} e={e}");
-            if m >= workers * 128 {
-                // Large m keeps the model block and every worker busy.
-                assert_eq!(e, 128, "m={m}");
-                assert!(m.div_ceil(e) >= workers, "m={m} e={e}");
+        // Both the narrow and the wide lane grains obey the same law.
+        for mr in [MR, MAX_MR] {
+            for m in [1usize, 7, 96, 128, 1024, 5000] {
+                let e = exec_bm(m, 128, mr);
+                assert!(e >= mr && e <= 128 && e % mr == 0, "m={m} mr={mr} e={e}");
+                if m >= workers * 128 {
+                    // Large m keeps the model block and every worker busy.
+                    assert_eq!(e, 128, "m={m} mr={mr}");
+                    assert!(m.div_ceil(e) >= workers, "m={m} mr={mr} e={e}");
+                }
             }
+            // Tiny m degrades to the mr panel grain, never below.
+            assert_eq!(exec_bm(1, 128, mr), mr);
         }
-        // Tiny m degrades to the MR panel grain, never below.
-        assert_eq!(exec_bm(1, 128), MR);
     }
 
     #[test]

@@ -2,10 +2,13 @@
 //!
 //! The serving tier treats the packed/split representation of a stable B
 //! operand as a cached artifact: keyed by the weight's identity and
-//! shape **plus** the precision path and scaling parameters, because a
-//! weight prepacked for one `(path, s_b)` pair is not valid for another
-//! (the split itself depends on `s_b`, and the panel format differs
-//! between the single- and dual-component paths).
+//! shape **plus** the precision path, scaling parameters, and the
+//! kernel lane, because a weight prepacked for one `(path, s_b, lane)`
+//! triple is not valid for another (the split itself depends on `s_b`,
+//! the panel format differs between the single- and dual-component
+//! paths, and the panel interleave follows the lane's micro-tile dims —
+//! an entry packed under a forced narrow lane must not be served to the
+//! wide AVX-512 sweeps or vice versa).
 //!
 //! Capacity is bounded in bytes (weights dominate; entry counts would be
 //! a poor proxy). Eviction is least-recently-used via a monotonic use
@@ -37,15 +40,20 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::gemm::backend::Backend;
+use crate::gemm::kernels::Lane;
 use crate::gemm::prepacked::PrepackedMatrix;
 
 /// Cache key for a prepacked operand. `weight` is the registered weight
 /// identity (two distinct weights of equal shape must not collide);
 /// `backend`/`scale_exp` pin the precision path and scaling the panels
 /// were prepared for (callers normalize: both cube orders share packed
-/// panels, and `scale_exp` is 0 on non-cube paths). `col0` is the first
-/// weight column covered by the entry: 0 with `n` = the full width for
-/// whole-weight packs, the slice origin for the shard router's
+/// panels, and `scale_exp` is 0 on non-cube paths). `lane` pins the
+/// micro-tile interleave the panels were packed with
+/// ([`Lane::tile_dims`]): callers pass the lane that will execute the
+/// request ([`crate::gemm::kernels::active_lane`]), so a lane override
+/// mid-flight repacks instead of consuming mismatched panels. `col0` is
+/// the first weight column covered by the entry: 0 with `n` = the full
+/// width for whole-weight packs, the slice origin for the shard router's
 /// column-partition packs ([`crate::coordinator::shard`]) — so slices
 /// of one weight coexist with each other and with the full pack.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -60,6 +68,8 @@ pub struct PrepackKey {
     pub backend: Backend,
     /// Residual scaling exponent baked into the split (0 off cube paths).
     pub scale_exp: i32,
+    /// Kernel lane whose micro-tile geometry the panels follow.
+    pub lane: Lane,
     /// First weight column covered (nonzero for shard column slices).
     pub col0: usize,
 }
@@ -251,7 +261,15 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn key(weight: u64, n: usize) -> PrepackKey {
-        PrepackKey { weight, k: n, n, backend: Backend::Fp32, scale_exp: 0, col0: 0 }
+        PrepackKey {
+            weight,
+            k: n,
+            n,
+            backend: Backend::Fp32,
+            scale_exp: 0,
+            lane: crate::gemm::kernels::active_lane(),
+            col0: 0,
+        }
     }
 
     fn packed(n: usize, seed: u64) -> PrepackedMatrix {
@@ -293,6 +311,23 @@ mod tests {
         cache.get_or_insert_with(k4, || packed(16, 4));
         assert_eq!(cache.stats().entries, 4);
         assert_eq!(cache.stats().misses, 4);
+    }
+
+    #[test]
+    fn lane_is_part_of_the_key() {
+        // Regression: panels are interleaved per lane, so the same
+        // weight prepacked under two different lanes must occupy two
+        // entries — a lookup under lane X must never return panels
+        // packed for lane Y's micro-tile geometry.
+        let cache = PrepackCache::new(64 << 20);
+        cache.get_or_insert_with(key(1, 16), || packed(16, 1));
+        let mut wide = key(1, 16);
+        wide.lane = if wide.lane == Lane::Scalar { Lane::Avx512 } else { Lane::Scalar };
+        assert!(cache.get(&wide).is_none(), "other-lane key must miss");
+        cache.get_or_insert_with(wide, || packed(16, 1));
+        assert_eq!(cache.stats().entries, 2, "per-lane entries coexist");
+        // purge_weight still removes every lane's entries for the weight.
+        assert_eq!(cache.purge_weight(1), 2);
     }
 
     #[test]

@@ -1,0 +1,188 @@
+//! AVX-512F micro-kernels (x86_64) over the **wide** micro-tile.
+//!
+//! One ZMM register is 512 bits — sixteen f32 lanes — so a micro-tile
+//! row is a *single* register and the 32-entry zmm file affords a
+//! genuinely larger tile than AVX2's 4×8: `MAX_MR × MAX_NR = 8 × 16`,
+//! exactly what [`crate::sim::blocking::micro_tile`] derives for
+//! `(regs, lanes) = (32, 16)`. The f32 kernel holds `MAX_MR = 8`
+//! accumulators and the fused cube kernel `2·MAX_MR = 16` (high·high
+//! plane + correction plane), both comfortably inside the file with
+//! room for the operand broadcasts.
+//!
+//! Because the tile is wider, panels for this lane are packed with the
+//! wide interleave ([`crate::gemm::pack`] with
+//! `(mr, nr) = (MAX_MR, MAX_NR)`) — operands packed for a narrow lane
+//! are *not* consumable here, which is why prepacked matrices record
+//! their lane and the cache key includes it.
+//!
+//! Pinned accumulation contract of this lane (see [`super`] for the
+//! cross-lane comparison): every chain step is a **fused** multiply-add
+//! (`_mm512_fmadd_ps`, one rounding — 512-bit FMA is part of the
+//! AVX512F feature itself), and the cube correction chain is
+//! `corr = fma(a_h, b_l, fma(a_l, b_h, corr))` — the `a_l·b_h` term
+//! joins first, the same order the AVX2 and NEON lanes pin. Lanes are
+//! still not bit-interchangeable in general; the contract is pinned per
+//! lane, and this lane additionally reduces each output cell over a
+//! different `(i, j)` tiling of the same k-ordered chain — which is
+//! irrelevant to bit-identity *per lane* and stays inside the shared
+//! FMA-rounding envelope *across* lanes.
+//!
+//! Unlike the narrow lanes, these kernels write straight into the
+//! caller's flat `mr·nr` row-major output slices (one
+//! `_mm512_storeu_ps` per row) instead of returning register-tile
+//! arrays by value.
+
+use core::arch::x86_64::{
+    __m512, _mm512_fmadd_ps, _mm512_loadu_ps, _mm512_set1_ps, _mm512_setzero_ps, _mm512_storeu_ps,
+};
+
+use crate::gemm::pack::{MAX_MR, MAX_NR};
+use crate::softfloat::family::MAX_COMPONENTS;
+
+// The kernels below hard-code "one row == one zmm register"; refuse to
+// compile if the wide micro-tile geometry ever drifts.
+const _: () = assert!(MAX_MR == 8 && MAX_NR == 16, "AVX-512 lane is written for an 8x16 micro-tile");
+
+/// AVX-512 `MAX_MR × MAX_NR` f32 micro-kernel: one ZMM accumulator per
+/// row, one fused multiply-add per row per k step. Panel layout and the
+/// chain-per-cell semantics match [`super::scalar::kernel_f32`] at the
+/// wide tile dims; only the per-step rounding differs (fused, one
+/// rounding). Fully overwrites `out[..MAX_MR·MAX_NR]` (row `i` at
+/// `out[i·MAX_NR..]`).
+///
+/// # Safety
+///
+/// The caller must ensure the executing CPU supports AVX-512F
+/// (`Lane::Avx512.is_available()`, checked by [`super::dispatch`]).
+/// `apanel`/`bpanel` must be **wide** panels for the same `kc`:
+/// `apanel.len() == kc·MAX_MR` and `bpanel.len() == kc·MAX_NR`; `out`
+/// must hold at least `MAX_MR·MAX_NR` elements.
+#[target_feature(enable = "avx512f")]
+pub unsafe fn kernel_f32(apanel: &[f32], bpanel: &[f32], out: &mut [f32]) {
+    let steps = bpanel.len() / MAX_NR;
+    debug_assert_eq!(apanel.len(), steps * MAX_MR);
+    debug_assert_eq!(bpanel.len(), steps * MAX_NR);
+    debug_assert!(out.len() >= MAX_MR * MAX_NR);
+    let a = apanel.as_ptr();
+    let b = bpanel.as_ptr();
+    let mut acc = [_mm512_setzero_ps(); MAX_MR];
+    for p in 0..steps {
+        let bv = _mm512_loadu_ps(b.add(p * MAX_NR));
+        let ap = a.add(p * MAX_MR);
+        for (i, accr) in acc.iter_mut().enumerate() {
+            *accr = _mm512_fmadd_ps(_mm512_set1_ps(*ap.add(i)), bv, *accr);
+        }
+    }
+    store_tile(&acc, out);
+}
+
+/// AVX-512 fused three-term cube micro-kernel over dual-component wide
+/// panels (layout of [`crate::gemm::pack::pack_a_dual`] /
+/// [`crate::gemm::pack::pack_b_dual`] at `(MAX_MR, MAX_NR)`): per k
+/// step, the high·high plane takes `hh = fma(a_h, b_h, hh)` and the
+/// correction plane takes `corr = fma(a_h, b_l, fma(a_l, b_h, corr))`
+/// — this lane's pinned correction-chain order, applied per 16-lane
+/// row. Corrections aggregate among themselves and meet the high
+/// product only at the tile combine (Sec. 4.4), exactly as in
+/// [`super::scalar::kernel_cube`]. Fully overwrites
+/// `hh[..MAX_MR·MAX_NR]` and `corr[..MAX_MR·MAX_NR]`.
+///
+/// # Safety
+///
+/// The caller must ensure the executing CPU supports AVX-512F
+/// (`Lane::Avx512.is_available()`, checked by [`super::dispatch`]).
+/// `apanel`/`bpanel` must be wide dual panels for the same `kc`:
+/// `apanel.len() == kc·2·MAX_MR` and `bpanel.len() == kc·2·MAX_NR`;
+/// `hh`/`corr` must each hold at least `MAX_MR·MAX_NR` elements.
+#[target_feature(enable = "avx512f")]
+pub unsafe fn kernel_cube(apanel: &[f32], bpanel: &[f32], hh: &mut [f32], corr: &mut [f32]) {
+    let steps = bpanel.len() / (2 * MAX_NR);
+    debug_assert_eq!(apanel.len(), steps * 2 * MAX_MR);
+    debug_assert_eq!(bpanel.len(), steps * 2 * MAX_NR);
+    debug_assert!(hh.len() >= MAX_MR * MAX_NR && corr.len() >= MAX_MR * MAX_NR);
+    let a = apanel.as_ptr();
+    let b = bpanel.as_ptr();
+    let mut hacc = [_mm512_setzero_ps(); MAX_MR];
+    let mut cacc = [_mm512_setzero_ps(); MAX_MR];
+    for p in 0..steps {
+        let bh = _mm512_loadu_ps(b.add(p * 2 * MAX_NR));
+        let bl = _mm512_loadu_ps(b.add(p * 2 * MAX_NR + MAX_NR));
+        let ap = a.add(p * 2 * MAX_MR);
+        for (i, (hhr, corrr)) in hacc.iter_mut().zip(cacc.iter_mut()).enumerate() {
+            let ah = _mm512_set1_ps(*ap.add(i));
+            let al = _mm512_set1_ps(*ap.add(MAX_MR + i));
+            *hhr = _mm512_fmadd_ps(ah, bh, *hhr);
+            *corrr = _mm512_fmadd_ps(ah, bl, _mm512_fmadd_ps(al, bh, *corrr));
+        }
+    }
+    store_tile(&hacc, hh);
+    store_tile(&cacc, corr);
+}
+
+/// AVX-512 generic N-term family micro-kernel over `ncomp`-component
+/// wide panels ([`crate::gemm::pack::pack_a_multi`] / `pack_b_multi`
+/// layout at `(MAX_MR, MAX_NR)`): one ZMM accumulator plane per term
+/// order `d < ncomp`. Per k step each order chains its kept products as
+/// nested FMAs with the *highest* `a` component joining first — the
+/// same convention as [`kernel_cube`]'s correction chain, generalized.
+/// Fully overwrites `out[..MAX_COMPONENTS·MAX_MR·MAX_NR]` (plane `d` at
+/// `out[d·MAX_MR·MAX_NR..]`); planes of order ≥ `ncomp` are exactly
+/// zero.
+///
+/// The engine dispatches `ncomp == 2` to [`kernel_cube`] instead; this
+/// generic path serves `ncomp ≥ 3`.
+///
+/// # Safety
+///
+/// The caller must ensure the executing CPU supports AVX-512F
+/// (`Lane::Avx512.is_available()`, checked by [`super::dispatch`]).
+/// `apanel`/`bpanel` must be `ncomp`-component wide panels for the same
+/// `kc`: `apanel.len() == kc·ncomp·MAX_MR` and
+/// `bpanel.len() == kc·ncomp·MAX_NR`, with
+/// `2 <= ncomp <= MAX_COMPONENTS`; `out` must hold at least
+/// `MAX_COMPONENTS·MAX_MR·MAX_NR` elements.
+#[target_feature(enable = "avx512f")]
+pub unsafe fn kernel_family(apanel: &[f32], bpanel: &[f32], ncomp: usize, out: &mut [f32]) {
+    debug_assert!((2..=MAX_COMPONENTS).contains(&ncomp));
+    let steps = bpanel.len() / (ncomp * MAX_NR);
+    debug_assert_eq!(apanel.len(), steps * ncomp * MAX_MR);
+    debug_assert_eq!(bpanel.len(), steps * ncomp * MAX_NR);
+    debug_assert!(out.len() >= MAX_COMPONENTS * MAX_MR * MAX_NR);
+    let a = apanel.as_ptr();
+    let b = bpanel.as_ptr();
+    let mut acc = [[_mm512_setzero_ps(); MAX_MR]; MAX_COMPONENTS];
+    for p in 0..steps {
+        let mut bv = [_mm512_setzero_ps(); MAX_COMPONENTS];
+        for (c, slot) in bv.iter_mut().enumerate().take(ncomp) {
+            *slot = _mm512_loadu_ps(b.add(p * ncomp * MAX_NR + c * MAX_NR));
+        }
+        let ap = a.add(p * ncomp * MAX_MR);
+        for i in 0..MAX_MR {
+            let mut av = [_mm512_setzero_ps(); MAX_COMPONENTS];
+            for (c, slot) in av.iter_mut().enumerate().take(ncomp) {
+                *slot = _mm512_set1_ps(*ap.add(c * MAX_MR + i));
+            }
+            for (d, plane) in acc.iter_mut().enumerate().take(ncomp) {
+                let mut v = plane[i];
+                for ci in (0..=d).rev() {
+                    v = _mm512_fmadd_ps(av[ci], bv[d - ci], v);
+                }
+                plane[i] = v;
+            }
+        }
+    }
+    for (d, plane) in acc.iter().enumerate() {
+        store_tile(plane, &mut out[d * MAX_MR * MAX_NR..(d + 1) * MAX_MR * MAX_NR]);
+    }
+}
+
+/// Spill `MAX_MR` ZMM accumulators into the flat row-major tile the
+/// shared C-update path ([`crate::gemm::blocked`]) consumes. Compiled
+/// with the same target features as its callers.
+#[target_feature(enable = "avx512f")]
+unsafe fn store_tile(acc: &[__m512; MAX_MR], out: &mut [f32]) {
+    let p = out.as_mut_ptr();
+    for (i, v) in acc.iter().enumerate() {
+        _mm512_storeu_ps(p.add(i * MAX_NR), *v);
+    }
+}

@@ -6,45 +6,64 @@
 //! 1. a programmatic [`force_lane`] call (benches and the dispatch test
 //!    suite use this to pin a lane mid-process);
 //! 2. the `SGEMM_CUBE_KERNEL` environment variable — `scalar`, `avx2`,
-//!    `neon` or `auto`; an unavailable or unrecognized value warns on
-//!    stderr and falls back to detection, it never aborts (same
-//!    contract as `SGEMM_CUBE_SCHEDULE`,
+//!    `neon`, `avx512` or `auto`; an unavailable or unrecognized value
+//!    warns on stderr and falls back to detection, it never aborts
+//!    (same contract as `SGEMM_CUBE_SCHEDULE`,
 //!    [`crate::gemm::backend::default_schedule`]);
-//! 3. CPU feature detection ([`detect_lane`]): AVX2+FMA on x86_64,
-//!    NEON on aarch64, scalar otherwise.
+//! 3. CPU feature detection ([`detect_lane`]): AVX-512F, then AVX2+FMA
+//!    on x86_64, NEON on aarch64, scalar otherwise.
 //!
 //! Selection state is one relaxed `AtomicU8`: a load on the sweep path,
 //! a store in [`force_lane`]. Forcing a lane affects *subsequent*
 //! sweeps; tests that force lanes serialize themselves (see
 //! `tests/dispatch.rs`) because the knob is process-global.
+//!
+//! **Lanes carry their micro-tile geometry** ([`Lane::tile_dims`]): the
+//! scalar/AVX2/NEON lanes run the narrow `MR × NR = 4 × 8` tile, the
+//! AVX-512 lane the wide `MAX_MR × MAX_NR = 8 × 16` tile its 32-zmm
+//! register file supports. Because panel layout follows the tile dims,
+//! a caller must resolve the lane **once** per GEMM call and use it for
+//! both packing and kernel dispatch — the sweep drivers in
+//! [`crate::gemm::blocked`] and the ring drivers in
+//! [`crate::exec::pipeline`] all take the lane as an explicit
+//! parameter for exactly this reason.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
 use crate::gemm::kernels::scalar;
-use crate::gemm::pack::{MR, NR};
+use crate::gemm::pack::{MAX_MR, MAX_NR, MR, NR};
 use crate::softfloat::family::MAX_COMPONENTS;
 
 /// One micro-kernel implementation family. The lane decides how each
 /// FP32 accumulation-chain step rounds (see the
-/// [`crate::gemm::kernels`] contract); everything above the kernels —
-/// packing, block order, schedules — is lane-independent.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// [`crate::gemm::kernels`] contract) **and** the micro-tile / panel
+/// geometry ([`Lane::tile_dims`]); block order and schedules remain
+/// lane-independent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Lane {
     /// Portable Rust ([`super::scalar`]): rounded multiply + rounded
-    /// add per step. Always available.
+    /// add per step. Always available. Narrow 4×8 tile.
     Scalar,
     /// AVX2 + FMA intrinsics (the arch-gated `super::avx2` module):
     /// fused multiply-add, one rounding per step. x86_64 with AVX2 and
-    /// FMA only.
+    /// FMA only. Narrow 4×8 tile.
     Avx2,
     /// NEON intrinsics (the arch-gated `super::neon` module): fused
-    /// multiply-add, one rounding per step. aarch64 only.
+    /// multiply-add, one rounding per step. aarch64 only. Narrow 4×8
+    /// tile.
     Neon,
+    /// AVX-512F intrinsics (the arch-gated `super::avx512` module):
+    /// fused multiply-add, one rounding per step, over the wide 8×16
+    /// tile re-derived from the 32-entry zmm register file
+    /// ([`crate::sim::blocking::micro_tile`]). x86_64 with AVX-512F
+    /// only (512-bit FMA is part of AVX-512F).
+    Avx512,
 }
 
 impl Lane {
-    /// Every lane, in preference order (most portable last).
-    pub const ALL: [Lane; 3] = [Lane::Avx2, Lane::Neon, Lane::Scalar];
+    /// Every lane, in preference order (widest first, most portable
+    /// last).
+    pub const ALL: [Lane; 4] = [Lane::Avx512, Lane::Avx2, Lane::Neon, Lane::Scalar];
 
     /// The lane's `SGEMM_CUBE_KERNEL` spelling (also the bench/EXPERIMENTS
     /// label).
@@ -53,6 +72,7 @@ impl Lane {
             Lane::Scalar => "scalar",
             Lane::Avx2 => "avx2",
             Lane::Neon => "neon",
+            Lane::Avx512 => "avx512",
         }
     }
 
@@ -64,6 +84,7 @@ impl Lane {
             "scalar" => Some(Lane::Scalar),
             "avx2" => Some(Lane::Avx2),
             "neon" => Some(Lane::Neon),
+            "avx512" => Some(Lane::Avx512),
             _ => None,
         }
     }
@@ -82,6 +103,10 @@ impl Lane {
             }
             #[cfg(not(target_arch = "x86_64"))]
             Lane::Avx2 => false,
+            #[cfg(target_arch = "x86_64")]
+            Lane::Avx512 => std::arch::is_x86_feature_detected!("avx512f"),
+            #[cfg(not(target_arch = "x86_64"))]
+            Lane::Avx512 => false,
             #[cfg(target_arch = "aarch64")]
             Lane::Neon => std::arch::is_aarch64_feature_detected!("neon"),
             #[cfg(not(target_arch = "aarch64"))]
@@ -90,12 +115,25 @@ impl Lane {
     }
 
     /// Stable numeric code for bench records (`kernel/lane` in
-    /// BENCH_gemm.json): scalar = 0, avx2 = 1, neon = 2.
+    /// BENCH_gemm.json): scalar = 0, avx2 = 1, neon = 2, avx512 = 3.
     pub fn code(self) -> u8 {
         match self {
             Lane::Scalar => 0,
             Lane::Avx2 => 1,
             Lane::Neon => 2,
+            Lane::Avx512 => 3,
+        }
+    }
+
+    /// The `(mr, nr)` micro-tile this lane runs — and therefore the
+    /// panel interleave every operand packed for this lane uses. The
+    /// narrow lanes share `(MR, NR) = (4, 8)`; the AVX-512 lane's
+    /// 32-zmm file supports `(MAX_MR, MAX_NR) = (8, 16)`
+    /// (`sim::blocking::micro_tile(32, 16)`).
+    pub fn tile_dims(self) -> (usize, usize) {
+        match self {
+            Lane::Avx512 => (MAX_MR, MAX_NR),
+            Lane::Scalar | Lane::Avx2 | Lane::Neon => (MR, NR),
         }
     }
 
@@ -104,6 +142,7 @@ impl Lane {
             0 => Lane::Scalar,
             1 => Lane::Avx2,
             2 => Lane::Neon,
+            3 => Lane::Avx512,
             _ => unreachable!("invalid lane code {code}"),
         }
     }
@@ -141,8 +180,8 @@ fn initial_lane(env: Option<&str>) -> Lane {
         }
         None => {
             eprintln!(
-                "SGEMM_CUBE_KERNEL={v}: unrecognized lane (expected scalar|avx2|neon|auto); \
-                 falling back to '{}'",
+                "SGEMM_CUBE_KERNEL={v}: unrecognized lane \
+                 (expected scalar|avx2|neon|avx512|auto); falling back to '{}'",
                 detect_lane()
             );
             detect_lane()
@@ -150,17 +189,18 @@ fn initial_lane(env: Option<&str>) -> Lane {
     }
 }
 
-/// Unset marker for the lane cell; real lanes use [`Lane::code`] 0–2.
+/// Unset marker for the lane cell; real lanes use [`Lane::code`] 0–3.
 const LANE_UNSET: u8 = u8::MAX;
 
 static LANE: AtomicU8 = AtomicU8::new(LANE_UNSET);
 
 /// The lane the sweeps will use, resolving and caching the
 /// `SGEMM_CUBE_KERNEL` / detection decision on first use. One relaxed
-/// atomic load thereafter — cheap enough to call once per sweep, which
-/// is exactly what [`crate::gemm::blocked`] does (the lane is *not*
-/// re-read per micro-tile, so a concurrent [`force_lane`] never splits
-/// a single sweep across lanes).
+/// atomic load thereafter — cheap enough to call once per GEMM call,
+/// which is exactly what [`crate::gemm::blocked`] does (the lane is
+/// *not* re-read per sweep or per micro-tile, so a concurrent
+/// [`force_lane`] never splits one call's pack geometry from its
+/// kernels).
 pub fn active_lane() -> Lane {
     match LANE.load(Ordering::Relaxed) {
         LANE_UNSET => {
@@ -193,93 +233,139 @@ pub fn force_lane(lane: Lane) -> bool {
     true
 }
 
-/// Run the `MR × NR` f32 micro-kernel on an explicit lane. Panics if a
-/// SIMD lane is requested on a host that cannot execute it (the check
-/// is what makes this safe to expose; [`active_lane`] / [`force_lane`]
-/// only ever hand out available lanes).
+/// Copy a narrow-lane `[MR][NR]` register tile into the flat
+/// `mr·nr`-row-major output the sweeps consume (row `i` at
+/// `out[i·NR..]`).
 #[inline]
-pub fn kernel_f32(lane: Lane, apanel: &[f32], bpanel: &[f32]) -> [[f32; NR]; MR] {
+fn copy_narrow_tile(tile: &[[f32; NR]; MR], out: &mut [f32]) {
+    for (i, row) in tile.iter().enumerate() {
+        out[i * NR..(i + 1) * NR].copy_from_slice(row);
+    }
+}
+
+/// Run the lane's f32 micro-kernel, fully overwriting
+/// `out[..mr·nr]` (row-major: cell `(i, j)` at `out[i·nr + j]`, dims
+/// from [`Lane::tile_dims`]). Panels must be packed with the *same*
+/// lane's tile dims. Panics if a SIMD lane is requested on a host that
+/// cannot execute it (the check is what makes this safe to expose;
+/// [`active_lane`] / [`force_lane`] only ever hand out available
+/// lanes).
+#[inline]
+pub fn kernel_f32(lane: Lane, apanel: &[f32], bpanel: &[f32], out: &mut [f32]) {
     match lane {
-        Lane::Scalar => scalar::kernel_f32(apanel, bpanel),
+        Lane::Scalar => copy_narrow_tile(&scalar::kernel_f32(apanel, bpanel), out),
         #[cfg(target_arch = "x86_64")]
         Lane::Avx2 => {
             assert!(lane.is_available(), "avx2 lane dispatched on a host without AVX2+FMA");
             // SAFETY: availability checked above; panel lengths are
             // validated by the kernel's debug asserts.
-            unsafe { super::avx2::kernel_f32(apanel, bpanel) }
+            copy_narrow_tile(unsafe { &super::avx2::kernel_f32(apanel, bpanel) }, out)
+        }
+        #[cfg(target_arch = "x86_64")]
+        Lane::Avx512 => {
+            assert!(lane.is_available(), "avx512 lane dispatched on a host without AVX-512F");
+            // SAFETY: availability checked above.
+            unsafe { super::avx512::kernel_f32(apanel, bpanel, out) }
         }
         #[cfg(target_arch = "aarch64")]
         Lane::Neon => {
             assert!(lane.is_available(), "neon lane dispatched on a host without NEON");
             // SAFETY: availability checked above.
-            unsafe { super::neon::kernel_f32(apanel, bpanel) }
+            copy_narrow_tile(unsafe { &super::neon::kernel_f32(apanel, bpanel) }, out)
         }
         other => panic!("lane '{other}' cannot execute on this target"),
     }
 }
 
-/// Run the fused three-term cube micro-kernel on an explicit lane
-/// (dual-component panels; see [`kernel_f32`] for the dispatch
+/// Run the lane's fused three-term cube micro-kernel over
+/// dual-component panels, fully overwriting the high·high plane
+/// `hh[..mr·nr]` and the correction plane `corr[..mr·nr]` (row-major,
+/// dims from [`Lane::tile_dims`]; see [`kernel_f32`] for the dispatch
 /// contract).
 #[inline]
-pub fn kernel_cube(
-    lane: Lane,
-    apanel: &[f32],
-    bpanel: &[f32],
-) -> ([[f32; NR]; MR], [[f32; NR]; MR]) {
+pub fn kernel_cube(lane: Lane, apanel: &[f32], bpanel: &[f32], hh: &mut [f32], corr: &mut [f32]) {
     match lane {
-        Lane::Scalar => scalar::kernel_cube(apanel, bpanel),
+        Lane::Scalar => {
+            let (h, c) = scalar::kernel_cube(apanel, bpanel);
+            copy_narrow_tile(&h, hh);
+            copy_narrow_tile(&c, corr);
+        }
         #[cfg(target_arch = "x86_64")]
         Lane::Avx2 => {
             assert!(lane.is_available(), "avx2 lane dispatched on a host without AVX2+FMA");
             // SAFETY: availability checked above.
-            unsafe { super::avx2::kernel_cube(apanel, bpanel) }
+            let (h, c) = unsafe { super::avx2::kernel_cube(apanel, bpanel) };
+            copy_narrow_tile(&h, hh);
+            copy_narrow_tile(&c, corr);
+        }
+        #[cfg(target_arch = "x86_64")]
+        Lane::Avx512 => {
+            assert!(lane.is_available(), "avx512 lane dispatched on a host without AVX-512F");
+            // SAFETY: availability checked above.
+            unsafe { super::avx512::kernel_cube(apanel, bpanel, hh, corr) }
         }
         #[cfg(target_arch = "aarch64")]
         Lane::Neon => {
             assert!(lane.is_available(), "neon lane dispatched on a host without NEON");
             // SAFETY: availability checked above.
-            unsafe { super::neon::kernel_cube(apanel, bpanel) }
+            let (h, c) = unsafe { super::neon::kernel_cube(apanel, bpanel) };
+            copy_narrow_tile(&h, hh);
+            copy_narrow_tile(&c, corr);
         }
         other => panic!("lane '{other}' cannot execute on this target"),
     }
 }
 
 /// Run the generic N-term family micro-kernel on an explicit lane over
-/// `ncomp`-component panels; returns one accumulator plane per term
-/// order (planes past `ncomp` are exactly zero).
+/// `ncomp`-component panels, fully overwriting
+/// `out[..MAX_COMPONENTS·mr·nr]`: one row-major accumulator plane per
+/// term order, plane `d` at `out[d·mr·nr..]`, planes past `ncomp`
+/// exactly zero.
 ///
 /// `ncomp == 2` dispatches to the dedicated [`kernel_cube`] — the dual
 /// and 2-component panel layouts coincide, and routing through the
 /// original kernel keeps every N = 2 tier bit-identical to the
 /// pre-family engine. `ncomp >= 3` runs the lane's generic fused sweep.
 #[inline]
-pub fn kernel_family(
-    lane: Lane,
-    apanel: &[f32],
-    bpanel: &[f32],
-    ncomp: usize,
-) -> [[[f32; NR]; MR]; MAX_COMPONENTS] {
+pub fn kernel_family(lane: Lane, apanel: &[f32], bpanel: &[f32], ncomp: usize, out: &mut [f32]) {
+    let (mr, nr) = lane.tile_dims();
+    let plane = mr * nr;
     if ncomp == 2 {
-        let (hh, corr) = kernel_cube(lane, apanel, bpanel);
-        let mut out = [[[0.0f32; NR]; MR]; MAX_COMPONENTS];
-        out[0] = hh;
-        out[1] = corr;
-        return out;
+        out[2 * plane..MAX_COMPONENTS * plane].fill(0.0);
+        let (hh, rest) = out.split_at_mut(plane);
+        kernel_cube(lane, apanel, bpanel, hh, &mut rest[..plane]);
+        return;
     }
     match lane {
-        Lane::Scalar => scalar::kernel_family(apanel, bpanel, ncomp),
+        Lane::Scalar => {
+            let planes = scalar::kernel_family(apanel, bpanel, ncomp);
+            for (d, p) in planes.iter().enumerate() {
+                copy_narrow_tile(p, &mut out[d * plane..(d + 1) * plane]);
+            }
+        }
         #[cfg(target_arch = "x86_64")]
         Lane::Avx2 => {
             assert!(lane.is_available(), "avx2 lane dispatched on a host without AVX2+FMA");
             // SAFETY: availability checked above.
-            unsafe { super::avx2::kernel_family(apanel, bpanel, ncomp) }
+            let planes = unsafe { super::avx2::kernel_family(apanel, bpanel, ncomp) };
+            for (d, p) in planes.iter().enumerate() {
+                copy_narrow_tile(p, &mut out[d * plane..(d + 1) * plane]);
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        Lane::Avx512 => {
+            assert!(lane.is_available(), "avx512 lane dispatched on a host without AVX-512F");
+            // SAFETY: availability checked above.
+            unsafe { super::avx512::kernel_family(apanel, bpanel, ncomp, out) }
         }
         #[cfg(target_arch = "aarch64")]
         Lane::Neon => {
             assert!(lane.is_available(), "neon lane dispatched on a host without NEON");
             // SAFETY: availability checked above.
-            unsafe { super::neon::kernel_family(apanel, bpanel, ncomp) }
+            let planes = unsafe { super::neon::kernel_family(apanel, bpanel, ncomp) };
+            for (d, p) in planes.iter().enumerate() {
+                copy_narrow_tile(p, &mut out[d * plane..(d + 1) * plane]);
+            }
         }
         other => panic!("lane '{other}' cannot execute on this target"),
     }
@@ -290,17 +376,18 @@ mod tests {
     use super::*;
     use crate::util::rng::Rng;
 
-    fn panels(kc: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    /// Random single-component panels for a `mr × nr` lane tile.
+    fn panels(kc: usize, mr: usize, nr: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
         let mut rng = Rng::new(seed);
-        let ap: Vec<f32> = (0..kc * MR).map(|_| rng.f32_range(-1.0, 1.0)).collect();
-        let bp: Vec<f32> = (0..kc * NR).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let ap: Vec<f32> = (0..kc * mr).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let bp: Vec<f32> = (0..kc * nr).map(|_| rng.f32_range(-1.0, 1.0)).collect();
         (ap, bp)
     }
 
-    fn dual_panels(kc: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    fn multi_panels(kc: usize, ncomp: usize, mr: usize, nr: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
         let mut rng = Rng::new(seed);
-        let ap: Vec<f32> = (0..kc * 2 * MR).map(|_| rng.f32_range(-1.0, 1.0)).collect();
-        let bp: Vec<f32> = (0..kc * 2 * NR).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let ap: Vec<f32> = (0..kc * ncomp * mr).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let bp: Vec<f32> = (0..kc * ncomp * nr).map(|_| rng.f32_range(-1.0, 1.0)).collect();
         (ap, bp)
     }
 
@@ -313,8 +400,24 @@ mod tests {
             assert_eq!(format!("{lane}"), lane.name());
         }
         assert_eq!(Lane::parse("auto"), None);
-        assert_eq!(Lane::parse("avx512"), None);
+        assert_eq!(Lane::parse("avx"), None);
         assert_eq!(Lane::parse(""), None);
+    }
+
+    #[test]
+    fn tile_dims_follow_the_register_files() {
+        // Narrow lanes share the 4×8 tile; the AVX-512 lane runs the
+        // wide 8×16 tile micro_tile derives from 32 zmm registers.
+        for lane in [Lane::Scalar, Lane::Avx2, Lane::Neon] {
+            assert_eq!(lane.tile_dims(), (MR, NR), "{lane}");
+        }
+        assert_eq!(Lane::Avx512.tile_dims(), (MAX_MR, MAX_NR));
+        // MAX_* really is the maximum over the registry — the sweeps'
+        // stack tiles depend on it.
+        for lane in Lane::ALL {
+            let (mr, nr) = lane.tile_dims();
+            assert!(mr <= MAX_MR && nr <= MAX_NR, "{lane}");
+        }
     }
 
     #[test]
@@ -369,77 +472,99 @@ mod tests {
 
     #[test]
     fn lanes_agree_within_fma_rounding() {
-        // Scalar vs. every available SIMD lane on the same panels: each
-        // chain step differs by at most a couple of roundings, so the
-        // results agree within a standard forward-error envelope of the
-        // absolute-value dot product. Explicit-lane calls — no global
-        // state, no races with concurrently running sweeps.
+        // Every available lane against a direct f64 reference on
+        // logically identical operands (each lane packs its own tile
+        // geometry from common coefficient streams): each f32 chain
+        // step differs from exact by at most a couple of roundings, so
+        // the results agree within a standard forward-error envelope of
+        // the absolute-value dot product. Explicit-lane calls — no
+        // global state, no races with concurrently running sweeps.
         let kc = 96;
-        let envelope = |absdot: f32| 4.0 * (kc as f32) * f32::EPSILON * absdot.max(1.0);
-        let (ap, bp) = panels(kc, 7);
-        let want = kernel_f32(Lane::Scalar, &ap, &bp);
-        let (dap, dbp) = dual_panels(kc, 8);
-        let (whh, wcorr) = kernel_cube(Lane::Scalar, &dap, &dbp);
+        let envelope = |absdot: f64| 4.0 * (kc as f64) * (f32::EPSILON as f64) * absdot.max(1.0);
+        // Common logical operands: A is MAX_MR × kc, B is kc × MAX_NR
+        // (dual components for the cube check).
+        let mut rng = Rng::new(7);
+        let a: Vec<f32> = (0..MAX_MR * kc).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let b: Vec<f32> = (0..kc * MAX_NR).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let al: Vec<f32> = (0..MAX_MR * kc).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let bl: Vec<f32> = (0..kc * MAX_NR).map(|_| rng.f32_range(-1.0, 1.0)).collect();
         for lane in Lane::ALL {
-            if !lane.is_available() || lane == Lane::Scalar {
+            if !lane.is_available() {
                 continue;
             }
-            let got = kernel_f32(lane, &ap, &bp);
-            for i in 0..MR {
-                for j in 0..NR {
-                    let mut absdot = 0.0f32;
-                    for p in 0..kc {
-                        absdot += ap[p * MR + i].abs() * bp[p * NR + j].abs();
-                    }
-                    let (x, y) = (want[i][j], got[i][j]);
-                    assert!((x - y).abs() <= envelope(absdot), "{lane} f32 [{i}][{j}]: {x} vs {y}");
+            let (mr, nr) = lane.tile_dims();
+            // Pack this lane's panels from the common operands.
+            let mut ap = vec![0.0f32; kc * mr];
+            let mut bp = vec![0.0f32; kc * nr];
+            let mut dap = vec![0.0f32; kc * 2 * mr];
+            let mut dbp = vec![0.0f32; kc * 2 * nr];
+            for p in 0..kc {
+                for i in 0..mr {
+                    ap[p * mr + i] = a[i * kc + p];
+                    dap[p * 2 * mr + i] = a[i * kc + p];
+                    dap[p * 2 * mr + mr + i] = al[i * kc + p];
+                }
+                for j in 0..nr {
+                    bp[p * nr + j] = b[p * MAX_NR + j];
+                    dbp[p * 2 * nr + j] = b[p * MAX_NR + j];
+                    dbp[p * 2 * nr + nr + j] = bl[p * MAX_NR + j];
                 }
             }
-            let (ghh, gcorr) = kernel_cube(lane, &dap, &dbp);
-            for i in 0..MR {
-                for j in 0..NR {
-                    let mut hi = 0.0f32;
-                    let mut co = 0.0f32;
+            let mut tile = vec![0.0f32; mr * nr];
+            kernel_f32(lane, &ap, &bp, &mut tile);
+            let mut hh = vec![0.0f32; mr * nr];
+            let mut corr = vec![0.0f32; mr * nr];
+            kernel_cube(lane, &dap, &dbp, &mut hh, &mut corr);
+            for i in 0..mr {
+                for j in 0..nr {
+                    let mut dot = 0.0f64;
+                    let mut absdot = 0.0f64;
+                    let mut hi = 0.0f64;
+                    let mut abshi = 0.0f64;
+                    let mut co = 0.0f64;
+                    let mut absco = 0.0f64;
                     for p in 0..kc {
-                        let (ah, al) = (dap[p * 2 * MR + i].abs(), dap[p * 2 * MR + MR + i].abs());
-                        let (bh, bl) = (dbp[p * 2 * NR + j].abs(), dbp[p * 2 * NR + NR + j].abs());
+                        let (ah, alo) = (a[i * kc + p] as f64, al[i * kc + p] as f64);
+                        let (bh, blo) = (b[p * MAX_NR + j] as f64, bl[p * MAX_NR + j] as f64);
+                        dot += ah * bh;
+                        absdot += (ah * bh).abs();
                         hi += ah * bh;
-                        co += ah * bl + al * bh;
+                        abshi += (ah * bh).abs();
+                        co += ah * blo + alo * bh;
+                        absco += (ah * blo).abs() + (alo * bh).abs();
                     }
-                    let (x, y) = (whh[i][j], ghh[i][j]);
-                    assert!((x - y).abs() <= envelope(hi), "{lane} hh [{i}][{j}]: {x} vs {y}");
-                    let (x, y) = (wcorr[i][j], gcorr[i][j]);
-                    assert!((x - y).abs() <= envelope(co), "{lane} corr [{i}][{j}]: {x} vs {y}");
+                    let got = tile[i * nr + j] as f64;
+                    assert!((got - dot).abs() <= envelope(absdot), "{lane} f32 [{i}][{j}]");
+                    let ghh = hh[i * nr + j] as f64;
+                    assert!((ghh - hi).abs() <= envelope(abshi), "{lane} hh [{i}][{j}]");
+                    let gco = corr[i * nr + j] as f64;
+                    assert!((gco - co).abs() <= envelope(absco), "{lane} corr [{i}][{j}]");
                 }
             }
         }
-    }
-
-    fn multi_panels(kc: usize, ncomp: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
-        let mut rng = Rng::new(seed);
-        let ap: Vec<f32> = (0..kc * ncomp * MR).map(|_| rng.f32_range(-1.0, 1.0)).collect();
-        let bp: Vec<f32> = (0..kc * ncomp * NR).map(|_| rng.f32_range(-1.0, 1.0)).collect();
-        (ap, bp)
     }
 
     #[test]
     fn family_at_two_components_is_kernel_cube_bitwise() {
         // The N = 2 family tier must be served by the original cube
         // kernel — same panels in, same bits out, on every lane.
-        let (dap, dbp) = dual_panels(96, 21);
         for lane in Lane::ALL {
             if !lane.is_available() {
                 continue;
             }
-            let (hh, corr) = kernel_cube(lane, &dap, &dbp);
-            let fam = kernel_family(lane, &dap, &dbp, 2);
-            for i in 0..MR {
-                for j in 0..NR {
-                    assert_eq!(fam[0][i][j].to_bits(), hh[i][j].to_bits(), "{lane}");
-                    assert_eq!(fam[1][i][j].to_bits(), corr[i][j].to_bits(), "{lane}");
-                    assert_eq!(fam[2][i][j], 0.0, "{lane}");
-                    assert_eq!(fam[3][i][j], 0.0, "{lane}");
-                }
+            let (mr, nr) = lane.tile_dims();
+            let plane = mr * nr;
+            let (dap, dbp) = multi_panels(96, 2, mr, nr, 21);
+            let mut hh = vec![0.0f32; plane];
+            let mut corr = vec![0.0f32; plane];
+            kernel_cube(lane, &dap, &dbp, &mut hh, &mut corr);
+            let mut fam = vec![f32::NAN; MAX_COMPONENTS * plane];
+            kernel_family(lane, &dap, &dbp, 2, &mut fam);
+            for c in 0..plane {
+                assert_eq!(fam[c].to_bits(), hh[c].to_bits(), "{lane}");
+                assert_eq!(fam[plane + c].to_bits(), corr[c].to_bits(), "{lane}");
+                assert_eq!(fam[2 * plane + c], 0.0, "{lane}");
+                assert_eq!(fam[3 * plane + c], 0.0, "{lane}");
             }
         }
     }
@@ -448,49 +573,32 @@ mod tests {
     fn family_three_components_lanes_agree_within_fma_rounding() {
         let kc = 64;
         let ncomp = 3;
-        let envelope = |absdot: f32| 4.0 * (kc as f32) * f32::EPSILON * absdot.max(1.0);
-        let (ap, bp) = multi_panels(kc, ncomp, 22);
-        let want = kernel_family(Lane::Scalar, &ap, &bp, ncomp);
-        // Unused planes are exactly zero, and plane d holds the kept
-        // order-d products (checked against a direct f64 sum).
-        for i in 0..MR {
-            for j in 0..NR {
-                assert_eq!(want[3][i][j], 0.0);
-                for d in 0..ncomp {
-                    let mut sum = 0.0f64;
-                    for p in 0..kc {
-                        for ci in 0..=d {
-                            sum += ap[p * ncomp * MR + ci * MR + i] as f64
-                                * bp[p * ncomp * NR + (d - ci) * NR + j] as f64;
-                        }
-                    }
-                    let got = want[d][i][j] as f64;
-                    assert!(
-                        (sum - got).abs() <= 1e-4 * sum.abs().max(1.0),
-                        "d={d} [{i}][{j}]: {sum} vs {got}"
-                    );
-                }
-            }
-        }
         for lane in Lane::ALL {
-            if !lane.is_available() || lane == Lane::Scalar {
+            if !lane.is_available() {
                 continue;
             }
-            let got = kernel_family(lane, &ap, &bp, ncomp);
-            for d in 0..ncomp {
-                for i in 0..MR {
-                    for j in 0..NR {
-                        let mut absdot = 0.0f32;
+            let (mr, nr) = lane.tile_dims();
+            let plane = mr * nr;
+            let (ap, bp) = multi_panels(kc, ncomp, mr, nr, 22);
+            let mut got = vec![f32::NAN; MAX_COMPONENTS * plane];
+            kernel_family(lane, &ap, &bp, ncomp, &mut got);
+            // Unused planes are exactly zero, and plane d holds the
+            // kept order-d products (checked against a direct f64 sum).
+            for i in 0..mr {
+                for j in 0..nr {
+                    assert_eq!(got[3 * plane + i * nr + j], 0.0, "{lane}");
+                    for d in 0..ncomp {
+                        let mut sum = 0.0f64;
                         for p in 0..kc {
                             for ci in 0..=d {
-                                absdot += ap[p * ncomp * MR + ci * MR + i].abs()
-                                    * bp[p * ncomp * NR + (d - ci) * NR + j].abs();
+                                sum += ap[p * ncomp * mr + ci * mr + i] as f64
+                                    * bp[p * ncomp * nr + (d - ci) * nr + j] as f64;
                             }
                         }
-                        let (x, y) = (want[d][i][j], got[d][i][j]);
+                        let v = got[d * plane + i * nr + j] as f64;
                         assert!(
-                            (x - y).abs() <= envelope(absdot),
-                            "{lane} d={d} [{i}][{j}]: {x} vs {y}"
+                            (sum - v).abs() <= 1e-4 * sum.abs().max(1.0),
+                            "{lane} d={d} [{i}][{j}]: {sum} vs {v}"
                         );
                     }
                 }
@@ -500,19 +608,19 @@ mod tests {
 
     #[test]
     fn family_kernel_is_deterministic_per_lane() {
-        let (ap, bp) = multi_panels(48, 3, 23);
         for lane in Lane::ALL {
             if !lane.is_available() {
                 continue;
             }
-            let x = kernel_family(lane, &ap, &bp, 3);
-            let y = kernel_family(lane, &ap, &bp, 3);
-            for (px, py) in x.iter().zip(&y) {
-                for (rx, ry) in px.iter().zip(py) {
-                    for (u, v) in rx.iter().zip(ry) {
-                        assert_eq!(u.to_bits(), v.to_bits(), "{lane}");
-                    }
-                }
+            let (mr, nr) = lane.tile_dims();
+            let plane = mr * nr;
+            let (ap, bp) = multi_panels(48, 3, mr, nr, 23);
+            let mut x = vec![0.0f32; MAX_COMPONENTS * plane];
+            let mut y = vec![0.0f32; MAX_COMPONENTS * plane];
+            kernel_family(lane, &ap, &bp, 3, &mut x);
+            kernel_family(lane, &ap, &bp, 3, &mut y);
+            for (u, v) in x.iter().zip(&y) {
+                assert_eq!(u.to_bits(), v.to_bits(), "{lane}");
             }
         }
     }
@@ -522,26 +630,28 @@ mod tests {
         // Same lane + same panels -> identical bits, the kernel-level
         // half of the per-lane bit-identity contract (the schedule-level
         // half lives in tests/dispatch.rs).
-        let (ap, bp) = panels(64, 9);
-        let (dap, dbp) = dual_panels(64, 10);
         for lane in Lane::ALL {
             if !lane.is_available() {
                 continue;
             }
-            let x = kernel_f32(lane, &ap, &bp);
-            let y = kernel_f32(lane, &ap, &bp);
-            for (rx, ry) in x.iter().zip(&y) {
-                for (u, v) in rx.iter().zip(ry) {
-                    assert_eq!(u.to_bits(), v.to_bits(), "{lane}");
-                }
+            let (mr, nr) = lane.tile_dims();
+            let plane = mr * nr;
+            let (ap, bp) = panels(64, mr, nr, 9);
+            let (dap, dbp) = multi_panels(64, 2, mr, nr, 10);
+            let mut x = vec![0.0f32; plane];
+            let mut y = vec![0.0f32; plane];
+            kernel_f32(lane, &ap, &bp, &mut x);
+            kernel_f32(lane, &ap, &bp, &mut y);
+            for (u, v) in x.iter().zip(&y) {
+                assert_eq!(u.to_bits(), v.to_bits(), "{lane}");
             }
-            let (hx, cx) = kernel_cube(lane, &dap, &dbp);
-            let (hy, cy) = kernel_cube(lane, &dap, &dbp);
+            let (mut hx, mut cx) = (vec![0.0f32; plane], vec![0.0f32; plane]);
+            let (mut hy, mut cy) = (vec![0.0f32; plane], vec![0.0f32; plane]);
+            kernel_cube(lane, &dap, &dbp, &mut hx, &mut cx);
+            kernel_cube(lane, &dap, &dbp, &mut hy, &mut cy);
             for (px, py) in [(hx, hy), (cx, cy)] {
-                for (rx, ry) in px.iter().zip(&py) {
-                    for (u, v) in rx.iter().zip(ry) {
-                        assert_eq!(u.to_bits(), v.to_bits(), "{lane}");
-                    }
+                for (u, v) in px.iter().zip(&py) {
+                    assert_eq!(u.to_bits(), v.to_bits(), "{lane}");
                 }
             }
         }
@@ -549,15 +659,23 @@ mod tests {
 
     #[test]
     fn zero_step_panels_yield_zero_tiles() {
+        // Empty panels must fully overwrite the (garbage-prefilled)
+        // output with exact zeros — the sweeps rely on kernels never
+        // reading the previous tile.
         for lane in Lane::ALL {
             if !lane.is_available() {
                 continue;
             }
-            let tile = kernel_f32(lane, &[], &[]);
-            assert!(tile.iter().all(|r| r.iter().all(|&v| v == 0.0)), "{lane}");
-            let (hh, corr) = kernel_cube(lane, &[], &[]);
-            assert!(hh.iter().all(|r| r.iter().all(|&v| v == 0.0)), "{lane}");
-            assert!(corr.iter().all(|r| r.iter().all(|&v| v == 0.0)), "{lane}");
+            let (mr, nr) = lane.tile_dims();
+            let plane = mr * nr;
+            let mut tile = vec![f32::NAN; plane];
+            kernel_f32(lane, &[], &[], &mut tile);
+            assert!(tile.iter().all(|&v| v == 0.0), "{lane}");
+            let mut hh = vec![f32::NAN; plane];
+            let mut corr = vec![f32::NAN; plane];
+            kernel_cube(lane, &[], &[], &mut hh, &mut corr);
+            assert!(hh.iter().all(|&v| v == 0.0), "{lane}");
+            assert!(corr.iter().all(|&v| v == 0.0), "{lane}");
         }
     }
 }

@@ -1,7 +1,7 @@
 //! SIMD micro-kernels with runtime dispatch.
 //!
 //! The blocked engine ([`crate::gemm::blocked`]) executes exactly three
-//! inner loops: the `MR × NR` f32 micro-kernel, the fused three-term
+//! inner loops: the `mr × nr` f32 micro-kernel, the fused three-term
 //! cube micro-kernel, and the generic N-term family micro-kernel
 //! ([`kernel_family`], serving the `ncomp ≥ 3` precision-emulation
 //! tiers; `ncomp == 2` routes to the cube kernel for bit-identity).
@@ -9,11 +9,16 @@
 //! **lane** — plus the machinery that picks a lane at runtime:
 //!
 //! * [`scalar`] — portable Rust, always available, the reference the
-//!   other lanes are measured against;
+//!   other lanes are measured against (narrow 4×8 tile);
 //! * `avx2` (compiled on x86_64 only) — explicit `std::arch` AVX2 + FMA
-//!   intrinsics, one 8-lane YMM accumulator per micro-tile row;
+//!   intrinsics, one 8-lane YMM accumulator per micro-tile row (narrow
+//!   4×8 tile);
 //! * `neon` (compiled on aarch64 only) — explicit NEON intrinsics, two
-//!   4-lane q-register accumulators per micro-tile row;
+//!   4-lane q-register accumulators per micro-tile row (narrow 4×8
+//!   tile);
+//! * `avx512` (compiled on x86_64 only) — explicit AVX-512F intrinsics,
+//!   one 16-lane ZMM accumulator per row of the **wide 8×16 tile** the
+//!   32-zmm register file supports;
 //! * [`dispatch`] — the [`Lane`] enum, CPU feature detection, the
 //!   `SGEMM_CUBE_KERNEL` environment override, [`force_lane`] for
 //!   benches/tests, and the dispatching [`kernel_f32`] /
@@ -21,20 +26,23 @@
 //!
 //! # The per-lane accumulation-order contract
 //!
-//! Every lane consumes the same packed panel bytes
-//! ([`crate::gemm::pack`]) in the same k order and accumulates one FP32
-//! chain per output cell per k block. What differs between lanes is
-//! **rounding within each chain step**, so results are bit-identical
-//! *per lane*, not across lanes:
+//! Every lane consumes panels packed with **its own tile dims**
+//! ([`Lane::tile_dims`], feeding [`crate::gemm::pack`]) in the same k
+//! order and accumulates one FP32 chain per output cell per k block.
+//! What differs between lanes is **rounding within each chain step**
+//! (and, for the wide lane, how cells group into tiles — which never
+//! changes any single cell's chain), so results are bit-identical *per
+//! lane*, not across lanes:
 //!
 //! * **scalar**: `acc += a·b` is a rounded multiply followed by a
 //!   rounded add (two roundings per step); the cube correction chain is
 //!   `corr += (a_h·b_l + a_l·b_h)` — both products rounded, their sum
 //!   rounded, then the accumulate rounded.
-//! * **avx2** / **neon**: `acc = fma(a, b, acc)` fuses each
-//!   multiply-add into a single rounding; the cube correction chain is
-//!   pinned as `corr = fma(a_h, b_l, fma(a_l, b_h, corr))` — the
-//!   `a_l·b_h` term joins the chain first, each join a single rounding.
+//! * **avx2** / **neon** / **avx512**: `acc = fma(a, b, acc)` fuses
+//!   each multiply-add into a single rounding; the cube correction
+//!   chain is pinned as `corr = fma(a_h, b_l, fma(a_l, b_h, corr))` —
+//!   the `a_l·b_h` term joins the chain first, each join a single
+//!   rounding.
 //!
 //! Both shapes keep the paper's Sec. 4.4 termwise property — the two
 //! correction terms aggregate *with each other* across all k steps and
@@ -46,25 +54,31 @@
 //!
 //! What **is** guaranteed across schedules: for a fixed lane, every
 //! path through the engine — serial, overlap-B, overlap-AB, prepacked,
-//! sharded — produces bit-identical output, because packing, block
-//! order and the sweeps are shared and the lane is resolved once per
-//! sweep. Lane selection is the *only* numerics degree of freedom this
-//! module adds, and it is observable/forcible via `SGEMM_CUBE_KERNEL`
-//! (see [`dispatch::active_lane`]).
+//! sharded — produces bit-identical output, because block order and
+//! the sweeps are shared, panels are packed with that lane's dims on
+//! every path, and the lane is resolved once per GEMM call. Lane
+//! selection is the *only* numerics degree of freedom this module
+//! adds, and it is observable/forcible via `SGEMM_CUBE_KERNEL` (see
+//! [`dispatch::active_lane`]).
 //!
-//! The micro-tile geometry `MR = 4`, `NR = 8`
-//! ([`crate::gemm::pack::MR`]/[`crate::gemm::pack::NR`]) is shared by
-//! all lanes — it is derived from the vector register files in
-//! [`crate::sim::blocking::micro_tile`] (the fused cube kernel's two
-//! accumulator planes fit both the 16-YMM AVX2 file and the 32-q NEON
-//! file at 4×8, see that function's docs), so panel formats and
-//! prepacked operands are lane-independent.
+//! The micro-tile geometry is derived per register file in
+//! [`crate::sim::blocking::micro_tile`]: the 16-YMM AVX2 file and the
+//! 32-q NEON file both land on the narrow `MR × NR = 4 × 8` tile
+//! ([`crate::gemm::pack::MR`]/[`crate::gemm::pack::NR`]) the scalar
+//! lane shares, while the 32-zmm AVX-512 file affords the wide
+//! `MAX_MR × MAX_NR = 8 × 16` tile. Panel formats therefore follow the
+//! lane ([`Lane::tile_dims`]): prepacked operands record the lane they
+//! were packed for ([`crate::gemm::prepacked`]) and the prepack cache
+//! key includes it ([`crate::gemm::cache`]).
 
 pub mod dispatch;
 pub mod scalar;
 
 #[cfg(target_arch = "x86_64")]
 pub mod avx2;
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx512;
 
 #[cfg(target_arch = "aarch64")]
 pub mod neon;

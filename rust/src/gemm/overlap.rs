@@ -37,7 +37,7 @@ pub(crate) use crate::exec::pipeline::PanelSource;
 use crate::exec::pipeline::{run_prefetch, PanelSlot, DEFAULT_PIPELINE_DEPTH};
 use crate::gemm::blocked::{add_tile, add_tile_cube, exec_bm, host_block};
 use crate::gemm::kernels;
-use crate::gemm::pack::{self, MR, NR};
+use crate::gemm::pack::{self, MAX_MR, MAX_NR};
 use crate::util::bench::StageBreakdown;
 use crate::util::mat::Matrix;
 use crate::util::threads::SendPtr;
@@ -69,16 +69,17 @@ fn parse_overlap_toggle(v: &str) -> bool {
 
 /// Run `consume` over every job's packed B panel, with the next panel
 /// packed ahead by a pool prefetch job (the classic two-slot schedule:
-/// pipeline depth 2). Thin shim over
+/// pipeline depth 2). Panels are packed at the width `nr` of the lane
+/// the consumer will sweep with. Thin shim over
 /// [`crate::exec::pipeline::run_prefetch`].
-pub(crate) fn run_overlapped<F>(src: PanelSource<'_>, jobs: &[PanelJob], mut consume: F)
+pub(crate) fn run_overlapped<F>(src: PanelSource<'_>, jobs: &[PanelJob], nr: usize, mut consume: F)
 where
     F: FnMut(&PanelJob, &[f32]),
 {
     run_prefetch(
         DEFAULT_PIPELINE_DEPTH,
         jobs.len(),
-        |i: usize, slot: &mut PanelSlot| src.pack(&jobs[i], &mut slot.b),
+        |i: usize, slot: &mut PanelSlot| src.pack(&jobs[i], nr, &mut slot.b),
         |i: usize, slot: &PanelSlot| consume(&jobs[i], &slot.b),
     );
 }
@@ -103,33 +104,36 @@ pub(crate) fn gemm_staged_core(a: &Matrix<f32>, b: &Matrix<f32>) -> (Matrix<f32>
         return (c, stages);
     }
     let block = host_block();
-    let bm = exec_bm(m, block.bm);
     // Same lane as the shared sweeps: resolved once per call, so the
-    // staged timings measure the kernel the serving paths actually run.
+    // staged timings measure the kernel (and panel geometry) the
+    // serving paths actually run.
     let lane = kernels::active_lane();
+    let (mr, nr) = lane.tile_dims();
+    let bm = exec_bm(m, block.bm, mr);
     let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
     let mut bp = Vec::new();
     let mut ap = Vec::new();
+    let mut acc = [0.0f32; MAX_MR * MAX_NR];
     for job in panel_jobs(n, k, block.bn, block.bk) {
         let t = Instant::now();
-        pack::pack_b(b, job.p0, job.kc, job.j0, job.nc, &mut bp);
+        pack::pack_b(b, job.p0, job.kc, job.j0, job.nc, nr, &mut bp);
         stages.pack_b += elapsed(t);
         for i0 in (0..m).step_by(bm) {
             let mc = bm.min(m - i0);
             let t = Instant::now();
-            pack::pack_a(a, i0, mc, job.p0, job.kc, &mut ap);
+            pack::pack_a(a, i0, mc, job.p0, job.kc, mr, &mut ap);
             stages.pack_a += elapsed(t);
-            for (rp, apanel) in ap.chunks_exact(job.kc * MR).enumerate() {
-                let ci = i0 + rp * MR;
-                let mr_eff = MR.min(m - ci);
-                for (cpnl, bpanel) in bp.chunks_exact(job.kc * NR).enumerate() {
-                    let cj = job.j0 + cpnl * NR;
-                    let nr_eff = NR.min(n - cj);
+            for (rp, apanel) in ap.chunks_exact(job.kc * mr).enumerate() {
+                let ci = i0 + rp * mr;
+                let mr_eff = mr.min(m - ci);
+                for (cpnl, bpanel) in bp.chunks_exact(job.kc * nr).enumerate() {
+                    let cj = job.j0 + cpnl * nr;
+                    let nr_eff = nr.min(n - cj);
                     let t = Instant::now();
-                    let acc = kernels::kernel_f32(lane, apanel, bpanel);
+                    kernels::kernel_f32(lane, apanel, bpanel, &mut acc[..mr * nr]);
                     stages.kernel += elapsed(t);
                     let t = Instant::now();
-                    add_tile(&cp, n, ci, cj, mr_eff, nr_eff, &acc);
+                    add_tile(&cp, n, ci, cj, mr_eff, nr_eff, nr, &acc[..mr * nr]);
                     stages.c_update += elapsed(t);
                 }
             }
@@ -156,31 +160,51 @@ pub(crate) fn cube_staged_core(
         return (c, stages);
     }
     let block = host_block();
-    let bm = exec_bm(m, block.bm);
     let lane = kernels::active_lane();
+    let (mr, nr) = lane.tile_dims();
+    let bm = exec_bm(m, block.bm, mr);
     let cp = SendPtr(c.as_mut_slice().as_mut_ptr());
     let mut bp = Vec::new();
     let mut ap = Vec::new();
+    let mut hh = [0.0f32; MAX_MR * MAX_NR];
+    let mut corr = [0.0f32; MAX_MR * MAX_NR];
     for job in panel_jobs(n, k, block.bn, block.bk) {
         let t = Instant::now();
-        pack::pack_b_dual(bh, bl, job.p0, job.kc, job.j0, job.nc, &mut bp);
+        pack::pack_b_dual(bh, bl, job.p0, job.kc, job.j0, job.nc, nr, &mut bp);
         stages.pack_b += elapsed(t);
         for i0 in (0..m).step_by(bm) {
             let mc = bm.min(m - i0);
             let t = Instant::now();
-            pack::pack_a_dual(ah, al, i0, mc, job.p0, job.kc, &mut ap);
+            pack::pack_a_dual(ah, al, i0, mc, job.p0, job.kc, mr, &mut ap);
             stages.pack_a += elapsed(t);
-            for (rp, apanel) in ap.chunks_exact(job.kc * 2 * MR).enumerate() {
-                let ci = i0 + rp * MR;
-                let mr_eff = MR.min(m - ci);
-                for (cpnl, bpanel) in bp.chunks_exact(job.kc * 2 * NR).enumerate() {
-                    let cj = job.j0 + cpnl * NR;
-                    let nr_eff = NR.min(n - cj);
+            for (rp, apanel) in ap.chunks_exact(job.kc * 2 * mr).enumerate() {
+                let ci = i0 + rp * mr;
+                let mr_eff = mr.min(m - ci);
+                for (cpnl, bpanel) in bp.chunks_exact(job.kc * 2 * nr).enumerate() {
+                    let cj = job.j0 + cpnl * nr;
+                    let nr_eff = nr.min(n - cj);
                     let t = Instant::now();
-                    let (hh, corr) = kernels::kernel_cube(lane, apanel, bpanel);
+                    kernels::kernel_cube(
+                        lane,
+                        apanel,
+                        bpanel,
+                        &mut hh[..mr * nr],
+                        &mut corr[..mr * nr],
+                    );
                     stages.kernel += elapsed(t);
                     let t = Instant::now();
-                    add_tile_cube(&cp, n, ci, cj, mr_eff, nr_eff, &hh, &corr, inv_sf);
+                    add_tile_cube(
+                        &cp,
+                        n,
+                        ci,
+                        cj,
+                        mr_eff,
+                        nr_eff,
+                        nr,
+                        &hh[..mr * nr],
+                        &corr[..mr * nr],
+                        inv_sf,
+                    );
                     stages.c_update += elapsed(t);
                 }
             }
@@ -196,35 +220,39 @@ mod tests {
 
     #[test]
     fn run_overlapped_delivers_every_panel_in_order() {
+        use crate::gemm::pack::NR;
         let mut rng = Rng::new(91);
         let b = Matrix::random_symmetric(100, 50, 0, &mut rng);
         let jobs = panel_jobs(50, 100, 16, 32);
-        // Serial reference panels.
-        let mut want = Vec::new();
-        let mut buf = Vec::new();
-        for job in &jobs {
-            pack::pack_b(&b, job.p0, job.kc, job.j0, job.nc, &mut buf);
-            want.push(buf.clone());
-        }
-        let mut got: Vec<Vec<f32>> = Vec::new();
-        run_overlapped(PanelSource::Single(&b), &jobs, |_, bp| got.push(bp.to_vec()));
-        assert_eq!(got.len(), want.len());
-        for (g, w) in got.iter().zip(&want) {
-            assert_eq!(g, w, "overlapped panel differs from serial pack");
+        // Both panel widths stage byte-identically to the serial packs.
+        for nr in [NR, MAX_NR] {
+            let mut want = Vec::new();
+            let mut buf = Vec::new();
+            for job in &jobs {
+                pack::pack_b(&b, job.p0, job.kc, job.j0, job.nc, nr, &mut buf);
+                want.push(buf.clone());
+            }
+            let mut got: Vec<Vec<f32>> = Vec::new();
+            run_overlapped(PanelSource::Single(&b), &jobs, nr, |_, bp| got.push(bp.to_vec()));
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g, w, "nr={nr} overlapped panel differs from serial pack");
+            }
         }
     }
 
     #[test]
     fn run_overlapped_handles_tiny_job_lists() {
+        use crate::gemm::pack::NR;
         let b = Matrix::zeros(4, 4);
         let mut seen = 0;
-        run_overlapped(PanelSource::Single(&b), &[], |_, _| seen += 1);
+        run_overlapped(PanelSource::Single(&b), &[], NR, |_, _| seen += 1);
         assert_eq!(seen, 0);
         let jobs = panel_jobs(4, 4, 16, 16);
         assert_eq!(jobs.len(), 1);
-        run_overlapped(PanelSource::Single(&b), &jobs, |_, bp| {
+        run_overlapped(PanelSource::Single(&b), &jobs, NR, |_, bp| {
             seen += 1;
-            assert_eq!(bp.len(), pack::b_panels(4) * 4 * NR);
+            assert_eq!(bp.len(), pack::b_panels(4, NR) * 4 * NR);
         });
         assert_eq!(seen, 1);
     }

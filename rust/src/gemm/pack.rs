@@ -3,67 +3,93 @@
 //! The micro-kernel reads operands from contiguous, interleaved panels
 //! instead of strided matrix rows/columns:
 //!
-//! * **A row panels** (`MR`-interleaved): an `mc × kc` block of A becomes
-//!   `⌈mc/MR⌉` panels; panel `r` stores, for each k step `p`, the `MR`
-//!   column-`p` values of rows `r·MR .. r·MR+MR`. The micro-kernel's k
+//! * **A row panels** (`mr`-interleaved): an `mc × kc` block of A becomes
+//!   `⌈mc/mr⌉` panels; panel `r` stores, for each k step `p`, the `mr`
+//!   column-`p` values of rows `r·mr .. r·mr+mr`. The micro-kernel's k
 //!   loop then walks one contiguous stream.
-//! * **B column panels** (`NR`-interleaved): a `kc × nc` block of B
-//!   becomes `⌈nc/NR⌉` panels; panel `c` stores, per k step, the `NR`
-//!   row-`p` values of columns `c·NR .. c·NR+NR`.
+//! * **B column panels** (`nr`-interleaved): a `kc × nc` block of B
+//!   becomes `⌈nc/nr⌉` panels; panel `c` stores, per k step, the `nr`
+//!   row-`p` values of columns `c·nr .. c·nr+nr`.
 //! * **Dual-component panels** for the cube kernel: the split high/low
 //!   FP16 components (widened to f32, see
 //!   [`crate::gemm::cube::WideSplit`]) are interleaved per k step —
-//!   `MR` highs then `MR` lows (resp. `NR`/`NR`) — so the fused
+//!   `mr` highs then `mr` lows (resp. `nr`/`nr`) — so the fused
 //!   three-term micro-kernel reads both components of both operands in
 //!   one forward stream.
 //!
-//! Edge blocks are zero-padded up to the `MR`/`NR` boundary: the
+//! Edge blocks are zero-padded up to the `mr`/`nr` boundary: the
 //! micro-kernel stays branch-free (padded lanes accumulate exact zeros)
 //! and the store path simply drops the padded rows/columns. Padding only
 //! ever adds rows/columns, never k steps, so every *valid* output cell
 //! accumulates exactly the true products in k order.
 //!
-//! This panel format is shared by **every** kernel lane
-//! ([`crate::gemm::kernels`]): the SIMD lanes read whole `NR`-wide (or
-//! half-row) vectors per k step, which the zero-padding makes safe —
-//! each panel is a full `kc·NR` (or `kc·2·NR` dual) multiple, so vector
-//! loads never run past the buffer. Because packing is lane-independent,
-//! prepacked operands ([`crate::gemm::prepacked`]) and the prefetch ring
-//! carry no lane state and schedules stay bit-identical per lane.
+//! **Panel geometry is a function of the kernel lane.** The scalar,
+//! AVX2 and NEON lanes all derive the same [`MR`]` × `[`NR`] = 4 × 8
+//! micro-tile from their register files, but the AVX-512 lane's 32-zmm
+//! file supports a genuinely wider [`MAX_MR`]` × `[`MAX_NR`] = 8 × 16
+//! tile ([`crate::sim::blocking::micro_tile`]). Every packer therefore
+//! takes the tile dims (`mr` / `nr`) explicitly — callers resolve them
+//! once per GEMM call from the active lane
+//! ([`crate::gemm::kernels::Lane::tile_dims`]) and use the *same* dims
+//! for packing and kernel dispatch. Lane-dependent layout is why
+//! prepacked operands ([`crate::gemm::prepacked`]) record the lane they
+//! were packed for and why the prepack cache key
+//! ([`crate::gemm::cache`]) includes it: a cached panel is never
+//! consumed by a mismatched lane. Zero-padding keeps SIMD loads safe in
+//! either geometry — each panel is a full `kc·nr` (or `kc·ncomp·nr`
+//! multi-component) multiple, so vector loads never run past the
+//! buffer.
 
 use crate::util::mat::Matrix;
 
-/// Rows of the register micro-tile; A panels are `MR`-interleaved.
-/// Derived from the vector register budget by
-/// [`crate::sim::blocking::micro_tile`] (both SIMD register files give
-/// 4) and pinned by const asserts in the SIMD kernels.
+/// Rows of the narrow register micro-tile; A panels for the scalar,
+/// AVX2 and NEON lanes are `MR`-interleaved. Derived from the 16-entry
+/// vector register budget by [`crate::sim::blocking::micro_tile`] and
+/// pinned by const asserts in the SIMD kernels.
 pub const MR: usize = 4;
-/// Columns of the register micro-tile; B panels are `NR`-interleaved.
-/// One AVX2 YMM register (or a NEON q-register pair) of f32 lanes —
-/// see [`crate::sim::blocking::micro_tile`].
+/// Columns of the narrow register micro-tile; one AVX2 YMM register
+/// (or a NEON q-register pair) of f32 lanes — see
+/// [`crate::sim::blocking::micro_tile`].
 pub const NR: usize = 8;
 
-/// Number of `MR`-row panels covering `mc` rows.
+/// Rows of the widest micro-tile any lane uses (the AVX-512 lane's,
+/// from the 32-zmm register file). Stack-allocated kernel output tiles
+/// are sized `MAX_MR × MAX_NR` and sliced down to the active lane's
+/// dims.
+pub const MAX_MR: usize = 8;
+/// Columns of the widest micro-tile any lane uses: one AVX-512 ZMM
+/// register of f32 lanes.
+pub const MAX_NR: usize = 16;
+
+/// Number of `mr`-row panels covering `mc` rows.
 #[inline]
-pub fn a_panels(mc: usize) -> usize {
-    mc.div_ceil(MR)
+pub fn a_panels(mc: usize, mr: usize) -> usize {
+    mc.div_ceil(mr)
 }
 
-/// Number of `NR`-column panels covering `nc` columns.
+/// Number of `nr`-column panels covering `nc` columns.
 #[inline]
-pub fn b_panels(nc: usize) -> usize {
-    nc.div_ceil(NR)
+pub fn b_panels(nc: usize, nr: usize) -> usize {
+    nc.div_ceil(nr)
 }
 
 /// Pack the `mc × kc` block of `a` with origin `(i0, p0)` into
-/// `MR`-interleaved row panels. `out` is cleared first.
-pub fn pack_a(a: &Matrix<f32>, i0: usize, mc: usize, p0: usize, kc: usize, out: &mut Vec<f32>) {
+/// `mr`-interleaved row panels. `out` is cleared first.
+pub fn pack_a(
+    a: &Matrix<f32>,
+    i0: usize,
+    mc: usize,
+    p0: usize,
+    kc: usize,
+    mr: usize,
+    out: &mut Vec<f32>,
+) {
     out.clear();
-    out.reserve(a_panels(mc) * kc * MR);
-    for r in 0..a_panels(mc) {
+    out.reserve(a_panels(mc, mr) * kc * mr);
+    for r in 0..a_panels(mc, mr) {
         for p in 0..kc {
-            for i in 0..MR {
-                let row = r * MR + i;
+            for i in 0..mr {
+                let row = r * mr + i;
                 out.push(if row < mc { a.get(i0 + row, p0 + p) } else { 0.0 });
             }
         }
@@ -71,23 +97,31 @@ pub fn pack_a(a: &Matrix<f32>, i0: usize, mc: usize, p0: usize, kc: usize, out: 
 }
 
 /// Pack the `kc × nc` block of `b` with origin `(p0, j0)` into
-/// `NR`-interleaved column panels. `out` is cleared first.
-pub fn pack_b(b: &Matrix<f32>, p0: usize, kc: usize, j0: usize, nc: usize, out: &mut Vec<f32>) {
+/// `nr`-interleaved column panels. `out` is cleared first.
+pub fn pack_b(
+    b: &Matrix<f32>,
+    p0: usize,
+    kc: usize,
+    j0: usize,
+    nc: usize,
+    nr: usize,
+    out: &mut Vec<f32>,
+) {
     out.clear();
-    out.reserve(b_panels(nc) * kc * NR);
-    for c in 0..b_panels(nc) {
+    out.reserve(b_panels(nc, nr) * kc * nr);
+    for c in 0..b_panels(nc, nr) {
         for p in 0..kc {
             let row = b.row(p0 + p);
-            for j in 0..NR {
-                let col = c * NR + j;
+            for j in 0..nr {
+                let col = c * nr + j;
                 out.push(if col < nc { row[j0 + col] } else { 0.0 });
             }
         }
     }
 }
 
-/// Dual-component A packing: per k step, `MR` high values then `MR` low
-/// values (stride `2·MR` per step). `high` and `low` must share a shape.
+/// Dual-component A packing: per k step, `mr` high values then `mr` low
+/// values (stride `2·mr` per step). `high` and `low` must share a shape.
 pub fn pack_a_dual(
     high: &Matrix<f32>,
     low: &Matrix<f32>,
@@ -95,27 +129,28 @@ pub fn pack_a_dual(
     mc: usize,
     p0: usize,
     kc: usize,
+    mr: usize,
     out: &mut Vec<f32>,
 ) {
     debug_assert_eq!(high.shape(), low.shape());
     out.clear();
-    out.reserve(a_panels(mc) * kc * 2 * MR);
-    for r in 0..a_panels(mc) {
+    out.reserve(a_panels(mc, mr) * kc * 2 * mr);
+    for r in 0..a_panels(mc, mr) {
         for p in 0..kc {
-            for i in 0..MR {
-                let row = r * MR + i;
+            for i in 0..mr {
+                let row = r * mr + i;
                 out.push(if row < mc { high.get(i0 + row, p0 + p) } else { 0.0 });
             }
-            for i in 0..MR {
-                let row = r * MR + i;
+            for i in 0..mr {
+                let row = r * mr + i;
                 out.push(if row < mc { low.get(i0 + row, p0 + p) } else { 0.0 });
             }
         }
     }
 }
 
-/// Dual-component B packing: per k step, `NR` high values then `NR` low
-/// values (stride `2·NR` per step).
+/// Dual-component B packing: per k step, `nr` high values then `nr` low
+/// values (stride `2·nr` per step).
 pub fn pack_b_dual(
     high: &Matrix<f32>,
     low: &Matrix<f32>,
@@ -123,30 +158,31 @@ pub fn pack_b_dual(
     kc: usize,
     j0: usize,
     nc: usize,
+    nr: usize,
     out: &mut Vec<f32>,
 ) {
     debug_assert_eq!(high.shape(), low.shape());
     out.clear();
-    out.reserve(b_panels(nc) * kc * 2 * NR);
-    for c in 0..b_panels(nc) {
+    out.reserve(b_panels(nc, nr) * kc * 2 * nr);
+    for c in 0..b_panels(nc, nr) {
         for p in 0..kc {
             let hrow = high.row(p0 + p);
             let lrow = low.row(p0 + p);
-            for j in 0..NR {
-                let col = c * NR + j;
+            for j in 0..nr {
+                let col = c * nr + j;
                 out.push(if col < nc { hrow[j0 + col] } else { 0.0 });
             }
-            for j in 0..NR {
-                let col = c * NR + j;
+            for j in 0..nr {
+                let col = c * nr + j;
                 out.push(if col < nc { lrow[j0 + col] } else { 0.0 });
             }
         }
     }
 }
 
-/// N-component A packing for the precision family: per k step, `MR`
-/// values of component 0, then `MR` of component 1, … (stride
-/// `ncomp·MR` per step). All component planes must share a shape. At
+/// N-component A packing for the precision family: per k step, `mr`
+/// values of component 0, then `mr` of component 1, … (stride
+/// `ncomp·mr` per step). All component planes must share a shape. At
 /// `ncomp = 2` the layout is exactly [`pack_a_dual`]'s.
 pub fn pack_a_multi(
     comps: &[Matrix<f32>],
@@ -154,18 +190,19 @@ pub fn pack_a_multi(
     mc: usize,
     p0: usize,
     kc: usize,
+    mr: usize,
     out: &mut Vec<f32>,
 ) {
     let ncomp = comps.len();
     debug_assert!(ncomp >= 2);
     debug_assert!(comps.iter().all(|c| c.shape() == comps[0].shape()));
     out.clear();
-    out.reserve(a_panels(mc) * kc * ncomp * MR);
-    for r in 0..a_panels(mc) {
+    out.reserve(a_panels(mc, mr) * kc * ncomp * mr);
+    for r in 0..a_panels(mc, mr) {
         for p in 0..kc {
             for comp in comps {
-                for i in 0..MR {
-                    let row = r * MR + i;
+                for i in 0..mr {
+                    let row = r * mr + i;
                     out.push(if row < mc { comp.get(i0 + row, p0 + p) } else { 0.0 });
                 }
             }
@@ -173,8 +210,8 @@ pub fn pack_a_multi(
     }
 }
 
-/// N-component B packing: per k step, `NR` values of component 0, then
-/// `NR` of component 1, … (stride `ncomp·NR` per step). At `ncomp = 2`
+/// N-component B packing: per k step, `nr` values of component 0, then
+/// `nr` of component 1, … (stride `ncomp·nr` per step). At `ncomp = 2`
 /// the layout is exactly [`pack_b_dual`]'s.
 pub fn pack_b_multi(
     comps: &[Matrix<f32>],
@@ -182,19 +219,20 @@ pub fn pack_b_multi(
     kc: usize,
     j0: usize,
     nc: usize,
+    nr: usize,
     out: &mut Vec<f32>,
 ) {
     let ncomp = comps.len();
     debug_assert!(ncomp >= 2);
     debug_assert!(comps.iter().all(|c| c.shape() == comps[0].shape()));
     out.clear();
-    out.reserve(b_panels(nc) * kc * ncomp * NR);
-    for c in 0..b_panels(nc) {
+    out.reserve(b_panels(nc, nr) * kc * ncomp * nr);
+    for c in 0..b_panels(nc, nr) {
         for p in 0..kc {
             for comp in comps {
                 let row = comp.row(p0 + p);
-                for j in 0..NR {
-                    let col = c * NR + j;
+                for j in 0..nr {
+                    let col = c * nr + j;
                     out.push(if col < nc { row[j0 + col] } else { 0.0 });
                 }
             }
@@ -216,8 +254,8 @@ mod tests {
     fn pack_a_layout_and_padding() {
         let a = mat(7, 5, 1);
         let mut out = Vec::new();
-        pack_a(&a, 1, 6, 2, 3, &mut out); // 6 rows from row 1, 3 cols from col 2
-        assert_eq!(out.len(), a_panels(6) * 3 * MR); // 2 panels
+        pack_a(&a, 1, 6, 2, 3, MR, &mut out); // 6 rows from row 1, 3 cols from col 2
+        assert_eq!(out.len(), a_panels(6, MR) * 3 * MR); // 2 panels
         // Panel 0, k step p, lane i -> a[1 + i][2 + p].
         for p in 0..3 {
             for i in 0..MR {
@@ -239,8 +277,8 @@ mod tests {
     fn pack_b_layout_and_padding() {
         let b = mat(4, 19, 2);
         let mut out = Vec::new();
-        pack_b(&b, 1, 3, 2, 13, &mut out); // 3 k steps from row 1, 13 cols from col 2
-        assert_eq!(out.len(), b_panels(13) * 3 * NR); // 2 panels
+        pack_b(&b, 1, 3, 2, 13, NR, &mut out); // 3 k steps from row 1, 13 cols from col 2
+        assert_eq!(out.len(), b_panels(13, NR) * 3 * NR); // 2 panels
         for p in 0..3 {
             for j in 0..NR {
                 assert_eq!(out[p * NR + j], b.get(1 + p, 2 + j), "panel 0 p={p} j={j}");
@@ -257,16 +295,60 @@ mod tests {
     }
 
     #[test]
+    fn wide_tile_packing_changes_panel_geometry() {
+        // The same block packed for the wide (AVX-512) tile dims carries
+        // the same values under a different interleave: one 8-row panel
+        // where the narrow layout makes two 4-row panels.
+        let a = mat(8, 3, 11);
+        let (mut narrow, mut wide) = (Vec::new(), Vec::new());
+        pack_a(&a, 0, 8, 0, 3, MR, &mut narrow);
+        pack_a(&a, 0, 8, 0, 3, MAX_MR, &mut wide);
+        assert_eq!(narrow.len(), wide.len());
+        assert_ne!(narrow, wide, "wide interleave must differ from narrow");
+        assert_eq!(a_panels(8, MR), 2);
+        assert_eq!(a_panels(8, MAX_MR), 1);
+        for p in 0..3 {
+            for i in 0..MAX_MR {
+                assert_eq!(wide[p * MAX_MR + i], a.get(i, p), "wide panel p={p} i={i}");
+            }
+        }
+        let b = mat(3, 20, 12);
+        let mut bp = Vec::new();
+        pack_b(&b, 0, 3, 0, 20, MAX_NR, &mut bp);
+        assert_eq!(bp.len(), b_panels(20, MAX_NR) * 3 * MAX_NR); // 2 panels
+        for p in 0..3 {
+            for j in 0..MAX_NR {
+                assert_eq!(bp[p * MAX_NR + j], b.get(p, j), "wide B panel p={p} j={j}");
+            }
+            // Second panel: columns 16..20 then zero padding.
+            let base = 3 * MAX_NR;
+            for j in 0..MAX_NR {
+                let col = MAX_NR + j;
+                let want = if col < 20 { b.get(p, col) } else { 0.0 };
+                assert_eq!(bp[base + p * MAX_NR + j], want);
+            }
+        }
+    }
+
+    #[test]
     fn multi_packing_at_two_components_matches_dual_bitwise() {
         let high = mat(7, 6, 5);
         let low = mat(7, 6, 6);
         let comps = [high.clone(), low.clone()];
         let (mut dual, mut multi) = (Vec::new(), Vec::new());
-        pack_a_dual(&high, &low, 1, 5, 2, 3, &mut dual);
-        pack_a_multi(&comps, 1, 5, 2, 3, &mut multi);
+        pack_a_dual(&high, &low, 1, 5, 2, 3, MR, &mut dual);
+        pack_a_multi(&comps, 1, 5, 2, 3, MR, &mut multi);
         assert_eq!(dual, multi);
-        pack_b_dual(&high, &low, 1, 3, 2, 4, &mut dual);
-        pack_b_multi(&comps, 1, 3, 2, 4, &mut multi);
+        pack_b_dual(&high, &low, 1, 3, 2, 4, NR, &mut dual);
+        pack_b_multi(&comps, 1, 3, 2, 4, NR, &mut multi);
+        assert_eq!(dual, multi);
+        // The equivalence is geometry-independent: it holds for the wide
+        // tile dims too.
+        pack_a_dual(&high, &low, 1, 5, 2, 3, MAX_MR, &mut dual);
+        pack_a_multi(&comps, 1, 5, 2, 3, MAX_MR, &mut multi);
+        assert_eq!(dual, multi);
+        pack_b_dual(&high, &low, 1, 3, 2, 4, MAX_NR, &mut dual);
+        pack_b_multi(&comps, 1, 3, 2, 4, MAX_NR, &mut multi);
         assert_eq!(dual, multi);
     }
 
@@ -277,8 +359,8 @@ mod tests {
         let c2 = mat(5, 4, 9);
         let comps = [c0.clone(), c1.clone(), c2.clone()];
         let mut ap = Vec::new();
-        pack_a_multi(&comps, 0, 5, 0, 4, &mut ap);
-        assert_eq!(ap.len(), a_panels(5) * 4 * 3 * MR);
+        pack_a_multi(&comps, 0, 5, 0, 4, MR, &mut ap);
+        assert_eq!(ap.len(), a_panels(5, MR) * 4 * 3 * MR);
         for p in 0..4 {
             let s = p * 3 * MR;
             for i in 0..MR {
@@ -288,8 +370,8 @@ mod tests {
             }
         }
         let mut bp = Vec::new();
-        pack_b_multi(&comps, 0, 5, 0, 4, &mut bp);
-        assert_eq!(bp.len(), b_panels(4) * 5 * 3 * NR);
+        pack_b_multi(&comps, 0, 5, 0, 4, NR, &mut bp);
+        assert_eq!(bp.len(), b_panels(4, NR) * 5 * 3 * NR);
         for p in 0..5 {
             let s = p * 3 * NR;
             for j in 0..4 {
@@ -310,8 +392,8 @@ mod tests {
         let high = mat(5, 4, 3);
         let low = mat(5, 4, 4);
         let mut ap = Vec::new();
-        pack_a_dual(&high, &low, 0, 5, 0, 4, &mut ap);
-        assert_eq!(ap.len(), a_panels(5) * 4 * 2 * MR);
+        pack_a_dual(&high, &low, 0, 5, 0, 4, MR, &mut ap);
+        assert_eq!(ap.len(), a_panels(5, MR) * 4 * 2 * MR);
         // Panel 0, k step p: MR highs then MR lows.
         for p in 0..4 {
             let s = p * 2 * MR;
@@ -321,8 +403,8 @@ mod tests {
             }
         }
         let mut bp = Vec::new();
-        pack_b_dual(&high, &low, 0, 5, 0, 4, &mut bp);
-        assert_eq!(bp.len(), b_panels(4) * 5 * 2 * NR);
+        pack_b_dual(&high, &low, 0, 5, 0, 4, NR, &mut bp);
+        assert_eq!(bp.len(), b_panels(4, NR) * 5 * 2 * NR);
         for p in 0..5 {
             let s = p * 2 * NR;
             for j in 0..4 {

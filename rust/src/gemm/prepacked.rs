@@ -25,8 +25,14 @@
 //! SGEMM-cube, and `N`-component panels for the precision-emulation
 //! family tiers (BF16×2, BF16×3, …). The split configuration/spec is
 //! part of the format — a weight prepacked at `s_b = 12` cannot serve a
-//! request decided at `s_b = 8`, which is why the serving cache
-//! ([`crate::gemm::cache`]) keys on the scaling parameters as well as
+//! request decided at `s_b = 8` — and so is the **kernel lane**: panels
+//! are interleaved with the micro-tile dims of the lane active at
+//! prepack time ([`crate::gemm::kernels::Lane::tile_dims`] — the
+//! AVX-512 lane's wide 8×16 interleave is not consumable by a narrow
+//! lane or vice versa), recorded in the operand
+//! ([`PrepackedMatrix::lane`]) so every consuming sweep replays the
+//! matching geometry. The serving cache ([`crate::gemm::cache`])
+//! therefore keys on the scaling parameters **and the lane** as well as
 //! the shape and path.
 //!
 //! Consumption is schedule-agnostic: the panel bytes here feed the
@@ -41,6 +47,7 @@
 
 use crate::gemm::blocked::host_block;
 use crate::gemm::cube::WideSplit;
+use crate::gemm::kernels::{self, Lane};
 use crate::gemm::pack;
 use crate::sim::blocking::BlockConfig;
 use crate::softfloat::f16::F16;
@@ -82,9 +89,12 @@ pub struct PrepackedMatrix {
     bk: usize,
     bn: usize,
     path: PrepackPath,
+    /// The kernel lane whose tile dims the panels were interleaved for
+    /// (resolved once at prepack time).
+    lane: Lane,
     /// Panel buffer for column block `jb`, k block `pb` at index
     /// `jb * k_blocks + pb`; contents are exactly what `pack_b` /
-    /// `pack_b_dual` produce for that block.
+    /// `pack_b_dual` produce for that block at [`Self::lane`]'s dims.
     panels: Vec<Vec<f32>>,
     k_blocks: usize,
 }
@@ -108,6 +118,10 @@ impl PrepackedMatrix {
     ) -> PrepackedMatrix {
         let (k, n) = b.shape();
         let (bk, bn) = (block.bk, block.bn);
+        // Panel interleave follows the lane active *now*; consumers must
+        // replay the same geometry, so it is recorded in the operand.
+        let lane = kernels::active_lane();
+        let nr = lane.tile_dims().1;
         let k_blocks = k.div_ceil(bk);
         let n_blocks = n.div_ceil(bn);
         let mut panels = Vec::with_capacity(k_blocks * n_blocks);
@@ -142,16 +156,18 @@ impl PrepackedMatrix {
                 let kc = bk.min(k - p0);
                 let mut out = Vec::new();
                 match src {
-                    Src::Single(m) => pack::pack_b(m, p0, kc, j0, nc, &mut out),
+                    Src::Single(m) => pack::pack_b(m, p0, kc, j0, nc, nr, &mut out),
                     Src::Dual(sp) => {
-                        pack::pack_b_dual(&sp.high, &sp.low, p0, kc, j0, nc, &mut out)
+                        pack::pack_b_dual(&sp.high, &sp.low, p0, kc, j0, nc, nr, &mut out)
                     }
-                    Src::Multi(fs) => pack::pack_b_multi(fs.comps(), p0, kc, j0, nc, &mut out),
+                    Src::Multi(fs) => {
+                        pack::pack_b_multi(fs.comps(), p0, kc, j0, nc, nr, &mut out)
+                    }
                 }
                 panels.push(out);
             }
         }
-        PrepackedMatrix { k, n, bk, bn, path, panels, k_blocks }
+        PrepackedMatrix { k, n, bk, bn, path, lane, panels, k_blocks }
     }
 
     /// Inner (k) dimension of the original matrix.
@@ -191,6 +207,15 @@ impl PrepackedMatrix {
         self.path
     }
 
+    /// The kernel lane the panels were interleaved for. The panel bytes
+    /// are only consumable with this lane's micro-tile geometry
+    /// ([`Lane::tile_dims`]); every prepacked sweep resolves its pack
+    /// and dispatch lane from here rather than from the lane active at
+    /// execution time.
+    pub fn lane(&self) -> Lane {
+        self.lane
+    }
+
     /// Packed panel buffer for column block `jb`, k block `pb`.
     #[inline]
     pub fn panel(&self, jb: usize, pb: usize) -> &[f32] {
@@ -222,6 +247,10 @@ mod tests {
         let pp = PrepackedMatrix::prepack_with_block(&b, PrepackPath::Fp32, block);
         assert_eq!(pp.k(), 70);
         assert_eq!(pp.n(), 37);
+        // The recorded lane is whatever was active at prepack time, and
+        // the panels follow its interleave.
+        assert_eq!(pp.lane(), kernels::active_lane());
+        let nr = pp.lane().tile_dims().1;
         // 70 / bk=32 → 3 k blocks; 37 / bn=16 → 3 column blocks.
         assert_eq!(pp.k_blocks(), 3);
         assert_eq!(pp.n_blocks(), 3);
@@ -230,7 +259,7 @@ mod tests {
             let nc = block.bn.min(37 - j0);
             for (pb, p0) in (0..70).step_by(block.bk).enumerate() {
                 let kc = block.bk.min(70 - p0);
-                pack::pack_b(&b, p0, kc, j0, nc, &mut out);
+                pack::pack_b(&b, p0, kc, j0, nc, nr, &mut out);
                 assert_eq!(pp.panel(jb, pb), &out[..], "block ({jb}, {pb})");
             }
         }
@@ -245,10 +274,11 @@ mod tests {
         let pp = PrepackedMatrix::prepack_with_block(&b, PrepackPath::Cube(cfg), block);
         assert_eq!(pp.path(), PrepackPath::Cube(cfg));
         let sp = WideSplit::of(&b, cfg);
+        let nr = pp.lane().tile_dims().1;
         let mut out = Vec::new();
-        pack::pack_b_dual(&sp.high, &sp.low, 0, 32, 0, 16, &mut out);
+        pack::pack_b_dual(&sp.high, &sp.low, 0, 32, 0, 16, nr, &mut out);
         assert_eq!(pp.panel(0, 0), &out[..]);
-        pack::pack_b_dual(&sp.high, &sp.low, 32, 8, 16, 8, &mut out);
+        pack::pack_b_dual(&sp.high, &sp.low, 32, 8, 16, 8, nr, &mut out);
         assert_eq!(pp.panel(1, 1), &out[..]);
     }
 
@@ -261,10 +291,11 @@ mod tests {
         let pp = PrepackedMatrix::prepack_with_block(&b, PrepackPath::Family(spec), block);
         assert_eq!(pp.path(), PrepackPath::Family(spec));
         let fs = FamilySplit::of(&b, spec);
+        let nr = pp.lane().tile_dims().1;
         let mut out = Vec::new();
-        pack::pack_b_multi(fs.comps(), 0, 32, 0, 16, &mut out);
+        pack::pack_b_multi(fs.comps(), 0, 32, 0, 16, nr, &mut out);
         assert_eq!(pp.panel(0, 0), &out[..]);
-        pack::pack_b_multi(fs.comps(), 32, 8, 16, 8, &mut out);
+        pack::pack_b_multi(fs.comps(), 32, 8, 16, 8, nr, &mut out);
         assert_eq!(pp.panel(1, 1), &out[..]);
     }
 

@@ -250,13 +250,18 @@ pub fn round_to_align(x: f64, chip: &Chip) -> usize {
 /// ```
 ///
 /// The cube kernel is the binding case — the plain f32 kernel holds
-/// half the accumulators. Both SIMD register files land on the same
-/// `(4, 8)` tile (AVX2: 16 regs × 8 lanes; NEON: 32 regs × 4 lanes),
-/// which is why [`crate::gemm::pack`] can hard-code `MR`/`NR` and keep
-/// one panel format for every lane; the scalar lane reuses the same
-/// tile for format compatibility. The geometry is pinned by const
-/// asserts in the SIMD kernels and by a test here against
-/// [`crate::gemm::pack::MR`]/[`crate::gemm::pack::NR`].
+/// half the accumulators. The 128/256-bit register files land on the
+/// same **narrow** `(4, 8)` tile (AVX2: 16 regs × 8 lanes; NEON:
+/// 32 regs × 4 lanes) that [`crate::gemm::pack::MR`] /
+/// [`crate::gemm::pack::NR`] pin and the scalar lane reuses for format
+/// compatibility. The AVX-512 file (32 regs × 16 lanes) genuinely
+/// differs: the 16-lane row rounds `NR` up to one whole ZMM vector and
+/// the doubled register count carries `MR = 8`, giving the **wide**
+/// `(8, 16)` tile pinned as
+/// [`crate::gemm::pack::MAX_MR`]/[`crate::gemm::pack::MAX_NR`].
+/// Panel geometry therefore follows the lane
+/// ([`crate::gemm::kernels::Lane::tile_dims`]); the derivations are
+/// pinned by const asserts in the SIMD kernels and by tests here.
 pub fn micro_tile(regs: usize, lanes: usize) -> (usize, usize) {
     assert!(regs >= 4 && lanes >= 1, "degenerate register file ({regs} regs, {lanes} lanes)");
     let nr = lanes * 8usize.div_ceil(lanes);
@@ -394,13 +399,24 @@ mod tests {
     }
 
     #[test]
-    fn micro_tile_matches_pack_geometry_on_both_register_files() {
+    fn micro_tile_matches_pack_geometry_on_every_register_file() {
         // AVX2: 16 YMM × 8 lanes; NEON: 32 q × 4 lanes. Both derive the
-        // 4×8 tile the pack layer hard-codes.
+        // narrow 4×8 tile the pack layer pins as MR/NR.
         assert_eq!(micro_tile(16, 8), (4, 8));
         assert_eq!(micro_tile(32, 4), (4, 8));
         let (mr, nr) = micro_tile(16, 8);
         assert_eq!((mr, nr), (crate::gemm::pack::MR, crate::gemm::pack::NR));
+        // AVX-512: 32 zmm × 16 lanes derives the wide 8×16 tile pinned
+        // as MAX_MR/MAX_NR and carried by Lane::tile_dims.
+        assert_eq!(micro_tile(32, 16), (8, 16));
+        assert_eq!(
+            micro_tile(32, 16),
+            (crate::gemm::pack::MAX_MR, crate::gemm::pack::MAX_NR)
+        );
+        assert_eq!(
+            crate::gemm::kernels::Lane::Avx512.tile_dims(),
+            (crate::gemm::pack::MAX_MR, crate::gemm::pack::MAX_NR)
+        );
     }
 
     #[test]

@@ -11,8 +11,10 @@
 //!
 //! * **Per lane, across schedules**: with any single lane pinned, the
 //!   serial, overlap-B, overlap-AB and prepacked paths are bit-identical
-//!   — packing and block order are lane-independent, and each sweep
-//!   resolves its lane exactly once.
+//!   — every sweep resolves its lane exactly once, and packing follows
+//!   that lane's micro-tile geometry (prepacked operands record theirs
+//!   at pack time, so a later lane switch cannot desynchronize panel
+//!   interleave and kernel dispatch).
 //! * **Scalar lane vs exact**: the scalar kernel performs the same
 //!   rounded-multiply + rounded-add chain as the exact reference
 //!   kernels, so for `k <= b_k` (one k block, one accumulation chain)
@@ -129,9 +131,10 @@ fn every_available_lane_is_bit_identical_on_the_prepacked_paths() {
         let Some(_pin) = ForcedLane::pin(lane) else { continue };
         let (a, b) = operands(m, k, n, 200);
         for (path, what) in paths {
-            // Prepack once per lane: panels are lane-independent, but
-            // packing under the pinned lane also proves that.
+            // Prepack under the pinned lane: the operand records it and
+            // every consuming schedule replays its geometry.
             let pp = PrepackedMatrix::prepack(&b, path);
+            assert_eq!(pp.lane(), lane, "{what}: recorded packing lane");
             let want = gemm_prepacked(&a, &pp);
             let ctx = |s: &str| format!("{lane} prepacked {what} {s}");
             assert_bits(&want, &gemm_prepacked_overlapped(&a, &pp), &ctx("overlap"));
@@ -198,32 +201,88 @@ fn bf16_tiers_are_bit_identical_across_schedules_on_every_lane() {
 }
 
 #[test]
-fn packed_panels_are_lane_independent() {
-    // Prepack under each available lane; the panel bytes must be equal.
-    // (Packing routines never dispatch — this pins that property.)
-    let (_, b) = operands(1, 150, 37, 300);
-    let reference: Vec<(Lane, PrepackedMatrix)> = Lane::ALL
-        .into_iter()
-        .filter_map(|lane| {
-            let _pin = ForcedLane::pin(lane)?;
-            Some((lane, PrepackedMatrix::prepack(&b, PrepackPath::Cube(SplitConfig::default()))))
-        })
-        .collect();
-    let (l0, first) = &reference[0];
-    for (lane, pp) in &reference[1..] {
-        assert_eq!((first.k_blocks(), first.n_blocks()), (pp.k_blocks(), pp.n_blocks()));
-        for jb in 0..first.n_blocks() {
-            for pb in 0..first.k_blocks() {
-                let (x, y) = (first.panel(jb, pb), pp.panel(jb, pb));
-                assert_eq!(x.len(), y.len(), "panel ({jb},{pb}) size: {l0} vs {lane}");
-                for (u, v) in x.iter().zip(y) {
-                    assert_eq!(
-                        u.to_bits(),
-                        v.to_bits(),
-                        "panel ({jb},{pb}) differs between lanes {l0} and {lane}"
-                    );
-                }
+fn prepacked_operands_pin_their_packing_lane() {
+    // Panels are interleaved with the packing lane's micro-tile dims
+    // and the operand records that lane, so consumption is driven by
+    // `pp.lane()` — NOT by whatever lane is active when the GEMM runs.
+    // Pin lane X, prepack and compute the reference; then repin every
+    // other available lane Y and rerun all prepacked schedules on the
+    // same operand: bit-identical, because the recorded lane X still
+    // governs both the panel geometry and the kernel dispatch.
+    let (a, b) = operands(7, 150, 37, 300);
+    for pack_lane in Lane::ALL {
+        let (pp, want) = {
+            let Some(_pin) = ForcedLane::pin(pack_lane) else { continue };
+            let pp = PrepackedMatrix::prepack(&b, PrepackPath::Cube(SplitConfig::default()));
+            assert_eq!(pp.lane(), pack_lane);
+            let want = gemm_prepacked(&a, &pp);
+            (pp, want)
+        };
+        for exec_lane in Lane::ALL {
+            let Some(_pin) = ForcedLane::pin(exec_lane) else { continue };
+            let ctx = |s: &str| format!("packed {pack_lane}, executed {exec_lane}, {s}");
+            assert_bits(&want, &gemm_prepacked(&a, &pp), &ctx("serial"));
+            assert_bits(&want, &gemm_prepacked_overlapped(&a, &pp), &ctx("overlap"));
+            let got = gemm_prepacked_overlapped_ab(&a, &pp, 2);
+            assert_bits(&want, &got, &ctx("ab d2"));
+        }
+    }
+}
+
+#[test]
+fn forced_wide_lane_bit_matches_serial_reference_on_every_serving_path() {
+    // ISSUE 9 acceptance gate: with the AVX-512 lane pinned, the full
+    // serving stack — inline requests under every host schedule, the
+    // registered-weight (prepacked) path, and the column-shard router —
+    // serves bits identical to the serial blocked reference on every
+    // precision tier. Skips cleanly on hosts without AVX-512F.
+    use std::time::Duration;
+    use sgemm_cube::coordinator::batcher::BatcherConfig;
+    use sgemm_cube::coordinator::server::{GemmService, ServiceConfig};
+    use sgemm_cube::coordinator::shard::ShardConfig;
+    use sgemm_cube::gemm::backend::{Backend, Schedule};
+
+    let Some(_pin) = ForcedLane::pin(Lane::Avx512) else { return };
+
+    let (a, w) = operands(9, 150, 37, 900);
+    let reference = |backend: Backend, s_b: i32| match backend {
+        Backend::Fp32 => sgemm_blocked(&a, &w),
+        Backend::Fp16 => hgemm_blocked(&a, &w),
+        Backend::CubeElementwise | Backend::CubeTermwise => {
+            cube_gemm_blocked(&a, &w, SplitConfig::with_scale(s_b))
+        }
+        Backend::Bf16x2 | Backend::Bf16x3 => {
+            family_gemm_blocked(&a, &w, backend.family_spec().expect("bf16 tier"))
+        }
+    };
+    let cfg = |schedule: Schedule, shards: usize| ServiceConfig {
+        batcher: BatcherConfig { max_batch: 2, max_wait: Duration::from_millis(1) },
+        n_workers: 2,
+        schedule,
+        schedule_prepacked: schedule,
+        pipeline_depth: 2,
+        shards: ShardConfig { count: shards, ..Default::default() },
+        ..Default::default()
+    };
+    let backends =
+        [Backend::Fp32, Backend::Fp16, Backend::CubeTermwise, Backend::Bf16x2, Backend::Bf16x3];
+    for schedule in Schedule::ALL {
+        for shards in [0usize, 2] {
+            let svc = GemmService::start(cfg(schedule, shards));
+            let id = svc.register_weights(w.clone());
+            for backend in backends {
+                let resp = svc.gemm_blocking(a.clone(), w.clone(), Some(backend)).expect("submit");
+                let c = resp.result.expect("inline request failed");
+                let what = format!("avx512 {} shards={shards} {backend} inline", schedule.name());
+                assert_bits(&reference(resp.backend, resp.scale_exp), &c, &what);
+                let resp =
+                    svc.gemm_blocking_prepacked(a.clone(), id, Some(backend)).expect("submit");
+                let c = resp.result.expect("prepacked request failed");
+                let what =
+                    format!("avx512 {} shards={shards} {backend} prepacked", schedule.name());
+                assert_bits(&reference(resp.backend, resp.scale_exp), &c, &what);
             }
+            svc.shutdown();
         }
     }
 }
@@ -259,7 +318,7 @@ fn lanes_agree_within_accumulation_order_noise_end_to_end() {
         let _pin = ForcedLane::pin(Lane::Scalar).expect("scalar is always available");
         sgemm_blocked(&a, &b)
     };
-    for lane in [Lane::Avx2, Lane::Neon] {
+    for lane in [Lane::Avx512, Lane::Avx2, Lane::Neon] {
         let Some(_pin) = ForcedLane::pin(lane) else { continue };
         let got = sgemm_blocked(&a, &b);
         for i in 0..m {

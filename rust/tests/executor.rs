@@ -25,6 +25,7 @@ use sgemm_cube::gemm::blocked::{
     hgemm_blocked, sgemm_blocked,
 };
 use sgemm_cube::gemm::cache::{PrepackCache, PrepackKey};
+use sgemm_cube::gemm::kernels::active_lane;
 use sgemm_cube::gemm::prepacked::{PrepackPath, PrepackedMatrix};
 use sgemm_cube::softfloat::split::SplitConfig;
 use sgemm_cube::util::mat::Matrix;
@@ -216,6 +217,7 @@ fn cache_eviction_racing_an_in_flight_prefetched_batch_is_harmless() {
         n: 25,
         backend: Backend::CubeTermwise,
         scale_exp: 12,
+        lane: active_lane(),
         col0: 0,
     };
     let held = cache.get_or_insert_with(key(1), || probe.clone());
@@ -273,5 +275,62 @@ fn pool_survives_external_contention_from_many_threads() {
     for th in threads {
         th.join().expect("stress thread panicked");
     }
+    assert!(pool.high_water() <= pool.n_workers());
+}
+
+#[test]
+fn skewed_load_drives_work_stealing_and_counters_advance() {
+    // Work-stealing satellite: pin one of three workers on a gated
+    // detached job, then hammer the pool with fan-out rounds whose
+    // chunk costs are skewed (every round enlists all three worker
+    // queues, but the pinned worker never drains its own). The free
+    // workers must steal the pinned worker's queued batch participants
+    // — correctness (exact index coverage) must hold throughout, and
+    // the steal counters must advance.
+    use std::sync::mpsc::channel;
+
+    let pool = Arc::new(Pool::new(3));
+    let (gate_tx, gate_rx) = channel::<()>();
+    let blocker = pool.submit(move || {
+        gate_rx.recv().unwrap();
+    });
+    while blocker.state() != sgemm_cube::exec::pool::TaskState::Running {
+        std::thread::yield_now();
+    }
+    let before = pool.steals();
+
+    let mut threads = Vec::new();
+    for t in 0..3usize {
+        let pool = Arc::clone(&pool);
+        threads.push(std::thread::spawn(move || {
+            for round in 0..8 {
+                let n = 64 + t * 7 + round;
+                let counter = AtomicUsize::new(0);
+                pool.run_chunks(n, |s, e| {
+                    // Skew: the first chunk of each round is an order of
+                    // magnitude heavier than the rest.
+                    if s == 0 {
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                    counter.fetch_add(e - s, Ordering::SeqCst);
+                });
+                assert_eq!(counter.load(Ordering::SeqCst), n, "round {round} thread {t}");
+            }
+        }));
+    }
+    for th in threads {
+        th.join().expect("stress thread panicked");
+    }
+    // The pinned worker's queued drains can only have been executed by
+    // a thief; poll briefly because the last steal may still be mid
+    // hand-off when the joins return.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while pool.steals() == before {
+        assert!(std::time::Instant::now() < deadline, "no steal under skewed load");
+        std::thread::yield_now();
+    }
+    gate_tx.send(()).unwrap();
+    assert_eq!(blocker.join(), sgemm_cube::exec::pool::TaskState::Done);
+    assert!(pool.steals() > before);
     assert!(pool.high_water() <= pool.n_workers());
 }

@@ -384,7 +384,15 @@ fn prop_prepacked_prefetch_bit_identical() {
             (Backend::CubeTermwise, 12, PrepackPath::Cube(SplitConfig::with_scale(12)), "cube"),
         ];
         for (backend, scale_exp, path, what) in cases {
-            let key = PrepackKey { weight: 1, k, n, backend, scale_exp, col0: 0 };
+            let key = PrepackKey {
+                weight: 1,
+                k,
+                n,
+                backend,
+                scale_exp,
+                lane: sgemm_cube::gemm::kernels::active_lane(),
+                col0: 0,
+            };
             // Lookup 0 misses (packs fresh), lookup 1 hits the LRU; the
             // prefetched path must be bit-identical either way.
             for lookup in 0..2 {

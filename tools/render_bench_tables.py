@@ -140,20 +140,26 @@ def main():
     print(f"| `blocked/overlap_speedup` | {fmt_x(med('blocked/overlap_speedup'))} | B-only prefetch baseline |")
     print(f"| `blocked/ab_overlap_speedup` | {fmt_x(med('blocked/ab_overlap_speedup'))} | gate: ≥ 0.90 × overlap_speedup |")
     print(f"| `exec/pool_spawn_overhead_ns` | {fmt_ns(med('exec/pool_spawn_overhead_ns'))} | run_chunks round-trip on the pool |")
+    print(f"| `exec/steals` | {fmt_f(med('exec/steals'), 0)} | tasks taken from a peer worker's queue |")
+    print(f"| `exec/steal_ratio` | {fmt_f(med('exec/steal_ratio'))} | steals / (steals + failed attempts); 0 when idle |")
 
     print("\n## §Kernel-dispatch\n")
     lane = med("kernel/lane")
     lane_cell = PENDING
     if lane is not None:
-        lane_cell = {0: "scalar (0)", 1: "avx2 (1)", 2: "neon (2)"}.get(int(lane), f"? ({lane:.0f})")
+        lane_cell = {0: "scalar (0)", 1: "avx2 (1)", 2: "neon (2)", 3: "avx512 (3)"}.get(
+            int(lane), f"? ({lane:.0f})"
+        )
     mr, nr = med("kernel/mr"), med("kernel/nr")
     tile = PENDING if mr is None or nr is None else f"{mr:.0f} × {nr:.0f}"
     print("| record | value | note |")
     print("|--------|-------|------|")
-    print(f"| `kernel/lane` | {lane_cell} | 0 scalar / 1 avx2 / 2 neon |")
-    print(f"| `kernel/mr` × `kernel/nr` | {tile} | micro-tile, shared by all lanes |")
+    print(f"| `kernel/lane` | {lane_cell} | 0 scalar / 1 avx2 / 2 neon / 3 avx512 |")
+    print(f"| `kernel/mr` × `kernel/nr` | {tile} | detected lane's micro-tile (8 × 16 on avx512, 4 × 8 elsewhere) |")
     print(f"| `host/sgemm_blocked_scalar` | {fmt_s(med('host/sgemm_blocked_scalar/'))} | blocked fp32, scalar lane forced |")
-    print(f"| `blocked/simd_speedup` | {fmt_x(med('blocked/simd_speedup'))} | gate: ≥ 2× when avx2 detected |")
+    print(f"| `blocked/simd_speedup` | {fmt_x(med('blocked/simd_speedup'))} | gate: ≥ 2× when avx2/avx512 detected |")
+    print(f"| `host/sgemm_blocked_avx512` | {fmt_s(med('host/sgemm_blocked_avx512/'))} | blocked fp32, avx512 lane forced (AVX-512F hosts only) |")
+    print(f"| `blocked/avx512_vs_avx2` | {fmt_x(med('blocked/avx512_vs_avx2/'))} | avx512 vs forced avx2; CI sanity floor 0.5× |")
 
     print("\n## §Precision-family\n")
     print("| record | value | note |")
