@@ -1,0 +1,248 @@
+//! Serving-SLO load harness: drives the wire front door over real
+//! sockets and records sustained QPS at a p99 latency SLO into
+//! `BENCH_serving.json` (rendered into EXPERIMENTS.md §Serving-SLO by
+//! `tools/render_bench_tables.py`, gated by the `serving-smoke` CI
+//! job).
+//!
+//! Two arrival disciplines, per EXPERIMENTS.md:
+//!
+//! * **closed-loop** — each connection keeps exactly one request in
+//!   flight; sweeping the connection count maps the throughput/latency
+//!   frontier. The headline metric is the highest measured QPS whose
+//!   client-observed p99 still meets the SLO (`wire_qps_at_slo`).
+//! * **open-loop** — requests are paced at a fixed arrival rate
+//!   regardless of completions, so queueing delay is visible in the
+//!   tail instead of being absorbed by backpressure.
+//!
+//! Traffic is mixed: three registered weight panels of different
+//! shapes, rotating activation heights and per-request precision
+//! options (policy default, an explicit precision budget, a pinned
+//! backend), all through register-then-serve `POST /gemm`.
+//!
+//! `QUICK=1 cargo bench --bench serving_load` shrinks the measurement
+//! windows for CI smoke; latencies are exact sorted samples, not
+//! histogram buckets, so the p99 needs no estimator caveats.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sgemm_cube::coordinator::batcher::BatcherConfig;
+use sgemm_cube::coordinator::net::{NetClient, NetConfig, NetServer, WireOpts};
+use sgemm_cube::coordinator::server::{GemmService, ServiceConfig};
+use sgemm_cube::util::bench::Bencher;
+use sgemm_cube::util::mat::Matrix;
+use sgemm_cube::util::rng::Rng;
+
+/// The serving SLO: client-observed p99 latency must stay within 50ms.
+const SLO_P99_S: f64 = 0.050;
+
+/// One worker's traffic tally: (ok, errors, per-request latencies).
+type Tally = (u64, u64, Vec<f64>);
+
+/// Exact p99 from raw samples (no estimator): sort and index.
+fn p99(lat: &mut [f64]) -> f64 {
+    if lat.is_empty() {
+        return f64::NAN;
+    }
+    lat.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    let idx = ((lat.len() as f64) * 0.99).ceil() as usize;
+    lat[idx.saturating_sub(1).min(lat.len() - 1)]
+}
+
+/// The mixed request the whole harness sends: weight panel, activation
+/// height and precision option all rotate with the iteration index.
+fn send_one(
+    client: &mut NetClient,
+    weights: &[(u64, usize)],
+    rng: &mut Rng,
+    i: usize,
+) -> (bool, f64) {
+    let (id, k) = weights[i % weights.len()];
+    let m = [4usize, 8, 16][(i / weights.len()) % 3];
+    let a = Matrix::random_symmetric(m, k, 0, rng);
+    let opts = match i % 3 {
+        0 => WireOpts::default(),
+        1 => WireOpts { precision: Some(1e-6), ..WireOpts::default() },
+        _ => WireOpts { backend: Some("cube-termwise"), ..WireOpts::default() },
+    };
+    let t = Instant::now();
+    let ok = client.gemm_weight(&a, id, &opts).is_ok();
+    (ok, t.elapsed().as_secs_f64())
+}
+
+/// Closed loop at `conc` connections for `measure`: returns
+/// (sustained QPS, p99 seconds, client-observed errors).
+fn run_closed(
+    addr: &str,
+    weights: &[(u64, usize)],
+    conc: usize,
+    measure: Duration,
+) -> (f64, f64, u64) {
+    let stop = Arc::new(AtomicBool::new(false));
+    let workers: Vec<_> = (0..conc)
+        .map(|w| {
+            let (addr, weights, stop) = (addr.to_string(), weights.to_vec(), Arc::clone(&stop));
+            std::thread::spawn(move || -> Tally {
+                let mut client = NetClient::connect(addr);
+                let mut rng = Rng::new(0xc105_ed00 + w as u64);
+                let (mut ok, mut err, mut lat) = (0u64, 0u64, Vec::new());
+                let mut i = w; // offset so workers stagger the mix
+                while !stop.load(Ordering::Relaxed) {
+                    let (success, secs) = send_one(&mut client, &weights, &mut rng, i);
+                    if success {
+                        ok += 1;
+                        lat.push(secs);
+                    } else {
+                        err += 1;
+                    }
+                    i += 1;
+                }
+                (ok, err, lat)
+            })
+        })
+        .collect();
+    let t0 = Instant::now();
+    std::thread::sleep(measure);
+    stop.store(true, Ordering::Relaxed);
+    let mut lat = Vec::new();
+    let (mut ok, mut err) = (0u64, 0u64);
+    for h in workers {
+        let (o, e, l) = h.join().expect("closed-loop worker");
+        ok += o;
+        err += e;
+        lat.extend(l);
+    }
+    (ok as f64 / t0.elapsed().as_secs_f64(), p99(&mut lat), err)
+}
+
+/// Open loop: `conc` pacer threads jointly target `rate` requests/sec
+/// for `measure`, sending on schedule whether or not earlier requests
+/// have completed (queueing shows up in the tail).
+fn run_open(
+    addr: &str,
+    weights: &[(u64, usize)],
+    conc: usize,
+    rate: f64,
+    measure: Duration,
+) -> (f64, f64, u64) {
+    let interval = Duration::from_secs_f64(conc as f64 / rate);
+    let workers: Vec<_> = (0..conc)
+        .map(|w| {
+            let (addr, weights) = (addr.to_string(), weights.to_vec());
+            std::thread::spawn(move || -> Tally {
+                let mut client = NetClient::connect(addr);
+                let mut rng = Rng::new(0x09e7_1007 + w as u64);
+                let (mut ok, mut err, mut lat) = (0u64, 0u64, Vec::new());
+                let start = Instant::now();
+                let mut tick = 0u32;
+                while start.elapsed() < measure {
+                    let due = start + interval * tick;
+                    tick += 1;
+                    let now = Instant::now();
+                    if due > now {
+                        std::thread::sleep(due - now);
+                    }
+                    let (success, secs) =
+                        send_one(&mut client, &weights, &mut rng, tick as usize * conc + w);
+                    if success {
+                        ok += 1;
+                        lat.push(secs);
+                    } else {
+                        err += 1;
+                    }
+                }
+                (ok, err, lat)
+            })
+        })
+        .collect();
+    let t0 = Instant::now();
+    let mut lat = Vec::new();
+    let (mut ok, mut err) = (0u64, 0u64);
+    for h in workers {
+        let (o, e, l) = h.join().expect("open-loop worker");
+        ok += o;
+        err += e;
+        lat.extend(l);
+    }
+    (ok as f64 / t0.elapsed().as_secs_f64().max(measure.as_secs_f64()), p99(&mut lat), err)
+}
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let measure = if quick { Duration::from_millis(400) } else { Duration::from_secs(2) };
+    let mut bench = Bencher::quick();
+
+    let svc = Arc::new(GemmService::start(ServiceConfig {
+        batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
+        ..Default::default()
+    }));
+    let net = NetServer::bind(Arc::clone(&svc), NetConfig::default()).expect("bind front door");
+    let addr = net.local_addr().to_string();
+    println!("front door on {addr} (SLO: p99 <= {:.0} ms)", SLO_P99_S * 1e3);
+
+    // Mixed weight panels, registered over the wire like a real client.
+    let mut rng = Rng::new(42);
+    let mut reg = NetClient::connect(addr.clone());
+    let weights: Vec<(u64, usize)> = [(48usize, 32usize), (64, 48), (96, 64)]
+        .iter()
+        .map(|&(k, n)| {
+            let b = Matrix::random_symmetric(k, n, 0, &mut rng);
+            (reg.register(&b).expect("register weights over the wire"), k)
+        })
+        .collect();
+
+    // Warm caches (prepack panels, backend dispatch) outside any timer.
+    let _ = run_closed(&addr, &weights, 1, measure / 4);
+
+    println!("== closed-loop: connection sweep ==");
+    let mut errors = 0u64;
+    let mut best_qps = 0.0f64;
+    let mut qps_at_slo = 0.0f64;
+    let mut slo_p99 = 0.0f64;
+    for conc in [1usize, 2, 4] {
+        let (qps, p99s, errs) = run_closed(&addr, &weights, conc, measure);
+        println!("  c={conc}: {qps:7.0} req/s, p99 {:7.2} ms, {errs} errors", p99s * 1e3);
+        bench.record_scalar(&format!("serving/wire_qps_c{conc}"), qps);
+        bench.record_scalar(&format!("serving/wire_p99_s_c{conc}"), p99s);
+        errors += errs;
+        best_qps = best_qps.max(qps);
+        if p99s <= SLO_P99_S && qps > qps_at_slo {
+            qps_at_slo = qps;
+            slo_p99 = p99s;
+        }
+    }
+    bench.record_scalar("serving/wire_qps_at_slo", qps_at_slo);
+    bench.record_scalar("serving/wire_slo_p99_s", slo_p99);
+    println!("sustained at SLO: {qps_at_slo:.0} req/s (p99 {:.2} ms)", slo_p99 * 1e3);
+
+    // Open loop at ~60% of the closed-loop peak: below saturation, so
+    // the tail reflects service time plus transient queueing.
+    let rate = (best_qps * 0.6).clamp(20.0, 2000.0);
+    let (oqps, op99, oerrs) = run_open(&addr, &weights, 4, rate, measure);
+    errors += oerrs;
+    println!(
+        "== open-loop @ {rate:.0} req/s target: {oqps:.0} req/s achieved, p99 {:.2} ms ==",
+        op99 * 1e3
+    );
+    bench.record_scalar("serving/wire_open_target_qps", rate);
+    bench.record_scalar("serving/wire_open_qps", oqps);
+    bench.record_scalar("serving/wire_open_p99_s", op99);
+
+    // Client-observed failures plus the server's own shed/timeout
+    // counters — the smoke gate asserts these stay sane.
+    let report = svc.metrics().report();
+    bench.record_scalar("serving/wire_errors", errors as f64);
+    bench.record_scalar("serving/wire_shed", report.shed as f64);
+    bench.record_scalar("serving/wire_timeouts", report.timeouts as f64);
+    println!("\n{}", report.line());
+
+    // Repo root, independent of the bench's working directory.
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_serving.json");
+    match bench.write_json(&path) {
+        Ok(()) => println!("[json] {}", path.display()),
+        Err(e) => eprintln!("warning: could not write {path:?}: {e}"),
+    }
+    net.shutdown();
+    svc.shutdown();
+}

@@ -21,7 +21,9 @@ COMMANDS:
     accuracy   Fig 8/9 accuracy sweeps               (--fig 8|9)
     figures    Regenerate paper tables/figures       (--fig 2|6|8|9|10|11|12|t1|t2|abl|all)
     perf       Simulator throughput for a config     (--bm/--bk/--bn/--buffer)
-    serve      Start the GEMM service demo
+    serve      Start the GEMM service demo; --listen HOST:PORT starts
+               the HTTP wire front door instead (POST /gemm, POST
+               /register, GET /metrics, GET /healthz; [net] config keys)
     train      Train the e2e MLP                     (--backend fp32|fp16|cube)
 
 OPTIONS (common):

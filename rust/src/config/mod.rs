@@ -9,4 +9,4 @@ pub mod parser;
 pub mod schema;
 
 pub use parser::ConfigFile;
-pub use schema::{BlockingConfig, ChipConfig, ServerConfig};
+pub use schema::{BlockingConfig, ChipConfig, NetSection, ServerConfig};

@@ -6,6 +6,7 @@ use anyhow::{bail, Result};
 
 use crate::config::parser::ConfigFile;
 use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::net::NetConfig;
 use crate::coordinator::policy::PrecisionPolicy;
 use crate::coordinator::server::ServiceConfig;
 use crate::gemm::backend::{Backend, Schedule};
@@ -153,6 +154,45 @@ impl ServerConfig {
             sc.shards.backoff = Duration::from_secs_f64(ms / 1e3);
         }
         Ok(ServerConfig(sc))
+    }
+}
+
+/// `[net]` section → [`NetConfig`] (the wire front door,
+/// [`crate::coordinator::net`]).
+#[derive(Debug, Clone, Default)]
+pub struct NetSection(pub NetConfig);
+
+impl NetSection {
+    /// Build a [`NetConfig`] from the `[net]` section, starting from
+    /// defaults and applying only the keys present. The `serve
+    /// --listen ADDR` flag overrides `[net] listen`.
+    pub fn from_config(cfg: &ConfigFile) -> Result<NetSection> {
+        let mut nc = NetConfig::default();
+        if let Some(l) = cfg.get("net", "listen") {
+            if l.is_empty() {
+                bail!("[net] listen must be host:port");
+            }
+            nc.listen = l.to_string();
+        }
+        if let Some(mb) = cfg.get_usize("net", "max_body_mb")? {
+            if mb == 0 {
+                bail!("[net] max_body_mb must be >= 1");
+            }
+            nc.max_body = mb << 20;
+        }
+        if let Some(ms) = cfg.get_f64("net", "read_timeout_ms")? {
+            if ms <= 0.0 {
+                bail!("[net] read_timeout_ms must be > 0");
+            }
+            nc.read_timeout = Duration::from_secs_f64(ms / 1e3);
+        }
+        if let Some(c) = cfg.get_usize("net", "max_connections")? {
+            if c == 0 {
+                bail!("[net] max_connections must be >= 1");
+            }
+            nc.max_connections = c;
+        }
+        Ok(NetSection(nc))
     }
 }
 
@@ -357,6 +397,32 @@ mod tests {
         assert!(ServerConfig::from_config(&bad).is_err());
         let bad = ConfigFile::parse("[server]\nretry_backoff_ms = -1").unwrap();
         assert!(ServerConfig::from_config(&bad).is_err());
+    }
+
+    #[test]
+    fn net_section_roundtrip_and_validation() {
+        let cfg = ConfigFile::parse(
+            "[net]\nlisten = \"0.0.0.0:8080\"\nmax_body_mb = 8\nread_timeout_ms = 500\nmax_connections = 16",
+        )
+        .unwrap();
+        let nc = NetSection::from_config(&cfg).unwrap().0;
+        assert_eq!(nc.listen, "0.0.0.0:8080");
+        assert_eq!(nc.max_body, 8 << 20);
+        assert_eq!(nc.read_timeout, Duration::from_millis(500));
+        assert_eq!(nc.max_connections, 16);
+        // Defaults: loopback ephemeral port, sane caps.
+        let nc = NetSection::from_config(&ConfigFile::parse("").unwrap()).unwrap().0;
+        assert_eq!(nc.listen, "127.0.0.1:0");
+        assert!(nc.max_body > 0 && nc.max_connections > 0);
+        for bad in [
+            "[net]\nmax_body_mb = 0",
+            "[net]\nread_timeout_ms = 0",
+            "[net]\nread_timeout_ms = -5",
+            "[net]\nmax_connections = 0",
+        ] {
+            let cfg = ConfigFile::parse(bad).unwrap();
+            assert!(NetSection::from_config(&cfg).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -1,13 +1,29 @@
-//! Service metrics: request counts, latency distribution (exact summary
-//! + fixed-bucket histogram with p50/p95/p99), throughput, the
-//! resilience counters (shed / timeout / retry / failover), and the
+//! Service metrics: request counts, latency distribution, throughput,
+//! the resilience counters (shed / timeout / retry / failover), and the
 //! global pool's work-stealing counters (sampled at report time from
 //! [`crate::exec::pool::global`] — they are process-wide, not
 //! per-service, so concurrent services see the same stream).
+//!
+//! **Latency estimators.** Two bounded structures cover the
+//! distribution, and neither grows with request count (an earlier
+//! revision kept every sample in a `Vec<f64>` — a memory leak in a
+//! long-running server):
+//!
+//! * the fixed-bucket [`LatencyHistogram`] is the **authoritative
+//!   p50/p95/p99 source** — exact rank selection over log-spaced
+//!   buckets, conservative by at most one bucket ratio;
+//! * a fixed-capacity **reservoir** ([`RESERVOIR_CAPACITY`] samples,
+//!   Algorithm R over a deterministic [`crate::util::rng`] stream)
+//!   holds a uniform subsample of successful latencies and feeds the
+//!   [`Summary`] in [`MetricsReport::latency`]. Past capacity the
+//!   summary's moments are unbiased estimates and its `min`/`max` are
+//!   the extremes *of the subsample*, not of the full stream — use the
+//!   histogram quantiles for tail claims.
 
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 
 /// Number of fixed log-spaced latency buckets. Bucket `i` covers
@@ -18,10 +34,57 @@ pub const LATENCY_BUCKETS: usize = 28;
 /// Lower edge of the histogram: one microsecond.
 const BUCKET_FLOOR_S: f64 = 1e-6;
 
+/// Capacity of the latency reservoir: enough for stable summary
+/// moments, small enough (32 KiB of `f64`) to be irrelevant to a
+/// serving host's memory budget.
+pub const RESERVOIR_CAPACITY: usize = 4096;
+
+/// Bounded uniform subsample of the successful-latency stream —
+/// classic Algorithm R: the first [`RESERVOIR_CAPACITY`] samples are
+/// kept verbatim; sample `i > capacity` replaces a random held slot
+/// with probability `capacity / i`, so every sample seen so far is in
+/// the reservoir with equal probability. The RNG is the repo's seeded
+/// xoshiro generator — deterministic given the sample order, and free
+/// of platform entropy sources.
+#[derive(Debug)]
+struct Reservoir {
+    samples: Vec<f64>,
+    seen: u64,
+    rng: Rng,
+}
+
+impl Default for Reservoir {
+    fn default() -> Self {
+        Reservoir { samples: Vec::new(), seen: 0, rng: Rng::new(0x5a7e_11ce_5eed) }
+    }
+}
+
+impl Reservoir {
+    fn record(&mut self, v: f64) {
+        self.seen += 1;
+        if self.samples.len() < RESERVOIR_CAPACITY {
+            self.samples.push(v);
+        } else {
+            let j = self.rng.usize_below(self.seen as usize);
+            if j < RESERVOIR_CAPACITY {
+                self.samples[j] = v;
+            }
+        }
+    }
+
+    fn summary(&self) -> Option<Summary> {
+        if self.samples.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&self.samples))
+        }
+    }
+}
+
 /// Fixed-bucket latency histogram: log-spaced, O(1) per record,
-/// constant memory regardless of request count — the scalable
-/// complement to the exact (but unbounded) sample the [`Summary`] is
-/// computed from. Quantiles are conservative: [`LatencyHistogram::quantile`]
+/// constant memory regardless of request count — the **authoritative**
+/// p50/p95/p99 source (the reservoir-fed [`Summary`] is a uniform
+/// subsample). Quantiles are conservative: [`LatencyHistogram::quantile`]
 /// returns the *upper bound* of the bucket holding the requested rank,
 /// so a reported p99 never understates the true p99 by more than one
 /// bucket ratio (2×).
@@ -86,7 +149,7 @@ pub struct Metrics {
 
 #[derive(Debug, Default)]
 struct Inner {
-    latencies: Vec<f64>,
+    latencies: Reservoir,
     hist: LatencyHistogram,
     flops: f64,
     batches: u64,
@@ -109,7 +172,12 @@ pub struct MetricsReport {
     pub batches: u64,
     /// Requests that completed with an error.
     pub errors: u64,
-    /// Latency summary in seconds (None until the first request).
+    /// Latency summary in seconds over the bounded reservoir subsample
+    /// (`None` until the first successful request). Exact while fewer
+    /// than [`RESERVOIR_CAPACITY`] successes have been recorded;
+    /// past that, an unbiased uniform subsample — `min`/`max` are the
+    /// subsample's extremes, and `p50`/`p95`/`p99` below (histogram-
+    /// derived) stay the authoritative quantiles.
     pub latency: Option<Summary>,
     /// Histogram quantiles in seconds (bucket upper bounds; None until
     /// the first successful request).
@@ -148,9 +216,9 @@ impl Metrics {
     }
 
     /// Record one completed request. Successful latencies feed both the
-    /// exact summary and the histogram; failures only count as errors
-    /// (error latencies say more about the failure mode than the
-    /// service).
+    /// bounded reservoir (summary moments) and the histogram (quantile
+    /// truth); failures only count as errors (error latencies say more
+    /// about the failure mode than the service).
     pub fn record_request(&self, latency_secs: f64, flops: f64, ok: bool) {
         let mut g = self.inner.lock().unwrap();
         let now = Instant::now();
@@ -158,12 +226,19 @@ impl Metrics {
         g.finished = Some(now);
         g.requests += 1;
         if ok {
-            g.latencies.push(latency_secs);
+            g.latencies.record(latency_secs);
             g.hist.record(latency_secs);
             g.flops += flops;
         } else {
             g.errors += 1;
         }
+    }
+
+    /// Latency samples currently held by the reservoir — never more
+    /// than [`RESERVOIR_CAPACITY`], regardless of request count (the
+    /// bounded-memory regression guard).
+    pub fn latency_samples_held(&self) -> usize {
+        self.inner.lock().unwrap().latencies.samples.len()
     }
 
     /// Record one executed batch.
@@ -202,7 +277,7 @@ impl Metrics {
             requests: g.requests,
             batches: g.batches,
             errors: g.errors,
-            latency: if g.latencies.is_empty() { None } else { Some(Summary::of(&g.latencies)) },
+            latency: g.latencies.summary(),
             p50: g.hist.quantile(0.50),
             p95: g.hist.quantile(0.95),
             p99: g.hist.quantile(0.99),
@@ -343,6 +418,55 @@ mod tests {
         let line = r.line();
         assert!(line.contains(" steals="), "{line}");
         assert!(line.contains(&format!(" steal_fails={} ", r.pool_steal_fails)), "{line}");
+    }
+
+    #[test]
+    fn latency_memory_is_bounded_past_reservoir_capacity() {
+        // Regression: the pre-reservoir Metrics pushed every sample
+        // into a Vec forever. Feed 4× capacity and check both the
+        // bound and that the estimators stay sane.
+        let m = Metrics::new();
+        let total = 4 * RESERVOIR_CAPACITY;
+        for i in 0..total {
+            // Flat 1..2 ms ramp, plus a 100 ms outlier every 100th.
+            let lat = if i % 100 == 99 { 0.100 } else { 0.001 + (i % 100) as f64 * 1e-5 };
+            m.record_request(lat, 1e6, true);
+        }
+        assert!(m.latency_samples_held() <= RESERVOIR_CAPACITY);
+        assert_eq!(m.latency_samples_held(), RESERVOIR_CAPACITY);
+        let r = m.report();
+        assert_eq!(r.requests, total as u64);
+        // Histogram quantiles are exact-rank over every sample: the
+        // bulk sits under 2.048 ms, the outliers own the extreme tail.
+        assert_eq!(r.p50, Some(2048.0 * 1e-6));
+        assert_eq!(r.p95, Some(2048.0 * 1e-6));
+        // Reservoir summary: the subsample's moments must land inside
+        // the population's possible range (mean ≈ 2.4 ms with the 1%
+        // outliers; a broken reservoir that kept only early or only
+        // late samples would still pass, hence the histogram above is
+        // the authoritative check — this guards gross corruption).
+        let lat = r.latency.expect("summary present");
+        assert_eq!(lat.n, RESERVOIR_CAPACITY);
+        assert!(lat.mean > 0.001 && lat.mean < 0.01, "mean={}", lat.mean);
+        assert!(lat.min >= 0.001 && lat.max <= 0.100, "[{}, {}]", lat.min, lat.max);
+    }
+
+    #[test]
+    fn reservoir_replacement_is_uniform_ish() {
+        // After 8× capacity from a monotonically increasing stream, a
+        // correct Algorithm R holds a mix of early and late samples; a
+        // "keep first capacity" bug would hold only values < capacity.
+        let mut res = Reservoir::default();
+        let total = 8 * RESERVOIR_CAPACITY;
+        for i in 0..total {
+            res.record(i as f64);
+        }
+        assert_eq!(res.samples.len(), RESERVOIR_CAPACITY);
+        assert_eq!(res.seen, total as u64);
+        let late = res.samples.iter().filter(|&&v| v >= RESERVOIR_CAPACITY as f64).count();
+        // Expected ~7/8 of slots replaced by later samples; demand a
+        // loose majority so the test is robust to the fixed seed.
+        assert!(late > RESERVOIR_CAPACITY / 2, "late={late}");
     }
 
     #[test]

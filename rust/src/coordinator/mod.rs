@@ -19,13 +19,19 @@
 //!    split + pack cost is paid once per weight, not once per request,
 //! 4. records latency/throughput metrics, a fixed-bucket latency
 //!    histogram, and the resilience counters ([`metrics`]),
-//! 5. and hardens the whole front door: bounded admission, per-request
+//! 5. hardens the whole front door: bounded admission, per-request
 //!    deadlines, typed channel-loss errors, bounded retry, and an
 //!    in-process column-shard router with health tracking and failover
-//!    ([`shard`]) — responses bit-identical to single-node serving.
+//!    ([`shard`]) — responses bit-identical to single-node serving,
+//! 6. and speaks HTTP/1.1 over TCP ([`net`]): a hand-rolled wire front
+//!    door (`/gemm`, `/register`, `/metrics`, `/healthz` — no tokio,
+//!    nothing vendored) that threads deadlines, admission and the
+//!    failpoint registry through the socket path, bit-identical to the
+//!    in-process blocking entry points.
 
 pub mod batcher;
 pub mod metrics;
+pub mod net;
 pub mod policy;
 pub mod request;
 pub mod scheduler;
@@ -34,7 +40,8 @@ pub mod shard;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::Metrics;
+pub use net::{NetClient, NetConfig, NetServer};
 pub use policy::{PolicyDecision, PrecisionPolicy};
 pub use request::{BOperand, GemmRequest, GemmResponse, ShapeKey, WeightEntry, WeightId};
-pub use server::{GemmService, ServiceConfig};
+pub use server::{GemmService, RequestOpts, ServiceConfig};
 pub use shard::{ShardConfig, ShardHealth, ShardRouter};

@@ -1,0 +1,260 @@
+//! [`NetClient`]: a small blocking HTTP/1.1 client for the wire front
+//! door — what the wire tests and the `serving_load` bench drive their
+//! traffic through, and a usable library client for anything else that
+//! wants to talk to a [`super::NetServer`] without pulling in an HTTP
+//! stack.
+//!
+//! The client keeps one keep-alive connection and reconnects lazily:
+//! the server closes the connection after any framing error and after
+//! `Connection: close`, so after a non-2xx reply or a transport error
+//! the cached socket is dropped and the next call dials fresh.
+
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::coordinator::net::http;
+use crate::util::mat::Matrix;
+
+/// Client-side failure talking to the wire front door.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// The server answered with a non-success status: the typed
+    /// mapping of [`crate::gemm::error::GemmError`] (503 overloaded,
+    /// 504 timeout, ...) or a framing status (400/408/413/431).
+    Status {
+        /// HTTP status code.
+        code: u16,
+        /// The server's `x-error-kind` slug (empty if absent).
+        kind: String,
+        /// The plain-text error body, trimmed.
+        message: String,
+    },
+    /// Transport-level failure (connect, send, or a dropped socket).
+    Io(String),
+    /// The reply arrived but violated the protocol (bad framing,
+    /// missing headers, wrong body size).
+    Protocol(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Status { code, kind, message } => {
+                write!(f, "server status {code} ({kind}): {message}")
+            }
+            WireError::Io(m) => write!(f, "wire i/o: {m}"),
+            WireError::Protocol(m) => write!(f, "wire protocol: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Per-request knobs a wire client can set, mirroring
+/// [`crate::coordinator::server::RequestOpts`] as headers.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WireOpts {
+    /// `X-Backend`: fixed precision path by name (`fp32`, `cube`, ...).
+    pub backend: Option<&'static str>,
+    /// `X-Precision`: relative-error budget for tier selection.
+    pub precision: Option<f64>,
+    /// `X-Timeout-Ms`: end-to-end budget for this request on the
+    /// server side.
+    pub timeout_ms: Option<u64>,
+}
+
+/// A successful `/gemm` reply.
+#[derive(Debug, Clone)]
+pub struct WireReply {
+    /// The result matrix, bit-identical to the in-process path.
+    pub c: Matrix<f32>,
+    /// The precision path the policy (or the `X-Backend` pin) chose.
+    pub backend: String,
+    /// The cube scaling exponent used.
+    pub scale_exp: i32,
+    /// Server-side latency in microseconds (submission to reply).
+    pub latency_us: f64,
+}
+
+/// Blocking wire client; see the module docs for connection handling.
+pub struct NetClient {
+    addr: String,
+    read_timeout: Duration,
+    conn: Option<(BufReader<TcpStream>, TcpStream)>,
+}
+
+/// Client-side cap on a buffered reply body (a result matrix of this
+/// size would already have failed the server's own body cap).
+const MAX_REPLY_BODY: usize = 256 << 20;
+
+impl NetClient {
+    /// A client for the front door at `addr` (e.g. `"127.0.0.1:8080"`).
+    /// Dials lazily on first use.
+    pub fn connect(addr: impl Into<String>) -> NetClient {
+        NetClient { addr: addr.into(), read_timeout: Duration::from_secs(30), conn: None }
+    }
+
+    /// Override the client's reply-wait deadline (default 30 s).
+    pub fn with_read_timeout(mut self, t: Duration) -> NetClient {
+        self.read_timeout = t;
+        self
+    }
+
+    fn ensure(&mut self) -> Result<&mut (BufReader<TcpStream>, TcpStream), WireError> {
+        if self.conn.is_none() {
+            let stream =
+                TcpStream::connect(&self.addr).map_err(|e| WireError::Io(e.to_string()))?;
+            stream
+                .set_read_timeout(Some(self.read_timeout))
+                .map_err(|e| WireError::Io(e.to_string()))?;
+            let _ = stream.set_nodelay(true);
+            let writer = stream.try_clone().map_err(|e| WireError::Io(e.to_string()))?;
+            self.conn = Some((BufReader::new(stream), writer));
+        }
+        Ok(self.conn.as_mut().expect("just connected"))
+    }
+
+    /// One request/reply exchange; non-2xx becomes
+    /// [`WireError::Status`] and drops the cached connection (the
+    /// server closes after errors).
+    fn call(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, String)],
+        body: &[u8],
+    ) -> Result<(Vec<(String, String)>, Vec<u8>), WireError> {
+        let (reader, writer) = self.ensure()?;
+        let sent = http::write_request(writer, method, path, headers, body);
+        let read = sent
+            .map_err(|e| WireError::Io(e.to_string()))
+            .and_then(|()| {
+                http::read_response(reader, MAX_REPLY_BODY)
+                    .map_err(|e| WireError::Protocol(e.to_string()))
+            });
+        match read {
+            Ok((status, headers, body)) if (200..300).contains(&status) => Ok((headers, body)),
+            Ok((status, headers, body)) => {
+                self.conn = None;
+                let kind = headers
+                    .iter()
+                    .find(|(k, _)| k == "x-error-kind")
+                    .map(|(_, v)| v.clone())
+                    .unwrap_or_default();
+                let message = String::from_utf8_lossy(&body).trim().to_string();
+                Err(WireError::Status { code: status, kind, message })
+            }
+            Err(e) => {
+                self.conn = None;
+                Err(e)
+            }
+        }
+    }
+
+    /// Liveness probe: `GET /healthz`.
+    pub fn healthz(&mut self) -> Result<bool, WireError> {
+        let (_, body) = self.call("GET", "/healthz", &[], &[])?;
+        Ok(body.starts_with(b"ok"))
+    }
+
+    /// The server's `text/plain` metrics dump (`GET /metrics`).
+    pub fn metrics(&mut self) -> Result<String, WireError> {
+        let (_, body) = self.call("GET", "/metrics", &[], &[])?;
+        String::from_utf8(body).map_err(|_| WireError::Protocol("non-UTF-8 metrics".into()))
+    }
+
+    /// Register a weight matrix (`POST /register`); returns the
+    /// [`WeightId`] value to pass to [`NetClient::gemm_weight`].
+    ///
+    /// [`WeightId`]: crate::coordinator::request::WeightId
+    pub fn register(&mut self, b: &Matrix<f32>) -> Result<u64, WireError> {
+        let headers = [
+            ("x-b-rows", b.rows().to_string()),
+            ("x-b-cols", b.cols().to_string()),
+        ];
+        let (headers, _) =
+            self.call("POST", "/register", &headers, &http::f32s_to_le(b.as_slice()))?;
+        let id = headers
+            .iter()
+            .find(|(k, _)| k == "x-weight-id")
+            .map(|(_, v)| v.as_str())
+            .ok_or_else(|| WireError::Protocol("register reply without x-weight-id".into()))?;
+        id.parse::<u64>()
+            .map_err(|_| WireError::Protocol(format!("bad x-weight-id: {id:?}")))
+    }
+
+    /// `POST /gemm` with an inline B operand.
+    pub fn gemm(
+        &mut self,
+        a: &Matrix<f32>,
+        b: &Matrix<f32>,
+        opts: &WireOpts,
+    ) -> Result<WireReply, WireError> {
+        let mut headers = vec![
+            ("x-a-rows", a.rows().to_string()),
+            ("x-a-cols", a.cols().to_string()),
+            ("x-b-rows", b.rows().to_string()),
+            ("x-b-cols", b.cols().to_string()),
+        ];
+        push_opts(&mut headers, opts);
+        let mut body = http::f32s_to_le(a.as_slice());
+        body.extend_from_slice(&http::f32s_to_le(b.as_slice()));
+        let reply = self.call("POST", "/gemm", &headers, &body)?;
+        parse_gemm_reply(reply)
+    }
+
+    /// `POST /gemm` against a registered weight (register-then-serve).
+    pub fn gemm_weight(
+        &mut self,
+        a: &Matrix<f32>,
+        weight: u64,
+        opts: &WireOpts,
+    ) -> Result<WireReply, WireError> {
+        let mut headers = vec![
+            ("x-a-rows", a.rows().to_string()),
+            ("x-a-cols", a.cols().to_string()),
+            ("x-weight", weight.to_string()),
+        ];
+        push_opts(&mut headers, opts);
+        let reply = self.call("POST", "/gemm", &headers, &http::f32s_to_le(a.as_slice()))?;
+        parse_gemm_reply(reply)
+    }
+}
+
+fn push_opts(headers: &mut Vec<(&str, String)>, opts: &WireOpts) {
+    if let Some(b) = opts.backend {
+        headers.push(("x-backend", b.to_string()));
+    }
+    if let Some(p) = opts.precision {
+        headers.push(("x-precision", format!("{p:e}")));
+    }
+    if let Some(t) = opts.timeout_ms {
+        headers.push(("x-timeout-ms", t.to_string()));
+    }
+}
+
+fn parse_gemm_reply(
+    (headers, body): (Vec<(String, String)>, Vec<u8>),
+) -> Result<WireReply, WireError> {
+    let find = |n: &str| headers.iter().find(|(k, _)| k == n).map(|(_, v)| v.as_str());
+    let rows = find("x-rows")
+        .and_then(|v| v.parse::<usize>().ok())
+        .ok_or_else(|| WireError::Protocol("gemm reply without x-rows".into()))?;
+    let cols = find("x-cols")
+        .and_then(|v| v.parse::<usize>().ok())
+        .ok_or_else(|| WireError::Protocol("gemm reply without x-cols".into()))?;
+    let want = rows * cols * 4;
+    if body.len() != want {
+        return Err(WireError::Protocol(format!(
+            "gemm reply body is {} bytes, want {want} ({rows} x {cols} f32)",
+            body.len()
+        )));
+    }
+    Ok(WireReply {
+        c: Matrix::from_vec(rows, cols, http::f32s_from_le(&body)),
+        backend: find("x-backend").unwrap_or("").to_string(),
+        scale_exp: find("x-scale-exp").and_then(|v| v.parse().ok()).unwrap_or(0),
+        latency_us: find("x-latency-us").and_then(|v| v.parse().ok()).unwrap_or(0.0),
+    })
+}

@@ -1,0 +1,386 @@
+//! Minimal HTTP/1.1 framing for the wire front door: just the subset
+//! the protocol needs — request/status lines, `name: value` headers,
+//! `Content-Length`-framed bodies — with hard bounds (header bytes,
+//! body bytes) and typed errors so the server can answer truncation,
+//! oversize and read-deadline conditions with the right status instead
+//! of hanging or dying. Chunked transfer encoding is deliberately not
+//! implemented (501): both sides of this protocol always know the body
+//! length up front.
+
+use std::io::{BufRead, Write};
+
+/// Cap on the total request-head bytes (request line + headers); a
+/// head larger than this is answered `431`.
+pub const MAX_HEADER_BYTES: usize = 8192;
+
+/// One parsed request: method, path, lower-cased headers, raw body.
+#[derive(Debug)]
+pub struct HttpRequest {
+    /// Request method, upper-case as received (`GET`, `POST`, ...).
+    pub method: String,
+    /// Request path (`/gemm`, `/metrics`, ...). Query strings are not
+    /// split off — the protocol does not use them.
+    pub path: String,
+    /// Headers in arrival order; names lower-cased, values trimmed.
+    pub headers: Vec<(String, String)>,
+    /// Raw body, exactly `Content-Length` bytes.
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// First value of header `name` (give it lower-case), if present.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Whether the client asked to close the connection after this
+    /// exchange (`Connection: close`).
+    pub fn wants_close(&self) -> bool {
+        self.header("connection").is_some_and(|v| v.eq_ignore_ascii_case("close"))
+    }
+}
+
+/// Typed framing failures, each mapped to a status by the server (or
+/// surfaced as a protocol error by the client).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum HttpError {
+    /// The peer closed the connection cleanly before starting a
+    /// request — not an error condition, just end-of-stream.
+    Closed,
+    /// The read deadline (`SO_RCVTIMEO`) expired mid-exchange: a slow
+    /// or stalled client. Answered `408`.
+    TimedOut,
+    /// Malformed request line, header, or a body cut short by EOF
+    /// (truncated frame). Answered `400`.
+    BadRequest(String),
+    /// Declared `Content-Length` over the configured body cap.
+    /// Answered `413` without reading the body.
+    PayloadTooLarge {
+        /// Declared body length.
+        length: usize,
+        /// The configured cap it exceeded.
+        limit: usize,
+    },
+    /// Request head over [`MAX_HEADER_BYTES`]. Answered `431`.
+    HeadersTooLarge,
+    /// A framing feature this subset does not speak (chunked transfer
+    /// encoding). Answered `501`.
+    NotImplemented(String),
+    /// Any other socket-level failure; the connection is dropped.
+    Io(String),
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::Closed => write!(f, "connection closed"),
+            HttpError::TimedOut => write!(f, "read deadline expired"),
+            HttpError::BadRequest(m) => write!(f, "bad request: {m}"),
+            HttpError::PayloadTooLarge { length, limit } => {
+                write!(f, "body of {length} bytes exceeds the {limit}-byte limit")
+            }
+            HttpError::HeadersTooLarge => {
+                write!(f, "request head exceeds {MAX_HEADER_BYTES} bytes")
+            }
+            HttpError::NotImplemented(m) => write!(f, "not implemented: {m}"),
+            HttpError::Io(m) => write!(f, "i/o error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+/// The status line and reason the server answers `e` with, or `None`
+/// when no response can be written (clean close, transport failure).
+pub fn status_for(e: &HttpError) -> Option<(u16, &'static str)> {
+    match e {
+        HttpError::Closed | HttpError::Io(_) => None,
+        HttpError::TimedOut => Some((408, "Request Timeout")),
+        HttpError::BadRequest(_) => Some((400, "Bad Request")),
+        HttpError::PayloadTooLarge { .. } => Some((413, "Payload Too Large")),
+        HttpError::HeadersTooLarge => Some((431, "Request Header Fields Too Large")),
+        HttpError::NotImplemented(_) => Some((501, "Not Implemented")),
+    }
+}
+
+fn io_to_http(e: std::io::Error) -> HttpError {
+    match e.kind() {
+        // SO_RCVTIMEO surfaces as WouldBlock on Unix, TimedOut on
+        // Windows; either way it is the read deadline.
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => HttpError::TimedOut,
+        std::io::ErrorKind::UnexpectedEof => {
+            HttpError::BadRequest("truncated frame: peer closed mid-body".into())
+        }
+        k => HttpError::Io(format!("{k}: {e}")),
+    }
+}
+
+/// Read one `\n`-terminated line (CRLF tolerated), stripped; `None` on
+/// clean EOF before the first byte. `total` accumulates head bytes for
+/// the [`MAX_HEADER_BYTES`] bound.
+fn read_line(r: &mut impl BufRead, total: &mut usize) -> Result<Option<String>, HttpError> {
+    let mut buf = Vec::new();
+    match r.read_until(b'\n', &mut buf) {
+        Ok(0) => Ok(None),
+        Ok(n) => {
+            *total += n;
+            if *total > MAX_HEADER_BYTES {
+                return Err(HttpError::HeadersTooLarge);
+            }
+            if buf.last() == Some(&b'\n') {
+                buf.pop();
+            }
+            if buf.last() == Some(&b'\r') {
+                buf.pop();
+            }
+            String::from_utf8(buf)
+                .map(Some)
+                .map_err(|_| HttpError::BadRequest("non-UTF-8 request head".into()))
+        }
+        Err(e) => Err(io_to_http(e)),
+    }
+}
+
+/// Read the head lines and body shared by requests and responses:
+/// returns (headers, body) once the start line has been consumed.
+fn read_head_and_body(
+    r: &mut impl BufRead,
+    total: &mut usize,
+    max_body: usize,
+) -> Result<(Vec<(String, String)>, Vec<u8>), HttpError> {
+    let mut headers = Vec::new();
+    loop {
+        let line = match read_line(r, total)? {
+            None => return Err(HttpError::BadRequest("truncated head: EOF before body".into())),
+            Some(l) => l,
+        };
+        if line.is_empty() {
+            break;
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| HttpError::BadRequest(format!("header without ':': {line:?}")))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let find = |n: &str| headers.iter().find(|(k, _)| k == n).map(|(_, v)| v.as_str());
+    if find("transfer-encoding").is_some() {
+        return Err(HttpError::NotImplemented("transfer-encoding (use Content-Length)".into()));
+    }
+    let length = match find("content-length") {
+        None => 0usize,
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| HttpError::BadRequest(format!("bad Content-Length: {v:?}")))?,
+    };
+    if length > max_body {
+        return Err(HttpError::PayloadTooLarge { length, limit: max_body });
+    }
+    let mut body = vec![0u8; length];
+    r.read_exact(&mut body).map_err(io_to_http)?;
+    Ok((headers, body))
+}
+
+/// Read one request off the connection. [`HttpError::Closed`] means
+/// the peer hung up cleanly between requests (keep-alive end); every
+/// other error is answered per [`status_for`].
+pub fn read_request(r: &mut impl BufRead, max_body: usize) -> Result<HttpRequest, HttpError> {
+    let mut total = 0usize;
+    let start = loop {
+        match read_line(r, &mut total)? {
+            None => return Err(HttpError::Closed),
+            // Robustness: tolerate stray blank lines before the
+            // request line (RFC 9112 §2.2).
+            Some(l) if l.is_empty() => continue,
+            Some(l) => break l,
+        }
+    };
+    let mut parts = start.split_whitespace();
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v)) => (m.to_string(), p.to_string(), v),
+        _ => return Err(HttpError::BadRequest(format!("malformed request line: {start:?}"))),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::BadRequest(format!("unsupported version: {version:?}")));
+    }
+    let (headers, body) = read_head_and_body(r, &mut total, max_body)?;
+    Ok(HttpRequest { method, path, headers, body })
+}
+
+/// Read one response off the connection: (status, headers, body).
+/// `max_body` bounds what the client will buffer.
+pub fn read_response(
+    r: &mut impl BufRead,
+    max_body: usize,
+) -> Result<(u16, Vec<(String, String)>, Vec<u8>), HttpError> {
+    let mut total = 0usize;
+    let start = match read_line(r, &mut total)? {
+        None => return Err(HttpError::Closed),
+        Some(l) => l,
+    };
+    let mut parts = start.split_whitespace();
+    let status = match (parts.next(), parts.next()) {
+        (Some(v), Some(code)) if v.starts_with("HTTP/1.") => code
+            .parse::<u16>()
+            .map_err(|_| HttpError::BadRequest(format!("bad status code: {code:?}")))?,
+        _ => return Err(HttpError::BadRequest(format!("malformed status line: {start:?}"))),
+    };
+    let (headers, body) = read_head_and_body(r, &mut total, max_body)?;
+    Ok((status, headers, body))
+}
+
+/// Write one response (status line, headers, `Content-Length`, body)
+/// and flush.
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    reason: &str,
+    headers: &[(&str, String)],
+    body: &[u8],
+) -> std::io::Result<()> {
+    let mut head = format!("HTTP/1.1 {status} {reason}\r\n");
+    for (k, v) in headers {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str(&format!("content-length: {}\r\n\r\n", body.len()));
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Write one request (request line, headers, `Content-Length`, body)
+/// and flush.
+pub fn write_request(
+    w: &mut impl Write,
+    method: &str,
+    path: &str,
+    headers: &[(&str, String)],
+    body: &[u8],
+) -> std::io::Result<()> {
+    let mut head = format!("{method} {path} HTTP/1.1\r\n");
+    for (k, v) in headers {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str(&format!("content-length: {}\r\n\r\n", body.len()));
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Decode a little-endian `f32` body. The caller has already validated
+/// `bytes.len()` against the expected element count, so a ragged tail
+/// (`len % 4 != 0`) can only mean a framing bug — it is dropped.
+pub fn f32s_from_le(bytes: &[u8]) -> Vec<f32> {
+    bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}
+
+/// Encode `f32`s as the little-endian wire body.
+pub fn f32s_to_le(vals: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(vals.len() * 4);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse(raw: &[u8], max_body: usize) -> Result<HttpRequest, HttpError> {
+        read_request(&mut BufReader::new(raw), max_body)
+    }
+
+    #[test]
+    fn parses_a_request_with_body() {
+        let raw = b"POST /gemm HTTP/1.1\r\nX-A-Rows: 2\r\ncontent-length: 4\r\n\r\nabcd";
+        let req = parse(raw, 1024).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/gemm");
+        assert_eq!(req.header("x-a-rows"), Some("2"));
+        assert_eq!(req.body, b"abcd");
+        assert!(!req.wants_close());
+    }
+
+    #[test]
+    fn tolerates_bare_lf_and_preamble_blank_lines() {
+        let raw = b"\r\n\nGET /healthz HTTP/1.0\nconnection: Close\n\n";
+        let req = parse(raw, 0).unwrap();
+        assert_eq!((req.method.as_str(), req.path.as_str()), ("GET", "/healthz"));
+        assert!(req.wants_close());
+    }
+
+    #[test]
+    fn clean_eof_is_closed_truncation_is_bad_request() {
+        assert_eq!(parse(b"", 0), Err(HttpError::Closed));
+        // Head cut off before the blank line.
+        assert!(matches!(
+            parse(b"POST /gemm HTTP/1.1\r\nx: 1\r\n", 0),
+            Err(HttpError::BadRequest(_))
+        ));
+        // Body shorter than Content-Length (truncated frame).
+        assert!(matches!(
+            parse(b"POST /gemm HTTP/1.1\r\ncontent-length: 10\r\n\r\nabc", 1024),
+            Err(HttpError::BadRequest(_))
+        ));
+    }
+
+    #[test]
+    fn typed_limits_and_unsupported_framing() {
+        assert_eq!(
+            parse(b"POST /g HTTP/1.1\r\ncontent-length: 100\r\n\r\n", 10),
+            Err(HttpError::PayloadTooLarge { length: 100, limit: 10 })
+        );
+        let mut big = b"GET / HTTP/1.1\r\n".to_vec();
+        big.extend(std::iter::repeat(b'a').take(MAX_HEADER_BYTES));
+        assert_eq!(parse(&big, 0), Err(HttpError::HeadersTooLarge));
+        assert!(matches!(
+            parse(b"POST /g HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n", 10),
+            Err(HttpError::NotImplemented(_))
+        ));
+        assert!(matches!(parse(b"GET / SPDY/9\r\n\r\n", 0), Err(HttpError::BadRequest(_))));
+        assert!(matches!(
+            parse(b"POST /g HTTP/1.1\r\ncontent-length: nope\r\n\r\n", 10),
+            Err(HttpError::BadRequest(_))
+        ));
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let mut wire = Vec::new();
+        write_response(&mut wire, 200, "OK", &[("x-rows", "3".into())], b"xyz").unwrap();
+        let (status, headers, body) =
+            read_response(&mut BufReader::new(wire.as_slice()), 1024).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(headers.iter().find(|(k, _)| k == "x-rows").unwrap().1, "3");
+        assert_eq!(body, b"xyz");
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        let mut wire = Vec::new();
+        write_request(&mut wire, "POST", "/register", &[("x-b-rows", "4".into())], b"pp").unwrap();
+        let req = parse(&wire, 1024).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/register");
+        assert_eq!(req.header("x-b-rows"), Some("4"));
+        assert_eq!(req.body, b"pp");
+    }
+
+    #[test]
+    fn f32_codec_roundtrip() {
+        let vals = [0.0f32, -1.5, f32::MIN_POSITIVE, 3.0e38, -0.0];
+        let bytes = f32s_to_le(&vals);
+        assert_eq!(bytes.len(), vals.len() * 4);
+        let back = f32s_from_le(&bytes);
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

@@ -1,0 +1,54 @@
+//! The wire front door: a hand-rolled HTTP/1.1-over-TCP layer for the
+//! GEMM service — the measurement harness every scale claim runs
+//! through, in the same hermetic-build discipline as the `anyhow`/`xla`
+//! vendoring (no tokio, no hyper, nothing new vendored; `std::net`
+//! blocking sockets plus the repo's own thread primitives).
+//!
+//! Layout:
+//!
+//! * [`http`] — minimal HTTP/1.1 framing: request/response parse and
+//!   write with `Content-Length` bodies, bounded headers, typed errors
+//!   for truncation / oversize / read-deadline, and the little-endian
+//!   `f32` body codec both sides share.
+//! * [`server`] — [`NetServer`]: a non-blocking accept loop on a
+//!   [`crate::exec::pool::spawn_named`] control thread, one dedicated
+//!   connection thread per client (bounded; over the bound the server
+//!   answers 503 at accept — connection handlers must *not* occupy the
+//!   executor pool, they block on reply channels whose batch tasks run
+//!   there), requests decoded straight into the existing service entry
+//!   points ([`crate::coordinator::server::GemmService`]).
+//! * [`client`] — [`NetClient`]: a small blocking client used by the
+//!   wire tests and the `serving_load` bench (and usable as a library
+//!   client), speaking exactly the protocol below.
+//!
+//! **Protocol.** Matrices travel as raw little-endian `f32`, row-major;
+//! dimensions and options ride in headers, so the body is pure payload:
+//!
+//! | endpoint | body | headers |
+//! |----------|------|---------|
+//! | `POST /gemm` | A (then B when inline) | `X-A-Rows`, `X-A-Cols`; `X-Weight` *or* `X-B-Rows` + `X-B-Cols`; optional `X-Backend`, `X-Precision`, `X-Timeout-Ms` |
+//! | `POST /register` | B | `X-B-Rows`, `X-B-Cols`; reply carries `X-Weight-Id` |
+//! | `GET /metrics` | — | reply is the `text/plain` counter dump of [`crate::coordinator::metrics`] |
+//! | `GET /healthz` | — | liveness: `200 ok` |
+//!
+//! A `/gemm` reply is the result matrix in the same encoding
+//! (`X-Rows`/`X-Cols`/`X-Backend`/`X-Scale-Exp`/`X-Latency-Us`
+//! headers). Service errors map to typed statuses: shape mismatch →
+//! 400, unknown weight → 404, admission shed ([`Overloaded`]) → 503,
+//! deadline expiry ([`Timeout`]) → 504, execution faults → 500; framing
+//! errors map to 400 (truncated body), 408 (read deadline), 413
+//! (oversized body), 431 (oversized headers). The wire path calls the
+//! same deadline-budgeted blocking helpers as in-process callers, so
+//! responses are bit-identical to [`GemmService::gemm_blocking`] and
+//! the `tests/chaos.rs` failpoint scenarios hold over the socket.
+//!
+//! [`Overloaded`]: crate::gemm::error::GemmError::Overloaded
+//! [`Timeout`]: crate::gemm::error::GemmError::Timeout
+//! [`GemmService::gemm_blocking`]: crate::coordinator::server::GemmService::gemm_blocking
+
+pub mod client;
+pub mod http;
+pub mod server;
+
+pub use client::{NetClient, WireError, WireOpts, WireReply};
+pub use server::{NetConfig, NetServer};

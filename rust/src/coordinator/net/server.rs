@@ -1,0 +1,472 @@
+//! [`NetServer`]: the TCP listener and connection loop of the wire
+//! front door.
+//!
+//! Threading follows the repo's executor discipline
+//! ([`crate::exec::pool`] module docs): the accept loop and every
+//! connection handler run on **dedicated control threads**
+//! ([`crate::exec::pool::spawn_named`]), never on the shared executor
+//! pool — a handler blocks inside [`GemmService::gemm_blocking_opts`]
+//! waiting for a reply produced by a batch task *on that pool*, so
+//! parking handlers there could deadlock the service under load. The
+//! accept socket is non-blocking and polled with a short sleep so
+//! shutdown needs no self-connect tricks; connection sockets are
+//! blocking with an `SO_RCVTIMEO` read deadline, which is what turns a
+//! stalled client into a typed `408` instead of a leaked thread.
+//!
+//! Admission is bounded twice: [`NetConfig::max_connections`] caps
+//! handler threads (over the cap the server answers `503` at accept
+//! and closes — wire-level load shedding), and inside a connection the
+//! service's own `max_pending` admission can shed a `/gemm` with the
+//! typed [`GemmError::Overloaded`] → `503`.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::net::http::{self, HttpError, HttpRequest};
+use crate::coordinator::request::WeightId;
+use crate::coordinator::server::{GemmService, RequestOpts};
+use crate::exec::pool;
+use crate::gemm::backend::Backend;
+use crate::gemm::error::GemmError;
+use crate::util::mat::Matrix;
+
+/// Wire front-door configuration (`[net]` section of the config file;
+/// see [`crate::config::schema::NetSection`]).
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Bind address (`[net] listen`). Port 0 picks an ephemeral port —
+    /// the tests' and bench's default; read it back with
+    /// [`NetServer::local_addr`].
+    pub listen: String,
+    /// Request-body cap in bytes (`[net] max_body_mb`); a larger
+    /// declared `Content-Length` is answered `413` without reading the
+    /// body.
+    pub max_body: usize,
+    /// Per-connection socket read deadline (`[net] read_timeout_ms`):
+    /// a client that stalls mid-request this long gets `408` and the
+    /// connection is closed; an *idle* keep-alive connection is closed
+    /// silently.
+    pub read_timeout: Duration,
+    /// Concurrent connection cap (`[net] max_connections`); accepts
+    /// over the cap are answered `503` and closed immediately.
+    pub max_connections: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            listen: "127.0.0.1:0".to_string(),
+            max_body: 64 << 20,
+            read_timeout: Duration::from_secs(10),
+            max_connections: 64,
+        }
+    }
+}
+
+/// Handle to a running wire front door; dropping it (or calling
+/// [`NetServer::shutdown`]) stops the accept loop. Connection handler
+/// threads drain on their own as clients disconnect or their read
+/// deadline fires.
+pub struct NetServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    conns: Arc<AtomicUsize>,
+    accept: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl NetServer {
+    /// Bind `cfg.listen` and start accepting; requests are served
+    /// against `svc`. The service handle is shared — in-process callers
+    /// and wire clients see the same weights, metrics and admission.
+    pub fn bind(svc: Arc<GemmService>, cfg: NetConfig) -> std::io::Result<NetServer> {
+        let listener = TcpListener::bind(&cfg.listen)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns = Arc::new(AtomicUsize::new(0));
+        let accept = {
+            let (stop, conns) = (Arc::clone(&stop), Arc::clone(&conns));
+            pool::spawn_named("net-accept", move || accept_loop(&listener, &svc, &cfg, &stop, &conns))
+        };
+        Ok(NetServer { addr, stop, conns, accept: Mutex::new(Some(accept)) })
+    }
+
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Connections currently being served.
+    pub fn active_connections(&self) -> usize {
+        self.conns.load(Ordering::SeqCst)
+    }
+
+    /// Stop accepting and join the accept loop. Idempotent; callable
+    /// through a shared reference. Live connection handlers finish
+    /// their current exchange and exit at the next keep-alive
+    /// boundary (or their read deadline).
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Decrements the live-connection counter when a handler exits —
+/// including by panic, so the cap can never leak shut.
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    svc: &Arc<GemmService>,
+    cfg: &NetConfig,
+    stop: &Arc<AtomicBool>,
+    conns: &Arc<AtomicUsize>,
+) {
+    let mut next_conn = 0u64;
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // Wire-level admission: past the cap, shed at accept
+                // with a typed 503 instead of queueing handler threads
+                // without bound.
+                if conns.fetch_add(1, Ordering::SeqCst) >= cfg.max_connections.max(1) {
+                    conns.fetch_sub(1, Ordering::SeqCst);
+                    let mut s = stream;
+                    let _ = http::write_response(
+                        &mut s,
+                        503,
+                        "Service Unavailable",
+                        &[("x-error-kind", "overloaded".into()), ("connection", "close".into())],
+                        b"connection limit reached\n",
+                    );
+                    continue;
+                }
+                next_conn += 1;
+                let svc = Arc::clone(svc);
+                let cfg = cfg.clone();
+                let stop = Arc::clone(stop);
+                let guard = ConnGuard(Arc::clone(conns));
+                // Detached: the handle is dropped, the guard above ties
+                // the counter to the thread's lifetime.
+                let _ = pool::spawn_named(&format!("net-conn-{next_conn}"), move || {
+                    let _guard = guard;
+                    handle_connection(stream, &svc, &cfg, &stop);
+                });
+            }
+            // Non-blocking accept: nothing pending — poll again after a
+            // short sleep (cheap enough at the front door; the data
+            // path is on the connection threads).
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            // Transient accept failure (EMFILE, ECONNABORTED, ...):
+            // back off briefly and keep serving.
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+/// Serve one connection: keep-alive request loop, typed error replies,
+/// close on framing errors (the stream position is untrustworthy after
+/// one) and on `Connection: close`.
+fn handle_connection(stream: TcpStream, svc: &GemmService, cfg: &NetConfig, stop: &AtomicBool) {
+    let _ = stream.set_read_timeout(Some(cfg.read_timeout));
+    let _ = stream.set_nodelay(true);
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    while !stop.load(Ordering::SeqCst) {
+        match http::read_request(&mut reader, cfg.max_body) {
+            Ok(req) => {
+                let close = req.wants_close();
+                let (status, reason, mut headers, body) = route(&req, svc);
+                if close {
+                    headers.push(("connection", "close".into()));
+                }
+                if http::write_response(&mut writer, status, reason, &headers, &body).is_err() {
+                    return;
+                }
+                if close {
+                    return;
+                }
+            }
+            Err(HttpError::Closed) => return,
+            Err(e) => {
+                if let Some((status, reason)) = http::status_for(&e) {
+                    let headers = [
+                        ("x-error-kind", error_kind_of_http(&e).to_string()),
+                        ("connection", "close".to_string()),
+                    ];
+                    let _ = http::write_response(
+                        &mut writer,
+                        status,
+                        reason,
+                        &headers,
+                        format!("{e}\n").as_bytes(),
+                    );
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// One response: (status, reason, headers, body).
+type Reply = (u16, &'static str, Vec<(&'static str, String)>, Vec<u8>);
+
+fn route(req: &HttpRequest, svc: &GemmService) -> Reply {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/gemm") => handle_gemm(req, svc),
+        ("POST", "/register") => handle_register(req, svc),
+        ("GET", "/metrics") => {
+            let body = metrics_body(svc);
+            (200, "OK", vec![("content-type", "text/plain".into())], body.into_bytes())
+        }
+        ("GET", "/healthz") => {
+            (200, "OK", vec![("content-type", "text/plain".into())], b"ok\n".to_vec())
+        }
+        ("POST", "/metrics" | "/healthz") | ("GET", "/gemm" | "/register") => (
+            405,
+            "Method Not Allowed",
+            vec![("x-error-kind", "method-not-allowed".into())],
+            format!("{} not allowed on {}\n", req.method, req.path).into_bytes(),
+        ),
+        (_, path) => (
+            404,
+            "Not Found",
+            vec![("x-error-kind", "unknown-path".into())],
+            format!("no such endpoint: {path}\n").into_bytes(),
+        ),
+    }
+}
+
+fn bad_request(msg: String) -> Reply {
+    (400, "Bad Request", vec![("x-error-kind", "bad-request".into())], (msg + "\n").into_bytes())
+}
+
+/// Parse a required dimension header as `usize`.
+fn dim(req: &HttpRequest, name: &str) -> Result<usize, Reply> {
+    match req.header(name) {
+        None => Err(bad_request(format!("missing required header {name}"))),
+        Some(v) => {
+            v.parse::<usize>().map_err(|_| bad_request(format!("bad {name}: {v:?} (want usize)")))
+        }
+    }
+}
+
+/// Parse the optional per-request knobs shared by `/gemm` requests.
+fn request_opts(req: &HttpRequest) -> Result<RequestOpts, Reply> {
+    let backend = match req.header("x-backend") {
+        None => None,
+        Some(v) => Some(Backend::parse(v).ok_or_else(|| {
+            bad_request(format!(
+                "unknown x-backend: {v:?} (one of {})",
+                Backend::ALL.map(|b| b.name()).join(", ")
+            ))
+        })?),
+    };
+    let precision = match req.header("x-precision") {
+        None => None,
+        Some(v) => Some(
+            v.parse::<f64>().map_err(|_| bad_request(format!("bad x-precision: {v:?}")))?,
+        ),
+    };
+    let timeout = match req.header("x-timeout-ms") {
+        None => None,
+        Some(v) => Some(Duration::from_millis(
+            v.parse::<u64>().map_err(|_| bad_request(format!("bad x-timeout-ms: {v:?}")))?,
+        )),
+    };
+    Ok(RequestOpts { backend, precision, timeout })
+}
+
+/// `rows * cols * 4` with overflow turned into a typed 400.
+fn body_bytes(rows: usize, cols: usize, what: &str) -> Result<usize, Reply> {
+    rows.checked_mul(cols)
+        .and_then(|n| n.checked_mul(4))
+        .ok_or_else(|| bad_request(format!("{what} dimensions overflow: {rows} x {cols}")))
+}
+
+fn handle_gemm(req: &HttpRequest, svc: &GemmService) -> Reply {
+    let (a_rows, a_cols) = match (dim(req, "x-a-rows"), dim(req, "x-a-cols")) {
+        (Ok(r), Ok(c)) => (r, c),
+        (Err(e), _) | (_, Err(e)) => return e,
+    };
+    let opts = match request_opts(req) {
+        Ok(o) => o,
+        Err(e) => return e,
+    };
+    let a_bytes = match body_bytes(a_rows, a_cols, "A") {
+        Ok(b) => b,
+        Err(e) => return e,
+    };
+    let outcome = if let Some(w) = req.header("x-weight") {
+        // Register-then-serve: the body is A alone, B is the weight.
+        let id = match w.parse::<u64>() {
+            Ok(id) => id,
+            Err(_) => return bad_request(format!("bad x-weight: {w:?} (want u64)")),
+        };
+        if req.body.len() != a_bytes {
+            return bad_request(format!(
+                "body is {} bytes, want {a_bytes} ({a_rows} x {a_cols} f32 A)",
+                req.body.len()
+            ));
+        }
+        let a = Matrix::from_vec(a_rows, a_cols, http::f32s_from_le(&req.body));
+        svc.gemm_blocking_prepacked_opts(a, WeightId(id), opts)
+    } else {
+        // Inline B appended to A in the body.
+        let (b_rows, b_cols) = match (dim(req, "x-b-rows"), dim(req, "x-b-cols")) {
+            (Ok(r), Ok(c)) => (r, c),
+            (Err(e), _) | (_, Err(e)) => return e,
+        };
+        let b_bytes = match body_bytes(b_rows, b_cols, "B") {
+            Ok(b) => b,
+            Err(e) => return e,
+        };
+        if req.body.len() != a_bytes + b_bytes {
+            return bad_request(format!(
+                "body is {} bytes, want {} ({a_rows} x {a_cols} A + {b_rows} x {b_cols} B, f32)",
+                req.body.len(),
+                a_bytes + b_bytes
+            ));
+        }
+        let a = Matrix::from_vec(a_rows, a_cols, http::f32s_from_le(&req.body[..a_bytes]));
+        let b = Matrix::from_vec(b_rows, b_cols, http::f32s_from_le(&req.body[a_bytes..]));
+        svc.gemm_blocking_opts(a, b, opts)
+    };
+    // Submit-time and execution errors alike map to one typed status.
+    let resp = match outcome {
+        Ok(resp) => resp,
+        Err(e) => return error_reply(&e),
+    };
+    let (backend, scale_exp, latency) = (resp.backend, resp.scale_exp, resp.latency);
+    match resp.result {
+        Ok(c) => {
+            let headers = vec![
+                ("x-rows", c.rows().to_string()),
+                ("x-cols", c.cols().to_string()),
+                ("x-backend", backend.name().to_string()),
+                ("x-scale-exp", scale_exp.to_string()),
+                ("x-latency-us", format!("{:.0}", latency * 1e6)),
+                ("content-type", "application/octet-stream".into()),
+            ];
+            (200, "OK", headers, http::f32s_to_le(c.as_slice()))
+        }
+        Err(e) => error_reply(&e),
+    }
+}
+
+fn handle_register(req: &HttpRequest, svc: &GemmService) -> Reply {
+    let (b_rows, b_cols) = match (dim(req, "x-b-rows"), dim(req, "x-b-cols")) {
+        (Ok(r), Ok(c)) => (r, c),
+        (Err(e), _) | (_, Err(e)) => return e,
+    };
+    let b_bytes = match body_bytes(b_rows, b_cols, "B") {
+        Ok(b) => b,
+        Err(e) => return e,
+    };
+    if req.body.len() != b_bytes {
+        return bad_request(format!(
+            "body is {} bytes, want {b_bytes} ({b_rows} x {b_cols} f32 B)",
+            req.body.len()
+        ));
+    }
+    let b = Matrix::from_vec(b_rows, b_cols, http::f32s_from_le(&req.body));
+    let id = svc.register_weights(b);
+    (200, "OK", vec![("x-weight-id", id.0.to_string())], Vec::new())
+}
+
+/// The `text/plain` counter dump `/metrics` serves: one `name value`
+/// pair per line (stable names, easy to scrape), preceded by the
+/// human-readable one-liner as a comment.
+fn metrics_body(svc: &GemmService) -> String {
+    let r = svc.metrics().report();
+    let mut out = format!("# {}\n", r.line());
+    let mut push = |name: &str, v: String| {
+        out.push_str(name);
+        out.push(' ');
+        out.push_str(&v);
+        out.push('\n');
+    };
+    push("requests_total", r.requests.to_string());
+    push("batches_total", r.batches.to_string());
+    push("errors_total", r.errors.to_string());
+    push("shed_total", r.shed.to_string());
+    push("timeouts_total", r.timeouts.to_string());
+    push("retries_total", r.retries.to_string());
+    push("failovers_total", r.failovers.to_string());
+    push("pool_steals_total", r.pool_steals.to_string());
+    push("pool_steal_fails_total", r.pool_steal_fails.to_string());
+    push("mean_batch_size", format!("{:.3}", r.mean_batch_size));
+    push("throughput_flops", format!("{:.3e}", r.flops_per_sec));
+    if let (Some(p50), Some(p95), Some(p99)) = (r.p50, r.p95, r.p99) {
+        push("latency_p50_s", format!("{p50:.6}"));
+        push("latency_p95_s", format!("{p95:.6}"));
+        push("latency_p99_s", format!("{p99:.6}"));
+    }
+    push("latency_samples_held", svc.metrics().latency_samples_held().to_string());
+    out
+}
+
+/// Status mapping for the service's typed errors.
+fn error_reply(e: &GemmError) -> Reply {
+    let (status, reason) = match e {
+        GemmError::ShapeMismatch { .. } => (400, "Bad Request"),
+        GemmError::UnknownWeight(_) => (404, "Not Found"),
+        GemmError::Overloaded { .. } => (503, "Service Unavailable"),
+        GemmError::Timeout { .. } => (504, "Gateway Timeout"),
+        GemmError::Panicked(_)
+        | GemmError::ShardFailed { .. }
+        | GemmError::ChannelClosed
+        | GemmError::Injected(_) => (500, "Internal Server Error"),
+    };
+    let headers = vec![("x-error-kind", error_kind(e).to_string())];
+    (status, reason, headers, format!("{e}\n").into_bytes())
+}
+
+/// Stable machine-readable kind slug for the `x-error-kind` header.
+fn error_kind(e: &GemmError) -> &'static str {
+    match e {
+        GemmError::ShapeMismatch { .. } => "shape-mismatch",
+        GemmError::UnknownWeight(_) => "unknown-weight",
+        GemmError::Overloaded { .. } => "overloaded",
+        GemmError::Timeout { .. } => "timeout",
+        GemmError::Panicked(_) => "panicked",
+        GemmError::ShardFailed { .. } => "shard-failed",
+        GemmError::ChannelClosed => "channel-closed",
+        GemmError::Injected(_) => "injected",
+    }
+}
+
+/// Kind slug for framing-level errors (body of the 4xx/5xx reply).
+fn error_kind_of_http(e: &HttpError) -> &'static str {
+    match e {
+        HttpError::Closed | HttpError::Io(_) => "io",
+        HttpError::TimedOut => "read-deadline",
+        HttpError::BadRequest(_) => "bad-request",
+        HttpError::PayloadTooLarge { .. } => "payload-too-large",
+        HttpError::HeadersTooLarge => "headers-too-large",
+        HttpError::NotImplemented(_) => "not-implemented",
+    }
+}

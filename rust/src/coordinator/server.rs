@@ -43,7 +43,13 @@
 //! a reply channel anywhere, a dead worker or a shut-down dispatcher is
 //! [`GemmError::ChannelClosed`]; and the blocking entry points retry
 //! transient failures ([`GemmError::is_retryable`]) up to
-//! [`ServiceConfig::retries`] times with doubling backoff. Weights
+//! [`ServiceConfig::retries`] times with doubling backoff. The
+//! deadline is **one end-to-end budget**: a blocking call computes its
+//! absolute deadline once, every retry attempt (resubmission and
+//! reply wait alike) gets only the remaining slice, backoff sleeps
+//! never cross it, and [`GemmError::Timeout::after`] reports the true
+//! elapsed wall time — R retries can never stretch the caller past
+//! the configured budget. Weights
 //! registered while `[shards] count >= 2` are column-partitioned across
 //! an in-process shard router with per-shard health and failover
 //! ([`crate::coordinator::shard`]) — responses stay bit-identical to
@@ -138,8 +144,9 @@ pub struct ServiceConfig {
     /// Per-request deadline (`[server] request_timeout_ms`; `None` =
     /// wait forever, the default). A request past its deadline is shed
     /// by the batch worker with [`GemmError::Timeout`] before any
-    /// kernel work, and the blocking entry points stop waiting for the
-    /// reply after the same duration.
+    /// kernel work, and the blocking entry points bound the caller's
+    /// **total** wall time — retries, backoff and reply waits all draw
+    /// from this one budget.
     pub request_timeout: Option<Duration>,
     /// Admission bound: requests queued or executing at once
     /// (`[server] max_pending`; `0` = unbounded, the default). A
@@ -176,6 +183,28 @@ impl Default for ServiceConfig {
             shards: ShardConfig::default(),
         }
     }
+}
+
+/// Per-request options for the blocking entry points — the knobs a
+/// caller (notably the wire front door, which maps its `X-Backend` /
+/// `X-Precision` / `X-Timeout-Ms` headers here) can set without a
+/// dedicated method per combination. `Default` leaves every decision
+/// to the service configuration.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RequestOpts {
+    /// Fixed precision path; `None` lets the policy decide (see
+    /// [`GemmService::submit`]).
+    pub backend: Option<Backend>,
+    /// Relative-error budget for tier selection; overrides the
+    /// service-wide setting (see
+    /// [`GemmService::submit_with_precision`]). Ignored when
+    /// [`RequestOpts::backend`] is fixed.
+    pub precision: Option<f64>,
+    /// End-to-end wall-time budget for this request, overriding
+    /// [`ServiceConfig::request_timeout`]; `None` keeps the service
+    /// default. The budget covers submission, every retry, backoff and
+    /// the reply wait together.
+    pub timeout: Option<Duration>,
 }
 
 enum DispatchMsg {
@@ -383,12 +412,21 @@ impl GemmService {
         removed
     }
 
+    /// The deadline a fresh, standalone submission carries: the
+    /// service-wide timeout measured from now. The blocking entry
+    /// points do NOT use this per attempt — they compute one absolute
+    /// deadline up front and pass the same instant to every retry.
+    fn default_deadline(&self) -> Option<Instant> {
+        self.request_timeout.map(|t| Instant::now() + t)
+    }
+
     fn submit_operand(
         &self,
         a: Matrix<f32>,
         b: BOperand,
         backend: Option<Backend>,
         precision: Option<f64>,
+        deadline: Option<Instant>,
     ) -> Result<(u64, Receiver<GemmResponse>), GemmError> {
         // Validate here, in the caller's thread, so a malformed request
         // is a typed error instead of a panic inside a batch task. The
@@ -404,7 +442,6 @@ impl GemmService {
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = channel();
-        let deadline = self.request_timeout.map(|t| Instant::now() + t);
         let req =
             GemmRequest { id, a, b, backend, precision, submitted: Instant::now(), deadline, reply };
         if self.tx.send(DispatchMsg::Request(req)).is_err() {
@@ -426,7 +463,7 @@ impl GemmService {
         b: Matrix<f32>,
         backend: Option<Backend>,
     ) -> Result<(u64, Receiver<GemmResponse>), GemmError> {
-        self.submit_operand(a, BOperand::Inline(b), backend, None)
+        self.submit_operand(a, BOperand::Inline(b), backend, None, self.default_deadline())
     }
 
     /// [`GemmService::submit`] with a per-request relative-error budget
@@ -444,7 +481,7 @@ impl GemmService {
         backend: Option<Backend>,
         precision: Option<f64>,
     ) -> Result<(u64, Receiver<GemmResponse>), GemmError> {
-        self.submit_operand(a, BOperand::Inline(b), backend, precision)
+        self.submit_operand(a, BOperand::Inline(b), backend, precision, self.default_deadline())
     }
 
     /// Submit a GEMM against a registered weight: batched with other
@@ -475,21 +512,22 @@ impl GemmService {
         precision: Option<f64>,
     ) -> Result<(u64, Receiver<GemmResponse>), GemmError> {
         let entry = self.weight(id).ok_or(GemmError::UnknownWeight(id.0))?;
-        self.submit_operand(a, BOperand::Weight(entry), backend, precision)
+        self.submit_operand(a, BOperand::Weight(entry), backend, precision, self.default_deadline())
     }
 
-    /// Blocking convenience: submit and wait, bounded by
+    /// Blocking convenience: submit and wait, bounded end to end by
     /// [`ServiceConfig::request_timeout`] and retried (submit included)
-    /// up to [`ServiceConfig::retries`] times on transient failures.
-    /// Submit-time failures surface as the outer error; execution
-    /// failures stay in [`GemmResponse::result`].
+    /// up to [`ServiceConfig::retries`] times on transient failures —
+    /// all attempts share the one wall-time budget. Submit-time
+    /// failures surface as the outer error; execution failures stay in
+    /// [`GemmResponse::result`].
     pub fn gemm_blocking(
         &self,
         a: Matrix<f32>,
         b: Matrix<f32>,
         backend: Option<Backend>,
     ) -> Result<GemmResponse, GemmError> {
-        self.blocking_with_retry(|| self.submit(a.clone(), b.clone(), backend))
+        self.gemm_blocking_opts(a, b, RequestOpts { backend, ..Default::default() })
     }
 
     /// Blocking convenience for [`GemmService::submit_with_precision`];
@@ -501,8 +539,26 @@ impl GemmService {
         backend: Option<Backend>,
         precision: Option<f64>,
     ) -> Result<GemmResponse, GemmError> {
-        self.blocking_with_retry(|| {
-            self.submit_with_precision(a.clone(), b.clone(), backend, precision)
+        self.gemm_blocking_opts(a, b, RequestOpts { backend, precision, timeout: None })
+    }
+
+    /// Blocking inline-operand entry with the full per-request knob set
+    /// ([`RequestOpts`]): backend, precision budget, and an end-to-end
+    /// timeout override. One wall-time budget covers every retry.
+    pub fn gemm_blocking_opts(
+        &self,
+        a: Matrix<f32>,
+        b: Matrix<f32>,
+        opts: RequestOpts,
+    ) -> Result<GemmResponse, GemmError> {
+        self.blocking_with_retry(opts.timeout, |deadline| {
+            self.submit_operand(
+                a.clone(),
+                BOperand::Inline(b.clone()),
+                opts.backend,
+                opts.precision,
+                deadline,
+            )
         })
     }
 
@@ -515,9 +571,7 @@ impl GemmService {
         backend: Option<Backend>,
         precision: Option<f64>,
     ) -> Result<GemmResponse, GemmError> {
-        self.blocking_with_retry(|| {
-            self.submit_prepacked_with_precision(a.clone(), id, backend, precision)
-        })
+        self.gemm_blocking_prepacked_opts(a, id, RequestOpts { backend, precision, timeout: None })
     }
 
     /// Blocking convenience for the register-weights-then-serve flow;
@@ -528,7 +582,29 @@ impl GemmService {
         id: WeightId,
         backend: Option<Backend>,
     ) -> Result<GemmResponse, GemmError> {
-        self.blocking_with_retry(|| self.submit_prepacked(a.clone(), id, backend))
+        self.gemm_blocking_prepacked_opts(a, id, RequestOpts { backend, ..Default::default() })
+    }
+
+    /// Blocking registered-weight entry with the full per-request knob
+    /// set ([`RequestOpts`]); the weight lookup is inside the retry
+    /// loop, so a weight unregistered mid-retry is a typed
+    /// [`GemmError::UnknownWeight`], not a stale serve.
+    pub fn gemm_blocking_prepacked_opts(
+        &self,
+        a: Matrix<f32>,
+        id: WeightId,
+        opts: RequestOpts,
+    ) -> Result<GemmResponse, GemmError> {
+        self.blocking_with_retry(opts.timeout, |deadline| {
+            let entry = self.weight(id).ok_or(GemmError::UnknownWeight(id.0))?;
+            self.submit_operand(
+                a.clone(),
+                BOperand::Weight(entry),
+                opts.backend,
+                opts.precision,
+                deadline,
+            )
+        })
     }
 
     /// Submit-and-wait with bounded retry: transient failures
@@ -536,13 +612,27 @@ impl GemmService {
     /// channel, an injected fault) are resubmitted with doubling
     /// backoff; everything else (including deterministic rejections and
     /// back-pressure) returns on the first attempt.
+    ///
+    /// **One budget end to end.** The absolute deadline is computed
+    /// exactly once, up front, from `timeout` (falling back to
+    /// [`ServiceConfig::request_timeout`]); every resubmission carries
+    /// that same instant (so server-side shed stays honest across
+    /// retries), every reply wait gets only the remaining slice, and a
+    /// backoff that would sleep past the deadline becomes an immediate
+    /// [`GemmError::Timeout`] instead. An earlier revision re-armed the
+    /// full timeout per attempt, letting R retries block the caller for
+    /// (R+1)× the configured budget.
     fn blocking_with_retry(
         &self,
-        submit: impl Fn() -> Result<(u64, Receiver<GemmResponse>), GemmError>,
+        timeout: Option<Duration>,
+        submit: impl Fn(Option<Instant>) -> Result<(u64, Receiver<GemmResponse>), GemmError>,
     ) -> Result<GemmResponse, GemmError> {
+        let start = Instant::now();
+        let deadline = timeout.or(self.request_timeout).map(|t| start + t);
         let mut attempt = 0usize;
         loop {
-            let outcome = submit().and_then(|(_, rx)| self.wait_reply(&rx));
+            let outcome =
+                submit(deadline).and_then(|(_, rx)| self.wait_reply_until(&rx, start, deadline));
             let retryable = match &outcome {
                 Ok(resp) => resp.result.as_ref().err().is_some_and(|e| e.is_retryable()),
                 Err(e) => e.is_retryable(),
@@ -554,27 +644,47 @@ impl GemmService {
             self.metrics.record_retry();
             let shift = u32::try_from((attempt - 1).min(10)).unwrap_or(10);
             let backoff = self.retry_backoff.saturating_mul(1u32 << shift);
+            if let Some(dl) = deadline {
+                // Sleeping through the deadline cannot help: the
+                // resubmitted attempt would be shed on arrival. Give
+                // the caller the truthful timeout now.
+                if Instant::now() + backoff >= dl {
+                    self.metrics.record_timeout();
+                    return Err(GemmError::Timeout { after: start.elapsed() });
+                }
+            }
             if !backoff.is_zero() {
                 std::thread::sleep(backoff);
             }
         }
     }
 
-    /// Wait for one reply, bounded by the configured request timeout.
-    /// A dropped channel (shutdown, or a batch worker dying without
-    /// replying) is [`GemmError::ChannelClosed`]; a deadline expiry is
-    /// [`GemmError::Timeout`] and counts toward the timeout metric.
-    fn wait_reply(&self, rx: &Receiver<GemmResponse>) -> Result<GemmResponse, GemmError> {
-        match self.request_timeout {
+    /// Wait for one reply, bounded by the remaining slice of the
+    /// request's end-to-end budget. A dropped channel (shutdown, or a
+    /// batch worker dying without replying) is
+    /// [`GemmError::ChannelClosed`]; a deadline expiry is
+    /// [`GemmError::Timeout`] carrying the **true elapsed wall time
+    /// since `start`** (not the configured duration) and counts toward
+    /// the timeout metric.
+    fn wait_reply_until(
+        &self,
+        rx: &Receiver<GemmResponse>,
+        start: Instant,
+        deadline: Option<Instant>,
+    ) -> Result<GemmResponse, GemmError> {
+        match deadline {
             None => rx.recv().map_err(|_| GemmError::ChannelClosed),
-            Some(t) => match rx.recv_timeout(t) {
-                Ok(resp) => Ok(resp),
-                Err(RecvTimeoutError::Timeout) => {
-                    self.metrics.record_timeout();
-                    Err(GemmError::Timeout { after: t })
+            Some(dl) => {
+                let remaining = dl.saturating_duration_since(Instant::now());
+                match rx.recv_timeout(remaining) {
+                    Ok(resp) => Ok(resp),
+                    Err(RecvTimeoutError::Timeout) => {
+                        self.metrics.record_timeout();
+                        Err(GemmError::Timeout { after: start.elapsed() })
+                    }
+                    Err(RecvTimeoutError::Disconnected) => Err(GemmError::ChannelClosed),
                 }
-                Err(RecvTimeoutError::Disconnected) => Err(GemmError::ChannelClosed),
-            },
+            }
         }
     }
 

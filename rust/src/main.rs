@@ -3,7 +3,8 @@
 use anyhow::{bail, Result};
 
 use sgemm_cube::cli::{self, Args};
-use sgemm_cube::config::{BlockingConfig, ChipConfig, ConfigFile, ServerConfig};
+use sgemm_cube::config::{BlockingConfig, ChipConfig, ConfigFile, NetSection, ServerConfig};
+use sgemm_cube::coordinator::net::NetServer;
 use sgemm_cube::coordinator::server::{GemmService, ServiceConfig};
 use sgemm_cube::experiments as exp;
 use sgemm_cube::gemm::backend::{Backend, GemmBackend};
@@ -249,10 +250,28 @@ fn cmd_accuracy(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let svc_cfg: ServiceConfig = ServerConfig::from_config(&cfg)?.0;
+    let listen = args.get("listen").map(str::to_string);
     let requests = args.get_usize("requests", 64)?;
     let m = args.get_usize("m", 128)?;
     let seed = args.get_u64("seed", 42)?;
     args.finish()?;
+
+    if let Some(addr) = listen {
+        // Wire mode: start the HTTP front door and serve until killed.
+        let mut net_cfg = NetSection::from_config(&cfg)?.0;
+        net_cfg.listen = addr;
+        let svc = std::sync::Arc::new(GemmService::start(svc_cfg));
+        let srv = NetServer::bind(std::sync::Arc::clone(&svc), net_cfg)
+            .map_err(|e| anyhow::anyhow!("binding the wire front door: {e}"))?;
+        println!(
+            "serving on http://{} — POST /gemm, POST /register, GET /metrics, GET /healthz (^C to stop)",
+            srv.local_addr()
+        );
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(60));
+            println!("{}", svc.metrics().report().line());
+        }
+    }
 
     let svc = GemmService::start(svc_cfg);
     let mut rng = Rng::new(seed);

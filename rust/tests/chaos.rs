@@ -15,10 +15,11 @@
 //! injected panic unwinding through an assertion must not wedge the
 //! rest of the suite).
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use sgemm_cube::coordinator::batcher::BatcherConfig;
+use sgemm_cube::coordinator::net::{NetClient, NetConfig, NetServer, WireError, WireOpts};
 use sgemm_cube::coordinator::server::{GemmService, ServiceConfig};
 use sgemm_cube::coordinator::shard::{ShardConfig, ShardHealth};
 use sgemm_cube::exec::faults::{self, FailPolicy};
@@ -265,13 +266,141 @@ fn deadline_expiry_is_a_typed_timeout_not_a_hang() {
     let b = Matrix::random_symmetric(8, 4, 0, &mut rng);
     let t0 = Instant::now();
     match svc.gemm_blocking(a, b, None) {
-        Err(GemmError::Timeout { after }) => assert_eq!(after, Duration::from_millis(30)),
+        // `after` is the true elapsed wall time, so it is at least the
+        // 30ms budget but never exactly it.
+        Err(GemmError::Timeout { after }) => {
+            assert!(after >= Duration::from_millis(30), "after={after:?}");
+            assert!(after < Duration::from_secs(5), "after={after:?}");
+        }
         other => panic!("expected Timeout, got {other:?}"),
     }
     assert!(t0.elapsed() < Duration::from_secs(5), "waiter must give up promptly");
     assert!(svc.metrics().report().timeouts >= 1);
     // Disarm before shutdown so the drain isn't delayed per request.
     faults::reset();
+    svc.shutdown();
+}
+
+/// Regression for the deadline-budget bug: the retry loop must fit
+/// inside ONE end-to-end budget. The old code re-armed the full
+/// `request_timeout` on every `wait_reply` and stamped a fresh deadline
+/// on every resubmission, so R retries could block the caller for
+/// (R+1)x the configured timeout. Here every attempt costs ~60ms (a
+/// delayed pool pickup) and then fails retryably (an injected batch
+/// panic), so a 150ms budget with 10 retries used to burn ~660ms of
+/// attempts plus backoff; now it must surface a typed `Timeout` at
+/// ~150ms of true wall time.
+#[test]
+fn retried_request_wall_time_never_exceeds_the_budget() {
+    let _g = chaos_guard();
+    faults::configure("exec.pool.task", FailPolicy::Delay(60));
+    faults::configure("coordinator.batch.exec", FailPolicy::Panic);
+    let svc = GemmService::start(ServiceConfig {
+        request_timeout: Some(Duration::from_millis(150)),
+        retries: 10,
+        retry_backoff: Duration::from_millis(1),
+        ..cfg()
+    });
+    let mut rng = Rng::new(78);
+    let a = Matrix::random_symmetric(4, 8, 0, &mut rng);
+    let b = Matrix::random_symmetric(8, 4, 0, &mut rng);
+    let t0 = Instant::now();
+    let outcome = svc.gemm_blocking(a, b, None);
+    let elapsed = t0.elapsed();
+    match outcome {
+        Err(GemmError::Timeout { after }) => {
+            assert!(after >= Duration::from_millis(150), "after={after:?}");
+        }
+        other => panic!("expected Timeout, got {other:?}"),
+    }
+    assert!(
+        elapsed < Duration::from_millis(600),
+        "one budget end-to-end, not one per attempt: elapsed={elapsed:?}"
+    );
+    let report = svc.metrics().report();
+    assert!(report.timeouts >= 1);
+    assert!(report.retries >= 1, "the injected panic was retryable");
+    faults::reset();
+    svc.shutdown();
+}
+
+/// Chaos holds over the wire: the same process-global failpoints drive
+/// the socket path. An injected batch error behind `POST /gemm` is
+/// masked by the service retry and the reply stays bit-identical to the
+/// in-process path.
+#[test]
+fn wire_request_masks_injected_error_and_bit_matches_in_process() {
+    let _g = chaos_guard();
+    faults::configure_nth("coordinator.batch.exec", FailPolicy::Error, 1, 1);
+    let svc = Arc::new(GemmService::start(ServiceConfig {
+        retry_backoff: Duration::ZERO,
+        ..cfg()
+    }));
+    let net = NetServer::bind(Arc::clone(&svc), NetConfig::default()).expect("bind");
+    let mut client = NetClient::connect(net.local_addr().to_string());
+    let mut rng = Rng::new(79);
+    let a = Matrix::random_symmetric(8, 16, 0, &mut rng);
+    let b = Matrix::random_symmetric(16, 8, 0, &mut rng);
+    let reply = client
+        .gemm(&a, &b, &WireOpts::default())
+        .expect("retry must mask the injected error over the wire");
+    // The failpoint is spent, so the reference run is clean.
+    let want = svc
+        .gemm_blocking(a, b, None)
+        .expect("submit")
+        .result
+        .expect("in-process reference");
+    assert_bits_eq(&want, &reply.c, "wire vs in-process under chaos");
+    assert!(svc.metrics().report().retries >= 1);
+    assert_eq!(faults::fired("coordinator.batch.exec"), 1);
+    faults::reset();
+    net.shutdown();
+    svc.shutdown();
+}
+
+/// Socket-level overload: with batches slowed by an injected delay and
+/// a 1-deep admission bound, a second concurrent wire request is shed
+/// as HTTP 503 with the typed `overloaded` kind — and the front door
+/// stays live for `/healthz` afterwards.
+#[test]
+fn wire_overload_sheds_typed_503_and_front_door_stays_live() {
+    let _g = chaos_guard();
+    faults::configure("coordinator.batch.exec", FailPolicy::Delay(200));
+    let svc = Arc::new(GemmService::start(ServiceConfig {
+        batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
+        n_workers: 1,
+        max_pending: 1,
+        retries: 0,
+        ..Default::default()
+    }));
+    let net = NetServer::bind(Arc::clone(&svc), NetConfig::default()).expect("bind");
+    let addr = net.local_addr().to_string();
+    let mut rng = Rng::new(80);
+    let a = Matrix::random_symmetric(4, 8, 0, &mut rng);
+    let b = Matrix::random_symmetric(8, 4, 0, &mut rng);
+    let slow = {
+        let (addr, a, b) = (addr.clone(), a.clone(), b.clone());
+        std::thread::spawn(move || {
+            NetClient::connect(addr).gemm(&a, &b, &WireOpts::default())
+        })
+    };
+    // Let the slow request occupy the 1-deep admission window (it holds
+    // it for ~200ms), then hit the same service over a second socket.
+    std::thread::sleep(Duration::from_millis(50));
+    let mut client = NetClient::connect(addr);
+    match client.gemm(&a, &b, &WireOpts::default()) {
+        Err(WireError::Status { code, kind, .. }) => {
+            assert_eq!(code, 503, "admission shed must surface as 503");
+            assert_eq!(kind, "overloaded");
+        }
+        other => panic!("expected a 503 overloaded status, got {other:?}"),
+    }
+    let slow = slow.join().expect("slow client thread");
+    assert!(slow.is_ok(), "the admitted request still completes: {slow:?}");
+    assert!(svc.metrics().report().shed >= 1);
+    assert!(client.healthz().expect("healthz"), "front door stays live after shedding");
+    faults::reset();
+    net.shutdown();
     svc.shutdown();
 }
 

@@ -1,0 +1,255 @@
+//! Wire front-door suite: the HTTP/1.1-over-TCP path end to end.
+//!
+//! The acceptance pin lives here: a `/gemm` served over a real socket
+//! must be **bit-identical** to the same request through the in-process
+//! blocking entry points, across inline and register-then-serve
+//! operand paths, backend pins and precision tiers. The rest of the
+//! suite covers the typed framing failures (truncated frame, oversized
+//! body, slow client hitting the read deadline), routing, the metrics
+//! and health endpoints, and keep-alive reuse.
+//!
+//! Failpoint-armed socket scenarios live in `tests/chaos.rs`, which
+//! serializes on the process-global registry; nothing here arms faults.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sgemm_cube::coordinator::net::{NetClient, NetConfig, NetServer, WireError, WireOpts};
+use sgemm_cube::coordinator::server::{GemmService, RequestOpts, ServiceConfig};
+use sgemm_cube::gemm::backend::Backend;
+use sgemm_cube::util::mat::Matrix;
+use sgemm_cube::util::rng::Rng;
+
+/// A service plus a bound front door on an ephemeral port.
+fn front_door(cfg: NetConfig) -> (Arc<GemmService>, NetServer) {
+    let svc = Arc::new(GemmService::start(ServiceConfig::default()));
+    let net = NetServer::bind(Arc::clone(&svc), cfg).expect("bind ephemeral port");
+    (svc, net)
+}
+
+fn assert_bits_eq(x: &Matrix<f32>, y: &Matrix<f32>, what: &str) {
+    assert_eq!(x.shape(), y.shape(), "{what}");
+    for (u, v) in x.as_slice().iter().zip(y.as_slice()) {
+        assert_eq!(u.to_bits(), v.to_bits(), "{what}");
+    }
+}
+
+/// Read everything until the server closes, as a lossy string — enough
+/// to assert on a status line when speaking raw bytes to the socket.
+fn slurp(stream: &mut TcpStream) -> String {
+    let mut buf = Vec::new();
+    let _ = stream.read_to_end(&mut buf);
+    String::from_utf8_lossy(&buf).into_owned()
+}
+
+/// The acceptance pin: wire replies are bit-identical to the in-process
+/// blocking path — inline and registered-weight operands, pinned
+/// backends, and precision-tier selection all included.
+#[test]
+fn wire_gemm_bit_matches_in_process() {
+    let (svc, net) = front_door(NetConfig::default());
+    let mut client = NetClient::connect(net.local_addr().to_string());
+    let mut rng = Rng::new(91);
+    let a = Matrix::random_symmetric(16, 48, 0, &mut rng);
+    let b = Matrix::random_symmetric(48, 24, 0, &mut rng);
+
+    // Inline path, policy-chosen backend, then pinned backends and a
+    // precision tier.
+    let cases = [
+        WireOpts::default(),
+        WireOpts { backend: Some("fp32"), ..WireOpts::default() },
+        WireOpts { backend: Some("cube-termwise"), ..WireOpts::default() },
+        WireOpts { precision: Some(1e-6), ..WireOpts::default() },
+    ];
+    for opts in cases {
+        let wire = client.gemm(&a, &b, &opts).expect("wire /gemm");
+        let want = svc
+            .gemm_blocking_opts(
+                a.clone(),
+                b.clone(),
+                RequestOpts {
+                    backend: opts.backend.and_then(Backend::parse),
+                    precision: opts.precision,
+                    timeout: None,
+                },
+            )
+            .expect("submit")
+            .result
+            .expect("in-process");
+        assert_bits_eq(&want, &wire.c, &format!("inline, opts {opts:?}"));
+        assert!(Backend::parse(&wire.backend).is_some(), "reply names a backend: {wire:?}");
+    }
+
+    // Register-then-serve: same weight via both doors, same bits.
+    let id_wire = client.register(&b).expect("wire /register");
+    let wire = client.gemm_weight(&a, id_wire, &WireOpts::default()).expect("wire weight gemm");
+    let want = svc
+        .gemm_blocking(a, b, None)
+        .expect("submit")
+        .result
+        .expect("in-process");
+    assert_bits_eq(&want, &wire.c, "registered-weight path");
+    net.shutdown();
+    svc.shutdown();
+}
+
+/// One keep-alive connection serves many exchanges; health, metrics and
+/// the counter names the smoke gate scrapes are all visible over it.
+#[test]
+fn keep_alive_metrics_and_healthz_over_one_connection() {
+    let (svc, net) = front_door(NetConfig::default());
+    let mut client = NetClient::connect(net.local_addr().to_string());
+    assert!(client.healthz().expect("healthz"));
+    let mut rng = Rng::new(92);
+    let a = Matrix::random_symmetric(4, 8, 0, &mut rng);
+    let b = Matrix::random_symmetric(8, 4, 0, &mut rng);
+    for _ in 0..3 {
+        client.gemm(&a, &b, &WireOpts::default()).expect("gemm over keep-alive");
+    }
+    let metrics = client.metrics().expect("metrics");
+    for name in [
+        "requests_total",
+        "errors_total",
+        "shed_total",
+        "timeouts_total",
+        "retries_total",
+        "failovers_total",
+        "latency_samples_held",
+    ] {
+        assert!(metrics.contains(name), "metrics dump missing {name}:\n{metrics}");
+    }
+    let requests = metrics
+        .lines()
+        .find_map(|l| l.strip_prefix("requests_total "))
+        .and_then(|v| v.parse::<u64>().ok())
+        .expect("requests_total parses");
+    assert!(requests >= 3, "served requests show up in the scrape: {requests}");
+    net.shutdown();
+    svc.shutdown();
+}
+
+/// Service-level errors come back as typed statuses with stable kinds:
+/// unknown weight → 404, shape mismatch → 400.
+#[test]
+fn service_errors_map_to_typed_statuses() {
+    let (svc, net) = front_door(NetConfig::default());
+    let mut client = NetClient::connect(net.local_addr().to_string());
+    let mut rng = Rng::new(93);
+    let a = Matrix::random_symmetric(4, 8, 0, &mut rng);
+    match client.gemm_weight(&a, 999_999, &WireOpts::default()) {
+        Err(WireError::Status { code: 404, kind, .. }) => assert_eq!(kind, "unknown-weight"),
+        other => panic!("expected 404 unknown-weight, got {other:?}"),
+    }
+    let b_bad = Matrix::random_symmetric(7, 4, 0, &mut rng); // inner dims disagree
+    match client.gemm(&a, &b_bad, &WireOpts::default()) {
+        Err(WireError::Status { code: 400, kind, .. }) => assert_eq!(kind, "shape-mismatch"),
+        other => panic!("expected 400 shape-mismatch, got {other:?}"),
+    }
+    match client.gemm(&a, &a, &WireOpts { backend: Some("no-such"), ..WireOpts::default() }) {
+        Err(WireError::Status { code: 400, kind, .. }) => assert_eq!(kind, "bad-request"),
+        other => panic!("expected 400 for an unknown backend, got {other:?}"),
+    }
+    net.shutdown();
+    svc.shutdown();
+}
+
+/// Unknown paths and wrong methods get 404/405, and the connection
+/// survives them (they are not framing errors).
+#[test]
+fn routing_unknown_path_and_wrong_method() {
+    let (svc, net) = front_door(NetConfig::default());
+    let mut s = TcpStream::connect(net.local_addr()).expect("connect");
+    s.write_all(b"GET /nope HTTP/1.1\r\ncontent-length: 0\r\n\r\n")
+        .and_then(|()| s.write_all(b"GET /gemm HTTP/1.1\r\nconnection: close\r\n\r\n"))
+        .expect("send");
+    let reply = slurp(&mut s);
+    assert!(reply.starts_with("HTTP/1.1 404 "), "{reply}");
+    assert!(reply.contains("HTTP/1.1 405 "), "{reply}");
+    net.shutdown();
+    svc.shutdown();
+}
+
+/// A truncated frame — Content-Length promises more than the client
+/// sends before closing — is a typed 400, not a hang or a panic.
+#[test]
+fn truncated_frame_is_a_typed_400() {
+    let (svc, net) = front_door(NetConfig::default());
+    let mut s = TcpStream::connect(net.local_addr()).expect("connect");
+    s.write_all(b"POST /gemm HTTP/1.1\r\nx-a-rows: 4\r\nx-a-cols: 4\r\nx-b-rows: 4\r\nx-b-cols: 4\r\ncontent-length: 128\r\n\r\nshort")
+        .expect("send");
+    s.shutdown(std::net::Shutdown::Write).expect("half-close");
+    let reply = slurp(&mut s);
+    assert!(reply.starts_with("HTTP/1.1 400 "), "{reply}");
+    assert!(reply.contains("x-error-kind: bad-request"), "{reply}");
+    assert!(reply.contains("truncated"), "{reply}");
+    net.shutdown();
+    svc.shutdown();
+}
+
+/// A body larger than the configured cap is refused with 413 before the
+/// server reads (or allocates) any of it.
+#[test]
+fn oversized_body_is_a_typed_413() {
+    let (svc, net) = front_door(NetConfig { max_body: 1024, ..NetConfig::default() });
+    let mut s = TcpStream::connect(net.local_addr()).expect("connect");
+    s.write_all(b"POST /gemm HTTP/1.1\r\ncontent-length: 1048576\r\n\r\n").expect("send");
+    let reply = slurp(&mut s);
+    assert!(reply.starts_with("HTTP/1.1 413 "), "{reply}");
+    assert!(reply.contains("x-error-kind: payload-too-large"), "{reply}");
+    net.shutdown();
+    svc.shutdown();
+}
+
+/// A client that stalls mid-request trips the socket read deadline and
+/// gets a typed 408 — bounded, well before the claimed body could have
+/// been "slow".
+#[test]
+fn slow_client_hits_read_deadline_with_typed_408() {
+    let (svc, net) =
+        front_door(NetConfig { read_timeout: Duration::from_millis(80), ..NetConfig::default() });
+    let mut s = TcpStream::connect(net.local_addr()).expect("connect");
+    // Half a request, then silence: the server must give up at its read
+    // deadline rather than hold the handler thread.
+    s.write_all(b"POST /gemm HTTP/1.1\r\ncontent-le").expect("send");
+    let t0 = Instant::now();
+    let reply = slurp(&mut s);
+    assert!(t0.elapsed() < Duration::from_secs(10), "bounded wait");
+    assert!(reply.starts_with("HTTP/1.1 408 "), "{reply}");
+    assert!(reply.contains("x-error-kind: read-deadline"), "{reply}");
+    net.shutdown();
+    svc.shutdown();
+}
+
+/// Chunked transfer encoding is declared unsupported with a 501, not
+/// misparsed.
+#[test]
+fn chunked_framing_is_a_typed_501() {
+    let (svc, net) = front_door(NetConfig::default());
+    let mut s = TcpStream::connect(net.local_addr()).expect("connect");
+    s.write_all(b"POST /gemm HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n").expect("send");
+    let reply = slurp(&mut s);
+    assert!(reply.starts_with("HTTP/1.1 501 "), "{reply}");
+    assert!(reply.contains("x-error-kind: not-implemented"), "{reply}");
+    net.shutdown();
+    svc.shutdown();
+}
+
+/// Shutdown is prompt and idempotent, and the ephemeral-port bind means
+/// parallel suites never collide.
+#[test]
+fn shutdown_is_prompt_and_idempotent() {
+    let (svc, net) = front_door(NetConfig::default());
+    let addr = net.local_addr();
+    assert_ne!(addr.port(), 0, "ephemeral port resolved");
+    let t0 = Instant::now();
+    net.shutdown();
+    net.shutdown();
+    assert!(t0.elapsed() < Duration::from_secs(5), "accept loop joins promptly");
+    assert!(
+        NetClient::connect(addr.to_string()).healthz().is_err(),
+        "no listener after shutdown"
+    );
+    svc.shutdown();
+}

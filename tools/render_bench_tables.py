@@ -1,15 +1,17 @@
 #!/usr/bin/env python3
-"""Render the EXPERIMENTS.md measured tables from BENCH_gemm.json.
+"""Render the EXPERIMENTS.md measured tables from the bench JSONs.
 
 The fig11 bench (`cargo bench --bench fig11_blocking_perf`) writes every
-measurement to BENCH_gemm.json at the repo root; the CI bench-smoke job
-uploads the same file as a workflow artifact on every PR. This script
-turns that JSON into the markdown rows EXPERIMENTS.md keeps in
-§Perf-iteration-log (item 3), §Serving-amortization, §Resilience,
-§Overlap, §Executor, §Kernel-dispatch and §Precision-family, so filling
-the tables is mechanical:
+measurement to BENCH_gemm.json at the repo root, and the serving load
+harness (`cargo bench --bench serving_load`) writes BENCH_serving.json
+next to it; the CI bench-smoke and serving-smoke jobs upload both as
+workflow artifacts on every PR. This script turns that JSON into the
+markdown rows EXPERIMENTS.md keeps in §Perf-iteration-log (item 3),
+§Serving-amortization, §Resilience, §Overlap, §Executor,
+§Kernel-dispatch, §Precision-family and §Serving-SLO, so filling the
+tables is mechanical:
 
-    python3 tools/render_bench_tables.py [BENCH_gemm.json]
+    python3 tools/render_bench_tables.py [BENCH_gemm.json] [BENCH_serving.json]
 
 Degrades gracefully: rows whose records are missing from the JSON (an
 older bench run, a partial artifact) render as "_pending_", and a
@@ -171,6 +173,32 @@ def main():
     print(f"| `precision/bf16x3` | {fmt_s(med('precision/bf16x3/'))} | exact 3-way split, accumulation-limited |")
     print(f"| `precision/bf16x3_bits` | {fmt_f(med('precision/bf16x3_bits'), 1)} | derived bound ≥ 24; CI floor 18 |")
     print(f"| `precision/frontier` | {fmt_x(med('precision/frontier'))} | bf16x3 cost vs fp16x2 on the same engine |")
+
+    serving_path = sys.argv[2] if len(sys.argv) > 2 else "BENCH_serving.json"
+    srows = load_rows(serving_path)
+
+    def smed(name):
+        for r in srows:
+            if r["name"] == name:
+                return r.get("median_s")
+        return None
+
+    def fmt_qps(v):
+        return PENDING if v is None else f"{v:,.0f} req/s"
+
+    print("\n## §Serving-SLO\n")
+    print("| record | value | note |")
+    print("|--------|-------|------|")
+    for conc in (1, 2, 4):
+        qps = fmt_qps(smed(f"serving/wire_qps_c{conc}"))
+        tail = fmt_s(smed(f"serving/wire_p99_s_c{conc}"))
+        print(f"| closed-loop c={conc} | {qps} (p99 {tail}) | one in-flight request per connection |")
+    print(f"| `serving/wire_qps_at_slo` | {fmt_qps(smed('serving/wire_qps_at_slo'))} | **headline**: best closed-loop QPS with p99 ≤ 50 ms |")
+    print(f"| `serving/wire_slo_p99_s` | {fmt_s(smed('serving/wire_slo_p99_s'))} | p99 at that operating point |")
+    print(f"| `serving/wire_open_qps` | {fmt_qps(smed('serving/wire_open_qps'))} | paced at ~60% of closed-loop peak |")
+    print(f"| `serving/wire_open_p99_s` | {fmt_s(smed('serving/wire_open_p99_s'))} | open-loop tail (queueing included) |")
+    print(f"| `serving/wire_errors` | {fmt_f(smed('serving/wire_errors'), 0)} | client-observed failures; CI gate: 0 |")
+    print(f"| `serving/wire_shed` / `serving/wire_timeouts` | {fmt_f(smed('serving/wire_shed'), 0)} / {fmt_f(smed('serving/wire_timeouts'), 0)} | server admission/deadline counters; CI gate: 0 |")
 
 
 if __name__ == "__main__":
